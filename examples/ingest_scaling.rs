@@ -1,0 +1,59 @@
+//! Live mini-Figure-2: ingest throughput as the shard count grows, on
+//! real cluster threads (one machine, so absolute numbers are CPU-bound;
+//! the paper-scale curve comes from `hpcstore sim` / the fig2 bench).
+//!
+//! ```sh
+//! cargo run --release --example ingest_scaling
+//! ```
+
+use hpcstore::config::WorkloadConfig;
+use hpcstore::metrics::Registry;
+use hpcstore::mongo::cluster::{Cluster, ClusterSpec};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::mongo::storage::LocalDir;
+use hpcstore::runtime::Kernels;
+use hpcstore::util::fmt::markdown_table;
+use hpcstore::workload::ovis::OvisGenerator;
+use hpcstore::workload::IngestDriver;
+
+fn main() -> anyhow::Result<()> {
+    let kernels = Kernels::load_or_fallback("artifacts");
+    println!("kernel backend: {:?}\n", kernels.backend());
+    let mut rows = Vec::new();
+    let mut base = None;
+    for (shards, routers, pes) in [(1u32, 1u32, 2usize), (2, 2, 4), (4, 4, 8)] {
+        let cluster = Cluster::start(
+            ClusterSpec::small(shards, routers),
+            move |sid| Ok(Box::new(LocalDir::temp(&format!("scale-{shards}-{sid}"))?)),
+            kernels.clone(),
+            Registry::new(),
+        )?;
+        let client = cluster.client();
+        client.create_index(IndexSpec::single("ts")).map_err(anyhow::Error::msg)?;
+        client.create_index(IndexSpec::single("node_id")).map_err(anyhow::Error::msg)?;
+        let gen = OvisGenerator::new(WorkloadConfig {
+            monitored_nodes: 200,
+            metrics_per_doc: 75,
+            days: 10.0 / 1440.0,
+            ..Default::default()
+        });
+        let report = IngestDriver::new(gen, 500, pes).run(&client)?;
+        let b = *base.get_or_insert(report.docs_per_sec);
+        rows.push(vec![
+            shards.to_string(),
+            routers.to_string(),
+            pes.to_string(),
+            report.docs.to_string(),
+            format!("{:.0}", report.docs_per_sec),
+            format!("{:.2}x", report.docs_per_sec / b),
+        ]);
+        println!("shards={shards}: {}", report.summary());
+        cluster.shutdown();
+    }
+    println!("\n## Live ingest scaling (single machine — CPU-bound)\n");
+    print!(
+        "{}",
+        markdown_table(&["shards", "routers", "client PEs", "docs", "docs/s", "speedup"], &rows)
+    );
+    Ok(())
+}

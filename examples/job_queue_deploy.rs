@@ -1,0 +1,155 @@
+//! End-to-end driver — the full paper pipeline on a real small workload.
+//!
+//! 1. Submit the deploy run-script as a job to the Torque/Moab-like
+//!    scheduler; it is admitted onto a node allocation.
+//! 2. The run script assigns roles (config/shard/router/client PEs),
+//!    brings the sharded store up with every shard directory on the
+//!    Lustre simulator, and publishes the router hostfile.
+//! 3. The OVIS corpus is written as flat CSV onto Lustre (the paper's
+//!    200 TB archive, scaled), then client PEs ingest it with
+//!    `insertMany(ordered=false)` through the AOT route kernel.
+//! 4. Concurrent conditional finds replay user-job metadata and verify
+//!    the paper's count formula (nodes × duration).
+//! 5. Teardown checkpoints to Lustre; a SECOND job reattaches to the
+//!    same data and queries it — the transient-job persistence story.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example job_queue_deploy
+//! ```
+
+use std::time::Instant;
+
+use hpcstore::config::{LustreConfig, StoreConfig, Topology, WorkloadConfig};
+use hpcstore::hpc::lustre::Lustre;
+use hpcstore::hpc::runscript::RunScript;
+use hpcstore::hpc::scheduler::{Job, Scheduler};
+use hpcstore::mongo::query::Filter;
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::runtime::Kernels;
+use hpcstore::util::fmt::{human_bytes, human_count};
+use hpcstore::workload::csvstore;
+use hpcstore::workload::jobs::generate_jobs;
+use hpcstore::workload::ovis::OvisGenerator;
+use hpcstore::workload::QueryDriver;
+
+fn main() -> anyhow::Result<()> {
+    let kernels = Kernels::load_or_fallback("artifacts");
+    println!("== kernel backend: {:?}", kernels.backend());
+
+    // The machine: a 64-node mini-Blue-Waters with a striped Lustre fs.
+    let lustre = Lustre::mount(LustreConfig { osts: 8, ..Default::default() })?;
+    let mut sched = Scheduler::new(64);
+
+    // Workload: a real small corpus — 96 monitored nodes x 1 hour,
+    // 75 metrics per sample (the paper's OVIS shape).
+    let wl = WorkloadConfig {
+        monitored_nodes: 96,
+        metrics_per_doc: 75,
+        days: 60.0 / 1440.0,
+        query_jobs: 24,
+        ..Default::default()
+    };
+    let gen = OvisGenerator::new(wl.clone());
+
+    // The corpus lands on Lustre as flat CSV first (the archive form).
+    let csv_dir = lustre.dir("scratch/ovis_csv")?;
+    let t = Instant::now();
+    let files = csvstore::write_corpus(&gen, &csv_dir, 15)?;
+    println!(
+        "== corpus: {} docs ({} CSV) in {} files on lustre [{:.1}s]",
+        human_count(gen.total_docs()),
+        human_bytes(csvstore::corpus_bytes(&gen)),
+        files.len(),
+        t.elapsed().as_secs_f64()
+    );
+
+    // ---- JOB 1: deploy + ingest + query --------------------------------
+    let topo = Topology::small(4, 2, 4);
+    let script = RunScript::new(topo.clone(), StoreConfig::default(), lustre.clone(), kernels);
+    let job1 = sched.submit(Job::new("mongo-ingest", topo.total_nodes, 3600))?;
+    let hosts = sched.hosts_of(job1).expect("admitted").to_vec();
+    println!("== job1 admitted on {} hosts; deploying cluster...", hosts.len());
+    let dep = script.deploy(&hosts)?;
+    let client = dep.client_from_hostfile()?;
+    client.create_index(IndexSpec::single("ts")).map_err(anyhow::Error::msg)?;
+    client.create_index(IndexSpec::single("node_id")).map_err(anyhow::Error::msg)?;
+
+    // Ingest: PE threads stream disjoint CSV files → insertMany.
+    let t = Instant::now();
+    let pes = dep.client_pes().max(4);
+    let mut handles = Vec::new();
+    for pe in 0..pes {
+        let files: Vec<String> = files
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % pes == pe)
+            .map(|(_, f)| f.clone())
+            .collect();
+        let client = client.pinned(pe);
+        let dir = lustre.dir("scratch/ovis_csv")?;
+        handles.push(std::thread::spawn(move || -> anyhow::Result<u64> {
+            let mut inserted = 0u64;
+            for f in files {
+                let docs = csvstore::read_slice(&dir, &f)?;
+                for chunk in docs.chunks(1000) {
+                    inserted += client
+                        .insert_many(chunk.to_vec())
+                        .map_err(anyhow::Error::msg)?
+                        .inserted as u64;
+                }
+            }
+            Ok(inserted)
+        }));
+    }
+    let mut total = 0;
+    for h in handles {
+        total += h.join().expect("PE panicked")?;
+    }
+    let ingest_s = t.elapsed().as_secs_f64();
+    println!(
+        "== ingest: {} docs in {ingest_s:.1}s over {pes} PEs → {} docs/s",
+        human_count(total),
+        human_count((total as f64 / ingest_s) as u64)
+    );
+    assert_eq!(total, gen.total_docs(), "every CSV row must be ingested");
+
+    // Queries: the paper's concurrent conditional finds.
+    let report = QueryDriver::new(generate_jobs(&wl), pes).run(&client)?;
+    println!("== queries: {}", report.summary());
+    assert_eq!(report.count_mismatches, 0, "paper count formula must hold");
+
+    let stats = dep.cluster.stats();
+    println!(
+        "== store: {} docs, {} chunks (map v{}), per-shard {:?}",
+        human_count(stats.docs),
+        stats.chunks,
+        stats.map_version,
+        stats.per_shard_docs
+    );
+    dep.teardown()?;
+    sched.complete(job1)?;
+    println!(
+        "== job1 done; lustre holds {} across {} OSTs {:?}",
+        human_bytes(lustre.total_written()),
+        lustre.config().osts,
+        lustre.ost_written().iter().map(|b| human_bytes(*b)).collect::<Vec<_>>()
+    );
+
+    // ---- JOB 2: reattach and query the persisted store ------------------
+    let job2 = sched.submit(Job::new("mongo-requery", topo.total_nodes, 3600))?;
+    let hosts2 = sched.hosts_of(job2).expect("admitted").to_vec();
+    println!("== job2 admitted; redeploying over the same Lustre scratch...");
+    let dep2 = script.deploy(&hosts2)?;
+    let client2 = dep2.client_from_hostfile()?;
+    let count = client2.count_documents(Filter::True).map_err(anyhow::Error::msg)?;
+    println!("== job2 sees {} persisted docs", human_count(count as u64));
+    assert_eq!(count as u64, gen.total_docs(), "persistence across jobs");
+    let report2 = QueryDriver::new(generate_jobs(&wl), 4).run(&client2)?;
+    assert_eq!(report2.count_mismatches, 0);
+    println!("== job2 queries: {}", report2.summary());
+    dep2.teardown()?;
+    sched.complete(job2)?;
+
+    println!("\nEND-TO-END OK — all layers composed (scheduler → runscript → lustre → store → kernels → workload)");
+    Ok(())
+}

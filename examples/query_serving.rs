@@ -1,0 +1,66 @@
+//! Concurrent conditional-find serving with a latency report — the live
+//! analogue of Figure 3's workload on one machine.
+//!
+//! ```sh
+//! cargo run --release --example query_serving
+//! ```
+
+use hpcstore::config::WorkloadConfig;
+use hpcstore::metrics::Registry;
+use hpcstore::mongo::cluster::{Cluster, ClusterSpec};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::mongo::storage::LocalDir;
+use hpcstore::runtime::Kernels;
+use hpcstore::util::fmt::{human_duration_ns, markdown_table};
+use hpcstore::workload::jobs::generate_jobs;
+use hpcstore::workload::ovis::OvisGenerator;
+use hpcstore::workload::{IngestDriver, QueryDriver};
+
+fn main() -> anyhow::Result<()> {
+    let kernels = Kernels::load_or_fallback("artifacts");
+    println!("kernel backend: {:?}", kernels.backend());
+    let cluster = Cluster::start(
+        ClusterSpec::small(3, 2),
+        |sid| Ok(Box::new(LocalDir::temp(&format!("qserve-{sid}"))?)),
+        kernels,
+        Registry::new(),
+    )?;
+    let client = cluster.client();
+    client.create_index(IndexSpec::single("ts")).map_err(anyhow::Error::msg)?;
+    client.create_index(IndexSpec::single("node_id")).map_err(anyhow::Error::msg)?;
+
+    let wl = WorkloadConfig {
+        monitored_nodes: 128,
+        metrics_per_doc: 20,
+        days: 45.0 / 1440.0,
+        query_jobs: 48,
+        ..Default::default()
+    };
+    let gen = OvisGenerator::new(wl.clone());
+    println!("ingesting {} docs...", gen.total_docs());
+    IngestDriver::new(gen, 1000, 4).run(&client)?;
+
+    // Sweep concurrency like the paper ("servicing more concurrent
+    // queries" as clusters grow).
+    let mut rows = Vec::new();
+    for conc in [1usize, 4, 8, 16] {
+        let report = QueryDriver::new(generate_jobs(&wl), conc).run(&client)?;
+        anyhow::ensure!(report.count_mismatches == 0, "bad counts at conc {conc}");
+        rows.push(vec![
+            conc.to_string(),
+            report.queries.to_string(),
+            format!("{:.1}", report.queries_per_sec()),
+            human_duration_ns(report.latency.p50()),
+            human_duration_ns(report.latency.p95()),
+            human_duration_ns(report.latency.p99()),
+        ]);
+        println!("concurrency {conc}: {}", report.summary());
+    }
+    println!("\n## Live conditional-find latency vs concurrency\n");
+    print!(
+        "{}",
+        markdown_table(&["concurrency", "finds", "finds/s", "p50", "p95", "p99"], &rows)
+    );
+    cluster.shutdown();
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: deploy a small sharded cluster, insert documents, run a
+//! conditional find — the 40-line tour of the public API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use hpcstore::metrics::Registry;
+use hpcstore::mongo::bson::{Document, Value};
+use hpcstore::mongo::cluster::{Cluster, ClusterSpec};
+use hpcstore::mongo::query::{CmpOp, Filter, FindOptions};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::mongo::storage::LocalDir;
+use hpcstore::runtime::Kernels;
+
+fn main() -> anyhow::Result<()> {
+    // 3 shards, 2 routers; kernels fall back to scalar routing when
+    // `make artifacts` hasn't run.
+    let cluster = Cluster::start(
+        ClusterSpec::small(3, 2),
+        |sid| Ok(Box::new(LocalDir::temp(&format!("quickstart-{sid}"))?)),
+        Kernels::load_or_fallback("artifacts"),
+        Registry::new(),
+    )?;
+    let client = cluster.client();
+    client.create_index(IndexSpec::single("ts")).map_err(anyhow::Error::msg)?;
+    client.create_index(IndexSpec::single("node_id")).map_err(anyhow::Error::msg)?;
+
+    // Insert one hour of per-minute samples for 20 nodes.
+    let docs: Vec<Document> = (0..60i64)
+        .flat_map(|t| {
+            (0..20i64).map(move |node| {
+                Document::new()
+                    .set("ts", 1_000_000 + t)
+                    .set("node_id", node)
+                    .set("cpu_user", (t as f64 / 60.0).sin().abs())
+            })
+        })
+        .collect();
+    let rep = client.insert_many(docs).map_err(anyhow::Error::msg)?;
+    println!("inserted {} documents", rep.inserted);
+
+    // The paper's query shape: node set + time range.
+    let filter = Filter::And(vec![
+        Filter::is_in("node_id", vec![Value::Int(3), Value::Int(7)]),
+        Filter::cmp("ts", CmpOp::Gte, 1_000_010i64),
+        Filter::cmp("ts", CmpOp::Lt, 1_000_020i64),
+    ]);
+    let results: Vec<Document> = client
+        .find(filter, FindOptions::default())
+        .map_err(anyhow::Error::msg)?
+        .collect();
+    println!("conditional find returned {} documents (expected 20)", results.len());
+
+    let stats = cluster.stats();
+    println!(
+        "cluster: {} docs across {} shards ({} chunks, map v{})",
+        stats.docs,
+        stats.per_shard_docs.len(),
+        stats.chunks,
+        stats.map_version
+    );
+    cluster.shutdown();
+    Ok(())
+}

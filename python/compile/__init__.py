@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX/Pallas authoring + AOT lowering.
+
+Nothing in this package is imported at request time; ``make artifacts``
+runs :mod:`compile.aot` once and the Rust binary consumes the HLO text it
+writes to ``artifacts/``.
+"""

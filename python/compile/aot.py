@@ -1,0 +1,117 @@
+"""AOT lowering: JAX/Pallas model → HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside each ``<name>.hlo.txt`` a ``manifest.json`` records the
+input/output specs so the Rust loader can validate shapes at startup.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to HLO text via stablehlo → XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_defs():
+    """name → (fn, [input ShapeDtypeStructs], [output names])."""
+    u32, i32, f32 = jnp.uint32, jnp.int32, jnp.float32
+    return {
+        f"route_b{model.ROUTE_B}_c{model.ROUTE_C}_s{model.ROUTE_S}": (
+            model.route_batch,
+            [
+                _spec((model.ROUTE_B,), u32),  # node_id
+                _spec((model.ROUTE_B,), u32),  # ts_min
+                _spec((model.ROUTE_C,), u32),  # boundaries
+                _spec((model.ROUTE_C,), i32),  # chunk_to_shard
+            ],
+            ["shard_of", "counts", "hashes"],
+        ),
+        f"filter_b{model.FILTER_B}_w{model.FILTER_W}": (
+            model.filter_batch,
+            [
+                _spec((model.FILTER_B,), u32),  # ts_min
+                _spec((model.FILTER_B,), u32),  # node_id
+                _spec((1,), u32),  # ts_lo
+                _spec((1,), u32),  # ts_hi
+                _spec((model.FILTER_W,), u32),  # node_bitmap
+            ],
+            ["mask", "count"],
+        ),
+        f"stats_b{model.STATS_B}_m{model.STATS_M}": (
+            model.stats_batch,
+            [_spec((model.STATS_B, model.STATS_M), f32)],  # metrics
+            ["min", "max", "mean"],
+        ),
+    }
+
+
+def lower_artifact(name, fn, in_specs):
+    lowered = jax.jit(fn).lower(*in_specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "shapes": {
+            "route_b": model.ROUTE_B,
+            "route_c": model.ROUTE_C,
+            "route_s": model.ROUTE_S,
+            "filter_b": model.FILTER_B,
+            "filter_w": model.FILTER_W,
+            "stats_b": model.STATS_B,
+            "stats_m": model.STATS_M,
+        },
+        "artifacts": {},
+    }
+    for name, (fn, in_specs, out_names) in artifact_defs().items():
+        text = lower_artifact(name, fn, in_specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in in_specs
+            ],
+            "outputs": out_names,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

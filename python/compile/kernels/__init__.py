@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the correctness
+and interchange path; real-TPU efficiency is estimated structurally in
+DESIGN.md §Perf.
+
+Kernels:
+
+* :mod:`shard_route`  — FNV-1a shard-key hashing + data-parallel chunk
+  lookup (the ``mongos`` insertMany partitioning hot spot).
+* :mod:`filter_scan`  — columnar conditional-find predicate evaluation
+  (timestamp range x node-id bitmap membership).
+* :mod:`batch_stats`  — per-column min/max/mean over a metric batch
+  (collection statistics maintained at ingest).
+
+:mod:`ref` holds the pure-``jnp`` oracles the pytest suite checks the
+kernels against, bit-exactly for the integer kernels.
+"""

@@ -1,0 +1,44 @@
+"""Pallas kernel: per-column min/max/sum over an ingest metric batch.
+
+At ingest each shard maintains collection statistics (per-metric min /
+max / mean) used by the query planner and the balancer's load estimate.
+The batch is a dense ``f32[B, M]`` tile; the reduction runs column-wise
+over VPU lanes. B=4096, M=16 → 256 KiB VMEM for the input tile, single
+grid step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stats_kernel(x_ref, min_ref, max_ref, sum_ref):
+    x = x_ref[...]
+    min_ref[...] = jnp.min(x, axis=0)
+    max_ref[...] = jnp.max(x, axis=0)
+    sum_ref[...] = jnp.sum(x, axis=0)
+
+
+@jax.jit
+def batch_stats(metrics):
+    """Column statistics for one ingest batch.
+
+    Args:
+      metrics: f32[B, M].
+
+    Returns:
+      (min f32[M], max f32[M], mean f32[M]).
+    """
+    b, m = metrics.shape
+    mn, mx, sm = pl.pallas_call(
+        _stats_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(metrics)
+    return mn, mx, sm / jnp.float32(b)

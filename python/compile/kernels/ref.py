@@ -1,0 +1,88 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These definitions are the *specification*: the Pallas kernels and the Rust
+fallback (`rust/src/runtime/fallback.rs`) must agree with them bit-exactly
+(integer kernels) / to float tolerance (stats kernel). The FNV-1a
+constants and the chunk-boundary convention here are mirrored in Rust —
+change them in lockstep or the cross-language integration test fails.
+"""
+
+import jax.numpy as jnp
+
+# FNV-1a 32-bit parameters (http://www.isthe.com/chongo/tech/comp/fnv/).
+# Plain Python ints: jnp array constants would be captured as consts by
+# pallas kernels, which pallas_call rejects.
+FNV_OFFSET = 2166136261
+FNV_PRIME = 16777619
+
+
+def fnv1a_u32_pair(node_id, ts_min):
+    """FNV-1a over the 8 little-endian bytes of (node_id, ts_min).
+
+    Both inputs are uint32 arrays; returns uint32 hashes of the same
+    shape. Arithmetic wraps mod 2^32 (numpy/jnp uint semantics).
+    """
+    node_id = node_id.astype(jnp.uint32)
+    ts_min = ts_min.astype(jnp.uint32)
+    h = jnp.full(node_id.shape, FNV_OFFSET, dtype=jnp.uint32)
+    for word in (node_id, ts_min):
+        for shift in (0, 8, 16, 24):
+            byte = (word >> shift) & 0xFF
+            h = (h ^ byte) * jnp.uint32(FNV_PRIME)
+    return h
+
+
+def chunk_of_hash(hashes, boundaries):
+    """Chunk index for each hash.
+
+    ``boundaries[j]`` is the *inclusive upper bound* of chunk ``j`` on the
+    uint32 hash ring, sorted ascending; the last real boundary is
+    0xFFFFFFFF and unused tail slots are padded with 0xFFFFFFFF. The chunk
+    index is the count of boundaries strictly below the hash — a
+    data-parallel compare-and-count rather than a divergent binary search
+    (the TPU-friendly formulation; see DESIGN.md §Hardware-Adaptation).
+    """
+    cmp = boundaries[None, :] < hashes[:, None]
+    return jnp.sum(cmp, axis=1).astype(jnp.int32)
+
+
+def route_ref(node_id, ts_min, boundaries, chunk_to_shard, num_shards):
+    """Oracle for the shard_route kernel + L2 histogram.
+
+    Returns (shard_of i32[B], counts i32[S], hashes u32[B]).
+    """
+    h = fnv1a_u32_pair(node_id, ts_min)
+    chunk = chunk_of_hash(h, boundaries)
+    shard_of = jnp.take(chunk_to_shard.astype(jnp.int32), chunk)
+    one_hot = shard_of[:, None] == jnp.arange(num_shards, dtype=jnp.int32)[None, :]
+    counts = jnp.sum(one_hot.astype(jnp.int32), axis=0)
+    return shard_of, counts, h
+
+
+def filter_ref(ts_min, node_id, ts_lo, ts_hi, node_bitmap):
+    """Oracle for the filter_scan kernel.
+
+    Predicate: ``ts_lo <= ts < ts_hi`` AND bit ``node_id`` set in
+    ``node_bitmap`` (u32 words, little-endian bit order). ``ts_lo``/
+    ``ts_hi`` are shape-(1,) uint32 arrays. Returns (mask i32[B],
+    count i32[1]).
+    """
+    ts_min = ts_min.astype(jnp.uint32)
+    node_id = node_id.astype(jnp.uint32)
+    word = jnp.take(node_bitmap, (node_id >> jnp.uint32(5)).astype(jnp.int32))
+    bit = (word >> (node_id & jnp.uint32(31))) & jnp.uint32(1)
+    in_range = (ts_lo[0] <= ts_min) & (ts_min < ts_hi[0])
+    mask = (in_range & (bit == jnp.uint32(1))).astype(jnp.int32)
+    return mask, jnp.sum(mask, dtype=jnp.int32)[None]
+
+
+def stats_ref(metrics):
+    """Oracle for the batch_stats kernel.
+
+    metrics: f32[B, M]. Returns (min f32[M], max f32[M], mean f32[M]).
+    """
+    return (
+        jnp.min(metrics, axis=0),
+        jnp.max(metrics, axis=0),
+        jnp.mean(metrics, axis=0),
+    )

@@ -1,0 +1,111 @@
+"""Pallas kernel: shard-key hashing + chunk lookup for insertMany routing.
+
+This is the ``mongos`` hot spot: for a batch of B documents keyed by
+``(node_id, timestamp_minute)``, compute the 32-bit FNV-1a hash of the
+shard key and locate the owning chunk on the hash ring.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): a CPU/GPU router would
+binary-search each key against the chunk boundaries — a divergent,
+branchy loop. Here the chunk index is computed as a *data-parallel
+compare-and-count* ``sum(boundaries < hash)`` over a ``[block_b, C]``
+tile, which maps onto the VPU as dense elementwise work, with the
+boundary vector resident in VMEM for every grid step (its BlockSpec index
+map is constant). VMEM per grid step at the default shapes
+(block_b=1024, C=512): ~1024*4*4 B of keys/outputs + 512*4*2 B of tables
++ the 1024x512 compare tile — well under the ~16 MiB VMEM budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import FNV_OFFSET, FNV_PRIME
+
+
+def _fnv1a(node, ts):
+    # FNV-1a over the 8 little-endian bytes of (node_id, ts). Unrolled;
+    # uint32 arithmetic wraps mod 2^32.
+    h = jnp.full(node.shape, FNV_OFFSET, dtype=jnp.uint32)
+    for word in (node, ts):
+        for shift in (0, 8, 16, 24):
+            byte = (word >> shift) & 0xFF
+            h = (h ^ byte) * np.uint32(FNV_PRIME)
+    return h
+
+
+def _route_kernel_compare_count(node_ref, ts_ref, bounds_ref, c2s_ref, shard_ref, hash_ref):
+    """TPU-style: chunk index as a dense compare-and-count over a
+    [block_b, C] tile (VPU-friendly, no divergent control flow)."""
+    h = _fnv1a(node_ref[...], ts_ref[...])
+    bounds = bounds_ref[...]
+    chunk = jnp.sum(
+        (bounds[None, :] < h[:, None]).astype(jnp.int32), axis=1, dtype=jnp.int32
+    )
+    shard_ref[...] = jnp.take(c2s_ref[...].astype(jnp.int32), chunk)
+    hash_ref[...] = h
+
+
+def _route_kernel_searchsorted(node_ref, ts_ref, bounds_ref, c2s_ref, shard_ref, hash_ref):
+    """CPU-optimal: vectorized binary search (identical semantics:
+    `searchsorted(bounds, h, side='left')` == count of bounds < h)."""
+    h = _fnv1a(node_ref[...], ts_ref[...])
+    chunk = jnp.searchsorted(bounds_ref[...], h, side="left").astype(jnp.int32)
+    shard_ref[...] = jnp.take(c2s_ref[...].astype(jnp.int32), chunk)
+    hash_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "variant"))
+def shard_route(
+    node_id, ts_min, boundaries, chunk_to_shard, *, block_b=1024, variant="searchsorted"
+):
+    """Route a key batch to shards.
+
+    Args:
+      node_id:        u32[B] shard-key node ids.
+      ts_min:         u32[B] shard-key epoch-minutes.
+      boundaries:     u32[C] sorted inclusive upper bounds per chunk on
+                      the hash ring; tail padded with 0xFFFFFFFF.
+      chunk_to_shard: i32[C] owning shard per chunk; tail padded with the
+                      last real shard id.
+      block_b:        batch tile size (must divide B).
+      variant:        "searchsorted" (CPU-optimal; what the AOT artifact
+                      ships for the CPU PJRT runtime) or "compare_count"
+                      (the TPU formulation; see DESIGN.md
+                      §Hardware-Adaptation). Bit-identical outputs —
+                      pytest asserts both against ref.py.
+
+    Returns:
+      (shard_of i32[B], hashes u32[B]).
+    """
+    b = node_id.shape[0]
+    c = boundaries.shape[0]
+    if b % block_b:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    kernels = {
+        "searchsorted": _route_kernel_searchsorted,
+        "compare_count": _route_kernel_compare_count,
+    }
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        kernels[variant],
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            # Tables are VMEM-resident for every grid step.
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(node_id, ts_min, boundaries, chunk_to_shard)

@@ -1,0 +1,66 @@
+"""Layer-2 JAX graphs — the computations the Rust coordinator executes.
+
+Each public function here composes the Layer-1 Pallas kernels with plain
+``jnp`` glue and is AOT-lowered by :mod:`compile.aot` into one fused HLO
+module per artifact. The shapes are fixed at lowering time (see
+``SHAPES``); the Rust side pads batches to these shapes.
+
+The artifact interface (names, dtypes, orderings) is mirrored by
+``rust/src/runtime/`` — change in lockstep.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.batch_stats import batch_stats
+from .kernels.filter_scan import filter_scan
+from .kernels.shard_route import shard_route
+
+# Fixed AOT shapes (DESIGN.md §2).
+ROUTE_B = 4096  # documents per routing batch
+ROUTE_C = 512  # max chunks
+ROUTE_S = 64  # max shards (256-node preset has 63)
+FILTER_B = 4096  # documents per filter batch
+FILTER_W = 1024  # bitmap words -> covers node ids < 32768
+STATS_B = 4096  # documents per stats batch
+STATS_M = 16  # summarised metric columns
+
+
+def route_batch(node_id, ts_min, boundaries, chunk_to_shard):
+    """insertMany partitioning: shard assignment + per-shard histogram.
+
+    Inputs:  node_id u32[ROUTE_B], ts_min u32[ROUTE_B],
+             boundaries u32[ROUTE_C], chunk_to_shard i32[ROUTE_C].
+    Outputs: (shard_of i32[ROUTE_B], counts i32[ROUTE_S], hashes u32[ROUTE_B]).
+
+    The histogram feeds the router's sub-batch allocation (exact sizes,
+    no realloc) and the balancer's write-load estimate.
+
+    Perf (EXPERIMENTS.md §Perf): lowered with the searchsorted kernel
+    variant and full-batch block (68 µs vs 1.19 ms for the original
+    compare-count blk1024 on CPU PJRT) and a scatter-add histogram
+    (24 µs vs 51 µs one-hot).
+    """
+    shard_of, hashes = shard_route(
+        node_id, ts_min, boundaries, chunk_to_shard, block_b=ROUTE_B
+    )
+    counts = jnp.zeros(ROUTE_S, jnp.int32).at[shard_of].add(1)
+    return shard_of, counts, hashes
+
+
+def filter_batch(ts_min, node_id, ts_lo, ts_hi, node_bitmap):
+    """Conditional-find predicate over a columnar batch.
+
+    Inputs:  ts_min u32[FILTER_B], node_id u32[FILTER_B],
+             ts_lo u32[1], ts_hi u32[1], node_bitmap u32[FILTER_W].
+    Outputs: (mask i32[FILTER_B], count i32[1]).
+    """
+    return filter_scan(ts_min, node_id, ts_lo, ts_hi, node_bitmap)
+
+
+def stats_batch(metrics):
+    """Per-column min/max/mean for one ingest batch.
+
+    Inputs:  metrics f32[STATS_B, STATS_M].
+    Outputs: (min f32[M], max f32[M], mean f32[M]).
+    """
+    return batch_stats(metrics)

@@ -1,0 +1,106 @@
+"""filter_scan Pallas kernel vs pure-jnp oracle — bit-exact."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.filter_scan import filter_scan
+from compile import model
+
+RNG = np.random.default_rng(0xF11E)
+
+
+def make_bitmap(nodes, words):
+    bm = np.zeros(words, dtype=np.uint32)
+    for n in nodes:
+        bm[n >> 5] |= np.uint32(1) << np.uint32(n & 31)
+    return bm
+
+
+def run_both(ts, node, lo, hi, bitmap, block_b):
+    args = (
+        jnp.asarray(ts),
+        jnp.asarray(node),
+        jnp.asarray(np.array([lo], dtype=np.uint32)),
+        jnp.asarray(np.array([hi], dtype=np.uint32)),
+        jnp.asarray(bitmap),
+    )
+    mask_k, count_k = filter_scan(*args, block_b=block_b)
+    mask_r, count_r = ref.filter_ref(*args)
+    return np.asarray(mask_k), np.asarray(count_k), np.asarray(mask_r), np.asarray(count_r)
+
+
+def numpy_oracle(ts, node, lo, hi, bitmap):
+    word = bitmap[node >> 5]
+    bit = (word >> (node & 31)) & 1
+    return ((lo <= ts) & (ts < hi) & (bit == 1)).astype(np.int32)
+
+
+def test_kernel_matches_ref_default_shapes():
+    b, w = model.FILTER_B, model.FILTER_W
+    ts = RNG.integers(0, 2**22, size=b, dtype=np.uint32)
+    node = RNG.integers(0, w * 32, size=b, dtype=np.uint32)
+    members = RNG.choice(w * 32, size=300, replace=False)
+    bitmap = make_bitmap(members, w)
+    lo, hi = 2**20, 2**21
+    mk, ck, mr, cr = run_both(ts, node, lo, hi, bitmap, block_b=1024)
+    np.testing.assert_array_equal(mk, mr)
+    np.testing.assert_array_equal(ck, cr)
+    np.testing.assert_array_equal(mk, numpy_oracle(ts, node, lo, hi, bitmap))
+    assert ck[0] == mk.sum()
+
+
+def test_half_open_range_semantics():
+    """ts == hi must NOT match; ts == lo must match."""
+    w = model.FILTER_W
+    bitmap = make_bitmap([7], w)
+    ts = np.array([100, 100, 200, 200, 150, 99], dtype=np.uint32)
+    node = np.array([7, 8, 7, 7, 7, 7], dtype=np.uint32)
+    mk, ck, mr, _ = run_both(ts, node, 100, 200, bitmap, block_b=6)
+    want = np.array([1, 0, 0, 0, 1, 0], dtype=np.int32)
+    np.testing.assert_array_equal(mk, want)
+    np.testing.assert_array_equal(mr, want)
+    assert ck[0] == 2
+
+
+def test_empty_bitmap_matches_nothing():
+    b, w = 512, model.FILTER_W
+    ts = RNG.integers(0, 2**22, size=b, dtype=np.uint32)
+    node = RNG.integers(0, w * 32, size=b, dtype=np.uint32)
+    bitmap = np.zeros(w, dtype=np.uint32)
+    mk, ck, _, _ = run_both(ts, node, 0, 2**32 - 1, bitmap, block_b=512)
+    assert mk.sum() == 0 and ck[0] == 0
+
+
+def test_full_bitmap_full_range_matches_everything():
+    b, w = 512, model.FILTER_W
+    ts = RNG.integers(0, 2**22, size=b, dtype=np.uint32)
+    node = RNG.integers(0, w * 32, size=b, dtype=np.uint32)
+    bitmap = np.full(w, 0xFFFFFFFF, dtype=np.uint32)
+    mk, ck, _, _ = run_both(ts, node, 0, 2**32 - 1, bitmap, block_b=512)
+    # ts < 2**32-1 always holds for our ts range.
+    assert mk.sum() == b and ck[0] == b
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    log_b=st.integers(min_value=0, max_value=3),
+    members=st.integers(min_value=0, max_value=64),
+    lo=st.integers(min_value=0, max_value=2**32 - 1),
+    span=st.integers(min_value=0, max_value=2**20),
+)
+def test_property_kernel_equals_ref(seed, log_b, members, lo, span):
+    b = 64 * (2**log_b)
+    w = 64  # smaller bitmap for property runs (node ids < 2048)
+    rng = np.random.default_rng(seed)
+    ts = rng.integers(0, 2**32, size=b, dtype=np.uint32)
+    node = rng.integers(0, w * 32, size=b, dtype=np.uint32)
+    member_ids = rng.choice(w * 32, size=members, replace=False) if members else []
+    bitmap = make_bitmap(member_ids, w)
+    hi = min(lo + span, 2**32 - 1)
+    mk, ck, mr, cr = run_both(ts, node, lo, hi, bitmap, block_b=min(b, 64))
+    np.testing.assert_array_equal(mk, mr)
+    np.testing.assert_array_equal(ck, cr)
+    np.testing.assert_array_equal(mk, numpy_oracle(ts, node, np.uint32(lo), np.uint32(hi), bitmap))

@@ -1,0 +1,170 @@
+"""shard_route Pallas kernel vs pure-jnp oracle — bit-exact."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.shard_route import shard_route
+from compile import model
+
+RNG = np.random.default_rng(0xB1DE)
+
+
+def make_boundaries(num_chunks, cap, rng=RNG):
+    """Random sorted inclusive-upper-bound boundary vector, padded to cap."""
+    cuts = np.sort(rng.choice(2**32 - 1, size=num_chunks - 1, replace=False))
+    bounds = np.concatenate([cuts, [2**32 - 1]]).astype(np.uint32)
+    pad = np.full(cap - num_chunks, 2**32 - 1, dtype=np.uint32)
+    return np.concatenate([bounds, pad])
+
+
+def make_c2s(num_chunks, num_shards, cap, rng=RNG):
+    c2s = rng.integers(0, num_shards, size=num_chunks, dtype=np.int32)
+    pad = np.full(cap - num_chunks, c2s[-1], dtype=np.int32)
+    return np.concatenate([c2s, pad])
+
+
+def run_both(node, ts, bounds, c2s, block_b, variant="searchsorted"):
+    shard_k, hash_k = shard_route(
+        jnp.asarray(node), jnp.asarray(ts), jnp.asarray(bounds), jnp.asarray(c2s),
+        block_b=block_b, variant=variant,
+    )
+    shard_r, _, hash_r = ref.route_ref(
+        jnp.asarray(node), jnp.asarray(ts), jnp.asarray(bounds), jnp.asarray(c2s),
+        num_shards=model.ROUTE_S,
+    )
+    return (
+        np.asarray(shard_k), np.asarray(hash_k),
+        np.asarray(shard_r), np.asarray(hash_r),
+    )
+
+
+def test_fnv1a_known_vectors():
+    """Pin the hash spec with hand-computed FNV-1a values.
+
+    fnv1a(bytes) over the 8 LE bytes of (node_id, ts). Computed with the
+    reference scalar implementation below — these exact constants are
+    also asserted by rust/src/runtime/fallback.rs unit tests.
+    """
+
+    def scalar_fnv(node, ts):
+        h = 2166136261
+        for w in (node, ts):
+            for s in (0, 8, 16, 24):
+                h = ((h ^ ((w >> s) & 0xFF)) * 16777619) % 2**32
+        return h
+
+    cases = [(0, 0), (1, 0), (0, 1), (12345, 67890), (2**32 - 1, 2**32 - 1)]
+    node = np.array([c[0] for c in cases], dtype=np.uint32)
+    ts = np.array([c[1] for c in cases], dtype=np.uint32)
+    got = np.asarray(ref.fnv1a_u32_pair(jnp.asarray(node), jnp.asarray(ts)))
+    want = np.array([scalar_fnv(*c) for c in cases], dtype=np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("variant", ["searchsorted", "compare_count"])
+def test_kernel_matches_ref_default_shapes(variant):
+    b, c = model.ROUTE_B, model.ROUTE_C
+    node = RNG.integers(0, 28000, size=b, dtype=np.uint32)
+    ts = RNG.integers(0, 2**22, size=b, dtype=np.uint32)
+    bounds = make_boundaries(63, c)
+    c2s = make_c2s(63, 63, c)
+    sk, hk, sr, hr = run_both(node, ts, bounds, c2s, block_b=1024, variant=variant)
+    np.testing.assert_array_equal(hk, hr)
+    np.testing.assert_array_equal(sk, sr)
+
+
+def test_variants_bit_identical():
+    b, c = 512, 128
+    node = RNG.integers(0, 2**32, size=b, dtype=np.uint32)
+    ts = RNG.integers(0, 2**32, size=b, dtype=np.uint32)
+    bounds = make_boundaries(31, c)
+    c2s = make_c2s(31, 31, c)
+    a = run_both(node, ts, bounds, c2s, block_b=256, variant="searchsorted")
+    d = run_both(node, ts, bounds, c2s, block_b=256, variant="compare_count")
+    np.testing.assert_array_equal(a[0], d[0])
+    np.testing.assert_array_equal(a[1], d[1])
+
+
+def test_single_chunk_routes_everything_to_one_shard():
+    b, c = 256, model.ROUTE_C
+    node = RNG.integers(0, 2**32, size=b, dtype=np.uint32)
+    ts = RNG.integers(0, 2**32, size=b, dtype=np.uint32)
+    bounds = make_boundaries(1, c)
+    c2s = np.full(c, 5, dtype=np.int32)
+    sk, _, sr, _ = run_both(node, ts, bounds, c2s, block_b=256)
+    assert (sk == 5).all()
+    np.testing.assert_array_equal(sk, sr)
+
+
+def test_hash_extremes_hit_first_and_last_chunk():
+    """Keys hashing to 0x0 / 0xFFFFFFFF stay inside [0, num_chunks)."""
+    c = model.ROUTE_C
+    num_chunks = 7
+    bounds = make_boundaries(num_chunks, c)
+    hashes = jnp.asarray(
+        np.array([0, 1, 2**31, 2**32 - 2, 2**32 - 1], dtype=np.uint32)
+    )
+    chunk = np.asarray(ref.chunk_of_hash(hashes, jnp.asarray(bounds)))
+    assert chunk.min() >= 0
+    assert chunk.max() < num_chunks
+    assert chunk[0] == 0
+    assert chunk[-1] == num_chunks - 1
+
+
+def test_boundary_inclusivity():
+    """A hash exactly equal to boundary[j] belongs to chunk j (inclusive)."""
+    c = model.ROUTE_C
+    bounds = make_boundaries(4, c)
+    h = jnp.asarray(bounds[:4])  # the four real boundaries
+    chunk = np.asarray(ref.chunk_of_hash(h, jnp.asarray(bounds)))
+    np.testing.assert_array_equal(chunk[:3], np.arange(3))
+
+
+def test_histogram_counts_match_assignments():
+    b, c = model.ROUTE_B, model.ROUTE_C
+    node = RNG.integers(0, 28000, size=b, dtype=np.uint32)
+    ts = RNG.integers(0, 2**22, size=b, dtype=np.uint32)
+    bounds = make_boundaries(15, c)
+    c2s = make_c2s(15, 15, c)
+    shard_of, counts, _ = model.route_batch(
+        jnp.asarray(node), jnp.asarray(ts), jnp.asarray(bounds), jnp.asarray(c2s)
+    )
+    shard_of, counts = np.asarray(shard_of), np.asarray(counts)
+    want = np.bincount(shard_of, minlength=model.ROUTE_S)
+    np.testing.assert_array_equal(counts, want)
+    assert counts.sum() == b
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.data(),
+    log_b=st.integers(min_value=0, max_value=3),
+    num_chunks=st.integers(min_value=1, max_value=64),
+    block_pow=st.integers(min_value=0, max_value=2),
+    variant=st.sampled_from(["searchsorted", "compare_count"]),
+)
+def test_property_kernel_equals_ref(data, log_b, num_chunks, block_pow, variant):
+    """Hypothesis sweep over batch sizes, block sizes, chunk counts."""
+    b = 64 * (2**log_b)
+    block_b = min(b, 64 * (2**block_pow))
+    c = 128
+    seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    node = rng.integers(0, 2**32, size=b, dtype=np.uint32)
+    ts = rng.integers(0, 2**32, size=b, dtype=np.uint32)
+    bounds = make_boundaries(num_chunks, c, rng)
+    c2s = make_c2s(num_chunks, 64, c, rng)
+    sk, hk, sr, hr = run_both(node, ts, bounds, c2s, block_b=block_b, variant=variant)
+    np.testing.assert_array_equal(hk, hr)
+    np.testing.assert_array_equal(sk, sr)
+
+
+def test_rejects_indivisible_block():
+    node = jnp.zeros(100, jnp.uint32)
+    bounds = jnp.full(8, 2**32 - 1, jnp.uint32)
+    c2s = jnp.zeros(8, jnp.int32)
+    with pytest.raises(ValueError, match="not divisible"):
+        shard_route(node, node, bounds, c2s, block_b=64)

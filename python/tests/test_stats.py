@@ -1,0 +1,57 @@
+"""batch_stats Pallas kernel vs pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.batch_stats import batch_stats
+from compile import model
+
+RNG = np.random.default_rng(0x57A7)
+
+
+def run_both(x):
+    x = jnp.asarray(x)
+    mn_k, mx_k, mean_k = batch_stats(x)
+    mn_r, mx_r, mean_r = ref.stats_ref(x)
+    return map(np.asarray, (mn_k, mx_k, mean_k, mn_r, mx_r, mean_r))
+
+
+def test_kernel_matches_ref_default_shapes():
+    x = RNG.normal(size=(model.STATS_B, model.STATS_M)).astype(np.float32)
+    mn_k, mx_k, mean_k, mn_r, mx_r, mean_r = run_both(x)
+    np.testing.assert_array_equal(mn_k, mn_r)
+    np.testing.assert_array_equal(mx_k, mx_r)
+    np.testing.assert_allclose(mean_k, mean_r, rtol=1e-6)
+
+
+def test_constant_column():
+    x = np.full((256, 4), 3.5, dtype=np.float32)
+    mn_k, mx_k, mean_k, *_ = run_both(x)
+    assert (mn_k == 3.5).all() and (mx_k == 3.5).all()
+    np.testing.assert_allclose(mean_k, 3.5, rtol=1e-6)
+
+
+def test_extreme_values():
+    x = np.array([[1e30, -1e30], [-1e30, 1e30], [0.0, 0.0], [1.0, -1.0]], dtype=np.float32)
+    mn_k, mx_k, _, mn_r, mx_r, _ = run_both(x)
+    np.testing.assert_array_equal(mn_k, mn_r)
+    np.testing.assert_array_equal(mx_k, mx_r)
+    np.testing.assert_array_equal(mn_k, np.array([-1e30, -1e30], dtype=np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    b=st.sampled_from([8, 64, 256]),
+    m=st.sampled_from([1, 4, 16]),
+    scale=st.floats(min_value=1e-3, max_value=1e6),
+)
+def test_property_kernel_equals_ref(seed, b, m, scale):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(b, m)) * scale).astype(np.float32)
+    mn_k, mx_k, mean_k, mn_r, mx_r, mean_r = run_both(x)
+    np.testing.assert_array_equal(mn_k, mn_r)
+    np.testing.assert_array_equal(mx_k, mx_r)
+    np.testing.assert_allclose(mean_k, mean_r, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,54 @@
+//! A4 — insertMany batch-size sweep on a live cluster: the trade
+//! between per-call overhead (router hop + kernel invocation) and
+//! batch memory/latency. The paper's clients use large `insertMany`
+//! lists; this shows why.
+
+use hpcstore::benchkit::Report;
+use hpcstore::config::WorkloadConfig;
+use hpcstore::metrics::Registry;
+use hpcstore::mongo::cluster::{Cluster, ClusterSpec};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::mongo::storage::LocalDir;
+use hpcstore::runtime::Kernels;
+use hpcstore::workload::ovis::OvisGenerator;
+use hpcstore::workload::IngestDriver;
+
+fn main() {
+    let kernels = Kernels::load_or_fallback("artifacts");
+    let mut report = Report::new("A4 — insertMany batch size (live cluster, 2 shards/2 routers/4 PEs)");
+    report.set_custom(
+        ["batch", "docs", "docs/s", "batch p50", "batch p95", "rerouted"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    for &batch in &[50usize, 200, 1000, 4000] {
+        let cluster = Cluster::start(
+            ClusterSpec::small(2, 2),
+            move |sid| Ok(Box::new(LocalDir::temp(&format!("a4-{batch}-{sid}"))?)),
+            kernels.clone(),
+            Registry::new(),
+        )
+        .unwrap();
+        let client = cluster.client();
+        client.create_index(IndexSpec::single("ts")).unwrap();
+        client.create_index(IndexSpec::single("node_id")).unwrap();
+        let gen = OvisGenerator::new(WorkloadConfig {
+            monitored_nodes: 128,
+            metrics_per_doc: 75,
+            days: 8.0 / 1440.0,
+            ..Default::default()
+        });
+        let rep = IngestDriver::new(gen, batch, 4).run(&client).unwrap();
+        report.add_row(vec![
+            batch.to_string(),
+            rep.docs.to_string(),
+            format!("{:.0}", rep.docs_per_sec),
+            hpcstore::util::fmt::human_duration_ns(rep.batch_latency.p50()),
+            hpcstore::util::fmt::human_duration_ns(rep.batch_latency.p95()),
+            rep.rerouted.to_string(),
+        ]);
+        cluster.shutdown();
+    }
+    report.print();
+}

@@ -1,0 +1,71 @@
+//! A2 — index ablation: the paper's conditional find with both indexes
+//! (ts, node_id → index intersection), a single index, a compound
+//! index, and no index at all (full collection scan).
+
+use hpcstore::benchkit::{Bench, Report};
+use hpcstore::config::WorkloadConfig;
+use hpcstore::metrics::Registry;
+use hpcstore::mongo::cluster::{Cluster, ClusterSpec};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::mongo::storage::LocalDir;
+use hpcstore::runtime::Kernels;
+use hpcstore::workload::jobs::generate_jobs;
+use hpcstore::workload::ovis::OvisGenerator;
+use hpcstore::workload::queries::job_filter;
+use hpcstore::workload::IngestDriver;
+
+fn main() {
+    let wl = WorkloadConfig {
+        monitored_nodes: 128,
+        metrics_per_doc: 20,
+        days: 20.0 / 1440.0,
+        query_jobs: 8,
+        ..Default::default()
+    };
+    let jobs = generate_jobs(&wl);
+    let bench = Bench::quick();
+    let mut report = Report::new(&format!(
+        "A2 — find plans vs indexes ({} docs, paper-shape conditional finds)",
+        wl.total_docs()
+    ));
+
+    let cases: Vec<(&str, Vec<IndexSpec>)> = vec![
+        ("no index (full scan)", vec![]),
+        ("ts only", vec![IndexSpec::single("ts")]),
+        ("node_id only", vec![IndexSpec::single("node_id")]),
+        (
+            "ts + node_id (intersection)",
+            vec![IndexSpec::single("ts"), IndexSpec::single("node_id")],
+        ),
+        ("compound (node_id, ts)", vec![IndexSpec::compound(&["node_id", "ts"])]),
+    ];
+    for (label, specs) in cases {
+        let cluster = Cluster::start(
+            ClusterSpec::small(2, 1),
+            move |sid| Ok(Box::new(LocalDir::temp(&format!("a2-{sid}-{}", specs_key(label)))?)),
+            Kernels::fallback(),
+            Registry::new(),
+        )
+        .unwrap();
+        let client = cluster.client();
+        for spec in &specs {
+            client.create_index(spec.clone()).unwrap();
+        }
+        IngestDriver::new(OvisGenerator::new(wl.clone()), 1000, 2)
+            .run(&client)
+            .unwrap();
+        let mut i = 0usize;
+        report.push(bench.run(label, 1.0, || {
+            let job = &jobs[i % jobs.len()];
+            i += 1;
+            let n = client.count_documents(job_filter(job)).unwrap();
+            assert_eq!(n as u64, job.expected_docs());
+        }));
+        cluster.shutdown();
+    }
+    report.print();
+}
+
+fn specs_key(label: &str) -> String {
+    label.chars().filter(char::is_ascii_alphanumeric).collect()
+}

@@ -1,0 +1,66 @@
+//! A3 — Lustre sensitivity: OST count (DES, 256-node preset where the
+//! journal traffic is heaviest) and stripe count (live accounting).
+
+use hpcstore::benchkit::Report;
+use hpcstore::config::LustreConfig;
+use hpcstore::hpc::lustre::Lustre;
+use hpcstore::mongo::storage::StorageDir;
+use hpcstore::sim::{ClusterSim, CostModel, SimSpec};
+use hpcstore::util::fmt::{human_bytes, human_count};
+
+fn main() {
+    let cost = CostModel::load_or_default(std::path::Path::new("artifacts")).with_network_floor();
+
+    let mut report = Report::new("A3a — OST count vs ingest rate (DES, 256-node preset)");
+    report.set_custom(
+        ["OSTs", "docs/s", "OST util", "shard util", "config util"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    for &osts in &[4u32, 8, 16, 64, 256] {
+        let mut spec = SimSpec::paper_preset(256, cost.clone()).unwrap();
+        spec.osts = osts;
+        spec.monitored_nodes = 1_024; // keep the sweep fast
+        let r = ClusterSim::new(spec).run();
+        report.add_row(vec![
+            osts.to_string(),
+            human_count(r.docs_per_sec as u64),
+            format!("{:.0}%", r.util_ost * 100.0),
+            format!("{:.0}%", r.util_shard * 100.0),
+            format!("{:.0}%", r.util_config * 100.0),
+        ]);
+    }
+    report.print();
+    println!("\nfew OSTs → journal-bound; past ~16 the config/shard CPUs bind instead\n");
+
+    // Live stripe-count accounting: same bytes, different spread.
+    let mut live = Report::new("A3b — stripe count vs OST spread (live accounting, 16 MiB file)");
+    live.set_custom(
+        ["stripe_count", "OSTs touched", "max OST bytes", "min OST bytes"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    for &stripes in &[1u32, 2, 4, 8] {
+        let fs = Lustre::mount(LustreConfig {
+            osts: 8,
+            default_stripe_count: stripes,
+            stripe_size_kib: 1024,
+            ..Default::default()
+        })
+        .unwrap();
+        let dir = fs.dir("scratch/shard-0").unwrap();
+        let mut f = dir.create("journal.wal").unwrap();
+        f.append(&vec![0u8; 16 << 20]).unwrap();
+        let written = fs.ost_written();
+        let touched = written.iter().filter(|&&b| b > 0).count();
+        live.add_row(vec![
+            stripes.to_string(),
+            touched.to_string(),
+            human_bytes(*written.iter().max().unwrap()),
+            human_bytes(*written.iter().filter(|&&b| b > 0).min().unwrap()),
+        ]);
+    }
+    live.print();
+}

@@ -1,0 +1,55 @@
+//! A1 — the AOT route kernel (HLO via PJRT) vs the scalar Rust baseline
+//! on the router's insertMany partitioning hot path.
+//!
+//! Also reports the route kernel's batch-size sensitivity (fixed
+//! invocation overhead vs per-key cost) — the measurement behind the
+//! cost model's `route_batch_fixed_ns`/`route_doc_ns`.
+
+use hpcstore::benchkit::{Bench, Report};
+use hpcstore::runtime::{fallback, Backend, Kernels};
+use hpcstore::util::rng::Pcg32;
+
+fn chunk_table(chunks: usize) -> (Vec<u32>, Vec<i32>) {
+    let bounds: Vec<u32> = (1..=chunks as u64)
+        .map(|i| ((u32::MAX as u64 + 1) * i / chunks as u64 - 1) as u32)
+        .collect();
+    let owners: Vec<i32> = (0..chunks).map(|i| (i % 63) as i32).collect();
+    (bounds, owners)
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(0xA1);
+    let keys: Vec<(u32, u32)> = (0..8192)
+        .map(|_| (rng.next_bounded(28_000), rng.next_u32()))
+        .collect();
+    let node: Vec<u32> = keys.iter().map(|k| k.0).collect();
+    let ts: Vec<u32> = keys.iter().map(|k| k.1).collect();
+    let (bounds, owners) = chunk_table(126); // 63 shards × 2 chunks
+
+    let bench = Bench::default();
+    let mut report = Report::new("A1 — route kernel: HLO (PJRT) vs scalar fallback, 8192 keys x 126 chunks");
+
+    let hlo = Kernels::load_or_fallback("artifacts");
+    if hlo.backend() == Backend::Hlo {
+        for &b in &[512usize, 4096, 8192] {
+            report.push(bench.run(&format!("hlo route b={b}"), b as f64, || {
+                hlo.route(&node[..b], &ts[..b], &bounds, &owners, 63).unwrap();
+            }));
+        }
+    } else {
+        println!("(artifacts missing — HLO rows skipped; run `make artifacts`)");
+    }
+
+    let fb = Kernels::fallback();
+    for &b in &[512usize, 4096, 8192] {
+        report.push(bench.run(&format!("scalar route b={b}"), b as f64, || {
+            fb.route(&node[..b], &ts[..b], &bounds, &owners, 63).unwrap();
+        }));
+    }
+
+    // Raw fallback internals for the roofline discussion.
+    report.push(bench.run("fnv1a+bsearch only b=8192", 8192.0, || {
+        std::hint::black_box(fallback::route_batch(&node, &ts, &bounds, &owners, 63));
+    }));
+    report.print();
+}

@@ -1,0 +1,83 @@
+//! A5 — hashed vs ranged shard keys under time-ordered ingest (live).
+//!
+//! Ranged keys send every monotonically-increasing timestamp to the
+//! "top" chunk — one hot shard — while hashed keys (the route kernel's
+//! ring) spread uniformly. With the balancer on, ranged recovers some
+//! throughput at the cost of migrations.
+
+use hpcstore::benchkit::Report;
+use hpcstore::config::{ShardKeyKind, StoreConfig, WorkloadConfig};
+use hpcstore::metrics::Registry;
+use hpcstore::mongo::cluster::{Cluster, ClusterSpec};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::mongo::storage::LocalDir;
+use hpcstore::runtime::Kernels;
+use hpcstore::workload::ovis::OvisGenerator;
+use hpcstore::workload::IngestDriver;
+
+fn run(kind: ShardKeyKind, balancer: bool, kernels: &Kernels) -> (f64, u64, Vec<u64>) {
+    let mut spec = ClusterSpec::small(4, 2);
+    spec.store = StoreConfig {
+        shard_key: kind,
+        max_chunk_docs: 2_000,
+        balancer,
+        ..Default::default()
+    };
+    let label = format!("a5-{}-{balancer}", kind.name());
+    let cluster = Cluster::start(
+        spec,
+        move |sid| Ok(Box::new(LocalDir::temp(&format!("{label}-{sid}"))?)),
+        kernels.clone(),
+        Registry::new(),
+    )
+    .unwrap();
+    let client = cluster.client();
+    client.create_index(IndexSpec::single("ts")).unwrap();
+    let gen = OvisGenerator::new(WorkloadConfig {
+        monitored_nodes: 64,
+        metrics_per_doc: 30,
+        days: 16.0 / 1440.0,
+        ..Default::default()
+    });
+    // Interleave balancer rounds like the deployed heartbeat.
+    let driver = IngestDriver::new(gen, 500, 4);
+    let rep = driver.run(&client).unwrap();
+    if balancer {
+        for _ in 0..4 {
+            cluster.run_balancer_round().unwrap();
+        }
+    }
+    let stats = cluster.stats();
+    let out = (rep.docs_per_sec, stats.migrations, stats.per_shard_docs.clone());
+    cluster.shutdown();
+    out
+}
+
+fn main() {
+    let kernels = Kernels::load_or_fallback("artifacts");
+    let mut report = Report::new("A5 — shard key kind under time-ordered ingest (live, 4 shards)");
+    report.set_custom(
+        ["key", "balancer", "docs/s", "migrations", "per-shard docs", "max/min"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    for (kind, bal) in [
+        (ShardKeyKind::Hashed, false),
+        (ShardKeyKind::Ranged, false),
+        (ShardKeyKind::Ranged, true),
+    ] {
+        let (dps, migrations, per_shard) = run(kind, bal, &kernels);
+        let max = *per_shard.iter().max().unwrap() as f64;
+        let min = *per_shard.iter().min().unwrap() as f64;
+        report.add_row(vec![
+            kind.name().to_string(),
+            if bal { "on" } else { "off" }.to_string(),
+            format!("{dps:.0}"),
+            migrations.to_string(),
+            format!("{per_shard:?}"),
+            format!("{:.1}", max / min.max(1.0)),
+        ]);
+    }
+    report.print();
+}

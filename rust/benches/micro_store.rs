@@ -1,0 +1,95 @@
+//! M1 — storage/codec/index microbenchmarks: the primitive costs that
+//! feed the DES cost model (compare with `artifacts/costmodel.json`).
+
+use hpcstore::benchkit::{Bench, Report};
+use hpcstore::config::WorkloadConfig;
+use hpcstore::mongo::bson::{Document, Value};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::mongo::storage::{Engine, LocalDir};
+use hpcstore::workload::ovis::OvisGenerator;
+
+fn main() {
+    let bench = Bench::default();
+    let mut report = Report::new("M1 — storage engine / codec / index microbenchmarks");
+
+    let gen = OvisGenerator::new(WorkloadConfig {
+        monitored_nodes: 512,
+        ..Default::default()
+    });
+    let docs: Vec<Document> = (0..4096u64).map(|i| gen.doc_at(i)).collect();
+    let encoded: Vec<Vec<u8>> = docs.iter().map(Document::encode).collect();
+
+    // Codec.
+    report.push(bench.run("bson encode (75 metrics)", 1.0, {
+        let d = docs[0].clone();
+        move || {
+            std::hint::black_box(d.encode());
+        }
+    }));
+    report.push(bench.run("bson decode (75 metrics)", 1.0, {
+        let bytes = encoded[0].clone();
+        move || {
+            std::hint::black_box(Document::decode(&bytes).unwrap());
+        }
+    }));
+    report.push(bench.run("ovis doc synthesis", 1.0, {
+        let gen = gen.clone();
+        let mut i = 0u64;
+        move || {
+            i += 1;
+            std::hint::black_box(gen.doc_at(i % 4096));
+        }
+    }));
+
+    // Engine insert paths (fresh engine per case to keep state bounded).
+    for (label, journal, indexes) in [
+        ("engine insert (no journal, no index)", false, false),
+        ("engine insert (journal)", true, false),
+        ("engine insert (journal + 2 indexes)", true, true),
+    ] {
+        let dir = LocalDir::temp("m1").unwrap();
+        let mut eng = Engine::open(Box::new(dir), journal, false).unwrap();
+        eng.create_collection("m");
+        if indexes {
+            eng.create_index("m", IndexSpec::single("ts")).unwrap();
+            eng.create_index("m", IndexSpec::single("node_id")).unwrap();
+        }
+        let docs = docs.clone();
+        let mut i = 0usize;
+        report.push(bench.run(label, 1.0, move || {
+            eng.insert("m", &docs[i % docs.len()]).unwrap();
+            i += 1;
+            if i % 1000 == 0 {
+                eng.sync().unwrap();
+            }
+        }));
+    }
+
+    // Index operations on a populated index.
+    {
+        let dir = LocalDir::temp("m1-idx").unwrap();
+        let mut eng = Engine::open(Box::new(dir), false, false).unwrap();
+        eng.create_collection("m");
+        eng.create_index("m", IndexSpec::single("ts")).unwrap();
+        for d in &docs {
+            eng.insert("m", d).unwrap();
+        }
+        let start = gen.config().start_epoch_min as i64;
+        let mut i = 0i64;
+        let eng_ref = &eng;
+        report.push(bench.run("index range scan (~512 rids)", 512.0, move || {
+            let lo = Value::Int(start + (i % 4));
+            let hi = Value::Int(start + (i % 4) + 1);
+            i += 1;
+            let idx = eng_ref.index("m", "ts_1").unwrap();
+            std::hint::black_box(idx.range_superset(Some(&lo), Some(&hi)));
+        }));
+        let mut j = 0u64;
+        report.push(bench.run("record fetch+decode", 1.0, move || {
+            std::hint::black_box(eng.fetch("m", j % 4096));
+            j += 1;
+        }));
+    }
+
+    report.print();
+}

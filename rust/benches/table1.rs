@@ -1,0 +1,38 @@
+//! T1 — regenerate the paper's Table 1 (nodes → days of data), extended
+//! with the role assignment rule of §4 and realized corpus sizes.
+
+use hpcstore::benchkit::Report;
+use hpcstore::config::{Topology, WorkloadConfig, TABLE1};
+use hpcstore::util::fmt::{human_bytes, human_count};
+use hpcstore::workload::csvstore;
+use hpcstore::workload::ovis::OvisGenerator;
+
+fn main() {
+    let monitored = 2_048u32; // paper: ~27k Blue Waters nodes, sim-scaled
+    let mut report = Report::new(&format!(
+        "Table 1 — days of data per cluster size (corpus scaled to {monitored} monitored nodes; paper: 27k nodes, 70B rows, 200TB CSV)"
+    ));
+    report.set_custom(
+        ["nodes", "days", "config", "shards", "routers", "client PEs", "docs", "CSV bytes"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    for (nodes, days) in TABLE1 {
+        let topo = Topology::paper_preset(nodes).unwrap();
+        let wl = WorkloadConfig { monitored_nodes: monitored, days, ..Default::default() };
+        let gen = OvisGenerator::new(wl.clone());
+        report.add_row(vec![
+            nodes.to_string(),
+            format!("{days}"),
+            topo.config_servers.to_string(),
+            topo.shards.to_string(),
+            topo.routers.to_string(),
+            topo.client_pes().to_string(),
+            human_count(wl.total_docs()),
+            human_bytes(csvstore::corpus_bytes(&gen)),
+        ]);
+    }
+    report.print();
+    println!("\npaper Table 1: 32→3 days, 64→7, 128→14, 256→14 ✓ (fixed preset)");
+}

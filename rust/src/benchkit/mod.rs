@@ -1,0 +1,248 @@
+//! Criterion-like benchmark harness (criterion is not in the vendored
+//! dependency set).
+//!
+//! `rust/benches/*.rs` are `harness = false` binaries that drive this
+//! module. It provides warmup, repeated timed runs, robust statistics
+//! (mean/σ/percentiles via sorted samples), throughput units, and
+//! markdown table emission so each bench prints the same rows as the
+//! paper's tables/figures.
+
+use std::time::Instant;
+
+use crate::util::fmt::{human_count, human_duration_ns, markdown_table};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sampled {
+    pub name: String,
+    /// Nanoseconds per iteration, one entry per measured sample.
+    pub samples_ns: Vec<f64>,
+    /// Items processed per iteration (for throughput).
+    pub items_per_iter: f64,
+}
+
+impl Sampled {
+    pub fn mean_ns(&self) -> f64 {
+        mean(&self.samples_ns)
+    }
+
+    pub fn stddev_ns(&self) -> f64 {
+        stddev(&self.samples_ns)
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        percentile(&self.samples_ns, p)
+    }
+
+    /// Items per second at the mean sample time.
+    pub fn throughput(&self) -> f64 {
+        if self.mean_ns() == 0.0 {
+            0.0
+        } else {
+            self.items_per_iter * 1e9 / self.mean_ns()
+        }
+    }
+
+    pub fn summary_row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            human_duration_ns(self.mean_ns() as u64),
+            format!("±{:.1}%", 100.0 * self.stddev_ns() / self.mean_ns().max(1e-12)),
+            human_duration_ns(self.percentile_ns(0.5) as u64),
+            human_duration_ns(self.percentile_ns(0.95) as u64),
+            format!("{}/s", human_count(self.throughput() as u64)),
+        ]
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup_iters: u32,
+    pub samples: u32,
+    /// Minimum inner iterations per sample (amortizes timer overhead for
+    /// sub-microsecond operations).
+    pub min_inner: u32,
+    /// Target nanoseconds per sample used for auto inner-scaling.
+    pub target_sample_ns: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            samples: 12,
+            min_inner: 1,
+            target_sample_ns: 20_000_000.0, // 20 ms
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            samples: 5,
+            min_inner: 1,
+            target_sample_ns: 5_000_000.0,
+        }
+    }
+
+    /// Time `f` (whole-operation granularity): each sample runs `inner`
+    /// iterations where `inner` is scaled so a sample lasts about
+    /// `target_sample_ns`.
+    pub fn run<F: FnMut()>(&self, name: &str, items_per_iter: f64, mut f: F) -> Sampled {
+        // Warmup + calibration.
+        let mut one_iter_ns = f64::MAX;
+        for _ in 0..self.warmup_iters.max(1) {
+            let t = Instant::now();
+            f();
+            one_iter_ns = one_iter_ns.min(t.elapsed().as_nanos() as f64);
+        }
+        let inner = ((self.target_sample_ns / one_iter_ns.max(1.0)).ceil() as u32)
+            .clamp(self.min_inner.max(1), 1_000_000);
+
+        let mut samples = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..inner {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / inner as f64);
+        }
+        Sampled {
+            name: name.to_string(),
+            samples_ns: samples,
+            items_per_iter,
+        }
+    }
+}
+
+/// Collects cases and prints one markdown table at the end.
+#[derive(Default)]
+pub struct Report {
+    title: String,
+    cases: Vec<Sampled>,
+    extra_rows: Vec<Vec<String>>,
+    extra_headers: Option<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, s: Sampled) {
+        println!(
+            "  {:<40} mean={} thrpt={}/s",
+            s.name,
+            human_duration_ns(s.mean_ns() as u64),
+            human_count(s.throughput() as u64)
+        );
+        self.cases.push(s);
+    }
+
+    /// For benches whose output is not time-per-iteration (e.g. DES
+    /// sweeps): set custom headers and add raw rows.
+    pub fn set_custom(&mut self, headers: Vec<String>) {
+        self.extra_headers = Some(headers);
+    }
+
+    pub fn add_row(&mut self, row: Vec<String>) {
+        self.extra_rows.push(row);
+    }
+
+    pub fn print(&self) {
+        println!("\n## {}\n", self.title);
+        if !self.cases.is_empty() {
+            let rows: Vec<Vec<String>> = self.cases.iter().map(|c| c.summary_row()).collect();
+            print!(
+                "{}",
+                markdown_table(
+                    &["case", "mean", "σ", "p50", "p95", "throughput"],
+                    &rows
+                )
+            );
+        }
+        if let Some(headers) = &self.extra_headers {
+            let hdrs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+            print!("{}", markdown_table(&hdrs, &self.extra_rows));
+        }
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// True when `--quick` was passed (CI/sanity runs).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert!((stddev(&xs) - 1.5811).abs() < 1e-3);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn run_measures_something() {
+        let b = Bench {
+            warmup_iters: 1,
+            samples: 3,
+            min_inner: 1,
+            target_sample_ns: 100_000.0,
+        };
+        let mut x = 0u64;
+        let s = b.run("spin", 1000.0, || {
+            for i in 0..1000u64 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(s.samples_ns.len(), 3);
+        assert!(s.mean_ns() > 0.0);
+        assert!(s.throughput() > 0.0);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn report_renders_table() {
+        let mut r = Report::new("t");
+        r.set_custom(vec!["a".into(), "b".into()]);
+        r.add_row(vec!["1".into(), "2".into()]);
+        r.print(); // must not panic
+    }
+}

@@ -1,0 +1,222 @@
+//! Tiny CLI argument parser (clap is not in the vendored set).
+//!
+//! Supports `binary <subcommand> [--flag value] [--switch] [positional]`.
+//! Flags may appear as `--key value` or `--key=value`. Unknown flags are
+//! errors; `-h/--help` renders generated usage.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declarative flag spec for help rendering.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub value_hint: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Declarative subcommand spec.
+#[derive(Clone, Debug)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+/// Parsed invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse()
+                    .map_err(|_| anyhow::anyhow!("flag --{name} expects an integer, got `{s}`"))?,
+            )),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse()
+                    .map_err(|_| anyhow::anyhow!("flag --{name} expects a number, got `{s}`"))?,
+            )),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// The CLI definition: subcommands with their flags.
+pub struct Cli {
+    pub binary: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    /// Parse `argv[1..]`. Returns `Ok(None)` if help was requested (and
+    /// printed).
+    pub fn parse(&self, argv: &[String]) -> Result<Option<Args>> {
+        if argv.is_empty() || argv[0] == "-h" || argv[0] == "--help" || argv[0] == "help" {
+            println!("{}", self.usage());
+            return Ok(None);
+        }
+        let command = argv[0].clone();
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == command)
+            .ok_or_else(|| {
+                anyhow::anyhow!("unknown subcommand `{command}`\n\n{}", self.usage())
+            })?;
+
+        let mut args = Args {
+            command: command.clone(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "-h" || tok == "--help" {
+                println!("{}", self.command_usage(spec));
+                return Ok(None);
+            }
+            if let Some(flag) = tok.strip_prefix("--") {
+                let (name, inline_val) = match flag.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (flag.to_string(), None),
+                };
+                let fs = spec.flags.iter().find(|f| f.name == name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown flag --{name} for `{command}`\n\n{}",
+                        self.command_usage(spec)
+                    )
+                })?;
+                match (fs.value_hint.is_some(), inline_val) {
+                    (true, Some(v)) => {
+                        args.flags.insert(name, v);
+                    }
+                    (true, None) => {
+                        i += 1;
+                        if i >= argv.len() {
+                            bail!("flag --{name} expects a value");
+                        }
+                        args.flags.insert(name, argv[i].clone());
+                    }
+                    (false, None) => args.switches.push(name),
+                    (false, Some(_)) => bail!("switch --{name} takes no value"),
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(Some(args))
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} <command> [flags]\n\nCOMMANDS:\n",
+            self.binary, self.about, self.binary);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        out.push_str("\nRun `<command> --help` for flags.");
+        out
+    }
+
+    fn command_usage(&self, spec: &CommandSpec) -> String {
+        let mut out = format!("{} {} — {}\n\nFLAGS:\n", self.binary, spec.name, spec.about);
+        for f in &spec.flags {
+            let lhs = match f.value_hint {
+                Some(hint) => format!("--{} <{}>", f.name, hint),
+                None => format!("--{}", f.name),
+            };
+            out.push_str(&format!("  {lhs:<28} {}\n", f.help));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            binary: "hpcstore",
+            about: "test",
+            commands: vec![CommandSpec {
+                name: "ingest",
+                about: "run ingest",
+                flags: vec![
+                    FlagSpec { name: "nodes", value_hint: Some("N"), help: "node count" },
+                    FlagSpec { name: "days", value_hint: Some("D"), help: "days" },
+                    FlagSpec { name: "verbose", value_hint: None, help: "chatty" },
+                ],
+            }],
+        }
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = cli()
+            .parse(&sv(&["ingest", "--nodes", "32", "--days=3.5", "--verbose", "pos1"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(a.command, "ingest");
+        assert_eq!(a.get_u64("nodes").unwrap(), Some(32));
+        assert_eq!(a.get_f64("days").unwrap(), Some(3.5));
+        assert!(a.has_switch("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_command_and_flag_error() {
+        assert!(cli().parse(&sv(&["nope"])).is_err());
+        assert!(cli().parse(&sv(&["ingest", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&sv(&["ingest", "--nodes"])).is_err());
+        assert!(cli().parse(&sv(&["ingest", "--verbose=x"])).is_err());
+    }
+
+    #[test]
+    fn bad_numeric_value_errors() {
+        let a = cli().parse(&sv(&["ingest", "--nodes", "abc"])).unwrap().unwrap();
+        assert!(a.get_u64("nodes").is_err());
+    }
+
+    #[test]
+    fn help_returns_none() {
+        assert!(cli().parse(&sv(&["--help"])).unwrap().is_none());
+        assert!(cli().parse(&sv(&["ingest", "--help"])).unwrap().is_none());
+        assert!(cli().parse(&sv(&[])).unwrap().is_none());
+    }
+}

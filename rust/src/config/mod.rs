@@ -1,0 +1,488 @@
+//! Typed configuration for the cluster, workload, HPC substrate and DES.
+//!
+//! Configs load from JSON (see `examples/configs/`), can be overridden by
+//! CLI flags, and expose the paper's preset topologies (Table 1 plus the
+//! §4 role-assignment rule: an N-node job runs 2 config servers, N/4-1
+//! shards, N/4-1 routers, and N/2 client nodes with 4 PEs each).
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// How documents are partitioned across chunks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardKeyKind {
+    /// FNV-1a hash of (node_id, ts_min) on the hash ring (default; the
+    /// route kernel computes this).
+    Hashed,
+    /// Range partitioning directly on (node_id, ts_min) — exhibits the
+    /// hot-chunk pathology for time-ordered ingest (ablation A5).
+    Ranged,
+}
+
+impl ShardKeyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "hashed" => Ok(Self::Hashed),
+            "ranged" => Ok(Self::Ranged),
+            _ => bail!("unknown shard key kind `{s}` (hashed|ranged)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Hashed => "hashed",
+            Self::Ranged => "ranged",
+        }
+    }
+}
+
+/// Cluster topology: how job nodes are assigned to roles (paper §3.2/§4).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub total_nodes: u32,
+    pub config_servers: u32,
+    pub shards: u32,
+    pub routers: u32,
+    pub client_nodes: u32,
+    pub pes_per_client_node: u32,
+}
+
+impl Topology {
+    /// The paper's role-assignment rule for an N-node job.
+    pub fn paper_preset(total_nodes: u32) -> Result<Self> {
+        if total_nodes < 8 || total_nodes % 4 != 0 {
+            bail!("paper presets need total_nodes >= 8 and divisible by 4, got {total_nodes}");
+        }
+        let client_nodes = total_nodes / 2;
+        let shards = total_nodes / 4 - 1;
+        Ok(Self {
+            total_nodes,
+            config_servers: 2,
+            shards,
+            routers: shards,
+            client_nodes,
+            pes_per_client_node: 4,
+        })
+    }
+
+    /// Small custom topology (tests/examples on one machine).
+    pub fn small(shards: u32, routers: u32, client_pes: u32) -> Self {
+        Self {
+            total_nodes: 2 + shards + routers + client_pes.max(1),
+            config_servers: 1,
+            shards,
+            routers,
+            client_nodes: client_pes.max(1),
+            pes_per_client_node: 1,
+        }
+    }
+
+    pub fn client_pes(&self) -> u32 {
+        self.client_nodes * self.pes_per_client_node
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("topology needs at least one shard");
+        }
+        if self.routers == 0 {
+            bail!("topology needs at least one router");
+        }
+        if self.config_servers == 0 {
+            bail!("topology needs a config server");
+        }
+        let used = self.config_servers + self.shards + self.routers + self.client_nodes;
+        if used > self.total_nodes && self.pes_per_client_node == 4 {
+            bail!(
+                "role assignment exceeds job size: {used} roles > {} nodes",
+                self.total_nodes
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        v.set("total_nodes", self.total_nodes)
+            .set("config_servers", self.config_servers)
+            .set("shards", self.shards)
+            .set("routers", self.routers)
+            .set("client_nodes", self.client_nodes)
+            .set("pes_per_client_node", self.pes_per_client_node);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            total_nodes: v.require_u64("total_nodes")? as u32,
+            config_servers: v.require_u64("config_servers")? as u32,
+            shards: v.require_u64("shards")? as u32,
+            routers: v.require_u64("routers")? as u32,
+            client_nodes: v.require_u64("client_nodes")? as u32,
+            pes_per_client_node: v.require_u64("pes_per_client_node")? as u32,
+        })
+    }
+}
+
+/// Store behaviour knobs.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    pub shard_key: ShardKeyKind,
+    /// Split a chunk once it holds this many documents.
+    pub max_chunk_docs: u64,
+    /// Write-ahead journaling on shard servers.
+    pub journal: bool,
+    /// Compress checkpoint blocks (flate2).
+    pub compress_checkpoints: bool,
+    /// insertMany sub-batch size the client uses.
+    pub insert_batch: usize,
+    /// find cursor batch size.
+    pub cursor_batch: usize,
+    /// Run the chunk balancer.
+    pub balancer: bool,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self {
+            shard_key: ShardKeyKind::Hashed,
+            max_chunk_docs: 100_000,
+            journal: true,
+            compress_checkpoints: false,
+            insert_batch: 1_000,
+            cursor_batch: 1_000,
+            balancer: true,
+        }
+    }
+}
+
+impl StoreConfig {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        v.set("shard_key", self.shard_key.name())
+            .set("max_chunk_docs", self.max_chunk_docs)
+            .set("journal", self.journal)
+            .set("compress_checkpoints", self.compress_checkpoints)
+            .set("insert_batch", self.insert_batch)
+            .set("cursor_batch", self.cursor_batch)
+            .set("balancer", self.balancer);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            shard_key: match v.get("shard_key").and_then(Value::as_str) {
+                Some(s) => ShardKeyKind::parse(s)?,
+                None => d.shard_key,
+            },
+            max_chunk_docs: v
+                .get("max_chunk_docs")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.max_chunk_docs),
+            journal: v.get("journal").and_then(Value::as_bool).unwrap_or(d.journal),
+            compress_checkpoints: v
+                .get("compress_checkpoints")
+                .and_then(Value::as_bool)
+                .unwrap_or(d.compress_checkpoints),
+            insert_batch: v
+                .get("insert_batch")
+                .and_then(Value::as_usize)
+                .unwrap_or(d.insert_batch),
+            cursor_batch: v
+                .get("cursor_batch")
+                .and_then(Value::as_usize)
+                .unwrap_or(d.cursor_batch),
+            balancer: v.get("balancer").and_then(Value::as_bool).unwrap_or(d.balancer),
+        })
+    }
+}
+
+/// OVIS-style corpus parameters (paper §4).
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Number of monitored compute nodes emitting metrics (Blue Waters:
+    /// ~27k; scaled default for a single machine).
+    pub monitored_nodes: u32,
+    /// Distinct metrics per sample document (paper: ~75).
+    pub metrics_per_doc: u32,
+    /// Days of data to ingest (Table 1).
+    pub days: f64,
+    /// Epoch-minute at which the corpus starts (2018-01-01 00:00 UTC).
+    pub start_epoch_min: u32,
+    /// RNG seed for corpus synthesis.
+    pub seed: u64,
+    /// Number of synthetic user jobs used to build the query workload.
+    pub query_jobs: u32,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            monitored_nodes: 256,
+            metrics_per_doc: 75,
+            days: 0.05, // ~72 minutes — quick live runs
+            start_epoch_min: 25_246_080, // 2018-01-01T00:00Z in epoch minutes
+            seed: 0x0515_CA5E,
+            query_jobs: 32,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Total documents this workload ingests.
+    pub fn total_docs(&self) -> u64 {
+        let minutes = (self.days * 1440.0).round() as u64;
+        minutes * self.monitored_nodes as u64
+    }
+
+    pub fn minutes(&self) -> u32 {
+        (self.days * 1440.0).round() as u32
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        v.set("monitored_nodes", self.monitored_nodes)
+            .set("metrics_per_doc", self.metrics_per_doc)
+            .set("days", self.days)
+            .set("start_epoch_min", self.start_epoch_min)
+            .set("seed", self.seed)
+            .set("query_jobs", self.query_jobs);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            monitored_nodes: v
+                .get("monitored_nodes")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.monitored_nodes as u64) as u32,
+            metrics_per_doc: v
+                .get("metrics_per_doc")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.metrics_per_doc as u64) as u32,
+            days: v.get("days").and_then(Value::as_f64).unwrap_or(d.days),
+            start_epoch_min: v
+                .get("start_epoch_min")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.start_epoch_min as u64) as u32,
+            seed: v.get("seed").and_then(Value::as_u64).unwrap_or(d.seed),
+            query_jobs: v
+                .get("query_jobs")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.query_jobs as u64) as u32,
+        })
+    }
+}
+
+/// Lustre substrate parameters.
+#[derive(Clone, Debug)]
+pub struct LustreConfig {
+    pub osts: u32,
+    pub default_stripe_count: u32,
+    pub stripe_size_kib: u32,
+    /// Modeled per-OST streaming bandwidth (DES; Sonexion-class OSTs).
+    pub ost_bandwidth_mib_s: f64,
+    /// Live mode: host directory backing the simulated filesystem.
+    pub backing_dir: String,
+}
+
+impl Default for LustreConfig {
+    fn default() -> Self {
+        Self {
+            osts: 8,
+            default_stripe_count: 2,
+            stripe_size_kib: 1024,
+            ost_bandwidth_mib_s: 500.0,
+            backing_dir: String::new(), // empty → temp dir
+        }
+    }
+}
+
+impl LustreConfig {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        v.set("osts", self.osts)
+            .set("default_stripe_count", self.default_stripe_count)
+            .set("stripe_size_kib", self.stripe_size_kib)
+            .set("ost_bandwidth_mib_s", self.ost_bandwidth_mib_s)
+            .set("backing_dir", self.backing_dir.as_str());
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            osts: v.get("osts").and_then(Value::as_u64).unwrap_or(d.osts as u64) as u32,
+            default_stripe_count: v
+                .get("default_stripe_count")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.default_stripe_count as u64) as u32,
+            stripe_size_kib: v
+                .get("stripe_size_kib")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.stripe_size_kib as u64) as u32,
+            ost_bandwidth_mib_s: v
+                .get("ost_bandwidth_mib_s")
+                .and_then(Value::as_f64)
+                .unwrap_or(d.ost_bandwidth_mib_s),
+            backing_dir: v
+                .get("backing_dir")
+                .and_then(Value::as_str)
+                .unwrap_or("")
+                .to_string(),
+        })
+    }
+}
+
+/// Top-level configuration bundle.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub topology: Option<Topology>,
+    pub store: StoreConfig,
+    pub workload: WorkloadConfig,
+    pub lustre: LustreConfig,
+    /// Directory holding AOT artifacts.
+    pub artifact_dir: String,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self {
+            artifact_dir: "artifacts".to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let v = json::from_file(path)?;
+        Self::from_json(&v).with_context(|| format!("in config {}", path.display()))
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            topology: match v.get("topology") {
+                Some(t) => Some(Topology::from_json(t)?),
+                None => None,
+            },
+            store: match v.get("store") {
+                Some(s) => StoreConfig::from_json(s)?,
+                None => StoreConfig::default(),
+            },
+            workload: match v.get("workload") {
+                Some(w) => WorkloadConfig::from_json(w)?,
+                None => WorkloadConfig::default(),
+            },
+            lustre: match v.get("lustre") {
+                Some(l) => LustreConfig::from_json(l)?,
+                None => LustreConfig::default(),
+            },
+            artifact_dir: v
+                .get("artifact_dir")
+                .and_then(Value::as_str)
+                .unwrap_or("artifacts")
+                .to_string(),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        if let Some(t) = &self.topology {
+            v.set("topology", t.to_json());
+        }
+        v.set("store", self.store.to_json())
+            .set("workload", self.workload.to_json())
+            .set("lustre", self.lustre.to_json())
+            .set("artifact_dir", self.artifact_dir.as_str());
+        v
+    }
+}
+
+/// The paper's Table 1: cluster size → days of ingested data.
+pub const TABLE1: [(u32, f64); 4] = [(32, 3.0), (64, 7.0), (128, 14.0), (256, 14.0)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_presets_match_section4() {
+        // "a job of 32 nodes ... 2 config, 7 shards, 7 routers, 16 ingest"
+        let t = Topology::paper_preset(32).unwrap();
+        assert_eq!(
+            t,
+            Topology {
+                total_nodes: 32,
+                config_servers: 2,
+                shards: 7,
+                routers: 7,
+                client_nodes: 16,
+                pes_per_client_node: 4
+            }
+        );
+        assert_eq!(t.client_pes(), 64); // "64 insertMany concurrently"
+        // "A job of 64 nodes would have 2 for configuration, 15 shards, 15
+        // router servers and so on."
+        let t = Topology::paper_preset(64).unwrap();
+        assert_eq!((t.shards, t.routers, t.client_nodes), (15, 15, 32));
+        let t = Topology::paper_preset(128).unwrap();
+        assert_eq!((t.shards, t.routers, t.client_nodes), (31, 31, 64));
+        let t = Topology::paper_preset(256).unwrap();
+        assert_eq!((t.shards, t.routers, t.client_nodes), (63, 63, 128));
+    }
+
+    #[test]
+    fn preset_rejects_bad_sizes() {
+        assert!(Topology::paper_preset(6).is_err());
+        assert!(Topology::paper_preset(33).is_err());
+    }
+
+    #[test]
+    fn topology_validation() {
+        let mut t = Topology::paper_preset(32).unwrap();
+        t.validate().unwrap();
+        t.shards = 0;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn topology_json_round_trip() {
+        let t = Topology::paper_preset(64).unwrap();
+        assert_eq!(Topology::from_json(&t.to_json()).unwrap(), t);
+    }
+
+    #[test]
+    fn workload_doc_count() {
+        let w = WorkloadConfig {
+            monitored_nodes: 100,
+            days: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(w.total_docs(), 144_000);
+    }
+
+    #[test]
+    fn config_round_trip_defaults() {
+        let c = Config::new();
+        let v = c.to_json();
+        let c2 = Config::from_json(&v).unwrap();
+        assert_eq!(c2.store.insert_batch, c.store.insert_batch);
+        assert_eq!(c2.workload.monitored_nodes, c.workload.monitored_nodes);
+        assert_eq!(c2.lustre.osts, c.lustre.osts);
+    }
+
+    #[test]
+    fn shard_key_parse() {
+        assert_eq!(ShardKeyKind::parse("hashed").unwrap(), ShardKeyKind::Hashed);
+        assert_eq!(ShardKeyKind::parse("ranged").unwrap(), ShardKeyKind::Ranged);
+        assert!(ShardKeyKind::parse("zoned").is_err());
+    }
+
+    #[test]
+    fn table1_matches_paper() {
+        assert_eq!(TABLE1[0], (32, 3.0));
+        assert_eq!(TABLE1[3], (256, 14.0));
+    }
+}

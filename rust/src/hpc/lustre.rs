@@ -1,0 +1,387 @@
+//! Lustre-like striped parallel filesystem.
+//!
+//! Model: an MDS owning the namespace plus `osts` object storage
+//! targets. Every file gets a stripe layout (`stripe_count` OSTs chosen
+//! round-robin from a per-file starting offset, `stripe_size` bytes per
+//! stripe unit) — so when the run script assigns each shard its own
+//! directory, writes spread over distinct OSTs exactly as the paper
+//! describes ("luster will distribute those files to an object storage
+//! server that should optimize further I/O").
+//!
+//! Live mode: bytes really land in a backing directory (one file per
+//! logical file) while per-OST byte counters are maintained for reports;
+//! the DES uses [`Lustre::transfer_ns`] for virtual-time cost.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::config::LustreConfig;
+use crate::mongo::storage::{LocalDir, StorageDir, StorageFile};
+use crate::util::hash::fnv1a_64;
+
+/// Per-OST counters.
+#[derive(Default)]
+struct OstState {
+    bytes_written: AtomicU64,
+    bytes_read: AtomicU64,
+    objects: AtomicU64,
+}
+
+/// Stripe layout of one file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Layout {
+    pub stripe_count: u32,
+    pub stripe_size: u64,
+    /// First OST index; stripes go round-robin from here.
+    pub start_ost: u32,
+}
+
+struct Mds {
+    /// namespace: logical path → layout
+    files: BTreeMap<String, Layout>,
+    /// Directory default stripe counts (`lfs setstripe` analogue).
+    dir_stripe: BTreeMap<String, u32>,
+}
+
+struct Inner {
+    cfg: LustreConfig,
+    osts: Vec<OstState>,
+    mds: Mutex<Mds>,
+    backing: PathBuf,
+}
+
+/// Shared filesystem handle.
+#[derive(Clone)]
+pub struct Lustre {
+    inner: Arc<Inner>,
+}
+
+impl Lustre {
+    /// Mount: `cfg.backing_dir` (or a fresh temp dir when empty) holds
+    /// the real bytes.
+    pub fn mount(cfg: LustreConfig) -> Result<Self> {
+        let backing = if cfg.backing_dir.is_empty() {
+            use std::sync::atomic::{AtomicU64, Ordering};
+            static NEXT: AtomicU64 = AtomicU64::new(0);
+            std::env::temp_dir().join(format!(
+                "hpcstore-lustre-{}-{}",
+                std::process::id(),
+                NEXT.fetch_add(1, Ordering::Relaxed)
+            ))
+        } else {
+            PathBuf::from(&cfg.backing_dir)
+        };
+        std::fs::create_dir_all(&backing)
+            .with_context(|| format!("creating lustre backing dir {}", backing.display()))?;
+        let osts = (0..cfg.osts).map(|_| OstState::default()).collect();
+        Ok(Self {
+            inner: Arc::new(Inner {
+                cfg,
+                osts,
+                mds: Mutex::new(Mds { files: BTreeMap::new(), dir_stripe: BTreeMap::new() }),
+                backing,
+            }),
+        })
+    }
+
+    pub fn config(&self) -> &LustreConfig {
+        &self.inner.cfg
+    }
+
+    /// `lfs setstripe -c` analogue for a directory.
+    pub fn set_dir_stripe(&self, dir: &str, stripe_count: u32) {
+        self.inner
+            .mds
+            .lock()
+            .unwrap()
+            .dir_stripe
+            .insert(dir.trim_matches('/').to_string(), stripe_count.max(1));
+    }
+
+    fn layout_for(&self, path: &str) -> Layout {
+        let mds = self.inner.mds.lock().unwrap();
+        let dir = path.rsplit_once('/').map(|(d, _)| d).unwrap_or("");
+        let stripe_count = mds
+            .dir_stripe
+            .iter()
+            .filter(|(d, _)| dir.starts_with(d.as_str()))
+            .map(|(_, c)| *c)
+            .next_back()
+            .unwrap_or(self.inner.cfg.default_stripe_count)
+            .min(self.inner.cfg.osts);
+        Layout {
+            stripe_count: stripe_count.max(1),
+            stripe_size: self.inner.cfg.stripe_size_kib as u64 * 1024,
+            start_ost: (fnv1a_64(path.as_bytes()) % self.inner.cfg.osts as u64) as u32,
+        }
+    }
+
+    fn register_file(&self, path: &str) -> Layout {
+        let layout = self.layout_for(path);
+        let mut mds = self.inner.mds.lock().unwrap();
+        let fresh = mds.files.insert(path.to_string(), layout.clone()).is_none();
+        drop(mds);
+        if fresh {
+            for i in 0..layout.stripe_count {
+                let ost = (layout.start_ost + i) % self.inner.cfg.osts;
+                self.inner.osts[ost as usize].objects.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        layout
+    }
+
+    /// Account a write of `bytes` at file offset `offset` against OSTs.
+    fn account_write(&self, layout: &Layout, offset: u64, bytes: u64) {
+        let mut remaining = bytes;
+        let mut off = offset;
+        while remaining > 0 {
+            let unit = (off / layout.stripe_size) % layout.stripe_count as u64;
+            let ost = (layout.start_ost + unit as u32) % self.inner.cfg.osts;
+            let in_unit = layout.stripe_size - (off % layout.stripe_size);
+            let chunk = remaining.min(in_unit);
+            self.inner.osts[ost as usize]
+                .bytes_written
+                .fetch_add(chunk, Ordering::Relaxed);
+            off += chunk;
+            remaining -= chunk;
+        }
+    }
+
+    fn account_read(&self, layout: &Layout, bytes: u64) {
+        // Reads are whole-file in our usage; spread evenly.
+        let per = bytes / layout.stripe_count as u64;
+        for i in 0..layout.stripe_count {
+            let ost = (layout.start_ost + i) % self.inner.cfg.osts;
+            self.inner.osts[ost as usize]
+                .bytes_read
+                .fetch_add(per, Ordering::Relaxed);
+        }
+    }
+
+    /// A shard-visible directory (implements [`StorageDir`]) rooted at
+    /// logical `path`.
+    pub fn dir(&self, path: &str) -> Result<LustreDir> {
+        let clean = path.trim_matches('/').to_string();
+        let local = LocalDir::new(self.inner.backing.join(&clean))?;
+        Ok(LustreDir { fs: self.clone(), prefix: clean, local })
+    }
+
+    /// Modeled time to move `bytes` through `stripes` OSTs at the
+    /// configured per-OST bandwidth (DES cost; contention is layered on
+    /// top by the resource model).
+    pub fn transfer_ns(&self, bytes: u64, stripes: u32) -> u64 {
+        let bw = self.inner.cfg.ost_bandwidth_mib_s * 1024.0 * 1024.0; // B/s per OST
+        let eff = bw * stripes.max(1).min(self.inner.cfg.osts) as f64;
+        ((bytes as f64 / eff) * 1e9) as u64
+    }
+
+    /// Per-OST written bytes (reports, imbalance checks).
+    pub fn ost_written(&self) -> Vec<u64> {
+        self.inner
+            .osts
+            .iter()
+            .map(|o| o.bytes_written.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    pub fn ost_read(&self) -> Vec<u64> {
+        self.inner
+            .osts
+            .iter()
+            .map(|o| o.bytes_read.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    pub fn total_written(&self) -> u64 {
+        self.ost_written().iter().sum()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.inner.mds.lock().unwrap().files.len()
+    }
+
+    pub fn backing_path(&self) -> &std::path::Path {
+        &self.inner.backing
+    }
+}
+
+/// A directory on the Lustre sim, usable as shard storage.
+pub struct LustreDir {
+    fs: Lustre,
+    prefix: String,
+    local: LocalDir,
+}
+
+impl LustreDir {
+    fn logical(&self, name: &str) -> String {
+        format!("{}/{}", self.prefix, name)
+    }
+}
+
+struct LustreFile {
+    fs: Lustre,
+    layout: Layout,
+    inner: Box<dyn StorageFile>,
+}
+
+impl StorageFile for LustreFile {
+    fn append(&mut self, bytes: &[u8]) -> Result<()> {
+        let offset = self.inner.len();
+        self.inner.append(bytes)?;
+        self.fs.account_write(&self.layout, offset, bytes.len() as u64);
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.inner.sync()
+    }
+
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+}
+
+impl StorageDir for LustreDir {
+    fn create(&self, name: &str) -> Result<Box<dyn StorageFile>> {
+        let layout = self.fs.register_file(&self.logical(name));
+        Ok(Box::new(LustreFile { fs: self.fs.clone(), layout, inner: self.local.create(name)? }))
+    }
+
+    fn append_to(&self, name: &str) -> Result<Box<dyn StorageFile>> {
+        let layout = self.fs.register_file(&self.logical(name));
+        Ok(Box::new(LustreFile {
+            fs: self.fs.clone(),
+            layout,
+            inner: self.local.append_to(name)?,
+        }))
+    }
+
+    fn read(&self, name: &str) -> Result<Vec<u8>> {
+        let bytes = self.local.read(name)?;
+        let layout = self.fs.register_file(&self.logical(name));
+        self.fs.account_read(&layout, bytes.len() as u64);
+        Ok(bytes)
+    }
+
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        let layout = self.fs.register_file(&self.logical(name));
+        self.fs.account_write(&layout, 0, bytes.len() as u64);
+        self.local.write_atomic(name, bytes)
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.local.exists(name)
+    }
+
+    fn remove(&self, name: &str) -> Result<()> {
+        self.local.remove(name)
+    }
+
+    fn describe(&self) -> String {
+        format!("lustre:/{} (backing {})", self.prefix, self.local.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fs(osts: u32, stripe: u32) -> Lustre {
+        Lustre::mount(LustreConfig {
+            osts,
+            default_stripe_count: stripe,
+            stripe_size_kib: 1, // 1 KiB units make striping visible
+            ost_bandwidth_mib_s: 100.0,
+            backing_dir: String::new(),
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn bytes_round_trip_through_backing() {
+        let fs = fs(4, 2);
+        let dir = fs.dir("scratch/shard-0").unwrap();
+        let mut f = dir.create("journal.wal").unwrap();
+        f.append(b"hello lustre").unwrap();
+        f.sync().unwrap();
+        assert_eq!(dir.read("journal.wal").unwrap(), b"hello lustre");
+        assert_eq!(fs.total_written(), 12);
+    }
+
+    #[test]
+    fn striping_spreads_across_osts() {
+        let fs = fs(4, 4);
+        let dir = fs.dir("scratch/s").unwrap();
+        let mut f = dir.create("big").unwrap();
+        // 8 KiB over 1-KiB stripe units on 4 OSTs → 2 KiB per OST.
+        f.append(&vec![0u8; 8192]).unwrap();
+        let written = fs.ost_written();
+        assert_eq!(written.iter().sum::<u64>(), 8192);
+        assert!(written.iter().all(|&w| w == 2048), "{written:?}");
+    }
+
+    #[test]
+    fn stripe_count_one_hits_one_ost() {
+        let fs = fs(4, 1);
+        let dir = fs.dir("d").unwrap();
+        let mut f = dir.create("x").unwrap();
+        f.append(&vec![0u8; 4096]).unwrap();
+        let written = fs.ost_written();
+        assert_eq!(written.iter().filter(|&&w| w > 0).count(), 1, "{written:?}");
+    }
+
+    #[test]
+    fn per_directory_stripe_override() {
+        let fs = fs(8, 1);
+        fs.set_dir_stripe("wide", 8);
+        let narrow = fs.dir("narrow").unwrap();
+        let wide = fs.dir("wide").unwrap();
+        narrow.create("f").unwrap().append(&vec![0u8; 8192]).unwrap();
+        wide.create("f").unwrap().append(&vec![0u8; 8192]).unwrap();
+        let w = fs.ost_written();
+        // Wide file touched all 8; narrow file only 1 → at least 8 OSTs
+        // have bytes and one has double share.
+        assert!(w.iter().filter(|&&b| b > 0).count() >= 8 || w.iter().any(|&b| b >= 8192));
+    }
+
+    #[test]
+    fn shard_dirs_get_distinct_starting_osts() {
+        let fs = fs(8, 2);
+        let mut starts = std::collections::BTreeSet::new();
+        for i in 0..8 {
+            let layout = fs.layout_for(&format!("scratch/shard-{i}/journal.wal"));
+            starts.insert(layout.start_ost);
+        }
+        // Hashing shouldn't collapse everything onto one OST.
+        assert!(starts.len() >= 4, "{starts:?}");
+    }
+
+    #[test]
+    fn transfer_time_scales() {
+        let fs = fs(8, 2);
+        let t1 = fs.transfer_ns(100 * 1024 * 1024, 1);
+        let t4 = fs.transfer_ns(100 * 1024 * 1024, 4);
+        assert!(t1 > 3 * t4, "t1={t1} t4={t4}");
+        // 100 MiB at 100 MiB/s on 1 stripe ≈ 1 s.
+        assert!((t1 as f64 - 1e9).abs() < 2e8, "t1={t1}");
+    }
+
+    #[test]
+    fn engine_runs_on_lustre_dir() {
+        use crate::mongo::bson::Document;
+        use crate::mongo::storage::Engine;
+        let fs = fs(4, 2);
+        let dir = fs.dir("scratch/mongo/shard-3").unwrap();
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("m");
+        eng.insert("m", &Document::new().set("ts", 1i64).set("node_id", 2i64)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap();
+        assert!(fs.total_written() > 0);
+        assert!(fs.file_count() >= 2); // journal + checkpoint
+    }
+}

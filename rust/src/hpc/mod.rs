@@ -1,0 +1,21 @@
+//! The shared-HPC substrate the paper runs on:
+//!
+//! * [`scheduler`] — a Moab/Torque-like batch scheduler (queue, node
+//!   pool, FCFS + EASY backfill, walltime enforcement).
+//! * [`lustre`] — a Lustre-like striped parallel filesystem (MDS
+//!   namespace, OST objects, stripe layouts, bandwidth accounting) whose
+//!   live mode backs bytes on a real local directory.
+//! * [`gemini`] — a Cray Gemini-like 3D-torus interconnect cost model.
+//! * [`runscript`] — the paper's contribution: the run-script execution
+//!   model that assigns cluster roles to the processing elements of a
+//!   queued job, publishes the router host list, and persists the store
+//!   across job boundaries.
+
+pub mod gemini;
+pub mod lustre;
+pub mod runscript;
+pub mod scheduler;
+
+pub use lustre::Lustre;
+pub use runscript::{DeployedCluster, RoleMap, RunScript};
+pub use scheduler::{Job, JobState, Scheduler};

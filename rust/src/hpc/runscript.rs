@@ -1,0 +1,320 @@
+//! The run-script execution model — the paper's contribution (§3.2).
+//!
+//! "For a typical Blue Waters user to deploy a MongoDB cluster, they
+//! must construct a run-script that assigns to each processing element
+//! which role it will be taking (config, shard, router) ... The
+//! runscript makes available through environment variables or a shared
+//! file a list of host names of the MongoDB cluster's router servers."
+//!
+//! [`RoleMap::assign`] maps the job's allocated hosts onto roles;
+//! [`RunScript::deploy`] brings the cluster up with each shard's data
+//! directory on its own Lustre path, publishes the router host list to a
+//! shared hostfile on Lustre, and hands back a [`DeployedCluster`] whose
+//! client is constructed *from that hostfile* — the same discovery path
+//! the paper's pymongo scripts use.
+
+use anyhow::{bail, Context, Result};
+
+use super::lustre::Lustre;
+use crate::config::{StoreConfig, Topology};
+use crate::json::{self, Value};
+use crate::metrics::Registry;
+use crate::mongo::client::MongoClient;
+use crate::mongo::cluster::{Cluster, ClusterSpec};
+use crate::mongo::storage::StorageDir;
+use crate::runtime::Kernels;
+use crate::util::ids::ShardId;
+
+/// Role assignment for one job allocation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoleMap {
+    pub config_hosts: Vec<u32>,
+    pub shard_hosts: Vec<u32>,
+    pub router_hosts: Vec<u32>,
+    pub client_hosts: Vec<u32>,
+}
+
+impl RoleMap {
+    /// Assign roles in the paper's order: config servers first, then
+    /// shard/router pairs, remaining hosts run the client script.
+    pub fn assign(hosts: &[u32], topo: &Topology) -> Result<RoleMap> {
+        let need = (topo.config_servers + topo.shards + topo.routers) as usize;
+        if hosts.len() < need + 1 {
+            bail!(
+                "allocation of {} hosts cannot fit {need} service roles + clients",
+                hosts.len()
+            );
+        }
+        let mut it = hosts.iter().copied();
+        let config_hosts: Vec<u32> = it.by_ref().take(topo.config_servers as usize).collect();
+        let shard_hosts: Vec<u32> = it.by_ref().take(topo.shards as usize).collect();
+        let router_hosts: Vec<u32> = it.by_ref().take(topo.routers as usize).collect();
+        let client_hosts: Vec<u32> = it.collect();
+        Ok(RoleMap { config_hosts, shard_hosts, router_hosts, client_hosts })
+    }
+
+    /// Client processing elements (paper: 4 per client node).
+    pub fn client_pes(&self, pes_per_node: u32) -> usize {
+        self.client_hosts.len() * pes_per_node as usize
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        v.set("config_hosts", self.config_hosts.clone())
+            .set("shard_hosts", self.shard_hosts.clone())
+            .set("router_hosts", self.router_hosts.clone())
+            .set("client_hosts", self.client_hosts.clone());
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<RoleMap> {
+        let get = |k: &str| -> Result<Vec<u32>> {
+            v.get(k)
+                .and_then(Value::as_array)
+                .ok_or_else(|| anyhow::anyhow!("hostfile missing `{k}`"))?
+                .iter()
+                .map(|x| {
+                    x.as_u64()
+                        .map(|n| n as u32)
+                        .ok_or_else(|| anyhow::anyhow!("non-integer host in `{k}`"))
+                })
+                .collect()
+        };
+        Ok(RoleMap {
+            config_hosts: get("config_hosts")?,
+            shard_hosts: get("shard_hosts")?,
+            router_hosts: get("router_hosts")?,
+            client_hosts: get("client_hosts")?,
+        })
+    }
+}
+
+/// The run script: topology + store knobs + the shared filesystem.
+pub struct RunScript {
+    pub topology: Topology,
+    pub store: StoreConfig,
+    pub lustre: Lustre,
+    pub kernels: Kernels,
+    /// Lustre path prefix for the store's data ("user scratch").
+    pub scratch: String,
+    pub metrics: Registry,
+}
+
+/// Name of the shared hostfile the run script publishes.
+pub const HOSTFILE: &str = "mongo_hosts.json";
+
+impl RunScript {
+    pub fn new(
+        topology: Topology,
+        store: StoreConfig,
+        lustre: Lustre,
+        kernels: Kernels,
+    ) -> Self {
+        Self {
+            topology,
+            store,
+            lustre,
+            kernels,
+            scratch: "scratch/mongo".to_string(),
+            metrics: Registry::new(),
+        }
+    }
+
+    fn shard_dir_path(&self, shard: ShardId) -> String {
+        format!("{}/{}", self.scratch, shard)
+    }
+
+    /// Bring the cluster up on the allocated hosts (run-script phase 1).
+    ///
+    /// Each shard gets its own Lustre directory; the router host list is
+    /// written to the shared hostfile. Data found in the shard
+    /// directories from a previous job is recovered — the store is
+    /// transient as a *process*, persistent as *data*.
+    pub fn deploy(&self, hosts: &[u32]) -> Result<DeployedCluster> {
+        self.topology.validate()?;
+        let roles = RoleMap::assign(hosts, &self.topology)?;
+
+        let spec = ClusterSpec {
+            shards: self.topology.shards,
+            routers: self.topology.routers,
+            config_replicas: self.topology.config_servers.max(1),
+            chunks_per_shard: 2,
+            store: self.store.clone(),
+        };
+        let lustre = self.lustre.clone();
+        let scratch = self.scratch.clone();
+        let cluster = Cluster::start(
+            spec,
+            move |sid| {
+                let dir = lustre.dir(&format!("{scratch}/{sid}"))?;
+                Ok(Box::new(dir) as Box<dyn StorageDir>)
+            },
+            self.kernels.clone(),
+            self.metrics.clone(),
+        )
+        .context("starting cluster from run script")?;
+
+        // Publish the hostfile on the shared filesystem.
+        let shared = self.lustre.dir(&self.scratch)?;
+        let mut hostfile = Value::object();
+        hostfile.set("roles", roles.to_json());
+        hostfile.set(
+            "shard_dirs",
+            (0..self.topology.shards)
+                .map(|i| self.shard_dir_path(ShardId(i)))
+                .collect::<Vec<String>>(),
+        );
+        shared.write_atomic(HOSTFILE, json::to_string_pretty(&hostfile).as_bytes())?;
+
+        Ok(DeployedCluster {
+            cluster,
+            roles,
+            lustre: self.lustre.clone(),
+            scratch: self.scratch.clone(),
+            pes_per_client_node: self.topology.pes_per_client_node,
+        })
+    }
+}
+
+/// A cluster brought up by the run script.
+pub struct DeployedCluster {
+    pub cluster: Cluster,
+    pub roles: RoleMap,
+    lustre: Lustre,
+    scratch: String,
+    pes_per_client_node: u32,
+}
+
+impl DeployedCluster {
+    /// Build a client the way the paper's workload scripts do: read the
+    /// router host list back from the shared hostfile.
+    pub fn client_from_hostfile(&self) -> Result<MongoClient> {
+        let shared = self.lustre.dir(&self.scratch)?;
+        let raw = shared.read(HOSTFILE).context("reading shared hostfile")?;
+        let v = json::parse(std::str::from_utf8(&raw)?)
+            .map_err(|e| anyhow::anyhow!("hostfile: {e}"))?;
+        let roles = RoleMap::from_json(
+            v.get("roles").ok_or_else(|| anyhow::anyhow!("hostfile missing roles"))?,
+        )?;
+        if roles.router_hosts.len() != self.cluster.router_mailboxes().len() {
+            bail!("hostfile router list does not match deployed routers");
+        }
+        Ok(self.cluster.client())
+    }
+
+    /// Number of client PEs this deployment runs (paper: 4 per node).
+    pub fn client_pes(&self) -> usize {
+        self.roles.client_pes(self.pes_per_client_node)
+    }
+
+    /// Run-script phase 3: checkpoint every shard and stop all
+    /// processes. Data stays on Lustre for the next job.
+    pub fn teardown(self) -> Result<()> {
+        self.cluster.checkpoint_all()?;
+        self.cluster.shutdown();
+        Ok(())
+    }
+
+    /// Abandon without checkpoint (walltime kill).
+    pub fn kill(self) {
+        self.cluster.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LustreConfig;
+
+    #[test]
+    fn role_assignment_matches_paper_32() {
+        let topo = Topology::paper_preset(32).unwrap();
+        let hosts: Vec<u32> = (100..132).collect();
+        let roles = RoleMap::assign(&hosts, &topo).unwrap();
+        assert_eq!(roles.config_hosts.len(), 2);
+        assert_eq!(roles.shard_hosts.len(), 7);
+        assert_eq!(roles.router_hosts.len(), 7);
+        assert_eq!(roles.client_hosts.len(), 16);
+        assert_eq!(roles.client_pes(4), 64);
+        // Disjoint and covering.
+        let mut all: Vec<u32> = Vec::new();
+        all.extend(&roles.config_hosts);
+        all.extend(&roles.shard_hosts);
+        all.extend(&roles.router_hosts);
+        all.extend(&roles.client_hosts);
+        all.sort_unstable();
+        assert_eq!(all, hosts);
+    }
+
+    #[test]
+    fn role_assignment_rejects_small_allocation() {
+        let topo = Topology::paper_preset(32).unwrap();
+        let hosts: Vec<u32> = (0..10).collect();
+        assert!(RoleMap::assign(&hosts, &topo).is_err());
+    }
+
+    #[test]
+    fn role_map_json_round_trip() {
+        let topo = Topology::small(2, 2, 3);
+        let hosts: Vec<u32> = (0..10).collect();
+        let roles = RoleMap::assign(&hosts, &topo).unwrap();
+        let back = RoleMap::from_json(&roles.to_json()).unwrap();
+        assert_eq!(back, roles);
+    }
+
+    #[test]
+    fn deploy_ingest_teardown_redeploy() {
+        use crate::mongo::bson::Document;
+        use crate::mongo::query::Filter;
+
+        let lustre = Lustre::mount(LustreConfig::default()).unwrap();
+        let topo = Topology::small(2, 1, 2);
+        let script = RunScript::new(
+            topo,
+            StoreConfig::default(),
+            lustre.clone(),
+            Kernels::fallback(),
+        );
+        let hosts: Vec<u32> = (0..8).collect();
+
+        // Job 1: deploy, ingest through the hostfile-discovered client,
+        // teardown with checkpoint.
+        {
+            let dep = script.deploy(&hosts).unwrap();
+            let client = dep.client_from_hostfile().unwrap();
+            let docs: Vec<Document> = (0..200)
+                .map(|i| Document::new().set("ts", i as i64).set("node_id", (i % 4) as i64))
+                .collect();
+            assert_eq!(client.insert_many(docs).unwrap().inserted, 200);
+            dep.teardown().unwrap();
+        }
+        assert!(lustre.total_written() > 0);
+
+        // Job 2 (possibly a different allocation): redeploy over the same
+        // scratch; data must still be there.
+        {
+            let hosts2: Vec<u32> = (50..58).collect();
+            let dep = script.deploy(&hosts2).unwrap();
+            let client = dep.client_from_hostfile().unwrap();
+            assert_eq!(client.count_documents(Filter::True).unwrap(), 200);
+            dep.teardown().unwrap();
+        }
+    }
+
+    #[test]
+    fn deploy_via_scheduler_job() {
+        use super::super::scheduler::{Job, Scheduler};
+        let lustre = Lustre::mount(LustreConfig::default()).unwrap();
+        let topo = Topology::small(1, 1, 1);
+        let script =
+            RunScript::new(topo, StoreConfig::default(), lustre, Kernels::fallback());
+
+        let mut sched = Scheduler::new(16);
+        let job = sched.submit(Job::new("mongo-deploy", 4, 3600)).unwrap();
+        let hosts = sched.hosts_of(job).expect("job should start").to_vec();
+        let dep = script.deploy(&hosts).unwrap();
+        assert_eq!(dep.client_pes(), 1);
+        dep.teardown().unwrap();
+        sched.complete(job).unwrap();
+    }
+}

@@ -1,0 +1,404 @@
+//! Moab/Torque-like batch scheduler: job queue, node pool, FCFS with
+//! EASY backfill, walltime enforcement.
+//!
+//! "Many HPC architectures process user requests by job queue scheduler"
+//! (paper §1) — the run-script deployment lives inside one of these
+//! jobs. The scheduler is virtual-time driven: tests and the DES drive
+//! it with explicit times; the live examples use it to admit the
+//! deploy-job before running the run-script body in-process.
+
+use std::collections::{BTreeSet, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::util::ids::JobId;
+
+/// A submitted batch job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub name: String,
+    pub nodes: u32,
+    /// Requested walltime (seconds) — the kill limit.
+    pub walltime_s: u64,
+    /// Simulated actual runtime. `None` = interactive (the caller calls
+    /// [`Scheduler::complete`] itself).
+    pub runtime_s: Option<u64>,
+}
+
+impl Job {
+    pub fn new(name: &str, nodes: u32, walltime_s: u64) -> Self {
+        Self { name: name.to_string(), nodes, walltime_s, runtime_s: None }
+    }
+
+    pub fn with_runtime(mut self, runtime_s: u64) -> Self {
+        self.runtime_s = Some(runtime_s);
+        self
+    }
+}
+
+/// Lifecycle state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running { start_s: u64, hosts: Vec<u32> },
+    Completed { start_s: u64, end_s: u64 },
+    /// Hit the walltime limit and was killed.
+    TimedOut { start_s: u64, end_s: u64 },
+}
+
+struct JobRecord {
+    job: Job,
+    state: JobState,
+}
+
+/// The scheduler.
+pub struct Scheduler {
+    total_nodes: u32,
+    free: BTreeSet<u32>,
+    jobs: Vec<JobRecord>,
+    queue: VecDeque<JobId>,
+    now_s: u64,
+    pub backfill_enabled: bool,
+    /// (job, start, end) log for utilization reports.
+    pub history: Vec<(JobId, u64, u64)>,
+}
+
+impl Scheduler {
+    pub fn new(total_nodes: u32) -> Self {
+        Self {
+            total_nodes,
+            free: (0..total_nodes).collect(),
+            jobs: Vec::new(),
+            queue: VecDeque::new(),
+            now_s: 0,
+            backfill_enabled: true,
+            history: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now_s
+    }
+
+    pub fn free_nodes(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    /// `qsub`: enqueue a job.
+    pub fn submit(&mut self, job: Job) -> Result<JobId> {
+        if job.nodes == 0 {
+            bail!("job requests zero nodes");
+        }
+        if job.nodes > self.total_nodes {
+            bail!(
+                "job requests {} nodes but the machine has {}",
+                job.nodes,
+                self.total_nodes
+            );
+        }
+        let id = JobId(self.jobs.len() as u32);
+        self.jobs.push(JobRecord { job, state: JobState::Queued });
+        self.queue.push_back(id);
+        self.try_schedule();
+        Ok(id)
+    }
+
+    /// `qstat`: job state.
+    pub fn state(&self, id: JobId) -> &JobState {
+        &self.jobs[id.index()].state
+    }
+
+    pub fn job(&self, id: JobId) -> &Job {
+        &self.jobs[id.index()].job
+    }
+
+    /// Hosts allocated to a running job.
+    pub fn hosts_of(&self, id: JobId) -> Option<&[u32]> {
+        match &self.jobs[id.index()].state {
+            JobState::Running { hosts, .. } => Some(hosts),
+            _ => None,
+        }
+    }
+
+    fn allocate(&mut self, n: u32) -> Vec<u32> {
+        let hosts: Vec<u32> = self.free.iter().take(n as usize).copied().collect();
+        for h in &hosts {
+            self.free.remove(h);
+        }
+        hosts
+    }
+
+    /// Estimated end time of a running job (walltime-based, as EASY
+    /// backfill uses).
+    fn estimated_end(&self, id: JobId) -> u64 {
+        match &self.jobs[id.index()].state {
+            JobState::Running { start_s, .. } => start_s + self.jobs[id.index()].job.walltime_s,
+            _ => u64::MAX,
+        }
+    }
+
+    /// FCFS + EASY backfill pass; returns jobs started at `now`.
+    pub fn try_schedule(&mut self) -> Vec<JobId> {
+        let mut started = Vec::new();
+        // FCFS: start queue head(s) while they fit.
+        while let Some(&head) = self.queue.front() {
+            let need = self.jobs[head.index()].job.nodes;
+            if need <= self.free_nodes() {
+                let hosts = self.allocate(need);
+                self.jobs[head.index()].state =
+                    JobState::Running { start_s: self.now_s, hosts };
+                self.queue.pop_front();
+                started.push(head);
+            } else {
+                break;
+            }
+        }
+        if !self.backfill_enabled {
+            return started;
+        }
+        // EASY backfill around the (single) blocked head.
+        let Some(&head) = self.queue.front() else { return started };
+        let head_need = self.jobs[head.index()].job.nodes as i64;
+        // Shadow time: when enough running jobs will have ended for the
+        // head to start (by walltime estimates).
+        let mut ends: Vec<(u64, u32)> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| match &r.state {
+                JobState::Running { .. } => {
+                    Some((self.estimated_end(JobId(i as u32)), r.job.nodes))
+                }
+                _ => None,
+            })
+            .collect();
+        ends.sort_unstable();
+        let mut avail = self.free_nodes() as i64;
+        let mut shadow = u64::MAX;
+        let mut extra = 0i64; // nodes free at shadow beyond the head's need
+        for (end, n) in ends {
+            avail += n as i64;
+            if avail >= head_need {
+                shadow = end;
+                extra = avail - head_need;
+                break;
+            }
+        }
+        // Backfill candidates after the head, FCFS order.
+        let candidates: Vec<JobId> = self.queue.iter().skip(1).copied().collect();
+        for cand in candidates {
+            let need = self.jobs[cand.index()].job.nodes;
+            if need > self.free_nodes() {
+                continue;
+            }
+            let fits_time = self.now_s + self.jobs[cand.index()].job.walltime_s <= shadow;
+            let fits_extra = (need as i64) <= extra;
+            if fits_time || fits_extra {
+                let hosts = self.allocate(need);
+                self.jobs[cand.index()].state =
+                    JobState::Running { start_s: self.now_s, hosts };
+                self.queue.retain(|j| *j != cand);
+                if !fits_time {
+                    extra -= need as i64;
+                }
+                started.push(cand);
+            }
+        }
+        started
+    }
+
+    /// Complete a running job (interactive jobs; sim jobs complete via
+    /// [`Self::advance_to`]).
+    pub fn complete(&mut self, id: JobId) -> Result<()> {
+        let rec = &mut self.jobs[id.index()];
+        let JobState::Running { start_s, hosts } = rec.state.clone() else {
+            bail!("job {id} is not running");
+        };
+        rec.state = JobState::Completed { start_s, end_s: self.now_s };
+        for h in hosts {
+            self.free.insert(h);
+        }
+        self.history.push((id, start_s, self.now_s));
+        self.try_schedule();
+        Ok(())
+    }
+
+    /// Next event time (sim-job completion or walltime kill).
+    pub fn next_event(&self) -> Option<u64> {
+        self.jobs
+            .iter()
+            .filter_map(|r| match &r.state {
+                JobState::Running { start_s, .. } => {
+                    let runtime = r.job.runtime_s.unwrap_or(u64::MAX);
+                    Some((start_s + runtime.min(r.job.walltime_s)).max(self.now_s))
+                }
+                _ => None,
+            })
+            .min()
+    }
+
+    /// Advance virtual time, completing/killing sim jobs on the way.
+    pub fn advance_to(&mut self, t: u64) {
+        loop {
+            let Some(evt) = self.next_event() else { break };
+            if evt > t {
+                break;
+            }
+            self.now_s = evt;
+            // Complete or kill everything due at `evt`.
+            for i in 0..self.jobs.len() {
+                let id = JobId(i as u32);
+                let (due, timed_out) = match &self.jobs[i].state {
+                    JobState::Running { start_s, .. } => {
+                        let runtime = self.jobs[i].job.runtime_s.unwrap_or(u64::MAX);
+                        let wall = self.jobs[i].job.walltime_s;
+                        let end = start_s + runtime.min(wall);
+                        (end <= evt, runtime > wall)
+                    }
+                    _ => (false, false),
+                };
+                if due {
+                    let JobState::Running { start_s, hosts } = self.jobs[i].state.clone() else {
+                        continue;
+                    };
+                    self.jobs[i].state = if timed_out {
+                        JobState::TimedOut { start_s, end_s: evt }
+                    } else {
+                        JobState::Completed { start_s, end_s: evt }
+                    };
+                    for h in hosts {
+                        self.free.insert(h);
+                    }
+                    self.history.push((id, start_s, evt));
+                }
+            }
+            self.try_schedule();
+        }
+        self.now_s = self.now_s.max(t);
+    }
+
+    /// Run until no sim jobs remain queued or running.
+    pub fn drain(&mut self) {
+        while let Some(evt) = self.next_event() {
+            self.advance_to(evt);
+        }
+    }
+
+    /// Node-seconds utilization over `[0, horizon]`.
+    pub fn utilization(&self, horizon_s: u64) -> f64 {
+        let used: u64 = self
+            .history
+            .iter()
+            .map(|(id, s, e)| (e.min(&horizon_s) - s) * self.jobs[id.index()].job.nodes as u64)
+            .sum();
+        used as f64 / (self.total_nodes as u64 * horizon_s.max(1)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcfs_starts_in_order() {
+        let mut s = Scheduler::new(10);
+        let a = s.submit(Job::new("a", 4, 100).with_runtime(50)).unwrap();
+        let b = s.submit(Job::new("b", 4, 100).with_runtime(50)).unwrap();
+        let c = s.submit(Job::new("c", 4, 100).with_runtime(50)).unwrap();
+        assert!(matches!(s.state(a), JobState::Running { .. }));
+        assert!(matches!(s.state(b), JobState::Running { .. }));
+        assert!(matches!(s.state(c), JobState::Queued)); // only 2 nodes left
+        s.drain();
+        assert!(matches!(s.state(c), JobState::Completed { start_s: 50, .. }));
+    }
+
+    #[test]
+    fn backfill_lets_small_short_job_jump() {
+        let mut s = Scheduler::new(10);
+        let _big1 = s.submit(Job::new("big1", 8, 100).with_runtime(100)).unwrap();
+        let blocked = s.submit(Job::new("blocked", 10, 100).with_runtime(10)).unwrap();
+        // Small job fits the 2 free nodes and ends before big1's walltime.
+        let small = s.submit(Job::new("small", 2, 50).with_runtime(50)).unwrap();
+        assert!(matches!(s.state(blocked), JobState::Queued));
+        assert!(
+            matches!(s.state(small), JobState::Running { .. }),
+            "small job should backfill"
+        );
+        s.drain();
+        // Head eventually runs.
+        assert!(matches!(s.state(blocked), JobState::Completed { .. }));
+    }
+
+    #[test]
+    fn backfill_never_delays_head_reservation() {
+        let mut s = Scheduler::new(10);
+        let _big = s.submit(Job::new("big", 8, 100).with_runtime(100)).unwrap();
+        let head = s.submit(Job::new("head", 10, 100).with_runtime(10)).unwrap();
+        // This job fits the 2 free nodes but runs past the shadow time
+        // (100) and would steal nodes the head needs → must NOT backfill.
+        let long = s.submit(Job::new("long", 2, 500).with_runtime(500)).unwrap();
+        assert!(matches!(s.state(long), JobState::Queued));
+        s.drain();
+        let JobState::Completed { start_s, .. } = s.state(head) else {
+            panic!("head not completed")
+        };
+        assert_eq!(*start_s, 100, "head must start exactly at the shadow time");
+    }
+
+    #[test]
+    fn backfill_disabled_is_strict_fcfs() {
+        let mut s = Scheduler::new(10);
+        s.backfill_enabled = false;
+        let _big = s.submit(Job::new("big", 8, 100).with_runtime(100)).unwrap();
+        let _head = s.submit(Job::new("head", 10, 100).with_runtime(10)).unwrap();
+        let small = s.submit(Job::new("small", 1, 5).with_runtime(5)).unwrap();
+        assert!(matches!(s.state(small), JobState::Queued));
+    }
+
+    #[test]
+    fn walltime_kill() {
+        let mut s = Scheduler::new(4);
+        let j = s.submit(Job::new("runaway", 4, 10).with_runtime(1000)).unwrap();
+        s.drain();
+        assert!(matches!(s.state(j), JobState::TimedOut { end_s: 10, .. }));
+        assert_eq!(s.free_nodes(), 4);
+    }
+
+    #[test]
+    fn interactive_job_completion() {
+        let mut s = Scheduler::new(4);
+        let j = s.submit(Job::new("deploy", 4, 3600)).unwrap();
+        let hosts = s.hosts_of(j).unwrap().to_vec();
+        assert_eq!(hosts.len(), 4);
+        s.complete(j).unwrap();
+        assert!(matches!(s.state(j), JobState::Completed { .. }));
+        assert!(s.complete(j).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_and_empty_jobs() {
+        let mut s = Scheduler::new(4);
+        assert!(s.submit(Job::new("too-big", 5, 10)).is_err());
+        assert!(s.submit(Job::new("empty", 0, 10)).is_err());
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut s = Scheduler::new(10);
+        s.submit(Job::new("a", 10, 100).with_runtime(100)).unwrap();
+        s.drain();
+        let u = s.utilization(100);
+        assert!((u - 1.0).abs() < 1e-9, "u={u}");
+    }
+
+    #[test]
+    fn queue_wait_then_start() {
+        let mut s = Scheduler::new(4);
+        let a = s.submit(Job::new("a", 4, 50).with_runtime(30)).unwrap();
+        let b = s.submit(Job::new("b", 4, 50).with_runtime(30)).unwrap();
+        assert!(matches!(s.state(b), JobState::Queued));
+        s.advance_to(30);
+        assert!(matches!(s.state(a), JobState::Completed { .. }));
+        assert!(matches!(s.state(b), JobState::Running { start_s: 30, .. }));
+    }
+}

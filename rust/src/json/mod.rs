@@ -1,0 +1,31 @@
+//! Minimal JSON: value model, recursive-descent parser, writer.
+//!
+//! The vendored crate set has no `serde`/`serde_json`; configs, artifact
+//! manifests, cost models, and report files all go through this module.
+//! It supports the full JSON grammar (RFC 8259) with the usual practical
+//! limits: numbers are `f64` or `i64`, object keys are strings, no
+//! comments.
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+pub use write::{to_string, to_string_pretty};
+
+/// Parse a JSON file.
+pub fn from_file(path: &std::path::Path) -> anyhow::Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+/// Write a value to a file, pretty-printed.
+pub fn to_file(path: &std::path::Path, value: &Value) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, to_string_pretty(value))?;
+    Ok(())
+}

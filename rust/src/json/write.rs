@@ -1,0 +1,156 @@
+//! JSON writer: compact and pretty forms; deterministic key order
+//! (objects are `BTreeMap`s).
+
+use super::Value;
+
+/// Compact encoding.
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, None, 0, &mut out);
+    out
+}
+
+/// Pretty encoding with 2-space indent and trailing newline.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, Some(2), 0, &mut out);
+    out.push('\n');
+    out
+}
+
+fn write_value(v: &Value, indent: Option<usize>, depth: usize, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Int(i) => out.push_str(&i.to_string()),
+        Value::Num(f) => write_f64(*f, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Array(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(indent, depth + 1, out);
+                write_value(item, indent, depth + 1, out);
+            }
+            newline_indent(indent, depth, out);
+            out.push(']');
+        }
+        Value::Object(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(indent, depth + 1, out);
+                write_string(k, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(val, indent, depth + 1, out);
+            }
+            newline_indent(indent, depth, out);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(indent: Option<usize>, depth: usize, out: &mut String) {
+    if let Some(w) = indent {
+        out.push('\n');
+        out.push_str(&" ".repeat(w * depth));
+    }
+}
+
+fn write_f64(f: f64, out: &mut String) {
+    if f.is_finite() {
+        // Shortest round-trip representation Rust offers.
+        let s = format!("{f}");
+        out.push_str(&s);
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            out.push_str(".0");
+        }
+    } else {
+        // JSON has no inf/nan; encode as null (documented limitation).
+        out.push_str("null");
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn round_trip_compact() {
+        let src = r#"{"a":[1,2.5,"x"],"b":{"c":null,"d":true}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(to_string(&v), src);
+    }
+
+    #[test]
+    fn round_trip_pretty() {
+        let v = parse(r#"{"a": [1, {"b": "x"}], "z": -3}"#).unwrap();
+        let pretty = to_string_pretty(&v);
+        assert_eq!(parse(&pretty).unwrap(), v);
+        assert!(pretty.contains("\n  \"a\""));
+    }
+
+    #[test]
+    fn float_round_trips_exactly() {
+        for f in [0.1, 1.5, 1e-9, 123456.789, -2.25, 1e300] {
+            let v = Value::Num(f);
+            let back = parse(&to_string(&v)).unwrap();
+            assert_eq!(back.as_f64(), Some(f), "{f}");
+        }
+    }
+
+    #[test]
+    fn whole_float_keeps_distinction() {
+        // Value::Num(2.0) prints "2.0" so it parses back as a float.
+        assert_eq!(to_string(&Value::Num(2.0)), "2.0");
+        assert_eq!(to_string(&Value::Int(2)), "2");
+    }
+
+    #[test]
+    fn escapes() {
+        let v = Value::Str("a\"b\\c\nd\u{0001}".into());
+        assert_eq!(to_string(&v), "\"a\\\"b\\\\c\\nd\\u0001\"");
+        assert_eq!(parse(&to_string(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn nonfinite_becomes_null() {
+        assert_eq!(to_string(&Value::Num(f64::NAN)), "null");
+        assert_eq!(to_string(&Value::Num(f64::INFINITY)), "null");
+    }
+}

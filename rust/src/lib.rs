@@ -1,0 +1,42 @@
+//! `hpcstore` — a sharded document store deployed as a *queued job* on a
+//! shared HPC architecture.
+//!
+//! This crate reproduces, as a complete system, the paper
+//! *"Deploying a sharded MongoDB cluster as a queued job on a shared HPC
+//! architecture"* (Saxton & Squaire, CS.DC 2022). It implements every
+//! substrate the paper depends on:
+//!
+//! * [`mongo`] — a MongoDB-like sharded document store (config servers,
+//!   shard servers running a WiredTiger-like storage engine, and `mongos`
+//!   routers) built from scratch.
+//! * [`hpc`] — the shared-HPC substrate: a Torque/Moab-like batch
+//!   scheduler, a Lustre-like striped parallel filesystem, a Gemini-like
+//!   interconnect cost model, and the paper's run-script deployment
+//!   orchestration.
+//! * [`runtime`] — the PJRT execution engine that loads AOT-compiled
+//!   JAX/Pallas artifacts (shard-key routing and predicate-filter kernels)
+//!   and runs them on the router/shard hot paths.
+//! * [`workload`] — the OVIS-style node-metric corpus generator, CSV
+//!   corpus store, and the paper's ingest (`insertMany`) and conditional
+//!   `find` drivers.
+//! * [`sim`] — a discrete-event simulator calibrated from live
+//!   microbenchmarks, used to regenerate the paper's cluster-scale
+//!   figures (32–256 nodes) on a single machine.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); the request path
+//! is pure Rust + PJRT.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod hpc;
+pub mod metrics;
+pub mod mongo;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+pub use runtime::engine::Engine;

@@ -1,0 +1,234 @@
+//! `hpcstore` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `deploy`    — live cluster on this machine: scheduler job → run
+//!                 script → ingest → conditional finds → teardown.
+//! * `sim`       — paper-scale DES sweep (Figures 2 and 3).
+//! * `calibrate` — measure the live cost model for the DES.
+//! * `table1`    — print the paper's Table 1 presets and workload sizes.
+
+use anyhow::Result;
+
+use hpcstore::cli::{Args, Cli, CommandSpec, FlagSpec};
+use hpcstore::config::{LustreConfig, StoreConfig, Topology, WorkloadConfig, TABLE1};
+use hpcstore::hpc::lustre::Lustre;
+use hpcstore::hpc::runscript::RunScript;
+use hpcstore::hpc::scheduler::{Job, Scheduler};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::runtime::Kernels;
+use hpcstore::sim::{ClusterSim, CostModel, SimSpec};
+use hpcstore::util::fmt::{human_count, markdown_table};
+use hpcstore::workload::jobs::generate_jobs;
+use hpcstore::workload::ovis::OvisGenerator;
+use hpcstore::workload::{IngestDriver, QueryDriver};
+
+fn cli() -> Cli {
+    let f = |name, hint, help| FlagSpec { name, value_hint: hint, help };
+    Cli {
+        binary: "hpcstore",
+        about: "sharded document store as a queued job on a shared HPC architecture",
+        commands: vec![
+            CommandSpec {
+                name: "deploy",
+                about: "run a live cluster end-to-end on this machine",
+                flags: vec![
+                    f("shards", Some("N"), "shard servers (default 3)"),
+                    f("routers", Some("N"), "router servers (default 2)"),
+                    f("pes", Some("N"), "client processing elements (default 4)"),
+                    f("monitored", Some("N"), "monitored nodes in the corpus (default 128)"),
+                    f("minutes", Some("N"), "minutes of data (default 30)"),
+                    f("batch", Some("N"), "insertMany batch size (default 1000)"),
+                    f("artifacts", Some("DIR"), "AOT artifact dir (default artifacts)"),
+                    f("fallback", None, "use the scalar kernel fallback"),
+                ],
+            },
+            CommandSpec {
+                name: "sim",
+                about: "paper-scale DES sweep (Fig 2 + Fig 3)",
+                flags: vec![
+                    f("nodes", Some("N|all"), "cluster size 32|64|128|256|all (default all)"),
+                    f("monitored", Some("N"), "monitored nodes, sim-scaled (default 2048)"),
+                    f("chunk-docs", Some("N"), "split threshold (default 45000)"),
+                    f("osts", Some("N"), "OST count (default 64)"),
+                    f("costmodel", Some("PATH"), "costmodel.json (default artifacts/)"),
+                ],
+            },
+            CommandSpec {
+                name: "calibrate",
+                about: "measure the live cost model for the DES",
+                flags: vec![
+                    f("out", Some("PATH"), "output path (default artifacts/costmodel.json)"),
+                    f("quick", None, "fewer samples"),
+                    f("artifacts", Some("DIR"), "AOT artifact dir (default artifacts)"),
+                    f("fallback", None, "calibrate against the scalar fallback"),
+                ],
+            },
+            CommandSpec {
+                name: "table1",
+                about: "print the paper's Table 1 with realized corpus sizes",
+                flags: vec![f("monitored", Some("N"), "monitored nodes (default 2048)")],
+            },
+        ],
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(args) = cli().parse(&argv)? else { return Ok(()) };
+    match args.command.as_str() {
+        "deploy" => cmd_deploy(&args),
+        "sim" => cmd_sim(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "table1" => cmd_table1(&args),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn load_kernels(args: &Args) -> Kernels {
+    if args.has_switch("fallback") {
+        Kernels::fallback()
+    } else {
+        Kernels::load_or_fallback(args.get_or("artifacts", "artifacts"))
+    }
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let shards = args.get_u64("shards")?.unwrap_or(3) as u32;
+    let routers = args.get_u64("routers")?.unwrap_or(2) as u32;
+    let pes = args.get_u64("pes")?.unwrap_or(4) as u32;
+    let monitored = args.get_u64("monitored")?.unwrap_or(128) as u32;
+    let minutes = args.get_u64("minutes")?.unwrap_or(30);
+    let batch = args.get_u64("batch")?.unwrap_or(1000) as usize;
+
+    let kernels = load_kernels(args);
+    println!("kernel backend: {:?}", kernels.backend());
+
+    let lustre = Lustre::mount(LustreConfig::default())?;
+    let topo = Topology::small(shards, routers, pes);
+    let script = RunScript::new(topo.clone(), StoreConfig::default(), lustre.clone(), kernels);
+
+    // Admit through the batch scheduler like any HPC job.
+    let mut sched = Scheduler::new(topo.total_nodes);
+    let job = sched.submit(Job::new("mongo-runscript", topo.total_nodes, 3600))?;
+    let hosts = sched.hosts_of(job).expect("job admitted").to_vec();
+    println!("job {job:?} running on {} hosts", hosts.len());
+
+    let dep = script.deploy(&hosts)?;
+    let client = dep.client_from_hostfile()?;
+    client.create_index(IndexSpec::single("ts")).map_err(anyhow::Error::msg)?;
+    client.create_index(IndexSpec::single("node_id")).map_err(anyhow::Error::msg)?;
+
+    let wl = WorkloadConfig {
+        monitored_nodes: monitored,
+        days: minutes as f64 / 1440.0,
+        query_jobs: 16,
+        ..Default::default()
+    };
+    let gen = OvisGenerator::new(wl.clone());
+    println!(
+        "ingesting {} docs ({} monitored nodes x {minutes} min, {} metrics/doc)...",
+        human_count(gen.total_docs()),
+        monitored,
+        wl.metrics_per_doc
+    );
+    let ingest = IngestDriver::new(gen, batch, pes as usize).run(&client)?;
+    println!("ingest: {}", ingest.summary());
+
+    let queries = QueryDriver::new(generate_jobs(&wl), pes as usize).run(&client)?;
+    println!("queries: {}", queries.summary());
+    anyhow::ensure!(queries.count_mismatches == 0, "query counts mismatched");
+
+    println!("lustre: {} written across {} OSTs", human_count(lustre.total_written()), lustre.config().osts);
+    dep.teardown()?;
+    sched.complete(job)?;
+    println!("done; data persisted at {}", lustre.backing_path().display());
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cost_path = args.get_or("costmodel", "artifacts/costmodel.json");
+    let cost = if std::path::Path::new(&cost_path).exists() {
+        println!("cost model: {cost_path}");
+        CostModel::load(std::path::Path::new(&cost_path))?
+    } else {
+        println!("cost model: built-in defaults (run `hpcstore calibrate`)");
+        CostModel::default()
+    };
+    let cost = cost.with_network_floor();
+    let sizes: Vec<u32> = match args.get_or("nodes", "all").as_str() {
+        "all" => vec![32, 64, 128, 256],
+        n => vec![n.parse()?],
+    };
+    let mut fig2: Vec<Vec<String>> = Vec::new();
+    let mut fig3: Vec<Vec<String>> = Vec::new();
+    let mut base_dps = None;
+    for nodes in sizes {
+        let mut spec = SimSpec::paper_preset(nodes, cost.clone())?;
+        if let Some(m) = args.get_u64("monitored")? {
+            spec.monitored_nodes = m as u32;
+        }
+        if let Some(c) = args.get_u64("chunk-docs")? {
+            spec.max_chunk_docs = c;
+        }
+        if let Some(o) = args.get_u64("osts")? {
+            spec.osts = o as u32;
+        }
+        let r = ClusterSim::new(spec).run();
+        let base = *base_dps.get_or_insert(r.docs_per_sec);
+        let mut row = r.ingest_row();
+        row.push(format!("{:.2}x", r.docs_per_sec / base));
+        fig2.push(row);
+        fig3.push(r.query_row());
+    }
+    println!("\n## Figure 2 — ingest scaling (DES, calibrated)\n");
+    print!(
+        "{}",
+        markdown_table(
+            &["nodes", "shards", "client PEs", "docs", "virt s", "docs/s", "shard util", "config util", "splits", "speedup"],
+            &fig2
+        )
+    );
+    println!("\n## Figure 3 — concurrent conditional-find latency (DES)\n");
+    print!(
+        "{}",
+        markdown_table(
+            &["nodes", "concurrency", "finds", "finds/s", "p50", "p95", "p99"],
+            &fig3
+        )
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let kernels = load_kernels(args);
+    println!("calibrating against kernel backend {:?}...", kernels.backend());
+    let cm = CostModel::calibrate(&kernels, args.has_switch("quick"))?;
+    let out = args.get_or("out", "artifacts/costmodel.json");
+    cm.save(std::path::Path::new(&out))?;
+    println!("{}", hpcstore::json::to_string_pretty(&cm.to_json()));
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let monitored = args.get_u64("monitored")?.unwrap_or(2048) as u32;
+    let mut rows = Vec::new();
+    for (nodes, days) in TABLE1 {
+        let topo = Topology::paper_preset(nodes)?;
+        let wl = WorkloadConfig { monitored_nodes: monitored, days, ..Default::default() };
+        rows.push(vec![
+            nodes.to_string(),
+            format!("{days}"),
+            topo.shards.to_string(),
+            topo.routers.to_string(),
+            topo.client_pes().to_string(),
+            human_count(wl.total_docs()),
+        ]);
+    }
+    println!("\n## Table 1 — days of data per cluster size (corpus scaled to {monitored} monitored nodes)\n");
+    print!(
+        "{}",
+        markdown_table(&["nodes", "days", "shards", "routers", "client PEs", "docs"], &rows)
+    );
+    Ok(())
+}

@@ -1,0 +1,262 @@
+//! Log-linear histogram (HdrHistogram-style) for latency recording.
+//!
+//! Values are bucketed into powers of two subdivided linearly 16 ways,
+//! giving ≤ ~6.25% relative error over the full u64 range with a small
+//! fixed footprint — good enough for p50/p95/p99 reporting.
+
+const SUB_BUCKETS: usize = 16;
+const SUB_BITS: u32 = 4; // log2(SUB_BUCKETS)
+// Slots 0..16 hold values < 16 exactly; each exponent range 4..=63 then
+// contributes 16 log-linear slots.
+const NUM_SLOTS: usize = SUB_BUCKETS + (64 - SUB_BITS as usize) * SUB_BUCKETS;
+
+/// Fixed-size log-linear histogram over `u64` values.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Summary only — dumping ~1k slots is useless noise.
+        write!(
+            f,
+            "Histogram {{ n: {}, mean: {:.1}, p50: {}, p99: {}, max: {} }}",
+            self.total,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.max
+        )
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; NUM_SLOTS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn slot_for(value: u64) -> usize {
+        // Values below SUB_BUCKETS map 1:1 into the first slot block.
+        if value < SUB_BUCKETS as u64 {
+            return value as usize;
+        }
+        let exp = 63 - value.leading_zeros(); // >= SUB_BITS
+        let shift = exp - SUB_BITS; // value >> shift ∈ [16, 32)
+        let sub = ((value >> shift) & (SUB_BUCKETS as u64 - 1)) as usize;
+        SUB_BUCKETS + (shift as usize) * SUB_BUCKETS + sub
+    }
+
+    /// Low edge of a slot (the reported quantile value).
+    fn slot_value(slot: usize) -> u64 {
+        if slot < SUB_BUCKETS {
+            return slot as u64;
+        }
+        let shift = (slot / SUB_BUCKETS - 1) as u32;
+        let sub = (slot % SUB_BUCKETS) as u64;
+        (SUB_BUCKETS as u64 + sub) << shift
+    }
+
+    pub fn record(&mut self, value: u64) {
+        let slot = Self::slot_for(value);
+        self.counts[slot] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn record_n(&mut self, value: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let slot = Self::slot_for(value);
+        self.counts[slot] += n;
+        self.total += n;
+        self.sum += value as u128 * n as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Approximate quantile (`q` in [0,1]); exact min/max at the ends.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        if q <= 0.0 {
+            return self.min();
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (slot, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::slot_value(slot).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// One-line summary used in reports (values interpreted as ns).
+    pub fn summary_ns(&self) -> String {
+        use crate::util::fmt::human_duration_ns as d;
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.total,
+            d(self.mean() as u64),
+            d(self.p50()),
+            d(self.p95()),
+            d(self.p99()),
+            d(self.max())
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = Histogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 15);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), 15);
+    }
+
+    #[test]
+    fn quantiles_within_relative_error() {
+        let mut h = Histogram::new();
+        // Uniform 1..=100_000.
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for (q, want) in [(0.5, 50_000.0), (0.95, 95_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.10, "q={q} got={got} want={want} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        assert!((h.mean() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(100);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 100);
+        assert_eq!(a.max(), 1_000_000);
+    }
+
+    #[test]
+    fn record_n_weighting() {
+        let mut h = Histogram::new();
+        h.record_n(50, 99);
+        h.record_n(5_000, 1);
+        assert_eq!(h.count(), 100);
+        // p50 must sit at the heavy value.
+        let p50 = h.p50();
+        assert!(p50 <= 64, "p50={p50}");
+    }
+
+    #[test]
+    fn huge_values_do_not_panic() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX / 2);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.5) > 0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

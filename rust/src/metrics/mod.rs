@@ -1,0 +1,12 @@
+//! Lightweight metrics: counters, gauges, log-linear histograms, and
+//! named registries, with markdown/CSV report emitters.
+//!
+//! Every server role (router, shard, config, scheduler, lustre OST) owns
+//! a [`Registry`]; the coordinator merges them into run reports that the
+//! bench harnesses print in the paper's row format.
+
+mod histogram;
+mod registry;
+
+pub use histogram::Histogram;
+pub use registry::{Counter, Gauge, Registry};

@@ -1,0 +1,223 @@
+//! Named metric registry shared across threads.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::Histogram;
+use crate::json::Value;
+
+/// Monotonic counter.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous gauge.
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A registry of named counters/gauges/histograms.
+///
+/// Cloning a registry shares the underlying metrics (it's an `Arc` of
+/// maps); component constructors take a registry and register what they
+/// need up front.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    histograms: Mutex<BTreeMap<String, Arc<Mutex<Histogram>>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.inner
+            .gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Record one value into a named histogram.
+    pub fn observe(&self, name: &str, value: u64) {
+        let h = self
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Mutex::new(Histogram::new())))
+            .clone();
+        h.lock().unwrap().record(value);
+    }
+
+    /// Snapshot a histogram by name (empty if never observed).
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|h| h.lock().unwrap().clone())
+            .unwrap_or_default()
+    }
+
+    /// All counter values (snapshot).
+    pub fn counter_values(&self) -> BTreeMap<String, u64> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect()
+    }
+
+    /// Serialize a full snapshot (counters, gauges, histogram summaries).
+    pub fn snapshot_json(&self) -> Value {
+        let mut counters = Value::object();
+        for (k, v) in self.counter_values() {
+            counters.set(&k, v);
+        }
+        let mut gauges = Value::object();
+        for (k, v) in self.inner.gauges.lock().unwrap().iter() {
+            gauges.set(k, v.get());
+        }
+        let mut hists = Value::object();
+        for (k, h) in self.inner.histograms.lock().unwrap().iter() {
+            let h = h.lock().unwrap();
+            let mut o = Value::object();
+            o.set("count", h.count())
+                .set("mean", h.mean())
+                .set("p50", h.p50())
+                .set("p95", h.p95())
+                .set("p99", h.p99())
+                .set("max", h.max());
+            hists.set(k, o);
+        }
+        let mut root = Value::object();
+        root.set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists);
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_shared_by_name() {
+        let r = Registry::new();
+        let a = r.counter("ops");
+        let b = r.counter("ops");
+        a.add(2);
+        b.inc();
+        assert_eq!(r.counter("ops").get(), 3);
+    }
+
+    #[test]
+    fn gauges_set_and_add() {
+        let r = Registry::new();
+        r.gauge("depth").set(5);
+        r.gauge("depth").add(-2);
+        assert_eq!(r.gauge("depth").get(), 3);
+    }
+
+    #[test]
+    fn histograms_observe_and_snapshot() {
+        let r = Registry::new();
+        for v in [10u64, 20, 30] {
+            r.observe("lat", v);
+        }
+        let h = r.histogram("lat");
+        assert_eq!(h.count(), 3);
+        assert!(r.histogram("nonexistent").count() == 0);
+    }
+
+    #[test]
+    fn cloned_registry_shares_metrics() {
+        let r = Registry::new();
+        let r2 = r.clone();
+        r.counter("x").inc();
+        assert_eq!(r2.counter("x").get(), 1);
+    }
+
+    #[test]
+    fn snapshot_is_json_object() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.gauge("g").set(7);
+        r.observe("h", 42);
+        let v = r.snapshot_json();
+        assert_eq!(v.at(&["counters", "a"]).unwrap().as_u64(), Some(1));
+        assert_eq!(v.at(&["gauges", "g"]).unwrap().as_i64(), Some(7));
+        assert_eq!(v.at(&["histograms", "h", "count"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn threaded_counting() {
+        let r = Registry::new();
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let c = r.counter("n");
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("n").get(), 4000);
+    }
+}

@@ -1,0 +1,451 @@
+//! BSON-lite: the document model and its binary encoding.
+//!
+//! Documents are ordered field lists (like BSON); values cover what the
+//! OVIS workload and the query engine need: null, bool, i64, f64,
+//! string, array, nested document. The binary form is a compact
+//! tag-prefixed encoding with explicit lengths, cheap to skip-scan.
+//!
+//! Wire format (little-endian):
+//! ```text
+//! doc    := u16 field_count, field*
+//! field  := u8 name_len, name bytes, value
+//! value  := tag u8, payload
+//!   0 null | 1 bool(u8) | 2 i64 | 3 f64 | 4 str(u32 len, bytes)
+//!   5 array(u16 count, value*) | 6 doc
+//! ```
+
+use anyhow::{bail, Result};
+
+/// A field value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    F64(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Doc(Document),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Total ordering for index keys and comparisons: type class first
+    /// (null < numbers < strings < arrays < docs), numeric classes
+    /// compare by value across Int/F64.
+    pub fn type_rank(&self) -> u8 {
+        match self {
+            Value::Null => 0,
+            Value::Bool(_) => 1,
+            Value::Int(_) | Value::F64(_) => 2,
+            Value::Str(_) => 3,
+            Value::Array(_) => 4,
+            Value::Doc(_) => 5,
+        }
+    }
+
+    /// Compare two values under the total order. `None` only for NaN.
+    pub fn cmp_total(&self, other: &Value) -> std::cmp::Ordering {
+        use std::cmp::Ordering::*;
+        let (ra, rb) = (self.type_rank(), other.type_rank());
+        if ra != rb {
+            return ra.cmp(&rb);
+        }
+        match (self, other) {
+            (Value::Null, Value::Null) => Equal,
+            (Value::Bool(a), Value::Bool(b)) => a.cmp(b),
+            (a, b) if ra == 2 => {
+                let (x, y) = (a.as_f64().unwrap(), b.as_f64().unwrap());
+                x.partial_cmp(&y).unwrap_or(Equal)
+            }
+            (Value::Str(a), Value::Str(b)) => a.cmp(b),
+            (Value::Array(a), Value::Array(b)) => {
+                for (x, y) in a.iter().zip(b) {
+                    let o = x.cmp_total(y);
+                    if o != Equal {
+                        return o;
+                    }
+                }
+                a.len().cmp(&b.len())
+            }
+            (Value::Doc(a), Value::Doc(b)) => {
+                for ((ka, va), (kb, vb)) in a.fields.iter().zip(&b.fields) {
+                    let o = ka.cmp(kb).then_with(|| va.cmp_total(vb));
+                    if o != Equal {
+                        return o;
+                    }
+                }
+                a.fields.len().cmp(&b.fields.len())
+            }
+            _ => Equal,
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+
+impl From<u32> for Value {
+    fn from(v: u32) -> Self {
+        Value::Int(v as i64)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::F64(v)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+/// An ordered document.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Document {
+    pub fields: Vec<(String, Value)>,
+}
+
+impl Document {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style append (replaces an existing field of that name).
+    pub fn set(mut self, name: &str, value: impl Into<Value>) -> Self {
+        self.put(name, value);
+        self
+    }
+
+    pub fn put(&mut self, name: &str, value: impl Into<Value>) {
+        let value = value.into();
+        for (k, v) in self.fields.iter_mut() {
+            if k == name {
+                *v = value;
+                return;
+            }
+        }
+        self.fields.push((name.to_string(), value));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.fields.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+    }
+
+    pub fn get_i64(&self, name: &str) -> Option<i64> {
+        self.get(name).and_then(Value::as_i64)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(Value::as_f64)
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    /// Project onto the named fields (keeping document order).
+    pub fn project(&self, names: &[String]) -> Document {
+        Document {
+            fields: self
+                .fields
+                .iter()
+                .filter(|(k, _)| names.iter().any(|n| n == k))
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Encode to the binary wire form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        assert!(self.fields.len() <= u16::MAX as usize, "too many fields");
+        out.extend_from_slice(&(self.fields.len() as u16).to_le_bytes());
+        for (name, value) in &self.fields {
+            assert!(name.len() <= u8::MAX as usize, "field name too long");
+            out.push(name.len() as u8);
+            out.extend_from_slice(name.as_bytes());
+            encode_value(value, out);
+        }
+    }
+
+    /// Exact size of [`Self::encode`] output (used for wire accounting
+    /// without encoding).
+    pub fn encoded_len(&self) -> usize {
+        2 + self
+            .fields
+            .iter()
+            .map(|(n, v)| 1 + n.len() + value_len(v))
+            .sum::<usize>()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Document> {
+        let mut cur = Cursor { bytes, pos: 0 };
+        let doc = decode_doc(&mut cur)?;
+        if cur.pos != bytes.len() {
+            bail!("trailing bytes after document");
+        }
+        Ok(doc)
+    }
+}
+
+fn value_len(v: &Value) -> usize {
+    1 + match v {
+        Value::Null => 0,
+        Value::Bool(_) => 1,
+        Value::Int(_) => 8,
+        Value::F64(_) => 8,
+        Value::Str(s) => 4 + s.len(),
+        Value::Array(items) => 2 + items.iter().map(value_len).sum::<usize>(),
+        Value::Doc(d) => d.encoded_len(),
+    }
+}
+
+fn encode_value(v: &Value, out: &mut Vec<u8>) {
+    match v {
+        Value::Null => out.push(0),
+        Value::Bool(b) => {
+            out.push(1);
+            out.push(*b as u8);
+        }
+        Value::Int(i) => {
+            out.push(2);
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        Value::F64(f) => {
+            out.push(3);
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+        Value::Str(s) => {
+            out.push(4);
+            out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            out.extend_from_slice(s.as_bytes());
+        }
+        Value::Array(items) => {
+            out.push(5);
+            assert!(items.len() <= u16::MAX as usize);
+            out.extend_from_slice(&(items.len() as u16).to_le_bytes());
+            for item in items {
+                encode_value(item, out);
+            }
+        }
+        Value::Doc(d) => {
+            out.push(6);
+            d.encode_into(out);
+        }
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated document (need {n} bytes at {})", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+fn decode_doc(cur: &mut Cursor) -> Result<Document> {
+    let count = cur.u16()? as usize;
+    let mut fields = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = cur.u8()? as usize;
+        let name = std::str::from_utf8(cur.take(name_len)?)?.to_string();
+        let value = decode_value(cur)?;
+        fields.push((name, value));
+    }
+    Ok(Document { fields })
+}
+
+fn decode_value(cur: &mut Cursor) -> Result<Value> {
+    Ok(match cur.u8()? {
+        0 => Value::Null,
+        1 => Value::Bool(cur.u8()? != 0),
+        2 => Value::Int(i64::from_le_bytes(cur.take(8)?.try_into().unwrap())),
+        3 => Value::F64(f64::from_le_bytes(cur.take(8)?.try_into().unwrap())),
+        4 => {
+            let len = cur.u32()? as usize;
+            Value::Str(std::str::from_utf8(cur.take(len)?)?.to_string())
+        }
+        5 => {
+            let count = cur.u16()? as usize;
+            let mut items = Vec::with_capacity(count);
+            for _ in 0..count {
+                items.push(decode_value(cur)?);
+            }
+            Value::Array(items)
+        }
+        6 => Value::Doc(decode_doc(cur)?),
+        t => bail!("unknown value tag {t}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Document {
+        Document::new()
+            .set("ts", 25_246_080i64)
+            .set("node_id", 1234i64)
+            .set("cpu_user", 0.37)
+            .set("hostname", "nid01234")
+            .set("flags", Value::Array(vec![Value::Bool(true), Value::Int(7)]))
+            .set(
+                "nested",
+                Value::Doc(Document::new().set("a", 1i64).set("b", "x")),
+            )
+            .set("none", Value::Null)
+    }
+
+    #[test]
+    fn round_trip() {
+        let d = sample();
+        let bytes = d.encode();
+        assert_eq!(bytes.len(), d.encoded_len());
+        let d2 = Document::decode(&bytes).unwrap();
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn put_replaces() {
+        let mut d = Document::new().set("a", 1i64);
+        d.put("a", 2i64);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.get_i64("a"), Some(2));
+    }
+
+    #[test]
+    fn field_order_preserved() {
+        let d = Document::new().set("z", 1i64).set("a", 2i64);
+        assert_eq!(d.fields[0].0, "z");
+        let d2 = Document::decode(&d.encode()).unwrap();
+        assert_eq!(d2.fields[0].0, "z");
+    }
+
+    #[test]
+    fn projection() {
+        let d = sample();
+        let p = d.project(&["ts".to_string(), "hostname".to_string()]);
+        assert_eq!(p.len(), 2);
+        assert!(p.get("cpu_user").is_none());
+    }
+
+    #[test]
+    fn numeric_cross_type_compare() {
+        use std::cmp::Ordering::*;
+        assert_eq!(Value::Int(2).cmp_total(&Value::F64(2.0)), Equal);
+        assert_eq!(Value::Int(2).cmp_total(&Value::F64(2.5)), Less);
+        assert_eq!(Value::F64(3.0).cmp_total(&Value::Int(2)), Greater);
+        // Type classes: numbers < strings.
+        assert_eq!(Value::Int(999).cmp_total(&Value::Str("a".into())), Less);
+        assert_eq!(Value::Null.cmp_total(&Value::Bool(false)), Less);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Document::decode(&[]).is_err());
+        assert!(Document::decode(&[1, 0]).is_err()); // count=1, truncated
+        let mut ok = sample().encode();
+        ok.push(0xFF); // trailing byte
+        assert!(Document::decode(&ok).is_err());
+        // Unknown tag.
+        assert!(Document::decode(&[1, 0, 1, b'a', 99]).is_err());
+    }
+
+    #[test]
+    fn encoded_len_matches_for_everything() {
+        use crate::testing::{check, gens, Gen};
+        use crate::util::rng::Pcg32;
+        check(
+            "encoded-len",
+            &(|rng: &mut Pcg32| {
+                let mut d = Document::new();
+                let n = rng.next_bounded(10);
+                for i in 0..n {
+                    let v = match rng.next_bounded(5) {
+                        0 => Value::Null,
+                        1 => Value::Int(rng.next_u64() as i64),
+                        2 => Value::F64(rng.next_f64()),
+                        3 => Value::Str(gens::ident(12).generate(rng)),
+                        _ => Value::Array(vec![Value::Int(1), Value::Null]),
+                    };
+                    d.put(&format!("f{i}"), v);
+                }
+                d
+            }),
+            |d| {
+                let bytes = d.encode();
+                if bytes.len() != d.encoded_len() {
+                    return Err(format!("len {} != {}", bytes.len(), d.encoded_len()));
+                }
+                let d2 = Document::decode(&bytes).map_err(|e| e.to_string())?;
+                if &d2 != d {
+                    return Err("round trip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

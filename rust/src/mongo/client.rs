@@ -1,0 +1,104 @@
+//! Client API — the pymongo analogue the run-script workloads use.
+//!
+//! A [`MongoClient`] holds the router mailboxes published by the
+//! run-script host file ("the run script makes available ... a list of
+//! host names of the MongoDB cluster's router servers", paper §3.2) and
+//! round-robins requests across them, exactly like the paper's client
+//! PEs spreading `insertMany` calls over the routers.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::mongo::bson::Document;
+use crate::mongo::query::{Filter, FindOptions};
+use crate::mongo::server::router::{InsertManyReply, RouterMailbox, RouterRequest};
+use crate::mongo::storage::index::IndexSpec;
+use crate::mongo::wire::{rpc, WireError};
+
+/// Thread-safe, cloneable client handle.
+#[derive(Clone)]
+pub struct MongoClient {
+    routers: Arc<Vec<RouterMailbox>>,
+    next: Arc<AtomicUsize>,
+}
+
+impl MongoClient {
+    pub fn new(routers: Vec<RouterMailbox>) -> Self {
+        assert!(!routers.is_empty(), "client needs at least one router");
+        Self { routers: Arc::new(routers), next: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    fn pick(&self) -> &RouterMailbox {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        &self.routers[i % self.routers.len()]
+    }
+
+    /// A client pinned to one router (a PE talks to "its" router in the
+    /// paper's layout: PE index mod router count).
+    pub fn pinned(&self, pe: usize) -> MongoClient {
+        let router = self.routers[pe % self.routers.len()].clone();
+        MongoClient { routers: Arc::new(vec![router]), next: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    pub fn num_routers(&self) -> usize {
+        self.routers.len()
+    }
+
+    /// `insertMany(ordered=False)`.
+    pub fn insert_many(&self, docs: Vec<Document>) -> Result<InsertManyReply, WireError> {
+        rpc(self.pick(), |reply| RouterRequest::InsertMany { docs, reply })?
+    }
+
+    /// `find(filter)` returning a pull cursor.
+    pub fn find(&self, filter: Filter, opts: FindOptions) -> Result<ClientCursor, WireError> {
+        let router = self.pick().clone();
+        let first = rpc(&router, |reply| RouterRequest::Find { filter, opts, reply })??;
+        Ok(ClientCursor {
+            router,
+            buffered: first.docs.into(),
+            cursor: first.cursor,
+        })
+    }
+
+    /// `countDocuments`: scatter-count on the shards — no result set
+    /// crosses the wire.
+    pub fn count_documents(&self, filter: Filter) -> Result<usize, WireError> {
+        let n = rpc(self.pick(), |reply| RouterRequest::Count { filter, reply })??;
+        Ok(n as usize)
+    }
+
+    pub fn create_index(&self, spec: IndexSpec) -> Result<(), WireError> {
+        rpc(self.pick(), |reply| RouterRequest::CreateIndex { spec, reply })?
+    }
+}
+
+/// Iterates result documents, pulling `getMore` batches on demand.
+pub struct ClientCursor {
+    router: RouterMailbox,
+    buffered: VecDeque<Document>,
+    cursor: Option<u64>,
+}
+
+impl Iterator for ClientCursor {
+    type Item = Document;
+
+    fn next(&mut self) -> Option<Document> {
+        loop {
+            if let Some(doc) = self.buffered.pop_front() {
+                return Some(doc);
+            }
+            let cursor = self.cursor.take()?;
+            match rpc(&self.router, |reply| RouterRequest::GetMore { cursor, reply }) {
+                Ok(Ok(rep)) => {
+                    self.buffered = rep.docs.into();
+                    self.cursor = rep.cursor;
+                    if self.buffered.is_empty() && self.cursor.is_none() {
+                        return None;
+                    }
+                }
+                _ => return None,
+            }
+        }
+    }
+}

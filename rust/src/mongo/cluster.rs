@@ -1,0 +1,279 @@
+//! Live cluster assembly: wires config server, shard servers, and
+//! routers into a running cluster of threads, and drives the balancer.
+//!
+//! This is the in-process analogue of the paper's run-script bring-up:
+//! role assignment happens in `hpc::runscript`, which calls
+//! [`Cluster::start`] with the storage directories the Lustre layer
+//! assigned to each shard.
+
+use std::sync::mpsc;
+
+use anyhow::{Context, Result};
+
+use crate::config::StoreConfig;
+use crate::metrics::Registry;
+use crate::mongo::client::MongoClient;
+use crate::mongo::server::config::ConfigServer;
+use crate::mongo::server::router::{Router, RouterMailbox, RouterRequest};
+use crate::mongo::server::shard::ShardServer;
+use crate::mongo::sharding::balancer::{plan_moves, BalancerPolicy};
+use crate::mongo::sharding::chunk::ShardKey;
+use crate::mongo::storage::StorageDir;
+use crate::mongo::wire::{rpc, ConfigRequest, ConfigStatsReply, ShardRequest, ShardStatsReply};
+use crate::runtime::Kernels;
+use crate::util::ids::{RouterId, ShardId};
+
+/// Cluster shape + store knobs.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub shards: u32,
+    pub routers: u32,
+    pub config_replicas: u32,
+    /// Initial chunks per shard (hashed pre-split).
+    pub chunks_per_shard: u32,
+    pub store: StoreConfig,
+}
+
+impl ClusterSpec {
+    pub fn small(shards: u32, routers: u32) -> Self {
+        Self {
+            shards,
+            routers,
+            config_replicas: 3,
+            chunks_per_shard: 2,
+            store: StoreConfig::default(),
+        }
+    }
+
+    pub fn key(&self) -> ShardKey {
+        ShardKey { kind: self.store.shard_key }
+    }
+}
+
+/// Aggregated cluster statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    pub docs: u64,
+    pub bytes: u64,
+    pub index_entries: u64,
+    pub chunks: usize,
+    pub map_version: u64,
+    pub migrations: u64,
+    pub per_shard_docs: Vec<u64>,
+}
+
+/// A running live cluster.
+pub struct Cluster {
+    spec: ClusterSpec,
+    config: mpsc::Sender<ConfigRequest>,
+    shards: Vec<mpsc::Sender<ShardRequest>>,
+    routers: Vec<RouterMailbox>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    metrics: Registry,
+    policy: BalancerPolicy,
+}
+
+impl Cluster {
+    /// Start all roles. `dir_for` supplies each shard's storage
+    /// directory (Lustre-assigned in the full stack, temp dirs in tests).
+    pub fn start(
+        spec: ClusterSpec,
+        dir_for: impl Fn(ShardId) -> Result<Box<dyn StorageDir>>,
+        kernels: Kernels,
+        metrics: Registry,
+    ) -> Result<Cluster> {
+        anyhow::ensure!(spec.shards > 0 && spec.routers > 0, "degenerate topology");
+
+        // Pre-create every mailbox so roles can reference each other
+        // before any thread runs.
+        let (config_tx, config_rx) = mpsc::channel();
+        let mut shard_txs = Vec::new();
+        let mut shard_rxs = Vec::new();
+        for _ in 0..spec.shards {
+            let (tx, rx) = mpsc::channel();
+            shard_txs.push(tx);
+            shard_rxs.push(rx);
+        }
+
+        let mut config_server = ConfigServer::new(
+            spec.key(),
+            spec.shards,
+            spec.chunks_per_shard,
+            spec.config_replicas,
+            metrics.clone(),
+        );
+        let initial_map = config_server.initial_map();
+        config_server.set_shards(shard_txs.clone());
+
+        let mut joins = Vec::new();
+        joins.push(config_server.spawn_with(config_rx));
+
+        for (i, rx) in shard_rxs.into_iter().enumerate() {
+            let id = ShardId(i as u32);
+            let server = ShardServer::new(
+                id,
+                dir_for(id).with_context(|| format!("storage dir for {id}"))?,
+                initial_map.clone(),
+                config_tx.clone(),
+                kernels.clone(),
+                metrics.clone(),
+                spec.store.journal,
+                spec.store.compress_checkpoints,
+                spec.store.max_chunk_docs,
+                spec.store.cursor_batch,
+            )?;
+            joins.push(server.spawn_with(rx));
+        }
+
+        let mut routers = Vec::new();
+        for i in 0..spec.routers {
+            let router = Router::new(
+                RouterId(i),
+                initial_map.clone(),
+                shard_txs.clone(),
+                config_tx.clone(),
+                kernels.clone(),
+                metrics.clone(),
+                spec.store.cursor_batch,
+            );
+            let (tx, join) = router.spawn();
+            routers.push(tx);
+            joins.push(join);
+        }
+
+        Ok(Cluster {
+            spec,
+            config: config_tx,
+            shards: shard_txs,
+            routers,
+            joins,
+            metrics,
+            policy: BalancerPolicy::default(),
+        })
+    }
+
+    pub fn client(&self) -> MongoClient {
+        MongoClient::new(self.routers.clone())
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn router_mailboxes(&self) -> &[RouterMailbox] {
+        &self.routers
+    }
+
+    /// One balancer round: plan against the current chunk table and
+    /// execute the proposed migrations (chunk data really moves between
+    /// shard engines). Returns the number of chunks moved.
+    pub fn run_balancer_round(&self) -> Result<usize> {
+        if !self.spec.store.balancer {
+            return Ok(0);
+        }
+        let map = rpc(&self.config, |reply| ConfigRequest::GetMap { reply })
+            .map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let moves = plan_moves(&map.owners, self.shards.len(), self.policy);
+        let mut moved = 0;
+        for m in moves {
+            // Re-read: chunk indices shift as splits/moves land.
+            let map = rpc(&self.config, |reply| ConfigRequest::GetMap { reply })
+                .map_err(|e| anyhow::anyhow!("config: {e}"))?;
+            if m.chunk >= map.num_chunks() || map.owners[m.chunk] != m.from {
+                continue; // plan went stale; next round will retry
+            }
+            let migration = match rpc(&self.config, |reply| ConfigRequest::BeginMigration {
+                chunk: m.chunk,
+                to: m.to,
+                reply,
+            }) {
+                Ok(Ok(mig)) => mig,
+                _ => continue,
+            };
+            let range = map.chunk_range(migration.chunk);
+            let result: Result<()> = (|| {
+                let docs = rpc(&self.shards[migration.from.index()], |reply| {
+                    ShardRequest::ExtractChunk { range, reply }
+                })
+                .map_err(|e| anyhow::anyhow!("extract: {e}"))?
+                .map_err(|e| anyhow::anyhow!("extract: {e}"))?;
+                rpc(&self.shards[migration.to.index()], |reply| {
+                    ShardRequest::InstallChunk { docs, reply }
+                })
+                .map_err(|e| anyhow::anyhow!("install: {e}"))?
+                .map_err(|e| anyhow::anyhow!("install: {e}"))?;
+                Ok(())
+            })();
+            match result {
+                Ok(()) => {
+                    rpc(&self.config, |reply| ConfigRequest::CommitMigration { reply })
+                        .map_err(|e| anyhow::anyhow!("commit: {e}"))?
+                        .map_err(|e| anyhow::anyhow!("commit: {e}"))?;
+                    // Source deletes its copy after commit.
+                    let _ = rpc(&self.shards[migration.from.index()], |reply| {
+                        ShardRequest::DeleteChunk { range, reply }
+                    });
+                    moved += 1;
+                }
+                Err(e) => {
+                    log::warn!("migration failed: {e:#}");
+                    let _ = self.config.send(ConfigRequest::AbortMigration);
+                }
+            }
+        }
+        Ok(moved)
+    }
+
+    /// Checkpoint every shard engine (end-of-job persistence barrier).
+    pub fn checkpoint_all(&self) -> Result<()> {
+        for (i, s) in self.shards.iter().enumerate() {
+            rpc(s, |reply| ShardRequest::Checkpoint { reply })
+                .map_err(|e| anyhow::anyhow!("shard {i}: {e}"))?
+                .map_err(|e| anyhow::anyhow!("shard {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    pub fn shard_stats(&self) -> Vec<ShardStatsReply> {
+        self.shards
+            .iter()
+            .filter_map(|s| rpc(s, |reply| ShardRequest::Stats { reply }).ok())
+            .collect()
+    }
+
+    pub fn config_stats(&self) -> Option<ConfigStatsReply> {
+        rpc(&self.config, |reply| ConfigRequest::Stats { reply }).ok()
+    }
+
+    pub fn stats(&self) -> ClusterStats {
+        let shard_stats = self.shard_stats();
+        let config = self.config_stats().unwrap_or_default();
+        ClusterStats {
+            docs: shard_stats.iter().map(|s| s.collection.docs).sum(),
+            bytes: shard_stats.iter().map(|s| s.collection.bytes).sum(),
+            index_entries: shard_stats.iter().map(|s| s.collection.index_entries).sum(),
+            chunks: config.chunks,
+            map_version: config.version,
+            migrations: config.migrations_done,
+            per_shard_docs: shard_stats.iter().map(|s| s.collection.docs).collect(),
+        }
+    }
+
+    /// Graceful shutdown: stop routers, then shards, then config.
+    pub fn shutdown(mut self) {
+        for r in &self.routers {
+            let _ = r.send(RouterRequest::Shutdown);
+        }
+        for s in &self.shards {
+            let _ = s.send(ShardRequest::Shutdown);
+        }
+        let _ = self.config.send(ConfigRequest::Shutdown);
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! A from-scratch sharded document store (the paper's "MongoDB").
+//!
+//! Role topology mirrors a sharded MongoDB cluster (paper §3.1):
+//!
+//! * [`sharding::config_server`] — cluster metadata: shard registry and
+//!   the versioned chunk table ("the list of chunks on every shard and
+//!   the ranges that define the chunks").
+//! * [`server::shard`] — shard servers: each holds a subset of the
+//!   sharded data in a WiredTiger-like storage engine
+//!   ([`storage::engine`]) with secondary indexes ([`storage::index`]),
+//!   journaling to its assigned Lustre directory.
+//! * [`server::router`] — `mongos` routers: "the only interface to a
+//!   sharded cluster from the perspective of applications"; they
+//!   partition `insertMany` batches with the AOT route kernel and
+//!   scatter/gather `find`s.
+//!
+//! [`client`] is the pymongo-analogue the run-script workloads use.
+
+pub mod bson;
+pub mod client;
+pub mod cluster;
+pub mod query;
+pub mod server;
+pub mod sharding;
+pub mod storage;
+pub mod wire;
+
+pub use bson::{Document, Value};
+pub use client::MongoClient;
+pub use cluster::Cluster;
+pub use query::Filter;

@@ -1,0 +1,334 @@
+//! Query model: filter AST, matcher, find options, and index-bound
+//! extraction for the planner.
+//!
+//! Covers the operators the paper's workload needs (`$eq $ne $gt $gte
+//! $lt $lte $in $and $or`) over the total value order defined in
+//! [`bson::Value::cmp_total`].
+
+use std::cmp::Ordering;
+
+use super::bson::{Document, Value};
+
+/// Comparison operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Gt,
+    Gte,
+    Lt,
+    Lte,
+}
+
+impl CmpOp {
+    fn eval(self, ord: Ordering) -> bool {
+        match self {
+            CmpOp::Eq => ord == Ordering::Equal,
+            CmpOp::Ne => ord != Ordering::Equal,
+            CmpOp::Gt => ord == Ordering::Greater,
+            CmpOp::Gte => ord != Ordering::Less,
+            CmpOp::Lt => ord == Ordering::Less,
+            CmpOp::Lte => ord != Ordering::Greater,
+        }
+    }
+}
+
+/// Filter AST.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Filter {
+    /// Matches everything (empty filter `{}`).
+    True,
+    /// `{field: {$op: value}}`
+    Cmp { field: String, op: CmpOp, value: Value },
+    /// `{field: {$in: [values]}}`
+    In { field: String, values: Vec<Value> },
+    /// `{$and: [...]}` — also the implicit conjunction form.
+    And(Vec<Filter>),
+    /// `{$or: [...]}`
+    Or(Vec<Filter>),
+}
+
+impl Filter {
+    /// `{field: value}` equality shorthand.
+    pub fn eq(field: &str, value: impl Into<Value>) -> Filter {
+        Filter::Cmp { field: field.into(), op: CmpOp::Eq, value: value.into() }
+    }
+
+    pub fn cmp(field: &str, op: CmpOp, value: impl Into<Value>) -> Filter {
+        Filter::Cmp { field: field.into(), op, value: value.into() }
+    }
+
+    /// Half-open range `lo <= field < hi` (the paper's timestamp
+    /// condition).
+    pub fn range(field: &str, lo: impl Into<Value>, hi: impl Into<Value>) -> Filter {
+        Filter::And(vec![
+            Filter::cmp(field, CmpOp::Gte, lo),
+            Filter::cmp(field, CmpOp::Lt, hi),
+        ])
+    }
+
+    pub fn is_in(field: &str, values: Vec<Value>) -> Filter {
+        Filter::In { field: field.into(), values }
+    }
+
+    pub fn and(filters: Vec<Filter>) -> Filter {
+        Filter::And(filters)
+    }
+
+    /// Does `doc` satisfy this filter? Missing fields never match a
+    /// comparison (Mongo-style for the operators we support).
+    pub fn matches(&self, doc: &Document) -> bool {
+        match self {
+            Filter::True => true,
+            Filter::Cmp { field, op, value } => match doc.get(field) {
+                Some(v) if v.type_rank() == value.type_rank() => {
+                    op.eval(v.cmp_total(value))
+                }
+                Some(v) => {
+                    // Cross-class comparison only meaningful for $ne.
+                    *op == CmpOp::Ne && v.cmp_total(value) != Ordering::Equal
+                }
+                None => false,
+            },
+            Filter::In { field, values } => match doc.get(field) {
+                Some(v) => values.iter().any(|w| v.cmp_total(w) == Ordering::Equal),
+                None => false,
+            },
+            Filter::And(fs) => fs.iter().all(|f| f.matches(doc)),
+            Filter::Or(fs) => fs.iter().any(|f| f.matches(doc)),
+        }
+    }
+
+    /// Extract a single-field range bound `[lo, hi)` usable by an index
+    /// scan, if this filter (or a conjunct of it) constrains `field`.
+    ///
+    /// Returns `(lo, hi)` where `None` means unbounded on that side.
+    /// Conservative: `$or`/`$in` terms yield no single range (the planner
+    /// handles `$in` separately via point lookups).
+    pub fn index_range(&self, field: &str) -> Option<(Option<Value>, Option<Value>)> {
+        fn merge(
+            acc: &mut (Option<Value>, Option<Value>),
+            op: CmpOp,
+            value: &Value,
+        ) {
+            match op {
+                // lo is inclusive: $gt v tightens to v + ulp — we keep v
+                // and let the residual filter drop equal keys.
+                CmpOp::Gte | CmpOp::Gt => {
+                    let tighter = match &acc.0 {
+                        None => true,
+                        Some(cur) => value.cmp_total(cur) == Ordering::Greater,
+                    };
+                    if tighter {
+                        acc.0 = Some(value.clone());
+                    }
+                }
+                CmpOp::Lt | CmpOp::Lte => {
+                    let tighter = match &acc.1 {
+                        None => true,
+                        Some(cur) => value.cmp_total(cur) == Ordering::Less,
+                    };
+                    if tighter {
+                        acc.1 = Some(value.clone());
+                    }
+                }
+                CmpOp::Eq => {
+                    acc.0 = Some(value.clone());
+                    acc.1 = Some(value.clone());
+                }
+                CmpOp::Ne => {}
+            }
+        }
+        let mut acc = (None, None);
+        let mut constrained = false;
+        match self {
+            Filter::Cmp { field: f, op, value } if f == field && *op != CmpOp::Ne => {
+                merge(&mut acc, *op, value);
+                constrained = true;
+            }
+            Filter::And(fs) => {
+                for f in fs {
+                    if let Filter::Cmp { field: ff, op, value } = f {
+                        if ff == field && *op != CmpOp::Ne {
+                            merge(&mut acc, *op, value);
+                            constrained = true;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        constrained.then_some(acc)
+    }
+
+    /// The `$in` value list for `field`, if this filter (or a top-level
+    /// conjunct) has one.
+    pub fn in_values(&self, field: &str) -> Option<&[Value]> {
+        match self {
+            Filter::In { field: f, values } if f == field => Some(values),
+            Filter::And(fs) => fs.iter().find_map(|f| match f {
+                Filter::In { field: ff, values } if ff == field => Some(values.as_slice()),
+                _ => None,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Wire-size estimate for transport accounting.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            Filter::True => 1,
+            Filter::Cmp { field, value, .. } => 2 + field.len() + 9 + value_size(value),
+            Filter::In { field, values } => {
+                2 + field.len() + values.iter().map(value_size).sum::<usize>()
+            }
+            Filter::And(fs) | Filter::Or(fs) => {
+                1 + fs.iter().map(Filter::encoded_len).sum::<usize>()
+            }
+        }
+    }
+}
+
+fn value_size(v: &Value) -> usize {
+    match v {
+        Value::Null => 1,
+        Value::Bool(_) => 2,
+        Value::Int(_) | Value::F64(_) => 9,
+        Value::Str(s) => 5 + s.len(),
+        Value::Array(items) => 3 + items.iter().map(value_size).sum::<usize>(),
+        Value::Doc(d) => d.encoded_len(),
+    }
+}
+
+/// Sort direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SortDir {
+    Asc,
+    Desc,
+}
+
+/// Options for `find`.
+#[derive(Clone, Debug, Default)]
+pub struct FindOptions {
+    pub projection: Option<Vec<String>>,
+    pub sort: Option<(String, SortDir)>,
+    pub limit: Option<usize>,
+    pub batch_size: Option<usize>,
+}
+
+impl FindOptions {
+    pub fn limit(mut self, n: usize) -> Self {
+        self.limit = Some(n);
+        self
+    }
+
+    pub fn project(mut self, fields: &[&str]) -> Self {
+        self.projection = Some(fields.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    pub fn sort(mut self, field: &str, dir: SortDir) -> Self {
+        self.sort = Some((field.to_string(), dir));
+        self
+    }
+
+    pub fn batch_size(mut self, n: usize) -> Self {
+        self.batch_size = Some(n);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(ts: i64, node: i64) -> Document {
+        Document::new().set("ts", ts).set("node_id", node).set("m0", 1.5)
+    }
+
+    #[test]
+    fn comparison_operators() {
+        let d = doc(100, 7);
+        assert!(Filter::eq("node_id", 7i64).matches(&d));
+        assert!(!Filter::eq("node_id", 8i64).matches(&d));
+        assert!(Filter::cmp("ts", CmpOp::Gte, 100i64).matches(&d));
+        assert!(!Filter::cmp("ts", CmpOp::Gt, 100i64).matches(&d));
+        assert!(Filter::cmp("ts", CmpOp::Lt, 101i64).matches(&d));
+        assert!(Filter::cmp("ts", CmpOp::Ne, 99i64).matches(&d));
+        assert!(!Filter::cmp("missing", CmpOp::Eq, 1i64).matches(&d));
+    }
+
+    #[test]
+    fn range_is_half_open() {
+        let f = Filter::range("ts", 100i64, 200i64);
+        assert!(f.matches(&doc(100, 1)));
+        assert!(f.matches(&doc(199, 1)));
+        assert!(!f.matches(&doc(200, 1)));
+        assert!(!f.matches(&doc(99, 1)));
+    }
+
+    #[test]
+    fn in_and_or() {
+        let f = Filter::is_in("node_id", vec![Value::Int(1), Value::Int(3)]);
+        assert!(f.matches(&doc(0, 1)));
+        assert!(f.matches(&doc(0, 3)));
+        assert!(!f.matches(&doc(0, 2)));
+
+        let f = Filter::Or(vec![Filter::eq("node_id", 9i64), Filter::eq("ts", 5i64)]);
+        assert!(f.matches(&doc(5, 0)));
+        assert!(f.matches(&doc(0, 9)));
+        assert!(!f.matches(&doc(1, 1)));
+    }
+
+    #[test]
+    fn the_papers_query_shape() {
+        // find({node_id: {$in: jobs_nodes}, ts: {$gte: t0, $lt: t1}})
+        let f = Filter::and(vec![
+            Filter::is_in("node_id", vec![Value::Int(4), Value::Int(5)]),
+            Filter::cmp("ts", CmpOp::Gte, 1000i64),
+            Filter::cmp("ts", CmpOp::Lt, 2000i64),
+        ]);
+        assert!(f.matches(&doc(1500, 4)));
+        assert!(!f.matches(&doc(2500, 4)));
+        assert!(!f.matches(&doc(1500, 6)));
+        // Planner hooks:
+        let (lo, hi) = f.index_range("ts").unwrap();
+        assert_eq!(lo, Some(Value::Int(1000)));
+        assert_eq!(hi, Some(Value::Int(2000)));
+        assert_eq!(f.in_values("node_id").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn index_range_extraction() {
+        let f = Filter::eq("a", 5i64);
+        let (lo, hi) = f.index_range("a").unwrap();
+        assert_eq!(lo, hi);
+        assert!(f.index_range("b").is_none());
+
+        // Tightest bounds win.
+        let f = Filter::and(vec![
+            Filter::cmp("x", CmpOp::Gte, 10i64),
+            Filter::cmp("x", CmpOp::Gte, 20i64),
+            Filter::cmp("x", CmpOp::Lt, 100i64),
+            Filter::cmp("x", CmpOp::Lte, 90i64),
+        ]);
+        let (lo, hi) = f.index_range("x").unwrap();
+        assert_eq!(lo, Some(Value::Int(20)));
+        assert_eq!(hi, Some(Value::Int(90)));
+
+        // $or yields nothing.
+        assert!(Filter::Or(vec![Filter::eq("x", 1i64)]).index_range("x").is_none());
+    }
+
+    #[test]
+    fn cross_type_never_matches_cmp() {
+        let d = Document::new().set("v", "abc");
+        assert!(!Filter::cmp("v", CmpOp::Gt, 5i64).matches(&d));
+        assert!(Filter::cmp("v", CmpOp::Ne, 5i64).matches(&d));
+    }
+
+    #[test]
+    fn true_matches_everything() {
+        assert!(Filter::True.matches(&Document::new()));
+    }
+}

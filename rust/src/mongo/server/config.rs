@@ -1,0 +1,129 @@
+//! Config server process: hosts [`ConfigState`] behind the wire layer
+//! and pushes chunk-map updates to every shard and router after each
+//! metadata mutation.
+//!
+//! The config thread never blocks on a shard RPC (migration data
+//! movement is executed by the cluster coordinator), so the
+//! shard→config RPCs (`GetMap`, `ReportSplit`) can be synchronous
+//! without deadlock.
+
+use std::sync::mpsc;
+
+use crate::mongo::sharding::chunk::{ChunkMap, ShardKey};
+use crate::mongo::sharding::config_server::ConfigState;
+use crate::mongo::wire::{ConfigRequest, ConfigStatsReply, ShardRequest, WireError};
+use crate::metrics::Registry;
+
+/// Config server process.
+pub struct ConfigServer {
+    state: ConfigState,
+    /// Mailboxes to push `SetMap` to after each mutation.
+    shards: Vec<mpsc::Sender<ShardRequest>>,
+    metrics: Registry,
+    migrations_done: u64,
+}
+
+impl ConfigServer {
+    pub fn new(
+        key: ShardKey,
+        num_shards: u32,
+        chunks_per_shard: u32,
+        replicas: u32,
+        metrics: Registry,
+    ) -> Self {
+        Self {
+            state: ConfigState::new(key, num_shards, chunks_per_shard, replicas),
+            shards: Vec::new(),
+            metrics,
+            migrations_done: 0,
+        }
+    }
+
+    /// Initial chunk map (routers/shards bootstrap from this before the
+    /// thread starts).
+    pub fn initial_map(&self) -> ChunkMap {
+        self.state.map().clone()
+    }
+
+    /// Register the shard mailboxes (after shards spawn).
+    pub fn set_shards(&mut self, shards: Vec<mpsc::Sender<ShardRequest>>) {
+        self.shards = shards;
+    }
+
+    pub fn spawn(self) -> (mpsc::Sender<ConfigRequest>, std::thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel();
+        let join = self.spawn_with(rx);
+        (tx, join)
+    }
+
+    /// Spawn on a pre-created channel.
+    pub fn spawn_with(mut self, rx: mpsc::Receiver<ConfigRequest>) -> std::thread::JoinHandle<()> {
+        std::thread::Builder::new()
+            .name("config-server".into())
+            .spawn(move || self.run(rx))
+            .expect("spawn config thread")
+    }
+
+    fn push_map(&self) {
+        for s in &self.shards {
+            let _ = s.send(ShardRequest::SetMap { map: self.state.map().clone() });
+        }
+    }
+
+    fn run(&mut self, rx: mpsc::Receiver<ConfigRequest>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                ConfigRequest::Shutdown => break,
+                ConfigRequest::GetMap { reply } => {
+                    self.metrics.counter("config.get_map").inc();
+                    let _ = reply.send(self.state.map().clone());
+                }
+                ConfigRequest::ReportSplit { seen_version, chunk, at, reply } => {
+                    self.metrics.counter("config.report_split").inc();
+                    let r = self
+                        .state
+                        .split_chunk(seen_version, chunk, at)
+                        .map_err(|e| WireError::Server(e.to_string()));
+                    if matches!(
+                        r,
+                        Ok(crate::mongo::sharding::config_server::VersionCheck::Ok)
+                    ) {
+                        self.metrics.counter("config.splits").inc();
+                        self.push_map();
+                    }
+                    let _ = reply.send(r);
+                }
+                ConfigRequest::BeginMigration { chunk, to, reply } => {
+                    let r = self
+                        .state
+                        .begin_migration(chunk, to)
+                        .map_err(|e| WireError::Server(e.to_string()));
+                    let _ = reply.send(r);
+                }
+                ConfigRequest::CommitMigration { reply } => {
+                    let r = self
+                        .state
+                        .commit_migration()
+                        .map_err(|e| WireError::Server(e.to_string()));
+                    if r.is_ok() {
+                        self.migrations_done += 1;
+                        self.metrics.counter("config.migrations").inc();
+                        self.push_map();
+                    }
+                    let _ = reply.send(r);
+                }
+                ConfigRequest::AbortMigration => {
+                    self.state.abort_migration();
+                }
+                ConfigRequest::Stats { reply } => {
+                    let _ = reply.send(ConfigStatsReply {
+                        version: self.state.version(),
+                        chunks: self.state.map().num_chunks(),
+                        oplog_len: self.state.oplog_len,
+                        migrations_done: self.migrations_done,
+                    });
+                }
+            }
+        }
+    }
+}

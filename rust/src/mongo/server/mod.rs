@@ -1,0 +1,11 @@
+//! Server processes: each cluster role runs as a thread with an mpsc
+//! event loop (the live-mode analogue of one process per processing
+//! element, paper §3.2).
+
+pub mod config;
+pub mod router;
+pub mod shard;
+
+pub use config::ConfigServer;
+pub use router::{InsertManyReply, Router, RouterMailbox, RouterRequest, RouterStatsReply};
+pub use shard::ShardServer;

@@ -1,0 +1,453 @@
+//! Query router (`mongos`): "the only interface to a sharded cluster
+//! from the perspective of applications" (paper §3.1).
+//!
+//! * `insertMany(ordered=false)`: the key columns of the batch go
+//!   through the AOT **route kernel** (hash + chunk lookup + per-shard
+//!   histogram) — the L1/L2 hot path — and the per-shard sub-batches are
+//!   dispatched concurrently. Stale-version and wrong-owner rejects are
+//!   re-routed after a map refresh, preserving unordered semantics.
+//! * `find`: scatter to every shard (conditional finds don't carry the
+//!   full shard key), gather, and serve through a router-side cursor
+//!   that drains shard cursors round-robin.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::config::ShardKeyKind;
+use crate::mongo::bson::Document;
+use crate::mongo::query::{Filter, FindOptions};
+use crate::mongo::sharding::chunk::ChunkMap;
+use crate::mongo::wire::{
+    batch_wire_bytes, find_wire_bytes, rpc, ConfigRequest, FindReply, Reply, ShardRequest,
+    WireError,
+};
+use crate::metrics::Registry;
+use crate::runtime::Kernels;
+use crate::util::ids::RouterId;
+
+/// Result of an `insertMany` through the router.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct InsertManyReply {
+    pub inserted: usize,
+    /// Documents that needed a second routing pass (stale map and/or
+    /// wrong owner after a concurrent split/migration).
+    pub rerouted: usize,
+}
+
+/// Router statistics snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RouterStatsReply {
+    pub inserts: u64,
+    pub finds: u64,
+    pub map_version: u64,
+    pub wire_bytes_out: u64,
+}
+
+/// Requests handled by a router.
+pub enum RouterRequest {
+    InsertMany {
+        docs: Vec<Document>,
+        reply: Reply<Result<InsertManyReply, WireError>>,
+    },
+    Find {
+        filter: Filter,
+        opts: FindOptions,
+        reply: Reply<Result<FindReply, WireError>>,
+    },
+    GetMore {
+        cursor: u64,
+        reply: Reply<Result<FindReply, WireError>>,
+    },
+    /// Cluster-wide count: scatter to all shards, sum.
+    Count {
+        filter: Filter,
+        reply: Reply<Result<u64, WireError>>,
+    },
+    CreateIndex {
+        spec: crate::mongo::storage::index::IndexSpec,
+        reply: Reply<Result<(), WireError>>,
+    },
+    Stats {
+        reply: Reply<RouterStatsReply>,
+    },
+    Shutdown,
+}
+
+pub type RouterMailbox = mpsc::Sender<RouterRequest>;
+
+struct RouterCursor {
+    /// Open shard cursors (shard index, cursor id).
+    shard_cursors: Vec<(usize, u64)>,
+    /// Buffered docs not yet handed to the client.
+    buffered: Vec<Document>,
+    remaining: Option<usize>,
+    batch: usize,
+}
+
+/// Router process state + event loop.
+pub struct Router {
+    id: RouterId,
+    map: ChunkMap,
+    shards: Vec<mpsc::Sender<ShardRequest>>,
+    config: mpsc::Sender<ConfigRequest>,
+    kernels: Kernels,
+    metrics: Registry,
+    cursors: HashMap<u64, RouterCursor>,
+    next_cursor: u64,
+    default_batch: usize,
+    inserts: u64,
+    finds: u64,
+    wire_bytes_out: u64,
+}
+
+impl Router {
+    pub fn new(
+        id: RouterId,
+        map: ChunkMap,
+        shards: Vec<mpsc::Sender<ShardRequest>>,
+        config: mpsc::Sender<ConfigRequest>,
+        kernels: Kernels,
+        metrics: Registry,
+        default_batch: usize,
+    ) -> Self {
+        Self {
+            id,
+            map,
+            shards,
+            config,
+            kernels,
+            metrics,
+            cursors: HashMap::new(),
+            next_cursor: 1,
+            default_batch,
+            inserts: 0,
+            finds: 0,
+            wire_bytes_out: 0,
+        }
+    }
+
+    pub fn spawn(self) -> (RouterMailbox, std::thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel();
+        let join = self.spawn_with(rx);
+        (tx, join)
+    }
+
+    /// Spawn on a pre-created channel.
+    pub fn spawn_with(mut self, rx: mpsc::Receiver<RouterRequest>) -> std::thread::JoinHandle<()> {
+        std::thread::Builder::new()
+            .name(format!("{}", self.id))
+            .spawn(move || self.run(rx))
+            .expect("spawn router thread")
+    }
+
+    fn run(&mut self, rx: mpsc::Receiver<RouterRequest>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                RouterRequest::Shutdown => break,
+                RouterRequest::InsertMany { docs, reply } => {
+                    let t = Instant::now();
+                    let r = self.handle_insert_many(docs);
+                    self.metrics
+                        .observe("router.insert_many_ns", t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
+                }
+                RouterRequest::Find { filter, opts, reply } => {
+                    let t = Instant::now();
+                    let r = self.handle_find(filter, opts);
+                    self.metrics.observe("router.find_ns", t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
+                }
+                RouterRequest::GetMore { cursor, reply } => {
+                    let _ = reply.send(self.handle_get_more(cursor));
+                }
+                RouterRequest::Count { filter, reply } => {
+                    let _ = reply.send(self.handle_count(filter));
+                }
+                RouterRequest::CreateIndex { spec, reply } => {
+                    let mut result = Ok(());
+                    for shard in &self.shards {
+                        match rpc(shard, |reply| ShardRequest::CreateIndex {
+                            spec: spec.clone(),
+                            reply,
+                        }) {
+                            Ok(Ok(())) => {}
+                            Ok(Err(e)) | Err(e) => result = Err(e),
+                        }
+                    }
+                    let _ = reply.send(result);
+                }
+                RouterRequest::Stats { reply } => {
+                    let _ = reply.send(RouterStatsReply {
+                        inserts: self.inserts,
+                        finds: self.finds,
+                        map_version: self.map.version,
+                        wire_bytes_out: self.wire_bytes_out,
+                    });
+                }
+            }
+        }
+    }
+
+    fn refresh_map(&mut self) {
+        if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
+            self.metrics.counter("router.map_refresh").inc();
+            self.map = map;
+        }
+    }
+
+    /// Partition `docs` by owning shard. Hashed keys go through the AOT
+    /// route kernel; ranged keys use scalar positions.
+    fn partition(&self, docs: Vec<Document>) -> Result<Vec<Vec<Document>>, WireError> {
+        let num_shards = self.shards.len();
+        let mut per_shard: Vec<Vec<Document>> = (0..num_shards).map(|_| Vec::new()).collect();
+        match self.map.key.kind {
+            ShardKeyKind::Hashed => {
+                let node: Vec<u32> = docs
+                    .iter()
+                    .map(|d| d.get_i64("node_id").unwrap_or(0).max(0) as u32)
+                    .collect();
+                let ts: Vec<u32> = docs
+                    .iter()
+                    .map(|d| d.get_i64("ts").unwrap_or(0).max(0) as u32)
+                    .collect();
+                let (bounds, owners) = self.map.kernel_tables();
+                let out = self
+                    .kernels
+                    .route(&node, &ts, &bounds, &owners, num_shards)
+                    .map_err(|e| WireError::Server(e.to_string()))?;
+                // Exact sub-batch allocation from the kernel histogram.
+                for (s, v) in per_shard.iter_mut().enumerate() {
+                    v.reserve(out.counts[s] as usize);
+                }
+                for (doc, &shard) in docs.into_iter().zip(&out.shard_of) {
+                    per_shard[shard as usize].push(doc);
+                }
+            }
+            ShardKeyKind::Ranged => {
+                for doc in docs {
+                    let node = doc.get_i64("node_id").unwrap_or(0).max(0) as u32;
+                    let ts = doc.get_i64("ts").unwrap_or(0).max(0) as u32;
+                    let pos = self.map.key.position(node, ts);
+                    per_shard[self.map.owner_of(pos).index()].push(doc);
+                }
+            }
+        }
+        Ok(per_shard)
+    }
+
+    fn handle_insert_many(&mut self, docs: Vec<Document>) -> Result<InsertManyReply, WireError> {
+        self.inserts += 1;
+        let total = docs.len();
+        let mut pending = docs;
+        let mut inserted = 0usize;
+        let mut rerouted = 0usize;
+        // Unordered retry loop: a concurrent split/migration can bounce a
+        // sub-batch at most a few times before the map stabilizes.
+        for attempt in 0..5 {
+            if pending.is_empty() {
+                break;
+            }
+            if attempt > 0 {
+                self.refresh_map();
+                rerouted += pending.len();
+            }
+            let per_shard = self.partition(std::mem::take(&mut pending))?;
+            // Dispatch all sub-batches, then collect replies (concurrent
+            // across shards — the shards process in parallel threads).
+            let mut in_flight: Vec<(usize, Vec<Document>, mpsc::Receiver<_>)> = Vec::new();
+            for (s, batch) in per_shard.into_iter().enumerate() {
+                if batch.is_empty() {
+                    continue;
+                }
+                self.wire_bytes_out += batch_wire_bytes(&batch);
+                let (tx, rx) = mpsc::channel();
+                self.shards[s]
+                    .send(ShardRequest::InsertBatch {
+                        version: self.map.version,
+                        docs: batch.clone(),
+                        reply: tx,
+                    })
+                    .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
+                in_flight.push((s, batch, rx));
+            }
+            for (s, batch, rx) in in_flight {
+                let r = rx
+                    .recv()
+                    .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))?;
+                match r {
+                    Ok(rep) => {
+                        inserted += rep.inserted;
+                        for i in rep.wrong_owner {
+                            pending.push(batch[i].clone());
+                        }
+                    }
+                    Err(WireError::StaleVersion { .. }) => {
+                        self.metrics.counter("router.stale_retries").inc();
+                        pending.extend(batch);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        if !pending.is_empty() {
+            return Err(WireError::Server(format!(
+                "{} of {total} docs unroutable after retries",
+                pending.len()
+            )));
+        }
+        Ok(InsertManyReply { inserted, rerouted })
+    }
+
+    fn handle_find(
+        &mut self,
+        filter: Filter,
+        opts: FindOptions,
+    ) -> Result<FindReply, WireError> {
+        self.finds += 1;
+        self.wire_bytes_out += find_wire_bytes(&filter) * self.shards.len() as u64;
+        let batch = opts.batch_size.unwrap_or(self.default_batch);
+        // Scatter.
+        let mut rxs = Vec::with_capacity(self.shards.len());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            shard
+                .send(ShardRequest::Find {
+                    filter: filter.clone(),
+                    opts: opts.clone(),
+                    reply: tx,
+                })
+                .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
+            rxs.push((s, rx));
+        }
+        // Gather.
+        let mut cur = RouterCursor {
+            shard_cursors: Vec::new(),
+            buffered: Vec::new(),
+            remaining: opts.limit,
+            batch,
+        };
+        for (s, rx) in rxs {
+            let rep = rx
+                .recv()
+                .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
+            cur.buffered.extend(rep.docs);
+            if let Some(c) = rep.cursor {
+                cur.shard_cursors.push((s, c));
+            }
+        }
+        let first = self.serve_router_batch(&mut cur)?;
+        if first.cursor.is_some() {
+            let id = self.next_cursor;
+            self.next_cursor += 1;
+            self.cursors.insert(id, cur);
+            Ok(FindReply { docs: first.docs, cursor: Some(id) })
+        } else {
+            Ok(first)
+        }
+    }
+
+    fn handle_count(&mut self, filter: Filter) -> Result<u64, WireError> {
+        self.finds += 1;
+        self.wire_bytes_out += find_wire_bytes(&filter) * self.shards.len() as u64;
+        let mut rxs = Vec::with_capacity(self.shards.len());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            shard
+                .send(ShardRequest::Count { filter: filter.clone(), reply: tx })
+                .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
+            rxs.push((s, rx));
+        }
+        let mut total = 0u64;
+        for (s, rx) in rxs {
+            total += rx
+                .recv()
+                .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
+        }
+        Ok(total)
+    }
+
+    /// Fill one client batch from the buffer, pulling shard GetMores as
+    /// needed (round-robin).
+    fn serve_router_batch(&mut self, cur: &mut RouterCursor) -> Result<FindReply, WireError> {
+        let want = match cur.remaining {
+            Some(r) => cur.batch.min(r),
+            None => cur.batch,
+        };
+        while cur.buffered.len() < want && !cur.shard_cursors.is_empty() {
+            let (s, c) = cur.shard_cursors.remove(0);
+            let rep = rpc(&self.shards[s], |reply| ShardRequest::GetMore { cursor: c, reply })??;
+            cur.buffered.extend(rep.docs);
+            if let Some(c2) = rep.cursor {
+                cur.shard_cursors.push((s, c2));
+            }
+        }
+        let take = want.min(cur.buffered.len());
+        let docs: Vec<Document> = cur.buffered.drain(..take).collect();
+        if let Some(r) = cur.remaining.as_mut() {
+            *r -= docs.len();
+        }
+        let exhausted = cur.buffered.is_empty() && cur.shard_cursors.is_empty();
+        let limit_hit = cur.remaining == Some(0);
+        Ok(FindReply { docs, cursor: (!exhausted && !limit_hit).then_some(0) })
+    }
+
+    fn handle_get_more(&mut self, cursor: u64) -> Result<FindReply, WireError> {
+        let mut cur = self
+            .cursors
+            .remove(&cursor)
+            .ok_or(WireError::UnknownCursor(cursor))?;
+        let mut rep = self.serve_router_batch(&mut cur)?;
+        if rep.cursor.is_some() {
+            self.cursors.insert(cursor, cur);
+            rep.cursor = Some(cursor);
+        }
+        Ok(rep)
+    }
+}
+
+// Unit coverage for the router lives in cluster-level integration tests
+// (`rust/tests/cluster_live.rs`) since a router is meaningless without
+// shards; `partition` is additionally covered against the fallback in
+// the runtime roundtrip suite.
+
+/// Helper used by ablation benches: route a batch scalar-only (bypassing
+/// the kernel service) for A1 comparisons.
+pub fn partition_scalar(
+    map: &ChunkMap,
+    docs: &[Document],
+    num_shards: usize,
+) -> Vec<Vec<usize>> {
+    let mut per_shard: Vec<Vec<usize>> = (0..num_shards).map(|_| Vec::new()).collect();
+    for (i, doc) in docs.iter().enumerate() {
+        let node = doc.get_i64("node_id").unwrap_or(0).max(0) as u32;
+        let ts = doc.get_i64("ts").unwrap_or(0).max(0) as u32;
+        let pos = map.key.position(node, ts);
+        per_shard[map.owner_of(pos).index()].push(i);
+    }
+    per_shard
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mongo::sharding::chunk::ShardKey;
+
+    #[test]
+    fn scalar_partition_agrees_with_map_owner() {
+        let map = ChunkMap::pre_split(ShardKey::hashed(), 4, 2);
+        let docs: Vec<Document> = (0..100)
+            .map(|i| Document::new().set("ts", i as i64).set("node_id", (i * 7) as i64))
+            .collect();
+        let parts = partition_scalar(&map, &docs, 4);
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), 100);
+        for (s, idxs) in parts.iter().enumerate() {
+            for &i in idxs {
+                let node = docs[i].get_i64("node_id").unwrap() as u32;
+                let ts = docs[i].get_i64("ts").unwrap() as u32;
+                assert_eq!(map.owner_of(map.key.position(node, ts)).index(), s);
+            }
+        }
+    }
+
+}

@@ -1,0 +1,621 @@
+//! Shard server (`mongod`): owns a storage engine on its assigned
+//! filesystem directory, serves inserts/finds for the chunks it owns,
+//! triggers chunk splits, and participates in migrations.
+//!
+//! Query planning per shard:
+//! 1. `$in` on an indexed field → point lookups per value, residual
+//!    matcher on fetched docs.
+//! 2. range on an indexed field → index range scan; when the query is
+//!    the paper's canonical shape (ts range + node-id set) the candidate
+//!    columns are run through the AOT **filter kernel** instead of the
+//!    scalar matcher.
+//! 3. otherwise → full collection scan + matcher.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::mongo::bson::{Document, Value};
+use crate::mongo::query::{Filter, FindOptions};
+use crate::mongo::sharding::chunk::ChunkMap;
+use crate::mongo::storage::{Engine, RecordId, StorageDir};
+use crate::mongo::wire::{
+    rpc, ConfigRequest, FindReply, InsertReply, ShardRequest, ShardStatsReply, WireError,
+};
+use crate::metrics::Registry;
+use crate::runtime::Kernels;
+use crate::util::ids::ShardId;
+
+/// The sharded collection name (one sharded namespace, like the paper's
+/// single OVIS metrics collection).
+pub const COLLECTION: &str = "metrics";
+
+struct CursorState {
+    rids: Vec<RecordId>,
+    pos: usize,
+    projection: Option<Vec<String>>,
+    batch: usize,
+    remaining: Option<usize>,
+}
+
+/// Shard server state + event loop.
+pub struct ShardServer {
+    id: ShardId,
+    engine: Engine,
+    map: ChunkMap,
+    config: mpsc::Sender<ConfigRequest>,
+    kernels: Kernels,
+    metrics: Registry,
+    cursors: HashMap<u64, CursorState>,
+    next_cursor: u64,
+    /// Split a chunk when its (position-histogram) doc count exceeds this.
+    split_threshold: u64,
+    /// Position histogram: key position → docs at that position. Range
+    /// sums give per-chunk counts; medians give split points.
+    positions: std::collections::BTreeMap<u64, u32>,
+    default_batch: usize,
+}
+
+impl ShardServer {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: ShardId,
+        dir: Box<dyn StorageDir>,
+        map: ChunkMap,
+        config: mpsc::Sender<ConfigRequest>,
+        kernels: Kernels,
+        metrics: Registry,
+        journal: bool,
+        compress_checkpoints: bool,
+        split_threshold: u64,
+        default_batch: usize,
+    ) -> anyhow::Result<Self> {
+        let mut engine = Engine::open(dir, journal, compress_checkpoints)?;
+        engine.create_collection(COLLECTION);
+        let mut s = Self {
+            id,
+            engine,
+            map,
+            config,
+            kernels,
+            metrics,
+            cursors: HashMap::new(),
+            next_cursor: 1,
+            split_threshold,
+            positions: Default::default(),
+            default_batch,
+        };
+        // Rebuild the position histogram from recovered records (second
+        // job re-attaching to persisted Lustre data).
+        let recovered: Vec<Document> =
+            s.engine.scan(COLLECTION).map(|(_, d)| d).collect();
+        for doc in &recovered {
+            if let Some(pos) = s.position_of(doc) {
+                *s.positions.entry(pos).or_insert(0) += 1;
+            }
+        }
+        Ok(s)
+    }
+
+    /// Spawn the event loop thread; returns its mailbox and join handle.
+    pub fn spawn(self) -> (mpsc::Sender<ShardRequest>, std::thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel();
+        let join = self.spawn_with(rx);
+        (tx, join)
+    }
+
+    /// Spawn on a pre-created channel (the cluster wires mailboxes before
+    /// any thread starts).
+    pub fn spawn_with(mut self, rx: mpsc::Receiver<ShardRequest>) -> std::thread::JoinHandle<()> {
+        let name = format!("{}", self.id);
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(move || self.run(rx))
+            .expect("spawn shard thread")
+    }
+
+    fn run(&mut self, rx: mpsc::Receiver<ShardRequest>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                ShardRequest::Shutdown => break,
+                ShardRequest::SetMap { map } => {
+                    self.map = map;
+                }
+                ShardRequest::InsertBatch { version, docs, reply } => {
+                    let t = Instant::now();
+                    let r = self.handle_insert(version, docs);
+                    self.metrics
+                        .observe("shard.insert_batch_ns", t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
+                }
+                ShardRequest::Find { filter, opts, reply } => {
+                    let t = Instant::now();
+                    let r = self.handle_find(&filter, &opts);
+                    self.metrics.observe("shard.find_ns", t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
+                }
+                ShardRequest::GetMore { cursor, reply } => {
+                    let _ = reply.send(self.handle_get_more(cursor));
+                }
+                ShardRequest::Count { filter, reply } => {
+                    let t = Instant::now();
+                    let r = self.handle_count(&filter);
+                    self.metrics.observe("shard.count_ns", t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
+                }
+                ShardRequest::CreateIndex { spec, reply } => {
+                    let r = self
+                        .engine
+                        .create_index(COLLECTION, spec)
+                        .map_err(|e| WireError::Server(e.to_string()));
+                    let _ = reply.send(r);
+                }
+                ShardRequest::ExtractChunk { range, reply } => {
+                    let _ = reply.send(Ok(self.docs_in_range(range)));
+                }
+                ShardRequest::InstallChunk { docs, reply } => {
+                    let r = self.install_docs(docs);
+                    let _ = reply.send(r);
+                }
+                ShardRequest::DeleteChunk { range, reply } => {
+                    let r = self.delete_range(range);
+                    let _ = reply.send(r);
+                }
+                ShardRequest::Stats { reply } => {
+                    let _ = reply.send(self.stats());
+                }
+                ShardRequest::Checkpoint { reply } => {
+                    let r = self
+                        .engine
+                        .checkpoint()
+                        .map_err(|e| WireError::Server(e.to_string()));
+                    let _ = reply.send(r);
+                }
+            }
+        }
+    }
+
+    /// Shard-key position of a document (`None` if key fields missing).
+    fn position_of(&self, doc: &Document) -> Option<u64> {
+        let node = doc.get_i64("node_id")? as u32;
+        let ts = doc.get_i64("ts")? as u32;
+        Some(self.map.key.position(node, ts))
+    }
+
+    fn handle_insert(
+        &mut self,
+        version: u64,
+        docs: Vec<Document>,
+    ) -> Result<InsertReply, WireError> {
+        // Version handshake: if the router is ahead, catch up from the
+        // config server; if the router is behind, tell it to refresh.
+        if version > self.map.version {
+            if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
+                self.map = map;
+            }
+        }
+        if version != self.map.version {
+            self.metrics.counter("shard.stale_version").inc();
+            return Err(WireError::StaleVersion { current: self.map.version });
+        }
+
+        let mut wrong_owner = Vec::new();
+        let mut touched_chunks: Vec<usize> = Vec::new();
+        let mut inserted = 0usize;
+        for (i, doc) in docs.iter().enumerate() {
+            let Some(pos) = self.position_of(doc) else {
+                wrong_owner.push(i);
+                continue;
+            };
+            let chunk = self.map.chunk_of(pos);
+            if self.map.owners[chunk] != self.id {
+                wrong_owner.push(i);
+                continue;
+            }
+            self.engine
+                .insert(COLLECTION, doc)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            *self.positions.entry(pos).or_insert(0) += 1;
+            inserted += 1;
+            if !touched_chunks.contains(&chunk) {
+                touched_chunks.push(chunk);
+            }
+        }
+        // Group commit once per batch.
+        self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+        self.metrics.counter("shard.docs_inserted").add(inserted as u64);
+
+        // Split any chunk that crossed the threshold.
+        for chunk in touched_chunks {
+            self.maybe_split(chunk);
+        }
+        Ok(InsertReply { inserted, wrong_owner })
+    }
+
+    fn chunk_doc_count(&self, chunk: usize) -> u64 {
+        let (lo, hi) = self.map.chunk_range(chunk);
+        self.positions.range(lo..=hi).map(|(_, c)| *c as u64).sum()
+    }
+
+    /// Median position within a chunk (split point).
+    fn chunk_median(&self, chunk: usize) -> Option<u64> {
+        let (lo, hi) = self.map.chunk_range(chunk);
+        let total: u64 = self.chunk_doc_count(chunk);
+        if total < 2 {
+            return None;
+        }
+        let mut seen = 0u64;
+        for (&pos, &c) in self.positions.range(lo..=hi) {
+            seen += c as u64;
+            if seen >= total / 2 {
+                // Split point must be < hi and >= lo.
+                if pos >= hi {
+                    return None;
+                }
+                return Some(pos);
+            }
+        }
+        None
+    }
+
+    fn maybe_split(&mut self, chunk: usize) {
+        if self.chunk_doc_count(chunk) <= self.split_threshold {
+            return;
+        }
+        let Some(at) = self.chunk_median(chunk) else { return };
+        let seen = self.map.version;
+        if let Ok(Ok(check)) = rpc(&self.config, |reply| ConfigRequest::ReportSplit {
+            seen_version: seen,
+            chunk,
+            at,
+            reply,
+        }) {
+            use crate::mongo::sharding::config_server::VersionCheck;
+            match check {
+                VersionCheck::Ok => {
+                    self.metrics.counter("shard.splits").inc();
+                    // Config pushes SetMap to everyone (including us); we
+                    // may process it on the next loop turn. Update our
+                    // local copy eagerly to keep counting accurate.
+                    if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
+                        self.map = map;
+                    }
+                }
+                VersionCheck::Stale { .. } => {
+                    self.metrics.counter("shard.split_stale").inc();
+                    if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
+                        self.map = map;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The paper's canonical query shape, *exactly*: a conjunction of
+    /// `ts >= lo` (`$gte`), `ts < hi` (`$lt`) and `node_id $in [ints]`
+    /// and nothing else — the only shape the filter kernel's predicate
+    /// `lo <= ts < hi && node in set` evaluates completely. Any other
+    /// filter takes the scalar matcher path.
+    fn canonical_shape(filter: &Filter) -> Option<(u32, u32, Vec<u32>)> {
+        use crate::mongo::query::CmpOp;
+        let conjuncts = match filter {
+            Filter::And(fs) => fs.as_slice(),
+            f @ Filter::In { .. } => std::slice::from_ref(f),
+            _ => return None,
+        };
+        let mut lo: Option<u32> = None;
+        let mut hi: Option<u32> = None;
+        let mut nodes: Option<Vec<u32>> = None;
+        for c in conjuncts {
+            match c {
+                Filter::Cmp { field, op: CmpOp::Gte, value }
+                    if field == "ts" && lo.is_none() =>
+                {
+                    let v = value.as_i64()?;
+                    if !(0..=u32::MAX as i64).contains(&v) {
+                        return None;
+                    }
+                    lo = Some(v as u32);
+                }
+                Filter::Cmp { field, op: CmpOp::Lt, value }
+                    if field == "ts" && hi.is_none() =>
+                {
+                    let v = value.as_i64()?;
+                    if !(0..=u32::MAX as i64).contains(&v) {
+                        return None;
+                    }
+                    hi = Some(v as u32);
+                }
+                Filter::In { field, values } if field == "node_id" && nodes.is_none() => {
+                    let mut ids = Vec::with_capacity(values.len());
+                    for v in values {
+                        let n = v.as_i64()?;
+                        if !(0..=u32::MAX as i64).contains(&n) {
+                            return None;
+                        }
+                        ids.push(n as u32);
+                    }
+                    nodes = Some(ids);
+                }
+                _ => return None, // anything else → matcher path
+            }
+        }
+        Some((lo.unwrap_or(0), hi.unwrap_or(u32::MAX), nodes?))
+    }
+
+    fn handle_find(
+        &mut self,
+        filter: &Filter,
+        opts: &FindOptions,
+    ) -> Result<FindReply, WireError> {
+        let candidates: Vec<RecordId> = self.plan_candidates(filter);
+        self.metrics
+            .counter("shard.find_candidates")
+            .add(candidates.len() as u64);
+
+        // Kernel fast path for the canonical shape over index candidates.
+        let rids: Vec<RecordId> = if let Some((lo, hi, nodes)) = Self::canonical_shape(filter) {
+            let max_node = nodes.iter().max().copied().unwrap_or(0);
+            let words = self.kernels.shapes().filter_w;
+            if (max_node as usize) < words * 32 && !nodes.is_empty() {
+                self.metrics.counter("shard.find_kernel_path").inc();
+                let mut ts_col = Vec::with_capacity(candidates.len());
+                let mut node_col = Vec::with_capacity(candidates.len());
+                let mut docs: Vec<(RecordId, Document)> = Vec::with_capacity(candidates.len());
+                for &rid in &candidates {
+                    if let Some(d) = self.engine.fetch(COLLECTION, rid) {
+                        ts_col.push(d.get_i64("ts").unwrap_or(-1).max(0) as u32);
+                        node_col.push(d.get_i64("node_id").unwrap_or(0).max(0) as u32);
+                        docs.push((rid, d));
+                    }
+                }
+                let bitmap = crate::runtime::fallback::build_bitmap(nodes, words);
+                let out = self
+                    .kernels
+                    .filter(&ts_col, &node_col, lo, hi, &bitmap)
+                    .map_err(|e| WireError::Server(e.to_string()))?;
+                docs.iter()
+                    .zip(&out.mask)
+                    .filter(|(_, &m)| m == 1)
+                    .map(|((rid, _), _)| *rid)
+                    .collect()
+            } else {
+                self.matcher_path(&candidates, filter)
+            }
+        } else {
+            self.matcher_path(&candidates, filter)
+        };
+
+        self.metrics.counter("shard.find_matches").add(rids.len() as u64);
+        let batch = opts.batch_size.unwrap_or(self.default_batch);
+        let mut cur = CursorState {
+            rids,
+            pos: 0,
+            projection: opts.projection.clone(),
+            batch,
+            remaining: opts.limit,
+        };
+        // Sort: materialize + order by field before serving (only sane
+        // with a limit; workload queries don't sort).
+        if let Some((field, dir)) = &opts.sort {
+            let mut docs: Vec<(RecordId, Document)> = cur
+                .rids
+                .iter()
+                .filter_map(|&r| self.engine.fetch(COLLECTION, r).map(|d| (r, d)))
+                .collect();
+            docs.sort_by(|(_, a), (_, b)| {
+                let o = a
+                    .get(field)
+                    .unwrap_or(&Value::Null)
+                    .cmp_total(b.get(field).unwrap_or(&Value::Null));
+                match dir {
+                    crate::mongo::query::SortDir::Asc => o,
+                    crate::mongo::query::SortDir::Desc => o.reverse(),
+                }
+            });
+            cur.rids = docs.into_iter().map(|(r, _)| r).collect();
+        }
+        let reply = self.serve_batch(&mut cur);
+        if reply.cursor.is_some() {
+            let id = self.next_cursor;
+            self.next_cursor += 1;
+            self.cursors.insert(id, cur);
+            Ok(FindReply { docs: reply.docs, cursor: Some(id) })
+        } else {
+            Ok(reply)
+        }
+    }
+
+    /// Choose an access path and produce candidate record ids.
+    fn plan_candidates(&self, filter: &Filter) -> Vec<RecordId> {
+        // 1. $in on indexed node_id → point lookups; when a ts range is
+        // also present and indexed, intersect the two rid sets (index
+        // intersection) so candidates ≈ matches instead of each node's
+        // full history.
+        if let Some(values) = filter.in_values("node_id") {
+            if let Some(idx) = self.engine.index(COLLECTION, "node_id_1") {
+                let mut rids = Vec::new();
+                for v in values {
+                    rids.extend(idx.point(&[v]));
+                }
+                if let Some((lo, hi)) = filter.index_range("ts") {
+                    if let Some(ts_idx) = self.engine.index(COLLECTION, "ts_1") {
+                        self.metrics.counter("shard.plan_intersect").inc();
+                        let ts_rids = ts_idx.range_superset(lo.as_ref(), hi.as_ref());
+                        let in_ts: std::collections::HashSet<RecordId> =
+                            ts_rids.into_iter().collect();
+                        rids.retain(|r| in_ts.contains(r));
+                        return rids;
+                    }
+                }
+                self.metrics.counter("shard.plan_in_points").inc();
+                return rids;
+            }
+        }
+        // 2. Range on indexed ts (inclusive superset; residual filter
+        // downstream restores exact operator semantics).
+        if let Some((lo, hi)) = filter.index_range("ts") {
+            if let Some(idx) = self.engine.index(COLLECTION, "ts_1") {
+                self.metrics.counter("shard.plan_ts_range").inc();
+                return idx.range_superset(lo.as_ref(), hi.as_ref());
+            }
+        }
+        // 2b. Range/eq on indexed node_id.
+        if let Some((lo, hi)) = filter.index_range("node_id") {
+            if let Some(idx) = self.engine.index(COLLECTION, "node_id_1") {
+                self.metrics.counter("shard.plan_node_range").inc();
+                return idx.range_superset(lo.as_ref(), hi.as_ref());
+            }
+        }
+        // 3. Full scan.
+        self.metrics.counter("shard.plan_full_scan").inc();
+        self.engine.record_ids(COLLECTION)
+    }
+
+    fn matcher_path(&self, candidates: &[RecordId], filter: &Filter) -> Vec<RecordId> {
+        self.metrics.counter("shard.find_matcher_path").inc();
+        candidates
+            .iter()
+            .filter_map(|&rid| {
+                let d = self.engine.fetch(COLLECTION, rid)?;
+                filter.matches(&d).then_some(rid)
+            })
+            .collect()
+    }
+
+    fn serve_batch(&self, cur: &mut CursorState) -> FindReply {
+        let mut docs = Vec::with_capacity(cur.batch.min(cur.rids.len() - cur.pos));
+        while cur.pos < cur.rids.len() && docs.len() < cur.batch {
+            if let Some(limit) = cur.remaining {
+                if limit == 0 {
+                    cur.pos = cur.rids.len();
+                    break;
+                }
+            }
+            let rid = cur.rids[cur.pos];
+            cur.pos += 1;
+            if let Some(doc) = self.engine.fetch(COLLECTION, rid) {
+                let doc = match &cur.projection {
+                    Some(fields) => doc.project(fields),
+                    None => doc,
+                };
+                docs.push(doc);
+                if let Some(r) = cur.remaining.as_mut() {
+                    *r -= 1;
+                }
+            }
+        }
+        let more = cur.pos < cur.rids.len() && cur.remaining != Some(0);
+        FindReply { docs, cursor: more.then_some(0) }
+    }
+
+    /// Count without materializing documents for the client. Uses the
+    /// same planner; the kernel path only needs the match count.
+    fn handle_count(&mut self, filter: &Filter) -> Result<u64, WireError> {
+        let candidates = self.plan_candidates(filter);
+        if let Some((lo, hi, nodes)) = Self::canonical_shape(filter) {
+            let words = self.kernels.shapes().filter_w;
+            let max_node = nodes.iter().max().copied().unwrap_or(0);
+            if (max_node as usize) < words * 32 && !nodes.is_empty() {
+                let mut ts_col = Vec::with_capacity(candidates.len());
+                let mut node_col = Vec::with_capacity(candidates.len());
+                for &rid in &candidates {
+                    if let Some(d) = self.engine.fetch(COLLECTION, rid) {
+                        ts_col.push(d.get_i64("ts").unwrap_or(-1).max(0) as u32);
+                        node_col.push(d.get_i64("node_id").unwrap_or(0).max(0) as u32);
+                    }
+                }
+                let bitmap = crate::runtime::fallback::build_bitmap(nodes, words);
+                let out = self
+                    .kernels
+                    .filter(&ts_col, &node_col, lo, hi, &bitmap)
+                    .map_err(|e| WireError::Server(e.to_string()))?;
+                return Ok(out.count as u64);
+            }
+        }
+        Ok(self.matcher_path(&candidates, filter).len() as u64)
+    }
+
+    fn handle_get_more(&mut self, cursor: u64) -> Result<FindReply, WireError> {
+        let mut cur = self
+            .cursors
+            .remove(&cursor)
+            .ok_or(WireError::UnknownCursor(cursor))?;
+        let mut reply = self.serve_batch(&mut cur);
+        if reply.cursor.is_some() {
+            self.cursors.insert(cursor, cur);
+            reply.cursor = Some(cursor);
+        }
+        Ok(reply)
+    }
+
+    fn docs_in_range(&self, range: (u64, u64)) -> Vec<Document> {
+        self.engine
+            .scan(COLLECTION)
+            .filter_map(|(_, d)| {
+                let pos = self.position_of(&d)?;
+                (range.0 <= pos && pos <= range.1).then_some(d)
+            })
+            .collect()
+    }
+
+    fn install_docs(&mut self, docs: Vec<Document>) -> Result<usize, WireError> {
+        let n = docs.len();
+        for doc in docs {
+            let pos = self.position_of(&doc);
+            self.engine
+                .insert(COLLECTION, &doc)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            if let Some(pos) = pos {
+                *self.positions.entry(pos).or_insert(0) += 1;
+            }
+        }
+        self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+        self.metrics.counter("shard.migration_docs_in").add(n as u64);
+        Ok(n)
+    }
+
+    fn delete_range(&mut self, range: (u64, u64)) -> Result<usize, WireError> {
+        let doomed: Vec<RecordId> = self
+            .engine
+            .scan(COLLECTION)
+            .filter_map(|(rid, d)| {
+                let pos = self.position_of(&d)?;
+                (range.0 <= pos && pos <= range.1).then_some(rid)
+            })
+            .collect();
+        let n = doomed.len();
+        for rid in doomed {
+            let doc = self
+                .engine
+                .remove(COLLECTION, rid)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            if let Some(pos) = self.position_of(&doc) {
+                if let Some(c) = self.positions.get_mut(&pos) {
+                    *c -= 1;
+                    if *c == 0 {
+                        self.positions.remove(&pos);
+                    }
+                }
+            }
+        }
+        self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+        self.metrics.counter("shard.migration_docs_out").add(n as u64);
+        Ok(n)
+    }
+
+    fn stats(&self) -> ShardStatsReply {
+        let chunks_owned = self
+            .map
+            .owners
+            .iter()
+            .filter(|o| **o == self.id)
+            .count() as u32;
+        ShardStatsReply {
+            collection: self.engine.stats(COLLECTION),
+            chunks_owned,
+            map_version: self.map.version,
+            journal_bytes: self.engine.pending_journal_bytes() as u64,
+        }
+    }
+}

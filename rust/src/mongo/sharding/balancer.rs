@@ -1,0 +1,186 @@
+//! Balancer policy: keep chunk counts even across shards.
+//!
+//! MongoDB's balancer moves chunks from the most-loaded to the
+//! least-loaded shard while the spread exceeds a threshold. The policy
+//! here is pure (list of proposed moves); the cluster layer executes the
+//! moves through the config server's migration protocol one at a time.
+
+use crate::util::ids::ShardId;
+
+/// Policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BalancerPolicy {
+    /// Start balancing when `max - min` chunk counts exceed this.
+    pub threshold: u32,
+    /// Max moves proposed per round (migrations serialize; keep rounds
+    /// short).
+    pub max_moves_per_round: usize,
+}
+
+impl Default for BalancerPolicy {
+    fn default() -> Self {
+        Self { threshold: 2, max_moves_per_round: 4 }
+    }
+}
+
+/// A proposed move of one chunk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProposedMove {
+    pub chunk: usize,
+    pub from: ShardId,
+    pub to: ShardId,
+}
+
+/// Plan moves given the chunk→owner table.
+///
+/// Greedy: while spread > threshold, move one chunk from the current
+/// max shard to the current min shard. Deterministic (lowest-index chunk
+/// of the donor moves first).
+pub fn plan_moves(owners: &[ShardId], num_shards: usize, policy: BalancerPolicy) -> Vec<ProposedMove> {
+    let mut counts = vec![0i64; num_shards];
+    for o in owners {
+        counts[o.index()] += 1;
+    }
+    // Donor chunk queue per shard (ascending chunk index).
+    let mut chunks_of: Vec<Vec<usize>> = vec![Vec::new(); num_shards];
+    for (idx, o) in owners.iter().enumerate() {
+        chunks_of[o.index()].push(idx);
+    }
+    let mut moves = Vec::new();
+    let mut moved: std::collections::BTreeSet<usize> = Default::default();
+    while moves.len() < policy.max_moves_per_round {
+        let (max_s, &max_c) = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, c)| (**c, usize::MAX - i))
+            .unwrap();
+        let (min_s, &min_c) = counts
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, c)| (**c, *i))
+            .unwrap();
+        if max_c - min_c <= policy.threshold as i64 {
+            break;
+        }
+        // First not-yet-moved chunk of the donor.
+        let Some(&chunk) = chunks_of[max_s].iter().find(|c| !moved.contains(c)) else {
+            break;
+        };
+        moved.insert(chunk);
+        counts[max_s] -= 1;
+        counts[min_s] += 1;
+        moves.push(ProposedMove {
+            chunk,
+            from: ShardId(max_s as u32),
+            to: ShardId(min_s as u32),
+        });
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn owners(counts: &[u32]) -> Vec<ShardId> {
+        let mut v = Vec::new();
+        for (s, &c) in counts.iter().enumerate() {
+            for _ in 0..c {
+                v.push(ShardId(s as u32));
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn balanced_cluster_proposes_nothing() {
+        let o = owners(&[3, 3, 3, 4]);
+        assert!(plan_moves(&o, 4, BalancerPolicy::default()).is_empty());
+    }
+
+    #[test]
+    fn skewed_cluster_moves_from_max_to_min() {
+        let o = owners(&[8, 1, 3]);
+        let moves = plan_moves(&o, 3, BalancerPolicy::default());
+        assert!(!moves.is_empty());
+        assert_eq!(moves[0].from, ShardId(0));
+        assert_eq!(moves[0].to, ShardId(1));
+        // Simulate and verify spread shrinks monotonically.
+        let mut counts = [8i64, 1, 3];
+        for m in &moves {
+            counts[m.from.index()] -= 1;
+            counts[m.to.index()] += 1;
+        }
+        let spread = counts.iter().max().unwrap() - counts.iter().min().unwrap();
+        assert!(spread <= 8 - 1 - moves.len() as i64 + moves.len() as i64); // sanity
+        assert!(spread < 7);
+    }
+
+    #[test]
+    fn respects_move_cap() {
+        let o = owners(&[20, 0]);
+        let policy = BalancerPolicy { threshold: 2, max_moves_per_round: 3 };
+        let moves = plan_moves(&o, 2, policy);
+        assert_eq!(moves.len(), 3);
+        // Distinct chunks each time.
+        let set: std::collections::BTreeSet<_> = moves.iter().map(|m| m.chunk).collect();
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn empty_shard_receives_first() {
+        let o = owners(&[4, 4, 0]);
+        let moves = plan_moves(&o, 3, BalancerPolicy { threshold: 1, max_moves_per_round: 8 });
+        assert!(moves.iter().all(|m| m.to == ShardId(2)));
+    }
+
+    #[test]
+    fn deterministic_plans() {
+        let o = owners(&[9, 2, 5, 0]);
+        let a = plan_moves(&o, 4, BalancerPolicy::default());
+        let b = plan_moves(&o, 4, BalancerPolicy::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn convergence_property() {
+        use crate::testing::check;
+        use crate::util::rng::Pcg32;
+        check(
+            "balancer-converges",
+            &(|rng: &mut Pcg32| {
+                let shards = 2 + rng.next_bounded(8) as usize;
+                let counts: Vec<u32> = (0..shards).map(|_| rng.next_bounded(20)).collect();
+                counts
+            }),
+            |counts| {
+                let shards = counts.len();
+                let mut o = owners(counts);
+                let policy = BalancerPolicy { threshold: 2, max_moves_per_round: 64 };
+                // Apply rounds until fixpoint; must converge quickly.
+                for _ in 0..50 {
+                    let moves = plan_moves(&o, shards, policy);
+                    if moves.is_empty() {
+                        // Spread must now be within threshold.
+                        let mut c = vec![0i64; shards];
+                        for s in &o {
+                            c[s.index()] += 1;
+                        }
+                        let spread = c.iter().max().unwrap() - c.iter().min().unwrap();
+                        return if spread <= 2 + 1 {
+                            Ok(())
+                        } else {
+                            Err(format!("converged with spread {spread}"))
+                        };
+                    }
+                    // Execute moves by reassigning owners (chunk indices
+                    // here index into `o`).
+                    for m in moves {
+                        o[m.chunk] = m.to;
+                    }
+                }
+                Err("did not converge in 50 rounds".into())
+            },
+        );
+    }
+}

@@ -1,0 +1,310 @@
+//! Shard keys and the chunk map.
+//!
+//! A chunk owns a half-open interval of the *key position space*:
+//! hashed keys live on the u32 FNV ring (positions computed by the AOT
+//! route kernel), ranged keys on the u64 `(node_id << 32) | ts` line
+//! (ablation A5's hot-chunk pathology). The map stores inclusive upper
+//! bounds per chunk plus the owning shard, and carries a version bumped
+//! on every mutation — routers cache the map and retry on
+//! `StaleVersion`, exactly like mongos.
+
+use anyhow::{bail, Result};
+
+use crate::config::ShardKeyKind;
+use crate::util::hash::fnv1a_shard_key;
+use crate::util::ids::ShardId;
+
+/// Shard-key definition: the paper's collection is keyed on
+/// `(node_id, ts)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardKey {
+    pub kind: ShardKeyKind,
+}
+
+impl ShardKey {
+    pub fn hashed() -> Self {
+        Self { kind: ShardKeyKind::Hashed }
+    }
+
+    pub fn ranged() -> Self {
+        Self { kind: ShardKeyKind::Ranged }
+    }
+
+    /// Position of a key on the partition line.
+    #[inline]
+    pub fn position(&self, node_id: u32, ts_min: u32) -> u64 {
+        match self.kind {
+            ShardKeyKind::Hashed => fnv1a_shard_key(node_id, ts_min) as u64,
+            ShardKeyKind::Ranged => ((node_id as u64) << 32) | ts_min as u64,
+        }
+    }
+
+    /// Top of the position space.
+    pub fn max_position(&self) -> u64 {
+        match self.kind {
+            ShardKeyKind::Hashed => u32::MAX as u64,
+            ShardKeyKind::Ranged => u64::MAX,
+        }
+    }
+}
+
+/// The versioned chunk table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkMap {
+    pub key: ShardKey,
+    pub version: u64,
+    /// Inclusive upper bound per chunk, strictly increasing, last =
+    /// `key.max_position()`.
+    pub bounds: Vec<u64>,
+    /// Owning shard per chunk.
+    pub owners: Vec<ShardId>,
+}
+
+impl ChunkMap {
+    /// Pre-split: `chunks_per_shard * num_shards` equal chunks assigned
+    /// round-robin (MongoDB's hashed pre-split).
+    pub fn pre_split(key: ShardKey, num_shards: u32, chunks_per_shard: u32) -> Self {
+        let n = (num_shards * chunks_per_shard).max(1) as u64;
+        let top = key.max_position();
+        let mut bounds = Vec::with_capacity(n as usize);
+        let mut owners = Vec::with_capacity(n as usize);
+        for i in 0..n {
+            // Equal partition of [0, top]; final bound exactly top.
+            let b = if i == n - 1 { top } else { (top / n) * (i + 1) };
+            bounds.push(b);
+            owners.push(ShardId((i % num_shards as u64) as u32));
+        }
+        Self { key, version: 1, bounds, owners }
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// Chunk index owning `position`.
+    #[inline]
+    pub fn chunk_of(&self, position: u64) -> usize {
+        self.bounds.partition_point(|&b| b < position)
+    }
+
+    /// Shard owning `position`.
+    #[inline]
+    pub fn owner_of(&self, position: u64) -> ShardId {
+        self.owners[self.chunk_of(position)]
+    }
+
+    /// Half-open position interval `[lo, hi_inclusive]` of chunk `idx`.
+    pub fn chunk_range(&self, idx: usize) -> (u64, u64) {
+        let lo = if idx == 0 { 0 } else { self.bounds[idx - 1] + 1 };
+        (lo, self.bounds[idx])
+    }
+
+    /// Split chunk `idx` at `at` (which becomes the upper bound of the
+    /// left half). Both halves keep the owner. Bumps the version.
+    pub fn split(&mut self, idx: usize, at: u64) -> Result<()> {
+        if idx >= self.bounds.len() {
+            bail!("split: no chunk {idx}");
+        }
+        let (lo, hi) = self.chunk_range(idx);
+        if at < lo || at >= hi {
+            bail!("split point {at} outside chunk {idx} range [{lo}, {hi}]");
+        }
+        self.bounds.insert(idx, at);
+        self.owners.insert(idx, self.owners[idx]);
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Reassign chunk `idx` to `to`. Bumps the version.
+    pub fn move_chunk(&mut self, idx: usize, to: ShardId) -> Result<()> {
+        if idx >= self.owners.len() {
+            bail!("move: no chunk {idx}");
+        }
+        self.owners[idx] = to;
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Chunks per shard (balancer input).
+    pub fn chunk_counts(&self, num_shards: usize) -> Vec<u32> {
+        let mut counts = vec![0u32; num_shards];
+        for o in &self.owners {
+            counts[o.index()] += 1;
+        }
+        counts
+    }
+
+    /// Chunk table in the AOT route-kernel's format (u32 ring only).
+    ///
+    /// Panics if called on a ranged map — the router uses scalar routing
+    /// for ranged keys.
+    pub fn kernel_tables(&self) -> (Vec<u32>, Vec<i32>) {
+        assert_eq!(
+            self.key.kind,
+            ShardKeyKind::Hashed,
+            "kernel routing requires hashed keys"
+        );
+        let bounds: Vec<u32> = self.bounds.iter().map(|&b| b as u32).collect();
+        let owners: Vec<i32> = self.owners.iter().map(|o| o.0 as i32).collect();
+        (bounds, owners)
+    }
+
+    /// Structural invariants (checked after every mutation in tests and
+    /// by the config server in debug builds).
+    pub fn validate(&self) -> Result<()> {
+        if self.bounds.is_empty() {
+            bail!("empty chunk map");
+        }
+        if self.bounds.len() != self.owners.len() {
+            bail!("bounds/owners length mismatch");
+        }
+        if *self.bounds.last().unwrap() != self.key.max_position() {
+            bail!("last bound must be the top of the position space");
+        }
+        if !self.bounds.windows(2).all(|w| w[0] < w[1]) {
+            bail!("bounds not strictly increasing");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn pre_split_covers_ring_evenly() {
+        let m = ChunkMap::pre_split(ShardKey::hashed(), 7, 2);
+        m.validate().unwrap();
+        assert_eq!(m.num_chunks(), 14);
+        assert_eq!(*m.bounds.last().unwrap(), u32::MAX as u64);
+        let counts = m.chunk_counts(7);
+        assert!(counts.iter().all(|&c| c == 2));
+    }
+
+    #[test]
+    fn chunk_of_boundary_semantics() {
+        let m = ChunkMap {
+            key: ShardKey::hashed(),
+            version: 1,
+            bounds: vec![100, 200, u32::MAX as u64],
+            owners: vec![ShardId(0), ShardId(1), ShardId(2)],
+        };
+        m.validate().unwrap();
+        assert_eq!(m.chunk_of(0), 0);
+        assert_eq!(m.chunk_of(100), 0); // inclusive upper bound
+        assert_eq!(m.chunk_of(101), 1);
+        assert_eq!(m.chunk_of(200), 1);
+        assert_eq!(m.chunk_of(u32::MAX as u64), 2);
+        assert_eq!(m.owner_of(150), ShardId(1));
+    }
+
+    #[test]
+    fn split_keeps_coverage() {
+        let mut m = ChunkMap::pre_split(ShardKey::hashed(), 2, 1);
+        let v0 = m.version;
+        let (lo, hi) = m.chunk_range(0);
+        let mid = lo + (hi - lo) / 2;
+        m.split(0, mid).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.num_chunks(), 3);
+        assert_eq!(m.version, v0 + 1);
+        assert_eq!(m.owners[0], m.owners[1]); // both halves keep owner
+        // Positions re-resolve consistently.
+        assert_eq!(m.chunk_of(mid), 0);
+        assert_eq!(m.chunk_of(mid + 1), 1);
+    }
+
+    #[test]
+    fn split_rejects_out_of_range_points() {
+        let mut m = ChunkMap::pre_split(ShardKey::hashed(), 2, 1);
+        let (lo, hi) = m.chunk_range(1);
+        assert!(m.split(1, hi).is_err()); // at == hi would make empty right half
+        assert!(m.split(1, lo - 1).is_err());
+        assert!(m.split(9, lo).is_err());
+    }
+
+    #[test]
+    fn move_chunk_changes_owner_and_version() {
+        let mut m = ChunkMap::pre_split(ShardKey::hashed(), 3, 1);
+        m.move_chunk(0, ShardId(2)).unwrap();
+        assert_eq!(m.owners[0], ShardId(2));
+        assert_eq!(m.chunk_counts(3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ranged_positions_are_monotonic_in_key() {
+        let k = ShardKey::ranged();
+        assert!(k.position(1, 100) < k.position(1, 101));
+        assert!(k.position(1, u32::MAX) < k.position(2, 0));
+        assert_eq!(k.max_position(), u64::MAX);
+    }
+
+    #[test]
+    fn hashed_positions_match_route_kernel_hash() {
+        let k = ShardKey::hashed();
+        assert_eq!(k.position(123, 456), fnv1a_shard_key(123, 456) as u64);
+    }
+
+    #[test]
+    fn kernel_tables_round_trip() {
+        let m = ChunkMap::pre_split(ShardKey::hashed(), 7, 2);
+        let (bounds, owners) = m.kernel_tables();
+        assert_eq!(bounds.len(), 14);
+        assert_eq!(*bounds.last().unwrap(), u32::MAX);
+        assert_eq!(owners[0], 0);
+        // Scalar fallback on these tables must agree with owner_of.
+        for pos in [0u64, 1 << 20, 1 << 31, u32::MAX as u64] {
+            let via_fallback = crate::runtime::fallback::chunk_of_hash(pos as u32, &bounds);
+            assert_eq!(via_fallback, m.chunk_of(pos), "pos={pos}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "hashed keys")]
+    fn kernel_tables_reject_ranged() {
+        ChunkMap::pre_split(ShardKey::ranged(), 2, 1).kernel_tables();
+    }
+
+    #[test]
+    fn property_random_split_sequences_stay_valid() {
+        check(
+            "chunkmap-splits",
+            &(|rng: &mut Pcg32| {
+                let shards = 1 + rng.next_bounded(8);
+                let ops = rng.next_bounded(40);
+                (shards, ops, rng.next_u64())
+            }),
+            |&(shards, ops, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let mut m = ChunkMap::pre_split(ShardKey::hashed(), shards, 1);
+                for _ in 0..ops {
+                    let idx = rng.next_bounded(m.num_chunks() as u32) as usize;
+                    let (lo, hi) = m.chunk_range(idx);
+                    if hi > lo {
+                        let at = lo + rng.next_u64() % (hi - lo);
+                        m.split(idx, at).map_err(|e| e.to_string())?;
+                    }
+                    if rng.next_bounded(3) == 0 {
+                        let idx = rng.next_bounded(m.num_chunks() as u32) as usize;
+                        m.move_chunk(idx, ShardId(rng.next_bounded(shards)))
+                            .map_err(|e| e.to_string())?;
+                    }
+                    m.validate().map_err(|e| e.to_string())?;
+                }
+                // Every position resolves to a unique chunk.
+                for _ in 0..50 {
+                    let p = rng.next_u64() % (u32::MAX as u64 + 1);
+                    let c = m.chunk_of(p);
+                    let (lo, hi) = m.chunk_range(c);
+                    if !(lo <= p && p <= hi) {
+                        return Err(format!("pos {p} not in chunk {c} [{lo},{hi}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! Config-server state: the sharded cluster's metadata authority.
+//!
+//! "Config servers store the metadata for a sharded cluster ... the list
+//! of chunks on every shard and the ranges that define the chunks"
+//! (paper §3.1). [`ConfigState`] is the pure, testable state machine; the
+//! live cluster hosts it on the config-server thread(s) behind the wire
+//! layer. A small CSRS-style replica set is modeled: every mutation is
+//! applied to the primary and synchronously acked by the mirrors, and
+//! reads may be served by any member.
+
+use anyhow::{bail, Result};
+
+use super::chunk::{ChunkMap, ShardKey};
+use crate::util::ids::ShardId;
+
+/// Outcome of a version-guarded mutation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VersionCheck {
+    Ok,
+    /// Caller's cached map is stale; it must refresh before retrying.
+    Stale { current: u64 },
+}
+
+/// A chunk migration in flight.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Migration {
+    pub chunk: usize,
+    pub from: ShardId,
+    pub to: ShardId,
+}
+
+/// The metadata state machine.
+#[derive(Clone, Debug)]
+pub struct ConfigState {
+    shards: Vec<ShardId>,
+    map: ChunkMap,
+    /// Synchronous mirrors (replica count - 1). Kept bit-identical to
+    /// the primary map; a read may be served from any of them.
+    mirrors: Vec<ChunkMap>,
+    migration: Option<Migration>,
+    /// Mutation log length (diagnostics; equals number of committed
+    /// metadata changes).
+    pub oplog_len: u64,
+}
+
+impl ConfigState {
+    /// Initialize with `num_shards` registered shards and a pre-split
+    /// chunk table (`chunks_per_shard` chunks each).
+    pub fn new(key: ShardKey, num_shards: u32, chunks_per_shard: u32, replicas: u32) -> Self {
+        let map = ChunkMap::pre_split(key, num_shards, chunks_per_shard);
+        let mirrors = vec![map.clone(); replicas.saturating_sub(1) as usize];
+        Self {
+            shards: (0..num_shards).map(ShardId).collect(),
+            map,
+            mirrors,
+            migration: None,
+            oplog_len: 0,
+        }
+    }
+
+    pub fn shards(&self) -> &[ShardId] {
+        &self.shards
+    }
+
+    /// Current map (primary read).
+    pub fn map(&self) -> &ChunkMap {
+        &self.map
+    }
+
+    /// Read from mirror `i` (tests assert replica consistency).
+    pub fn mirror(&self, i: usize) -> Option<&ChunkMap> {
+        self.mirrors.get(i)
+    }
+
+    pub fn version(&self) -> u64 {
+        self.map.version
+    }
+
+    fn replicate(&mut self) {
+        for m in &mut self.mirrors {
+            *m = self.map.clone();
+        }
+        self.oplog_len += 1;
+    }
+
+    /// Version-guarded chunk split requested by a shard that saw a chunk
+    /// exceed the split threshold. Idempotent under stale versions: a
+    /// stale requester gets `Stale` and refreshes.
+    pub fn split_chunk(
+        &mut self,
+        seen_version: u64,
+        chunk: usize,
+        at: u64,
+    ) -> Result<VersionCheck> {
+        if seen_version != self.map.version {
+            return Ok(VersionCheck::Stale { current: self.map.version });
+        }
+        self.map.split(chunk, at)?;
+        debug_assert!(self.map.validate().is_ok());
+        self.replicate();
+        Ok(VersionCheck::Ok)
+    }
+
+    /// Begin migrating `chunk` to `to`. Only one migration at a time
+    /// (MongoDB serializes per-collection migrations through the config
+    /// server — this serialization is one of the scaling costs the DES
+    /// models).
+    pub fn begin_migration(&mut self, chunk: usize, to: ShardId) -> Result<Migration> {
+        if self.migration.is_some() {
+            bail!("a migration is already in flight");
+        }
+        if chunk >= self.map.num_chunks() {
+            bail!("no chunk {chunk}");
+        }
+        if !self.shards.contains(&to) {
+            bail!("unknown destination {to}");
+        }
+        let from = self.map.owners[chunk];
+        if from == to {
+            bail!("chunk {chunk} already on {to}");
+        }
+        let m = Migration { chunk, from, to };
+        self.migration = Some(m.clone());
+        Ok(m)
+    }
+
+    /// Commit the in-flight migration: flips ownership, bumps version.
+    pub fn commit_migration(&mut self) -> Result<u64> {
+        let m = self
+            .migration
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("no migration in flight"))?;
+        self.map.move_chunk(m.chunk, m.to)?;
+        debug_assert!(self.map.validate().is_ok());
+        self.replicate();
+        Ok(self.map.version)
+    }
+
+    /// Abort the in-flight migration (destination failed).
+    pub fn abort_migration(&mut self) {
+        self.migration = None;
+    }
+
+    pub fn migration(&self) -> Option<&Migration> {
+        self.migration.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> ConfigState {
+        ConfigState::new(ShardKey::hashed(), 4, 2, 3)
+    }
+
+    #[test]
+    fn initial_state_is_pre_split() {
+        let s = state();
+        assert_eq!(s.shards().len(), 4);
+        assert_eq!(s.map().num_chunks(), 8);
+        assert_eq!(s.version(), 1);
+        assert_eq!(s.mirror(0).unwrap(), s.map());
+        assert_eq!(s.mirror(1).unwrap(), s.map());
+        assert!(s.mirror(2).is_none()); // replicas=3 → 2 mirrors
+    }
+
+    #[test]
+    fn split_bumps_version_and_replicates() {
+        let mut s = state();
+        let (lo, hi) = s.map().chunk_range(0);
+        let r = s.split_chunk(1, 0, lo + (hi - lo) / 2).unwrap();
+        assert_eq!(r, VersionCheck::Ok);
+        assert_eq!(s.version(), 2);
+        assert_eq!(s.map().num_chunks(), 9);
+        assert_eq!(s.mirror(0).unwrap().num_chunks(), 9);
+        assert_eq!(s.oplog_len, 1);
+    }
+
+    #[test]
+    fn stale_split_is_rejected_without_mutation() {
+        let mut s = state();
+        let (lo, hi) = s.map().chunk_range(0);
+        s.split_chunk(1, 0, lo + (hi - lo) / 2).unwrap();
+        // Second requester still thinks version is 1.
+        let r = s.split_chunk(1, 1, 0).unwrap();
+        assert_eq!(r, VersionCheck::Stale { current: 2 });
+        assert_eq!(s.map().num_chunks(), 9); // unchanged
+    }
+
+    #[test]
+    fn migration_lifecycle() {
+        let mut s = state();
+        let from = s.map().owners[0];
+        let to = ShardId((from.0 + 1) % 4);
+        let m = s.begin_migration(0, to).unwrap();
+        assert_eq!(m.from, from);
+        // Only one at a time.
+        assert!(s.begin_migration(1, to).is_err());
+        let v = s.commit_migration().unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(s.map().owners[0], to);
+        assert_eq!(s.mirror(1).unwrap().owners[0], to);
+        assert!(s.migration().is_none());
+    }
+
+    #[test]
+    fn migration_abort_releases_lock() {
+        let mut s = state();
+        let to = ShardId((s.map().owners[0].0 + 1) % 4);
+        s.begin_migration(0, to).unwrap();
+        s.abort_migration();
+        assert!(s.begin_migration(0, to).is_ok());
+    }
+
+    #[test]
+    fn migration_validations() {
+        let mut s = state();
+        let owner = s.map().owners[0];
+        assert!(s.begin_migration(0, owner).is_err()); // same shard
+        assert!(s.begin_migration(99, ShardId(1)).is_err()); // no chunk
+        assert!(s.begin_migration(0, ShardId(99)).is_err()); // no shard
+        assert!(s.commit_migration().is_err()); // nothing in flight
+    }
+}

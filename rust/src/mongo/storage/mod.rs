@@ -1,0 +1,12 @@
+//! Shard-local storage: a WiredTiger-like engine (record store + WAL +
+//! checkpoints) with ordered secondary indexes, writing through a
+//! pluggable [`io::StorageDir`] so shards can sit on the Lustre
+//! simulator (live mode) or a plain local directory (tests).
+
+pub mod engine;
+pub mod index;
+pub mod io;
+
+pub use engine::{CollectionStats, Engine, RecordId};
+pub use index::{encode_key, Index, IndexSpec};
+pub use io::{LocalDir, StorageDir, StorageFile};

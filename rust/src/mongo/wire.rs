@@ -1,0 +1,226 @@
+//! Wire protocol between cluster roles.
+//!
+//! Live mode transports messages over in-process channels (each server
+//! role is a thread with an event loop); the Gemini interconnect model
+//! accounts bytes/hops for every send so reports include the traffic a
+//! real deployment would put on the torus. Message *types* double as the
+//! RPC schema: every request carries a reply sender.
+
+use std::sync::mpsc;
+
+use crate::mongo::bson::Document;
+use crate::mongo::query::{Filter, FindOptions};
+use crate::mongo::sharding::chunk::ChunkMap;
+use crate::mongo::sharding::config_server::{Migration, VersionCheck};
+use crate::mongo::storage::index::IndexSpec;
+use crate::mongo::storage::CollectionStats;
+use crate::util::ids::ShardId;
+
+/// Reply channel for an RPC.
+pub type Reply<T> = mpsc::Sender<T>;
+
+/// Errors that cross the wire.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum WireError {
+    #[error("stale chunk map version (shard has {current})")]
+    StaleVersion { current: u64 },
+    #[error("unknown cursor {0}")]
+    UnknownCursor(u64),
+    #[error("server error: {0}")]
+    Server(String),
+}
+
+/// Result of an insert batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InsertReply {
+    pub inserted: usize,
+    /// Indices (into the request batch) the shard rejected because it
+    /// does not own their chunk — the router re-routes these after a map
+    /// refresh (`ordered=false` semantics: keep going, collect errors).
+    pub wrong_owner: Vec<usize>,
+}
+
+/// One find/getMore result batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FindReply {
+    pub docs: Vec<Document>,
+    /// Present while the cursor has more batches.
+    pub cursor: Option<u64>,
+}
+
+/// Shard statistics snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStatsReply {
+    pub collection: CollectionStats,
+    pub chunks_owned: u32,
+    pub map_version: u64,
+    pub journal_bytes: u64,
+}
+
+/// Requests handled by a shard server (`mongod`).
+pub enum ShardRequest {
+    /// Insert a routed sub-batch (`insertMany(ordered=false)` leg).
+    InsertBatch {
+        version: u64,
+        docs: Vec<Document>,
+        reply: Reply<Result<InsertReply, WireError>>,
+    },
+    /// Open a query; returns the first batch (+ cursor if more).
+    Find {
+        filter: Filter,
+        opts: FindOptions,
+        reply: Reply<Result<FindReply, WireError>>,
+    },
+    GetMore {
+        cursor: u64,
+        reply: Reply<Result<FindReply, WireError>>,
+    },
+    /// Count matching documents without returning them (the `count`
+    /// command; spares the wire the result set).
+    Count {
+        filter: Filter,
+        reply: Reply<Result<u64, WireError>>,
+    },
+    CreateIndex {
+        spec: IndexSpec,
+        reply: Reply<Result<(), WireError>>,
+    },
+    /// Config pushes a new chunk map after any metadata mutation.
+    SetMap { map: ChunkMap },
+    /// Migration source: copy (do not delete) documents of a chunk range.
+    ExtractChunk {
+        range: (u64, u64),
+        reply: Reply<Result<Vec<Document>, WireError>>,
+    },
+    /// Migration destination: install copied documents.
+    InstallChunk {
+        docs: Vec<Document>,
+        reply: Reply<Result<usize, WireError>>,
+    },
+    /// Migration source: delete documents of a committed-away range.
+    DeleteChunk {
+        range: (u64, u64),
+        reply: Reply<Result<usize, WireError>>,
+    },
+    Stats {
+        reply: Reply<ShardStatsReply>,
+    },
+    /// Checkpoint the storage engine (end-of-job persistence).
+    Checkpoint {
+        reply: Reply<Result<(), WireError>>,
+    },
+    Shutdown,
+}
+
+/// Requests handled by the config server.
+pub enum ConfigRequest {
+    GetMap {
+        reply: Reply<ChunkMap>,
+    },
+    /// A shard reports a chunk past the split threshold.
+    ReportSplit {
+        seen_version: u64,
+        chunk: usize,
+        at: u64,
+        reply: Reply<Result<VersionCheck, WireError>>,
+    },
+    /// Begin a chunk migration (balancer round; executed by the cluster
+    /// coordinator so the config thread never blocks on shard RPCs —
+    /// see `cluster::Cluster::run_balancer_round`).
+    BeginMigration {
+        chunk: usize,
+        to: ShardId,
+        reply: Reply<Result<Migration, WireError>>,
+    },
+    /// Commit the in-flight migration; returns the new map version.
+    CommitMigration {
+        reply: Reply<Result<u64, WireError>>,
+    },
+    /// Abort the in-flight migration.
+    AbortMigration,
+    Stats {
+        reply: Reply<ConfigStatsReply>,
+    },
+    Shutdown,
+}
+
+/// Config server statistics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigStatsReply {
+    pub version: u64,
+    pub chunks: usize,
+    pub oplog_len: u64,
+    pub migrations_done: u64,
+}
+
+/// Wire-size estimate of a document batch (bytes a real deployment would
+/// put on the interconnect).
+pub fn batch_wire_bytes(docs: &[Document]) -> u64 {
+    docs.iter().map(|d| d.encoded_len() as u64).sum::<u64>() + 16
+}
+
+/// Wire-size estimate of a find request.
+pub fn find_wire_bytes(filter: &Filter) -> u64 {
+    filter.encoded_len() as u64 + 32
+}
+
+/// Typed sender for a shard's mailbox.
+pub type ShardMailbox = mpsc::Sender<ShardRequest>;
+/// Typed sender for the config server's mailbox.
+pub type ConfigMailbox = mpsc::Sender<ConfigRequest>;
+
+/// Synchronous RPC helper: send and await the single reply.
+pub fn rpc<Req, T>(
+    mailbox: &mpsc::Sender<Req>,
+    build: impl FnOnce(Reply<T>) -> Req,
+) -> Result<T, WireError> {
+    let (tx, rx) = mpsc::channel();
+    mailbox
+        .send(build(tx))
+        .map_err(|_| WireError::Server("peer mailbox closed".into()))?;
+    rx.recv()
+        .map_err(|_| WireError::Server("peer dropped reply".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rpc_round_trip() {
+        enum Req {
+            Echo { v: u32, reply: Reply<u32> },
+        }
+        let (tx, rx) = mpsc::channel::<Req>();
+        let server = std::thread::spawn(move || {
+            while let Ok(Req::Echo { v, reply }) = rx.recv() {
+                let _ = reply.send(v * 2);
+                if v == 0 {
+                    break;
+                }
+            }
+        });
+        let got = rpc(&tx, |reply| Req::Echo { v: 21, reply }).unwrap();
+        assert_eq!(got, 42);
+        let _ = rpc(&tx, |reply| Req::Echo { v: 0, reply });
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn rpc_detects_dead_peer() {
+        let (tx, rx) = mpsc::channel::<ShardRequest>();
+        drop(rx);
+        let err = rpc(&tx, |reply| ShardRequest::GetMore { cursor: 0, reply }).unwrap_err();
+        assert!(matches!(err, WireError::Server(_)));
+    }
+
+    #[test]
+    fn wire_byte_estimates_scale_with_content() {
+        let d = Document::new().set("ts", 1i64).set("node_id", 2i64);
+        let small = batch_wire_bytes(&[d.clone()]);
+        let big = batch_wire_bytes(&vec![d; 100]);
+        assert!(big > small * 50);
+        let f = Filter::range("ts", 0i64, 10i64);
+        assert!(find_wire_bytes(&f) > 32);
+    }
+}

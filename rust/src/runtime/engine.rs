@@ -1,0 +1,107 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client.
+//!
+//! One [`Engine`] per process; it owns the `PjRtClient` and a cache of
+//! compiled executables keyed by artifact name. Loading compiles once;
+//! execution is lock-free after that (the `PjRtLoadedExecutable` is
+//! internally thread-safe for `execute`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO artifact, ready to execute.
+///
+/// NOTE: the underlying `PjRtClient` is `Rc`-based, so executables are
+/// **not** `Send`. Cross-thread access goes through
+/// [`crate::runtime::service::KernelService`], which owns the engine on a
+/// dedicated thread.
+#[derive(Clone)]
+pub struct Executable {
+    inner: Rc<xla::PjRtLoadedExecutable>,
+    name: String,
+}
+
+impl Executable {
+    /// Run the computation with the given input literals and return the
+    /// elements of the result tuple (artifacts are lowered with
+    /// `return_tuple=True`, so the output is always a tuple).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .inner
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact `{}`", self.name))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// PJRT engine: owns the CPU client and the executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Executable>>,
+    artifact_dir: PathBuf,
+}
+
+impl Engine {
+    /// Create an engine backed by the PJRT CPU client, loading artifacts
+    /// from `artifact_dir` (usually `artifacts/`).
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            artifact_dir: artifact_dir.into(),
+        })
+    }
+
+    /// Platform name reported by PJRT (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) the artifact `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let exe = self.compile_file(name, &path)?;
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile an HLO text file into an executable (no cache).
+    pub fn compile_file(&self, name: &str, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact `{name}`"))?;
+        Ok(Executable {
+            inner: Rc::new(exe),
+            name: name.to_string(),
+        })
+    }
+
+    /// True if the artifact file exists on disk.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+}

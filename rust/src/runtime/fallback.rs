@@ -1,0 +1,250 @@
+//! Pure-Rust reference implementations of the AOT kernels.
+//!
+//! Three jobs:
+//! 1. **Cross-check**: integration tests assert bit-equality between these
+//!    and the HLO path on random batches (`rust/tests/runtime_roundtrip.rs`).
+//! 2. **Baseline**: ablation bench A1 compares HLO routing vs this scalar
+//!    path.
+//! 3. **Fallback**: routers degrade to this when `artifacts/` is absent
+//!    (e.g. unit tests that don't want a PJRT dependency).
+//!
+//! Semantics are specified by `python/compile/kernels/ref.py`.
+
+use crate::util::hash::fnv1a_shard_key;
+
+/// Chunk index for `hash`: count of inclusive-upper-bound boundaries
+/// strictly below it (identical to `ref.chunk_of_hash`). `boundaries`
+/// is sorted; tail padded with `u32::MAX`.
+#[inline]
+pub fn chunk_of_hash(hash: u32, boundaries: &[u32]) -> usize {
+    // Binary search for the first boundary >= hash — equivalent to
+    // counting boundaries < hash, but O(log C) for the scalar path.
+    boundaries.partition_point(|&b| b < hash)
+}
+
+/// Scalar route: shard assignment + per-shard histogram + hashes.
+///
+/// Mirrors the `route_batch` artifact: given shard-key columns and the
+/// chunk table, returns `(shard_of, counts, hashes)`.
+pub fn route_batch(
+    node_id: &[u32],
+    ts_min: &[u32],
+    boundaries: &[u32],
+    chunk_to_shard: &[i32],
+    num_shards: usize,
+) -> (Vec<i32>, Vec<i32>, Vec<u32>) {
+    assert_eq!(node_id.len(), ts_min.len());
+    let mut shard_of = Vec::with_capacity(node_id.len());
+    let mut hashes = Vec::with_capacity(node_id.len());
+    let mut counts = vec![0i32; num_shards];
+    for (&n, &t) in node_id.iter().zip(ts_min) {
+        let h = fnv1a_shard_key(n, t);
+        let chunk = chunk_of_hash(h, boundaries);
+        let shard = chunk_to_shard[chunk];
+        shard_of.push(shard);
+        counts[shard as usize] += 1;
+        hashes.push(h);
+    }
+    (shard_of, counts, hashes)
+}
+
+/// Scalar filter: `(mask, count)` for the conditional-find predicate.
+pub fn filter_batch(
+    ts_min: &[u32],
+    node_id: &[u32],
+    ts_lo: u32,
+    ts_hi: u32,
+    node_bitmap: &[u32],
+) -> (Vec<i32>, i32) {
+    assert_eq!(ts_min.len(), node_id.len());
+    let mut mask = Vec::with_capacity(ts_min.len());
+    let mut count = 0;
+    for (&t, &n) in ts_min.iter().zip(node_id) {
+        let word = node_bitmap
+            .get((n >> 5) as usize)
+            .copied()
+            .unwrap_or(0);
+        let bit = (word >> (n & 31)) & 1;
+        let m = (ts_lo <= t && t < ts_hi && bit == 1) as i32;
+        count += m;
+        mask.push(m);
+    }
+    (mask, count)
+}
+
+/// Scalar stats: per-column `(min, max, mean)` over `[B, M]` row-major
+/// metrics.
+pub fn stats_batch(metrics: &[f32], b: usize, m: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(metrics.len(), b * m);
+    assert!(b > 0, "empty batch");
+    let mut mn = vec![f32::INFINITY; m];
+    let mut mx = vec![f32::NEG_INFINITY; m];
+    let mut sum = vec![0f32; m];
+    for row in 0..b {
+        for col in 0..m {
+            let v = metrics[row * m + col];
+            mn[col] = mn[col].min(v);
+            mx[col] = mx[col].max(v);
+            sum[col] += v;
+        }
+    }
+    let mean = sum.iter().map(|s| s / b as f32).collect();
+    (mn, mx, mean)
+}
+
+/// Build a node-membership bitmap sized for the `filter` artifact.
+pub fn build_bitmap(node_ids: impl IntoIterator<Item = u32>, words: usize) -> Vec<u32> {
+    let mut bm = vec![0u32; words];
+    for n in node_ids {
+        let w = (n >> 5) as usize;
+        assert!(w < words, "node id {n} exceeds bitmap capacity");
+        bm[w] |= 1 << (n & 31);
+    }
+    bm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, gens};
+    use crate::util::rng::Pcg32;
+
+    fn mk_boundaries(rng: &mut Pcg32, chunks: usize, cap: usize) -> Vec<u32> {
+        let mut cuts: Vec<u32> = (0..chunks - 1).map(|_| rng.next_u32()).collect();
+        cuts.sort_unstable();
+        cuts.dedup();
+        cuts.push(u32::MAX);
+        cuts.resize(cap, u32::MAX);
+        cuts
+    }
+
+    #[test]
+    fn chunk_of_hash_counts_below() {
+        let bounds = [10, 20, 30, u32::MAX];
+        assert_eq!(chunk_of_hash(0, &bounds), 0);
+        assert_eq!(chunk_of_hash(10, &bounds), 0); // inclusive upper bound
+        assert_eq!(chunk_of_hash(11, &bounds), 1);
+        assert_eq!(chunk_of_hash(30, &bounds), 2);
+        assert_eq!(chunk_of_hash(31, &bounds), 3);
+        assert_eq!(chunk_of_hash(u32::MAX, &bounds), 3);
+    }
+
+    #[test]
+    fn route_counts_sum_to_batch() {
+        let mut rng = Pcg32::seeded(3);
+        let bounds = mk_boundaries(&mut rng, 15, 64);
+        let c2s: Vec<i32> = (0..64).map(|i| (i % 15) as i32).collect();
+        let node: Vec<u32> = (0..500).map(|_| rng.next_u32()).collect();
+        let ts: Vec<u32> = (0..500).map(|_| rng.next_u32()).collect();
+        let (shard_of, counts, hashes) = route_batch(&node, &ts, &bounds, &c2s, 15);
+        assert_eq!(shard_of.len(), 500);
+        assert_eq!(hashes.len(), 500);
+        assert_eq!(counts.iter().sum::<i32>(), 500);
+        for (&s, (&n, &t)) in shard_of.iter().zip(node.iter().zip(&ts)) {
+            let h = fnv1a_shard_key(n, t);
+            assert_eq!(s, c2s[chunk_of_hash(h, &bounds)]);
+        }
+    }
+
+    #[test]
+    fn route_binary_search_equals_linear_count() {
+        // The O(log C) partition_point must agree with the O(C) count the
+        // kernel uses, including at boundary-equal hashes.
+        check(
+            "bsearch-eq-count",
+            &(|rng: &mut Pcg32| {
+                let chunks = 1 + rng.next_bounded(63) as usize;
+                let bounds = mk_boundaries(rng, chunks, 64);
+                // Bias toward boundary values half the time.
+                let h = if rng.next_bounded(2) == 0 {
+                    bounds[rng.next_bounded(64) as usize]
+                } else {
+                    rng.next_u32()
+                };
+                (h, bounds)
+            }),
+            |(h, bounds)| {
+                let linear = bounds.iter().filter(|&&b| b < *h).count();
+                let binary = chunk_of_hash(*h, bounds);
+                if linear == binary {
+                    Ok(())
+                } else {
+                    Err(format!("linear={linear} binary={binary}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn filter_half_open_and_bitmap() {
+        let bm = build_bitmap([7u32], 8);
+        let ts = [100, 100, 200, 150, 99];
+        let node = [7, 8, 7, 7, 7];
+        let (mask, count) = filter_batch(&ts, &node, 100, 200, &bm);
+        assert_eq!(mask, vec![1, 0, 0, 1, 0]);
+        assert_eq!(count, 2);
+    }
+
+    #[test]
+    fn filter_out_of_bitmap_node_is_excluded() {
+        let bm = build_bitmap([1u32], 1); // only 32 ids representable
+        let (mask, count) = filter_batch(&[5], &[4000], 0, 10, &bm);
+        assert_eq!(mask, vec![0]);
+        assert_eq!(count, 0);
+    }
+
+    #[test]
+    fn stats_basic() {
+        // 3 rows × 2 cols.
+        let m = [1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0];
+        let (mn, mx, mean) = stats_batch(&m, 3, 2);
+        assert_eq!(mn, vec![1.0, 10.0]);
+        assert_eq!(mx, vec![3.0, 30.0]);
+        assert_eq!(mean, vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn bitmap_round_trip() {
+        let ids = [0u32, 31, 32, 100, 1023];
+        let bm = build_bitmap(ids, 32);
+        for n in 0..1024u32 {
+            let want = ids.contains(&n);
+            let got = (bm[(n >> 5) as usize] >> (n & 31)) & 1 == 1;
+            assert_eq!(got, want, "node {n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds bitmap capacity")]
+    fn bitmap_rejects_oversized_id() {
+        build_bitmap([64u32], 2);
+    }
+
+    #[test]
+    fn property_route_histogram_consistent() {
+        check(
+            "route-histogram",
+            &gens::vec_of(
+                |rng: &mut Pcg32| (rng.next_u32(), rng.next_u32()),
+                200,
+            ),
+            |keys| {
+                let mut rng = Pcg32::seeded(7);
+                let bounds = mk_boundaries(&mut rng, 7, 32);
+                let c2s: Vec<i32> = (0..32).map(|i| (i % 7) as i32).collect();
+                let node: Vec<u32> = keys.iter().map(|k| k.0).collect();
+                let ts: Vec<u32> = keys.iter().map(|k| k.1).collect();
+                let (shard_of, counts, _) = route_batch(&node, &ts, &bounds, &c2s, 7);
+                let mut recount = vec![0i32; 7];
+                for &s in &shard_of {
+                    recount[s as usize] += 1;
+                }
+                if recount == counts {
+                    Ok(())
+                } else {
+                    Err(format!("{recount:?} != {counts:?}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Artifact manifest: shapes and file names written by `compile/aot.py`.
+//!
+//! The Rust side validates at startup that the artifacts on disk were
+//! lowered with the shapes this binary was built to feed them.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json;
+
+/// Fixed AOT shapes (must match `python/compile/model.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shapes {
+    pub route_b: usize,
+    pub route_c: usize,
+    pub route_s: usize,
+    pub filter_b: usize,
+    pub filter_w: usize,
+    pub stats_b: usize,
+    pub stats_m: usize,
+}
+
+/// The shapes compiled into this binary. `aot.py` writes the same values
+/// into `manifest.json`; [`Manifest::load`] cross-checks them.
+pub const BUILT_SHAPES: Shapes = Shapes {
+    route_b: 4096,
+    route_c: 512,
+    route_s: 64,
+    filter_b: 4096,
+    filter_w: 1024,
+    stats_b: 4096,
+    stats_m: 16,
+};
+
+/// Loaded manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub shapes: Shapes,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and verify it matches [`BUILT_SHAPES`].
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let v = json::from_file(&artifact_dir.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts`?)")?;
+        let s = v
+            .get("shapes")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing `shapes`"))?;
+        let shapes = Shapes {
+            route_b: s.require_u64("route_b")? as usize,
+            route_c: s.require_u64("route_c")? as usize,
+            route_s: s.require_u64("route_s")? as usize,
+            filter_b: s.require_u64("filter_b")? as usize,
+            filter_w: s.require_u64("filter_w")? as usize,
+            stats_b: s.require_u64("stats_b")? as usize,
+            stats_m: s.require_u64("stats_m")? as usize,
+        };
+        if shapes != BUILT_SHAPES {
+            anyhow::bail!(
+                "artifact shapes {shapes:?} do not match built-in {BUILT_SHAPES:?}; \
+                 re-run `make artifacts` after changing python/compile/model.py"
+            );
+        }
+        Ok(Self { shapes })
+    }
+
+    pub fn route_artifact(&self) -> String {
+        format!(
+            "route_b{}_c{}_s{}",
+            self.shapes.route_b, self.shapes.route_c, self.shapes.route_s
+        )
+    }
+
+    pub fn filter_artifact(&self) -> String {
+        format!("filter_b{}_w{}", self.shapes.filter_b, self.shapes.filter_w)
+    }
+
+    pub fn stats_artifact(&self) -> String {
+        format!("stats_b{}_m{}", self.shapes.stats_b, self.shapes.stats_m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_match_aot_convention() {
+        let m = Manifest { shapes: BUILT_SHAPES };
+        assert_eq!(m.route_artifact(), "route_b4096_c512_s64");
+        assert_eq!(m.filter_artifact(), "filter_b4096_w1024");
+        assert_eq!(m.stats_artifact(), "stats_b4096_m16");
+    }
+
+    #[test]
+    fn load_rejects_mismatched_shapes() {
+        let dir = std::env::temp_dir().join(format!("hpcstore-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"shapes": {"route_b": 8, "route_c": 512, "route_s": 64,
+                 "filter_b": 4096, "filter_w": 1024, "stats_b": 4096, "stats_m": 16}}"#,
+        )
+        .unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("do not match"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must load.
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert_eq!(m.shapes, BUILT_SHAPES);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Interchange format is HLO *text* (not serialized `HloModuleProto`):
+//! jax >= 0.5 emits protos with 64-bit instruction ids which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod engine;
+pub mod fallback;
+pub mod manifest;
+pub mod service;
+
+pub use service::{Backend, FilterOutput, Kernels, RouteOutput, StatsOutput};

@@ -1,0 +1,498 @@
+//! Kernel service: thread-safe access to the PJRT executables.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and not `Send`, so one
+//! dedicated thread owns the [`Engine`] and all compiled executables;
+//! routers and shards talk to it through a cloneable [`Kernels`] handle
+//! over an mpsc channel. With one host CPU this also serializes XLA
+//! execution realistically (one "accelerator" shared by the cluster).
+//!
+//! [`Kernels`] hides batching details: requests of any length are split
+//! into fixed-shape artifact batches, padded, executed, and the outputs
+//! truncated/corrected (histogram padding contributions are subtracted).
+//! When artifacts are absent the handle degrades to the pure-Rust
+//! fallback (`runtime::fallback`) with identical semantics.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::engine::Engine;
+use super::fallback;
+use super::manifest::{Manifest, Shapes, BUILT_SHAPES};
+use crate::metrics::Registry;
+use crate::util::hash::fnv1a_shard_key;
+
+/// Result of routing a key batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteOutput {
+    pub shard_of: Vec<i32>,
+    /// Per-shard document counts (length = requested `num_shards`).
+    pub counts: Vec<i32>,
+    pub hashes: Vec<u32>,
+}
+
+/// Result of a filter batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FilterOutput {
+    pub mask: Vec<i32>,
+    pub count: i32,
+}
+
+/// Result of a stats batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsOutput {
+    pub min: Vec<f32>,
+    pub max: Vec<f32>,
+    pub mean: Vec<f32>,
+}
+
+enum Request {
+    Route {
+        node: Vec<u32>,
+        ts: Vec<u32>,
+        boundaries: Vec<u32>,
+        chunk_to_shard: Vec<i32>,
+        reply: mpsc::Sender<Result<(Vec<i32>, Vec<i32>, Vec<u32>)>>,
+    },
+    Filter {
+        ts: Vec<u32>,
+        node: Vec<u32>,
+        ts_lo: u32,
+        ts_hi: u32,
+        bitmap: Vec<u32>,
+        reply: mpsc::Sender<Result<(Vec<i32>, i32)>>,
+    },
+    Stats {
+        metrics: Vec<f32>,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>, Vec<f32>)>>,
+    },
+    Shutdown,
+}
+
+/// Which execution path a [`Kernels`] handle uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO artifacts on the PJRT service thread.
+    Hlo,
+    /// Pure-Rust scalar fallback (no artifacts needed).
+    Fallback,
+}
+
+struct ServiceShared {
+    tx: mpsc::Sender<Request>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for ServiceShared {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Cloneable handle to the kernel execution layer.
+#[derive(Clone)]
+pub struct Kernels {
+    backend: Backend,
+    shapes: Shapes,
+    service: Option<Arc<ServiceShared>>,
+    metrics: Registry,
+}
+
+impl Kernels {
+    /// Load artifacts from `dir` and start the PJRT service thread.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir: PathBuf = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let shapes = manifest.shapes;
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-kernels".to_string())
+            .spawn(move || service_main(dir, manifest, rx, ready_tx))
+            .context("spawning kernel service thread")?;
+        ready_rx
+            .recv()
+            .context("kernel service thread died during startup")??;
+        Ok(Self {
+            backend: Backend::Hlo,
+            shapes,
+            service: Some(Arc::new(ServiceShared { tx, join: Some(join) })),
+            metrics: Registry::new(),
+        })
+    }
+
+    /// Pure-Rust fallback handle (no artifacts, no PJRT).
+    pub fn fallback() -> Self {
+        Self {
+            backend: Backend::Fallback,
+            shapes: BUILT_SHAPES,
+            service: None,
+            metrics: Registry::new(),
+        }
+    }
+
+    /// Load artifacts if present, else fall back (logged via metrics).
+    pub fn load_or_fallback(dir: impl Into<PathBuf>) -> Self {
+        let dir: PathBuf = dir.into();
+        match Self::load(&dir) {
+            Ok(k) => k,
+            Err(e) => {
+                log::warn!("kernel artifacts unavailable ({e:#}); using scalar fallback");
+                Self::fallback()
+            }
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn shapes(&self) -> Shapes {
+        self.shapes
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Route a key batch of any length to shards.
+    ///
+    /// `boundaries`/`chunk_to_shard` describe the real chunk table
+    /// (length ≤ `route_c`); `num_shards` bounds the histogram.
+    pub fn route(
+        &self,
+        node: &[u32],
+        ts: &[u32],
+        boundaries: &[u32],
+        chunk_to_shard: &[i32],
+        num_shards: usize,
+    ) -> Result<RouteOutput> {
+        anyhow::ensure!(node.len() == ts.len(), "key column length mismatch");
+        anyhow::ensure!(
+            boundaries.len() == chunk_to_shard.len(),
+            "chunk table column mismatch"
+        );
+        anyhow::ensure!(
+            boundaries.len() <= self.shapes.route_c,
+            "chunk table ({}) exceeds artifact capacity ({})",
+            boundaries.len(),
+            self.shapes.route_c
+        );
+        anyhow::ensure!(num_shards <= self.shapes.route_s, "too many shards");
+        self.metrics.counter("kernels.route.calls").inc();
+        self.metrics.counter("kernels.route.keys").add(node.len() as u64);
+
+        if self.backend == Backend::Fallback {
+            let (shard_of, counts, hashes) =
+                fallback::route_batch(node, ts, boundaries, chunk_to_shard, num_shards);
+            return Ok(RouteOutput { shard_of, counts, hashes });
+        }
+
+        // Pad the chunk table to artifact capacity.
+        let c = self.shapes.route_c;
+        let mut bounds = boundaries.to_vec();
+        bounds.resize(c, u32::MAX);
+        let mut c2s = chunk_to_shard.to_vec();
+        let last = *chunk_to_shard.last().unwrap_or(&0);
+        c2s.resize(c, last);
+
+        let b = self.shapes.route_b;
+        let mut shard_of = Vec::with_capacity(node.len());
+        let mut hashes = Vec::with_capacity(node.len());
+        let mut counts = vec![0i32; num_shards];
+        for start in (0..node.len()).step_by(b) {
+            let end = (start + b).min(node.len());
+            let n_real = end - start;
+            let mut nn = node[start..end].to_vec();
+            let mut tt = ts[start..end].to_vec();
+            // Pad with key (0, 0); its histogram contribution is
+            // subtracted below.
+            nn.resize(b, 0);
+            tt.resize(b, 0);
+            let (s, c_hist, h) = self.call_route(nn, tt, bounds.clone(), c2s.clone())?;
+            shard_of.extend_from_slice(&s[..n_real]);
+            hashes.extend_from_slice(&h[..n_real]);
+            let pad = (b - n_real) as i32;
+            if pad > 0 {
+                let pad_shard =
+                    chunk_to_shard[fallback::chunk_of_hash(fnv1a_shard_key(0, 0), boundaries)];
+                for (i, v) in c_hist.iter().enumerate().take(num_shards) {
+                    let adj = if i as i32 == pad_shard { v - pad } else { *v };
+                    counts[i] += adj;
+                }
+            } else {
+                for (i, v) in c_hist.iter().enumerate().take(num_shards) {
+                    counts[i] += v;
+                }
+            }
+        }
+        Ok(RouteOutput { shard_of, counts, hashes })
+    }
+
+    /// Evaluate the conditional-find predicate over columns of any length.
+    pub fn filter(
+        &self,
+        ts: &[u32],
+        node: &[u32],
+        ts_lo: u32,
+        ts_hi: u32,
+        bitmap: &[u32],
+    ) -> Result<FilterOutput> {
+        anyhow::ensure!(ts.len() == node.len(), "column length mismatch");
+        anyhow::ensure!(
+            bitmap.len() <= self.shapes.filter_w,
+            "bitmap ({}) exceeds artifact capacity ({})",
+            bitmap.len(),
+            self.shapes.filter_w
+        );
+        self.metrics.counter("kernels.filter.calls").inc();
+        self.metrics.counter("kernels.filter.docs").add(ts.len() as u64);
+
+        if self.backend == Backend::Fallback {
+            let (mask, count) = fallback::filter_batch(ts, node, ts_lo, ts_hi, bitmap);
+            return Ok(FilterOutput { mask, count });
+        }
+
+        let w = self.shapes.filter_w;
+        let mut bm = bitmap.to_vec();
+        bm.resize(w, 0);
+
+        let b = self.shapes.filter_b;
+        let mut mask = Vec::with_capacity(ts.len());
+        let mut count = 0i32;
+        for start in (0..ts.len()).step_by(b) {
+            let end = (start + b).min(ts.len());
+            let n_real = end - start;
+            let mut tt = ts[start..end].to_vec();
+            let mut nn = node[start..end].to_vec();
+            // Pad with node id 0; if node 0 is a member AND 0 is in the ts
+            // range the pad rows would match, so pad ts with u32::MAX
+            // which never satisfies ts < ts_hi (ts_hi <= u32::MAX).
+            tt.resize(b, u32::MAX);
+            nn.resize(b, 0);
+            let (m, c) = self.call_filter(tt, nn, ts_lo, ts_hi, bm.clone())?;
+            mask.extend_from_slice(&m[..n_real]);
+            count += c;
+        }
+        Ok(FilterOutput { mask, count })
+    }
+
+    /// Column statistics over a `[B, M]` row-major metric batch.
+    /// `b` may be any positive length; `m` must equal `stats_m`.
+    pub fn stats(&self, metrics: &[f32], b: usize, m: usize) -> Result<StatsOutput> {
+        anyhow::ensure!(b > 0, "empty batch");
+        anyhow::ensure!(metrics.len() == b * m, "metrics shape mismatch");
+        anyhow::ensure!(m == self.shapes.stats_m, "column count must be stats_m");
+        self.metrics.counter("kernels.stats.calls").inc();
+
+        if self.backend == Backend::Fallback {
+            let (min, max, mean) = fallback::stats_batch(metrics, b, m);
+            return Ok(StatsOutput { min, max, mean });
+        }
+
+        let sb = self.shapes.stats_b;
+        // Merge per-chunk results; mean needs a weighted combine.
+        let mut min = vec![f32::INFINITY; m];
+        let mut max = vec![f32::NEG_INFINITY; m];
+        let mut sum = vec![0f64; m];
+        for start in (0..b).step_by(sb) {
+            let end = (start + sb).min(b);
+            let n_real = end - start;
+            let mut chunk = metrics[start * m..end * m].to_vec();
+            // Pad by repeating the first row (affects neither min nor max;
+            // mean is re-weighted from the true row count below).
+            let first_row: Vec<f32> = chunk[..m].to_vec();
+            for _ in n_real..sb {
+                chunk.extend_from_slice(&first_row);
+            }
+            let (mn, mx, mean_padded) = self.call_stats(chunk)?;
+            let pad = (sb - n_real) as f64;
+            for col in 0..m {
+                min[col] = min[col].min(mn[col]);
+                max[col] = max[col].max(mx[col]);
+                // padded mean * sb = real sum + pad * first_row value
+                let total = mean_padded[col] as f64 * sb as f64;
+                sum[col] += total - pad * first_row[col] as f64;
+            }
+        }
+        let mean = sum.iter().map(|s| (*s / b as f64) as f32).collect();
+        Ok(StatsOutput { min, max, mean })
+    }
+
+    fn call_route(
+        &self,
+        node: Vec<u32>,
+        ts: Vec<u32>,
+        boundaries: Vec<u32>,
+        chunk_to_shard: Vec<i32>,
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<u32>)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Route { node, ts, boundaries, chunk_to_shard, reply })?;
+        rx.recv().context("kernel service dropped route reply")?
+    }
+
+    fn call_filter(
+        &self,
+        ts: Vec<u32>,
+        node: Vec<u32>,
+        ts_lo: u32,
+        ts_hi: u32,
+        bitmap: Vec<u32>,
+    ) -> Result<(Vec<i32>, i32)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Filter { ts, node, ts_lo, ts_hi, bitmap, reply })?;
+        rx.recv().context("kernel service dropped filter reply")?
+    }
+
+    fn call_stats(&self, metrics: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Stats { metrics, reply })?;
+        rx.recv().context("kernel service dropped stats reply")?
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.service
+            .as_ref()
+            .expect("HLO backend without service")
+            .tx
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("kernel service thread has exited"))
+    }
+}
+
+/// Service thread main: compile all artifacts, then serve requests.
+fn service_main(
+    dir: PathBuf,
+    manifest: Manifest,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<_> {
+        let engine = Engine::new(&dir)?;
+        let route = engine.load(&manifest.route_artifact())?;
+        let filter = engine.load(&manifest.filter_artifact())?;
+        let stats = engine.load(&manifest.stats_artifact())?;
+        Ok((engine, route, filter, stats))
+    })();
+    let (_engine, route_exe, filter_exe, stats_exe) = match setup {
+        Ok(t) => {
+            let _ = ready.send(Ok(()));
+            t
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Route { node, ts, boundaries, chunk_to_shard, reply } => {
+                let r = (|| -> Result<_> {
+                    let outs = route_exe.run(&[
+                        xla::Literal::vec1(&node),
+                        xla::Literal::vec1(&ts),
+                        xla::Literal::vec1(&boundaries),
+                        xla::Literal::vec1(&chunk_to_shard),
+                    ])?;
+                    anyhow::ensure!(outs.len() == 3, "route artifact returned {}", outs.len());
+                    Ok((
+                        outs[0].to_vec::<i32>()?,
+                        outs[1].to_vec::<i32>()?,
+                        outs[2].to_vec::<u32>()?,
+                    ))
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Filter { ts, node, ts_lo, ts_hi, bitmap, reply } => {
+                let r = (|| -> Result<_> {
+                    let outs = filter_exe.run(&[
+                        xla::Literal::vec1(&ts),
+                        xla::Literal::vec1(&node),
+                        xla::Literal::vec1(&[ts_lo]),
+                        xla::Literal::vec1(&[ts_hi]),
+                        xla::Literal::vec1(&bitmap),
+                    ])?;
+                    anyhow::ensure!(outs.len() == 2, "filter artifact returned {}", outs.len());
+                    let mask = outs[0].to_vec::<i32>()?;
+                    let count = outs[1].to_vec::<i32>()?;
+                    Ok((mask, count[0]))
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Stats { metrics, reply } => {
+                let r = (|| -> Result<_> {
+                    let b = metrics.len() / BUILT_SHAPES.stats_m;
+                    let lit = xla::Literal::vec1(&metrics)
+                        .reshape(&[b as i64, BUILT_SHAPES.stats_m as i64])?;
+                    let outs = stats_exe.run(&[lit])?;
+                    anyhow::ensure!(outs.len() == 3, "stats artifact returned {}", outs.len());
+                    Ok((
+                        outs[0].to_vec::<f32>()?,
+                        outs[1].to_vec::<f32>()?,
+                        outs[2].to_vec::<f32>()?,
+                    ))
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_handle_routes() {
+        let k = Kernels::fallback();
+        assert_eq!(k.backend(), Backend::Fallback);
+        let bounds = vec![u32::MAX];
+        let c2s = vec![0i32];
+        let out = k.route(&[1, 2, 3], &[4, 5, 6], &bounds, &c2s, 1).unwrap();
+        assert_eq!(out.shard_of, vec![0, 0, 0]);
+        assert_eq!(out.counts, vec![3]);
+        assert_eq!(out.hashes.len(), 3);
+        assert_eq!(k.metrics().counter("kernels.route.keys").get(), 3);
+    }
+
+    #[test]
+    fn fallback_handle_filters() {
+        let k = Kernels::fallback();
+        let bm = fallback::build_bitmap([2u32], 4);
+        let out = k.filter(&[10, 20, 30], &[2, 2, 3], 15, 25, &bm).unwrap();
+        assert_eq!(out.mask, vec![0, 1, 0]);
+        assert_eq!(out.count, 1);
+    }
+
+    #[test]
+    fn fallback_handle_stats() {
+        let k = Kernels::fallback();
+        let m = BUILT_SHAPES.stats_m;
+        let metrics: Vec<f32> = (0..2 * m).map(|i| i as f32).collect();
+        let out = k.stats(&metrics, 2, m).unwrap();
+        assert_eq!(out.min[0], 0.0);
+        assert_eq!(out.max[0], m as f32);
+        assert_eq!(out.mean[1], (1.0 + (m + 1) as f32) / 2.0);
+    }
+
+    #[test]
+    fn route_rejects_mismatched_columns() {
+        let k = Kernels::fallback();
+        assert!(k.route(&[1], &[1, 2], &[u32::MAX], &[0], 1).is_err());
+    }
+
+    #[test]
+    fn route_rejects_oversized_chunk_table() {
+        let k = Kernels::fallback();
+        let bounds = vec![u32::MAX; BUILT_SHAPES.route_c + 1];
+        let c2s = vec![0i32; BUILT_SHAPES.route_c + 1];
+        assert!(k.route(&[1], &[1], &bounds, &c2s, 1).is_err());
+    }
+}

@@ -1,0 +1,511 @@
+//! Cluster-scale simulation of the paper's ingest and query experiments.
+//!
+//! Structure mirrors the live cluster exactly: client PEs run a closed
+//! `insertMany` loop against their pinned router; routers partition
+//! batches across shards; shards pay storage-engine and journal-to-OST
+//! costs; chunk splits serialize through the config server, whose
+//! metadata work grows with chunk count *and* cluster size (map clone +
+//! push to every shard and router) — the metadata-churn term that, with
+//! the measured constants, leaves 32→128 near-linear and visibly binds
+//! at 256 nodes (the paper: "We are still investigating the limitations
+//! at 256 nodes").
+//!
+//! The fabric is a bisection-bandwidth model of the Gemini torus: an
+//! N-node allocation has bisection ∝ N^(2/3) links; uniformly-routed
+//! traffic charges half its bytes against it.
+
+use crate::config::{Topology, WorkloadConfig, TABLE1};
+use crate::metrics::Histogram;
+use crate::workload::ingest::slice_bounds;
+use crate::workload::jobs::{generate_jobs, UserJob};
+
+use super::cost::CostModel;
+use super::des::EventQueue;
+use super::resources::{FlowMeter, Pool, Resource};
+
+/// Simulation specification.
+#[derive(Clone, Debug)]
+pub struct SimSpec {
+    pub topology: Topology,
+    /// Monitored compute nodes emitting metrics (paper ~27k; sim-scaled).
+    pub monitored_nodes: u32,
+    /// Days of data (Table 1).
+    pub days: f64,
+    /// insertMany batch size per client PE.
+    pub batch: usize,
+    /// Chunk split threshold (docs per chunk).
+    pub max_chunk_docs: u64,
+    /// OST count backing the store's scratch directories.
+    pub osts: u32,
+    /// User jobs for the query phase.
+    pub query_jobs: u32,
+    pub cost: CostModel,
+    pub seed: u64,
+}
+
+impl SimSpec {
+    /// The paper's preset for an N-node job (Table 1 days), with the
+    /// corpus scaled from 27k to `monitored_nodes` monitored hosts.
+    pub fn paper_preset(nodes: u32, cost: CostModel) -> anyhow::Result<Self> {
+        let days = TABLE1
+            .iter()
+            .find(|(n, _)| *n == nodes)
+            .map(|(_, d)| *d)
+            .unwrap_or(3.0);
+        let topology = Topology::paper_preset(nodes)?;
+        // "each cluster size is servicing more concurrent queries":
+        // every client PE issues finds; two user jobs per PE.
+        let query_jobs = topology.client_pes() * 2;
+        Ok(Self {
+            topology,
+            monitored_nodes: 2_048,
+            days,
+            batch: 1_000,
+            // MongoDB's 64 MB chunk ≈ 45k of our ~1.4 KB documents.
+            max_chunk_docs: 45_000,
+            osts: 64,
+            query_jobs,
+            cost,
+            seed: 0x51712,
+        })
+    }
+
+    pub fn total_docs(&self) -> u64 {
+        (self.days * 1440.0).round() as u64 * self.monitored_nodes as u64
+    }
+}
+
+/// Simulation outcome.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub nodes: u32,
+    pub shards: u32,
+    pub routers: u32,
+    pub client_pes: u32,
+    // Ingest phase.
+    pub docs: u64,
+    pub ingest_virt_ns: u64,
+    pub docs_per_sec: f64,
+    pub splits: u64,
+    pub chunks: u64,
+    pub util_shard: f64,
+    pub util_router: f64,
+    pub util_ost: f64,
+    pub util_config: f64,
+    pub util_fabric: f64,
+    // Query phase.
+    pub queries: u64,
+    pub query_virt_ns: u64,
+    pub queries_per_sec: f64,
+    pub query_latency: Histogram,
+    pub events: u64,
+}
+
+impl SimReport {
+    pub fn ingest_row(&self) -> Vec<String> {
+        vec![
+            self.nodes.to_string(),
+            self.shards.to_string(),
+            self.client_pes.to_string(),
+            crate::util::fmt::human_count(self.docs),
+            format!("{:.1}", self.ingest_virt_ns as f64 / 1e9),
+            crate::util::fmt::human_count(self.docs_per_sec as u64),
+            format!("{:.0}%", self.util_shard * 100.0),
+            format!("{:.0}%", self.util_config * 100.0),
+            self.splits.to_string(),
+        ]
+    }
+
+    pub fn query_row(&self) -> Vec<String> {
+        use crate::util::fmt::human_duration_ns as d;
+        vec![
+            self.nodes.to_string(),
+            self.client_pes.to_string(),
+            self.queries.to_string(),
+            format!("{:.1}", self.queries_per_sec),
+            d(self.query_latency.p50()),
+            d(self.query_latency.p95()),
+            d(self.query_latency.p99()),
+        ]
+    }
+}
+
+/// Bisection bandwidth of an N-node 3D-torus allocation (bytes/s).
+fn bisection_bps(nodes: u32, link_bps: f64) -> f64 {
+    let a = (nodes as f64).powf(1.0 / 3.0);
+    4.0 * a * a * link_bps
+}
+
+/// The simulator.
+pub struct ClusterSim {
+    spec: SimSpec,
+}
+
+enum Ev {
+    /// Client PE starts its next insertMany batch.
+    PeBatch { pe: u32 },
+    /// Query worker issues its next find.
+    WorkerFind { worker: u32, job_idx: usize },
+}
+
+impl ClusterSim {
+    pub fn new(spec: SimSpec) -> Self {
+        Self { spec }
+    }
+
+    /// Run ingest then queries; returns the combined report.
+    pub fn run(&self) -> SimReport {
+        let spec = &self.spec;
+        let cost = &spec.cost;
+        let topo = &spec.topology;
+        let s_count = topo.shards as usize;
+        let r_count = topo.routers as usize;
+        let pes = topo.client_pes();
+        let o_count = spec.osts as usize;
+
+        let mut router_cpu = Pool::new("router", topo.routers, 1);
+        let mut shard_cpu = Pool::new("shard", topo.shards, 1);
+        let mut ost = Pool::new("ost", spec.osts, 1);
+        let mut config = Resource::new("config", 1);
+        // Map refreshes are reads served concurrently (and arrive out of
+        // event order in the analytic pipeline) — account them as offered
+        // load rather than FIFO-serializing them; only split *commits*
+        // serialize through the config Resource.
+        let mut config_reads = FlowMeter::new("config-reads");
+        let mut fabric = FlowMeter::new("fabric");
+        let bisection = bisection_bps(topo.total_nodes, cost.link_bandwidth_bps);
+        let fabric_ns = |bytes: f64| -> u64 { ((bytes / 2.0) / bisection * 1e9) as u64 };
+        let ost_ns = |bytes: f64| -> u64 {
+            (bytes / (cost.ost_bandwidth_mib_s * 1024.0 * 1024.0) * 1e9) as u64
+        };
+
+        // --- Ingest phase -------------------------------------------------
+        let total_docs = spec.total_docs();
+        let mut remaining: Vec<u64> = (0..pes as usize)
+            .map(|pe| {
+                let (lo, hi) = slice_bounds(total_docs, pes as usize, pe);
+                hi - lo
+            })
+            .collect();
+        // Per-shard chunk accounting (uniform hashed spread).
+        let mut shard_docs = vec![0u64; s_count];
+        let mut shard_chunks = vec![2u64; s_count]; // pre-split 2/shard
+        // Next split point per shard, with deterministic +/-10% jitter on
+        // each increment: real auto-split triggers de-synchronize across
+        // shards, while exactly-uniform hashing would fire every shard's
+        // split in the same instant (a thundering herd the real system
+        // does not exhibit at this severity).
+        let jitter = |s: usize, generation: u64| -> u64 {
+            let h = crate::util::hash::fnv1a_shard_key(s as u32, generation as u32);
+            (spec.max_chunk_docs as f64 * (0.9 + 0.2 * (h as f64 / u32::MAX as f64))) as u64
+        };
+        let mut next_split_at: Vec<u64> =
+            (0..s_count).map(|s| 2 * jitter(s, 0)).collect();
+        let mut splits = 0u64;
+        // Routers that must refresh + re-route their next batch because
+        // a split bumped the map version (the stale-version storm).
+        let mut stale_routers = vec![0u32; r_count];
+
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        for pe in 0..pes {
+            q.push(0, Ev::PeBatch { pe });
+        }
+        let mut docs_done = 0u64;
+        let mut ingest_end = 0u64;
+
+        while let Some((t, ev)) = q.pop() {
+            let Ev::PeBatch { pe } = ev else { unreachable!("ingest phase") };
+            let left = remaining[pe as usize];
+            if left == 0 {
+                continue;
+            }
+            let b = (spec.batch as u64).min(left) as usize;
+            remaining[pe as usize] -= b as u64;
+            docs_done += b as u64;
+
+            // Client PE synthesizes/parses the batch (serial on the PE).
+            let t_gen = t + (b as f64 * cost.gen_doc_ns) as u64;
+            // Client → router over the fabric.
+            let batch_bytes = b as f64 * cost.doc_bytes;
+            let t_net1 = fabric.serve(t_gen, fabric_ns(batch_bytes)) + cost.net_latency_ns as u64;
+            // Router partitions (route kernel + dispatch). A router that
+            // saw StaleVersion since its last batch first wastes one
+            // routing attempt, then refreshes the chunk map from the
+            // config server (fixed RPC + per-entry serialize + RTT).
+            let r = (pe as usize) % r_count;
+            let mut route_svc = (cost.route_batch_fixed_ns
+                + b as f64 * (cost.route_doc_ns + cost.dispatch_doc_ns))
+                as u64;
+            if stale_routers[r] > 0 {
+                stale_routers[r] = 0; // one refresh covers all pending bumps
+                let chunks_now: u64 = shard_chunks.iter().sum();
+                let refresh = config_reads.serve(
+                    t_net1,
+                    (cost.refresh_fixed_ns + chunks_now as f64 * cost.map_entry_ns) as u64,
+                ) - t_net1
+                    + 2 * cost.net_latency_ns as u64;
+                // Wasted work = re-partitioning the rejected sub-batch
+                // (what the live router actually does on StaleVersion).
+                let reroute = (cost.route_batch_fixed_ns
+                    + (b / s_count) as f64 * (cost.route_doc_ns + cost.dispatch_doc_ns))
+                    as u64;
+                route_svc += reroute + refresh;
+            }
+            let t_routed = router_cpu.serve(r, t_net1, route_svc);
+            // Router → shards; every shard gets ~b/S (hashed uniform).
+            let t_net2 = fabric.serve(t_routed, fabric_ns(batch_bytes)) + cost.net_latency_ns as u64;
+            let base = b / s_count;
+            let rem = b % s_count;
+            let mut t_done = t_net2;
+            for s in 0..s_count {
+                let b_s = base + usize::from(s < rem);
+                if b_s == 0 {
+                    continue;
+                }
+                let insert_svc = (b_s as f64 * cost.insert_doc_ns) as u64;
+                let t_ins = shard_cpu.serve(s, t_net2, insert_svc);
+                // Journal lands on the shard's OSTs.
+                let t_j = ost.serve(s % o_count, t_ins, ost_ns(b_s as f64 * cost.journal_bytes_per_doc));
+                let mut t_s = t_j;
+                // Chunk split when the shard's fullest chunk crosses the
+                // threshold (uniform spread over its chunks).
+                shard_docs[s] += b_s as u64;
+                if shard_docs[s] > next_split_at[s] {
+                    let total_chunks: u64 = shard_chunks.iter().sum();
+                    // Commit + push the new map to every shard (routers
+                    // pull lazily on their next stale batch).
+                    let split_svc = (cost.split_base_ns
+                        + s_count as f64
+                            * (cost.refresh_fixed_ns
+                                + total_chunks as f64 * cost.map_entry_ns))
+                        as u64;
+                    // The triggering batch stalls until the config server
+                    // commits the split (stale-version handshake).
+                    t_s = config.serve(t_j, split_svc);
+                    shard_chunks[s] += 1;
+                    next_split_at[s] += jitter(s, shard_chunks[s]);
+                    splits += 1;
+                    for v in stale_routers.iter_mut() {
+                        *v += 1;
+                    }
+                }
+                t_done = t_done.max(t_s);
+            }
+            // Ack back to the client; next batch.
+            let t_ack = t_done + cost.net_latency_ns as u64;
+            ingest_end = ingest_end.max(t_ack);
+            q.push(t_ack, Ev::PeBatch { pe });
+        }
+        debug_assert_eq!(docs_done, total_docs);
+        let ingest_events = q.processed();
+
+        let dbg_shard_wait = shard_cpu.resources.iter().map(|r| r.mean_wait_ns()).sum::<f64>()
+            / shard_cpu.len() as f64;
+        let dbg_router_wait = router_cpu.resources.iter().map(|r| r.mean_wait_ns()).sum::<f64>()
+            / router_cpu.len() as f64;
+        let dbg_config_wait = config.mean_wait_ns();
+        if std::env::var("SIM_DEBUG").is_ok() {
+            eprintln!(
+                "sim waits: shard {dbg_shard_wait:.0}ns router {dbg_router_wait:.0}ns config {dbg_config_wait:.0}ns fabric {:.0}ns gen_first {:.0}ns",
+                0.0, cost.gen_doc_ns * spec.batch as f64
+            );
+        }
+        let util_shard = shard_cpu.mean_utilization(ingest_end);
+        let util_router = router_cpu.mean_utilization(ingest_end);
+        let util_ost = ost.mean_utilization(ingest_end);
+        let util_config = config.utilization(ingest_end)
+            + config_reads.utilization(ingest_end);
+        let util_fabric = fabric.utilization(ingest_end);
+
+        // --- Query phase ---------------------------------------------------
+        // Fresh resources: the query experiment runs on the ingested
+        // store ("each cluster size is servicing more concurrent
+        // queries" — concurrency = client PEs).
+        let mut router_cpu = Pool::new("router", topo.routers, 1);
+        let mut shard_cpu = Pool::new("shard", topo.shards, 1);
+        let mut fabric = FlowMeter::new("fabric");
+        let wl = WorkloadConfig {
+            monitored_nodes: spec.monitored_nodes,
+            days: spec.days,
+            query_jobs: spec.query_jobs,
+            seed: spec.seed,
+            ..Default::default()
+        };
+        let jobs: Vec<UserJob> = generate_jobs(&wl);
+        let _minutes = wl.minutes();
+        let workers = pes;
+        let mut latency = Histogram::new();
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        for w in 0..workers {
+            if (w as usize) < jobs.len() {
+                q.push(0, Ev::WorkerFind { worker: w, job_idx: w as usize });
+            }
+        }
+        let mut queries = 0u64;
+        let mut query_end = 0u64;
+        while let Some((t, ev)) = q.pop() {
+            let Ev::WorkerFind { worker, job_idx } = ev else { unreachable!("query phase") };
+            let job = &jobs[job_idx];
+            // Router scatters the find.
+            let r = (worker as usize) % r_count;
+            let t_r = router_cpu.serve(r, t, cost.route_batch_fixed_ns as u64);
+            // Per-shard execution: the planner intersects the node_id
+            // point lookups with the ts-range index scan (index
+            // intersection, as the live shard does), so candidates are a
+            // small overscan of the matches; the ts-range leg costs one
+            // pass over the window's rids.
+            let matches_per_shard = job.expected_docs() as f64 / s_count as f64;
+            let window_rids_per_shard = (spec.monitored_nodes as f64
+                * job.duration_min as f64
+                / s_count as f64)
+                .ceil();
+            let candidates_per_shard = matches_per_shard * 1.25 + 64.0;
+            let mut t_done = t_r;
+            for s in 0..s_count {
+                let svc = (cost.find_fixed_ns
+                    + window_rids_per_shard * cost.index_candidate_ns // ts-index leg
+                    + candidates_per_shard * (cost.index_candidate_ns + cost.result_doc_ns)
+                    + candidates_per_shard * cost.route_doc_ns) // kernel mask
+                    as u64;
+                let t_s = shard_cpu.serve(s, t_r + cost.net_latency_ns as u64, svc);
+                // Results stream back over the fabric.
+                let t_net =
+                    fabric.serve(t_s, fabric_ns(matches_per_shard * cost.doc_bytes));
+                t_done = t_done.max(t_net + cost.net_latency_ns as u64);
+            }
+            // Router merge.
+            let merge_svc =
+                (job.expected_docs() as f64 * cost.merge_doc_ns) as u64;
+            let t_m = router_cpu.serve(r, t_done, merge_svc);
+            latency.record(t_m - t);
+            queries += 1;
+            query_end = query_end.max(t_m);
+            let next = job_idx + workers as usize;
+            if next < jobs.len() {
+                q.push(t_m, Ev::WorkerFind { worker, job_idx: next });
+            }
+        }
+
+        SimReport {
+            nodes: topo.total_nodes,
+            shards: topo.shards,
+            routers: topo.routers,
+            client_pes: pes,
+            docs: total_docs,
+            ingest_virt_ns: ingest_end,
+            docs_per_sec: total_docs as f64 * 1e9 / ingest_end.max(1) as f64,
+            splits,
+            chunks: shard_chunks.iter().sum(),
+            util_shard,
+            util_router,
+            util_ost,
+            util_config,
+            util_fabric,
+            queries,
+            query_virt_ns: query_end,
+            queries_per_sec: queries as f64 * 1e9 / query_end.max(1) as f64,
+            query_latency: latency,
+            events: ingest_events + q.processed(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec(nodes: u32) -> SimSpec {
+        let mut s = SimSpec::paper_preset(nodes, CostModel::default()).unwrap();
+        // Compress the corpus 8x for test speed; the config-churn /
+        // shard-work ratio scales as docs/K², so K compresses by √8 to
+        // preserve the full-scale behaviour.
+        s.monitored_nodes = 256;
+        s.max_chunk_docs = 16_000;
+        s
+    }
+
+    #[test]
+    fn ingest_completes_all_docs() {
+        let spec = small_spec(32);
+        let total = spec.total_docs();
+        let r = ClusterSim::new(spec).run();
+        assert_eq!(r.docs, total);
+        assert!(r.ingest_virt_ns > 0);
+        assert!(r.docs_per_sec > 0.0);
+        assert!(r.queries > 0);
+        assert!(r.query_latency.count() == r.queries);
+    }
+
+    #[test]
+    fn shards_are_the_busy_resource_at_small_scale() {
+        let r = ClusterSim::new(small_spec(32)).run();
+        assert!(
+            r.util_shard > r.util_router && r.util_shard > r.util_fabric,
+            "shard {:.2} router {:.2} fabric {:.2}",
+            r.util_shard,
+            r.util_router,
+            r.util_fabric
+        );
+        assert!(r.util_shard > 0.5, "closed loop should keep shards busy");
+    }
+
+    #[test]
+    fn scaling_is_near_linear_32_to_128() {
+        let r32 = ClusterSim::new(small_spec(32)).run();
+        let r64 = ClusterSim::new(small_spec(64)).run();
+        let r128 = ClusterSim::new(small_spec(128)).run();
+        let s64 = r64.docs_per_sec / r32.docs_per_sec;
+        let s128 = r128.docs_per_sec / r32.docs_per_sec;
+        // Shard count ratios are 15/7 ≈ 2.14 and 31/7 ≈ 4.43.
+        assert!(s64 > 1.7 && s64 < 2.5, "64-node speedup {s64}");
+        assert!(s128 > 3.3 && s128 < 5.0, "128-node speedup {s128}");
+    }
+
+    #[test]
+    fn config_pressure_grows_at_256() {
+        let r128 = ClusterSim::new(small_spec(128)).run();
+        let r256 = ClusterSim::new(small_spec(256)).run();
+        assert!(
+            r256.util_config > r128.util_config,
+            "config util should grow: {} vs {}",
+            r256.util_config,
+            r128.util_config
+        );
+        // Efficiency per shard drops at 256.
+        let eff128 = r128.docs_per_sec / r128.shards as f64;
+        let eff256 = r256.docs_per_sec / r256.shards as f64;
+        assert!(
+            eff256 < eff128,
+            "per-shard efficiency should drop: {eff256} vs {eff128}"
+        );
+    }
+
+    #[test]
+    fn query_latency_roughly_flat_across_sizes() {
+        let r32 = ClusterSim::new(small_spec(32)).run();
+        let r128 = ClusterSim::new(small_spec(128)).run();
+        let p50_32 = r32.query_latency.p50() as f64;
+        let p50_128 = r128.query_latency.p50() as f64;
+        // "cluster size maintains a similar query performance" — within
+        // a small factor despite 4x concurrency.
+        let ratio = p50_128 / p50_32.max(1.0);
+        assert!(ratio < 3.0 && ratio > 0.2, "latency ratio {ratio}");
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = ClusterSim::new(small_spec(32)).run();
+        let b = ClusterSim::new(small_spec(32)).run();
+        assert_eq!(a.ingest_virt_ns, b.ingest_virt_ns);
+        assert_eq!(a.splits, b.splits);
+        assert_eq!(a.query_latency.p99(), b.query_latency.p99());
+    }
+
+    #[test]
+    fn bisection_scales_sublinearly() {
+        let b32 = bisection_bps(32, 1.0);
+        let b256 = bisection_bps(256, 1.0);
+        let ratio = b256 / b32;
+        assert!(ratio > 3.9 && ratio < 4.1, "2^(2/3 of 3 doublings)=4, got {ratio}");
+    }
+}

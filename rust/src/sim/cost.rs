@@ -1,0 +1,342 @@
+//! DES cost model, calibrated from the live implementation.
+//!
+//! Every service time the cluster simulation charges comes from here.
+//! [`CostModel::calibrate`] measures the real storage engine, route
+//! kernel, index scans, document codec, and chunk-map operations on this
+//! machine and writes `artifacts/costmodel.json`; [`CostModel::default`]
+//! carries the values measured on the reference box so the sim runs
+//! without calibration.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::json::{self, Value};
+use crate::runtime::Kernels;
+
+/// Nanosecond costs of the primitive operations (per unit noted).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    /// Synthesize one OVIS document (client CPU).
+    pub gen_doc_ns: f64,
+    /// Encoded document size (bytes).
+    pub doc_bytes: f64,
+    /// Route-kernel invocation overhead per batch (router CPU).
+    pub route_batch_fixed_ns: f64,
+    /// Routing cost per document (router CPU).
+    pub route_doc_ns: f64,
+    /// Sub-batch assembly / dispatch per document (router CPU).
+    pub dispatch_doc_ns: f64,
+    /// Storage-engine insert incl. journal append + 2 index updates
+    /// (shard CPU), per document.
+    pub insert_doc_ns: f64,
+    /// Journal bytes per document (OST traffic).
+    pub journal_bytes_per_doc: f64,
+    /// Fixed per-shard cost of opening a find (planner, cursor).
+    pub find_fixed_ns: f64,
+    /// Index-scan cost per candidate record id.
+    pub index_candidate_ns: f64,
+    /// Fetch + filter + serialize per result document (shard CPU).
+    pub result_doc_ns: f64,
+    /// Router-side merge per result document.
+    pub merge_doc_ns: f64,
+    /// Config-server fixed cost of committing a chunk split.
+    pub split_base_ns: f64,
+    /// Config-server cost per chunk-map *entry* per member refresh
+    /// (serialize + copy; the per-entry part of metadata churn).
+    pub map_entry_ns: f64,
+    /// Fixed cost of one chunk-map refresh RPC served by the config
+    /// server (request handling; network latency added separately).
+    pub refresh_fixed_ns: f64,
+    /// Per-OST streaming bandwidth (MiB/s).
+    pub ost_bandwidth_mib_s: f64,
+    /// Torus per-link bandwidth (bytes/s) for the bisection model.
+    pub link_bandwidth_bps: f64,
+    /// Message latency floor (ns).
+    pub net_latency_ns: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Measured on the reference box (1-CPU container, see
+        // EXPERIMENTS.md §Calibration); override with `hpcstore
+        // calibrate`.
+        Self {
+            gen_doc_ns: 4_000.0,
+            doc_bytes: 1_400.0,
+            route_batch_fixed_ns: 120_000.0,
+            route_doc_ns: 25.0,
+            dispatch_doc_ns: 120.0,
+            insert_doc_ns: 6_000.0,
+            journal_bytes_per_doc: 1_450.0,
+            find_fixed_ns: 40_000.0,
+            index_candidate_ns: 90.0,
+            result_doc_ns: 1_500.0,
+            merge_doc_ns: 120.0,
+            split_base_ns: 80_000.0,
+            map_entry_ns: 2.0,
+            refresh_fixed_ns: 60_000.0,
+            ost_bandwidth_mib_s: 500.0,
+            link_bandwidth_bps: 3.0e9,
+            net_latency_ns: 1_500.0,
+        }
+    }
+}
+
+impl CostModel {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        v.set("gen_doc_ns", self.gen_doc_ns)
+            .set("doc_bytes", self.doc_bytes)
+            .set("route_batch_fixed_ns", self.route_batch_fixed_ns)
+            .set("route_doc_ns", self.route_doc_ns)
+            .set("dispatch_doc_ns", self.dispatch_doc_ns)
+            .set("insert_doc_ns", self.insert_doc_ns)
+            .set("journal_bytes_per_doc", self.journal_bytes_per_doc)
+            .set("find_fixed_ns", self.find_fixed_ns)
+            .set("index_candidate_ns", self.index_candidate_ns)
+            .set("result_doc_ns", self.result_doc_ns)
+            .set("merge_doc_ns", self.merge_doc_ns)
+            .set("split_base_ns", self.split_base_ns)
+            .set("map_entry_ns", self.map_entry_ns)
+            .set("refresh_fixed_ns", self.refresh_fixed_ns)
+            .set("ost_bandwidth_mib_s", self.ost_bandwidth_mib_s)
+            .set("link_bandwidth_bps", self.link_bandwidth_bps)
+            .set("net_latency_ns", self.net_latency_ns);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Self::default();
+        let f = |k: &str, dflt: f64| v.get(k).and_then(Value::as_f64).unwrap_or(dflt);
+        Ok(Self {
+            gen_doc_ns: f("gen_doc_ns", d.gen_doc_ns),
+            doc_bytes: f("doc_bytes", d.doc_bytes),
+            route_batch_fixed_ns: f("route_batch_fixed_ns", d.route_batch_fixed_ns),
+            route_doc_ns: f("route_doc_ns", d.route_doc_ns),
+            dispatch_doc_ns: f("dispatch_doc_ns", d.dispatch_doc_ns),
+            insert_doc_ns: f("insert_doc_ns", d.insert_doc_ns),
+            journal_bytes_per_doc: f("journal_bytes_per_doc", d.journal_bytes_per_doc),
+            find_fixed_ns: f("find_fixed_ns", d.find_fixed_ns),
+            index_candidate_ns: f("index_candidate_ns", d.index_candidate_ns),
+            result_doc_ns: f("result_doc_ns", d.result_doc_ns),
+            merge_doc_ns: f("merge_doc_ns", d.merge_doc_ns),
+            split_base_ns: f("split_base_ns", d.split_base_ns),
+            map_entry_ns: f("map_entry_ns", d.map_entry_ns),
+            refresh_fixed_ns: f("refresh_fixed_ns", d.refresh_fixed_ns),
+            ost_bandwidth_mib_s: f("ost_bandwidth_mib_s", d.ost_bandwidth_mib_s),
+            link_bandwidth_bps: f("link_bandwidth_bps", d.link_bandwidth_bps),
+            net_latency_ns: f("net_latency_ns", d.net_latency_ns),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        json::to_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&json::from_file(path)?)
+    }
+
+    /// Load `artifacts/costmodel.json` if present, else defaults.
+    pub fn load_or_default(artifact_dir: &std::path::Path) -> Self {
+        let p = artifact_dir.join("costmodel.json");
+        if p.exists() {
+            Self::load(&p).unwrap_or_default()
+        } else {
+            Self::default()
+        }
+    }
+
+    /// TCP-class floor for one metadata RPC (connection handling, BSON
+    /// codec, kernel network stack) — what the in-process mpsc transport
+    /// substitution removed relative to the paper's real deployment
+    /// ("MongoDB is natively deployed on a TCP/IP network").
+    pub const TCP_RPC_FLOOR_NS: f64 = 60_000.0;
+
+    /// Restore network-stack costs for cluster-scale simulation: the
+    /// live calibration measures our in-process transport (µs-class
+    /// metadata RPCs); a Gemini/TCP deployment pays tens of µs per RPC.
+    /// Applied by the Figure-2/3 harnesses; the raw measured values are
+    /// reported in the sensitivity ablation.
+    pub fn with_network_floor(mut self) -> Self {
+        self.refresh_fixed_ns = self.refresh_fixed_ns.max(Self::TCP_RPC_FLOOR_NS);
+        self.split_base_ns = self.split_base_ns.max(Self::TCP_RPC_FLOOR_NS);
+        self
+    }
+
+    /// Measure the live implementation. `kernels` decides whether the
+    /// routing costs reflect the HLO or the scalar fallback path.
+    pub fn calibrate(kernels: &Kernels, quick: bool) -> Result<Self> {
+        use crate::config::WorkloadConfig;
+        use crate::mongo::storage::index::IndexSpec;
+        use crate::mongo::storage::{Engine, LocalDir};
+        use crate::workload::ovis::OvisGenerator;
+
+        let mut cm = Self::default();
+        let n_docs: usize = if quick { 1_000 } else { 8_000 };
+
+        // --- Client: doc synthesis + size.
+        let gen = OvisGenerator::new(WorkloadConfig {
+            monitored_nodes: 64,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        let mut bytes = 0usize;
+        for i in 0..n_docs as u64 {
+            bytes += gen.doc_at(i).encoded_len();
+        }
+        cm.gen_doc_ns = t.elapsed().as_nanos() as f64 / n_docs as f64;
+        cm.doc_bytes = bytes as f64 / n_docs as f64;
+        cm.journal_bytes_per_doc = cm.doc_bytes + 40.0;
+
+        // --- Shard: engine insert with journal + both indexes.
+        let dir = LocalDir::temp("calib")?;
+        let mut eng = Engine::open(Box::new(dir), true, false)?;
+        eng.create_collection("m");
+        eng.create_index("m", IndexSpec::single("ts"))?;
+        eng.create_index("m", IndexSpec::single("node_id"))?;
+        let docs: Vec<_> = (0..n_docs as u64).map(|i| gen.doc_at(i)).collect();
+        let t = Instant::now();
+        for (i, d) in docs.iter().enumerate() {
+            eng.insert("m", d)?;
+            if i % 1000 == 999 {
+                eng.sync()?;
+            }
+        }
+        eng.sync()?;
+        cm.insert_doc_ns = t.elapsed().as_nanos() as f64 / n_docs as f64;
+
+        // --- Router: route kernel fixed + per-doc via two batch sizes.
+        let shapes = kernels.shapes();
+        let bounds: Vec<u32> = (1..=64u32)
+            .map(|i| ((u32::MAX as u64 + 1) / 64 * i as u64 - 1) as u32)
+            .collect();
+        let c2s: Vec<i32> = (0..64).map(|i| i % 7).collect();
+        let big = shapes.route_b;
+        let small = shapes.route_b / 8;
+        let time_route = |n: usize, reps: usize| -> Result<f64> {
+            let node: Vec<u32> = (0..n as u32).collect();
+            let ts: Vec<u32> = (0..n as u32).map(|i| i * 7).collect();
+            let t = Instant::now();
+            for _ in 0..reps {
+                kernels.route(&node, &ts, &bounds, &c2s, 7)?;
+            }
+            Ok(t.elapsed().as_nanos() as f64 / reps as f64)
+        };
+        let reps = if quick { 3 } else { 10 };
+        let t_big = time_route(big, reps)?;
+        let t_small = time_route(small, reps)?;
+        cm.route_doc_ns = ((t_big - t_small) / (big - small) as f64).max(1.0);
+        cm.route_batch_fixed_ns = (t_small - small as f64 * cm.route_doc_ns).max(0.0);
+
+        // Dispatch per doc: move+push into per-shard vectors (the router
+        // moves documents, it never clones them).
+        let moved: Vec<crate::mongo::bson::Document> = docs.clone();
+        let t = Instant::now();
+        let mut sink: Vec<Vec<crate::mongo::bson::Document>> =
+            (0..7).map(|_| Vec::new()).collect();
+        for (i, d) in moved.into_iter().enumerate() {
+            sink[i % 7].push(d);
+        }
+        cm.dispatch_doc_ns = t.elapsed().as_nanos() as f64 / n_docs as f64;
+        drop(sink);
+
+        // --- Query path: index scan + fetch/serialize.
+        let idx = eng.index("m", "ts_1").expect("calibration index");
+        let t = Instant::now();
+        let mut candidates = 0usize;
+        let reps = if quick { 20 } else { 100 };
+        for i in 0..reps {
+            let lo = crate::mongo::bson::Value::Int(
+                gen.config().start_epoch_min as i64 + i as i64,
+            );
+            let hi = crate::mongo::bson::Value::Int(
+                gen.config().start_epoch_min as i64 + i as i64 + 4,
+            );
+            candidates += idx.range_superset(Some(&lo), Some(&hi)).len();
+        }
+        cm.index_candidate_ns =
+            (t.elapsed().as_nanos() as f64 / candidates.max(1) as f64).max(10.0);
+
+        let t = Instant::now();
+        let mut fetched = 0;
+        for rid in 0..(n_docs as u64).min(2000) {
+            if eng.fetch("m", rid).is_some() {
+                fetched += 1;
+            }
+        }
+        cm.result_doc_ns = t.elapsed().as_nanos() as f64 / fetched.max(1) as f64;
+
+        // --- Config: split + map clone per entry.
+        use crate::mongo::sharding::chunk::{ChunkMap, ShardKey};
+        let mut map = ChunkMap::pre_split(ShardKey::hashed(), 7, 2);
+        for _ in 0..200 {
+            let (lo, hi) = map.chunk_range(0);
+            if hi - lo < 2 {
+                break;
+            }
+            map.split(0, lo + (hi - lo) / 2).unwrap();
+        }
+        let t = Instant::now();
+        let clones = if quick { 200 } else { 1000 };
+        for _ in 0..clones {
+            std::hint::black_box(map.clone());
+        }
+        cm.map_entry_ns =
+            t.elapsed().as_nanos() as f64 / (clones as f64 * map.num_chunks() as f64);
+
+        // Refresh RPC: a live GetMap through the wire layer (mpsc RPC +
+        // map clone). A TCP deployment pays network latency on top; the
+        // sim adds `net_latency_ns` per member separately.
+        {
+            use crate::mongo::server::config::ConfigServer;
+            use crate::mongo::sharding::chunk::ShardKey as SK;
+            use crate::mongo::wire::{rpc, ConfigRequest};
+            let cfg = ConfigServer::new(SK::hashed(), 7, 30, 3, crate::metrics::Registry::new());
+            let (tx, join) = cfg.spawn();
+            let reps = if quick { 200 } else { 2000 };
+            let t = Instant::now();
+            for _ in 0..reps {
+                let m = rpc(&tx, |reply| ConfigRequest::GetMap { reply }).unwrap();
+                std::hint::black_box(m.num_chunks());
+            }
+            cm.refresh_fixed_ns = t.elapsed().as_nanos() as f64 / reps as f64;
+            let _ = tx.send(ConfigRequest::Shutdown);
+            let _ = join.join();
+        }
+
+        Ok(cm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip() {
+        let cm = CostModel::default();
+        let back = CostModel::from_json(&cm.to_json()).unwrap();
+        assert_eq!(cm, back);
+    }
+
+    #[test]
+    fn load_or_default_without_file() {
+        let cm = CostModel::load_or_default(std::path::Path::new("/nonexistent"));
+        assert_eq!(cm, CostModel::default());
+    }
+
+    #[test]
+    fn quick_calibration_produces_sane_values() {
+        let kernels = Kernels::fallback();
+        let cm = CostModel::calibrate(&kernels, true).unwrap();
+        assert!(cm.gen_doc_ns > 100.0 && cm.gen_doc_ns < 1e6, "gen {}", cm.gen_doc_ns);
+        assert!(cm.doc_bytes > 500.0 && cm.doc_bytes < 5000.0, "bytes {}", cm.doc_bytes);
+        assert!(cm.insert_doc_ns > 200.0 && cm.insert_doc_ns < 1e7, "ins {}", cm.insert_doc_ns);
+        assert!(cm.route_doc_ns >= 1.0 && cm.route_doc_ns < 1e5);
+        assert!(cm.index_candidate_ns >= 10.0);
+        assert!(cm.result_doc_ns > 50.0);
+        assert!(cm.map_entry_ns > 0.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Mini property-testing kit (proptest is not in the vendored set).
+//!
+//! A [`Gen`] produces random values from a [`Pcg32`]; [`check`] runs a
+//! property over many generated cases with a deterministic seed sequence
+//! and reports the first failing case (seed + debug value) so failures
+//! reproduce exactly. Shrinking is intentionally simple: numeric
+//! generators retry the property on smaller bisections of the failing
+//! value where the caller opts in via [`check_shrink`].
+
+use crate::util::rng::Pcg32;
+
+/// Number of cases per property unless overridden.
+pub const DEFAULT_CASES: u32 = 128;
+
+/// A generator of random values.
+pub trait Gen {
+    type Output;
+    fn generate(&self, rng: &mut Pcg32) -> Self::Output;
+}
+
+impl<T, F: Fn(&mut Pcg32) -> T> Gen for F {
+    type Output = T;
+    fn generate(&self, rng: &mut Pcg32) -> T {
+        self(rng)
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panic with the reproducing
+/// seed on the first failure.
+pub fn check_with<G: Gen>(
+    name: &str,
+    seed: u64,
+    cases: u32,
+    gen: &G,
+    prop: impl Fn(&G::Output) -> Result<(), String>,
+) where
+    G::Output: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64);
+        let mut rng = Pcg32::seeded(case_seed);
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property `{name}` failed (case {case}, seed {case_seed}):\n  \
+                 input: {value:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// [`check_with`] with default seed/case count.
+pub fn check<G: Gen>(name: &str, gen: &G, prop: impl Fn(&G::Output) -> Result<(), String>)
+where
+    G::Output: std::fmt::Debug,
+{
+    check_with(name, 0xC0FFEE, DEFAULT_CASES, gen, prop);
+}
+
+/// Property over a `u64` size parameter with bisection shrinking: on
+/// failure at `n`, retries at n/2, n/4, ... and reports the smallest
+/// failing size.
+pub fn check_shrink(
+    name: &str,
+    max: u64,
+    cases: u32,
+    prop: impl Fn(u64) -> Result<(), String>,
+) {
+    let mut rng = Pcg32::seeded(0x5EED);
+    for case in 0..cases {
+        let n = rng.next_u64() % (max + 1);
+        if let Err(first) = prop(n) {
+            // Shrink by bisection toward 0.
+            let mut smallest = (n, first);
+            let mut candidate = n / 2;
+            while candidate < smallest.0 {
+                match prop(candidate) {
+                    Err(msg) => {
+                        smallest = (candidate, msg);
+                        candidate /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}); smallest failing n={}: {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Convenience generators.
+pub mod gens {
+    use super::*;
+
+    /// Uniform u32 in [lo, hi).
+    pub fn u32_range(lo: u32, hi: u32) -> impl Gen<Output = u32> {
+        move |rng: &mut Pcg32| rng.range_u32(lo, hi)
+    }
+
+    /// Vector of length in [0, max_len] with elements from `elem`.
+    pub fn vec_of<G: Gen>(elem: G, max_len: usize) -> impl Gen<Output = Vec<G::Output>> {
+        move |rng: &mut Pcg32| {
+            let len = rng.next_bounded(max_len as u32 + 1) as usize;
+            (0..len).map(|_| elem.generate(rng)).collect()
+        }
+    }
+
+    /// ASCII identifier-ish string.
+    pub fn ident(max_len: usize) -> impl Gen<Output = String> {
+        move |rng: &mut Pcg32| {
+            let len = 1 + rng.next_bounded(max_len.max(1) as u32) as usize;
+            (0..len)
+                .map(|_| {
+                    let c = rng.next_bounded(36);
+                    if c < 26 {
+                        (b'a' + c as u8) as char
+                    } else {
+                        (b'0' + (c - 26) as u8) as char
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", &gens::u32_range(0, 1000), |&n| {
+            if n as u64 + 1 == 1 + n as u64 {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", &gens::u32_range(0, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_lands_in_failing_band() {
+        // Fails for all n >= 64; bisection from any failing n must report
+        // a smallest failing value in [64, 127].
+        let result = std::panic::catch_unwind(|| {
+            check_shrink("ge-64", 1 << 20, 64, |n| {
+                if n >= 64 {
+                    Err(format!("{n} too big"))
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        let n: u64 = msg
+            .split("smallest failing n=")
+            .nth(1)
+            .unwrap()
+            .split(':')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!((64..128).contains(&n), "shrunk to {n}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = gens::vec_of(gens::u32_range(5, 10), 7);
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!(v.len() <= 7);
+            assert!(v.iter().all(|&x| (5..10).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn ident_gen_is_alnum() {
+        let g = gens::ident(8);
+        let mut rng = Pcg32::seeded(2);
+        for _ in 0..50 {
+            let s = g.generate(&mut rng);
+            assert!(!s.is_empty() && s.len() <= 8);
+            assert!(s.chars().all(|c| c.is_ascii_alphanumeric()));
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Human-readable formatting helpers for reports and logs.
+
+/// Format a byte count with binary units (`1.5 GiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[unit])
+    }
+}
+
+/// Format a count with SI-ish suffixes (`1.2M`, `3.4k`).
+pub fn human_count(n: u64) -> String {
+    let v = n as f64;
+    if v >= 1e9 {
+        format!("{:.2}B", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Format nanoseconds adaptively (`250 ns`, `1.25 µs`, `3.2 ms`, `1.5 s`).
+pub fn human_duration_ns(ns: u64) -> String {
+    let v = ns as f64;
+    if v < 1e3 {
+        format!("{ns} ns")
+    } else if v < 1e6 {
+        format!("{:.2} µs", v / 1e3)
+    } else if v < 1e9 {
+        format!("{:.2} ms", v / 1e6)
+    } else {
+        format!("{:.2} s", v / 1e9)
+    }
+}
+
+/// Render a markdown table: header row + aligned separator + rows.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let padded: Vec<String> = cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect();
+        format!("| {} |\n", padded.join(" | "))
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&fmt_row(&sep, &widths));
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+        assert_eq!(human_bytes(u64::MAX).contains("PiB"), true);
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(1500), "1.5k");
+        assert_eq!(human_count(2_500_000), "2.50M");
+        assert_eq!(human_count(70_000_000_000), "70.00B");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(human_duration_ns(250), "250 ns");
+        assert_eq!(human_duration_ns(1_250), "1.25 µs");
+        assert_eq!(human_duration_ns(3_200_000), "3.20 ms");
+        assert_eq!(human_duration_ns(1_500_000_000), "1.50 s");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = markdown_table(
+            &["name", "v"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["long-name".into(), "22".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("| name"));
+        assert!(lines.iter().all(|l| l.starts_with('|') && l.ends_with('|')));
+    }
+}

@@ -1,0 +1,77 @@
+//! Hashing: the shard-key FNV-1a (bit-exact with the Pallas kernel and
+//! `python/compile/kernels/ref.py`) plus a general-purpose 64-bit FNV
+//! used for non-routing purposes (bucketing, checksums).
+
+/// FNV-1a 32-bit parameters — keep in lockstep with `ref.py`.
+pub const FNV_OFFSET_32: u32 = 2_166_136_261;
+pub const FNV_PRIME_32: u32 = 16_777_619;
+
+/// Shard-key hash: FNV-1a over the 8 little-endian bytes of
+/// `(node_id, ts_min)`. This is the hash the routing artifact computes;
+/// the Rust fallback and all chunk-split logic must use this function.
+#[inline]
+pub fn fnv1a_shard_key(node_id: u32, ts_min: u32) -> u32 {
+    let mut h = FNV_OFFSET_32;
+    for word in [node_id, ts_min] {
+        for shift in [0u32, 8, 16, 24] {
+            let byte = (word >> shift) & 0xFF;
+            h = (h ^ byte).wrapping_mul(FNV_PRIME_32);
+        }
+    }
+    h
+}
+
+/// FNV-1a 64-bit over arbitrary bytes (checksums, non-routing buckets).
+#[inline]
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same vectors as `python/tests/test_route.py::test_fnv1a_known_vectors`.
+    #[test]
+    fn shard_key_known_vectors() {
+        fn scalar(node: u32, ts: u32) -> u32 {
+            let mut h: u64 = 2_166_136_261;
+            for w in [node, ts] {
+                for s in [0, 8, 16, 24] {
+                    h = ((h ^ ((w as u64 >> s) & 0xFF)) * 16_777_619) % (1 << 32);
+                }
+            }
+            h as u32
+        }
+        for (n, t) in [(0, 0), (1, 0), (0, 1), (12_345, 67_890), (u32::MAX, u32::MAX)] {
+            assert_eq!(fnv1a_shard_key(n, t), scalar(n, t), "({n},{t})");
+        }
+    }
+
+    #[test]
+    fn shard_key_spreads() {
+        // Sequential keys should not collide in low bits (routing quality).
+        let mut buckets = [0u32; 64];
+        for node in 0..1000u32 {
+            for ts in 0..10u32 {
+                buckets[(fnv1a_shard_key(node, ts) % 64) as usize] += 1;
+            }
+        }
+        let min = *buckets.iter().min().unwrap();
+        let max = *buckets.iter().max().unwrap();
+        // 10_000 keys over 64 buckets ≈ 156 each; allow wide slack.
+        assert!(min > 100 && max < 220, "min={min} max={max}");
+    }
+
+    #[test]
+    fn fnv64_known_vector() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+}

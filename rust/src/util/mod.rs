@@ -1,0 +1,17 @@
+//! Foundation utilities shared by every subsystem.
+//!
+//! The vendored dependency set has no `rand`, `serde`, or `chrono`; the
+//! small, deterministic building blocks those would normally provide live
+//! here instead: seedable PRNGs, the FNV-1a shard-key hash (bit-exact
+//! with the Pallas kernel and `ref.py`), a wall/virtual clock abstraction,
+//! and id/formatting helpers.
+
+pub mod clock;
+pub mod fmt;
+pub mod hash;
+pub mod ids;
+pub mod rng;
+
+pub use clock::{Clock, ManualClock, SystemClock};
+pub use hash::fnv1a_shard_key;
+pub use rng::{Pcg32, SplitMix64};

@@ -1,0 +1,156 @@
+//! The flat-CSV corpus on the shared filesystem.
+//!
+//! "Storage for this data in flat csv file on Blue Waters Luster
+//! filesystem is about 200 terabytes" — ingest clients read their slice
+//! of these files and convert rows to documents ("A[n] insertMany is
+//! performed by collecting a list of python dictionaries from the
+//! metric data csv file"). We write one CSV file per corpus day-slice
+//! so client PEs stream disjoint files.
+
+use anyhow::{Context, Result};
+
+use super::ovis::OvisGenerator;
+use crate::mongo::bson::Document;
+use crate::mongo::storage::StorageDir;
+
+/// File name for minute-slice `[t0, t1)`.
+fn slice_name(t0: u32, t1: u32) -> String {
+    format!("ovis_{t0:07}_{t1:07}.csv")
+}
+
+/// Write the corpus as CSV slices of `minutes_per_file` each.
+/// Returns the file names written.
+pub fn write_corpus(
+    gen: &OvisGenerator,
+    dir: &dyn StorageDir,
+    minutes_per_file: u32,
+) -> Result<Vec<String>> {
+    let total_minutes = gen.config().minutes();
+    let mut files = Vec::new();
+    let mut t0 = 0;
+    while t0 < total_minutes {
+        let t1 = (t0 + minutes_per_file).min(total_minutes);
+        let name = slice_name(t0, t1);
+        let mut f = dir.create(&name)?;
+        let mut buf = gen.csv_header();
+        buf.push('\n');
+        for t in t0..t1 {
+            for node in 0..gen.config().monitored_nodes {
+                buf.push_str(&gen.csv_row(node, t));
+                buf.push('\n');
+                if buf.len() > 1 << 20 {
+                    f.append(buf.as_bytes())?;
+                    buf.clear();
+                }
+            }
+        }
+        f.append(buf.as_bytes())?;
+        f.sync()?;
+        files.push(name);
+        t0 = t1;
+    }
+    Ok(files)
+}
+
+/// Parse one CSV slice back into documents (the ingest client's
+/// dictionary-building step). `metrics_per_doc` columns are read; the
+/// header row defines field names.
+pub fn read_slice(dir: &dyn StorageDir, name: &str) -> Result<Vec<Document>> {
+    let raw = dir.read(name).with_context(|| format!("reading corpus slice {name}"))?;
+    let text = std::str::from_utf8(&raw)?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty csv")?;
+    let fields: Vec<&str> = header.split(',').collect();
+    anyhow::ensure!(fields.len() >= 2, "csv header too short");
+    let mut docs = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let mut doc = Document::new();
+        for (i, col) in line.split(',').enumerate() {
+            let name = *fields
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("row {lineno}: too many columns"))?;
+            if i < 2 {
+                let v: i64 = col
+                    .parse()
+                    .with_context(|| format!("row {lineno} col {name}: bad int `{col}`"))?;
+                doc.put(name, v);
+            } else {
+                let v: f64 = col
+                    .parse()
+                    .with_context(|| format!("row {lineno} col {name}: bad float `{col}`"))?;
+                doc.put(name, v);
+            }
+        }
+        docs.push(doc);
+    }
+    Ok(docs)
+}
+
+/// Corpus size on the filesystem (the paper's "200 terabytes" figure,
+/// scaled).
+pub fn corpus_bytes(gen: &OvisGenerator) -> u64 {
+    let row = gen.csv_row(0, 0).len() as u64 + 1;
+    row * gen.total_docs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::mongo::storage::LocalDir;
+
+    fn small_gen() -> OvisGenerator {
+        OvisGenerator::new(WorkloadConfig {
+            monitored_nodes: 4,
+            metrics_per_doc: 5,
+            days: 10.0 / 1440.0, // 10 minutes
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn write_then_read_round_trips() {
+        let gen = small_gen();
+        let dir = LocalDir::temp("csv").unwrap();
+        let files = write_corpus(&gen, &dir, 4).unwrap();
+        assert_eq!(files.len(), 3); // 4 + 4 + 2 minutes
+        let mut total = 0;
+        for f in &files {
+            let docs = read_slice(&dir, f).unwrap();
+            total += docs.len();
+            for d in &docs {
+                assert!(d.get_i64("ts").is_some());
+                assert!(d.get_i64("node_id").is_some());
+                assert!(d.get_f64("m04").is_some());
+            }
+        }
+        assert_eq!(total as u64, gen.total_docs());
+        // First doc of first file matches the generator (to CSV 4-decimal
+        // precision).
+        let docs = read_slice(&dir, &files[0]).unwrap();
+        let want = gen.doc(0, 0);
+        assert_eq!(docs[0].get_i64("ts"), want.get_i64("ts"));
+        let a = docs[0].get_f64("m00").unwrap();
+        let b = want.get_f64("m00").unwrap();
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+
+    #[test]
+    fn corpus_bytes_scales_with_rows() {
+        let gen = small_gen();
+        let est = corpus_bytes(&gen);
+        assert!(est > 0);
+        // 40 docs, each a few dozen bytes.
+        assert!(est > 40 * 20 && est < 40 * 200, "{est}");
+    }
+
+    #[test]
+    fn read_rejects_malformed_rows() {
+        let dir = LocalDir::temp("csv-bad").unwrap();
+        dir.write_atomic("bad.csv", b"ts,node_id,m00\n1,2,not-a-number\n").unwrap();
+        assert!(read_slice(&dir, "bad.csv").is_err());
+    }
+}

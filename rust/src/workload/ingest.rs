@@ -1,0 +1,178 @@
+//! Ingest driver — the paper's `insertMany(ordered=False)` workload.
+//!
+//! "Ingest is run with 4 processing elements per node, thus 64
+//! insertMany will be processed concurrently across 7 MongoDB routers."
+//! Each PE thread takes a disjoint slice of the corpus (by document
+//! index), builds `insert_batch`-sized document lists, and calls
+//! `insert_many` on its pinned router.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::ovis::OvisGenerator;
+use crate::metrics::Histogram;
+use crate::mongo::client::MongoClient;
+
+/// Outcome of an ingest run.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    pub docs: u64,
+    pub batches: u64,
+    pub rerouted: u64,
+    pub wall_ns: u64,
+    pub docs_per_sec: f64,
+    /// Per-batch insertMany latency.
+    pub batch_latency: Histogram,
+    pub pes: usize,
+}
+
+impl IngestReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} docs in {:.2}s over {} PEs → {:.0} docs/s (batch p50 {}, p95 {})",
+            self.docs,
+            self.wall_ns as f64 / 1e9,
+            self.pes,
+            self.docs_per_sec,
+            crate::util::fmt::human_duration_ns(self.batch_latency.p50()),
+            crate::util::fmt::human_duration_ns(self.batch_latency.p95()),
+        )
+    }
+}
+
+/// Ingest driver.
+pub struct IngestDriver {
+    pub gen: OvisGenerator,
+    pub batch: usize,
+    pub pes: usize,
+}
+
+impl IngestDriver {
+    pub fn new(gen: OvisGenerator, batch: usize, pes: usize) -> Self {
+        Self { gen, batch, pes: pes.max(1) }
+    }
+
+    /// Run the full corpus through `client` (each PE pins a router like
+    /// the paper's layout). Returns the aggregate report.
+    pub fn run(&self, client: &MongoClient) -> Result<IngestReport> {
+        let total = self.gen.total_docs();
+        let gen = Arc::new(self.gen.clone());
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for pe in 0..self.pes {
+            let gen = gen.clone();
+            let client = client.pinned(pe);
+            let batch = self.batch;
+            let (lo, hi) = slice_bounds(total, self.pes, pe);
+            handles.push(std::thread::spawn(move || -> Result<(u64, u64, u64, Histogram)> {
+                let mut lat = Histogram::new();
+                let mut docs = 0u64;
+                let mut batches = 0u64;
+                let mut rerouted = 0u64;
+                let mut i = lo;
+                while i < hi {
+                    let n = batch.min((hi - i) as usize);
+                    let list: Vec<_> = (i..i + n as u64).map(|k| gen.doc_at(k)).collect();
+                    let t = Instant::now();
+                    let rep = client
+                        .insert_many(list)
+                        .map_err(|e| anyhow::anyhow!("insert_many: {e}"))?;
+                    lat.record(t.elapsed().as_nanos() as u64);
+                    docs += rep.inserted as u64;
+                    rerouted += rep.rerouted as u64;
+                    batches += 1;
+                    i += n as u64;
+                }
+                Ok((docs, batches, rerouted, lat))
+            }));
+        }
+        let mut docs = 0;
+        let mut batches = 0;
+        let mut rerouted = 0;
+        let mut lat = Histogram::new();
+        for h in handles {
+            let (d, b, r, l) = h.join().expect("ingest PE panicked")?;
+            docs += d;
+            batches += b;
+            rerouted += r;
+            lat.merge(&l);
+        }
+        let wall_ns = t0.elapsed().as_nanos() as u64;
+        Ok(IngestReport {
+            docs,
+            batches,
+            rerouted,
+            wall_ns,
+            docs_per_sec: docs as f64 * 1e9 / wall_ns.max(1) as f64,
+            batch_latency: lat,
+            pes: self.pes,
+        })
+    }
+}
+
+/// Document-index range `[lo, hi)` for PE `pe` of `pes`.
+pub fn slice_bounds(total: u64, pes: usize, pe: usize) -> (u64, u64) {
+    let pes = pes as u64;
+    let pe = pe as u64;
+    let base = total / pes;
+    let extra = total % pes;
+    let lo = pe * base + pe.min(extra);
+    let len = base + if pe < extra { 1 } else { 0 };
+    (lo, lo + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::metrics::Registry;
+    use crate::mongo::cluster::{Cluster, ClusterSpec};
+    use crate::mongo::query::Filter;
+    use crate::mongo::storage::LocalDir;
+    use crate::runtime::Kernels;
+
+    #[test]
+    fn slices_partition_exactly() {
+        for (total, pes) in [(100u64, 7usize), (13, 4), (5, 8), (0, 3)] {
+            let mut covered = 0;
+            let mut prev_hi = 0;
+            for pe in 0..pes {
+                let (lo, hi) = slice_bounds(total, pes, pe);
+                assert_eq!(lo, prev_hi, "gap at pe {pe}");
+                covered += hi - lo;
+                prev_hi = hi;
+            }
+            assert_eq!(covered, total, "total={total} pes={pes}");
+            assert_eq!(prev_hi, total);
+        }
+    }
+
+    #[test]
+    fn ingest_drives_full_corpus() {
+        let cluster = Cluster::start(
+            ClusterSpec::small(2, 2),
+            |sid| Ok(Box::new(LocalDir::temp(&format!("ing-{sid}"))?)),
+            Kernels::fallback(),
+            Registry::new(),
+        )
+        .unwrap();
+        let gen = OvisGenerator::new(WorkloadConfig {
+            monitored_nodes: 8,
+            metrics_per_doc: 5,
+            days: 10.0 / 1440.0, // 10 minutes → 80 docs
+            ..Default::default()
+        });
+        let driver = IngestDriver::new(gen.clone(), 16, 3);
+        let report = driver.run(&cluster.client()).unwrap();
+        assert_eq!(report.docs, 80);
+        assert!(report.batches >= 5);
+        assert!(report.docs_per_sec > 0.0);
+        assert_eq!(
+            cluster.client().count_documents(Filter::True).unwrap(),
+            80
+        );
+        cluster.shutdown();
+    }
+}

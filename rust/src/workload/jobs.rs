@@ -1,0 +1,125 @@
+//! Synthetic user-job metadata for the query workload.
+//!
+//! "The query is constructed by reading user jobs metadata for time run,
+//! duration, and which nodes were assigned." We synthesize a jobs table
+//! with realistic shapes: node counts log-distributed, durations from
+//! tens of minutes to hours, start times across the ingested window.
+//! "The total number of documents returned by a query is number of user
+//! job nodes times duration of user job in minutes" — [`UserJob::
+//! expected_docs`] is exactly that, and the query driver asserts it.
+
+use crate::config::WorkloadConfig;
+use crate::util::rng::Pcg32;
+
+/// One user job record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UserJob {
+    pub id: u32,
+    /// Monitored-node ids the job ran on.
+    pub nodes: Vec<u32>,
+    /// Start, as epoch minutes.
+    pub start_min: u32,
+    /// Duration in minutes.
+    pub duration_min: u32,
+}
+
+impl UserJob {
+    /// Half-open sample window `[start, start + duration)`.
+    pub fn window(&self) -> (u32, u32) {
+        (self.start_min, self.start_min + self.duration_min)
+    }
+
+    /// Documents a conditional find for this job returns (paper §4).
+    pub fn expected_docs(&self) -> u64 {
+        self.nodes.len() as u64 * self.duration_min as u64
+    }
+}
+
+/// Generate `cfg.query_jobs` jobs whose windows lie inside the ingested
+/// corpus ("candidate user jobs were selected from a time period
+/// starting January 1, 2018 until the number of days described in
+/// Table 1").
+pub fn generate_jobs(cfg: &WorkloadConfig) -> Vec<UserJob> {
+    let mut rng = Pcg32::seeded(cfg.seed ^ 0x4a0b5);
+    let total_minutes = cfg.minutes().max(2);
+    let mut jobs = Vec::with_capacity(cfg.query_jobs as usize);
+    for id in 0..cfg.query_jobs {
+        // Log-ish node-count distribution: mostly small jobs, a few big.
+        let max_nodes = cfg.monitored_nodes.max(2);
+        let exp = rng.next_f64() * (max_nodes as f64).log2() * 0.75;
+        let n_nodes = (2f64.powf(exp).round() as u32).clamp(1, max_nodes);
+        let nodes: Vec<u32> = rng
+            .sample_indices(cfg.monitored_nodes as usize, n_nodes as usize)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        // Duration: real user jobs run minutes-to-hours regardless of
+        // how much archive is ingested — 10 min .. 12 h, clipped to the
+        // corpus window.
+        let max_dur = 720.min(total_minutes / 2).max(1);
+        let min_dur = 10.min(max_dur);
+        let duration_min = rng.range_u32(min_dur, max_dur + 1).min(total_minutes - 1).max(1);
+        let start_off = rng.next_bounded(total_minutes - duration_min);
+        jobs.push(UserJob {
+            id,
+            nodes,
+            start_min: cfg.start_epoch_min + start_off,
+            duration_min,
+        });
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> WorkloadConfig {
+        WorkloadConfig {
+            monitored_nodes: 64,
+            days: 0.5,
+            query_jobs: 50,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn jobs_fit_inside_corpus_window() {
+        let cfg = cfg();
+        let end = cfg.start_epoch_min + cfg.minutes();
+        for job in generate_jobs(&cfg) {
+            assert!(job.start_min >= cfg.start_epoch_min);
+            assert!(job.window().1 <= end, "{job:?} beyond {end}");
+            assert!(!job.nodes.is_empty());
+            assert!(job.nodes.iter().all(|&n| n < cfg.monitored_nodes));
+            // Distinct nodes.
+            let set: std::collections::BTreeSet<_> = job.nodes.iter().collect();
+            assert_eq!(set.len(), job.nodes.len());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_jobs(&cfg());
+        let b = generate_jobs(&cfg());
+        assert_eq!(a, b);
+        let mut other = cfg();
+        other.seed ^= 1;
+        assert_ne!(a, generate_jobs(&other));
+    }
+
+    #[test]
+    fn expected_docs_formula() {
+        let j = UserJob { id: 0, nodes: vec![1, 2, 3], start_min: 100, duration_min: 40 };
+        assert_eq!(j.expected_docs(), 120);
+        assert_eq!(j.window(), (100, 140));
+    }
+
+    #[test]
+    fn job_sizes_are_diverse() {
+        let jobs = generate_jobs(&cfg());
+        let sizes: std::collections::BTreeSet<usize> =
+            jobs.iter().map(|j| j.nodes.len()).collect();
+        assert!(sizes.len() > 3, "node-count distribution degenerate: {sizes:?}");
+    }
+}

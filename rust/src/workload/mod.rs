@@ -1,0 +1,13 @@
+//! The paper's workload: OVIS node-metric time series, the flat-CSV
+//! corpus, user-job metadata, and the ingest / conditional-find drivers.
+
+pub mod csvstore;
+pub mod ingest;
+pub mod jobs;
+pub mod ovis;
+pub mod queries;
+
+pub use ingest::{IngestDriver, IngestReport};
+pub use jobs::UserJob;
+pub use ovis::OvisGenerator;
+pub use queries::{QueryDriver, QueryReport};

@@ -1,0 +1,209 @@
+//! Synthetic OVIS metric corpus.
+//!
+//! The paper ingests "time series metric data of Blue Waters compute
+//! nodes collected by OVIS ... sample[d] each node independently once
+//! every minute ... about 75 distinct metrics (e.g. memory use, cpu
+//! activity, network activity)". This generator reproduces that shape
+//! deterministically: one document per (node, minute) with
+//! `metrics_per_doc` numeric fields, generated from per-(node, metric)
+//! seeded streams so any slice of the corpus can be produced
+//! independently (clients generate disjoint slices in parallel).
+//!
+//! Metric models: a third of the metrics behave like gauges around a
+//! node-specific level (memory), a third like rates with diurnal
+//! modulation (cpu), a third like bursty counters (network).
+
+use crate::config::WorkloadConfig;
+use crate::mongo::bson::Document;
+use crate::util::rng::Pcg32;
+
+/// Metric field names are `m00 .. mNN` plus the two indexed fields
+/// `ts` (epoch minutes) and `node_id`.
+pub fn metric_name(i: u32) -> String {
+    format!("m{i:02}")
+}
+
+/// Deterministic corpus generator.
+#[derive(Clone)]
+pub struct OvisGenerator {
+    cfg: WorkloadConfig,
+}
+
+impl OvisGenerator {
+    pub fn new(cfg: WorkloadConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> &WorkloadConfig {
+        &self.cfg
+    }
+
+    /// Total documents in the corpus.
+    pub fn total_docs(&self) -> u64 {
+        self.cfg.total_docs()
+    }
+
+    /// The sample value of metric `m` on `node` at minute-offset `t`.
+    ///
+    /// Pure function of (seed, node, m, t) — no cross-sample state.
+    pub fn metric_value(&self, node: u32, m: u32, t: u32) -> f64 {
+        let mut rng = Pcg32::new(
+            self.cfg.seed ^ ((node as u64) << 32 | m as u64),
+            (m as u64) << 32 | node as u64,
+        );
+        let level = 10.0 + 90.0 * rng.next_f64(); // node-specific base level
+        let noise_seed = rng.next_u64();
+        let mut noise_rng = Pcg32::new(noise_seed ^ t as u64, t as u64 | 1);
+        let noise = noise_rng.next_gaussian();
+        match m % 3 {
+            // Gauge (memory-like): level + slow wander + noise.
+            0 => level + (t as f64 / 360.0).sin() * 5.0 + noise,
+            // Rate (cpu-like): diurnal modulation, clipped at 0.
+            1 => {
+                let diurnal = 0.5 + 0.5 * ((t as f64) * std::f64::consts::TAU / 1440.0).sin();
+                (level * diurnal * 0.01 * (1.0 + 0.3 * noise)).max(0.0)
+            }
+            // Counter delta (network-like): bursty.
+            _ => {
+                if noise_rng.next_f64() < 0.1 {
+                    level * 10.0 * noise_rng.next_f64()
+                } else {
+                    level * 0.1 * noise_rng.next_f64()
+                }
+            }
+        }
+    }
+
+    /// The document for (node, minute-offset `t`).
+    pub fn doc(&self, node: u32, t: u32) -> Document {
+        let mut d = Document::new()
+            .set("ts", (self.cfg.start_epoch_min + t) as i64)
+            .set("node_id", node as i64);
+        for m in 0..self.cfg.metrics_per_doc {
+            d.put(&metric_name(m), self.metric_value(node, m, t));
+        }
+        d
+    }
+
+    /// CSV row for (node, t) — the flat-file corpus form.
+    pub fn csv_row(&self, node: u32, t: u32) -> String {
+        let mut row = format!("{},{}", self.cfg.start_epoch_min + t, node);
+        for m in 0..self.cfg.metrics_per_doc {
+            row.push_str(&format!(",{:.4}", self.metric_value(node, m, t)));
+        }
+        row
+    }
+
+    /// CSV header.
+    pub fn csv_header(&self) -> String {
+        let mut h = "ts,node_id".to_string();
+        for m in 0..self.cfg.metrics_per_doc {
+            h.push(',');
+            h.push_str(&metric_name(m));
+        }
+        h
+    }
+
+    /// Documents for one minute across all nodes (an ingest wave).
+    pub fn minute_docs(&self, t: u32) -> Vec<Document> {
+        (0..self.cfg.monitored_nodes).map(|n| self.doc(n, t)).collect()
+    }
+
+    /// The `i`-th document of the corpus in (minute, node) order —
+    /// clients slice the corpus by document index ranges.
+    pub fn doc_at(&self, i: u64) -> Document {
+        let nodes = self.cfg.monitored_nodes as u64;
+        let t = (i / nodes) as u32;
+        let node = (i % nodes) as u32;
+        self.doc(node, t)
+    }
+
+    /// Approximate bytes of one encoded document (sizing reports; the
+    /// paper's 200 TB / 70 G rows ≈ 2.9 KB per CSV row).
+    pub fn approx_doc_bytes(&self) -> u64 {
+        self.doc(0, 0).encoded_len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> OvisGenerator {
+        OvisGenerator::new(WorkloadConfig {
+            monitored_nodes: 16,
+            metrics_per_doc: 75,
+            days: 0.01,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn doc_shape_matches_paper() {
+        let g = gen();
+        let d = g.doc(3, 100);
+        assert_eq!(d.len(), 2 + 75); // ts, node_id, 75 metrics
+        assert_eq!(d.get_i64("node_id"), Some(3));
+        assert_eq!(d.get_i64("ts"), Some(g.config().start_epoch_min as i64 + 100));
+        assert!(d.get_f64("m00").is_some());
+        assert!(d.get_f64("m74").is_some());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = gen().doc(5, 42);
+        let b = gen().doc(5, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_nodes_and_times_differ() {
+        let g = gen();
+        assert_ne!(g.doc(1, 10), g.doc(2, 10));
+        assert_ne!(g.doc(1, 10), g.doc(1, 11));
+    }
+
+    #[test]
+    fn doc_at_covers_corpus_in_order() {
+        let g = gen();
+        let nodes = g.config().monitored_nodes as u64;
+        let d0 = g.doc_at(0);
+        let dn = g.doc_at(nodes); // first doc of minute 1
+        assert_eq!(d0.get_i64("node_id"), Some(0));
+        assert_eq!(
+            dn.get_i64("ts").unwrap(),
+            d0.get_i64("ts").unwrap() + 1
+        );
+        assert_eq!(g.doc_at(nodes + 3), g.doc(3, 1));
+    }
+
+    #[test]
+    fn csv_row_parses_back() {
+        let g = gen();
+        let header = g.csv_header();
+        assert!(header.starts_with("ts,node_id,m00"));
+        let row = g.csv_row(2, 7);
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols.len(), 77);
+        assert_eq!(cols[1], "2");
+        for c in &cols[2..] {
+            c.parse::<f64>().unwrap();
+        }
+    }
+
+    #[test]
+    fn rates_are_nonnegative() {
+        let g = gen();
+        for t in 0..200 {
+            assert!(g.metric_value(1, 1, t) >= 0.0);
+            assert!(g.metric_value(1, 4, t) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn doc_bytes_in_expected_range() {
+        // 77 numeric fields ≈ 77 * ~14 bytes → roughly 1 KiB.
+        let b = gen().approx_doc_bytes();
+        assert!(b > 500 && b < 2500, "doc bytes {b}");
+    }
+}

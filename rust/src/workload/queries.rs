@@ -1,0 +1,202 @@
+//! Query driver — the paper's concurrent conditional-find workload.
+//!
+//! "The query test was done by doing a conditional find ... constructed
+//! by reading user jobs metadata for time run, duration, and which
+//! nodes were assigned." Worker threads issue
+//! `find({node_id: {$in: job.nodes}, ts: {$gte: t0, $lt: t1}})`,
+//! drain the cursor, and record end-to-end latency. When the corpus was
+//! fully ingested, each query must return exactly
+//! `job.nodes × job.duration` documents (§4) — the driver checks this.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::jobs::UserJob;
+use crate::metrics::Histogram;
+use crate::mongo::bson::Value;
+use crate::mongo::client::MongoClient;
+use crate::mongo::query::{CmpOp, Filter, FindOptions};
+
+/// Outcome of a query run.
+#[derive(Clone, Debug)]
+pub struct QueryReport {
+    pub queries: u64,
+    pub docs_returned: u64,
+    pub wall_ns: u64,
+    pub latency: Histogram,
+    pub concurrency: usize,
+    pub count_mismatches: u64,
+}
+
+impl QueryReport {
+    pub fn queries_per_sec(&self) -> f64 {
+        self.queries as f64 * 1e9 / self.wall_ns.max(1) as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} finds ({} docs) in {:.2}s @ concurrency {} → {:.1} q/s, latency p50 {} p95 {} p99 {}",
+            self.queries,
+            self.docs_returned,
+            self.wall_ns as f64 / 1e9,
+            self.concurrency,
+            self.queries_per_sec(),
+            crate::util::fmt::human_duration_ns(self.latency.p50()),
+            crate::util::fmt::human_duration_ns(self.latency.p95()),
+            crate::util::fmt::human_duration_ns(self.latency.p99()),
+        )
+    }
+}
+
+/// Build the paper's conditional find for one user job.
+pub fn job_filter(job: &UserJob) -> Filter {
+    let (t0, t1) = job.window();
+    Filter::And(vec![
+        Filter::is_in(
+            "node_id",
+            job.nodes.iter().map(|&n| Value::Int(n as i64)).collect(),
+        ),
+        Filter::Cmp { field: "ts".into(), op: CmpOp::Gte, value: Value::Int(t0 as i64) },
+        Filter::Cmp { field: "ts".into(), op: CmpOp::Lt, value: Value::Int(t1 as i64) },
+    ])
+}
+
+/// Query driver.
+pub struct QueryDriver {
+    pub jobs: Vec<UserJob>,
+    pub concurrency: usize,
+    /// Verify result counts against `expected_docs` (requires the full
+    /// corpus to have been ingested).
+    pub verify_counts: bool,
+}
+
+impl QueryDriver {
+    pub fn new(jobs: Vec<UserJob>, concurrency: usize) -> Self {
+        Self { jobs, concurrency: concurrency.max(1), verify_counts: true }
+    }
+
+    /// Issue every job's find once, `concurrency` workers in parallel.
+    pub fn run(&self, client: &MongoClient) -> Result<QueryReport> {
+        let jobs = Arc::new(self.jobs.clone());
+        let next = Arc::new(AtomicUsize::new(0));
+        let verify = self.verify_counts;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for worker in 0..self.concurrency {
+            let jobs = jobs.clone();
+            let next = next.clone();
+            let client = client.pinned(worker);
+            handles.push(std::thread::spawn(move || -> Result<(u64, u64, u64, Histogram)> {
+                let mut lat = Histogram::new();
+                let mut queries = 0u64;
+                let mut docs = 0u64;
+                let mut mismatches = 0u64;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let job = &jobs[i];
+                    let t = Instant::now();
+                    let got = client
+                        .find(job_filter(job), FindOptions::default().batch_size(2_000))
+                        .map_err(|e| anyhow::anyhow!("find: {e}"))?
+                        .count() as u64;
+                    lat.record(t.elapsed().as_nanos() as u64);
+                    queries += 1;
+                    docs += got;
+                    if verify && got != job.expected_docs() {
+                        mismatches += 1;
+                        log::warn!(
+                            "job {} returned {got} docs, expected {}",
+                            job.id,
+                            job.expected_docs()
+                        );
+                    }
+                }
+                Ok((queries, docs, mismatches, lat))
+            }));
+        }
+        let mut queries = 0;
+        let mut docs = 0;
+        let mut mismatches = 0;
+        let mut lat = Histogram::new();
+        for h in handles {
+            let (q, d, m, l) = h.join().expect("query worker panicked")?;
+            queries += q;
+            docs += d;
+            mismatches += m;
+            lat.merge(&l);
+        }
+        Ok(QueryReport {
+            queries,
+            docs_returned: docs,
+            wall_ns: t0.elapsed().as_nanos() as u64,
+            latency: lat,
+            concurrency: self.concurrency,
+            count_mismatches: mismatches,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::metrics::Registry;
+    use crate::mongo::cluster::{Cluster, ClusterSpec};
+    use crate::mongo::storage::index::IndexSpec;
+    use crate::mongo::storage::LocalDir;
+    use crate::runtime::Kernels;
+    use crate::workload::ingest::IngestDriver;
+    use crate::workload::jobs::generate_jobs;
+    use crate::workload::ovis::OvisGenerator;
+
+    #[test]
+    fn filter_shape_is_canonical() {
+        let job = UserJob { id: 1, nodes: vec![2, 5], start_min: 100, duration_min: 10 };
+        let f = job_filter(&job);
+        // Must be the exact canonical shape the shard kernel path accepts.
+        let Filter::And(parts) = &f else { panic!("not a conjunction") };
+        assert_eq!(parts.len(), 3);
+        assert!(f.in_values("node_id").is_some());
+        let (lo, hi) = f.index_range("ts").unwrap();
+        assert_eq!(lo, Some(Value::Int(100)));
+        assert_eq!(hi, Some(Value::Int(110)));
+    }
+
+    #[test]
+    fn end_to_end_counts_match_paper_formula() {
+        let cluster = Cluster::start(
+            ClusterSpec::small(3, 2),
+            |sid| Ok(Box::new(LocalDir::temp(&format!("qd-{sid}"))?)),
+            Kernels::fallback(),
+            Registry::new(),
+        )
+        .unwrap();
+        let cfg = WorkloadConfig {
+            monitored_nodes: 12,
+            metrics_per_doc: 4,
+            days: 30.0 / 1440.0, // 30 minutes
+            query_jobs: 10,
+            ..Default::default()
+        };
+        let client = cluster.client();
+        client.create_index(IndexSpec::single("ts")).unwrap();
+        client.create_index(IndexSpec::single("node_id")).unwrap();
+        let gen = OvisGenerator::new(cfg.clone());
+        IngestDriver::new(gen, 64, 2).run(&client).unwrap();
+
+        let jobs = generate_jobs(&cfg);
+        let expected: u64 = jobs.iter().map(UserJob::expected_docs).sum();
+        let report = QueryDriver::new(jobs, 3).run(&client).unwrap();
+        assert_eq!(report.queries, 10);
+        assert_eq!(report.count_mismatches, 0, "some finds returned wrong counts");
+        assert_eq!(report.docs_returned, expected);
+        assert!(report.latency.count() == 10);
+        cluster.shutdown();
+    }
+}

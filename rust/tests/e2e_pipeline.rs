@@ -1,0 +1,122 @@
+//! Full-pipeline integration (the job_queue_deploy example, test-sized):
+//! scheduler → run script → Lustre CSV corpus → ingest → conditional
+//! finds → teardown → second job reattaches.
+
+use hpcstore::config::{LustreConfig, StoreConfig, Topology, WorkloadConfig};
+use hpcstore::hpc::lustre::Lustre;
+use hpcstore::hpc::runscript::RunScript;
+use hpcstore::hpc::scheduler::{Job, JobState, Scheduler};
+use hpcstore::mongo::query::Filter;
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::runtime::Kernels;
+use hpcstore::workload::csvstore;
+use hpcstore::workload::jobs::generate_jobs;
+use hpcstore::workload::ovis::OvisGenerator;
+use hpcstore::workload::QueryDriver;
+
+#[test]
+fn scheduler_runscript_csv_ingest_query_persist() {
+    let lustre = Lustre::mount(LustreConfig { osts: 4, ..Default::default() }).unwrap();
+    let mut sched = Scheduler::new(16);
+
+    let wl = WorkloadConfig {
+        monitored_nodes: 24,
+        metrics_per_doc: 10,
+        days: 20.0 / 1440.0,
+        query_jobs: 8,
+        ..Default::default()
+    };
+    let gen = OvisGenerator::new(wl.clone());
+
+    // Corpus to CSV on the shared filesystem.
+    let csv_dir = lustre.dir("scratch/csv").unwrap();
+    let files = csvstore::write_corpus(&gen, &csv_dir, 7).unwrap();
+    assert_eq!(files.len(), 3);
+
+    let topo = Topology::small(2, 1, 2);
+    let script = RunScript::new(
+        topo.clone(),
+        StoreConfig::default(),
+        lustre.clone(),
+        Kernels::fallback(),
+    );
+
+    // Job 1: ingest from CSV, query, teardown.
+    let job = sched.submit(Job::new("ingest", topo.total_nodes, 600)).unwrap();
+    let hosts = sched.hosts_of(job).unwrap().to_vec();
+    let dep = script.deploy(&hosts).unwrap();
+    let client = dep.client_from_hostfile().unwrap();
+    client.create_index(IndexSpec::single("ts")).unwrap();
+    client.create_index(IndexSpec::single("node_id")).unwrap();
+
+    let mut ingested = 0u64;
+    for f in &files {
+        let docs = csvstore::read_slice(&csv_dir, f).unwrap();
+        for chunk in docs.chunks(200) {
+            ingested += client.insert_many(chunk.to_vec()).unwrap().inserted as u64;
+        }
+    }
+    assert_eq!(ingested, gen.total_docs());
+
+    let report = QueryDriver::new(generate_jobs(&wl), 2).run(&client).unwrap();
+    assert_eq!(report.count_mismatches, 0, "paper count formula must hold");
+    assert_eq!(report.queries, 8);
+
+    dep.teardown().unwrap();
+    sched.complete(job).unwrap();
+    assert!(matches!(sched.state(job), JobState::Completed { .. }));
+    assert!(lustre.total_written() > 0);
+    // Striping spread the store over multiple OSTs.
+    let touched = lustre.ost_written().iter().filter(|&&b| b > 0).count();
+    assert!(touched >= 2, "expected striping across OSTs");
+
+    // Job 2: fresh allocation, same scratch → data persists.
+    let job2 = sched.submit(Job::new("requery", topo.total_nodes, 600)).unwrap();
+    let hosts2 = sched.hosts_of(job2).unwrap().to_vec();
+    let dep2 = script.deploy(&hosts2).unwrap();
+    let client2 = dep2.client_from_hostfile().unwrap();
+    assert_eq!(
+        client2.count_documents(Filter::True).unwrap() as u64,
+        gen.total_docs()
+    );
+    let report2 = QueryDriver::new(generate_jobs(&wl), 2).run(&client2).unwrap();
+    assert_eq!(report2.count_mismatches, 0);
+    dep2.teardown().unwrap();
+    sched.complete(job2).unwrap();
+}
+
+#[test]
+fn walltime_kill_then_recovery_from_journal() {
+    // A job killed before checkpoint must still recover synced writes
+    // from the journal on the next deployment.
+    let lustre = Lustre::mount(LustreConfig::default()).unwrap();
+    let topo = Topology::small(2, 1, 1);
+    let script = RunScript::new(
+        topo.clone(),
+        StoreConfig::default(),
+        lustre.clone(),
+        Kernels::fallback(),
+    );
+    let hosts: Vec<u32> = (0..topo.total_nodes).collect();
+    {
+        let dep = script.deploy(&hosts).unwrap();
+        let client = dep.client_from_hostfile().unwrap();
+        let docs: Vec<_> = (0..300)
+            .map(|i| {
+                hpcstore::mongo::bson::Document::new()
+                    .set("ts", i as i64)
+                    .set("node_id", (i % 6) as i64)
+            })
+            .collect();
+        client.insert_many(docs).unwrap();
+        // Walltime kill: no checkpoint.
+        dep.kill();
+    }
+    {
+        let dep = script.deploy(&hosts).unwrap();
+        let client = dep.client_from_hostfile().unwrap();
+        // insert_many group-commits per batch, so all 300 are journaled.
+        assert_eq!(client.count_documents(Filter::True).unwrap(), 300);
+        dep.teardown().unwrap();
+    }
+}

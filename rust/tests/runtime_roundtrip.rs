@@ -1,0 +1,148 @@
+//! Integration: the AOT HLO path and the pure-Rust fallback must agree
+//! bit-exactly on random batches (the cross-language correctness seal:
+//! python ref == pallas kernel (pytest) and pallas HLO == rust fallback
+//! (here) ⇒ all four implementations agree).
+//!
+//! Requires `make artifacts` to have run; tests are skipped (with a
+//! loud message) if artifacts are absent so `cargo test` still works in
+//! a fresh checkout.
+
+use hpcstore::runtime::{fallback, Backend, Kernels};
+use hpcstore::util::rng::Pcg32;
+
+fn hlo_kernels() -> Option<Kernels> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        return None;
+    }
+    let k = Kernels::load("artifacts").expect("loading artifacts");
+    assert_eq!(k.backend(), Backend::Hlo);
+    Some(k)
+}
+
+fn mk_chunk_table(rng: &mut Pcg32, chunks: usize, shards: usize) -> (Vec<u32>, Vec<i32>) {
+    let mut bounds: Vec<u32> = (0..chunks - 1).map(|_| rng.next_u32()).collect();
+    bounds.sort_unstable();
+    bounds.dedup();
+    bounds.push(u32::MAX);
+    let c2s: Vec<i32> = (0..bounds.len())
+        .map(|i| (i % shards) as i32)
+        .collect();
+    (bounds, c2s)
+}
+
+#[test]
+fn route_hlo_equals_fallback() {
+    let Some(k) = hlo_kernels() else { return };
+    let mut rng = Pcg32::seeded(0xA0B1);
+    for &(n_keys, chunks, shards) in
+        &[(1usize, 1usize, 1usize), (100, 7, 7), (4096, 63, 63), (5000, 200, 63), (9000, 512, 64)]
+    {
+        let (bounds, c2s) = mk_chunk_table(&mut rng, chunks, shards);
+        let node: Vec<u32> = (0..n_keys).map(|_| rng.next_bounded(30_000)).collect();
+        let ts: Vec<u32> = (0..n_keys).map(|_| rng.next_u32()).collect();
+
+        let hlo = k.route(&node, &ts, &bounds, &c2s, shards).unwrap();
+        let (s_fb, c_fb, h_fb) = fallback::route_batch(&node, &ts, &bounds, &c2s, shards);
+
+        assert_eq!(hlo.shard_of, s_fb, "shard_of mismatch at n={n_keys}");
+        assert_eq!(hlo.counts, c_fb, "histogram mismatch at n={n_keys}");
+        assert_eq!(hlo.hashes, h_fb, "hash mismatch at n={n_keys}");
+    }
+}
+
+#[test]
+fn filter_hlo_equals_fallback() {
+    let Some(k) = hlo_kernels() else { return };
+    let mut rng = Pcg32::seeded(0xF1F2);
+    for &(n_docs, members) in &[(1usize, 0usize), (512, 40), (4096, 400), (6000, 1000)] {
+        let bitmap = fallback::build_bitmap(
+            (0..members).map(|_| rng.next_bounded(32_768)),
+            1024,
+        );
+        let ts: Vec<u32> = (0..n_docs).map(|_| rng.next_bounded(2_000_000)).collect();
+        let node: Vec<u32> = (0..n_docs).map(|_| rng.next_bounded(32_768)).collect();
+        let lo = rng.next_bounded(1_000_000);
+        let hi = lo + rng.next_bounded(1_000_000);
+
+        let hlo = k.filter(&ts, &node, lo, hi, &bitmap).unwrap();
+        let (m_fb, c_fb) = fallback::filter_batch(&ts, &node, lo, hi, &bitmap);
+
+        assert_eq!(hlo.mask, m_fb, "mask mismatch at n={n_docs}");
+        assert_eq!(hlo.count, c_fb, "count mismatch at n={n_docs}");
+    }
+}
+
+#[test]
+fn filter_pad_rows_never_leak() {
+    // Node 0 a member + ts range covering 0: padding must still not
+    // contribute to the count (pad ts = u32::MAX).
+    let Some(k) = hlo_kernels() else { return };
+    let bitmap = fallback::build_bitmap([0u32], 1024);
+    let ts = vec![5u32; 10]; // 10 real docs, batch pads to 4096
+    let node = vec![0u32; 10];
+    let out = k.filter(&ts, &node, 0, u32::MAX, &bitmap).unwrap();
+    assert_eq!(out.count, 10);
+    assert_eq!(out.mask.len(), 10);
+}
+
+#[test]
+fn route_pad_rows_never_leak() {
+    let Some(k) = hlo_kernels() else { return };
+    // 3 real keys in a 4096 batch; histogram must sum to 3.
+    let (bounds, c2s) = (vec![1u32 << 30, u32::MAX], vec![0i32, 1]);
+    let out = k.route(&[9, 8, 7], &[1, 2, 3], &bounds, &c2s, 2).unwrap();
+    assert_eq!(out.counts.iter().sum::<i32>(), 3);
+    assert_eq!(out.shard_of.len(), 3);
+}
+
+#[test]
+fn stats_hlo_close_to_fallback() {
+    let Some(k) = hlo_kernels() else { return };
+    let m = k.shapes().stats_m;
+    let mut rng = Pcg32::seeded(0x57A2);
+    for &b in &[1usize, 100, 4096, 5000] {
+        let metrics: Vec<f32> = (0..b * m)
+            .map(|_| (rng.next_f64() * 1000.0 - 500.0) as f32)
+            .collect();
+        let hlo = k.stats(&metrics, b, m).unwrap();
+        let (mn, mx, _) = fallback::stats_batch(&metrics, b, m);
+        assert_eq!(hlo.min, mn, "min mismatch at b={b}");
+        assert_eq!(hlo.max, mx, "max mismatch at b={b}");
+        // Means: f32 reductions differ in association (kernel pairwise vs
+        // scalar sequential) and the padded-batch correction amplifies
+        // rounding, so compare against an f64 oracle with an absolute
+        // tolerance derived from the summation error bound
+        // (~log2(B)·eps·Σ|x| / B ≈ 3e-4 here; 0.02 is comfortably above).
+        for col in 0..m {
+            let oracle: f64 =
+                (0..b).map(|r| metrics[r * m + col] as f64).sum::<f64>() / b as f64;
+            let err = (hlo.mean[col] as f64 - oracle).abs();
+            assert!(
+                err < 2e-2,
+                "mean mismatch at b={b} col={col}: {} vs {oracle} (err {err})",
+                hlo.mean[col]
+            );
+        }
+    }
+}
+
+#[test]
+fn kernels_handle_is_cloneable_across_threads() {
+    let Some(k) = hlo_kernels() else { return };
+    let mut handles = vec![];
+    for t in 0..4u32 {
+        let k = k.clone();
+        handles.push(std::thread::spawn(move || {
+            let bounds = vec![u32::MAX];
+            let c2s = vec![0i32];
+            let node: Vec<u32> = (0..100).map(|i| i * t).collect();
+            let ts: Vec<u32> = (0..100).collect();
+            let out = k.route(&node, &ts, &bounds, &c2s, 1).unwrap();
+            assert_eq!(out.counts, vec![100]);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
