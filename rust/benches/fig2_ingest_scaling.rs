@@ -87,9 +87,77 @@ fn main() {
     sens.print();
     println!();
 
+    // Batch-size axis: the bulk-ingest pipeline swept over insertMany
+    // batch sizes on a fixed cluster shape, the way the paper sweeps
+    // cluster shape on a fixed batch. Per-message overhead (router hop,
+    // route-kernel invocation, per-frame journaling) amortizes with the
+    // batch; ≥ 2x is expected by batch 64 vs batch 1.
+    let mut axis = Report::new("F2 batch axis — ingest vs insertMany batch size (DES, 32 nodes)");
+    axis.set_custom(
+        ["batch", "docs/s", "speedup vs batch=1"].iter().map(|s| s.to_string()).collect(),
+    );
+    let mut b1 = None;
+    for batch in [1usize, 16, 64, 256, 1000, 4096] {
+        let mut spec = SimSpec::paper_preset(32, cost.clone()).unwrap();
+        spec.batch = batch;
+        let r = ClusterSim::new(spec).run();
+        let base = *b1.get_or_insert(r.docs_per_sec);
+        axis.add_row(vec![
+            batch.to_string(),
+            human_count(r.docs_per_sec as u64),
+            format!("{:.2}x", r.docs_per_sec / base),
+        ]);
+    }
+    axis.print();
+    println!();
+
     if quick_mode() {
         return;
     }
+
+    // Live batch axis: real cluster threads, fixed 2 shards / 2 routers
+    // / 4 PEs, batch swept — shows the group-commit win end-to-end
+    // (one journal frame + one sync per batch instead of per document).
+    let live_kernels = Kernels::load_or_fallback("artifacts");
+    let mut lbatch = Report::new("F2 batch axis — live mini-cluster (2 shards, 4 PEs)");
+    lbatch.set_custom(
+        ["batch", "docs", "docs/s", "speedup vs batch=1", "group commits"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    let mut lbase = None;
+    for batch in [1usize, 64, 512] {
+        let metrics = Registry::new();
+        let cluster = Cluster::start(
+            ClusterSpec::small(2, 2),
+            move |sid| Ok(Box::new(LocalDir::temp(&format!("f2b-{batch}-{sid}"))?)),
+            live_kernels.clone(),
+            metrics.clone(),
+        )
+        .unwrap();
+        let client = cluster.client();
+        client.create_index(IndexSpec::single("ts")).unwrap();
+        client.create_index(IndexSpec::single("node_id")).unwrap();
+        let gen = OvisGenerator::new(WorkloadConfig {
+            monitored_nodes: 64,
+            metrics_per_doc: 75,
+            days: 32.0 / 1440.0, // 2048 docs
+            ..Default::default()
+        });
+        let rep = IngestDriver::new(gen, batch, 4).run(&client).unwrap();
+        let b = *lbase.get_or_insert(rep.docs_per_sec);
+        lbatch.add_row(vec![
+            batch.to_string(),
+            rep.docs.to_string(),
+            format!("{:.0}", rep.docs_per_sec),
+            format!("{:.2}x", rep.docs_per_sec / b),
+            metrics.counter("shard.group_commits").get().to_string(),
+        ]);
+        cluster.shutdown();
+    }
+    lbatch.print();
+    println!();
     // Live cross-check: real cluster threads at laptop scale.
     let kernels = Kernels::load_or_fallback("artifacts");
     let mut live = Report::new("Figure 2 cross-check — live mini-clusters (one machine, CPU-bound)");

@@ -52,6 +52,11 @@ impl Args {
         }
     }
 
+    /// Integer flag with a default (batch sizes, flush intervals, ...).
+    pub fn get_u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.get_u64(name)?.unwrap_or(default))
+    }
+
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
         match self.get(name) {
             None => Ok(None),
@@ -190,6 +195,8 @@ mod tests {
             .unwrap();
         assert_eq!(a.command, "ingest");
         assert_eq!(a.get_u64("nodes").unwrap(), Some(32));
+        assert_eq!(a.get_u64_or("nodes", 1).unwrap(), 32);
+        assert_eq!(a.get_u64_or("absent", 7).unwrap(), 7);
         assert_eq!(a.get_f64("days").unwrap(), Some(3.5));
         assert!(a.has_switch("verbose"));
         assert_eq!(a.positional, vec!["pos1"]);

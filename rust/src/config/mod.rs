@@ -133,10 +133,16 @@ pub struct StoreConfig {
     pub max_chunk_docs: u64,
     /// Write-ahead journaling on shard servers.
     pub journal: bool,
-    /// Compress checkpoint blocks (flate2).
+    /// Compress checkpoint blocks (in-tree LZSS codec).
     pub compress_checkpoints: bool,
     /// insertMany sub-batch size the client uses.
     pub insert_batch: usize,
+    /// Router-side ingest buffer: flush to the shards once this many
+    /// documents are buffered (buffered-ingest path).
+    pub router_flush_docs: usize,
+    /// Router-side ingest buffer: flush at this deadline even if the
+    /// buffer is below `router_flush_docs` (0 = flush immediately).
+    pub flush_interval_ms: u64,
     /// find cursor batch size.
     pub cursor_batch: usize,
     /// Run the chunk balancer.
@@ -151,6 +157,8 @@ impl Default for StoreConfig {
             journal: true,
             compress_checkpoints: false,
             insert_batch: 1_000,
+            router_flush_docs: 4_096,
+            flush_interval_ms: 2,
             cursor_batch: 1_000,
             balancer: true,
         }
@@ -165,6 +173,8 @@ impl StoreConfig {
             .set("journal", self.journal)
             .set("compress_checkpoints", self.compress_checkpoints)
             .set("insert_batch", self.insert_batch)
+            .set("router_flush_docs", self.router_flush_docs)
+            .set("flush_interval_ms", self.flush_interval_ms)
             .set("cursor_batch", self.cursor_batch)
             .set("balancer", self.balancer);
         v
@@ -190,6 +200,14 @@ impl StoreConfig {
                 .get("insert_batch")
                 .and_then(Value::as_usize)
                 .unwrap_or(d.insert_batch),
+            router_flush_docs: v
+                .get("router_flush_docs")
+                .and_then(Value::as_usize)
+                .unwrap_or(d.router_flush_docs),
+            flush_interval_ms: v
+                .get("flush_interval_ms")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.flush_interval_ms),
             cursor_batch: v
                 .get("cursor_batch")
                 .and_then(Value::as_usize)
@@ -469,6 +487,8 @@ mod tests {
         let v = c.to_json();
         let c2 = Config::from_json(&v).unwrap();
         assert_eq!(c2.store.insert_batch, c.store.insert_batch);
+        assert_eq!(c2.store.router_flush_docs, c.store.router_flush_docs);
+        assert_eq!(c2.store.flush_interval_ms, c.store.flush_interval_ms);
         assert_eq!(c2.workload.monitored_nodes, c.workload.monitored_nodes);
         assert_eq!(c2.lustre.osts, c.lustre.osts);
     }

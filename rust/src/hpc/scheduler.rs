@@ -330,19 +330,20 @@ mod tests {
     }
 
     #[test]
-    fn backfill_never_delays_head_reservation() {
+    fn backfill_never_delays_head_reservation() -> anyhow::Result<()> {
         let mut s = Scheduler::new(10);
-        let _big = s.submit(Job::new("big", 8, 100).with_runtime(100)).unwrap();
-        let head = s.submit(Job::new("head", 10, 100).with_runtime(10)).unwrap();
+        let _big = s.submit(Job::new("big", 8, 100).with_runtime(100))?;
+        let head = s.submit(Job::new("head", 10, 100).with_runtime(10))?;
         // This job fits the 2 free nodes but runs past the shadow time
         // (100) and would steal nodes the head needs → must NOT backfill.
-        let long = s.submit(Job::new("long", 2, 500).with_runtime(500)).unwrap();
+        let long = s.submit(Job::new("long", 2, 500).with_runtime(500))?;
         assert!(matches!(s.state(long), JobState::Queued));
         s.drain();
         let JobState::Completed { start_s, .. } = s.state(head) else {
-            panic!("head not completed")
+            anyhow::bail!("head not completed: {:?}", s.state(head));
         };
         assert_eq!(*start_s, 100, "head must start exactly at the shadow time");
+        Ok(())
     }
 
     #[test]

@@ -20,15 +20,24 @@ impl Value {
         Value::Object(BTreeMap::new())
     }
 
-    /// Insert into an object (panics if not an object — builder use only).
+    /// Insert into an object, returning `self` for builder chaining.
+    /// On a non-object receiver this is a no-op; use [`Value::try_set`]
+    /// when the caller needs to detect that case.
     pub fn set(&mut self, key: &str, value: impl Into<Value>) -> &mut Self {
+        let _ = self.try_set(key, value);
+        self
+    }
+
+    /// Fallible insert: `None` (and no mutation) if `self` is not an
+    /// object, `Some(self)` after inserting otherwise.
+    pub fn try_set(&mut self, key: &str, value: impl Into<Value>) -> Option<&mut Self> {
         match self {
             Value::Object(m) => {
                 m.insert(key.to_string(), value.into());
+                Some(self)
             }
-            _ => panic!("set() on non-object"),
+            _ => None,
         }
-        self
     }
 
     pub fn get(&self, key: &str) -> Option<&Value> {
@@ -204,6 +213,17 @@ mod tests {
         outer.set("inner", inner);
         assert_eq!(outer.at(&["inner", "x"]).unwrap().as_i64(), Some(1));
         assert!(outer.at(&["inner", "y"]).is_none());
+    }
+
+    #[test]
+    fn set_on_non_object_is_detectable_no_op() {
+        let mut v = Value::Int(3);
+        assert!(v.try_set("k", 1i64).is_none());
+        v.set("k", 1i64); // must not panic, must not mutate
+        assert_eq!(v, Value::Int(3));
+        let mut o = Value::object();
+        assert!(o.try_set("k", 1i64).is_some());
+        assert_eq!(o.get("k").unwrap().as_i64(), Some(1));
     }
 
     #[test]

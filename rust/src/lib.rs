@@ -39,4 +39,5 @@ pub mod testing;
 pub mod util;
 pub mod workload;
 
+#[cfg(feature = "pjrt")]
 pub use runtime::engine::Engine;

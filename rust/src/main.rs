@@ -37,7 +37,17 @@ fn cli() -> Cli {
                     f("pes", Some("N"), "client processing elements (default 4)"),
                     f("monitored", Some("N"), "monitored nodes in the corpus (default 128)"),
                     f("minutes", Some("N"), "minutes of data (default 30)"),
-                    f("batch", Some("N"), "insertMany batch size (default 1000)"),
+                    f("batch-size", Some("N"), "insertMany batch size (default 1000)"),
+                    f(
+                        "flush-interval-ms",
+                        Some("MS"),
+                        "router ingest-buffer flush deadline (default 2)",
+                    ),
+                    f(
+                        "buffered",
+                        None,
+                        "route ingest through the router's group-commit buffer",
+                    ),
                     f("artifacts", Some("DIR"), "AOT artifact dir (default artifacts)"),
                     f("fallback", None, "use the scalar kernel fallback"),
                 ],
@@ -98,14 +108,17 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let pes = args.get_u64("pes")?.unwrap_or(4) as u32;
     let monitored = args.get_u64("monitored")?.unwrap_or(128) as u32;
     let minutes = args.get_u64("minutes")?.unwrap_or(30);
-    let batch = args.get_u64("batch")?.unwrap_or(1000) as usize;
+    let batch = args.get_u64_or("batch-size", 1000)? as usize;
+    let flush_interval_ms = args.get_u64_or("flush-interval-ms", 2)?;
+    let buffered = args.has_switch("buffered");
 
     let kernels = load_kernels(args);
     println!("kernel backend: {:?}", kernels.backend());
 
     let lustre = Lustre::mount(LustreConfig::default())?;
     let topo = Topology::small(shards, routers, pes);
-    let script = RunScript::new(topo.clone(), StoreConfig::default(), lustre.clone(), kernels);
+    let store = StoreConfig { insert_batch: batch, flush_interval_ms, ..Default::default() };
+    let script = RunScript::new(topo.clone(), store, lustre.clone(), kernels);
 
     // Admit through the batch scheduler like any HPC job.
     let mut sched = Scheduler::new(topo.total_nodes);
@@ -131,7 +144,9 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         monitored,
         wl.metrics_per_doc
     );
-    let ingest = IngestDriver::new(gen, batch, pes as usize).run(&client)?;
+    let ingest = IngestDriver::new(gen, batch, pes as usize)
+        .buffered(buffered)
+        .run(&client)?;
     println!("ingest: {}", ingest.summary());
 
     let queries = QueryDriver::new(generate_jobs(&wl), pes as usize).run(&client)?;

@@ -9,6 +9,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::mongo::bson::Document;
 use crate::mongo::query::{Filter, FindOptions};
@@ -50,6 +51,30 @@ impl MongoClient {
         rpc(self.pick(), |reply| RouterRequest::InsertMany { docs, reply })?
     }
 
+    /// `insertMany` through the router's ingest buffer: the router
+    /// coalesces batches from every client talking to it and flushes to
+    /// the shards on size/deadline — group commit across clients. Blocks
+    /// until the flush containing this batch completes.
+    pub fn insert_buffered(&self, docs: Vec<Document>) -> Result<InsertManyReply, WireError> {
+        rpc(self.pick(), |reply| RouterRequest::InsertBuffered { docs, reply })?
+    }
+
+    /// A client-side bulk writer that buffers documents locally and
+    /// flushes an `insertMany` once `batch_size` documents accumulate or
+    /// `flush_interval` has elapsed since the first buffered document.
+    pub fn bulk_writer(&self, batch_size: usize, flush_interval: Duration) -> BulkWriter {
+        BulkWriter {
+            client: self.clone(),
+            buf: Vec::with_capacity(batch_size.max(1)),
+            batch_size: batch_size.max(1),
+            flush_interval,
+            since: None,
+            inserted: 0,
+            rerouted: 0,
+            flushes: 0,
+        }
+    }
+
     /// `find(filter)` returning a pull cursor.
     pub fn find(&self, filter: Filter, opts: FindOptions) -> Result<ClientCursor, WireError> {
         let router = self.pick().clone();
@@ -70,6 +95,68 @@ impl MongoClient {
 
     pub fn create_index(&self, spec: IndexSpec) -> Result<(), WireError> {
         rpc(self.pick(), |reply| RouterRequest::CreateIndex { spec, reply })?
+    }
+}
+
+/// Buffers documents client-side and flushes `insertMany` batches on
+/// size or deadline — the client leg of the bulk-ingest pipeline. Call
+/// [`BulkWriter::finish`] to flush the tail and read the totals.
+pub struct BulkWriter {
+    client: MongoClient,
+    buf: Vec<Document>,
+    batch_size: usize,
+    flush_interval: Duration,
+    since: Option<Instant>,
+    inserted: usize,
+    rerouted: usize,
+    flushes: u64,
+}
+
+impl BulkWriter {
+    /// Buffer one document, flushing if the batch is full or the flush
+    /// deadline has passed.
+    pub fn push(&mut self, doc: Document) -> Result<(), WireError> {
+        if self.buf.is_empty() {
+            self.since = Some(Instant::now());
+        }
+        self.buf.push(doc);
+        let deadline_hit = self
+            .since
+            .map(|t| t.elapsed() >= self.flush_interval)
+            .unwrap_or(false);
+        if self.buf.len() >= self.batch_size || deadline_hit {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Flush any buffered documents now.
+    pub fn flush(&mut self) -> Result<(), WireError> {
+        if self.buf.is_empty() {
+            self.since = None;
+            return Ok(());
+        }
+        let docs = std::mem::take(&mut self.buf);
+        self.since = None;
+        let rep = self.client.insert_many(docs)?;
+        self.inserted += rep.inserted;
+        self.rerouted += rep.rerouted;
+        self.flushes += 1;
+        Ok(())
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    /// Flush the tail and return the aggregate reply.
+    pub fn finish(mut self) -> Result<InsertManyReply, WireError> {
+        self.flush()?;
+        Ok(InsertManyReply { inserted: self.inserted, rerouted: self.rerouted })
     }
 }
 

@@ -135,6 +135,8 @@ impl Cluster {
                 kernels.clone(),
                 metrics.clone(),
                 spec.store.cursor_batch,
+                spec.store.router_flush_docs,
+                std::time::Duration::from_millis(spec.store.flush_interval_ms),
             );
             let (tx, join) = router.spawn();
             routers.push(tx);
@@ -220,7 +222,7 @@ impl Cluster {
                     moved += 1;
                 }
                 Err(e) => {
-                    log::warn!("migration failed: {e:#}");
+                    eprintln!("warn: migration failed: {e:#}");
                     let _ = self.config.send(ConfigRequest::AbortMigration);
                 }
             }

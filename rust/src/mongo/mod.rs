@@ -26,6 +26,6 @@ pub mod storage;
 pub mod wire;
 
 pub use bson::{Document, Value};
-pub use client::MongoClient;
+pub use client::{BulkWriter, MongoClient};
 pub use cluster::Cluster;
 pub use query::Filter;

@@ -12,7 +12,7 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::ShardKeyKind;
 use crate::mongo::bson::Document;
@@ -47,6 +47,14 @@ pub struct RouterStatsReply {
 /// Requests handled by a router.
 pub enum RouterRequest {
     InsertMany {
+        docs: Vec<Document>,
+        reply: Reply<Result<InsertManyReply, WireError>>,
+    },
+    /// Bulk-ingest leg: documents land in the router's ingest buffer and
+    /// are flushed to the shards once `router_flush_docs` accumulate or
+    /// the flush deadline passes — group commit across clients. The
+    /// reply is sent when the flush containing this batch completes.
+    InsertBuffered {
         docs: Vec<Document>,
         reply: Reply<Result<InsertManyReply, WireError>>,
     },
@@ -96,12 +104,23 @@ pub struct Router {
     cursors: HashMap<u64, RouterCursor>,
     next_cursor: u64,
     default_batch: usize,
+    /// Flush the ingest buffer once it holds this many documents.
+    flush_docs: usize,
+    /// Flush the ingest buffer at this deadline after its first doc.
+    flush_interval: Duration,
+    /// Buffered-ingest documents awaiting the next flush.
+    ingest_buf: Vec<Document>,
+    /// Per-contributor (doc count, reply) acks for the buffered docs.
+    pending_acks: Vec<(usize, Reply<Result<InsertManyReply, WireError>>)>,
+    /// When the oldest buffered document arrived.
+    buffered_since: Option<Instant>,
     inserts: u64,
     finds: u64,
     wire_bytes_out: u64,
 }
 
 impl Router {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: RouterId,
         map: ChunkMap,
@@ -110,6 +129,8 @@ impl Router {
         kernels: Kernels,
         metrics: Registry,
         default_batch: usize,
+        flush_docs: usize,
+        flush_interval: Duration,
     ) -> Self {
         Self {
             id,
@@ -121,6 +142,11 @@ impl Router {
             cursors: HashMap::new(),
             next_cursor: 1,
             default_batch,
+            flush_docs: flush_docs.max(1),
+            flush_interval,
+            ingest_buf: Vec::new(),
+            pending_acks: Vec::new(),
+            buffered_since: None,
             inserts: 0,
             finds: 0,
             wire_bytes_out: 0,
@@ -142,17 +168,64 @@ impl Router {
     }
 
     fn run(&mut self, rx: mpsc::Receiver<RouterRequest>) {
-        while let Ok(req) = rx.recv() {
+        loop {
+            // With buffered documents pending, wait only until the flush
+            // deadline; otherwise block for the next request.
+            let req = if self.ingest_buf.is_empty() {
+                match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            } else {
+                let deadline = self
+                    .buffered_since
+                    .map(|t| t + self.flush_interval)
+                    .unwrap_or_else(Instant::now);
+                let now = Instant::now();
+                if now >= deadline {
+                    self.flush_ingest();
+                    continue;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        self.flush_ingest();
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            };
             match req {
                 RouterRequest::Shutdown => break,
                 RouterRequest::InsertMany { docs, reply } => {
+                    // Preserve arrival order with any buffered docs.
+                    self.flush_ingest();
                     let t = Instant::now();
                     let r = self.handle_insert_many(docs);
                     self.metrics
                         .observe("router.insert_many_ns", t.elapsed().as_nanos() as u64);
                     let _ = reply.send(r);
                 }
+                RouterRequest::InsertBuffered { docs, reply } => {
+                    if docs.is_empty() {
+                        // Nothing to buffer — ack now, or the reply would
+                        // strand (an empty buffer never schedules a flush).
+                        let _ = reply.send(Ok(InsertManyReply::default()));
+                        continue;
+                    }
+                    if self.ingest_buf.is_empty() {
+                        self.buffered_since = Some(Instant::now());
+                    }
+                    let n = docs.len();
+                    self.ingest_buf.extend(docs);
+                    self.pending_acks.push((n, reply));
+                    if self.ingest_buf.len() >= self.flush_docs {
+                        self.flush_ingest();
+                    }
+                }
                 RouterRequest::Find { filter, opts, reply } => {
+                    // Read-your-writes: buffered docs become visible first.
+                    self.flush_ingest();
                     let t = Instant::now();
                     let r = self.handle_find(filter, opts);
                     self.metrics.observe("router.find_ns", t.elapsed().as_nanos() as u64);
@@ -162,9 +235,11 @@ impl Router {
                     let _ = reply.send(self.handle_get_more(cursor));
                 }
                 RouterRequest::Count { filter, reply } => {
+                    self.flush_ingest();
                     let _ = reply.send(self.handle_count(filter));
                 }
                 RouterRequest::CreateIndex { spec, reply } => {
+                    self.flush_ingest();
                     let mut result = Ok(());
                     for shard in &self.shards {
                         match rpc(shard, |reply| ShardRequest::CreateIndex {
@@ -178,12 +253,50 @@ impl Router {
                     let _ = reply.send(result);
                 }
                 RouterRequest::Stats { reply } => {
+                    self.flush_ingest();
                     let _ = reply.send(RouterStatsReply {
                         inserts: self.inserts,
                         finds: self.finds,
                         map_version: self.map.version,
                         wire_bytes_out: self.wire_bytes_out,
                     });
+                }
+            }
+        }
+        // Drain on shutdown/disconnect so every contributor gets an ack.
+        self.flush_ingest();
+    }
+
+    /// Flush the ingest buffer through the scatter path and ack every
+    /// contributor of the flushed batch.
+    fn flush_ingest(&mut self) {
+        if self.ingest_buf.is_empty() {
+            self.buffered_since = None;
+            return;
+        }
+        let docs = std::mem::take(&mut self.ingest_buf);
+        let acks = std::mem::take(&mut self.pending_acks);
+        self.buffered_since = None;
+        let t = Instant::now();
+        let flushed = docs.len();
+        let result = self.handle_insert_many(docs);
+        self.metrics.observe("router.flush_ns", t.elapsed().as_nanos() as u64);
+        self.metrics.counter("router.ingest_flushes").inc();
+        self.metrics.counter("router.ingest_flush_docs").add(flushed as u64);
+        match result {
+            Ok(rep) => {
+                // Success covers the whole flush; each contributor is
+                // acked with its own document count. The reroute total is
+                // attributed to the first ack so aggregates stay exact.
+                let mut rerouted = rep.rerouted;
+                for (n, reply) in acks {
+                    let _ = reply.send(Ok(InsertManyReply { inserted: n, rerouted }));
+                    rerouted = 0;
+                }
+            }
+            Err(e) => {
+                for (_, reply) in acks {
+                    let _ = reply.send(Err(e.clone()));
                 }
             }
         }

@@ -123,7 +123,7 @@ impl ShardServer {
                 }
                 ShardRequest::InsertBatch { version, docs, reply } => {
                     let t = Instant::now();
-                    let r = self.handle_insert(version, docs);
+                    let r = self.handle_insert_many(version, docs);
                     self.metrics
                         .observe("shard.insert_batch_ns", t.elapsed().as_nanos() as u64);
                     let _ = reply.send(r);
@@ -182,7 +182,10 @@ impl ShardServer {
         Some(self.map.key.position(node, ts))
     }
 
-    fn handle_insert(
+    /// Bulk-ingest leg on the shard: version handshake, owner filtering,
+    /// then the owned run is indexed and journaled as a whole batch with
+    /// a single group commit.
+    fn handle_insert_many(
         &mut self,
         version: u64,
         docs: Vec<Document>,
@@ -199,11 +202,14 @@ impl ShardServer {
             return Err(WireError::StaleVersion { current: self.map.version });
         }
 
+        // Split the batch into owned documents and wrong-owner rejects,
+        // then index + journal the owned run as ONE multi-record frame.
         let mut wrong_owner = Vec::new();
         let mut touched_chunks: Vec<usize> = Vec::new();
-        let mut inserted = 0usize;
-        for (i, doc) in docs.iter().enumerate() {
-            let Some(pos) = self.position_of(doc) else {
+        let mut owned_docs: Vec<Document> = Vec::with_capacity(docs.len());
+        let mut owned_pos: Vec<u64> = Vec::with_capacity(docs.len());
+        for (i, doc) in docs.into_iter().enumerate() {
+            let Some(pos) = self.position_of(&doc) else {
                 wrong_owner.push(i);
                 continue;
             };
@@ -212,17 +218,22 @@ impl ShardServer {
                 wrong_owner.push(i);
                 continue;
             }
-            self.engine
-                .insert(COLLECTION, doc)
-                .map_err(|e| WireError::Server(e.to_string()))?;
-            *self.positions.entry(pos).or_insert(0) += 1;
-            inserted += 1;
             if !touched_chunks.contains(&chunk) {
                 touched_chunks.push(chunk);
             }
+            owned_docs.push(doc);
+            owned_pos.push(pos);
         }
-        // Group commit once per batch.
+        let inserted = owned_docs.len();
+        self.engine
+            .insert_many(COLLECTION, &owned_docs)
+            .map_err(|e| WireError::Server(e.to_string()))?;
+        for pos in owned_pos {
+            *self.positions.entry(pos).or_insert(0) += 1;
+        }
+        // Group commit once per batch: one journal frame, one sync.
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+        self.metrics.counter("shard.group_commits").inc();
         self.metrics.counter("shard.docs_inserted").add(inserted as u64);
 
         // Split any chunk that crossed the threshold.
@@ -561,14 +572,12 @@ impl ShardServer {
 
     fn install_docs(&mut self, docs: Vec<Document>) -> Result<usize, WireError> {
         let n = docs.len();
-        for doc in docs {
-            let pos = self.position_of(&doc);
-            self.engine
-                .insert(COLLECTION, &doc)
-                .map_err(|e| WireError::Server(e.to_string()))?;
-            if let Some(pos) = pos {
-                *self.positions.entry(pos).or_insert(0) += 1;
-            }
+        let positions: Vec<Option<u64>> = docs.iter().map(|d| self.position_of(d)).collect();
+        self.engine
+            .insert_many(COLLECTION, &docs)
+            .map_err(|e| WireError::Server(e.to_string()))?;
+        for pos in positions.into_iter().flatten() {
+            *self.positions.entry(pos).or_insert(0) += 1;
         }
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
         self.metrics.counter("shard.migration_docs_in").add(n as u64);

@@ -66,7 +66,10 @@ impl LocalDir {
 }
 
 struct LocalFile {
-    file: fs::File,
+    /// Buffered so the group-commit write path pays one OS write per
+    /// [`StorageFile::sync`] (journal frames are staged engine-side, but
+    /// checkpoint-era callers may append in several pieces).
+    file: std::io::BufWriter<fs::File>,
     len: u64,
 }
 
@@ -90,10 +93,18 @@ impl StorageFile for LocalFile {
     }
 }
 
+impl Drop for LocalFile {
+    fn drop(&mut self) {
+        // Best-effort flush so a graceful close never loses buffered
+        // bytes; crash-loss semantics stay with unsynced data.
+        let _ = self.file.flush();
+    }
+}
+
 impl StorageDir for LocalDir {
     fn create(&self, name: &str) -> Result<Box<dyn StorageFile>> {
         let file = fs::File::create(self.path(name))?;
-        Ok(Box::new(LocalFile { file, len: 0 }))
+        Ok(Box::new(LocalFile { file: std::io::BufWriter::new(file), len: 0 }))
     }
 
     fn append_to(&self, name: &str) -> Result<Box<dyn StorageFile>> {
@@ -102,7 +113,7 @@ impl StorageDir for LocalDir {
             .append(true)
             .open(self.path(name))?;
         let len = file.seek(std::io::SeekFrom::End(0))?;
-        Ok(Box::new(LocalFile { file, len }))
+        Ok(Box::new(LocalFile { file: std::io::BufWriter::new(file), len }))
     }
 
     fn read(&self, name: &str) -> Result<Vec<u8>> {

@@ -20,15 +20,26 @@ use crate::util::ids::ShardId;
 pub type Reply<T> = mpsc::Sender<T>;
 
 /// Errors that cross the wire.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum WireError {
-    #[error("stale chunk map version (shard has {current})")]
     StaleVersion { current: u64 },
-    #[error("unknown cursor {0}")]
     UnknownCursor(u64),
-    #[error("server error: {0}")]
     Server(String),
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::StaleVersion { current } => {
+                write!(f, "stale chunk map version (shard has {current})")
+            }
+            WireError::UnknownCursor(c) => write!(f, "unknown cursor {c}"),
+            WireError::Server(msg) => write!(f, "server error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// Result of an insert batch.
 #[derive(Clone, Debug, PartialEq, Eq)]

@@ -5,6 +5,7 @@
 //! jax >= 0.5 emits protos with 64-bit instruction ids which
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod fallback;
 pub mod manifest;

@@ -18,6 +18,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use super::engine::Engine;
 use super::fallback;
 use super::manifest::{Manifest, Shapes, BUILT_SHAPES};
@@ -105,6 +106,7 @@ pub struct Kernels {
 
 impl Kernels {
     /// Load artifacts from `dir` and start the PJRT service thread.
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
         let dir: PathBuf = dir.into();
         let manifest = Manifest::load(&dir)?;
@@ -126,6 +128,19 @@ impl Kernels {
         })
     }
 
+    /// Without the `pjrt` feature the HLO path is not compiled in; the
+    /// manifest is still validated so shape mismatches surface, then the
+    /// caller is told to fall back (see [`Self::load_or_fallback`]).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir: PathBuf = dir.into();
+        let _manifest = Manifest::load(&dir)?;
+        anyhow::bail!(
+            "PJRT runtime not compiled in (build with `--features pjrt` and the xla \
+             dependency to execute AOT artifacts); using the scalar fallback"
+        )
+    }
+
     /// Pure-Rust fallback handle (no artifacts, no PJRT).
     pub fn fallback() -> Self {
         Self {
@@ -136,13 +151,13 @@ impl Kernels {
         }
     }
 
-    /// Load artifacts if present, else fall back (logged via metrics).
+    /// Load artifacts if present, else fall back (logged to stderr).
     pub fn load_or_fallback(dir: impl Into<PathBuf>) -> Self {
         let dir: PathBuf = dir.into();
         match Self::load(&dir) {
             Ok(k) => k,
             Err(e) => {
-                log::warn!("kernel artifacts unavailable ({e:#}); using scalar fallback");
+                eprintln!("warn: kernel artifacts unavailable ({e:#}); using scalar fallback");
                 Self::fallback()
             }
         }
@@ -366,6 +381,7 @@ impl Kernels {
 }
 
 /// Service thread main: compile all artifacts, then serve requests.
+#[cfg(feature = "pjrt")]
 fn service_main(
     dir: PathBuf,
     manifest: Manifest,

@@ -1,0 +1,212 @@
+//! LZSS compression for checkpoint blocks (`flate2` is not in the
+//! vendored set; this in-tree codec fills the role).
+//!
+//! Stream format: groups of one control byte followed by up to eight
+//! items. Control bit `i` (LSB first) describes item `i`:
+//! `0` = literal (one raw byte), `1` = back-reference (two bytes:
+//! `b0 = (offset-1) & 0xFF`, `b1 = ((offset-1) >> 8) << 4 | (len-3)`),
+//! with offsets in `[1, 4096]` and lengths in `[3, 18]`. Matches may
+//! overlap their own output (run-length encoding falls out naturally).
+//!
+//! Checkpoints are dominated by repeated field names and near-identical
+//! record layouts, which this window/length combination captures well;
+//! the codec is deterministic and allocation-light in the hot loop.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+const WINDOW: usize = 4096;
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 18;
+/// Cap per-hash candidate chains so pathological inputs stay linear.
+const MAX_CHAIN: usize = 32;
+
+#[inline]
+fn hash3(data: &[u8], i: usize) -> u32 {
+    (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16)
+}
+
+/// Record position `i` in its hash chain (if a 3-byte prefix fits).
+#[inline]
+fn chain_insert(table: &mut HashMap<u32, VecDeque<usize>>, data: &[u8], i: usize) {
+    if i + MIN_MATCH <= data.len() {
+        let chain = table.entry(hash3(data, i)).or_default();
+        chain.push_back(i);
+        if chain.len() > MAX_CHAIN {
+            chain.pop_front();
+        }
+    }
+}
+
+/// Compress `data`. Always succeeds; worst case grows by 1/8 + 1 bytes.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let n = data.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    let mut table: HashMap<u32, VecDeque<usize>> = HashMap::new();
+
+    let mut ctrl_pos = out.len();
+    out.push(0u8);
+    let mut ctrl = 0u8;
+    let mut nitems = 0u8;
+
+    let mut i = 0usize;
+    while i < n {
+        let mut best_len = 0usize;
+        let mut best_off = 0usize;
+        if i + MIN_MATCH <= n {
+            if let Some(cands) = table.get_mut(&hash3(data, i)) {
+                while let Some(&front) = cands.front() {
+                    if front + WINDOW < i {
+                        cands.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                let limit = MAX_MATCH.min(n - i);
+                for &j in cands.iter().rev() {
+                    let mut l = 0usize;
+                    while l < limit && data[j + l] == data[i + l] {
+                        l += 1;
+                    }
+                    if l > best_len {
+                        best_len = l;
+                        best_off = i - j;
+                        if l == limit {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if best_len >= MIN_MATCH {
+            ctrl |= 1 << nitems;
+            let om1 = best_off - 1;
+            out.push((om1 & 0xFF) as u8);
+            out.push((((om1 >> 8) << 4) | (best_len - MIN_MATCH)) as u8);
+            let end = i + best_len;
+            while i < end {
+                chain_insert(&mut table, data, i);
+                i += 1;
+            }
+        } else {
+            out.push(data[i]);
+            chain_insert(&mut table, data, i);
+            i += 1;
+        }
+        nitems += 1;
+        if nitems == 8 {
+            out[ctrl_pos] = ctrl;
+            ctrl_pos = out.len();
+            out.push(0);
+            ctrl = 0;
+            nitems = 0;
+        }
+    }
+    out[ctrl_pos] = ctrl;
+    if nitems == 0 {
+        out.pop();
+    }
+    out
+}
+
+/// Decompress a [`compress`] stream. Errors on truncated or corrupt
+/// input (a back-reference pointing before the start of the output).
+pub fn decompress(comp: &[u8]) -> Result<Vec<u8>> {
+    let n = comp.len();
+    let mut out = Vec::with_capacity(n * 2);
+    let mut i = 0usize;
+    while i < n {
+        let ctrl = comp[i];
+        i += 1;
+        for bit in 0..8u8 {
+            if i >= n {
+                break;
+            }
+            if ctrl & (1 << bit) != 0 {
+                if i + 2 > n {
+                    bail!("truncated back-reference at byte {i}");
+                }
+                let b0 = comp[i] as usize;
+                let b1 = comp[i + 1] as usize;
+                i += 2;
+                let off = ((b1 >> 4) << 8 | b0) + 1;
+                let len = (b1 & 0x0F) + MIN_MATCH;
+                if off > out.len() {
+                    bail!("back-reference offset {off} before stream start");
+                }
+                let start = out.len() - off;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            } else {
+                out.push(comp[i]);
+                i += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let back = decompress(&c).unwrap();
+        assert_eq!(back, data, "roundtrip failed for {} bytes", data.len());
+    }
+
+    #[test]
+    fn edge_cases() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"ab");
+        roundtrip(b"abc");
+        roundtrip(&[0u8; 100_000]);
+        roundtrip(b"abcabcabcabcabcabcabcabc");
+        let all: Vec<u8> = (0..=255u8).cycle().take(2048).collect();
+        roundtrip(&all);
+    }
+
+    #[test]
+    fn random_binary_roundtrips() {
+        let mut rng = Pcg32::seeded(0x1255);
+        for _ in 0..30 {
+            let n = rng.next_bounded(5000) as usize;
+            let data: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn repetitive_data_shrinks() {
+        // Checkpoint-like: repeated record with field names.
+        let rec = b"\x05\x00ts\x02node_id\x03cpu_user....................";
+        let data: Vec<u8> = rec.iter().copied().cycle().take(50_000).collect();
+        let c = compress(&data);
+        assert!(c.len() * 3 < data.len(), "{} not < {}/3", c.len(), data.len());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn long_range_matches_beyond_window_still_roundtrip() {
+        let mut rng = Pcg32::seeded(7);
+        let base: Vec<u8> = (0..300).map(|_| rng.next_u32() as u8).collect();
+        let mut data = base.clone();
+        data.extend((0..6000).map(|_| rng.next_u32() as u8));
+        data.extend_from_slice(&base); // repeat outside the window
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn decompress_rejects_corrupt_input() {
+        // Control byte says "match" but only one byte follows.
+        assert!(decompress(&[0b0000_0001, 0x00]).is_err());
+        // Back-reference before stream start.
+        assert!(decompress(&[0b0000_0001, 0x05, 0x00]).is_err());
+    }
+}

@@ -7,6 +7,7 @@
 //! and id/formatting helpers.
 
 pub mod clock;
+pub mod compress;
 pub mod fmt;
 pub mod hash;
 pub mod ids;

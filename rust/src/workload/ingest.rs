@@ -47,11 +47,21 @@ pub struct IngestDriver {
     pub gen: OvisGenerator,
     pub batch: usize,
     pub pes: usize,
+    /// Send batches through the router's ingest buffer
+    /// ([`MongoClient::insert_buffered`]) so the router group-commits
+    /// across PEs, instead of one direct `insertMany` per batch.
+    pub buffered: bool,
 }
 
 impl IngestDriver {
     pub fn new(gen: OvisGenerator, batch: usize, pes: usize) -> Self {
-        Self { gen, batch, pes: pes.max(1) }
+        Self { gen, batch, pes: pes.max(1), buffered: false }
+    }
+
+    /// Toggle the router-buffered ingest path.
+    pub fn buffered(mut self, on: bool) -> Self {
+        self.buffered = on;
+        self
     }
 
     /// Run the full corpus through `client` (each PE pins a router like
@@ -65,6 +75,7 @@ impl IngestDriver {
             let gen = gen.clone();
             let client = client.pinned(pe);
             let batch = self.batch;
+            let buffered = self.buffered;
             let (lo, hi) = slice_bounds(total, self.pes, pe);
             handles.push(std::thread::spawn(move || -> Result<(u64, u64, u64, Histogram)> {
                 let mut lat = Histogram::new();
@@ -76,9 +87,15 @@ impl IngestDriver {
                     let n = batch.min((hi - i) as usize);
                     let list: Vec<_> = (i..i + n as u64).map(|k| gen.doc_at(k)).collect();
                     let t = Instant::now();
-                    let rep = client
-                        .insert_many(list)
-                        .map_err(|e| anyhow::anyhow!("insert_many: {e}"))?;
+                    let rep = if buffered {
+                        client
+                            .insert_buffered(list)
+                            .map_err(|e| anyhow::anyhow!("insert_buffered: {e}"))?
+                    } else {
+                        client
+                            .insert_many(list)
+                            .map_err(|e| anyhow::anyhow!("insert_many: {e}"))?
+                    };
                     lat.record(t.elapsed().as_nanos() as u64);
                     docs += rep.inserted as u64;
                     rerouted += rep.rerouted as u64;
@@ -173,6 +190,33 @@ mod tests {
             cluster.client().count_documents(Filter::True).unwrap(),
             80
         );
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn buffered_ingest_drives_full_corpus() {
+        let cluster = Cluster::start(
+            ClusterSpec::small(2, 2),
+            |sid| Ok(Box::new(LocalDir::temp(&format!("ingb-{sid}"))?)),
+            Kernels::fallback(),
+            Registry::new(),
+        )
+        .unwrap();
+        let gen = OvisGenerator::new(WorkloadConfig {
+            monitored_nodes: 8,
+            metrics_per_doc: 5,
+            days: 10.0 / 1440.0, // 10 minutes → 80 docs
+            ..Default::default()
+        });
+        let driver = IngestDriver::new(gen.clone(), 16, 3).buffered(true);
+        let report = driver.run(&cluster.client()).unwrap();
+        assert_eq!(report.docs, 80, "router buffer must ack every doc");
+        assert_eq!(
+            cluster.client().count_documents(Filter::True).unwrap(),
+            80
+        );
+        // The routers actually flushed through the buffer path.
+        assert!(cluster.metrics().counter("router.ingest_flushes").get() > 0);
         cluster.shutdown();
     }
 }

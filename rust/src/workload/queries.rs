@@ -110,8 +110,8 @@ impl QueryDriver {
                     docs += got;
                     if verify && got != job.expected_docs() {
                         mismatches += 1;
-                        log::warn!(
-                            "job {} returned {got} docs, expected {}",
+                        eprintln!(
+                            "warn: job {} returned {got} docs, expected {}",
                             job.id,
                             job.expected_docs()
                         );
@@ -156,16 +156,19 @@ mod tests {
     use crate::workload::ovis::OvisGenerator;
 
     #[test]
-    fn filter_shape_is_canonical() {
+    fn filter_shape_is_canonical() -> anyhow::Result<()> {
         let job = UserJob { id: 1, nodes: vec![2, 5], start_min: 100, duration_min: 10 };
         let f = job_filter(&job);
         // Must be the exact canonical shape the shard kernel path accepts.
-        let Filter::And(parts) = &f else { panic!("not a conjunction") };
+        let Filter::And(parts) = &f else {
+            anyhow::bail!("not a conjunction: {f:?}");
+        };
         assert_eq!(parts.len(), 3);
         assert!(f.in_values("node_id").is_some());
         let (lo, hi) = f.index_range("ts").unwrap();
         assert_eq!(lo, Some(Value::Int(100)));
         assert_eq!(hi, Some(Value::Int(110)));
+        Ok(())
     }
 
     #[test]

@@ -190,6 +190,47 @@ fn data_persists_across_jobs() {
 }
 
 #[test]
+fn buffered_ingest_and_bulk_writer() {
+    let cluster = start(ClusterSpec::small(2, 2), "buf");
+    let client = cluster.client();
+
+    // Router-side ingest buffer: two client threads pinned to the same
+    // router are coalesced into shared flushes (group commit across
+    // clients), and every contributor still gets an exact ack.
+    let mut handles = Vec::new();
+    for pe in 0..2i64 {
+        let c = client.pinned(0);
+        handles.push(std::thread::spawn(move || {
+            let mut inserted = 0usize;
+            for wave in 0..4i64 {
+                let docs: Vec<Document> = (0..50i64)
+                    .map(|i| metric_doc(pe * 1000 + wave * 50 + i, i % 8))
+                    .collect();
+                inserted += c.insert_buffered(docs).unwrap().inserted;
+            }
+            inserted
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 400);
+
+    // Client-side BulkWriter: local buffering with size/deadline flush.
+    let mut bw = client.bulk_writer(64, std::time::Duration::from_millis(250));
+    for i in 0..200i64 {
+        bw.push(metric_doc(5000 + i, i % 8)).unwrap();
+    }
+    assert!(bw.buffered() < 64, "auto-flush must cap the local buffer");
+    assert!(bw.flushes() >= 3);
+    let rep = bw.finish().unwrap();
+    assert_eq!(rep.inserted, 200);
+
+    assert_eq!(client.count_documents(Filter::True).unwrap(), 600);
+    assert!(cluster.metrics().counter("router.ingest_flushes").get() > 0);
+    assert!(cluster.metrics().counter("shard.group_commits").get() > 0);
+    cluster.shutdown();
+}
+
+#[test]
 fn concurrent_clients_ingest_safely() {
     let cluster = start(ClusterSpec::small(3, 2), "conc");
     let mut handles = Vec::new();

@@ -1,0 +1,238 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this crate provides
+//! the subset of anyhow's API the workspace actually uses — `Error`,
+//! `Result`, the `anyhow!`/`bail!`/`ensure!` macros, and the `Context`
+//! extension trait — with matching semantics:
+//!
+//! * `Display` shows the outermost message (the most recent context, or
+//!   the root error when no context was attached).
+//! * The alternate form `{:#}` shows the whole chain, outermost first,
+//!   joined with `": "`.
+//! * `Debug` (what `unwrap()` prints) shows the outermost message plus a
+//!   `Caused by:` list.
+//! * Any `std::error::Error + Send + Sync + 'static` converts into
+//!   `Error` via `?`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    Msg(String),
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+}
+
+/// A dynamic error with an optional stack of context messages.
+pub struct Error {
+    /// Context messages, innermost first (last entry is outermost).
+    context: Vec<String>,
+    repr: Repr,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display + Send + Sync + 'static>(message: M) -> Self {
+        Error { context: Vec::new(), repr: Repr::Msg(message.to_string()) }
+    }
+
+    /// Attach an outer context message (most recent wins for `Display`).
+    pub fn context<C: fmt::Display + Send + Sync + 'static>(mut self, context: C) -> Self {
+        self.context.push(context.to_string());
+        self
+    }
+
+    fn root_msg(&self) -> String {
+        match &self.repr {
+            Repr::Msg(m) => m.clone(),
+            Repr::Boxed(e) => e.to_string(),
+        }
+    }
+
+    /// Messages from outermost to root.
+    fn chain_msgs(&self) -> Vec<String> {
+        let mut msgs: Vec<String> = self.context.iter().rev().cloned().collect();
+        msgs.push(self.root_msg());
+        if let Repr::Boxed(e) = &self.repr {
+            let mut src = e.source();
+            while let Some(s) = src {
+                msgs.push(s.to_string());
+                src = s.source();
+            }
+        }
+        msgs
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain_msgs().join(": "))
+        } else {
+            match self.context.last() {
+                Some(outer) => write!(f, "{outer}"),
+                None => write!(f, "{}", self.root_msg()),
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.chain_msgs();
+        write!(f, "{}", msgs[0])?;
+        if msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { context: Vec::new(), repr: Repr::Boxed(Box::new(e)) }
+    }
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "missing file");
+        let e = e.context("opening config");
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+    }
+
+    #[test]
+    fn debug_lists_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(e.to_string(), "ctx");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        // Context on an already-anyhow error.
+        let inner: Error = Error::msg("inner");
+        let r: Result<()> = Err(inner);
+        assert_eq!(r.context("outer").unwrap_err().to_string(), "outer");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+}
