@@ -111,6 +111,37 @@ fn main() {
     axis.print();
     println!();
 
+    // Lifecycle axis: checkpoint compaction keeps the on-disk journal
+    // bounded; this sweep shows what that bound costs in ingest rate
+    // (snapshot serialization + OST traffic per compaction).
+    let mut life = Report::new("F2 lifecycle — ingest vs compaction threshold (DES, 32 nodes)");
+    life.set_custom(
+        ["checkpoint-bytes", "docs/s", "vs unbounded", "compactions"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    let mut unbounded = None;
+    for (label, threshold) in [
+        ("off (unbounded journal)", 0u64),
+        ("256 MiB", 256 * 1024 * 1024),
+        ("64 MiB", 64 * 1024 * 1024),
+        ("16 MiB", 16 * 1024 * 1024),
+    ] {
+        let mut spec = SimSpec::paper_preset(32, cost.clone()).unwrap();
+        spec.checkpoint_bytes = threshold;
+        let r = ClusterSim::new(spec).run();
+        let base = *unbounded.get_or_insert(r.docs_per_sec);
+        life.add_row(vec![
+            label.to_string(),
+            human_count(r.docs_per_sec as u64),
+            format!("{:.2}x", r.docs_per_sec / base),
+            r.checkpoints.to_string(),
+        ]);
+    }
+    life.print();
+    println!();
+
     if quick_mode() {
         return;
     }

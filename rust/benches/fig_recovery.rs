@@ -1,0 +1,119 @@
+//! FR — recovery time vs journal size, before and after checkpoint
+//! compaction.
+//!
+//! The lifecycle claim this bench measures: without compaction a killed
+//! job replays its *entire* write history on the next deployment
+//! (recovery is O(total writes)); with a checkpoint the next job loads
+//! the snapshot and replays only the post-checkpoint tail. Rows sweep
+//! the ingested volume; for each volume the same store is recovered
+//! twice — once from the full journal, once after `checkpoint()` — and
+//! the replayed frame/byte counts come from the engine's own
+//! `RecoveryReport`.
+//!
+//! Run: `cargo bench --bench fig_recovery` (add `--quick` for a small
+//! sweep). See `docs/EXPERIMENTS.md` for the recorded-results template.
+
+use std::time::Instant;
+
+use hpcstore::benchkit::{quick_mode, Report};
+use hpcstore::mongo::bson::Document;
+use hpcstore::mongo::storage::{Engine, LocalDir, StorageDir};
+use hpcstore::util::fmt::human_count;
+
+fn doc(i: u64) -> Document {
+    Document::new()
+        .set("ts", i as i64)
+        .set("node_id", (i % 256) as i64)
+        .set("m0", i as f64 * 0.5)
+        .set("m1", (i * 7) as f64)
+        .set("m2", (i * 13) as f64)
+}
+
+fn main() {
+    let sizes: &[u64] = if quick_mode() {
+        &[2_000, 8_000]
+    } else {
+        &[2_000, 8_000, 32_000, 64_000]
+    };
+
+    let mut report = Report::new(
+        "Recovery — replay cost vs ingested volume, before/after checkpoint compaction",
+    );
+    report.set_custom(
+        [
+            "docs",
+            "journal",
+            "recover (full replay)",
+            "frames replayed",
+            "recover (post-ckpt)",
+            "tail frames",
+            "speedup",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+    );
+
+    for &n in sizes {
+        // Build a journaled store of n synced documents, never
+        // checkpointed — the walltime-kill worst case.
+        let dir = LocalDir::temp(&format!("figrec-{n}")).unwrap();
+        let root = dir.describe();
+        {
+            let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+            eng.create_collection("metrics");
+            let mut i = 0u64;
+            while i < n {
+                let batch: Vec<Document> = (i..(i + 512).min(n)).map(doc).collect();
+                i += batch.len() as u64;
+                eng.insert_many("metrics", &batch).unwrap();
+                eng.sync().unwrap();
+            }
+        }
+
+        // (a) Recover from the full journal.
+        let t = Instant::now();
+        let eng =
+            Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        let full_ns = t.elapsed().as_nanos() as u64;
+        assert_eq!(eng.stats("metrics").docs, n);
+        let full = eng.recovery_report().clone();
+        drop(eng);
+
+        // (b) Compact, add a small tail, then recover again: replay is
+        // tail-only.
+        {
+            let mut eng =
+                Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+            eng.checkpoint().unwrap();
+            let tail: Vec<Document> = (n..n + 64).map(doc).collect();
+            eng.insert_many("metrics", &tail).unwrap();
+            eng.sync().unwrap();
+        }
+        let t = Instant::now();
+        let eng =
+            Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        let ckpt_ns = t.elapsed().as_nanos() as u64;
+        assert_eq!(eng.stats("metrics").docs, n + 64);
+        let tail = eng.recovery_report().clone();
+        assert!(
+            tail.bytes_replayed < full.bytes_replayed,
+            "compaction must shrink the replay"
+        );
+
+        report.add_row(vec![
+            human_count(n),
+            format!("{} B", human_count(full.bytes_replayed)),
+            format!("{:.2} ms", full_ns as f64 / 1e6),
+            full.frames_replayed.to_string(),
+            format!("{:.2} ms", ckpt_ns as f64 / 1e6),
+            tail.frames_replayed.to_string(),
+            format!("{:.1}x", full_ns as f64 / ckpt_ns.max(1) as f64),
+        ]);
+    }
+    report.print();
+    println!(
+        "\nclaim: with compaction, recovery replays only the post-checkpoint tail \
+         (frames column) instead of the full write history\n"
+    );
+}

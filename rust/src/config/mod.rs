@@ -135,6 +135,14 @@ pub struct StoreConfig {
     pub journal: bool,
     /// Compress checkpoint blocks (in-tree LZSS codec).
     pub compress_checkpoints: bool,
+    /// Storage lifecycle: auto-compact a shard engine (checkpoint +
+    /// journal rotation/truncation) once this many journal bytes are
+    /// durable since its last checkpoint. 0 disables auto-compaction
+    /// (checkpoints only at teardown / on the admin command).
+    pub checkpoint_bytes: u64,
+    /// Storage lifecycle: target journal segments per checkpoint
+    /// interval (segment size = `checkpoint_bytes / journal_segments`).
+    pub journal_segments: u32,
     /// insertMany sub-batch size the client uses.
     pub insert_batch: usize,
     /// Router-side ingest buffer: flush to the shards once this many
@@ -156,6 +164,8 @@ impl Default for StoreConfig {
             max_chunk_docs: 100_000,
             journal: true,
             compress_checkpoints: false,
+            checkpoint_bytes: 64 * 1024 * 1024,
+            journal_segments: 4,
             insert_batch: 1_000,
             router_flush_docs: 4_096,
             flush_interval_ms: 2,
@@ -172,6 +182,8 @@ impl StoreConfig {
             .set("max_chunk_docs", self.max_chunk_docs)
             .set("journal", self.journal)
             .set("compress_checkpoints", self.compress_checkpoints)
+            .set("checkpoint_bytes", self.checkpoint_bytes)
+            .set("journal_segments", self.journal_segments)
             .set("insert_batch", self.insert_batch)
             .set("router_flush_docs", self.router_flush_docs)
             .set("flush_interval_ms", self.flush_interval_ms)
@@ -196,6 +208,14 @@ impl StoreConfig {
                 .get("compress_checkpoints")
                 .and_then(Value::as_bool)
                 .unwrap_or(d.compress_checkpoints),
+            checkpoint_bytes: v
+                .get("checkpoint_bytes")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.checkpoint_bytes),
+            journal_segments: v
+                .get("journal_segments")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.journal_segments as u64) as u32,
             insert_batch: v
                 .get("insert_batch")
                 .and_then(Value::as_usize)
@@ -489,6 +509,8 @@ mod tests {
         assert_eq!(c2.store.insert_batch, c.store.insert_batch);
         assert_eq!(c2.store.router_flush_docs, c.store.router_flush_docs);
         assert_eq!(c2.store.flush_interval_ms, c.store.flush_interval_ms);
+        assert_eq!(c2.store.checkpoint_bytes, c.store.checkpoint_bytes);
+        assert_eq!(c2.store.journal_segments, c.store.journal_segments);
         assert_eq!(c2.workload.monitored_nodes, c.workload.monitored_nodes);
         assert_eq!(c2.lustre.osts, c.lustre.osts);
     }

@@ -281,6 +281,11 @@ impl StorageDir for LustreDir {
         self.local.remove(name)
     }
 
+    fn list(&self) -> Result<Vec<String>> {
+        // Namespace read served by the MDS: no OST traffic to account.
+        self.local.list()
+    }
+
     fn describe(&self) -> String {
         format!("lustre:/{} (backing {})", self.prefix, self.local.describe())
     }

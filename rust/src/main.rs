@@ -48,6 +48,16 @@ fn cli() -> Cli {
                         None,
                         "route ingest through the router's group-commit buffer",
                     ),
+                    f(
+                        "checkpoint-bytes",
+                        Some("BYTES"),
+                        "auto-compact a shard after this much journal (default 64 MiB, 0 = off)",
+                    ),
+                    f(
+                        "journal-segments",
+                        Some("N"),
+                        "journal segments per checkpoint interval (default 4)",
+                    ),
                     f("artifacts", Some("DIR"), "AOT artifact dir (default artifacts)"),
                     f("fallback", None, "use the scalar kernel fallback"),
                 ],
@@ -117,7 +127,17 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 
     let lustre = Lustre::mount(LustreConfig::default())?;
     let topo = Topology::small(shards, routers, pes);
-    let store = StoreConfig { insert_batch: batch, flush_interval_ms, ..Default::default() };
+    let store_defaults = StoreConfig::default();
+    let store = StoreConfig {
+        insert_batch: batch,
+        flush_interval_ms,
+        checkpoint_bytes: args
+            .get_u64_or("checkpoint-bytes", store_defaults.checkpoint_bytes)?,
+        journal_segments: args
+            .get_u64_or("journal-segments", store_defaults.journal_segments as u64)?
+            as u32,
+        ..Default::default()
+    };
     let script = RunScript::new(topo.clone(), store, lustre.clone(), kernels);
 
     // Admit through the batch scheduler like any HPC job.
@@ -152,6 +172,17 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let queries = QueryDriver::new(generate_jobs(&wl), pes as usize).run(&client)?;
     println!("queries: {}", queries.summary());
     anyhow::ensure!(queries.count_mismatches == 0, "query counts mismatched");
+
+    // Storage lifecycle: bounded on-disk journal + checkpoint generation
+    // per shard (the teardown below runs the final admin checkpoint).
+    for (i, s) in dep.cluster.shard_stats().iter().enumerate() {
+        println!(
+            "shard {i}: {} docs, journal on disk {}, checkpoint generation {}",
+            human_count(s.collection.docs),
+            human_count(s.journal_disk_bytes),
+            s.checkpoint_generation
+        );
+    }
 
     println!("lustre: {} written across {} OSTs", human_count(lustre.total_written()), lustre.config().osts);
     dep.teardown()?;

@@ -25,6 +25,7 @@ pub struct MongoClient {
 }
 
 impl MongoClient {
+    /// Build a client over the given router mailboxes (at least one).
     pub fn new(routers: Vec<RouterMailbox>) -> Self {
         assert!(!routers.is_empty(), "client needs at least one router");
         Self { routers: Arc::new(routers), next: Arc::new(AtomicUsize::new(0)) }
@@ -42,6 +43,7 @@ impl MongoClient {
         MongoClient { routers: Arc::new(vec![router]), next: Arc::new(AtomicUsize::new(0)) }
     }
 
+    /// Routers this client round-robins over.
     pub fn num_routers(&self) -> usize {
         self.routers.len()
     }
@@ -93,6 +95,7 @@ impl MongoClient {
         Ok(n as usize)
     }
 
+    /// `createIndex` on every shard (idempotent).
     pub fn create_index(&self, spec: IndexSpec) -> Result<(), WireError> {
         rpc(self.pick(), |reply| RouterRequest::CreateIndex { spec, reply })?
     }
@@ -145,10 +148,12 @@ impl BulkWriter {
         Ok(())
     }
 
+    /// Documents currently buffered client-side.
     pub fn buffered(&self) -> usize {
         self.buf.len()
     }
 
+    /// `insertMany` calls issued so far.
     pub fn flushes(&self) -> u64 {
         self.flushes
     }

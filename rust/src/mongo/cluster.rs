@@ -18,7 +18,7 @@ use crate::mongo::server::router::{Router, RouterMailbox, RouterRequest};
 use crate::mongo::server::shard::ShardServer;
 use crate::mongo::sharding::balancer::{plan_moves, BalancerPolicy};
 use crate::mongo::sharding::chunk::ShardKey;
-use crate::mongo::storage::StorageDir;
+use crate::mongo::storage::{CheckpointStats, EngineOptions, StorageDir};
 use crate::mongo::wire::{rpc, ConfigRequest, ConfigStatsReply, ShardRequest, ShardStatsReply};
 use crate::runtime::Kernels;
 use crate::util::ids::{RouterId, ShardId};
@@ -108,6 +108,12 @@ impl Cluster {
         let mut joins = Vec::new();
         joins.push(config_server.spawn_with(config_rx));
 
+        let engine_opts = EngineOptions {
+            journal: spec.store.journal,
+            compress_checkpoints: spec.store.compress_checkpoints,
+            checkpoint_bytes: spec.store.checkpoint_bytes,
+            journal_segments: spec.store.journal_segments,
+        };
         for (i, rx) in shard_rxs.into_iter().enumerate() {
             let id = ShardId(i as u32);
             let server = ShardServer::new(
@@ -117,8 +123,7 @@ impl Cluster {
                 config_tx.clone(),
                 kernels.clone(),
                 metrics.clone(),
-                spec.store.journal,
-                spec.store.compress_checkpoints,
+                engine_opts.clone(),
                 spec.store.max_chunk_docs,
                 spec.store.cursor_batch,
             )?;
@@ -230,14 +235,18 @@ impl Cluster {
         Ok(moved)
     }
 
-    /// Checkpoint every shard engine (end-of-job persistence barrier).
-    pub fn checkpoint_all(&self) -> Result<()> {
+    /// Admin command: checkpoint every shard engine now (end-of-job
+    /// persistence barrier, or operator-forced compaction). Returns one
+    /// [`CheckpointStats`] per shard, in shard order.
+    pub fn checkpoint_all(&self) -> Result<Vec<CheckpointStats>> {
+        let mut stats = Vec::with_capacity(self.shards.len());
         for (i, s) in self.shards.iter().enumerate() {
-            rpc(s, |reply| ShardRequest::Checkpoint { reply })
+            let ck = rpc(s, |reply| ShardRequest::Checkpoint { reply })
                 .map_err(|e| anyhow::anyhow!("shard {i}: {e}"))?
                 .map_err(|e| anyhow::anyhow!("shard {i}: {e}"))?;
+            stats.push(ck);
         }
-        Ok(())
+        Ok(stats)
     }
 
     pub fn shard_stats(&self) -> Vec<ShardStatsReply> {

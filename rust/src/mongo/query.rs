@@ -3,7 +3,7 @@
 //!
 //! Covers the operators the paper's workload needs (`$eq $ne $gt $gte
 //! $lt $lte $in $and $or`) over the total value order defined in
-//! [`bson::Value::cmp_total`].
+//! [`Value::cmp_total`].
 
 use std::cmp::Ordering;
 

@@ -24,6 +24,7 @@ pub struct ConfigServer {
 }
 
 impl ConfigServer {
+    /// Build a config server with a hashed pre-split chunk table.
     pub fn new(
         key: ShardKey,
         num_shards: u32,

@@ -38,9 +38,13 @@ pub struct InsertManyReply {
 /// Router statistics snapshot.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RouterStatsReply {
+    /// `insertMany` requests served (including buffered flushes).
     pub inserts: u64,
+    /// `find`/`count` requests served.
     pub finds: u64,
+    /// Chunk-map version this router holds.
     pub map_version: u64,
+    /// Estimated bytes this router put on the interconnect.
     pub wire_bytes_out: u64,
 }
 
@@ -120,6 +124,8 @@ pub struct Router {
 }
 
 impl Router {
+    /// Build a router over the given shard mailboxes. `flush_docs` /
+    /// `flush_interval` govern the buffered-ingest group commit.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: RouterId,
@@ -153,6 +159,7 @@ impl Router {
         }
     }
 
+    /// Spawn the event loop thread; returns its mailbox and join handle.
     pub fn spawn(self) -> (RouterMailbox, std::thread::JoinHandle<()>) {
         let (tx, rx) = mpsc::channel();
         let join = self.spawn_with(rx);

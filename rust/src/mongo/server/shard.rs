@@ -18,7 +18,7 @@ use std::time::Instant;
 use crate::mongo::bson::{Document, Value};
 use crate::mongo::query::{Filter, FindOptions};
 use crate::mongo::sharding::chunk::ChunkMap;
-use crate::mongo::storage::{Engine, RecordId, StorageDir};
+use crate::mongo::storage::{Engine, EngineOptions, RecordId, StorageDir};
 use crate::mongo::wire::{
     rpc, ConfigRequest, FindReply, InsertReply, ShardRequest, ShardStatsReply, WireError,
 };
@@ -57,6 +57,11 @@ pub struct ShardServer {
 }
 
 impl ShardServer {
+    /// Open the shard's engine on `dir` (recovering any persisted
+    /// state) and build the server. `engine_opts` carries the storage
+    /// lifecycle: journaling, checkpoint compression, and the
+    /// auto-compaction threshold this server enforces after every group
+    /// commit.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: ShardId,
@@ -65,12 +70,11 @@ impl ShardServer {
         config: mpsc::Sender<ConfigRequest>,
         kernels: Kernels,
         metrics: Registry,
-        journal: bool,
-        compress_checkpoints: bool,
+        engine_opts: EngineOptions,
         split_threshold: u64,
         default_batch: usize,
     ) -> anyhow::Result<Self> {
-        let mut engine = Engine::open(dir, journal, compress_checkpoints)?;
+        let mut engine = Engine::open_with(dir, engine_opts)?;
         engine.create_collection(COLLECTION);
         let mut s = Self {
             id,
@@ -169,8 +173,39 @@ impl ShardServer {
                         .engine
                         .checkpoint()
                         .map_err(|e| WireError::Server(e.to_string()));
+                    if r.is_ok() {
+                        self.metrics.counter("shard.checkpoints").inc();
+                    }
                     let _ = reply.send(r);
                 }
+            }
+        }
+    }
+
+    /// Background compaction hook, run after every group commit: once
+    /// the engine has journaled past its configured threshold, write a
+    /// checkpoint and rotate/truncate the journal so the shard's
+    /// on-disk footprint on the shared filesystem stays bounded.
+    ///
+    /// A compaction failure must not fail the triggering write — the
+    /// batch is already durable in the journal — so errors are counted
+    /// and logged, and the next group commit retries (the byte counter
+    /// keeps growing until a checkpoint succeeds).
+    fn maybe_compact(&mut self) {
+        match self.engine.maybe_checkpoint() {
+            Ok(Some(ck)) => {
+                self.metrics.counter("shard.checkpoints").inc();
+                self.metrics
+                    .counter("shard.segments_truncated")
+                    .add(ck.segments_truncated);
+                self.metrics
+                    .counter("shard.journal_bytes_truncated")
+                    .add(ck.journal_bytes_truncated);
+            }
+            Ok(None) => {}
+            Err(e) => {
+                self.metrics.counter("shard.checkpoint_errors").inc();
+                eprintln!("warn: {}: background checkpoint failed: {e:#}", self.id);
             }
         }
     }
@@ -235,6 +270,7 @@ impl ShardServer {
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
         self.metrics.counter("shard.group_commits").inc();
         self.metrics.counter("shard.docs_inserted").add(inserted as u64);
+        self.maybe_compact();
 
         // Split any chunk that crossed the threshold.
         for chunk in touched_chunks {
@@ -580,6 +616,7 @@ impl ShardServer {
             *self.positions.entry(pos).or_insert(0) += 1;
         }
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+        self.maybe_compact();
         self.metrics.counter("shard.migration_docs_in").add(n as u64);
         Ok(n)
     }
@@ -609,6 +646,7 @@ impl ShardServer {
             }
         }
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+        self.maybe_compact();
         self.metrics.counter("shard.migration_docs_out").add(n as u64);
         Ok(n)
     }
@@ -625,6 +663,8 @@ impl ShardServer {
             chunks_owned,
             map_version: self.map.version,
             journal_bytes: self.engine.pending_journal_bytes() as u64,
+            journal_disk_bytes: self.engine.journal_disk_bytes(),
+            checkpoint_generation: self.engine.generation(),
         }
     }
 }

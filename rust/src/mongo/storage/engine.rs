@@ -3,12 +3,37 @@
 //! [`StorageDir`].
 //!
 //! Write path: encode document → append journal record (durable at the
-//! next group-commit `sync`) → insert into the in-memory record store →
-//! update secondary indexes. `checkpoint()` snapshots all collections
-//! (optionally LZSS-compressed) and truncates the journal; `open()`
-//! recovers checkpoint + journal replay, so a shard restarted by a later
+//! next group-commit [`Engine::sync`]) → insert into the in-memory
+//! record store → update secondary indexes. [`Engine::checkpoint`]
+//! snapshots all collections (optionally LZSS-compressed), atomically
+//! swaps the snapshot in, rotates to a fresh journal segment, and
+//! truncates the segments the snapshot covers; [`Engine::open`] recovers
+//! checkpoint + tail-segment replay, so a shard restarted by a later
 //! batch job resumes from its Lustre directory — the paper's central
-//! persistence story.
+//! persistence story — while its on-disk footprint stays bounded.
+//!
+//! # Storage lifecycle
+//!
+//! The journal is a sequence of *segments*, `journal-NNNNNN.wal`, with a
+//! monotonically increasing sequence number. The engine appends to one
+//! open segment and rotates to the next once the segment reaches
+//! [`EngineOptions::segment_bytes`]. Every checkpoint carries a
+//! *generation* number and the highest segment sequence it covers; on
+//! recovery, segments at or below the covered watermark are skipped (and
+//! deleted, finishing any truncation a crash interrupted), so replay
+//! cost is proportional to the journal *tail*, not to total writes.
+//! [`Engine::maybe_checkpoint`] compacts once
+//! [`EngineOptions::checkpoint_bytes`] of journal have been durably
+//! written since the last checkpoint — the shard server calls it after
+//! every group commit, which keeps steady-state disk use at most one
+//! threshold plus one segment (or plus the largest single group-commit
+//! frame when a frame exceeds the segment size: a frame is atomic, so
+//! the overshoot of the frame that crosses the threshold can never be
+//! split away). A pre-rotation single-file `journal.wal`
+//! is still replayed (after the checkpoint, before any segment) and is
+//! removed by the next checkpoint.
+//!
+//! # On-disk formats
 //!
 //! Journal record: `u32 len | u8 op | u8 coll_len | coll | payload`,
 //! op 1 = insert(doc bytes), op 2 = remove(rid u64 + doc bytes for index
@@ -16,6 +41,13 @@
 //! `u32 len | doc bytes`). An insert_many batch is one frame: recovery
 //! replays it atomically or — when the frame is torn by a mid-batch
 //! crash — discards it in full, never half-applied.
+//!
+//! Checkpoint (`store.ckpt`): magic `HPCCKPT2`, u64 generation, u64
+//! covered segment seq, u8 compressed flag, then the (optionally
+//! LZSS-compressed) body described at [`Engine::checkpoint`]. The
+//! legacy `HPCCKPT1` header (no generation/segment fields) still loads.
+//! See `docs/ARCHITECTURE.md` for the full byte-level layouts and the
+//! crash-recovery state machine.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -29,17 +61,115 @@ use crate::util::compress;
 /// Record identifier within a collection.
 pub type RecordId = u64;
 
-const JOURNAL: &str = "journal.wal";
+/// Pre-rotation single-file journal name (replayed for migration,
+/// removed by the next checkpoint).
+const JOURNAL_LEGACY: &str = "journal.wal";
+/// Checkpoint file name.
+const CKPT: &str = "store.ckpt";
+/// Staging name [`StorageDir::write_atomic`] uses for [`CKPT`]; a crash
+/// during the checkpoint write leaves this behind and recovery discards
+/// it.
+const CKPT_TMP: &str = "store.ckpt.tmp";
 const OP_INSERT: u8 = 1;
 const OP_REMOVE: u8 = 2;
 const OP_INSERT_MANY: u8 = 3;
-const CKPT_MAGIC: &[u8; 8] = b"HPCCKPT1";
+/// Legacy checkpoint magic: `magic | u8 compressed | body`.
+const CKPT_MAGIC_V1: &[u8; 8] = b"HPCCKPT1";
+/// Current checkpoint magic: `magic | u64 generation | u64 covered_seq |
+/// u8 compressed | body`.
+const CKPT_MAGIC: &[u8; 8] = b"HPCCKPT2";
+
+/// File name of journal segment `seq`.
+fn segment_name(seq: u64) -> String {
+    format!("journal-{seq:06}.wal")
+}
+
+/// Parse a segment file name back to its sequence number (`None` for
+/// anything else, including the legacy `journal.wal`).
+fn parse_segment_seq(name: &str) -> Option<u64> {
+    name.strip_prefix("journal-")?.strip_suffix(".wal")?.parse().ok()
+}
+
+/// Storage-lifecycle knobs for one engine.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// Write-ahead journaling (off = in-memory until checkpoint).
+    pub journal: bool,
+    /// LZSS-compress checkpoint bodies.
+    pub compress_checkpoints: bool,
+    /// Compact ([`Engine::maybe_checkpoint`]) once this many journal
+    /// bytes are durable since the last checkpoint. `0` = manual
+    /// checkpoints only (the pre-lifecycle behaviour).
+    pub checkpoint_bytes: u64,
+    /// Target number of journal segments per checkpoint interval; the
+    /// open segment rotates every `checkpoint_bytes / journal_segments`
+    /// bytes so truncation reclaims space in bounded pieces.
+    pub journal_segments: u32,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            journal: true,
+            compress_checkpoints: false,
+            checkpoint_bytes: 0,
+            journal_segments: 4,
+        }
+    }
+}
+
+impl EngineOptions {
+    /// Rotation threshold for the open journal segment. Unbounded when
+    /// auto-compaction is off: a single segment then behaves exactly
+    /// like the pre-lifecycle single-file journal.
+    pub fn segment_bytes(&self) -> u64 {
+        if self.checkpoint_bytes == 0 {
+            u64::MAX
+        } else {
+            (self.checkpoint_bytes / self.journal_segments.max(1) as u64).max(1)
+        }
+    }
+}
+
+/// What one [`Engine::checkpoint`] did (admin-command reply, metrics).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CheckpointStats {
+    /// Generation number of the checkpoint just written.
+    pub generation: u64,
+    /// Size of the checkpoint file, after optional compression.
+    pub checkpoint_bytes: u64,
+    /// Journal files deleted because the checkpoint covers them
+    /// (segments plus any legacy `journal.wal`).
+    pub segments_truncated: u64,
+    /// On-disk journal bytes reclaimed by the truncation.
+    pub journal_bytes_truncated: u64,
+}
+
+/// What the last [`Engine::open`] replayed (recovery benchmarks, crash
+/// tests).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Generation of the checkpoint loaded (0 = none on disk).
+    pub checkpoint_generation: u64,
+    /// Journal files replayed (tail segments plus any legacy journal).
+    pub segments_replayed: u64,
+    /// Segments skipped — and deleted — because the checkpoint already
+    /// covers them (a crash interrupted their truncation).
+    pub segments_skipped: u64,
+    /// Complete journal frames applied.
+    pub frames_replayed: u64,
+    /// Journal bytes applied (excludes any torn tail).
+    pub bytes_replayed: u64,
+}
 
 /// Per-collection statistics.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CollectionStats {
+    /// Live documents.
     pub docs: u64,
+    /// Encoded bytes of the live documents.
     pub bytes: u64,
+    /// Entries across all secondary indexes.
     pub index_entries: u64,
 }
 
@@ -88,33 +218,73 @@ impl Collection {
 /// thread owns one engine (WiredTiger-style, one cache per `mongod`).
 pub struct Engine {
     dir: Box<dyn StorageDir>,
+    /// The open journal segment (`None` when journaling is off).
     journal: Option<Box<dyn StorageFile>>,
     collections: HashMap<String, Collection>,
-    journal_enabled: bool,
-    compress_checkpoints: bool,
+    opts: EngineOptions,
     journal_buf: Vec<u8>,
+    /// Frames staged in `journal_buf`, not yet durable.
+    pending_frames: u64,
+    /// Sequence number of the open segment.
+    current_seq: u64,
+    /// Highest segment sequence the on-disk checkpoint covers.
+    covered_seq: u64,
+    /// Generation of the on-disk checkpoint (0 = none yet).
+    generation: u64,
+    /// Journal bytes made durable since the last checkpoint — the
+    /// auto-compaction trigger.
+    synced_bytes_since_ckpt: u64,
+    /// Journal frames made durable since the last checkpoint.
+    frames_since_ckpt: u64,
+    /// On-disk bytes in live *sealed* segments (the open segment's bytes
+    /// are read from its file handle).
+    sealed_bytes: u64,
+    recovery: RecoveryReport,
 }
 
 impl Engine {
     /// Open (or create) an engine on `dir`, recovering any checkpoint +
-    /// journal found there.
+    /// journal found there. Convenience wrapper over
+    /// [`Engine::open_with`] with manual-checkpoint lifecycle defaults.
     pub fn open(
         dir: Box<dyn StorageDir>,
         journal_enabled: bool,
         compress_checkpoints: bool,
     ) -> Result<Self> {
+        Self::open_with(
+            dir,
+            EngineOptions {
+                journal: journal_enabled,
+                compress_checkpoints,
+                ..EngineOptions::default()
+            },
+        )
+    }
+
+    /// Open (or create) an engine with explicit lifecycle options,
+    /// recovering checkpoint + journal-tail state from `dir`. The
+    /// recovery outcome is readable via [`Engine::recovery_report`].
+    pub fn open_with(dir: Box<dyn StorageDir>, opts: EngineOptions) -> Result<Self> {
         let mut eng = Self {
             journal: None,
             dir,
             collections: HashMap::new(),
-            journal_enabled,
-            compress_checkpoints,
+            opts,
             journal_buf: Vec::new(),
+            pending_frames: 0,
+            current_seq: 0,
+            covered_seq: 0,
+            generation: 0,
+            synced_bytes_since_ckpt: 0,
+            frames_since_ckpt: 0,
+            sealed_bytes: 0,
+            recovery: RecoveryReport::default(),
         };
         eng.recover()?;
-        if journal_enabled {
-            eng.journal = Some(eng.dir.append_to(JOURNAL)?);
-        }
+        // The open segment is created lazily by the first group commit
+        // (see [`Engine::sync`]): an idle open leaves no new file, and
+        // replayed segments stay sealed so a later crash can only tear
+        // the newest file.
         Ok(eng)
     }
 
@@ -123,6 +293,8 @@ impl Engine {
         self.collections.entry(name.to_string()).or_insert_with(Collection::new);
     }
 
+    /// Create a secondary index (idempotent), backfilling from existing
+    /// records.
     pub fn create_index(&mut self, coll: &str, spec: IndexSpec) -> Result<()> {
         self.create_collection(coll);
         let c = self.collections.get_mut(coll).unwrap();
@@ -147,8 +319,8 @@ impl Engine {
             bail!("no collection `{coll}`");
         }
         let encoded = doc.encode();
-        if self.journal_enabled {
-            Self::journal_record(&mut self.journal_buf, OP_INSERT, coll, &encoded);
+        if self.opts.journal {
+            self.journal_record(OP_INSERT, coll, &encoded);
         }
         let c = self.collections.get_mut(coll).expect("collection checked above");
         Ok(c.insert_decoded(doc, encoded))
@@ -167,7 +339,7 @@ impl Engine {
             bail!("no collection `{coll}`");
         }
         let encoded: Vec<Vec<u8>> = docs.iter().map(Document::encode).collect();
-        if self.journal_enabled {
+        if self.opts.journal {
             let payload_len = 4 + encoded.iter().map(|e| 4 + e.len()).sum::<usize>();
             let mut payload = Vec::with_capacity(payload_len);
             payload.extend_from_slice(&(docs.len() as u32).to_le_bytes());
@@ -175,7 +347,7 @@ impl Engine {
                 payload.extend_from_slice(&(e.len() as u32).to_le_bytes());
                 payload.extend_from_slice(e);
             }
-            Self::journal_record(&mut self.journal_buf, OP_INSERT_MANY, coll, &payload);
+            self.journal_record(OP_INSERT_MANY, coll, &payload);
         }
         let c = self.collections.get_mut(coll).expect("collection checked above");
         let mut rids = Vec::with_capacity(docs.len());
@@ -192,26 +364,61 @@ impl Engine {
             .get_mut(coll)
             .ok_or_else(|| anyhow::anyhow!("no collection `{coll}`"))?;
         let doc = c.remove(rid)?;
-        if self.journal_enabled {
+        if self.opts.journal {
             let mut payload = rid.to_le_bytes().to_vec();
             payload.extend_from_slice(&doc.encode());
-            Self::journal_record(&mut self.journal_buf, OP_REMOVE, coll, &payload);
+            self.journal_record(OP_REMOVE, coll, &payload);
         }
         Ok(doc)
     }
 
-    /// Group commit: flush buffered journal records to the directory.
+    /// Group commit: flush buffered journal records to the open segment,
+    /// rotating to a fresh segment once it reaches
+    /// [`EngineOptions::segment_bytes`].
     pub fn sync(&mut self) -> Result<()> {
-        if !self.journal_enabled || self.journal_buf.is_empty() {
+        if !self.opts.journal || self.journal_buf.is_empty() {
             return Ok(());
         }
-        let j = self.journal.as_mut().expect("journal open");
-        j.append(&self.journal_buf)?;
-        j.sync()?;
+        if self.journal.is_none() {
+            // Segments are created lazily by the first commit they
+            // receive, so idle opens and checkpoints never litter empty
+            // files (recovery cost stays proportional to written data,
+            // not to restart count).
+            self.current_seq += 1;
+            self.journal = Some(self.dir.create(&segment_name(self.current_seq))?);
+        }
+        let (seg_len, rotate) = {
+            let j = self.journal.as_mut().expect("journal opened above");
+            j.append(&self.journal_buf)?;
+            j.sync()?;
+            (j.len(), j.len() >= self.opts.segment_bytes())
+        };
+        self.synced_bytes_since_ckpt += self.journal_buf.len() as u64;
+        self.frames_since_ckpt += self.pending_frames;
+        self.pending_frames = 0;
         self.journal_buf.clear();
+        if rotate {
+            self.sealed_bytes += seg_len;
+            self.journal = None; // next commit opens segment current_seq+1
+        }
         Ok(())
     }
 
+    /// Compact if at least [`EngineOptions::checkpoint_bytes`] of
+    /// journal are durable since the last checkpoint — the background
+    /// compaction hook the shard server runs after every group commit.
+    /// No-op (and `Ok(None)`) below the threshold or when the threshold
+    /// is 0 (manual mode).
+    pub fn maybe_checkpoint(&mut self) -> Result<Option<CheckpointStats>> {
+        if self.opts.checkpoint_bytes == 0
+            || self.synced_bytes_since_ckpt < self.opts.checkpoint_bytes
+        {
+            return Ok(None);
+        }
+        self.checkpoint().map(Some)
+    }
+
+    /// Fetch one record, decoding it. `None` if missing.
     pub fn fetch(&self, coll: &str, rid: RecordId) -> Option<Document> {
         self.collections
             .get(coll)?
@@ -243,6 +450,7 @@ impl Engine {
             .unwrap_or_default()
     }
 
+    /// Look up a secondary index by name.
     pub fn index(&self, coll: &str, name: &str) -> Option<&Index> {
         self.collections
             .get(coll)?
@@ -251,6 +459,7 @@ impl Engine {
             .find(|i| i.spec.name == name)
     }
 
+    /// Specs of all secondary indexes on `coll`.
     pub fn indexes(&self, coll: &str) -> Vec<&IndexSpec> {
         self.collections
             .get(coll)
@@ -258,6 +467,7 @@ impl Engine {
             .unwrap_or_default()
     }
 
+    /// Live statistics for one collection.
     pub fn stats(&self, coll: &str) -> CollectionStats {
         match self.collections.get(coll) {
             Some(c) => CollectionStats {
@@ -269,21 +479,29 @@ impl Engine {
         }
     }
 
+    /// All collection names, sorted.
     pub fn collection_names(&self) -> Vec<String> {
         let mut names: Vec<String> = self.collections.keys().cloned().collect();
         names.sort();
         names
     }
 
-    /// Snapshot all collections to a checkpoint file and truncate the
-    /// journal.
+    /// Snapshot all collections to the checkpoint file, rotate to a
+    /// fresh journal segment, and truncate every journal file the
+    /// snapshot covers.
     ///
-    /// Checkpoint layout: magic, u8 compressed, u32 ncolls, then per
-    /// collection: u8 name_len, name, u64 next_rid, u32 n_indexes,
-    /// per index (u8 len, joined field names), u64 nrecords, then
-    /// records (u64 rid, u32 len, bytes). Payload after the flags byte is
-    /// LZSS-compressed when enabled.
-    pub fn checkpoint(&mut self) -> Result<()> {
+    /// Checkpoint body layout: u32 ncolls, then per collection: u8
+    /// name_len, name, u64 next_rid, u32 n_indexes, per index (u8 len,
+    /// joined field names), u64 nrecords, then records (u64 rid, u32
+    /// len, bytes). The body is LZSS-compressed when
+    /// [`EngineOptions::compress_checkpoints`] is set.
+    ///
+    /// Crash safety: the write stages to `store.ckpt.tmp` and renames —
+    /// a kill during the write or before the swap leaves the previous
+    /// checkpoint authoritative; a kill after the swap but during the
+    /// truncation is finished by the next recovery, which skips (and
+    /// deletes) covered segments.
+    pub fn checkpoint(&mut self) -> Result<CheckpointStats> {
         let mut body = Vec::new();
         let mut names: Vec<&String> = self.collections.keys().collect();
         names.sort();
@@ -306,45 +524,152 @@ impl Engine {
                 body.extend_from_slice(bytes);
             }
         }
+        self.generation += 1;
+        // The snapshot contains every in-memory record, so it covers the
+        // open segment (and anything still buffered).
+        let covered = self.current_seq;
         let mut out = CKPT_MAGIC.to_vec();
-        if self.compress_checkpoints {
+        out.extend_from_slice(&self.generation.to_le_bytes());
+        out.extend_from_slice(&covered.to_le_bytes());
+        if self.opts.compress_checkpoints {
             out.push(1);
             out.extend_from_slice(&compress::compress(&body));
         } else {
             out.push(0);
             out.extend_from_slice(&body);
         }
-        self.dir.write_atomic("store.ckpt", &out)?;
-        // Truncate the journal: everything is in the checkpoint now.
-        if self.journal_enabled {
-            self.journal_buf.clear();
-            self.journal = Some(self.dir.create(JOURNAL)?);
+        let mut stats = CheckpointStats {
+            generation: self.generation,
+            checkpoint_bytes: out.len() as u64,
+            ..Default::default()
+        };
+        // Atomic swap: stage + rename. From here the new checkpoint is
+        // authoritative.
+        self.dir.write_atomic(CKPT, &out)?;
+        self.journal_buf.clear();
+        self.pending_frames = 0;
+        if self.opts.journal {
+            stats.journal_bytes_truncated =
+                self.sealed_bytes + self.journal.as_ref().map(|j| j.len()).unwrap_or(0);
+            // Seal the covered journal; the next group commit opens
+            // segment covered+1 lazily. A crash before the truncation
+            // below finishes leaves only covered segments behind, which
+            // recovery skips.
+            self.covered_seq = covered;
+            self.current_seq = covered;
+            self.journal = None;
+            if self.dir.exists(JOURNAL_LEGACY) {
+                stats.segments_truncated += 1;
+                let _ = self.dir.remove(JOURNAL_LEGACY);
+            }
+            for name in self.dir.list()? {
+                if let Some(seq) = parse_segment_seq(&name) {
+                    if seq <= covered {
+                        stats.segments_truncated += 1;
+                        let _ = self.dir.remove(&name);
+                    }
+                }
+            }
         }
-        Ok(())
+        self.sealed_bytes = 0;
+        self.synced_bytes_since_ckpt = 0;
+        self.frames_since_ckpt = 0;
+        Ok(stats)
     }
 
     fn recover(&mut self) -> Result<()> {
-        if self.dir.exists("store.ckpt") {
-            let raw = self.dir.read("store.ckpt")?;
-            self.load_checkpoint(&raw)
+        // A checkpoint staging file can only exist if a crash interrupted
+        // the write before its atomic rename; the previous checkpoint (if
+        // any) is authoritative, so discard the partial one.
+        if self.dir.exists(CKPT_TMP) {
+            let _ = self.dir.remove(CKPT_TMP);
+        }
+        let mut ckpt_version = 0u8;
+        if self.dir.exists(CKPT) {
+            let raw = self.dir.read(CKPT)?;
+            ckpt_version = self
+                .load_checkpoint(&raw)
                 .with_context(|| format!("corrupt checkpoint in {}", self.dir.describe()))?;
         }
-        if self.dir.exists(JOURNAL) {
-            let raw = self.dir.read(JOURNAL)?;
-            self.replay_journal(&raw)
-                .with_context(|| format!("corrupt journal in {}", self.dir.describe()))?;
+        self.recovery.checkpoint_generation = self.generation;
+        // Legacy single-file journal (pre-segment layout). A v2
+        // checkpoint is only ever written by an engine version that had
+        // already replayed (or written) the legacy journal into memory,
+        // so when one exists the legacy file is covered — the kill
+        // landed between the checkpoint swap and the legacy removal;
+        // replaying it would double-apply every document. Otherwise
+        // (no checkpoint, or a v1 one that truncated the file in place)
+        // whatever is on disk is the tail: replay it.
+        if self.dir.exists(JOURNAL_LEGACY) {
+            if ckpt_version >= 2 {
+                self.recovery.segments_skipped += 1;
+                let _ = self.dir.remove(JOURNAL_LEGACY);
+            } else {
+                let raw = self.dir.read(JOURNAL_LEGACY)?;
+                self.replay_journal(&raw)
+                    .with_context(|| format!("corrupt journal in {}", self.dir.describe()))?;
+                self.sealed_bytes += raw.len() as u64;
+                self.recovery.segments_replayed += 1;
+            }
         }
+        // Segmented journal: replay post-checkpoint segments in order.
+        // Covered segments are already in the checkpoint — delete them,
+        // finishing any truncation a crash interrupted.
+        let mut seqs: Vec<u64> = self
+            .dir
+            .list()?
+            .iter()
+            .filter_map(|n| parse_segment_seq(n))
+            .collect();
+        seqs.sort_unstable();
+        for seq in seqs {
+            self.current_seq = self.current_seq.max(seq);
+            if seq <= self.covered_seq {
+                self.recovery.segments_skipped += 1;
+                let _ = self.dir.remove(&segment_name(seq));
+                continue;
+            }
+            let raw = self.dir.read(&segment_name(seq))?;
+            self.replay_journal(&raw).with_context(|| {
+                format!("corrupt journal segment {seq} in {}", self.dir.describe())
+            })?;
+            self.sealed_bytes += raw.len() as u64;
+            self.recovery.segments_replayed += 1;
+        }
+        self.current_seq = self.current_seq.max(self.covered_seq);
+        // The replayed tail is durable-but-uncheckpointed work: seed the
+        // compaction trigger with it, or repeated kill-restart cycles
+        // that each stay below the threshold would grow the journal (and
+        // the next replay) without bound.
+        self.synced_bytes_since_ckpt = self.recovery.bytes_replayed;
+        self.frames_since_ckpt = self.recovery.frames_replayed;
         Ok(())
     }
 
-    fn load_checkpoint(&mut self, raw: &[u8]) -> Result<()> {
-        if raw.len() < 9 || &raw[..8] != CKPT_MAGIC {
-            bail!("bad checkpoint magic");
+    /// Load a checkpoint, returning its header version (1 = legacy
+    /// `HPCCKPT1`, 2 = `HPCCKPT2`).
+    fn load_checkpoint(&mut self, raw: &[u8]) -> Result<u8> {
+        if raw.len() >= 9 && &raw[..8] == CKPT_MAGIC_V1 {
+            // Legacy header: no generation or segment watermark.
+            self.generation = 1;
+            self.covered_seq = 0;
+            self.load_checkpoint_body(raw[8], &raw[9..])?;
+            return Ok(1);
         }
-        let body: Vec<u8> = if raw[8] == 1 {
-            compress::decompress(&raw[9..])?
+        if raw.len() >= 25 && &raw[..8] == CKPT_MAGIC {
+            self.generation = u64::from_le_bytes(raw[8..16].try_into()?);
+            self.covered_seq = u64::from_le_bytes(raw[16..24].try_into()?);
+            self.load_checkpoint_body(raw[24], &raw[25..])?;
+            return Ok(2);
+        }
+        bail!("bad checkpoint magic");
+    }
+
+    fn load_checkpoint_body(&mut self, compressed: u8, payload: &[u8]) -> Result<()> {
+        let body: Vec<u8> = if compressed == 1 {
+            compress::decompress(payload)?
         } else {
-            raw[9..].to_vec()
+            payload.to_vec()
         };
         let mut pos = 0usize;
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
@@ -454,22 +779,57 @@ impl Engine {
                 }
                 _ => bail!("unknown journal op {op}"),
             }
+            self.recovery.frames_replayed += 1;
+            self.recovery.bytes_replayed += 4 + len as u64;
         }
         Ok(())
     }
 
-    fn journal_record(buf: &mut Vec<u8>, op: u8, coll: &str, payload: &[u8]) {
+    fn journal_record(&mut self, op: u8, coll: &str, payload: &[u8]) {
         let len = 2 + coll.len() + payload.len();
-        buf.extend_from_slice(&(len as u32).to_le_bytes());
-        buf.push(op);
-        buf.push(coll.len() as u8);
-        buf.extend_from_slice(coll.as_bytes());
-        buf.extend_from_slice(payload);
+        self.journal_buf.extend_from_slice(&(len as u32).to_le_bytes());
+        self.journal_buf.push(op);
+        self.journal_buf.push(coll.len() as u8);
+        self.journal_buf.extend_from_slice(coll.as_bytes());
+        self.journal_buf.extend_from_slice(payload);
+        self.pending_frames += 1;
     }
 
     /// Bytes of journal waiting for the next group commit (tests/metrics).
     pub fn pending_journal_bytes(&self) -> usize {
         self.journal_buf.len()
+    }
+
+    /// Durable journal bytes accumulated since the last checkpoint —
+    /// the auto-compaction trigger variable.
+    pub fn journal_bytes_since_checkpoint(&self) -> u64 {
+        self.synced_bytes_since_ckpt
+    }
+
+    /// Durable journal frames accumulated since the last checkpoint.
+    pub fn frames_since_checkpoint(&self) -> u64 {
+        self.frames_since_ckpt
+    }
+
+    /// Total on-disk journal footprint: live sealed segments plus the
+    /// open segment. This is the quantity the lifecycle bounds.
+    pub fn journal_disk_bytes(&self) -> u64 {
+        self.sealed_bytes + self.journal.as_ref().map(|j| j.len()).unwrap_or(0)
+    }
+
+    /// Generation of the newest checkpoint (0 = never checkpointed).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// What the opening recovery replayed.
+    pub fn recovery_report(&self) -> &RecoveryReport {
+        &self.recovery
+    }
+
+    /// The lifecycle options this engine runs with.
+    pub fn options(&self) -> &EngineOptions {
+        &self.opts
     }
 }
 
@@ -489,6 +849,9 @@ mod tests {
         let eng = Engine::open(Box::new(dir), journal, compress).unwrap();
         (eng, path)
     }
+
+    /// The first segment an engine on a fresh directory writes to.
+    const SEG1: &str = "journal-000001.wal";
 
     #[test]
     fn insert_fetch_scan() {
@@ -546,6 +909,7 @@ mod tests {
         let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
         assert_eq!(eng.stats("metrics").docs, 10);
         assert_eq!(eng.fetch("metrics", 3).unwrap().get_i64("ts"), Some(3));
+        assert_eq!(eng.recovery_report().frames_replayed, 10);
     }
 
     #[test]
@@ -578,7 +942,9 @@ mod tests {
                     eng.insert("metrics", &doc(t, t % 3)).unwrap();
                 }
                 eng.sync().unwrap();
-                eng.checkpoint().unwrap();
+                let ck = eng.checkpoint().unwrap();
+                assert_eq!(ck.generation, 1);
+                assert!(ck.segments_truncated >= 1, "covered segment must go");
                 // Post-checkpoint writes land in the fresh journal.
                 eng.insert("metrics", &doc(100, 9)).unwrap();
                 eng.sync().unwrap();
@@ -586,6 +952,9 @@ mod tests {
             let eng =
                 Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, compress).unwrap();
             assert_eq!(eng.stats("metrics").docs, 26, "compress={compress}");
+            // Only the post-checkpoint tail replays.
+            assert_eq!(eng.recovery_report().checkpoint_generation, 1);
+            assert_eq!(eng.recovery_report().frames_replayed, 1);
             // Indexes rebuilt from checkpoint specs + journal replay.
             let idx = eng.index("metrics", "node_id_1").unwrap();
             assert_eq!(idx.point(&[&Value::Int(9)]).len(), 1);
@@ -624,7 +993,7 @@ mod tests {
             use std::io::Write;
             let mut f = std::fs::OpenOptions::new()
                 .append(true)
-                .open(std::path::Path::new(&root).join("journal.wal"))
+                .open(std::path::Path::new(&root).join(SEG1))
                 .unwrap();
             f.write_all(&100u32.to_le_bytes()).unwrap();
             f.write_all(&[1, 1, b'm']).unwrap(); // incomplete
@@ -706,7 +1075,7 @@ mod tests {
             eng.sync().unwrap();
         }
         let frame =
-            std::fs::read(std::path::Path::new(&scratch_root).join("journal.wal")).unwrap();
+            std::fs::read(std::path::Path::new(&scratch_root).join(SEG1)).unwrap();
 
         // Base journal: one synced batch of 5 documents.
         let base_dir = LocalDir::temp("eng13-base").unwrap();
@@ -718,7 +1087,7 @@ mod tests {
                 .unwrap();
             eng.sync().unwrap();
         }
-        let base = std::fs::read(std::path::Path::new(&base_root).join("journal.wal")).unwrap();
+        let base = std::fs::read(std::path::Path::new(&base_root).join(SEG1)).unwrap();
 
         // Scenario A — the second batch's frame was fully written before
         // the crash: it replays atomically (5 + 3 docs).
@@ -727,7 +1096,7 @@ mod tests {
             let root = dir.describe();
             let mut bytes = base.clone();
             bytes.extend_from_slice(&frame);
-            std::fs::write(std::path::Path::new(&root).join("journal.wal"), &bytes).unwrap();
+            std::fs::write(std::path::Path::new(&root).join(SEG1), &bytes).unwrap();
             let eng =
                 Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
             assert_eq!(eng.stats("m").docs, 8);
@@ -742,7 +1111,7 @@ mod tests {
             let root = dir.describe();
             let mut bytes = base.clone();
             bytes.extend_from_slice(&frame[..cut]);
-            std::fs::write(std::path::Path::new(&root).join("journal.wal"), &bytes).unwrap();
+            std::fs::write(std::path::Path::new(&root).join(SEG1), &bytes).unwrap();
             let eng =
                 Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
             assert_eq!(eng.stats("m").docs, 5, "cut={cut}: torn batch must not replay");
@@ -766,6 +1135,113 @@ mod tests {
         eng.insert("m", &doc(1, 1)).unwrap();
         eng.sync().unwrap();
         assert_eq!(eng.pending_journal_bytes(), 0);
+        assert!(!std::path::Path::new(&root).join(SEG1).exists());
         assert!(!std::path::Path::new(&root).join("journal.wal").exists());
+    }
+
+    #[test]
+    fn segments_rotate_and_all_replay() {
+        // Small derived segment size (2 KiB) without auto-compaction:
+        // maybe_checkpoint is simply never called.
+        let opts = EngineOptions {
+            journal: true,
+            compress_checkpoints: false,
+            checkpoint_bytes: 8192,
+            journal_segments: 4,
+        };
+        let dir = LocalDir::temp("eng14").unwrap();
+        let root = dir.describe();
+        let mut total = 0u64;
+        {
+            let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+            eng.create_collection("m");
+            for b in 0..12 {
+                let batch: Vec<Document> =
+                    (0..20).map(|i| doc(b * 20 + i, (b * 20 + i) % 5)).collect();
+                total += batch.len() as u64;
+                eng.insert_many("m", &batch).unwrap();
+                eng.sync().unwrap();
+            }
+            let segs = std::fs::read_dir(&root)
+                .unwrap()
+                .filter(|e| {
+                    parse_segment_seq(
+                        &e.as_ref().unwrap().file_name().to_string_lossy(),
+                    )
+                    .is_some()
+                })
+                .count();
+            assert!(segs >= 2, "expected rotation, got {segs} segment(s)");
+        }
+        let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+        assert_eq!(eng.stats("m").docs, total);
+        assert!(eng.recovery_report().segments_replayed >= 2);
+    }
+
+    #[test]
+    fn maybe_checkpoint_bounds_journal_and_recovers() {
+        let opts = EngineOptions {
+            journal: true,
+            compress_checkpoints: true,
+            checkpoint_bytes: 16 * 1024,
+            journal_segments: 4,
+        };
+        let dir = LocalDir::temp("eng15").unwrap();
+        let root = dir.describe();
+        let mut total = 0u64;
+        {
+            let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+            eng.create_collection("m");
+            let mut compactions = 0u64;
+            for b in 0..80 {
+                let batch: Vec<Document> =
+                    (0..16).map(|i| doc(b * 16 + i, (b * 16 + i) % 5)).collect();
+                total += batch.len() as u64;
+                eng.insert_many("m", &batch).unwrap();
+                eng.sync().unwrap();
+                if eng.maybe_checkpoint().unwrap().is_some() {
+                    compactions += 1;
+                }
+                // Bounded steady state: at most one threshold plus the
+                // segment that absorbed the overshooting frame.
+                assert!(
+                    eng.journal_disk_bytes()
+                        <= opts.checkpoint_bytes + opts.segment_bytes(),
+                    "journal {} exceeds bound",
+                    eng.journal_disk_bytes()
+                );
+            }
+            assert!(compactions >= 2, "sustained ingest must compact");
+            assert_eq!(eng.generation(), compactions);
+        }
+        let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts.clone()).unwrap();
+        assert_eq!(eng.stats("m").docs, total);
+        // Recovery replays only the tail, not O(total writes).
+        assert!(
+            eng.recovery_report().bytes_replayed
+                <= opts.checkpoint_bytes + opts.segment_bytes(),
+            "replayed {} bytes",
+            eng.recovery_report().bytes_replayed
+        );
+    }
+
+    #[test]
+    fn frame_and_byte_counters_track_syncs() {
+        let (mut eng, _) = temp_engine("eng16", true, false);
+        eng.create_collection("m");
+        eng.insert("m", &doc(1, 1)).unwrap();
+        eng.insert_many("m", &[doc(2, 2), doc(3, 3)]).unwrap();
+        assert_eq!(eng.frames_since_checkpoint(), 0, "nothing durable yet");
+        eng.sync().unwrap();
+        assert_eq!(eng.frames_since_checkpoint(), 2);
+        assert!(eng.journal_bytes_since_checkpoint() > 0);
+        assert_eq!(
+            eng.journal_bytes_since_checkpoint(),
+            eng.journal_disk_bytes()
+        );
+        eng.checkpoint().unwrap();
+        assert_eq!(eng.frames_since_checkpoint(), 0);
+        assert_eq!(eng.journal_bytes_since_checkpoint(), 0);
+        assert_eq!(eng.journal_disk_bytes(), 0);
     }
 }

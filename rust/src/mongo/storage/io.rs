@@ -27,10 +27,17 @@ pub trait StorageDir: Send + Sync {
     fn append_to(&self, name: &str) -> Result<Box<dyn StorageFile>>;
     /// Read a whole file.
     fn read(&self, name: &str) -> Result<Vec<u8>>;
-    /// Atomically replace a file's contents (checkpoints).
+    /// Atomically replace a file's contents (checkpoints): the
+    /// implementation stages to `<name>.tmp` and renames, so readers see
+    /// either the old bytes or the new bytes, never a prefix.
     fn write_atomic(&self, name: &str, bytes: &[u8]) -> Result<()>;
+    /// Whether a file named `name` exists.
     fn exists(&self, name: &str) -> bool;
+    /// Delete a file (journal-segment truncation).
     fn remove(&self, name: &str) -> Result<()>;
+    /// Names of all files in the directory, sorted (the engine scans
+    /// this for journal segments on recovery and truncation).
+    fn list(&self) -> Result<Vec<String>>;
     /// Human-readable location (diagnostics).
     fn describe(&self) -> String;
 }
@@ -140,6 +147,20 @@ impl StorageDir for LocalDir {
         Ok(())
     }
 
+    fn list(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in fs::read_dir(&self.root)
+            .with_context(|| format!("listing {}", self.root.display()))?
+        {
+            let entry = entry?;
+            if entry.file_type()?.is_file() {
+                names.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
     fn describe(&self) -> String {
         self.root.display().to_string()
     }
@@ -184,6 +205,16 @@ mod tests {
         assert!(d.exists("ck"));
         d.remove("ck").unwrap();
         assert!(!d.exists("ck"));
+    }
+
+    #[test]
+    fn list_returns_sorted_file_names() {
+        let d = LocalDir::temp("io5").unwrap();
+        assert!(d.list().unwrap().is_empty());
+        d.create("b.wal").unwrap().append(b"x").unwrap();
+        d.create("a.wal").unwrap().append(b"y").unwrap();
+        d.write_atomic("ck", b"v").unwrap();
+        assert_eq!(d.list().unwrap(), vec!["a.wal", "b.wal", "ck"]);
     }
 
     #[test]

@@ -2,11 +2,19 @@
 //! checkpoints) with ordered secondary indexes, writing through a
 //! pluggable [`io::StorageDir`] so shards can sit on the Lustre
 //! simulator (live mode) or a plain local directory (tests).
+//!
+//! The engine owns its on-disk lifecycle: the journal is segmented,
+//! checkpoints are generation-numbered and cover a segment watermark,
+//! and compaction ([`Engine::maybe_checkpoint`]) keeps steady-state
+//! disk use bounded under sustained ingest. The formats and the
+//! crash-recovery state machine are specified in `docs/ARCHITECTURE.md`.
 
 pub mod engine;
 pub mod index;
 pub mod io;
 
-pub use engine::{CollectionStats, Engine, RecordId};
+pub use engine::{
+    CheckpointStats, CollectionStats, Engine, EngineOptions, RecordId, RecoveryReport,
+};
 pub use index::{encode_key, Index, IndexSpec};
 pub use io::{LocalDir, StorageDir, StorageFile};

@@ -13,7 +13,7 @@ use crate::mongo::query::{Filter, FindOptions};
 use crate::mongo::sharding::chunk::ChunkMap;
 use crate::mongo::sharding::config_server::{Migration, VersionCheck};
 use crate::mongo::storage::index::IndexSpec;
-use crate::mongo::storage::CollectionStats;
+use crate::mongo::storage::{CheckpointStats, CollectionStats};
 use crate::util::ids::ShardId;
 
 /// Reply channel for an RPC.
@@ -62,10 +62,19 @@ pub struct FindReply {
 /// Shard statistics snapshot.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ShardStatsReply {
+    /// Live stats of the sharded collection.
     pub collection: CollectionStats,
+    /// Chunks this shard currently owns.
     pub chunks_owned: u32,
+    /// Chunk-map version the shard has.
     pub map_version: u64,
+    /// Journal bytes buffered for the next group commit.
     pub journal_bytes: u64,
+    /// On-disk journal footprint (live segments) — the quantity the
+    /// storage lifecycle bounds.
+    pub journal_disk_bytes: u64,
+    /// Checkpoint generation of the shard's engine.
+    pub checkpoint_generation: u64,
 }
 
 /// Requests handled by a shard server (`mongod`).
@@ -116,9 +125,11 @@ pub enum ShardRequest {
     Stats {
         reply: Reply<ShardStatsReply>,
     },
-    /// Checkpoint the storage engine (end-of-job persistence).
+    /// Admin command: checkpoint the storage engine now (end-of-job
+    /// persistence barrier, or operator-forced compaction). Replies with
+    /// what the compaction did.
     Checkpoint {
-        reply: Reply<Result<(), WireError>>,
+        reply: Reply<Result<CheckpointStats, WireError>>,
     },
     Shutdown,
 }

@@ -35,6 +35,10 @@ pub struct SimSpec {
     pub batch: usize,
     /// Chunk split threshold (docs per chunk).
     pub max_chunk_docs: u64,
+    /// Storage lifecycle: a shard compacts (checkpoint + journal
+    /// truncation) after journaling this many bytes. 0 = off, matching
+    /// the live `StoreConfig::checkpoint_bytes` = 0 behaviour.
+    pub checkpoint_bytes: u64,
     /// OST count backing the store's scratch directories.
     pub osts: u32,
     /// User jobs for the query phase.
@@ -63,6 +67,7 @@ impl SimSpec {
             batch: 1_000,
             // MongoDB's 64 MB chunk ≈ 45k of our ~1.4 KB documents.
             max_chunk_docs: 45_000,
+            checkpoint_bytes: 0,
             osts: 64,
             query_jobs,
             cost,
@@ -87,6 +92,9 @@ pub struct SimReport {
     pub ingest_virt_ns: u64,
     pub docs_per_sec: f64,
     pub splits: u64,
+    /// Storage-lifecycle compactions across all shards (0 when the
+    /// lifecycle is off).
+    pub checkpoints: u64,
     pub chunks: u64,
     pub util_shard: f64,
     pub util_router: f64,
@@ -202,6 +210,10 @@ impl ClusterSim {
         let mut next_split_at: Vec<u64> =
             (0..s_count).map(|s| 2 * jitter(s, 0)).collect();
         let mut splits = 0u64;
+        // Storage lifecycle: journal bytes since each shard's last
+        // compaction, and compactions performed.
+        let mut shard_ckpt_bytes = vec![0u64; s_count];
+        let mut checkpoints = 0u64;
         // Routers that must refresh + re-route their next batch because
         // a split bumped the map version (the stale-version storm).
         let mut stale_routers = vec![0u32; r_count];
@@ -264,12 +276,38 @@ impl ClusterSim {
                 }
                 let insert_svc = (b_s as f64 * cost.insert_doc_ns) as u64;
                 let t_ins = shard_cpu.serve(s, t_net2, insert_svc);
-                // Journal lands on the shard's OSTs.
-                let t_j = ost.serve(s % o_count, t_ins, ost_ns(b_s as f64 * cost.journal_bytes_per_doc));
+                // Journal lands on the shard's OSTs: one group-commit
+                // frame per sub-batch (fixed term the batch amortizes)
+                // plus the per-byte stream.
+                let t_j = ost.serve(
+                    s % o_count,
+                    t_ins,
+                    ost_ns(b_s as f64 * cost.journal_bytes_per_doc)
+                        + cost.journal_frame_ns as u64,
+                );
                 let mut t_s = t_j;
+                shard_docs[s] += b_s as u64;
+                // Storage lifecycle: past the journal threshold the
+                // shard compacts — serialize the live set (shard CPU)
+                // and stream the snapshot to its OSTs — before acking
+                // the triggering batch.
+                if spec.checkpoint_bytes > 0 {
+                    shard_ckpt_bytes[s] += (b_s as f64 * cost.journal_bytes_per_doc) as u64;
+                    if shard_ckpt_bytes[s] >= spec.checkpoint_bytes {
+                        shard_ckpt_bytes[s] = 0;
+                        checkpoints += 1;
+                        let ckpt_cpu =
+                            (shard_docs[s] as f64 * cost.checkpoint_doc_ns) as u64;
+                        let t_cpu = shard_cpu.serve(s, t_j, ckpt_cpu);
+                        t_s = ost.serve(
+                            s % o_count,
+                            t_cpu,
+                            ost_ns(shard_docs[s] as f64 * cost.doc_bytes),
+                        );
+                    }
+                }
                 // Chunk split when the shard's fullest chunk crosses the
                 // threshold (uniform spread over its chunks).
-                shard_docs[s] += b_s as u64;
                 if shard_docs[s] > next_split_at[s] {
                     let total_chunks: u64 = shard_chunks.iter().sum();
                     // Commit + push the new map to every shard (routers
@@ -280,8 +318,9 @@ impl ClusterSim {
                                 + total_chunks as f64 * cost.map_entry_ns))
                         as u64;
                     // The triggering batch stalls until the config server
-                    // commits the split (stale-version handshake).
-                    t_s = config.serve(t_j, split_svc);
+                    // commits the split (stale-version handshake) — and
+                    // until any compaction it also triggered finishes.
+                    t_s = t_s.max(config.serve(t_j, split_svc));
                     shard_chunks[s] += 1;
                     next_split_at[s] += jitter(s, shard_chunks[s]);
                     splits += 1;
@@ -395,6 +434,7 @@ impl ClusterSim {
             ingest_virt_ns: ingest_end,
             docs_per_sec: total_docs as f64 * 1e9 / ingest_end.max(1) as f64,
             splits,
+            checkpoints,
             chunks: shard_chunks.iter().sum(),
             util_shard,
             util_router,
@@ -490,6 +530,40 @@ mod tests {
         // a small factor despite 4x concurrency.
         let ratio = p50_128 / p50_32.max(1.0);
         assert!(ratio < 3.0 && ratio > 0.2, "latency ratio {ratio}");
+    }
+
+    #[test]
+    fn lifecycle_checkpoints_fire_and_preserve_totals() {
+        let base_spec = small_spec(32);
+        let base = ClusterSim::new(base_spec.clone()).run();
+        assert_eq!(base.checkpoints, 0, "lifecycle off by default in the sim");
+        let mut spec = base_spec;
+        spec.checkpoint_bytes = 8 * 1024 * 1024;
+        let r = ClusterSim::new(spec).run();
+        assert_eq!(r.docs, base.docs, "compaction must not change the corpus");
+        assert!(r.checkpoints > 0, "sustained ingest should compact");
+        assert!(
+            r.ingest_virt_ns >= base.ingest_virt_ns,
+            "compaction work cannot make ingest faster"
+        );
+    }
+
+    #[test]
+    fn per_frame_journal_cost_rewards_batching() {
+        // With the frame term in the model, tiny batches pay one fixed
+        // journal cost per handful of documents and must ingest slower.
+        let mut small_batch = small_spec(32);
+        small_batch.batch = 8;
+        let mut big_batch = small_spec(32);
+        big_batch.batch = 1_000;
+        let rs = ClusterSim::new(small_batch).run();
+        let rb = ClusterSim::new(big_batch).run();
+        assert!(
+            rb.docs_per_sec > rs.docs_per_sec * 1.2,
+            "batch=1000 {} should beat batch=8 {} clearly",
+            rb.docs_per_sec,
+            rs.docs_per_sec
+        );
     }
 
     #[test]

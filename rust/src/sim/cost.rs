@@ -32,6 +32,13 @@ pub struct CostModel {
     pub insert_doc_ns: f64,
     /// Journal bytes per document (OST traffic).
     pub journal_bytes_per_doc: f64,
+    /// Fixed cost per journal *frame* (group commit: append + flush),
+    /// paid once per shard sub-batch. This is the term the batch-size
+    /// axis amortizes.
+    pub journal_frame_ns: f64,
+    /// Checkpoint serialization per live document (shard CPU; the OST
+    /// transfer of the snapshot is charged separately).
+    pub checkpoint_doc_ns: f64,
     /// Fixed per-shard cost of opening a find (planner, cursor).
     pub find_fixed_ns: f64,
     /// Index-scan cost per candidate record id.
@@ -69,6 +76,8 @@ impl Default for CostModel {
             dispatch_doc_ns: 120.0,
             insert_doc_ns: 6_000.0,
             journal_bytes_per_doc: 1_450.0,
+            journal_frame_ns: 25_000.0,
+            checkpoint_doc_ns: 400.0,
             find_fixed_ns: 40_000.0,
             index_candidate_ns: 90.0,
             result_doc_ns: 1_500.0,
@@ -93,6 +102,8 @@ impl CostModel {
             .set("dispatch_doc_ns", self.dispatch_doc_ns)
             .set("insert_doc_ns", self.insert_doc_ns)
             .set("journal_bytes_per_doc", self.journal_bytes_per_doc)
+            .set("journal_frame_ns", self.journal_frame_ns)
+            .set("checkpoint_doc_ns", self.checkpoint_doc_ns)
             .set("find_fixed_ns", self.find_fixed_ns)
             .set("index_candidate_ns", self.index_candidate_ns)
             .set("result_doc_ns", self.result_doc_ns)
@@ -117,6 +128,8 @@ impl CostModel {
             dispatch_doc_ns: f("dispatch_doc_ns", d.dispatch_doc_ns),
             insert_doc_ns: f("insert_doc_ns", d.insert_doc_ns),
             journal_bytes_per_doc: f("journal_bytes_per_doc", d.journal_bytes_per_doc),
+            journal_frame_ns: f("journal_frame_ns", d.journal_frame_ns),
+            checkpoint_doc_ns: f("checkpoint_doc_ns", d.checkpoint_doc_ns),
             find_fixed_ns: f("find_fixed_ns", d.find_fixed_ns),
             index_candidate_ns: f("index_candidate_ns", d.index_candidate_ns),
             result_doc_ns: f("result_doc_ns", d.result_doc_ns),
@@ -207,6 +220,21 @@ impl CostModel {
         eng.sync()?;
         cm.insert_doc_ns = t.elapsed().as_nanos() as f64 / n_docs as f64;
 
+        // --- Shard: per-frame journal cost — a group commit of one tiny
+        // frame (append + flush) minus the insert work itself. The
+        // batch-size axis amortizes this fixed term.
+        {
+            let reps = if quick { 200 } else { 1000 };
+            let d0 = gen.doc_at(0);
+            let t = Instant::now();
+            for _ in 0..reps {
+                eng.insert("m", &d0)?;
+                eng.sync()?;
+            }
+            let per_commit = t.elapsed().as_nanos() as f64 / reps as f64;
+            cm.journal_frame_ns = (per_commit - cm.insert_doc_ns).max(1_000.0);
+        }
+
         // --- Router: route kernel fixed + per-doc via two batch sizes.
         let shapes = kernels.shapes();
         let bounds: Vec<u32> = (1..=64u32)
@@ -267,6 +295,27 @@ impl CostModel {
             }
         }
         cm.result_doc_ns = t.elapsed().as_nanos() as f64 / fetched.max(1) as f64;
+
+        // --- Shard: checkpoint serialization per live document (storage
+        // lifecycle). The DES charges the snapshot's OST transfer
+        // separately, so subtract the measured cost of writing an
+        // equivalently-sized blob — otherwise the transfer would be
+        // double-counted and every lifecycle data point would overstate
+        // compaction cost.
+        {
+            let live = eng.stats("m").docs.max(1);
+            let t = Instant::now();
+            let ck = eng.checkpoint()?;
+            let total_ns = t.elapsed().as_nanos() as f64;
+            let blob = vec![0xA5u8; ck.checkpoint_bytes as usize];
+            let scratch = std::env::temp_dir()
+                .join(format!("hpcstore-calib-io-{}", std::process::id()));
+            let t = Instant::now();
+            std::fs::write(&scratch, &blob)?;
+            let write_ns = t.elapsed().as_nanos() as f64;
+            let _ = std::fs::remove_file(&scratch);
+            cm.checkpoint_doc_ns = ((total_ns - write_ns) / live as f64).max(50.0);
+        }
 
         // --- Config: split + map clone per entry.
         use crate::mongo::sharding::chunk::{ChunkMap, ShardKey};
@@ -338,5 +387,7 @@ mod tests {
         assert!(cm.index_candidate_ns >= 10.0);
         assert!(cm.result_doc_ns > 50.0);
         assert!(cm.map_entry_ns > 0.0);
+        assert!(cm.journal_frame_ns >= 1_000.0, "frame {}", cm.journal_frame_ns);
+        assert!(cm.checkpoint_doc_ns >= 50.0, "ckpt {}", cm.checkpoint_doc_ns);
     }
 }

@@ -209,4 +209,60 @@ mod tests {
         // Back-reference before stream start.
         assert!(decompress(&[0b0000_0001, 0x05, 0x00]).is_err());
     }
+
+    /// Property-style round-trip sweep: for every seed, generate buffers
+    /// from three distributions — incompressible (uniform random bytes),
+    /// highly repetitive (tiny alphabet, long runs), and checkpoint-like
+    /// (structured records with shared field names) — across sizes that
+    /// straddle the control-group width, the minimum match length, and
+    /// the 4 KiB window. The expansion bound (1/8 + 1 extra bytes, from
+    /// one control byte per 8 items) must hold even on random input.
+    #[test]
+    fn property_roundtrip_across_distributions_and_sizes() {
+        let sizes = [
+            0usize,
+            1,
+            2,
+            MIN_MATCH - 1,
+            MIN_MATCH,
+            7,
+            8,
+            9,
+            WINDOW - 1,
+            WINDOW,
+            WINDOW + 1,
+            3 * WINDOW + 17,
+        ];
+        for seed in 0..8u64 {
+            let mut rng = Pcg32::seeded(0xC0DE_C0DE ^ seed);
+            for &n in &sizes {
+                // Incompressible: uniform random bytes.
+                let random: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+                let c = compress(&random);
+                assert!(
+                    c.len() <= random.len() + random.len() / 8 + 1,
+                    "expansion bound violated: {} -> {}",
+                    random.len(),
+                    c.len()
+                );
+                assert_eq!(decompress(&c).unwrap(), random, "random n={n} seed={seed}");
+
+                // Highly repetitive: runs over a 3-symbol alphabet.
+                let repetitive: Vec<u8> = (0..n)
+                    .map(|_| b"abc"[(rng.next_bounded(3)) as usize])
+                    .collect();
+                roundtrip(&repetitive);
+
+                // Checkpoint-like: records with shared field names and a
+                // varying numeric tail.
+                let mut structured = Vec::with_capacity(n);
+                while structured.len() < n {
+                    structured.extend_from_slice(b"ts\x00node_id\x00m");
+                    structured.push(rng.next_u32() as u8);
+                }
+                structured.truncate(n);
+                roundtrip(&structured);
+            }
+        }
+    }
 }

@@ -190,6 +190,41 @@ fn data_persists_across_jobs() {
 }
 
 #[test]
+fn shard_compaction_hook_bounds_journal_under_ingest() {
+    // Storage lifecycle end-to-end: with a small compaction threshold,
+    // the per-shard background hook (run after every group commit)
+    // must checkpoint repeatedly and keep each shard's on-disk journal
+    // below one threshold + one segment.
+    let threshold: u64 = 32 * 1024;
+    let mut spec = ClusterSpec::small(2, 1);
+    spec.store = StoreConfig {
+        checkpoint_bytes: threshold,
+        journal_segments: 4,
+        compress_checkpoints: true,
+        ..Default::default()
+    };
+    let cluster = start(spec, "lifecycle");
+    let client = cluster.client();
+    for wave in 0..20i64 {
+        let docs: Vec<Document> =
+            (0..200i64).map(|i| metric_doc(wave * 200 + i, i % 8)).collect();
+        client.insert_many(docs).unwrap();
+    }
+    assert_eq!(cluster.stats().docs, 4000);
+    let segment = threshold / 4;
+    for (i, s) in cluster.shard_stats().iter().enumerate() {
+        assert!(s.checkpoint_generation > 0, "shard {i} never compacted");
+        assert!(
+            s.journal_disk_bytes <= threshold + segment,
+            "shard {i} journal {} exceeds the lifecycle bound",
+            s.journal_disk_bytes
+        );
+    }
+    assert!(cluster.metrics().counter("shard.checkpoints").get() > 0);
+    cluster.shutdown();
+}
+
+#[test]
 fn buffered_ingest_and_bulk_writer() {
     let cluster = start(ClusterSpec::small(2, 2), "buf");
     let client = cluster.client();

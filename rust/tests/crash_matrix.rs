@@ -1,0 +1,359 @@
+//! Crash matrix for the storage lifecycle (checkpoint compaction +
+//! journal rotation): recovery must be byte-exact no matter where in
+//! the checkpoint protocol a batch job is killed.
+//!
+//! The protocol has three windows a kill can land in:
+//!   1. during the checkpoint *write* — `store.ckpt.tmp` is partial,
+//!      the rename never ran, the old checkpoint is authoritative;
+//!   2. between the write and the *swap* — `store.ckpt.tmp` is complete
+//!      but unrenamed, same outcome as (1);
+//!   3. after the swap, during the *truncation* — covered journal
+//!      segments survive on disk and replay must skip (and delete)
+//!      them, or documents would be applied twice.
+//!
+//! Plus the headline property: under sustained ingest writing several
+//! times the compaction threshold, the on-disk journal stays bounded
+//! and post-crash recovery replays only the post-checkpoint tail.
+
+use std::path::Path;
+
+use hpcstore::mongo::bson::Document;
+use hpcstore::mongo::storage::{Engine, EngineOptions, LocalDir, StorageDir};
+
+fn doc(i: u64) -> Document {
+    Document::new()
+        .set("ts", i as i64)
+        .set("node_id", (i % 16) as i64)
+        .set("m0", i as f64 * 0.5)
+        .set("m1", (i * 31) as f64)
+}
+
+fn batch(lo: u64, n: u64) -> Vec<Document> {
+    (lo..lo + n).map(doc).collect()
+}
+
+fn lifecycle(checkpoint_bytes: u64) -> EngineOptions {
+    EngineOptions {
+        journal: true,
+        compress_checkpoints: true,
+        checkpoint_bytes,
+        journal_segments: 4,
+    }
+}
+
+/// Sum of on-disk `journal-*.wal` sizes under `root`.
+fn journal_files_bytes(root: &str) -> u64 {
+    std::fs::read_dir(root)
+        .unwrap()
+        .filter_map(|e| {
+            let e = e.unwrap();
+            let name = e.file_name().to_string_lossy().into_owned();
+            (name.starts_with("journal-") && name.ends_with(".wal"))
+                .then(|| e.metadata().unwrap().len())
+        })
+        .sum()
+}
+
+#[test]
+fn sustained_ingest_bounds_disk_and_replays_only_the_tail() {
+    let threshold: u64 = 64 * 1024;
+    let opts = lifecycle(threshold);
+    let seg = opts.segment_bytes();
+    let dir = LocalDir::temp("cm-bound").unwrap();
+    let root = dir.describe();
+    let mut total = 0u64;
+    {
+        let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        // Write well past 4x the compaction threshold, the shard-server
+        // pattern: group commit, then the background compaction hook.
+        let mut written = 0u64;
+        while written < 4 * threshold {
+            let docs = batch(total, 64);
+            total += 64;
+            eng.insert_many("metrics", &docs).unwrap();
+            let frame = eng.pending_journal_bytes() as u64;
+            eng.sync().unwrap();
+            written += frame;
+            eng.maybe_checkpoint().unwrap();
+            // Bounded steady state: at most one threshold plus one
+            // segment of journal on disk, in memory and in real files.
+            assert!(
+                eng.journal_disk_bytes() <= threshold + seg,
+                "engine journal {} exceeds bound",
+                eng.journal_disk_bytes()
+            );
+            assert!(
+                journal_files_bytes(&root) <= threshold + seg,
+                "on-disk journal {} exceeds bound",
+                journal_files_bytes(&root)
+            );
+        }
+        assert!(eng.generation() >= 3, "expected repeated compaction");
+        // Drop without checkpoint = kill.
+    }
+    let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+    assert_eq!(eng.stats("metrics").docs, total, "recovery must be exact");
+    let rep = eng.recovery_report();
+    assert!(rep.checkpoint_generation >= 3);
+    assert!(
+        rep.bytes_replayed <= threshold + seg,
+        "replayed {} bytes — recovery must be tail-only, not O(total writes)",
+        rep.bytes_replayed
+    );
+}
+
+#[test]
+fn kill_during_checkpoint_write_keeps_old_checkpoint_authoritative() {
+    let dir = LocalDir::temp("cm-write").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("metrics");
+        eng.insert_many("metrics", &batch(0, 20)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap(); // generation 1, the survivor
+        eng.insert_many("metrics", &batch(20, 10)).unwrap();
+        eng.sync().unwrap();
+        // Killed mid-way through writing the generation-2 checkpoint:
+        // a partial staging file is on disk, the rename never happened.
+    }
+    std::fs::write(
+        Path::new(&root).join("store.ckpt.tmp"),
+        b"HPCCKPT2\x02partial garbage from a dying writer",
+    )
+    .unwrap();
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 30);
+    assert_eq!(eng.recovery_report().checkpoint_generation, 1);
+    assert!(
+        !Path::new(&root).join("store.ckpt.tmp").exists(),
+        "recovery must discard the partial staging file"
+    );
+}
+
+#[test]
+fn kill_between_checkpoint_write_and_swap_keeps_old_checkpoint() {
+    let dir = LocalDir::temp("cm-swap").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("metrics");
+        eng.insert_many("metrics", &batch(0, 15)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap();
+        eng.insert_many("metrics", &batch(15, 5)).unwrap();
+        eng.sync().unwrap();
+    }
+    // A *complete* staging file that was never renamed: even a fully
+    // valid unrenamed checkpoint must be ignored — only the rename
+    // publishes it.
+    let published = std::fs::read(Path::new(&root).join("store.ckpt")).unwrap();
+    std::fs::write(Path::new(&root).join("store.ckpt.tmp"), &published).unwrap();
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 20);
+    assert_eq!(eng.recovery_report().checkpoint_generation, 1);
+    assert!(!Path::new(&root).join("store.ckpt.tmp").exists());
+}
+
+#[test]
+fn kill_during_truncate_skips_and_deletes_covered_segments() {
+    let dir = LocalDir::temp("cm-trunc").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("metrics");
+        eng.insert_many("metrics", &batch(0, 25)).unwrap();
+        eng.sync().unwrap();
+        // Keep a copy of the covered segment, checkpoint (which
+        // truncates it), then put it back — exactly the disk state a
+        // kill between the swap and the end of truncation leaves.
+        let seg1 = std::fs::read(Path::new(&root).join("journal-000001.wal")).unwrap();
+        let ck = eng.checkpoint().unwrap();
+        assert!(ck.segments_truncated >= 1);
+        assert!(!Path::new(&root).join("journal-000001.wal").exists());
+        std::fs::write(Path::new(&root).join("journal-000001.wal"), &seg1).unwrap();
+        eng.insert_many("metrics", &batch(25, 5)).unwrap();
+        eng.sync().unwrap();
+    }
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    // Replaying the covered segment would double-apply its 25 documents.
+    assert_eq!(eng.stats("metrics").docs, 30, "covered segment must not replay");
+    let rep = eng.recovery_report();
+    assert_eq!(rep.segments_skipped, 1);
+    assert!(
+        !Path::new(&root).join("journal-000001.wal").exists(),
+        "recovery must finish the interrupted truncation"
+    );
+}
+
+#[test]
+fn recovery_replays_only_post_checkpoint_segments() {
+    // Regression for the watermark logic: frames before the checkpoint
+    // never replay, frames after it always do.
+    let dir = LocalDir::temp("cm-tail").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("metrics");
+        for b in 0..5 {
+            eng.insert_many("metrics", &batch(b * 8, 8)).unwrap();
+            eng.sync().unwrap();
+        }
+        eng.checkpoint().unwrap();
+        eng.insert_many("metrics", &batch(40, 7)).unwrap();
+        eng.sync().unwrap();
+    }
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 47);
+    let rep = eng.recovery_report();
+    assert_eq!(rep.checkpoint_generation, 1);
+    assert_eq!(rep.segments_replayed, 1, "only the tail segment");
+    assert_eq!(rep.frames_replayed, 1, "only the post-checkpoint frame");
+}
+
+#[test]
+fn legacy_single_file_journal_migrates_into_the_lifecycle() {
+    let dir = LocalDir::temp("cm-legacy").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("metrics");
+        eng.insert_many("metrics", &batch(0, 12)).unwrap();
+        eng.sync().unwrap();
+    }
+    // Rewrite the segment as the pre-rotation single-file layout.
+    std::fs::rename(
+        Path::new(&root).join("journal-000001.wal"),
+        Path::new(&root).join("journal.wal"),
+    )
+    .unwrap();
+    {
+        let mut eng =
+            Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        assert_eq!(eng.stats("metrics").docs, 12, "legacy journal must replay");
+        let ck = eng.checkpoint().unwrap();
+        assert!(ck.segments_truncated >= 1);
+        assert!(
+            !Path::new(&root).join("journal.wal").exists(),
+            "checkpoint covers and removes the legacy journal"
+        );
+    }
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 12);
+    assert_eq!(eng.recovery_report().frames_replayed, 0);
+}
+
+#[test]
+fn kill_after_swap_during_legacy_removal_does_not_double_apply() {
+    // Migration window: the first v2 checkpoint already contains the
+    // legacy journal's documents; a kill between the swap and the
+    // legacy file's removal must not lead to a double replay.
+    let dir = LocalDir::temp("cm-legacy-swap").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("metrics");
+        eng.insert_many("metrics", &batch(0, 10)).unwrap();
+        eng.sync().unwrap();
+    }
+    std::fs::rename(
+        Path::new(&root).join("journal-000001.wal"),
+        Path::new(&root).join("journal.wal"),
+    )
+    .unwrap();
+    let legacy = std::fs::read(Path::new(&root).join("journal.wal")).unwrap();
+    {
+        let mut eng =
+            Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        assert_eq!(eng.stats("metrics").docs, 10);
+        eng.checkpoint().unwrap(); // publishes v2 and removes journal.wal
+    }
+    // Put the legacy file back: the kill landed mid-removal.
+    std::fs::write(Path::new(&root).join("journal.wal"), &legacy).unwrap();
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(
+        eng.stats("metrics").docs,
+        10,
+        "legacy journal covered by a v2 checkpoint must not replay"
+    );
+    assert!(
+        !Path::new(&root).join("journal.wal").exists(),
+        "recovery must finish the interrupted legacy removal"
+    );
+}
+
+#[test]
+fn compaction_trigger_accumulates_across_restarts() {
+    // Each job writes only ~half the threshold and is then killed. The
+    // replayed tail must seed the compaction trigger, so the *second*
+    // job crosses the threshold and compacts — otherwise sub-threshold
+    // jobs would grow the journal (and replay cost) without bound.
+    let opts = lifecycle(32 * 1024);
+    let root = LocalDir::temp("cm-trigger").unwrap().describe();
+    let mut total = 0u64;
+    for _cycle in 0..6 {
+        let mut eng =
+            Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        let mut written = 0u64;
+        while written < 16 * 1024 {
+            eng.insert_many("metrics", &batch(total, 32)).unwrap();
+            total += 32;
+            let frame = eng.pending_journal_bytes() as u64;
+            eng.sync().unwrap();
+            written += frame;
+            eng.maybe_checkpoint().unwrap();
+        }
+        // Kill (drop) — no teardown checkpoint.
+    }
+    let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts.clone()).unwrap();
+    assert_eq!(eng.stats("metrics").docs, total);
+    assert!(
+        eng.generation() >= 2,
+        "cumulative tail bytes across restarts must trigger compaction, got generation {}",
+        eng.generation()
+    );
+    // Replay stays bounded by roughly one threshold + one cycle, never
+    // the whole history.
+    assert!(
+        eng.recovery_report().bytes_replayed
+            <= opts.checkpoint_bytes + opts.segment_bytes() + 16 * 1024,
+        "replayed {} bytes",
+        eng.recovery_report().bytes_replayed
+    );
+}
+
+#[test]
+fn lifecycle_survives_repeated_kill_restart_cycles() {
+    // Job-queue reality: every allocation ends in a kill. Run several
+    // ingest-kill-recover cycles with compaction active and verify the
+    // store is exact at every generation.
+    let opts = lifecycle(32 * 1024);
+    let root;
+    {
+        let dir = LocalDir::temp("cm-cycles").unwrap();
+        root = dir.describe();
+        let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        eng.sync().unwrap();
+    }
+    let mut total = 0u64;
+    for cycle in 0..5 {
+        let mut eng =
+            Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        assert_eq!(eng.stats("metrics").docs, total, "cycle {cycle} lost data");
+        for b in 0..20 {
+            eng.insert_many("metrics", &batch(total, 32)).unwrap();
+            total += 32;
+            eng.sync().unwrap();
+            if b % 3 == 0 {
+                eng.maybe_checkpoint().unwrap();
+            }
+        }
+        // Kill (drop) — no teardown checkpoint.
+    }
+    let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+    assert_eq!(eng.stats("metrics").docs, total);
+}
