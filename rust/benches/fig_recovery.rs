@@ -1,5 +1,5 @@
 //! FR — recovery time vs journal size, before and after checkpoint
-//! compaction.
+//! compaction, plus the delta-chain-length axis.
 //!
 //! The lifecycle claim this bench measures: without compaction a killed
 //! job replays its *entire* write history on the next deployment
@@ -10,6 +10,13 @@
 //! the replayed frame/byte counts come from the engine's own
 //! `RecoveryReport`.
 //!
+//! The second table sweeps **chain length**: the same base corpus plus
+//! K incremental (delta) generations. Checkpoint cost per generation is
+//! O(new writes) — the `delta bytes` column stays flat while the chain
+//! grows — and recovery folds base + K deltas + the journal tail, so
+//! the recovery-time column shows what a longer rebase threshold
+//! (`StoreConfig::full_checkpoint_chain`) costs at re-deploy time.
+//!
 //! Run: `cargo bench --bench fig_recovery` (add `--quick` for a small
 //! sweep). See `docs/EXPERIMENTS.md` for the recorded-results template.
 
@@ -17,7 +24,7 @@ use std::time::Instant;
 
 use hpcstore::benchkit::{quick_mode, Report};
 use hpcstore::mongo::bson::Document;
-use hpcstore::mongo::storage::{Engine, LocalDir, StorageDir};
+use hpcstore::mongo::storage::{Engine, EngineOptions, LocalDir, StorageDir};
 use hpcstore::util::fmt::human_count;
 
 fn doc(i: u64) -> Document {
@@ -115,5 +122,106 @@ fn main() {
     println!(
         "\nclaim: with compaction, recovery replays only the post-checkpoint tail \
          (frames column) instead of the full write history\n"
+    );
+
+    // --- Chain-length axis: base corpus + K delta generations. -------
+    let (base_docs, delta_docs): (u64, u64) = if quick_mode() {
+        (4_000, 256)
+    } else {
+        (16_000, 512)
+    };
+    let chains: &[u64] = if quick_mode() { &[0, 4] } else { &[0, 2, 8, 16] };
+
+    let mut report = Report::new(
+        "Recovery — delta-chain length vs checkpoint cost and recovery fold",
+    );
+    report.set_custom(
+        [
+            "chain K",
+            "ckpt bytes/gen (delta)",
+            "full snapshot",
+            "deltas folded",
+            "fold bytes",
+            "tail frames",
+            "recover",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+    );
+
+    for &k in chains {
+        // Manual lifecycle with a rebase threshold the sweep never
+        // reaches, so the chain holds exactly K deltas at kill time.
+        let opts = EngineOptions {
+            journal: true,
+            compress_checkpoints: false,
+            checkpoint_bytes: 0,
+            journal_segments: 4,
+            full_checkpoint_chain: (k + 1).max(1) as u32,
+        };
+        let dir = LocalDir::temp(&format!("figrec-chain-{k}")).unwrap();
+        let root = dir.describe();
+        let full_bytes;
+        let mut delta_bytes_last = 0u64;
+        {
+            let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+            eng.create_collection("metrics");
+            let mut i = 0u64;
+            while i < base_docs {
+                let batch: Vec<Document> =
+                    (i..(i + 512).min(base_docs)).map(doc).collect();
+                i += batch.len() as u64;
+                eng.insert_many("metrics", &batch).unwrap();
+                eng.sync().unwrap();
+            }
+            let ck = eng.checkpoint().unwrap(); // generation 1: full
+            assert!(ck.full);
+            full_bytes = ck.checkpoint_bytes;
+            for g in 0..k {
+                let lo = base_docs + g * delta_docs;
+                let batch: Vec<Document> = (lo..lo + delta_docs).map(doc).collect();
+                eng.insert_many("metrics", &batch).unwrap();
+                eng.sync().unwrap();
+                let ck = eng.checkpoint().unwrap();
+                assert!(!ck.full, "chain generation {} must be a delta", ck.generation);
+                delta_bytes_last = ck.delta_bytes;
+            }
+            // Journal tail beyond the newest generation, then kill.
+            let lo = base_docs + k * delta_docs;
+            let tail: Vec<Document> = (lo..lo + 64).map(doc).collect();
+            eng.insert_many("metrics", &tail).unwrap();
+            eng.sync().unwrap();
+        }
+        let t = Instant::now();
+        let eng =
+            Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+        let ns = t.elapsed().as_nanos() as u64;
+        assert_eq!(
+            eng.stats("metrics").docs,
+            base_docs + k * delta_docs + 64,
+            "chain {k}: recovery must be exact"
+        );
+        let rep = eng.recovery_report().clone();
+        assert_eq!(rep.deltas_folded, k);
+        report.add_row(vec![
+            k.to_string(),
+            if k == 0 {
+                "-".to_string()
+            } else {
+                format!("{} B", human_count(delta_bytes_last))
+            },
+            format!("{} B", human_count(full_bytes)),
+            rep.deltas_folded.to_string(),
+            format!("{} B", human_count(rep.delta_bytes_folded)),
+            rep.frames_replayed.to_string(),
+            format!("{:.2} ms", ns as f64 / 1e6),
+        ]);
+    }
+    report.print();
+    println!(
+        "\nclaim: steady-state checkpoint cost is O(new writes) — the per-generation \
+         delta bytes do not grow with the live set — while recovery folds base + K \
+         deltas + tail, the trade `full_checkpoint_chain` tunes\n"
     );
 }

@@ -143,6 +143,10 @@ pub struct StoreConfig {
     /// Storage lifecycle: target journal segments per checkpoint
     /// interval (segment size = `checkpoint_bytes / journal_segments`).
     pub journal_segments: u32,
+    /// Incremental checkpoints: maximum delta generations per chain
+    /// before a checkpoint rebases into a fresh full snapshot. 0 makes
+    /// every checkpoint a full snapshot (the pre-delta behaviour).
+    pub full_checkpoint_chain: u32,
     /// insertMany sub-batch size the client uses.
     pub insert_batch: usize,
     /// Router-side ingest buffer: flush to the shards once this many
@@ -166,6 +170,7 @@ impl Default for StoreConfig {
             compress_checkpoints: false,
             checkpoint_bytes: 64 * 1024 * 1024,
             journal_segments: 4,
+            full_checkpoint_chain: 8,
             insert_batch: 1_000,
             router_flush_docs: 4_096,
             flush_interval_ms: 2,
@@ -184,6 +189,7 @@ impl StoreConfig {
             .set("compress_checkpoints", self.compress_checkpoints)
             .set("checkpoint_bytes", self.checkpoint_bytes)
             .set("journal_segments", self.journal_segments)
+            .set("full_checkpoint_chain", self.full_checkpoint_chain)
             .set("insert_batch", self.insert_batch)
             .set("router_flush_docs", self.router_flush_docs)
             .set("flush_interval_ms", self.flush_interval_ms)
@@ -216,6 +222,10 @@ impl StoreConfig {
                 .get("journal_segments")
                 .and_then(Value::as_u64)
                 .unwrap_or(d.journal_segments as u64) as u32,
+            full_checkpoint_chain: v
+                .get("full_checkpoint_chain")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.full_checkpoint_chain as u64) as u32,
             insert_batch: v
                 .get("insert_batch")
                 .and_then(Value::as_usize)
@@ -511,6 +521,7 @@ mod tests {
         assert_eq!(c2.store.flush_interval_ms, c.store.flush_interval_ms);
         assert_eq!(c2.store.checkpoint_bytes, c.store.checkpoint_bytes);
         assert_eq!(c2.store.journal_segments, c.store.journal_segments);
+        assert_eq!(c2.store.full_checkpoint_chain, c.store.full_checkpoint_chain);
         assert_eq!(c2.workload.monitored_nodes, c.workload.monitored_nodes);
         assert_eq!(c2.lustre.osts, c.lustre.osts);
     }

@@ -58,6 +58,11 @@ fn cli() -> Cli {
                         Some("N"),
                         "journal segments per checkpoint interval (default 4)",
                     ),
+                    f(
+                        "checkpoint-chain",
+                        Some("N"),
+                        "delta checkpoints per chain before a full rebase (default 8, 0 = always full)",
+                    ),
                     f("artifacts", Some("DIR"), "AOT artifact dir (default artifacts)"),
                     f("fallback", None, "use the scalar kernel fallback"),
                 ],
@@ -136,6 +141,9 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         journal_segments: args
             .get_u64_or("journal-segments", store_defaults.journal_segments as u64)?
             as u32,
+        full_checkpoint_chain: args
+            .get_u64_or("checkpoint-chain", store_defaults.full_checkpoint_chain as u64)?
+            as u32,
         ..Default::default()
     };
     let script = RunScript::new(topo.clone(), store, lustre.clone(), kernels);
@@ -177,10 +185,12 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     // per shard (the teardown below runs the final admin checkpoint).
     for (i, s) in dep.cluster.shard_stats().iter().enumerate() {
         println!(
-            "shard {i}: {} docs, journal on disk {}, checkpoint generation {}",
+            "shard {i}: {} docs, journal on disk {}, checkpoint generation {} (chain {}, delta bytes {})",
             human_count(s.collection.docs),
             human_count(s.journal_disk_bytes),
-            s.checkpoint_generation
+            s.checkpoint_generation,
+            s.checkpoint_chain_len,
+            human_count(s.delta_disk_bytes)
         );
     }
 

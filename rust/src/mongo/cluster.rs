@@ -113,6 +113,7 @@ impl Cluster {
             compress_checkpoints: spec.store.compress_checkpoints,
             checkpoint_bytes: spec.store.checkpoint_bytes,
             journal_segments: spec.store.journal_segments,
+            full_checkpoint_chain: spec.store.full_checkpoint_chain,
         };
         for (i, rx) in shard_rxs.into_iter().enumerate() {
             let id = ShardId(i as u32);

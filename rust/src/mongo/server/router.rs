@@ -7,16 +7,20 @@
 //!   dispatched concurrently. Stale-version and wrong-owner rejects are
 //!   re-routed after a map refresh, preserving unordered semantics.
 //! * `find`: scatter to every shard (conditional finds don't carry the
-//!   full shard key), gather, and serve through a router-side cursor
-//!   that drains shard cursors round-robin.
+//!   full shard key), gather one stream per shard, and serve through a
+//!   router-side cursor. Unsorted finds drain the streams in shard
+//!   order; sorted finds **k-way merge** the streams on the sort key —
+//!   each shard returns its results fully ordered, so taking the best
+//!   head across streams yields one *globally* ordered result, not a
+//!   per-shard-ordered concatenation.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::config::ShardKeyKind;
-use crate::mongo::bson::Document;
-use crate::mongo::query::{Filter, FindOptions};
+use crate::mongo::bson::{Document, Value};
+use crate::mongo::query::{Filter, FindOptions, SortDir};
 use crate::mongo::sharding::chunk::ChunkMap;
 use crate::mongo::wire::{
     batch_wire_bytes, find_wire_bytes, rpc, ConfigRequest, FindReply, Reply, ShardRequest,
@@ -88,11 +92,22 @@ pub enum RouterRequest {
 
 pub type RouterMailbox = mpsc::Sender<RouterRequest>;
 
+/// One shard's slice of a scattered find: the documents buffered from
+/// it (in shard-local order — sorted when the query sorts) and its open
+/// shard-side cursor, if any.
+struct ShardStream {
+    shard: usize,
+    cursor: Option<u64>,
+    buf: VecDeque<Document>,
+}
+
 struct RouterCursor {
-    /// Open shard cursors (shard index, cursor id).
-    shard_cursors: Vec<(usize, u64)>,
-    /// Buffered docs not yet handed to the client.
-    buffered: Vec<Document>,
+    /// Per-shard result streams; exhausted streams are dropped.
+    streams: Vec<ShardStream>,
+    /// The query's sort, if any: streams are k-way merged on this key
+    /// instead of concatenated, so the client sees one globally ordered
+    /// stream across shards.
+    sort: Option<(String, SortDir)>,
     remaining: Option<usize>,
     batch: usize,
 }
@@ -440,10 +455,11 @@ impl Router {
                 .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
             rxs.push((s, rx));
         }
-        // Gather.
+        // Gather one stream per shard; sorted queries are k-way merged
+        // across them in serve_router_batch.
         let mut cur = RouterCursor {
-            shard_cursors: Vec::new(),
-            buffered: Vec::new(),
+            streams: Vec::new(),
+            sort: opts.sort.clone(),
             remaining: opts.limit,
             batch,
         };
@@ -451,9 +467,12 @@ impl Router {
             let rep = rx
                 .recv()
                 .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
-            cur.buffered.extend(rep.docs);
-            if let Some(c) = rep.cursor {
-                cur.shard_cursors.push((s, c));
+            if !rep.docs.is_empty() || rep.cursor.is_some() {
+                cur.streams.push(ShardStream {
+                    shard: s,
+                    cursor: rep.cursor,
+                    buf: rep.docs.into(),
+                });
             }
         }
         let first = self.serve_router_batch(&mut cur)?;
@@ -487,27 +506,66 @@ impl Router {
         Ok(total)
     }
 
-    /// Fill one client batch from the buffer, pulling shard GetMores as
-    /// needed (round-robin).
+    /// Refill `stream` from its shard until it has a buffered head or
+    /// its shard-side cursor is exhausted.
+    fn refill(&self, stream: &mut ShardStream) -> Result<(), WireError> {
+        while stream.buf.is_empty() {
+            let Some(c) = stream.cursor else { return Ok(()) };
+            let rep = rpc(&self.shards[stream.shard], |reply| ShardRequest::GetMore {
+                cursor: c,
+                reply,
+            })??;
+            stream.buf.extend(rep.docs);
+            stream.cursor = rep.cursor;
+        }
+        Ok(())
+    }
+
+    /// Fill one client batch from the per-shard streams, pulling shard
+    /// GetMores as needed. Unsorted finds drain the streams in shard
+    /// order; sorted finds take the best head across streams each step
+    /// (k-way merge) — each shard stream is itself fully sorted, so the
+    /// merged output is globally ordered.
     fn serve_router_batch(&mut self, cur: &mut RouterCursor) -> Result<FindReply, WireError> {
         let want = match cur.remaining {
             Some(r) => cur.batch.min(r),
             None => cur.batch,
         };
-        while cur.buffered.len() < want && !cur.shard_cursors.is_empty() {
-            let (s, c) = cur.shard_cursors.remove(0);
-            let rep = rpc(&self.shards[s], |reply| ShardRequest::GetMore { cursor: c, reply })??;
-            cur.buffered.extend(rep.docs);
-            if let Some(c2) = rep.cursor {
-                cur.shard_cursors.push((s, c2));
-            }
+        let mut docs = Vec::with_capacity(want);
+        while docs.len() < want {
+            let next = match &cur.sort {
+                // Unsorted: drain one stream at a time in shard order —
+                // only the head stream is ever refilled, so shards whose
+                // results the limit never reaches get no GetMore.
+                None => loop {
+                    let Some(s) = cur.streams.first_mut() else { break None };
+                    self.refill(s)?;
+                    if s.buf.is_empty() {
+                        cur.streams.remove(0); // cursor exhausted and dry
+                        continue;
+                    }
+                    break Some(0);
+                },
+                // Sorted: every live stream needs a buffered head before
+                // the heads can be compared; dry streams drop out.
+                Some((field, dir)) => {
+                    for s in cur.streams.iter_mut() {
+                        self.refill(s)?;
+                    }
+                    cur.streams.retain(|s| !s.buf.is_empty() || s.cursor.is_some());
+                    best_head(&cur.streams, field, *dir)
+                }
+            };
+            let Some(i) = next else { break };
+            docs.push(cur.streams[i].buf.pop_front().expect("head refilled above"));
         }
-        let take = want.min(cur.buffered.len());
-        let docs: Vec<Document> = cur.buffered.drain(..take).collect();
         if let Some(r) = cur.remaining.as_mut() {
             *r -= docs.len();
         }
-        let exhausted = cur.buffered.is_empty() && cur.shard_cursors.is_empty();
+        let exhausted = cur
+            .streams
+            .iter()
+            .all(|s| s.buf.is_empty() && s.cursor.is_none());
         let limit_hit = cur.remaining == Some(0);
         Ok(FindReply { docs, cursor: (!exhausted && !limit_hit).then_some(0) })
     }
@@ -526,10 +584,40 @@ impl Router {
     }
 }
 
-// Unit coverage for the router lives in cluster-level integration tests
-// (`rust/tests/cluster_live.rs`) since a router is meaningless without
-// shards; `partition` is additionally covered against the fallback in
-// the runtime roundtrip suite.
+/// Index of the stream whose head document comes next in the merged
+/// order: minimum sort key for ascending, maximum for descending, over
+/// [`Value::cmp_total`] with missing fields sorting as `Null` (the same
+/// rule each shard sorts by). Ties keep the lowest shard index, so the
+/// merge is deterministic. `None` when every stream is dry.
+fn best_head(streams: &[ShardStream], field: &str, dir: SortDir) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, s) in streams.iter().enumerate() {
+        let Some(head) = s.buf.front() else { continue };
+        let better = match best {
+            None => true,
+            Some(b) => {
+                let incumbent = streams[b].buf.front().expect("best stream has a head");
+                let ord = head
+                    .get(field)
+                    .unwrap_or(&Value::Null)
+                    .cmp_total(incumbent.get(field).unwrap_or(&Value::Null));
+                match dir {
+                    SortDir::Asc => ord == std::cmp::Ordering::Less,
+                    SortDir::Desc => ord == std::cmp::Ordering::Greater,
+                }
+            }
+        };
+        if better {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+// Broader coverage for the router lives in cluster-level integration
+// tests (`rust/tests/cluster_live.rs`) since a router is meaningless
+// without shards; `partition` is additionally covered against the
+// fallback in the runtime roundtrip suite.
 
 /// Helper used by ablation benches: route a batch scalar-only (bypassing
 /// the kernel service) for A1 comparisons.
@@ -570,4 +658,20 @@ mod tests {
         }
     }
 
+    #[test]
+    fn best_head_picks_min_asc_max_desc_and_skips_dry_streams() {
+        let stream = |shard: usize, ts: &[i64]| ShardStream {
+            shard,
+            cursor: None,
+            buf: ts.iter().map(|&t| Document::new().set("ts", t)).collect(),
+        };
+        let streams = vec![stream(0, &[5, 9]), stream(1, &[]), stream(2, &[3, 4])];
+        assert_eq!(best_head(&streams, "ts", SortDir::Asc), Some(2));
+        assert_eq!(best_head(&streams, "ts", SortDir::Desc), Some(0));
+        assert_eq!(best_head(&streams[1..2], "ts", SortDir::Asc), None);
+        // Ties resolve to the lowest shard index (deterministic merge).
+        let tied = vec![stream(0, &[7]), stream(1, &[7])];
+        assert_eq!(best_head(&tied, "ts", SortDir::Asc), Some(0));
+        assert_eq!(best_head(&tied, "ts", SortDir::Desc), Some(0));
+    }
 }

@@ -195,6 +195,12 @@ impl ShardServer {
         match self.engine.maybe_checkpoint() {
             Ok(Some(ck)) => {
                 self.metrics.counter("shard.checkpoints").inc();
+                if ck.full {
+                    // Generation 1 or a chain rebase: the one compaction
+                    // whose cost scales with the live set.
+                    self.metrics.counter("shard.rebases").inc();
+                }
+                self.metrics.counter("shard.delta_bytes").add(ck.delta_bytes);
                 self.metrics
                     .counter("shard.segments_truncated")
                     .add(ck.segments_truncated);
@@ -665,6 +671,8 @@ impl ShardServer {
             journal_bytes: self.engine.pending_journal_bytes() as u64,
             journal_disk_bytes: self.engine.journal_disk_bytes(),
             checkpoint_generation: self.engine.generation(),
+            checkpoint_chain_len: self.engine.chain_len(),
+            delta_disk_bytes: self.engine.chain_disk_bytes(),
         }
     }
 }

@@ -1,0 +1,296 @@
+//! Incremental-checkpoint encode/decode — the `HPCCKPT3` on-disk format.
+//!
+//! A *delta* checkpoint carries only the records inserted or removed
+//! since the previous generation, so steady-state compaction cost
+//! scales with work done instead of with the live set. Each delta names
+//! the *base generation* (the full snapshot its chain extends) and the
+//! journal-segment watermark it covers; recovery folds base + chain in
+//! generation order before replaying the journal tail. The engine
+//! (`engine.rs`) owns the chain policy (when to rebase into a fresh
+//! full snapshot); this module owns the bytes.
+//!
+//! Header, shared by v3 full snapshots (`store.ckpt`) and deltas
+//! (`delta-NNNNNN.ckpt`), all integers little-endian:
+//!
+//! ```text
+//! 8 bytes  magic "HPCCKPT3"
+//! u8       kind             0 = full snapshot, 1 = delta
+//! u64      generation
+//! u64      base_generation  full: == generation; delta: chain base
+//! u64      covered_seq      highest journal segment this covers
+//! u8       compressed       1 = payload is LZSS-compressed
+//! ...      payload          full body (see `Engine::checkpoint`) or
+//!                           delta body (`encode_body`)
+//! ```
+//!
+//! Delta body: `u32 ncolls`, then per collection `u8 name_len | name |
+//! u64 next_rid | u32 n_indexes`, per index `u8 len | comma-joined
+//! fields`, `u64 n_upserts`, per upsert `u64 rid | u32 len | bytes`,
+//! `u64 n_removes`, per remove `u64 rid`.
+
+use anyhow::{bail, Result};
+
+use super::engine::RecordId;
+
+/// Magic of the v3 (incremental-capable) checkpoint header.
+pub const MAGIC_V3: &[u8; 8] = b"HPCCKPT3";
+/// Header `kind`: full snapshot.
+pub const KIND_FULL: u8 = 0;
+/// Header `kind`: delta over `base_generation`'s chain.
+pub const KIND_DELTA: u8 = 1;
+/// Fixed byte length of the v3 header.
+pub const HEADER_LEN: usize = 34;
+
+/// File name of the delta checkpoint of `generation`.
+pub fn delta_file_name(generation: u64) -> String {
+    format!("delta-{generation:06}.ckpt")
+}
+
+/// Parse a delta file name back to its generation (`None` for anything
+/// else, including `.tmp` staging files).
+pub fn parse_delta_gen(name: &str) -> Option<u64> {
+    name.strip_prefix("delta-")?.strip_suffix(".ckpt")?.parse().ok()
+}
+
+/// Decoded v3 checkpoint header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeaderV3 {
+    pub kind: u8,
+    pub generation: u64,
+    pub base_generation: u64,
+    pub covered_seq: u64,
+    pub compressed: bool,
+}
+
+/// Serialize a v3 header (the payload is appended by the caller).
+pub fn encode_header(h: &HeaderV3) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN);
+    out.extend_from_slice(MAGIC_V3);
+    out.push(h.kind);
+    out.extend_from_slice(&h.generation.to_le_bytes());
+    out.extend_from_slice(&h.base_generation.to_le_bytes());
+    out.extend_from_slice(&h.covered_seq.to_le_bytes());
+    out.push(h.compressed as u8);
+    out
+}
+
+/// Parse a v3 header, returning it and the remaining payload bytes.
+pub fn parse_header(raw: &[u8]) -> Result<(HeaderV3, &[u8])> {
+    if raw.len() < HEADER_LEN || &raw[..8] != MAGIC_V3 {
+        bail!("bad v3 checkpoint header");
+    }
+    let kind = raw[8];
+    if kind != KIND_FULL && kind != KIND_DELTA {
+        bail!("unknown v3 checkpoint kind {kind}");
+    }
+    let compressed = match raw[33] {
+        0 => false,
+        1 => true,
+        b => bail!("bad v3 checkpoint compression flag {b}"),
+    };
+    Ok((
+        HeaderV3 {
+            kind,
+            generation: u64::from_le_bytes(raw[9..17].try_into()?),
+            base_generation: u64::from_le_bytes(raw[17..25].try_into()?),
+            covered_seq: u64::from_le_bytes(raw[25..33].try_into()?),
+            compressed,
+        },
+        &raw[HEADER_LEN..],
+    ))
+}
+
+/// One collection's slice of a delta checkpoint.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeltaColl {
+    pub name: String,
+    /// Rid allocator position at checkpoint time (monotone; fold takes
+    /// the max so replayed chains never re-issue a rid).
+    pub next_rid: RecordId,
+    /// Comma-joined field lists of *every* secondary index — the full
+    /// list, not a diff: specs are tiny and folding them is idempotent
+    /// (`create_index` backfills only indexes it has not seen).
+    pub index_specs: Vec<String>,
+    /// Records inserted since the previous generation.
+    pub upserts: Vec<(RecordId, Vec<u8>)>,
+    /// Records removed since the previous generation that existed *at*
+    /// the previous generation (insert + remove within one interval
+    /// nets out and appears in neither list).
+    pub removes: Vec<RecordId>,
+}
+
+/// Serialize a delta body (uncompressed; the engine applies LZSS on
+/// top when configured).
+pub fn encode_body(colls: &[DeltaColl]) -> Vec<u8> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&(colls.len() as u32).to_le_bytes());
+    for c in colls {
+        body.push(c.name.len() as u8);
+        body.extend_from_slice(c.name.as_bytes());
+        body.extend_from_slice(&c.next_rid.to_le_bytes());
+        body.extend_from_slice(&(c.index_specs.len() as u32).to_le_bytes());
+        for joined in &c.index_specs {
+            body.push(joined.len() as u8);
+            body.extend_from_slice(joined.as_bytes());
+        }
+        body.extend_from_slice(&(c.upserts.len() as u64).to_le_bytes());
+        for (rid, bytes) in &c.upserts {
+            body.extend_from_slice(&rid.to_le_bytes());
+            body.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            body.extend_from_slice(bytes);
+        }
+        body.extend_from_slice(&(c.removes.len() as u64).to_le_bytes());
+        for rid in &c.removes {
+            body.extend_from_slice(&rid.to_le_bytes());
+        }
+    }
+    body
+}
+
+/// Decode a delta body (inverse of [`encode_body`]).
+pub fn decode_body(body: &[u8]) -> Result<Vec<DeltaColl>> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > body.len() {
+            bail!("truncated delta checkpoint body");
+        }
+        let s = &body[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    // Every count below is untrusted on-disk data: clamp each
+    // pre-allocation to what the remaining bytes could possibly encode
+    // (per-entry minimum sizes), so a corrupt count fails in `take`
+    // with a recoverable error instead of aborting the allocator.
+    let ncolls = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+    let mut colls = Vec::with_capacity(ncolls.min(body.len() / 29 + 1));
+    for _ in 0..ncolls {
+        let name_len = take(&mut pos, 1)?[0] as usize;
+        let name = std::str::from_utf8(take(&mut pos, name_len)?)?.to_string();
+        let next_rid = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+        let n_idx = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let mut index_specs = Vec::with_capacity(n_idx.min(body.len() - pos));
+        for _ in 0..n_idx {
+            let len = take(&mut pos, 1)?[0] as usize;
+            index_specs.push(std::str::from_utf8(take(&mut pos, len)?)?.to_string());
+        }
+        let n_up = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+        let mut upserts = Vec::with_capacity(n_up.min((body.len() - pos) / 12 + 1));
+        for _ in 0..n_up {
+            let rid = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+            let len = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            upserts.push((rid, take(&mut pos, len)?.to_vec()));
+        }
+        let n_rm = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+        let mut removes = Vec::with_capacity(n_rm.min((body.len() - pos) / 8 + 1));
+        for _ in 0..n_rm {
+            removes.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into()?));
+        }
+        colls.push(DeltaColl { name, next_rid, index_specs, upserts, removes });
+    }
+    if pos != body.len() {
+        bail!("delta checkpoint body has trailing bytes");
+    }
+    Ok(colls)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<DeltaColl> {
+        vec![
+            DeltaColl {
+                name: "metrics".into(),
+                next_rid: 42,
+                index_specs: vec!["ts".into(), "node_id,ts".into()],
+                upserts: vec![(40, vec![1, 2, 3]), (41, vec![9])],
+                removes: vec![7, 12],
+            },
+            DeltaColl { name: "empty".into(), next_rid: 0, ..Default::default() },
+        ]
+    }
+
+    #[test]
+    fn body_round_trip() {
+        let colls = sample();
+        let body = encode_body(&colls);
+        assert_eq!(decode_body(&body).unwrap(), colls);
+    }
+
+    #[test]
+    fn header_round_trip() {
+        let h = HeaderV3 {
+            kind: KIND_DELTA,
+            generation: 9,
+            base_generation: 5,
+            covered_seq: 31,
+            compressed: true,
+        };
+        let mut raw = encode_header(&h);
+        assert_eq!(raw.len(), HEADER_LEN);
+        raw.extend_from_slice(b"payload");
+        let (back, payload) = parse_header(&raw).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(payload, b"payload");
+    }
+
+    #[test]
+    fn truncated_body_is_rejected() {
+        let body = encode_body(&sample());
+        for cut in [0usize, 3, body.len() / 2, body.len() - 1] {
+            assert!(decode_body(&body[..cut]).is_err(), "cut={cut}");
+        }
+        let mut trailing = body.clone();
+        trailing.push(0);
+        assert!(decode_body(&trailing).is_err(), "trailing byte must fail");
+    }
+
+    #[test]
+    fn corrupt_counts_fail_without_allocating() {
+        // An absurd on-disk count must come back as a decode error, not
+        // a capacity panic / allocator abort.
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u32.to_le_bytes()); // one collection
+        body.push(1);
+        body.push(b'm');
+        body.extend_from_slice(&0u64.to_le_bytes()); // next_rid
+        body.extend_from_slice(&0u32.to_le_bytes()); // no indexes
+        body.extend_from_slice(&u64::MAX.to_le_bytes()); // absurd n_upserts
+        assert!(decode_body(&body).is_err());
+    }
+
+    #[test]
+    fn delta_file_names_round_trip() {
+        assert_eq!(delta_file_name(7), "delta-000007.ckpt");
+        assert_eq!(parse_delta_gen("delta-000007.ckpt"), Some(7));
+        assert_eq!(parse_delta_gen("delta-000007.ckpt.tmp"), None);
+        assert_eq!(parse_delta_gen("journal-000007.wal"), None);
+        assert_eq!(parse_delta_gen("store.ckpt"), None);
+    }
+
+    #[test]
+    fn bad_headers_are_rejected() {
+        assert!(parse_header(b"HPCCKPT3").is_err(), "too short");
+        let mut raw = encode_header(&HeaderV3 {
+            kind: KIND_FULL,
+            generation: 1,
+            base_generation: 1,
+            covered_seq: 0,
+            compressed: false,
+        });
+        raw[0] = b'X';
+        assert!(parse_header(&raw).is_err(), "bad magic");
+        let mut raw = encode_header(&HeaderV3 {
+            kind: 9,
+            generation: 1,
+            base_generation: 1,
+            covered_seq: 0,
+            compressed: false,
+        });
+        assert!(parse_header(&raw).is_err(), "bad kind");
+        raw[8] = KIND_FULL;
+        raw[33] = 7;
+        assert!(parse_header(&raw).is_err(), "bad compression flag");
+    }
+}

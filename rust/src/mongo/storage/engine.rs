@@ -5,12 +5,14 @@
 //! Write path: encode document → append journal record (durable at the
 //! next group-commit [`Engine::sync`]) → insert into the in-memory
 //! record store → update secondary indexes. [`Engine::checkpoint`]
-//! snapshots all collections (optionally LZSS-compressed), atomically
-//! swaps the snapshot in, rotates to a fresh journal segment, and
-//! truncates the segments the snapshot covers; [`Engine::open`] recovers
-//! checkpoint + tail-segment replay, so a shard restarted by a later
-//! batch job resumes from its Lustre directory — the paper's central
-//! persistence story — while its on-disk footprint stays bounded.
+//! persists everything in memory — a full snapshot on generation 1 and
+//! on chain rebases, an incremental *delta* otherwise (optionally
+//! LZSS-compressed) — publishes it by atomic rename, rotates to a fresh
+//! journal segment, and truncates the segments it covers;
+//! [`Engine::open`] recovers base snapshot + delta-chain fold +
+//! tail-segment replay, so a shard restarted by a later batch job
+//! resumes from its Lustre directory — the paper's central persistence
+//! story — while its on-disk footprint stays bounded.
 //!
 //! # Storage lifecycle
 //!
@@ -33,6 +35,21 @@
 //! is still replayed (after the checkpoint, before any segment) and is
 //! removed by the next checkpoint.
 //!
+//! # Incremental (delta) checkpoints
+//!
+//! A full snapshot of the live set costs O(live data) no matter how
+//! little changed, so sustained ingest over a large store would pay an
+//! ever-growing compaction bill. Instead, only generation 1 (and every
+//! *rebase*, below) writes a full snapshot (`store.ckpt`); other
+//! generations write a **delta** (`delta-NNNNNN.ckpt`) carrying just
+//! the records inserted/removed since the previous generation, tracked
+//! per collection in memory. Once the chain reaches
+//! [`EngineOptions::full_checkpoint_chain`] deltas, the next checkpoint
+//! *rebases*: it writes a fresh full snapshot and deletes the
+//! superseded chain, bounding both recovery fold work and the chain's
+//! disk footprint. Recovery reconstructs state by folding base + delta
+//! chain in generation order, then replaying the journal tail.
+//!
 //! # On-disk formats
 //!
 //! Journal record: `u32 len | u8 op | u8 coll_len | coll | payload`,
@@ -42,17 +59,20 @@
 //! replays it atomically or — when the frame is torn by a mid-batch
 //! crash — discards it in full, never half-applied.
 //!
-//! Checkpoint (`store.ckpt`): magic `HPCCKPT2`, u64 generation, u64
-//! covered segment seq, u8 compressed flag, then the (optionally
-//! LZSS-compressed) body described at [`Engine::checkpoint`]. The
-//! legacy `HPCCKPT1` header (no generation/segment fields) still loads.
-//! See `docs/ARCHITECTURE.md` for the full byte-level layouts and the
-//! crash-recovery state machine.
+//! Checkpoints use the `HPCCKPT3` header (see [`super::delta`]):
+//! magic, kind (full/delta), generation, base generation, covered
+//! segment seq, compressed flag, body. `store.ckpt` is always a full
+//! snapshot; `delta-NNNNNN.ckpt` files are the chain on top of it. The
+//! legacy `HPCCKPT2` (no kind/base fields) and `HPCCKPT1` (no
+//! generation/segment fields) headers still load, so a pre-delta store
+//! opens and upgrades in place. See `docs/ARCHITECTURE.md` for the
+//! full byte-level layouts and the crash-recovery state machine.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use anyhow::{bail, Context, Result};
 
+use super::delta::{self, DeltaColl, HeaderV3};
 use super::index::{Index, IndexSpec};
 use super::io::{StorageDir, StorageFile};
 use crate::mongo::bson::Document;
@@ -75,9 +95,10 @@ const OP_REMOVE: u8 = 2;
 const OP_INSERT_MANY: u8 = 3;
 /// Legacy checkpoint magic: `magic | u8 compressed | body`.
 const CKPT_MAGIC_V1: &[u8; 8] = b"HPCCKPT1";
-/// Current checkpoint magic: `magic | u64 generation | u64 covered_seq |
-/// u8 compressed | body`.
-const CKPT_MAGIC: &[u8; 8] = b"HPCCKPT2";
+/// Legacy pre-delta magic: `magic | u64 generation | u64 covered_seq |
+/// u8 compressed | body`. Still loaded (a v2 store upgrades in place);
+/// never written — the current header is [`delta::MAGIC_V3`].
+const CKPT_MAGIC_V2: &[u8; 8] = b"HPCCKPT2";
 
 /// File name of journal segment `seq`.
 fn segment_name(seq: u64) -> String {
@@ -105,6 +126,11 @@ pub struct EngineOptions {
     /// open segment rotates every `checkpoint_bytes / journal_segments`
     /// bytes so truncation reclaims space in bounded pieces.
     pub journal_segments: u32,
+    /// Incremental checkpoints: maximum delta generations per chain.
+    /// After this many deltas the next checkpoint *rebases* — writes a
+    /// full snapshot and deletes the superseded chain. `0` = every
+    /// checkpoint is a full snapshot (the pre-delta behaviour).
+    pub full_checkpoint_chain: u32,
 }
 
 impl Default for EngineOptions {
@@ -114,6 +140,7 @@ impl Default for EngineOptions {
             compress_checkpoints: false,
             checkpoint_bytes: 0,
             journal_segments: 4,
+            full_checkpoint_chain: 8,
         }
     }
 }
@@ -136,8 +163,19 @@ impl EngineOptions {
 pub struct CheckpointStats {
     /// Generation number of the checkpoint just written.
     pub generation: u64,
-    /// Size of the checkpoint file, after optional compression.
+    /// Size of the file written this generation (full snapshot or
+    /// delta), after optional compression.
     pub checkpoint_bytes: u64,
+    /// Size of the delta file written this generation; `0` when this
+    /// generation wrote a full snapshot. The headline scaling claim:
+    /// steady-state, this tracks new writes, not the live set.
+    pub delta_bytes: u64,
+    /// Whether this generation wrote a full snapshot (generation 1 or a
+    /// chain rebase) rather than a delta.
+    pub full: bool,
+    /// Delta generations on top of the on-disk full snapshot *after*
+    /// this checkpoint (`0` right after a rebase).
+    pub chain_len: u64,
     /// Journal files deleted because the checkpoint covers them
     /// (segments plus any legacy `journal.wal`).
     pub segments_truncated: u64,
@@ -149,8 +187,13 @@ pub struct CheckpointStats {
 /// tests).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RecoveryReport {
-    /// Generation of the checkpoint loaded (0 = none on disk).
+    /// Generation of the newest checkpoint recovered — base full
+    /// snapshot plus every folded delta (0 = none on disk).
     pub checkpoint_generation: u64,
+    /// Delta checkpoints folded on top of the base snapshot.
+    pub deltas_folded: u64,
+    /// On-disk bytes of the folded delta chain.
+    pub delta_bytes_folded: u64,
     /// Journal files replayed (tail segments plus any legacy journal).
     pub segments_replayed: u64,
     /// Segments skipped — and deleted — because the checkpoint already
@@ -178,11 +221,27 @@ struct Collection {
     next_rid: RecordId,
     indexes: Vec<Index>,
     bytes: u64,
+    /// Records inserted since the last checkpoint — the upsert half of
+    /// the next delta. Checkpoint-chain loading bypasses this (those
+    /// records are already persistent); live writes and journal replay
+    /// (durable-but-uncheckpointed work) both feed it.
+    dirty: BTreeSet<RecordId>,
+    /// Records removed since the last checkpoint that existed *at* the
+    /// last checkpoint — the remove half of the next delta. A record
+    /// born and removed within one interval nets out of both sets.
+    tombstones: BTreeSet<RecordId>,
 }
 
 impl Collection {
     fn new() -> Self {
-        Self { records: BTreeMap::new(), next_rid: 0, indexes: Vec::new(), bytes: 0 }
+        Self {
+            records: BTreeMap::new(),
+            next_rid: 0,
+            indexes: Vec::new(),
+            bytes: 0,
+            dirty: BTreeSet::new(),
+            tombstones: BTreeSet::new(),
+        }
     }
 
     fn insert_decoded(&mut self, doc: &Document, encoded: Vec<u8>) -> RecordId {
@@ -190,6 +249,7 @@ impl Collection {
         self.next_rid += 1;
         self.bytes += encoded.len() as u64;
         self.records.insert(rid, encoded);
+        self.dirty.insert(rid);
         for idx in &mut self.indexes {
             idx.insert(doc, rid);
         }
@@ -207,10 +267,50 @@ impl Collection {
         if let Some(bytes) = self.records.remove(&rid) {
             self.bytes -= bytes.len() as u64;
         }
+        if !self.dirty.remove(&rid) {
+            self.tombstones.insert(rid);
+        }
         for idx in &mut self.indexes {
             idx.remove(&doc, rid);
         }
         Ok(doc)
+    }
+
+    /// Apply a checkpoint-chain upsert during recovery fold: install
+    /// `encoded` at `rid` without touching rid allocation or delta
+    /// tracking (folded records are already persistent).
+    fn apply_upsert(&mut self, rid: RecordId, encoded: Vec<u8>) -> Result<()> {
+        let doc = Document::decode(&encoded)?;
+        if let Some(old) = self.records.remove(&rid) {
+            // Defensive: chains never legitimately overwrite a rid, but
+            // if one does the accounting must stay exact.
+            self.bytes -= old.len() as u64;
+            if let Ok(old_doc) = Document::decode(&old) {
+                for idx in &mut self.indexes {
+                    idx.remove(&old_doc, rid);
+                }
+            }
+        }
+        self.bytes += encoded.len() as u64;
+        self.records.insert(rid, encoded);
+        for idx in &mut self.indexes {
+            idx.insert(&doc, rid);
+        }
+        Ok(())
+    }
+
+    /// Apply a checkpoint-chain remove during recovery fold (no delta
+    /// tracking; missing rids are tolerated — the chain is idempotent
+    /// over states a crash may have left half-visible).
+    fn apply_remove(&mut self, rid: RecordId) {
+        if let Some(bytes) = self.records.remove(&rid) {
+            self.bytes -= bytes.len() as u64;
+            if let Ok(doc) = Document::decode(&bytes) {
+                for idx in &mut self.indexes {
+                    idx.remove(&doc, rid);
+                }
+            }
+        }
     }
 }
 
@@ -227,10 +327,16 @@ pub struct Engine {
     pending_frames: u64,
     /// Sequence number of the open segment.
     current_seq: u64,
-    /// Highest segment sequence the on-disk checkpoint covers.
+    /// Highest segment sequence the on-disk checkpoint chain covers.
     covered_seq: u64,
-    /// Generation of the on-disk checkpoint (0 = none yet).
+    /// Generation of the newest on-disk checkpoint, full or delta
+    /// (0 = none yet).
     generation: u64,
+    /// Generation of the on-disk *full* snapshot the delta chain builds
+    /// on (`generation - base_generation` = chain length).
+    base_generation: u64,
+    /// On-disk bytes of the live delta chain (rebase resets it).
+    chain_bytes: u64,
     /// Journal bytes made durable since the last checkpoint — the
     /// auto-compaction trigger.
     synced_bytes_since_ckpt: u64,
@@ -275,6 +381,8 @@ impl Engine {
             current_seq: 0,
             covered_seq: 0,
             generation: 0,
+            base_generation: 0,
+            chain_bytes: 0,
             synced_bytes_since_ckpt: 0,
             frames_since_ckpt: 0,
             sealed_bytes: 0,
@@ -486,22 +594,41 @@ impl Engine {
         names
     }
 
-    /// Snapshot all collections to the checkpoint file, rotate to a
+    /// Checkpoint the engine: persist everything in memory, rotate to a
     /// fresh journal segment, and truncate every journal file the
-    /// snapshot covers.
+    /// checkpoint covers.
     ///
-    /// Checkpoint body layout: u32 ncolls, then per collection: u8
-    /// name_len, name, u64 next_rid, u32 n_indexes, per index (u8 len,
-    /// joined field names), u64 nrecords, then records (u64 rid, u32
-    /// len, bytes). The body is LZSS-compressed when
-    /// [`EngineOptions::compress_checkpoints`] is set.
+    /// Most generations write an incremental **delta**
+    /// (`delta-NNNNNN.ckpt`) carrying only the records inserted/removed
+    /// since the previous generation — cost proportional to work done.
+    /// Generation 1, and every generation once the chain holds
+    /// [`EngineOptions::full_checkpoint_chain`] deltas, **rebases**: it
+    /// writes a full snapshot to `store.ckpt` and deletes the
+    /// superseded chain.
     ///
-    /// Crash safety: the write stages to `store.ckpt.tmp` and renames —
-    /// a kill during the write or before the swap leaves the previous
-    /// checkpoint authoritative; a kill after the swap but during the
-    /// truncation is finished by the next recovery, which skips (and
-    /// deletes) covered segments.
+    /// Crash safety: every file stages to `<name>.tmp` and renames — a
+    /// kill during a write leaves the previous chain authoritative; a
+    /// kill after the swap, during truncation or chain cleanup, is
+    /// finished by the next recovery.
     pub fn checkpoint(&mut self) -> Result<CheckpointStats> {
+        let rebase = self.generation == 0
+            || self.opts.full_checkpoint_chain == 0
+            || self.chain_len() >= self.opts.full_checkpoint_chain as u64;
+        if rebase {
+            self.checkpoint_full()
+        } else {
+            self.checkpoint_delta()
+        }
+    }
+
+    /// Write a full snapshot (generation 1 or a chain rebase).
+    ///
+    /// Body layout: u32 ncolls, then per collection: u8 name_len, name,
+    /// u64 next_rid, u32 n_indexes, per index (u8 len, joined field
+    /// names), u64 nrecords, then records (u64 rid, u32 len, bytes).
+    /// The body is LZSS-compressed when
+    /// [`EngineOptions::compress_checkpoints`] is set.
+    fn checkpoint_full(&mut self) -> Result<CheckpointStats> {
         let mut body = Vec::new();
         let mut names: Vec<&String> = self.collections.keys().collect();
         names.sort();
@@ -524,28 +651,112 @@ impl Engine {
                 body.extend_from_slice(bytes);
             }
         }
-        self.generation += 1;
         // The snapshot contains every in-memory record, so it covers the
         // open segment (and anything still buffered).
+        let generation = self.generation + 1;
         let covered = self.current_seq;
-        let mut out = CKPT_MAGIC.to_vec();
-        out.extend_from_slice(&self.generation.to_le_bytes());
-        out.extend_from_slice(&covered.to_le_bytes());
+        let mut out = delta::encode_header(&HeaderV3 {
+            kind: delta::KIND_FULL,
+            generation,
+            base_generation: generation,
+            covered_seq: covered,
+            compressed: self.opts.compress_checkpoints,
+        });
         if self.opts.compress_checkpoints {
-            out.push(1);
             out.extend_from_slice(&compress::compress(&body));
         } else {
-            out.push(0);
             out.extend_from_slice(&body);
         }
         let mut stats = CheckpointStats {
-            generation: self.generation,
+            generation,
             checkpoint_bytes: out.len() as u64,
+            full: true,
             ..Default::default()
         };
-        // Atomic swap: stage + rename. From here the new checkpoint is
-        // authoritative.
+        // Atomic swap: stage + rename. From here the new snapshot is
+        // authoritative and any older delta chain is superseded. The
+        // in-memory generation advances only on success: a failed write
+        // must leave the chain state untouched, or the shard's
+        // swallow-and-retry compaction hook would skip a generation.
         self.dir.write_atomic(CKPT, &out)?;
+        self.generation = generation;
+        self.base_generation = generation;
+        self.chain_bytes = 0;
+        for name in self.dir.list()? {
+            if delta::parse_delta_gen(&name).is_some() {
+                let _ = self.dir.remove(&name);
+            }
+        }
+        self.finish_checkpoint(covered, &mut stats)?;
+        Ok(stats)
+    }
+
+    /// Write an incremental delta over the current chain: only the
+    /// records inserted/removed since the previous generation (plus the
+    /// per-collection rid allocator and index-spec list, which are
+    /// tiny). Cost scales with new writes, not with the live set.
+    fn checkpoint_delta(&mut self) -> Result<CheckpointStats> {
+        let mut names: Vec<&String> = self.collections.keys().collect();
+        names.sort();
+        let mut colls = Vec::with_capacity(names.len());
+        for name in names {
+            let c = &self.collections[name];
+            let mut upserts = Vec::with_capacity(c.dirty.len());
+            for rid in &c.dirty {
+                if let Some(bytes) = c.records.get(rid) {
+                    upserts.push((*rid, bytes.clone()));
+                }
+            }
+            colls.push(DeltaColl {
+                name: name.clone(),
+                next_rid: c.next_rid,
+                index_specs: c.indexes.iter().map(|i| i.spec.fields.join(",")).collect(),
+                upserts,
+                removes: c.tombstones.iter().copied().collect(),
+            });
+        }
+        let body = delta::encode_body(&colls);
+        // Like a full snapshot, the delta persists every in-memory
+        // change since the previous generation, so it covers the open
+        // segment (and anything still buffered).
+        let generation = self.generation + 1;
+        let covered = self.current_seq;
+        let mut out = delta::encode_header(&HeaderV3 {
+            kind: delta::KIND_DELTA,
+            generation,
+            base_generation: self.base_generation,
+            covered_seq: covered,
+            compressed: self.opts.compress_checkpoints,
+        });
+        if self.opts.compress_checkpoints {
+            out.extend_from_slice(&compress::compress(&body));
+        } else {
+            out.extend_from_slice(&body);
+        }
+        let mut stats = CheckpointStats {
+            generation,
+            checkpoint_bytes: out.len() as u64,
+            delta_bytes: out.len() as u64,
+            full: false,
+            ..Default::default()
+        };
+        // Atomic publish: stage + rename, same protocol as the full
+        // snapshot. A kill — or a failed write — leaves the chain at the
+        // previous generation (at most a `.tmp` recovery discards); the
+        // in-memory generation advances only on success, or the shard's
+        // swallow-and-retry compaction hook would gap the chain.
+        self.dir.write_atomic(&delta::delta_file_name(generation), &out)?;
+        self.generation = generation;
+        self.chain_bytes += out.len() as u64;
+        self.finish_checkpoint(covered, &mut stats)?;
+        Ok(stats)
+    }
+
+    /// Common checkpoint trailer (full and delta): seal + truncate the
+    /// covered journal, reset the compaction trigger and the delta
+    /// tracking, and stamp the chain length into `stats`.
+    fn finish_checkpoint(&mut self, covered: u64, stats: &mut CheckpointStats) -> Result<()> {
+        stats.chain_len = self.chain_len();
         self.journal_buf.clear();
         self.pending_frames = 0;
         if self.opts.journal {
@@ -574,15 +785,24 @@ impl Engine {
         self.sealed_bytes = 0;
         self.synced_bytes_since_ckpt = 0;
         self.frames_since_ckpt = 0;
-        Ok(stats)
+        for c in self.collections.values_mut() {
+            c.dirty.clear();
+            c.tombstones.clear();
+        }
+        Ok(())
     }
 
     fn recover(&mut self) -> Result<()> {
-        // A checkpoint staging file can only exist if a crash interrupted
-        // the write before its atomic rename; the previous checkpoint (if
-        // any) is authoritative, so discard the partial one.
+        // A checkpoint staging file (full or delta) can only exist if a
+        // crash interrupted the write before its atomic rename; the
+        // published chain is authoritative, so discard partials.
         if self.dir.exists(CKPT_TMP) {
             let _ = self.dir.remove(CKPT_TMP);
+        }
+        for name in self.dir.list()? {
+            if name.starts_with("delta-") && name.ends_with(".ckpt.tmp") {
+                let _ = self.dir.remove(&name);
+            }
         }
         let mut ckpt_version = 0u8;
         if self.dir.exists(CKPT) {
@@ -591,17 +811,22 @@ impl Engine {
                 .load_checkpoint(&raw)
                 .with_context(|| format!("corrupt checkpoint in {}", self.dir.describe()))?;
         }
+        // Whatever store.ckpt held (any header version) is the chain
+        // base; fold the delta chain on top of it in generation order.
+        self.base_generation = self.generation;
+        self.fold_delta_chain(ckpt_version)?;
         self.recovery.checkpoint_generation = self.generation;
-        // Legacy single-file journal (pre-segment layout). A v2
-        // checkpoint is only ever written by an engine version that had
-        // already replayed (or written) the legacy journal into memory,
-        // so when one exists the legacy file is covered — the kill
-        // landed between the checkpoint swap and the legacy removal;
-        // replaying it would double-apply every document. Otherwise
-        // (no checkpoint, or a v1 one that truncated the file in place)
-        // whatever is on disk is the tail: replay it.
+        // Legacy single-file journal (pre-segment layout). A v2+
+        // checkpoint — or any delta — is only ever written by an engine
+        // version that had already replayed (or written) the legacy
+        // journal into memory, so when one exists the legacy file is
+        // covered: the kill landed between the checkpoint swap and the
+        // legacy removal, and replaying it would double-apply every
+        // document. Otherwise (no checkpoint, or a v1 one that
+        // truncated the file in place) whatever is on disk is the tail:
+        // replay it.
         if self.dir.exists(JOURNAL_LEGACY) {
-            if ckpt_version >= 2 {
+            if ckpt_version >= 2 || self.recovery.deltas_folded > 0 {
                 self.recovery.segments_skipped += 1;
                 let _ = self.dir.remove(JOURNAL_LEGACY);
             } else {
@@ -646,8 +871,11 @@ impl Engine {
         Ok(())
     }
 
-    /// Load a checkpoint, returning its header version (1 = legacy
-    /// `HPCCKPT1`, 2 = `HPCCKPT2`).
+    /// Load the base checkpoint (`store.ckpt`), returning its header
+    /// version (1 = legacy `HPCCKPT1`, 2 = legacy `HPCCKPT2`, 3 =
+    /// `HPCCKPT3` full snapshot). Legacy stores upgrade in place: the
+    /// first delta written on top of a v1/v2 base simply chains on its
+    /// generation.
     fn load_checkpoint(&mut self, raw: &[u8]) -> Result<u8> {
         if raw.len() >= 9 && &raw[..8] == CKPT_MAGIC_V1 {
             // Legacy header: no generation or segment watermark.
@@ -656,13 +884,105 @@ impl Engine {
             self.load_checkpoint_body(raw[8], &raw[9..])?;
             return Ok(1);
         }
-        if raw.len() >= 25 && &raw[..8] == CKPT_MAGIC {
+        if raw.len() >= 25 && &raw[..8] == CKPT_MAGIC_V2 {
             self.generation = u64::from_le_bytes(raw[8..16].try_into()?);
             self.covered_seq = u64::from_le_bytes(raw[16..24].try_into()?);
             self.load_checkpoint_body(raw[24], &raw[25..])?;
             return Ok(2);
         }
+        if raw.len() >= delta::HEADER_LEN && &raw[..8] == delta::MAGIC_V3 {
+            let (hdr, payload) = delta::parse_header(raw)?;
+            if hdr.kind != delta::KIND_FULL {
+                bail!("store.ckpt is not a full snapshot");
+            }
+            self.generation = hdr.generation;
+            self.covered_seq = hdr.covered_seq;
+            self.load_checkpoint_body(hdr.compressed as u8, payload)?;
+            return Ok(3);
+        }
         bail!("bad checkpoint magic");
+    }
+
+    /// Fold the on-disk delta chain onto the loaded base snapshot, in
+    /// generation order. Deltas that do not extend the current base —
+    /// an older chain a crashed rebase did not finish deleting, or
+    /// orphans with no base at all — are already contained in the base
+    /// snapshot, so they are deleted, never folded (folding one would
+    /// double-apply). A same-base gap is real corruption and fails
+    /// recovery.
+    fn fold_delta_chain(&mut self, ckpt_version: u8) -> Result<()> {
+        let mut chain: Vec<(u64, String)> = self
+            .dir
+            .list()?
+            .into_iter()
+            .filter_map(|n| delta::parse_delta_gen(&n).map(|g| (g, n)))
+            .collect();
+        chain.sort_unstable();
+        for (gen, name) in chain {
+            if ckpt_version == 0 || gen <= self.generation {
+                // Orphan (no base on disk) or superseded by a newer full
+                // snapshot: finish the interrupted cleanup.
+                let _ = self.dir.remove(&name);
+                continue;
+            }
+            let raw = self.dir.read(&name)?;
+            let (hdr, payload) = delta::parse_header(&raw).with_context(|| {
+                format!("corrupt delta checkpoint {name} in {}", self.dir.describe())
+            })?;
+            if hdr.kind != delta::KIND_DELTA || hdr.base_generation != self.base_generation {
+                // A chain built on a superseded base: the current full
+                // snapshot already contains its effect.
+                let _ = self.dir.remove(&name);
+                continue;
+            }
+            if hdr.generation != gen || hdr.generation != self.generation + 1 {
+                bail!(
+                    "broken delta chain in {}: {name} has generation {} over base {}, expected {}",
+                    self.dir.describe(),
+                    hdr.generation,
+                    hdr.base_generation,
+                    self.generation + 1
+                );
+            }
+            let body = if hdr.compressed {
+                compress::decompress(payload)?
+            } else {
+                payload.to_vec()
+            };
+            let colls = delta::decode_body(&body).with_context(|| {
+                format!("corrupt delta checkpoint {name} in {}", self.dir.describe())
+            })?;
+            self.fold_delta(colls)?;
+            self.generation = hdr.generation;
+            self.covered_seq = self.covered_seq.max(hdr.covered_seq);
+            self.chain_bytes += raw.len() as u64;
+            self.recovery.deltas_folded += 1;
+            self.recovery.delta_bytes_folded += raw.len() as u64;
+        }
+        Ok(())
+    }
+
+    /// Apply one decoded delta to the in-memory state (recovery fold).
+    fn fold_delta(&mut self, colls: Vec<DeltaColl>) -> Result<()> {
+        for dc in colls {
+            self.create_collection(&dc.name);
+            // Index specs new to the fold backfill from the records
+            // folded so far; already-known specs are untouched
+            // (`create_index` is idempotent).
+            for joined in &dc.index_specs {
+                let fields: Vec<&str> = joined.split(',').collect();
+                self.create_index(&dc.name, IndexSpec::compound(&fields))?;
+            }
+            let c = self.collections.get_mut(&dc.name).expect("collection created above");
+            for (rid, bytes) in dc.upserts {
+                c.apply_upsert(rid, bytes)?;
+            }
+            for rid in dc.removes {
+                c.apply_remove(rid);
+            }
+            c.next_rid = c.next_rid.max(dc.next_rid);
+        }
+        Ok(())
     }
 
     fn load_checkpoint_body(&mut self, compressed: u8, payload: &[u8]) -> Result<()> {
@@ -817,9 +1137,28 @@ impl Engine {
         self.sealed_bytes + self.journal.as_ref().map(|j| j.len()).unwrap_or(0)
     }
 
-    /// Generation of the newest checkpoint (0 = never checkpointed).
+    /// Generation of the newest checkpoint, full or delta (0 = never
+    /// checkpointed).
     pub fn generation(&self) -> u64 {
         self.generation
+    }
+
+    /// Generation of the on-disk full snapshot the delta chain builds
+    /// on (0 = never checkpointed).
+    pub fn base_generation(&self) -> u64 {
+        self.base_generation
+    }
+
+    /// Delta generations on top of the on-disk full snapshot (0 right
+    /// after a rebase — recovery folds exactly this many deltas).
+    pub fn chain_len(&self) -> u64 {
+        self.generation - self.base_generation
+    }
+
+    /// On-disk bytes of the live delta chain (the checkpoint-side
+    /// footprint the rebase threshold bounds).
+    pub fn chain_disk_bytes(&self) -> u64 {
+        self.chain_bytes
     }
 
     /// What the opening recovery replayed.
@@ -1148,6 +1487,7 @@ mod tests {
             compress_checkpoints: false,
             checkpoint_bytes: 8192,
             journal_segments: 4,
+            full_checkpoint_chain: 8,
         };
         let dir = LocalDir::temp("eng14").unwrap();
         let root = dir.describe();
@@ -1185,6 +1525,7 @@ mod tests {
             compress_checkpoints: true,
             checkpoint_bytes: 16 * 1024,
             journal_segments: 4,
+            full_checkpoint_chain: 8,
         };
         let dir = LocalDir::temp("eng15").unwrap();
         let root = dir.describe();
@@ -1223,6 +1564,287 @@ mod tests {
             "replayed {} bytes",
             eng.recovery_report().bytes_replayed
         );
+    }
+
+    #[test]
+    fn delta_checkpoint_costs_new_writes_not_live_set() {
+        let (mut eng, root) = temp_engine("eng17", true, false);
+        eng.create_collection("m");
+        for t in 0..800 {
+            eng.insert("m", &doc(t, t % 7)).unwrap();
+        }
+        eng.sync().unwrap();
+        let full = eng.checkpoint().unwrap();
+        assert!(full.full, "generation 1 must be a full snapshot");
+        assert_eq!((full.generation, full.chain_len, full.delta_bytes), (1, 0, 0));
+        // After K unchanged records, a generation costs O(new writes).
+        for t in 0..10 {
+            eng.insert("m", &doc(1000 + t, 1)).unwrap();
+        }
+        eng.sync().unwrap();
+        let delta = eng.checkpoint().unwrap();
+        assert!(!delta.full);
+        assert_eq!((delta.generation, delta.chain_len), (2, 1));
+        assert!(delta.delta_bytes > 0);
+        assert_eq!(delta.delta_bytes, delta.checkpoint_bytes);
+        assert!(
+            delta.delta_bytes * 10 < full.checkpoint_bytes,
+            "delta of 10 docs ({} B) must be far below the 800-doc full snapshot ({} B)",
+            delta.delta_bytes,
+            full.checkpoint_bytes
+        );
+        assert!(std::path::Path::new(&root).join(delta::delta_file_name(2)).exists());
+    }
+
+    #[test]
+    fn delta_chain_recovery_folds_base_chain_and_tail() {
+        let dir = LocalDir::temp("eng18").unwrap();
+        let root = dir.describe();
+        {
+            let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+            eng.create_collection("m");
+            eng.create_index("m", IndexSpec::single("node_id")).unwrap();
+            for t in 0..50 {
+                eng.insert("m", &doc(t, t % 5)).unwrap();
+            }
+            eng.sync().unwrap();
+            eng.checkpoint().unwrap(); // gen 1: full
+            for t in 50..60 {
+                eng.insert("m", &doc(t, 1)).unwrap(); // rids 50..59
+            }
+            eng.sync().unwrap();
+            eng.checkpoint().unwrap(); // gen 2: delta (inserts)
+            eng.remove("m", 0).unwrap(); // base record
+            eng.remove("m", 55).unwrap(); // gen-2 record
+            eng.sync().unwrap();
+            eng.checkpoint().unwrap(); // gen 3: delta (tombstones)
+            for t in 60..64 {
+                eng.insert("m", &doc(t, 2)).unwrap();
+            }
+            eng.sync().unwrap();
+            eng.checkpoint().unwrap(); // gen 4: delta
+            // Post-chain journal tail, then kill.
+            eng.insert("m", &doc(99, 3)).unwrap();
+            eng.sync().unwrap();
+        }
+        let mut eng =
+            Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        assert_eq!(eng.stats("m").docs, 50 + 10 - 2 + 4 + 1);
+        let rep = eng.recovery_report().clone();
+        assert_eq!(rep.checkpoint_generation, 4);
+        assert_eq!(rep.deltas_folded, 3);
+        assert!(rep.delta_bytes_folded > 0);
+        assert_eq!(rep.frames_replayed, 1, "only the post-chain tail replays");
+        assert!(eng.fetch("m", 0).is_none(), "folded tombstone of a base record");
+        assert!(eng.fetch("m", 55).is_none(), "folded tombstone of a chain record");
+        assert_eq!(eng.fetch("m", 64).unwrap().get_i64("ts"), Some(99));
+        // Indexes rebuilt through base + chain + tail: node 1 appears in
+        // 10 base records and 10 chain inserts, minus the removed rid 55.
+        let idx = eng.index("m", "node_id_1").unwrap();
+        assert_eq!(idx.point(&[&Value::Int(1)]).len(), 19);
+        // Rid allocation continues past every folded generation.
+        assert_eq!(eng.insert("m", &doc(100, 4)).unwrap(), 65);
+    }
+
+    #[test]
+    fn chain_rebases_into_full_snapshot_and_deletes_deltas() {
+        let opts = EngineOptions {
+            journal: true,
+            compress_checkpoints: false,
+            checkpoint_bytes: 0,
+            journal_segments: 4,
+            full_checkpoint_chain: 2,
+        };
+        let dir = LocalDir::temp("eng19").unwrap();
+        let root = dir.describe();
+        let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+        eng.create_collection("m");
+        eng.insert("m", &doc(0, 0)).unwrap();
+        eng.sync().unwrap();
+        assert!(eng.checkpoint().unwrap().full); // gen 1
+        for g in 0..2i64 {
+            eng.insert("m", &doc(10 + g, 0)).unwrap();
+            eng.sync().unwrap();
+            let ck = eng.checkpoint().unwrap();
+            assert!(!ck.full, "generation {} should be a delta", ck.generation);
+        }
+        assert_eq!(eng.chain_len(), 2);
+        assert!(eng.chain_disk_bytes() > 0);
+        assert!(std::path::Path::new(&root).join(delta::delta_file_name(3)).exists());
+        // Chain at the threshold: the next checkpoint rebases.
+        eng.insert("m", &doc(20, 0)).unwrap();
+        eng.sync().unwrap();
+        let ck = eng.checkpoint().unwrap();
+        assert!(ck.full);
+        assert_eq!((ck.generation, ck.chain_len), (4, 0));
+        assert_eq!(eng.base_generation(), 4);
+        assert_eq!(eng.chain_disk_bytes(), 0);
+        for g in 2..=3 {
+            assert!(
+                !std::path::Path::new(&root).join(delta::delta_file_name(g)).exists(),
+                "superseded delta {g} must be deleted by the rebase"
+            );
+        }
+        drop(eng);
+        let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+        assert_eq!(eng.stats("m").docs, 4);
+        assert_eq!(eng.recovery_report().deltas_folded, 0);
+        assert_eq!(eng.recovery_report().checkpoint_generation, 4);
+    }
+
+    #[test]
+    fn chain_zero_writes_full_snapshots_only() {
+        let opts = EngineOptions { full_checkpoint_chain: 0, ..EngineOptions::default() };
+        let dir = LocalDir::temp("eng20").unwrap();
+        let root = dir.describe();
+        let mut eng = Engine::open_with(Box::new(dir), opts).unwrap();
+        eng.create_collection("m");
+        for g in 0..3i64 {
+            eng.insert("m", &doc(g, 0)).unwrap();
+            eng.sync().unwrap();
+            let ck = eng.checkpoint().unwrap();
+            assert!(ck.full, "chain=0 keeps the pre-delta all-full behaviour");
+            assert_eq!(ck.delta_bytes, 0);
+        }
+        let deltas = std::fs::read_dir(&root)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().starts_with("delta-")
+            })
+            .count();
+        assert_eq!(deltas, 0);
+    }
+
+    #[test]
+    fn failed_checkpoint_write_does_not_gap_the_chain() {
+        // The shard's compaction hook swallows checkpoint errors and
+        // retries on the next group commit, so a failed write must not
+        // mint a generation: a minted-but-unwritten generation would
+        // either gap the delta chain (unopenable store) or chain a
+        // delta onto a base that does not exist (silent data loss).
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        struct FlakyDir {
+            inner: LocalDir,
+            fail_next_atomic: Arc<AtomicBool>,
+        }
+        impl StorageDir for FlakyDir {
+            fn create(&self, name: &str) -> Result<Box<dyn StorageFile>> {
+                self.inner.create(name)
+            }
+            fn append_to(&self, name: &str) -> Result<Box<dyn StorageFile>> {
+                self.inner.append_to(name)
+            }
+            fn read(&self, name: &str) -> Result<Vec<u8>> {
+                self.inner.read(name)
+            }
+            fn write_atomic(&self, name: &str, bytes: &[u8]) -> Result<()> {
+                if self.fail_next_atomic.swap(false, Ordering::SeqCst) {
+                    bail!("injected checkpoint write failure");
+                }
+                self.inner.write_atomic(name, bytes)
+            }
+            fn exists(&self, name: &str) -> bool {
+                self.inner.exists(name)
+            }
+            fn remove(&self, name: &str) -> Result<()> {
+                self.inner.remove(name)
+            }
+            fn list(&self) -> Result<Vec<String>> {
+                self.inner.list()
+            }
+            fn describe(&self) -> String {
+                self.inner.describe()
+            }
+        }
+
+        let inner = LocalDir::temp("eng23").unwrap();
+        let root = inner.describe();
+        let fail = Arc::new(AtomicBool::new(false));
+        let dir = FlakyDir { inner, fail_next_atomic: fail.clone() };
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("m");
+
+        // Generation 1 (full) fails: nothing minted, retry is still full.
+        eng.insert("m", &doc(1, 1)).unwrap();
+        eng.sync().unwrap();
+        fail.store(true, Ordering::SeqCst);
+        assert!(eng.checkpoint().is_err());
+        assert_eq!(eng.generation(), 0, "failed write must not mint a generation");
+        let ck = eng.checkpoint().unwrap();
+        assert!(ck.full);
+        assert_eq!(ck.generation, 1);
+
+        // A failed delta write must not gap the chain either.
+        eng.insert("m", &doc(2, 2)).unwrap();
+        eng.sync().unwrap();
+        fail.store(true, Ordering::SeqCst);
+        assert!(eng.checkpoint().is_err());
+        assert_eq!(eng.generation(), 1);
+        eng.insert("m", &doc(3, 3)).unwrap();
+        eng.sync().unwrap();
+        let ck = eng.checkpoint().unwrap();
+        assert!(!ck.full);
+        assert_eq!(ck.generation, 2, "retry must reuse the unminted generation");
+        drop(eng);
+
+        let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        assert_eq!(eng.stats("m").docs, 3);
+        assert_eq!(eng.recovery_report().checkpoint_generation, 2);
+        assert_eq!(eng.recovery_report().deltas_folded, 1);
+    }
+
+    #[test]
+    fn empty_delta_generation_round_trips() {
+        let dir = LocalDir::temp("eng21").unwrap();
+        let root = dir.describe();
+        {
+            let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+            eng.create_collection("m");
+            eng.insert("m", &doc(1, 1)).unwrap();
+            eng.sync().unwrap();
+            eng.checkpoint().unwrap(); // gen 1: full
+            let ck = eng.checkpoint().unwrap(); // gen 2: delta of nothing
+            assert!(!ck.full);
+        }
+        let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        assert_eq!(eng.stats("m").docs, 1);
+        assert_eq!(eng.recovery_report().deltas_folded, 1);
+    }
+
+    #[test]
+    fn post_recovery_delta_includes_replayed_tail() {
+        // Journal frames replayed at open are durable-but-uncheckpointed
+        // work: the first post-recovery delta must carry them, because it
+        // truncates the journal that held them.
+        let dir = LocalDir::temp("eng22").unwrap();
+        let root = dir.describe();
+        {
+            let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+            eng.create_collection("m");
+            for t in 0..5 {
+                eng.insert("m", &doc(t, 1)).unwrap();
+            }
+            eng.sync().unwrap();
+            eng.checkpoint().unwrap(); // gen 1: full
+            eng.insert("m", &doc(10, 2)).unwrap();
+            eng.sync().unwrap();
+            // Kill with one frame in the journal tail.
+        }
+        {
+            let mut eng =
+                Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+            assert_eq!(eng.recovery_report().frames_replayed, 1);
+            let ck = eng.checkpoint().unwrap(); // gen 2: delta, truncates the tail
+            assert!(!ck.full);
+            assert!(ck.delta_bytes > 0, "the replayed frame must be in the delta");
+        }
+        let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        assert_eq!(eng.stats("m").docs, 6);
+        assert_eq!(eng.fetch("m", 5).unwrap().get_i64("ts"), Some(10));
+        assert_eq!(eng.recovery_report().frames_replayed, 0);
+        assert_eq!(eng.recovery_report().deltas_folded, 1);
     }
 
     #[test]

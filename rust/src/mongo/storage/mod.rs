@@ -6,9 +6,14 @@
 //! The engine owns its on-disk lifecycle: the journal is segmented,
 //! checkpoints are generation-numbered and cover a segment watermark,
 //! and compaction ([`Engine::maybe_checkpoint`]) keeps steady-state
-//! disk use bounded under sustained ingest. The formats and the
-//! crash-recovery state machine are specified in `docs/ARCHITECTURE.md`.
+//! disk use bounded under sustained ingest. Checkpoints are
+//! *incremental*: most generations write a delta of the records
+//! inserted/removed since the previous one ([`delta`], the `HPCCKPT3`
+//! format), and the chain periodically rebases into a fresh full
+//! snapshot. The formats and the crash-recovery state machine are
+//! specified in `docs/ARCHITECTURE.md`.
 
+pub mod delta;
 pub mod engine;
 pub mod index;
 pub mod io;

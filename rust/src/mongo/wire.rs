@@ -75,6 +75,11 @@ pub struct ShardStatsReply {
     pub journal_disk_bytes: u64,
     /// Checkpoint generation of the shard's engine.
     pub checkpoint_generation: u64,
+    /// Delta generations on top of the shard's on-disk full snapshot
+    /// (bounded by `StoreConfig::full_checkpoint_chain`).
+    pub checkpoint_chain_len: u64,
+    /// On-disk bytes of the shard's live delta chain.
+    pub delta_disk_bytes: u64,
 }
 
 /// Requests handled by a shard server (`mongod`).

@@ -39,6 +39,11 @@ pub struct SimSpec {
     /// truncation) after journaling this many bytes. 0 = off, matching
     /// the live `StoreConfig::checkpoint_bytes` = 0 behaviour.
     pub checkpoint_bytes: u64,
+    /// Incremental checkpoints: delta generations per chain before a
+    /// compaction rebases into a full snapshot (cost ∝ live set instead
+    /// of ∝ new writes). 0 = every compaction is full, matching the
+    /// live `StoreConfig::full_checkpoint_chain` = 0 behaviour.
+    pub full_checkpoint_chain: u32,
     /// OST count backing the store's scratch directories.
     pub osts: u32,
     /// User jobs for the query phase.
@@ -68,6 +73,7 @@ impl SimSpec {
             // MongoDB's 64 MB chunk ≈ 45k of our ~1.4 KB documents.
             max_chunk_docs: 45_000,
             checkpoint_bytes: 0,
+            full_checkpoint_chain: 8,
             osts: 64,
             query_jobs,
             cost,
@@ -95,6 +101,9 @@ pub struct SimReport {
     /// Storage-lifecycle compactions across all shards (0 when the
     /// lifecycle is off).
     pub checkpoints: u64,
+    /// Compactions that rebased the delta chain into a full snapshot
+    /// (the only ones whose cost scales with the live set).
+    pub rebases: u64,
     pub chunks: u64,
     pub util_shard: f64,
     pub util_router: f64,
@@ -210,10 +219,15 @@ impl ClusterSim {
         let mut next_split_at: Vec<u64> =
             (0..s_count).map(|s| 2 * jitter(s, 0)).collect();
         let mut splits = 0u64;
-        // Storage lifecycle: journal bytes since each shard's last
-        // compaction, and compactions performed.
+        // Storage lifecycle: journal bytes and docs since each shard's
+        // last compaction, compactions performed, and each shard's delta
+        // chain length (seeded at the rebase threshold so the first
+        // compaction writes a full snapshot — generation 1, as live).
         let mut shard_ckpt_bytes = vec![0u64; s_count];
+        let mut shard_delta_docs = vec![0u64; s_count];
+        let mut shard_chain = vec![spec.full_checkpoint_chain as u64; s_count];
         let mut checkpoints = 0u64;
+        let mut rebases = 0u64;
         // Routers that must refresh + re-route their next batch because
         // a split bumped the map version (the stale-version storm).
         let mut stale_routers = vec![0u32; r_count];
@@ -288,21 +302,34 @@ impl ClusterSim {
                 let mut t_s = t_j;
                 shard_docs[s] += b_s as u64;
                 // Storage lifecycle: past the journal threshold the
-                // shard compacts — serialize the live set (shard CPU)
-                // and stream the snapshot to its OSTs — before acking
-                // the triggering batch.
+                // shard compacts before acking the triggering batch.
+                // Steady state writes a *delta* — serialize and stream
+                // only the docs since the last compaction; once the
+                // chain reaches `full_checkpoint_chain` it rebases,
+                // paying the full live set once per chain.
                 if spec.checkpoint_bytes > 0 {
                     shard_ckpt_bytes[s] += (b_s as f64 * cost.journal_bytes_per_doc) as u64;
+                    shard_delta_docs[s] += b_s as u64;
                     if shard_ckpt_bytes[s] >= spec.checkpoint_bytes {
                         shard_ckpt_bytes[s] = 0;
                         checkpoints += 1;
-                        let ckpt_cpu =
-                            (shard_docs[s] as f64 * cost.checkpoint_doc_ns) as u64;
+                        let full = spec.full_checkpoint_chain == 0
+                            || shard_chain[s] >= spec.full_checkpoint_chain as u64;
+                        let (docs_serialized, per_doc_ns) = if full {
+                            shard_chain[s] = 0;
+                            rebases += 1;
+                            (shard_docs[s], cost.rebase_doc_ns)
+                        } else {
+                            shard_chain[s] += 1;
+                            (shard_delta_docs[s], cost.checkpoint_doc_ns)
+                        };
+                        shard_delta_docs[s] = 0;
+                        let ckpt_cpu = (docs_serialized as f64 * per_doc_ns) as u64;
                         let t_cpu = shard_cpu.serve(s, t_j, ckpt_cpu);
                         t_s = ost.serve(
                             s % o_count,
                             t_cpu,
-                            ost_ns(shard_docs[s] as f64 * cost.doc_bytes),
+                            ost_ns(docs_serialized as f64 * cost.doc_bytes),
                         );
                     }
                 }
@@ -435,6 +462,7 @@ impl ClusterSim {
             docs_per_sec: total_docs as f64 * 1e9 / ingest_end.max(1) as f64,
             splits,
             checkpoints,
+            rebases,
             chunks: shard_chunks.iter().sum(),
             util_shard,
             util_router,
@@ -537,14 +565,40 @@ mod tests {
         let base_spec = small_spec(32);
         let base = ClusterSim::new(base_spec.clone()).run();
         assert_eq!(base.checkpoints, 0, "lifecycle off by default in the sim");
+        assert_eq!(base.rebases, 0);
         let mut spec = base_spec;
         spec.checkpoint_bytes = 8 * 1024 * 1024;
         let r = ClusterSim::new(spec).run();
         assert_eq!(r.docs, base.docs, "compaction must not change the corpus");
         assert!(r.checkpoints > 0, "sustained ingest should compact");
+        assert!(r.rebases > 0, "the first compaction per shard is a rebase");
+        assert!(r.rebases < r.checkpoints, "steady state must be deltas, not rebases");
         assert!(
             r.ingest_virt_ns >= base.ingest_virt_ns,
             "compaction work cannot make ingest faster"
+        );
+    }
+
+    #[test]
+    fn delta_checkpoints_beat_always_full_compaction() {
+        // Same workload, same compaction cadence; the only difference is
+        // whether each compaction serializes the delta or the live set.
+        let mut delta = small_spec(32);
+        delta.checkpoint_bytes = 8 * 1024 * 1024;
+        delta.full_checkpoint_chain = 8;
+        let mut full = delta.clone();
+        full.full_checkpoint_chain = 0;
+        let rd = ClusterSim::new(delta).run();
+        let rf = ClusterSim::new(full).run();
+        assert_eq!(rd.docs, rf.docs);
+        assert_eq!(rd.checkpoints, rf.checkpoints, "cadence is byte-driven, not chain-driven");
+        assert!(rf.rebases == rf.checkpoints, "chain=0 means every compaction is full");
+        assert!(rd.rebases < rd.checkpoints);
+        assert!(
+            rd.ingest_virt_ns <= rf.ingest_virt_ns,
+            "delta compaction ({} ns) cannot be slower than always-full ({} ns)",
+            rd.ingest_virt_ns,
+            rf.ingest_virt_ns
         );
     }
 

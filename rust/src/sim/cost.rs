@@ -36,9 +36,15 @@ pub struct CostModel {
     /// paid once per shard sub-batch. This is the term the batch-size
     /// axis amortizes.
     pub journal_frame_ns: f64,
-    /// Checkpoint serialization per live document (shard CPU; the OST
-    /// transfer of the snapshot is charged separately).
+    /// Delta-checkpoint serialization per *newly written* document
+    /// (shard CPU; the OST transfer of the delta is charged
+    /// separately). The steady-state compaction term — proportional to
+    /// work done since the last checkpoint, not to the live set.
     pub checkpoint_doc_ns: f64,
+    /// Chain-rebase serialization per *live* document (shard CPU) —
+    /// paid only when the delta chain reaches
+    /// `SimSpec::full_checkpoint_chain` and a full snapshot is written.
+    pub rebase_doc_ns: f64,
     /// Fixed per-shard cost of opening a find (planner, cursor).
     pub find_fixed_ns: f64,
     /// Index-scan cost per candidate record id.
@@ -78,6 +84,7 @@ impl Default for CostModel {
             journal_bytes_per_doc: 1_450.0,
             journal_frame_ns: 25_000.0,
             checkpoint_doc_ns: 400.0,
+            rebase_doc_ns: 400.0,
             find_fixed_ns: 40_000.0,
             index_candidate_ns: 90.0,
             result_doc_ns: 1_500.0,
@@ -104,6 +111,7 @@ impl CostModel {
             .set("journal_bytes_per_doc", self.journal_bytes_per_doc)
             .set("journal_frame_ns", self.journal_frame_ns)
             .set("checkpoint_doc_ns", self.checkpoint_doc_ns)
+            .set("rebase_doc_ns", self.rebase_doc_ns)
             .set("find_fixed_ns", self.find_fixed_ns)
             .set("index_candidate_ns", self.index_candidate_ns)
             .set("result_doc_ns", self.result_doc_ns)
@@ -130,6 +138,7 @@ impl CostModel {
             journal_bytes_per_doc: f("journal_bytes_per_doc", d.journal_bytes_per_doc),
             journal_frame_ns: f("journal_frame_ns", d.journal_frame_ns),
             checkpoint_doc_ns: f("checkpoint_doc_ns", d.checkpoint_doc_ns),
+            rebase_doc_ns: f("rebase_doc_ns", d.rebase_doc_ns),
             find_fixed_ns: f("find_fixed_ns", d.find_fixed_ns),
             index_candidate_ns: f("index_candidate_ns", d.index_candidate_ns),
             result_doc_ns: f("result_doc_ns", d.result_doc_ns),
@@ -296,25 +305,45 @@ impl CostModel {
         }
         cm.result_doc_ns = t.elapsed().as_nanos() as f64 / fetched.max(1) as f64;
 
-        // --- Shard: checkpoint serialization per live document (storage
-        // lifecycle). The DES charges the snapshot's OST transfer
-        // separately, so subtract the measured cost of writing an
-        // equivalently-sized blob — otherwise the transfer would be
-        // double-counted and every lifecycle data point would overstate
-        // compaction cost.
+        // --- Shard: checkpoint serialization costs (storage lifecycle).
+        // The DES charges each checkpoint's OST transfer separately, so
+        // subtract the measured cost of writing an equivalently-sized
+        // blob — otherwise the transfer would be double-counted and
+        // every lifecycle data point would overstate compaction cost.
+        // Generation 1 is a full snapshot → the *rebase* term, per live
+        // document. A later generation is a delta → the steady-state
+        // term, per newly written document.
         {
+            let write_ns_for = |bytes: usize| -> Result<f64> {
+                let blob = vec![0xA5u8; bytes];
+                let scratch = std::env::temp_dir()
+                    .join(format!("hpcstore-calib-io-{}", std::process::id()));
+                let t = Instant::now();
+                std::fs::write(&scratch, &blob)?;
+                let ns = t.elapsed().as_nanos() as f64;
+                let _ = std::fs::remove_file(&scratch);
+                Ok(ns)
+            };
             let live = eng.stats("m").docs.max(1);
             let t = Instant::now();
-            let ck = eng.checkpoint()?;
+            let ck = eng.checkpoint()?; // generation 1: full snapshot
             let total_ns = t.elapsed().as_nanos() as f64;
-            let blob = vec![0xA5u8; ck.checkpoint_bytes as usize];
-            let scratch = std::env::temp_dir()
-                .join(format!("hpcstore-calib-io-{}", std::process::id()));
+            cm.rebase_doc_ns =
+                ((total_ns - write_ns_for(ck.checkpoint_bytes as usize)?) / live as f64)
+                    .max(50.0);
+
+            let fresh = (n_docs / 8).max(64);
+            for i in 0..fresh as u64 {
+                eng.insert("m", &gen.doc_at(i))?;
+            }
+            eng.sync()?;
             let t = Instant::now();
-            std::fs::write(&scratch, &blob)?;
-            let write_ns = t.elapsed().as_nanos() as f64;
-            let _ = std::fs::remove_file(&scratch);
-            cm.checkpoint_doc_ns = ((total_ns - write_ns) / live as f64).max(50.0);
+            let ck = eng.checkpoint()?; // generation 2: delta
+            let total_ns = t.elapsed().as_nanos() as f64;
+            debug_assert!(!ck.full, "generation 2 must be a delta");
+            cm.checkpoint_doc_ns =
+                ((total_ns - write_ns_for(ck.checkpoint_bytes as usize)?) / fresh as f64)
+                    .max(50.0);
         }
 
         // --- Config: split + map clone per entry.
@@ -389,5 +418,6 @@ mod tests {
         assert!(cm.map_entry_ns > 0.0);
         assert!(cm.journal_frame_ns >= 1_000.0, "frame {}", cm.journal_frame_ns);
         assert!(cm.checkpoint_doc_ns >= 50.0, "ckpt {}", cm.checkpoint_doc_ns);
+        assert!(cm.rebase_doc_ns >= 50.0, "rebase {}", cm.rebase_doc_ns);
     }
 }

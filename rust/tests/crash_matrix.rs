@@ -38,6 +38,19 @@ fn lifecycle(checkpoint_bytes: u64) -> EngineOptions {
         compress_checkpoints: true,
         checkpoint_bytes,
         journal_segments: 4,
+        full_checkpoint_chain: 4,
+    }
+}
+
+/// Manual-checkpoint options with an explicit rebase threshold (delta
+/// lifecycle under test control).
+fn manual(full_checkpoint_chain: u32) -> EngineOptions {
+    EngineOptions {
+        journal: true,
+        compress_checkpoints: false,
+        checkpoint_bytes: 0,
+        journal_segments: 4,
+        full_checkpoint_chain,
     }
 }
 
@@ -281,6 +294,175 @@ fn kill_after_swap_during_legacy_removal_does_not_double_apply() {
         !Path::new(&root).join("journal.wal").exists(),
         "recovery must finish the interrupted legacy removal"
     );
+}
+
+#[test]
+fn kill_during_delta_write_keeps_published_chain_authoritative() {
+    // A kill while a delta checkpoint is being staged leaves a partial
+    // `delta-NNNNNN.ckpt.tmp`: the rename never ran, so the published
+    // chain (base + earlier deltas) plus the journal tail is the truth.
+    let dir = LocalDir::temp("cm-delta-write").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("metrics");
+        eng.insert_many("metrics", &batch(0, 20)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap(); // gen 1: full
+        eng.insert_many("metrics", &batch(20, 5)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap(); // gen 2: delta
+        eng.insert_many("metrics", &batch(25, 5)).unwrap();
+        eng.sync().unwrap();
+        // Killed mid-way through staging the gen-3 delta.
+    }
+    let d2 = std::fs::read(Path::new(&root).join("delta-000002.ckpt")).unwrap();
+    std::fs::write(Path::new(&root).join("delta-000003.ckpt.tmp"), &d2[..d2.len() / 2])
+        .unwrap();
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 30);
+    let rep = eng.recovery_report();
+    assert_eq!(rep.checkpoint_generation, 2);
+    assert_eq!(rep.deltas_folded, 1);
+    assert_eq!(rep.frames_replayed, 1, "the uncheckpointed tail still replays");
+    assert!(
+        !Path::new(&root).join("delta-000003.ckpt.tmp").exists(),
+        "recovery must discard the partial delta staging file"
+    );
+}
+
+#[test]
+fn kill_during_rebase_cleanup_never_refolds_superseded_chain() {
+    // A rebase publishes the new full snapshot (atomic rename) and then
+    // deletes the old chain. A kill between the two leaves stale deltas
+    // next to a newer base; folding them would double-apply every
+    // record they carry.
+    let opts = manual(2);
+    let dir = LocalDir::temp("cm-rebase").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        eng.insert_many("metrics", &batch(0, 10)).unwrap();
+        eng.sync().unwrap();
+        assert!(eng.checkpoint().unwrap().full); // gen 1
+        eng.insert_many("metrics", &batch(10, 5)).unwrap();
+        eng.sync().unwrap();
+        assert!(!eng.checkpoint().unwrap().full); // gen 2: delta
+        eng.insert_many("metrics", &batch(15, 5)).unwrap();
+        eng.sync().unwrap();
+        assert!(!eng.checkpoint().unwrap().full); // gen 3: delta
+        let d2 = std::fs::read(Path::new(&root).join("delta-000002.ckpt")).unwrap();
+        let d3 = std::fs::read(Path::new(&root).join("delta-000003.ckpt")).unwrap();
+        eng.insert_many("metrics", &batch(20, 5)).unwrap();
+        eng.sync().unwrap();
+        let ck = eng.checkpoint().unwrap(); // gen 4: rebase
+        assert!(ck.full);
+        assert!(!Path::new(&root).join("delta-000002.ckpt").exists());
+        // Put the superseded chain back: the kill landed after the swap
+        // but before the chain cleanup finished.
+        std::fs::write(Path::new(&root).join("delta-000002.ckpt"), &d2).unwrap();
+        std::fs::write(Path::new(&root).join("delta-000003.ckpt"), &d3).unwrap();
+    }
+    let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+    assert_eq!(
+        eng.stats("metrics").docs,
+        25,
+        "stale chain under a newer base must not refold"
+    );
+    let rep = eng.recovery_report();
+    assert_eq!(rep.checkpoint_generation, 4);
+    assert_eq!(rep.deltas_folded, 0);
+    for g in [2u64, 3] {
+        assert!(
+            !Path::new(&root).join(format!("delta-{g:06}.ckpt")).exists(),
+            "recovery must finish the interrupted chain cleanup (delta {g})"
+        );
+    }
+}
+
+#[test]
+fn restart_mid_chain_folds_deltas_and_tail_each_cycle() {
+    // Job-queue reality under the delta lifecycle: every allocation
+    // dies mid-chain with a journal tail beyond the newest delta. Each
+    // restart must fold base + chain + tail exactly, and the next delta
+    // must absorb the replayed tail.
+    let opts = manual(16);
+    let root = LocalDir::temp("cm-mid-chain").unwrap().describe();
+    let mut total = 0u64;
+    for cycle in 0..5u64 {
+        let mut eng =
+            Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        assert_eq!(eng.stats("metrics").docs, total, "cycle {cycle} lost data");
+        if cycle > 0 {
+            let rep = eng.recovery_report();
+            assert_eq!(rep.checkpoint_generation, cycle);
+            assert_eq!(rep.deltas_folded, cycle - 1, "cycle {cycle} chain length");
+            assert_eq!(rep.frames_replayed, 1, "cycle {cycle} replays one tail frame");
+        }
+        eng.insert_many("metrics", &batch(total, 8)).unwrap();
+        total += 8;
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap(); // cycle c writes generation c+1
+        eng.insert_many("metrics", &batch(total, 4)).unwrap();
+        total += 4;
+        eng.sync().unwrap();
+        // Kill with a tail beyond the newest delta.
+    }
+    let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+    assert_eq!(eng.stats("metrics").docs, total);
+    assert_eq!(eng.recovery_report().deltas_folded, 4);
+    assert_eq!(eng.recovery_report().checkpoint_generation, 5);
+}
+
+#[test]
+fn v2_store_opens_upgrades_and_chains_without_double_apply() {
+    // Build a store, then rewrite its checkpoint into the legacy
+    // `HPCCKPT2` layout (same body, pre-delta header) — exactly what a
+    // PR-2-era job left on the shared filesystem.
+    let dir = LocalDir::temp("cm-v2").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+        eng.create_collection("metrics");
+        eng.insert_many("metrics", &batch(0, 20)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap(); // v3 full, gen 1
+        eng.insert_many("metrics", &batch(20, 6)).unwrap();
+        eng.sync().unwrap(); // post-checkpoint tail
+    }
+    let ckpt = Path::new(&root).join("store.ckpt");
+    let v3 = std::fs::read(&ckpt).unwrap();
+    assert_eq!(&v3[..8], b"HPCCKPT3");
+    assert_eq!(v3[8], 0, "store.ckpt must be a full snapshot");
+    let mut v2 = b"HPCCKPT2".to_vec();
+    v2.extend_from_slice(&v3[9..17]); // generation
+    v2.extend_from_slice(&v3[25..33]); // covered_seq (drop base_generation)
+    v2.extend_from_slice(&v3[33..]); // compressed flag + body
+    std::fs::write(&ckpt, &v2).unwrap();
+
+    // The v2 store opens: base loads, the tail replays exactly once,
+    // and the first new checkpoint is a *delta* chaining directly on
+    // the legacy base generation — no forced full rewrite.
+    let mut eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 26);
+    assert_eq!(eng.recovery_report().checkpoint_generation, 1);
+    assert_eq!(eng.recovery_report().frames_replayed, 1);
+    eng.insert_many("metrics", &batch(26, 4)).unwrap();
+    eng.sync().unwrap();
+    let ck = eng.checkpoint().unwrap(); // gen 2: delta over the v2 base
+    assert!(!ck.full, "upgrading a v2 store must not force a full snapshot");
+    drop(eng);
+
+    // Mixed store (v2 base + v3 delta): the tail the delta covers was
+    // truncated with it — nothing may double-apply.
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 30, "v2 base + v3 delta must fold exactly");
+    let rep = eng.recovery_report();
+    assert_eq!(rep.checkpoint_generation, 2);
+    assert_eq!(rep.deltas_folded, 1);
+    assert_eq!(rep.frames_replayed, 0);
 }
 
 #[test]
