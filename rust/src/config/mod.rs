@@ -159,6 +159,14 @@ pub struct StoreConfig {
     pub cursor_batch: usize,
     /// Run the chunk balancer.
     pub balancer: bool,
+    /// Streaming chunk migration: documents per `MigrateBatch` message.
+    /// Bounds the donor shard's per-message stall — ingest and queries
+    /// interleave with the stream between batches.
+    pub migration_batch_docs: usize,
+    /// Byte-aware balancer: also move chunks while the per-shard byte
+    /// spread (live docs + on-disk journal/delta bytes) exceeds this
+    /// (0 = chunk-count-only planning).
+    pub balancer_bytes: u64,
 }
 
 impl Default for StoreConfig {
@@ -176,6 +184,8 @@ impl Default for StoreConfig {
             flush_interval_ms: 2,
             cursor_batch: 1_000,
             balancer: true,
+            migration_batch_docs: 1_024,
+            balancer_bytes: 256 * 1024 * 1024,
         }
     }
 }
@@ -194,7 +204,9 @@ impl StoreConfig {
             .set("router_flush_docs", self.router_flush_docs)
             .set("flush_interval_ms", self.flush_interval_ms)
             .set("cursor_batch", self.cursor_batch)
-            .set("balancer", self.balancer);
+            .set("balancer", self.balancer)
+            .set("migration_batch_docs", self.migration_batch_docs)
+            .set("balancer_bytes", self.balancer_bytes);
         v
     }
 
@@ -243,6 +255,14 @@ impl StoreConfig {
                 .and_then(Value::as_usize)
                 .unwrap_or(d.cursor_batch),
             balancer: v.get("balancer").and_then(Value::as_bool).unwrap_or(d.balancer),
+            migration_batch_docs: v
+                .get("migration_batch_docs")
+                .and_then(Value::as_usize)
+                .unwrap_or(d.migration_batch_docs),
+            balancer_bytes: v
+                .get("balancer_bytes")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.balancer_bytes),
         })
     }
 }
@@ -522,6 +542,8 @@ mod tests {
         assert_eq!(c2.store.checkpoint_bytes, c.store.checkpoint_bytes);
         assert_eq!(c2.store.journal_segments, c.store.journal_segments);
         assert_eq!(c2.store.full_checkpoint_chain, c.store.full_checkpoint_chain);
+        assert_eq!(c2.store.migration_batch_docs, c.store.migration_batch_docs);
+        assert_eq!(c2.store.balancer_bytes, c.store.balancer_bytes);
         assert_eq!(c2.workload.monitored_nodes, c.workload.monitored_nodes);
         assert_eq!(c2.lustre.osts, c.lustre.osts);
     }

@@ -63,6 +63,16 @@ fn cli() -> Cli {
                         Some("N"),
                         "delta checkpoints per chain before a full rebase (default 8, 0 = always full)",
                     ),
+                    f(
+                        "migration-batch-docs",
+                        Some("N"),
+                        "docs per streaming chunk-migration batch (default 1024)",
+                    ),
+                    f(
+                        "balancer-bytes",
+                        Some("BYTES"),
+                        "byte-aware balancer: move chunks past this per-shard byte spread (default 256 MiB, 0 = count-only)",
+                    ),
                     f("artifacts", Some("DIR"), "AOT artifact dir (default artifacts)"),
                     f("fallback", None, "use the scalar kernel fallback"),
                 ],
@@ -144,6 +154,11 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         full_checkpoint_chain: args
             .get_u64_or("checkpoint-chain", store_defaults.full_checkpoint_chain as u64)?
             as u32,
+        migration_batch_docs: args
+            .get_u64_or("migration-batch-docs", store_defaults.migration_batch_docs as u64)?
+            as usize,
+        balancer_bytes: args
+            .get_u64_or("balancer-bytes", store_defaults.balancer_bytes)?,
         ..Default::default()
     };
     let script = RunScript::new(topo.clone(), store, lustre.clone(), kernels);

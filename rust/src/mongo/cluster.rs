@@ -16,8 +16,9 @@ use crate::mongo::client::MongoClient;
 use crate::mongo::server::config::ConfigServer;
 use crate::mongo::server::router::{Router, RouterMailbox, RouterRequest};
 use crate::mongo::server::shard::ShardServer;
-use crate::mongo::sharding::balancer::{plan_moves, BalancerPolicy};
+use crate::mongo::sharding::balancer::{plan_moves_with_loads, BalancerPolicy, ShardLoad};
 use crate::mongo::sharding::chunk::ShardKey;
+use crate::mongo::sharding::migration;
 use crate::mongo::storage::{CheckpointStats, EngineOptions, StorageDir};
 use crate::mongo::wire::{rpc, ConfigRequest, ConfigStatsReply, ShardRequest, ShardStatsReply};
 use crate::runtime::Kernels;
@@ -59,7 +60,12 @@ pub struct ClusterStats {
     pub chunks: usize,
     pub map_version: u64,
     pub migrations: u64,
+    /// Migrations the coordinator aborted and cleaned up (awaited
+    /// destination rollback — nothing orphaned).
+    pub migrations_failed: u64,
     pub per_shard_docs: Vec<u64>,
+    /// Per-shard byte footprint the byte-aware balancer planned with.
+    pub per_shard_bytes: Vec<u64>,
 }
 
 /// A running live cluster.
@@ -149,6 +155,16 @@ impl Cluster {
             joins.push(join);
         }
 
+        // Migration reconciliation: finish (forward) or drop (back)
+        // whatever chunk migration a previous job's kill interrupted,
+        // before any client traffic — see `sharding::migration::recover`.
+        migration::recover(&shard_txs, &metrics)
+            .context("migration reconciliation at startup")?;
+
+        let policy = BalancerPolicy {
+            byte_threshold: spec.store.balancer_bytes,
+            ..Default::default()
+        };
         Ok(Cluster {
             spec,
             config: config_tx,
@@ -156,7 +172,7 @@ impl Cluster {
             routers,
             joins,
             metrics,
-            policy: BalancerPolicy::default(),
+            policy,
         })
     }
 
@@ -176,16 +192,30 @@ impl Cluster {
         &self.routers
     }
 
-    /// One balancer round: plan against the current chunk table and
-    /// execute the proposed migrations (chunk data really moves between
-    /// shard engines). Returns the number of chunks moved.
+    /// Shard mailboxes — the crash-matrix kill-window tests drive the
+    /// migration wire protocol against them directly to freeze the
+    /// cluster in precise mid-protocol states.
+    pub fn shard_mailboxes(&self) -> &[mpsc::Sender<ShardRequest>] {
+        &self.shards
+    }
+
+    /// One balancer round: plan against the current chunk table *and*
+    /// the per-shard byte loads, then execute the proposed migrations
+    /// through the streaming crash-safe protocol
+    /// (`sharding::migration::execute`) — chunk data really moves
+    /// between shard engines, in bounded batches that interleave with
+    /// served requests. Returns the number of chunks moved. Failures
+    /// are awaited and cleaned up (the destination's partial copy is
+    /// deleted, the config rolls back) and counted in the
+    /// `cluster.migrations_failed` metric.
     pub fn run_balancer_round(&self) -> Result<usize> {
         if !self.spec.store.balancer {
             return Ok(0);
         }
         let map = rpc(&self.config, |reply| ConfigRequest::GetMap { reply })
             .map_err(|e| anyhow::anyhow!("config: {e}"))?;
-        let moves = plan_moves(&map.owners, self.shards.len(), self.policy);
+        let loads = self.shard_loads()?;
+        let moves = plan_moves_with_loads(&map.owners, &loads, self.policy);
         let mut moved = 0;
         for m in moves {
             // Re-read: chunk indices shift as splits/moves land.
@@ -194,46 +224,42 @@ impl Cluster {
             if m.chunk >= map.num_chunks() || map.owners[m.chunk] != m.from {
                 continue; // plan went stale; next round will retry
             }
-            let migration = match rpc(&self.config, |reply| ConfigRequest::BeginMigration {
-                chunk: m.chunk,
-                to: m.to,
-                reply,
-            }) {
-                Ok(Ok(mig)) => mig,
-                _ => continue,
-            };
-            let range = map.chunk_range(migration.chunk);
-            let result: Result<()> = (|| {
-                let docs = rpc(&self.shards[migration.from.index()], |reply| {
-                    ShardRequest::ExtractChunk { range, reply }
-                })
-                .map_err(|e| anyhow::anyhow!("extract: {e}"))?
-                .map_err(|e| anyhow::anyhow!("extract: {e}"))?;
-                rpc(&self.shards[migration.to.index()], |reply| {
-                    ShardRequest::InstallChunk { docs, reply }
-                })
-                .map_err(|e| anyhow::anyhow!("install: {e}"))?
-                .map_err(|e| anyhow::anyhow!("install: {e}"))?;
-                Ok(())
-            })();
-            match result {
-                Ok(()) => {
-                    rpc(&self.config, |reply| ConfigRequest::CommitMigration { reply })
-                        .map_err(|e| anyhow::anyhow!("commit: {e}"))?
-                        .map_err(|e| anyhow::anyhow!("commit: {e}"))?;
-                    // Source deletes its copy after commit.
-                    let _ = rpc(&self.shards[migration.from.index()], |reply| {
-                        ShardRequest::DeleteChunk { range, reply }
-                    });
-                    moved += 1;
-                }
-                Err(e) => {
-                    eprintln!("warn: migration failed: {e:#}");
-                    let _ = self.config.send(ConfigRequest::AbortMigration);
-                }
+            match migration::execute(
+                &self.config,
+                &self.shards,
+                m.chunk,
+                m.to,
+                self.spec.store.migration_batch_docs,
+                &self.metrics,
+            ) {
+                Ok(_) => moved += 1,
+                // The executor already rolled back (or forward) and
+                // counted the failure; the next round replans against
+                // fresh stats.
+                Err(_) => {}
             }
         }
         Ok(moved)
+    }
+
+    /// Per-shard byte loads for the byte-aware balancer: live document
+    /// bytes plus the storage lifecycle's on-disk journal and
+    /// delta-chain bytes — the shard's real footprint on the shared
+    /// filesystem. An unreachable shard fails the round: reporting it
+    /// as zero-loaded would make the dead shard the byte-lightest and
+    /// therefore the preferred (and doomed) migration receiver.
+    fn shard_loads(&self) -> Result<Vec<ShardLoad>> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let st = rpc(s, |reply| ShardRequest::Stats { reply })
+                    .map_err(|e| anyhow::anyhow!("shard {i} stats: {e}"))?;
+                Ok(ShardLoad {
+                    bytes: st.collection.bytes + st.journal_disk_bytes + st.delta_disk_bytes,
+                })
+            })
+            .collect()
     }
 
     /// Admin command: checkpoint every shard engine now (end-of-job
@@ -271,7 +297,12 @@ impl Cluster {
             chunks: config.chunks,
             map_version: config.version,
             migrations: config.migrations_done,
+            migrations_failed: self.metrics.counter("cluster.migrations_failed").get(),
             per_shard_docs: shard_stats.iter().map(|s| s.collection.docs).collect(),
+            per_shard_bytes: shard_stats
+                .iter()
+                .map(|s| s.collection.bytes + s.journal_disk_bytes + s.delta_disk_bytes)
+                .collect(),
         }
     }
 

@@ -21,6 +21,7 @@ pub struct ConfigServer {
     shards: Vec<mpsc::Sender<ShardRequest>>,
     metrics: Registry,
     migrations_done: u64,
+    migrations_aborted: u64,
 }
 
 impl ConfigServer {
@@ -37,6 +38,7 @@ impl ConfigServer {
             shards: Vec::new(),
             metrics,
             migrations_done: 0,
+            migrations_aborted: 0,
         }
     }
 
@@ -102,19 +104,50 @@ impl ConfigServer {
                     let _ = reply.send(r);
                 }
                 ConfigRequest::CommitMigration { reply } => {
+                    // The flip (M2): ownership moves, every shard gets
+                    // the new map *before* the reply — the coordinator's
+                    // catch-up batches therefore observe a donor that
+                    // already rejects new writes in the range.
                     let r = self
                         .state
                         .commit_migration()
                         .map_err(|e| WireError::Server(e.to_string()));
                     if r.is_ok() {
-                        self.migrations_done += 1;
-                        self.metrics.counter("config.migrations").inc();
+                        self.metrics.counter("config.migration_flips").inc();
                         self.push_map();
                     }
                     let _ = reply.send(r);
                 }
-                ConfigRequest::AbortMigration => {
-                    self.state.abort_migration();
+                ConfigRequest::AdvanceMigration { state, reply } => {
+                    let r = self
+                        .state
+                        .advance_migration(state)
+                        .map_err(|e| WireError::Server(e.to_string()));
+                    let _ = reply.send(r);
+                }
+                ConfigRequest::FinishMigration { reply } => {
+                    let r = self
+                        .state
+                        .finish_migration()
+                        .map_err(|e| WireError::Server(e.to_string()));
+                    if r.is_ok() {
+                        self.migrations_done += 1;
+                        self.metrics.counter("config.migrations").inc();
+                    }
+                    let _ = reply.send(r);
+                }
+                ConfigRequest::AbortMigration { reply } => {
+                    let before = self.state.version();
+                    let aborted = self.state.abort_migration();
+                    if aborted.is_some() {
+                        self.migrations_aborted += 1;
+                        self.metrics.counter("config.migration_aborts").inc();
+                        if self.state.version() != before {
+                            // The abort rolled a flip back: re-push.
+                            self.push_map();
+                        }
+                    }
+                    let _ = reply.send(aborted);
                 }
                 ConfigRequest::Stats { reply } => {
                     let _ = reply.send(ConfigStatsReply {
@@ -122,6 +155,8 @@ impl ConfigServer {
                         chunks: self.state.map().num_chunks(),
                         oplog_len: self.state.oplog_len,
                         migrations_done: self.migrations_done,
+                        migrations_aborted: self.migrations_aborted,
+                        migration_state: self.state.migration().map(|m| m.state),
                     });
                 }
             }

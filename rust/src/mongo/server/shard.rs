@@ -18,9 +18,11 @@ use std::time::Instant;
 use crate::mongo::bson::{Document, Value};
 use crate::mongo::query::{Filter, FindOptions};
 use crate::mongo::sharding::chunk::ChunkMap;
+use crate::mongo::sharding::migration::STAGING_COLLECTION;
 use crate::mongo::storage::{Engine, EngineOptions, RecordId, StorageDir};
 use crate::mongo::wire::{
-    rpc, ConfigRequest, FindReply, InsertReply, ShardRequest, ShardStatsReply, WireError,
+    rpc, ConfigRequest, DeleteChunkReply, FindReply, InsertReply, MigrateBatchReply,
+    ShardRequest, ShardStatsReply, StagedMigration, WireError,
 };
 use crate::metrics::Registry;
 use crate::runtime::Kernels;
@@ -54,6 +56,12 @@ pub struct ShardServer {
     /// sums give per-chunk counts; medians give split points.
     positions: std::collections::BTreeMap<u64, u32>,
     default_batch: usize,
+    /// Migration staging on this destination — `(range, donor,
+    /// committed)`, mirroring the durable `__migration` collection
+    /// (rebuilt from it after a restart).
+    staging: Option<((u64, u64), ShardId, bool)>,
+    /// Staged data documents (meta records excluded).
+    staged_docs: u64,
 }
 
 impl ShardServer {
@@ -88,15 +96,46 @@ impl ShardServer {
             split_threshold,
             positions: Default::default(),
             default_batch,
+            staging: None,
+            staged_docs: 0,
         };
         // Rebuild the position histogram from recovered records (second
-        // job re-attaching to persisted Lustre data).
+        // job re-attaching to persisted Lustre data). Staged migration
+        // documents are not live and never enter the histogram.
         let recovered: Vec<Document> =
             s.engine.scan(COLLECTION).map(|(_, d)| d).collect();
         for doc in &recovered {
             if let Some(pos) = s.position_of(doc) {
                 *s.positions.entry(pos).or_insert(0) += 1;
             }
+        }
+        // Rebuild migration staging state: a killed migration leaves its
+        // staging collection behind, and the cluster's reconciliation
+        // pass (`sharding::migration::recover`) needs its identity.
+        if s.engine.stats(STAGING_COLLECTION).docs > 0 {
+            let mut range = (0u64, 0u64);
+            let mut from = id;
+            let mut committed = false;
+            let mut meta_seen = false;
+            for (_, d) in s.engine.scan(STAGING_COLLECTION) {
+                if d.get_i64("__migmeta").is_some() {
+                    meta_seen = true;
+                    // Positions are u64; stored as bit-cast i64 (exact
+                    // round trip).
+                    range = (
+                        d.get_i64("lo").unwrap_or(0) as u64,
+                        d.get_i64("hi").unwrap_or(0) as u64,
+                    );
+                    from = ShardId(d.get_i64("from").unwrap_or(0) as u32);
+                } else if d.get_i64("__migcommit").is_some() {
+                    committed = true;
+                } else {
+                    s.staged_docs += 1;
+                }
+            }
+            // A meta-less staging is torn pre-commit garbage: surface it
+            // uncommitted so reconciliation rolls it back.
+            s.staging = Some((range, from, committed && meta_seen));
         }
         Ok(s)
     }
@@ -154,16 +193,32 @@ impl ShardServer {
                         .map_err(|e| WireError::Server(e.to_string()));
                     let _ = reply.send(r);
                 }
-                ShardRequest::ExtractChunk { range, reply } => {
-                    let _ = reply.send(Ok(self.docs_in_range(range)));
+                ShardRequest::MigrateBatch { range, after, limit, reply } => {
+                    let t = Instant::now();
+                    let r = self.handle_migrate_batch(range, after, limit);
+                    self.metrics
+                        .observe("shard.migrate_batch_ns", t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(Ok(r));
                 }
-                ShardRequest::InstallChunk { docs, reply } => {
-                    let r = self.install_docs(docs);
+                ShardRequest::StageChunk { range, from, docs, reply } => {
+                    let r = self.handle_stage_chunk(range, from, docs);
                     let _ = reply.send(r);
                 }
-                ShardRequest::DeleteChunk { range, reply } => {
-                    let r = self.delete_range(range);
+                ShardRequest::CommitStaged { reply } => {
+                    let _ = reply.send(self.handle_commit_staged());
+                }
+                ShardRequest::PublishStaged { reply } => {
+                    let _ = reply.send(self.handle_publish_staged());
+                }
+                ShardRequest::AbortStaged { reply } => {
+                    let _ = reply.send(self.handle_abort_staged());
+                }
+                ShardRequest::DeleteChunk { range, compact, reply } => {
+                    let r = self.delete_range(range, compact);
                     let _ = reply.send(r);
+                }
+                ShardRequest::StagedState { reply } => {
+                    let _ = reply.send(self.staged_state());
                 }
                 ShardRequest::Stats { reply } => {
                     let _ = reply.send(self.stats());
@@ -602,47 +657,201 @@ impl ShardServer {
         Ok(reply)
     }
 
-    fn docs_in_range(&self, range: (u64, u64)) -> Vec<Document> {
-        self.engine
-            .scan(COLLECTION)
-            .filter_map(|(_, d)| {
-                let pos = self.position_of(&d)?;
-                (range.0 <= pos && pos <= range.1).then_some(d)
-            })
-            .collect()
+    /// Migration source: one bounded batch of the range, resuming from
+    /// the record-id cursor `after`. The scan itself is capped (not
+    /// only the match count), so even a sparse range never holds the
+    /// event loop for more than a bounded walk — invariant IM2.
+    fn handle_migrate_batch(
+        &self,
+        range: (u64, u64),
+        after: Option<u64>,
+        limit: usize,
+    ) -> MigrateBatchReply {
+        let limit = limit.max(1);
+        let scan_cap = limit.saturating_mul(8).max(4096);
+        let mut docs = Vec::new();
+        let mut last = None;
+        let mut scanned = 0usize;
+        let mut done = true;
+        for (rid, doc) in self.engine.scan_from(COLLECTION, after) {
+            scanned += 1;
+            last = Some(rid);
+            if let Some(pos) = self.position_of(&doc) {
+                if range.0 <= pos && pos <= range.1 {
+                    docs.push(doc);
+                }
+            }
+            if docs.len() >= limit || scanned >= scan_cap {
+                done = false;
+                break;
+            }
+        }
+        MigrateBatchReply { docs, last, done }
     }
 
-    fn install_docs(&mut self, docs: Vec<Document>) -> Result<usize, WireError> {
-        let n = docs.len();
-        let positions: Vec<Option<u64>> = docs.iter().map(|d| self.position_of(d)).collect();
-        self.engine
-            .insert_many(COLLECTION, &docs)
-            .map_err(|e| WireError::Server(e.to_string()))?;
-        for pos in positions.into_iter().flatten() {
-            *self.positions.entry(pos).or_insert(0) += 1;
+    /// Migration destination: stage one copied batch in the
+    /// `__migration` collection — durable via the same group-committed
+    /// `insert_many` path as ingest, but invisible to queries until
+    /// published. The first batch pins the migration identity (range +
+    /// donor) in a meta record, journaled ahead of any data.
+    fn handle_stage_chunk(
+        &mut self,
+        range: (u64, u64),
+        from: ShardId,
+        docs: Vec<Document>,
+    ) -> Result<usize, WireError> {
+        self.engine.create_collection(STAGING_COLLECTION);
+        match self.staging {
+            Some((_, _, true)) => {
+                return Err(WireError::Server(
+                    "a committed migration awaits publish".into(),
+                ));
+            }
+            Some((r, f, false)) if r != range || f != from => {
+                return Err(WireError::Server("another migration is staged".into()));
+            }
+            Some(_) => {}
+            None => {
+                let meta = Document::new()
+                    .set("__migmeta", 1i64)
+                    .set("lo", range.0 as i64)
+                    .set("hi", range.1 as i64)
+                    .set("from", from.0 as i64);
+                self.engine
+                    .insert_many(STAGING_COLLECTION, &[meta])
+                    .map_err(|e| WireError::Server(e.to_string()))?;
+                self.staging = Some((range, from, false));
+            }
         }
+        let n = docs.len();
+        self.engine
+            .insert_many(STAGING_COLLECTION, &docs)
+            .map_err(|e| WireError::Server(e.to_string()))?;
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
-        self.maybe_compact();
+        self.staged_docs += n as u64;
         self.metrics.counter("shard.migration_docs_in").add(n as u64);
+        self.maybe_compact();
         Ok(n)
     }
 
-    fn delete_range(&mut self, range: (u64, u64)) -> Result<usize, WireError> {
-        let doomed: Vec<RecordId> = self
+    /// Migration destination: durably write the commit marker — one
+    /// journal frame plus a sync. From the moment this replies, the
+    /// migration can only roll forward (M3). Idempotent.
+    fn handle_commit_staged(&mut self) -> Result<u64, WireError> {
+        let Some((range, from, committed)) = self.staging else {
+            return Err(WireError::Server("nothing staged".into()));
+        };
+        if !committed {
+            let marker = Document::new().set("__migcommit", 1i64);
+            self.engine
+                .insert_many(STAGING_COLLECTION, &[marker])
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+            self.staging = Some((range, from, true));
+        }
+        Ok(self.staged_docs)
+    }
+
+    /// Migration destination: publish the staged documents into the
+    /// live collection as **one atomic move frame** (replay never sees
+    /// them in both collections or in neither), then drop the meta
+    /// records. Idempotent: an empty or marker-only staging publishes
+    /// nothing and just cleans up.
+    fn handle_publish_staged(&mut self) -> Result<u64, WireError> {
+        if self.staging.is_none() && self.engine.stats(STAGING_COLLECTION).docs == 0 {
+            return Ok(0);
+        }
+        let mut data: Vec<(RecordId, Document)> = Vec::new();
+        let mut meta: Vec<RecordId> = Vec::new();
+        for (rid, doc) in self.engine.scan(STAGING_COLLECTION) {
+            if doc.get_i64("__migmeta").is_some() || doc.get_i64("__migcommit").is_some() {
+                meta.push(rid);
+            } else {
+                data.push((rid, doc));
+            }
+        }
+        let rids: Vec<RecordId> = data.iter().map(|(r, _)| *r).collect();
+        let n = rids.len() as u64;
+        self.engine
+            .move_many(STAGING_COLLECTION, COLLECTION, &rids)
+            .map_err(|e| WireError::Server(e.to_string()))?;
+        if !meta.is_empty() {
+            self.engine
+                .remove_many(STAGING_COLLECTION, &meta)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+        }
+        self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+        for (_, doc) in &data {
+            if let Some(pos) = self.position_of(doc) {
+                *self.positions.entry(pos).or_insert(0) += 1;
+            }
+        }
+        self.staging = None;
+        self.staged_docs = 0;
+        self.metrics.counter("shard.migration_docs_published").add(n);
+        self.maybe_compact();
+        Ok(n)
+    }
+
+    /// Migration destination: drop an *uncommitted* staged range — the
+    /// awaited abort path that used to orphan these documents. Refuses
+    /// to drop a committed staging (that one must roll forward).
+    fn handle_abort_staged(&mut self) -> Result<u64, WireError> {
+        if let Some((_, _, true)) = self.staging {
+            return Err(WireError::Server(
+                "staged migration is committed; cannot abort".into(),
+            ));
+        }
+        let rids = self.engine.record_ids(STAGING_COLLECTION);
+        let dropped = self.staged_docs;
+        if !rids.is_empty() {
+            self.engine
+                .remove_many(STAGING_COLLECTION, &rids)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+        }
+        self.staging = None;
+        self.staged_docs = 0;
+        self.metrics.counter("shard.migration_aborts").inc();
+        self.maybe_compact();
+        Ok(dropped)
+    }
+
+    fn staged_state(&self) -> Option<StagedMigration> {
+        self.staging.map(|(range, from, committed)| StagedMigration {
+            range,
+            from,
+            committed,
+            docs: self.staged_docs,
+        })
+    }
+
+    /// Migration source: delete the committed-away range as **one**
+    /// atomic `remove_many` frame (a kill can never half-delete the
+    /// chunk), then — when `compact` — checkpoint immediately so the
+    /// moved-away documents leave this shard's journal and delta chain
+    /// instead of occupying the shared filesystem until the next
+    /// threshold crossing.
+    fn delete_range(
+        &mut self,
+        range: (u64, u64),
+        compact: bool,
+    ) -> Result<DeleteChunkReply, WireError> {
+        let doomed: Vec<(RecordId, u64)> = self
             .engine
             .scan(COLLECTION)
             .filter_map(|(rid, d)| {
                 let pos = self.position_of(&d)?;
-                (range.0 <= pos && pos <= range.1).then_some(rid)
+                (range.0 <= pos && pos <= range.1).then_some((rid, pos))
             })
             .collect();
-        let n = doomed.len();
-        for rid in doomed {
-            let doc = self
-                .engine
-                .remove(COLLECTION, rid)
+        let rids: Vec<RecordId> = doomed.iter().map(|(r, _)| *r).collect();
+        let n = rids.len() as u64;
+        if !rids.is_empty() {
+            self.engine
+                .remove_many(COLLECTION, &rids)
                 .map_err(|e| WireError::Server(e.to_string()))?;
-            if let Some(pos) = self.position_of(&doc) {
+            for (_, pos) in doomed {
                 if let Some(c) = self.positions.get_mut(&pos) {
                     *c -= 1;
                     if *c == 0 {
@@ -650,11 +859,24 @@ impl ShardServer {
                     }
                 }
             }
+            self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
         }
-        self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
-        self.maybe_compact();
-        self.metrics.counter("shard.migration_docs_out").add(n as u64);
-        Ok(n)
+        self.metrics.counter("shard.migration_docs_out").add(n);
+        let compacted = if compact && n > 0 {
+            let ck = self
+                .engine
+                .checkpoint()
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            self.metrics.counter("shard.checkpoints").inc();
+            self.metrics
+                .counter("shard.journal_bytes_truncated")
+                .add(ck.journal_bytes_truncated);
+            Some(ck)
+        } else {
+            self.maybe_compact();
+            None
+        };
+        Ok(DeleteChunkReply { removed: n, compacted })
     }
 
     fn stats(&self) -> ShardStatsReply {
@@ -673,6 +895,7 @@ impl ShardServer {
             checkpoint_generation: self.engine.generation(),
             checkpoint_chain_len: self.engine.chain_len(),
             delta_disk_bytes: self.engine.chain_disk_bytes(),
+            staged_docs: self.staged_docs,
         }
     }
 }

@@ -1,9 +1,22 @@
-//! Balancer policy: keep chunk counts even across shards.
+//! Balancer policy: keep chunk counts — and byte footprints — even
+//! across shards.
 //!
 //! MongoDB's balancer moves chunks from the most-loaded to the
-//! least-loaded shard while the spread exceeds a threshold. The policy
-//! here is pure (list of proposed moves); the cluster layer executes the
-//! moves through the config server's migration protocol one at a time.
+//! least-loaded shard while the spread exceeds a threshold. Chunk
+//! *count* is the base invariant (it is what the config server can see
+//! cheaply), but counts alone are blind to skew in chunk sizes: a shard
+//! holding few fat chunks can carry most of the cluster's bytes on the
+//! shared filesystem, exactly the footprint an HPC job must bound. The
+//! policy here is therefore **byte-aware**: fed per-shard byte loads
+//! from `ShardStatsReply` (live document bytes plus the lifecycle's
+//! on-disk journal/delta bytes), it keeps planning moves while the byte
+//! spread exceeds its own threshold — without ever violating the
+//! chunk-count invariant, so count- and byte-driven rounds cannot
+//! oscillate against each other.
+//!
+//! The policy stays pure (a list of proposed moves); the cluster layer
+//! executes the moves through the streaming migration protocol
+//! (`sharding::migration`) one at a time.
 
 use crate::util::ids::ShardId;
 
@@ -12,6 +25,10 @@ use crate::util::ids::ShardId;
 pub struct BalancerPolicy {
     /// Start balancing when `max - min` chunk counts exceed this.
     pub threshold: u32,
+    /// Byte-aware planning: keep moving chunks while the max–min spread
+    /// of per-shard bytes exceeds this (0 disables the byte trigger and
+    /// restores count-only planning).
+    pub byte_threshold: u64,
     /// Max moves proposed per round (migrations serialize; keep rounds
     /// short).
     pub max_moves_per_round: usize,
@@ -19,8 +36,21 @@ pub struct BalancerPolicy {
 
 impl Default for BalancerPolicy {
     fn default() -> Self {
-        Self { threshold: 2, max_moves_per_round: 4 }
+        Self {
+            threshold: 2,
+            byte_threshold: 256 * 1024 * 1024,
+            max_moves_per_round: 4,
+        }
     }
+}
+
+/// Per-shard byte load the planner balances, derived from live shard
+/// stats (chunk counts come from the owner table itself).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardLoad {
+    /// Byte footprint: live document bytes plus on-disk journal and
+    /// delta-chain bytes (what the shard occupies on the filesystem).
+    pub bytes: u64,
 }
 
 /// A proposed move of one chunk.
@@ -31,16 +61,48 @@ pub struct ProposedMove {
     pub to: ShardId,
 }
 
-/// Plan moves given the chunk→owner table.
+/// Count-only planning (no byte information — e.g. unit tests and the
+/// property harness). Equivalent to [`plan_moves_with_loads`] with
+/// all-zero loads.
+pub fn plan_moves(
+    owners: &[ShardId],
+    num_shards: usize,
+    policy: BalancerPolicy,
+) -> Vec<ProposedMove> {
+    plan_moves_with_loads(owners, &vec![ShardLoad::default(); num_shards], policy)
+}
+
+/// Plan moves given the chunk→owner table and per-shard byte loads.
 ///
-/// Greedy: while spread > threshold, move one chunk from the current
-/// max shard to the current min shard. Deterministic (lowest-index chunk
-/// of the donor moves first).
-pub fn plan_moves(owners: &[ShardId], num_shards: usize, policy: BalancerPolicy) -> Vec<ProposedMove> {
+/// Greedy and deterministic: while the chunk-count spread exceeds
+/// `policy.threshold`, move one chunk from the current max-count shard
+/// to the current min-count shard (lowest-index chunk of the donor
+/// first). Once counts are within threshold, the **byte trigger** takes
+/// over: while the byte spread exceeds `policy.byte_threshold`, move
+/// one chunk from the byte-heaviest shard to the byte-lightest,
+/// estimating each donor chunk at `bytes / chunks` (the planner only
+/// sees shard-level stats). Byte-driven moves are taken only when they
+/// strictly shrink the byte spread *and* keep the count spread within
+/// threshold — both guards are required for convergence: without them
+/// count- and byte-rounds would undo each other forever.
+pub fn plan_moves_with_loads(
+    owners: &[ShardId],
+    loads: &[ShardLoad],
+    policy: BalancerPolicy,
+) -> Vec<ProposedMove> {
+    let num_shards = loads.len();
+    if num_shards == 0 {
+        return Vec::new();
+    }
     let mut counts = vec![0i64; num_shards];
     for o in owners {
         counts[o.index()] += 1;
     }
+    let mut bytes: Vec<i64> = loads.iter().map(|l| l.bytes as i64).collect();
+    // Per-chunk byte estimate, fixed at plan time per donor.
+    let est: Vec<i64> = (0..num_shards)
+        .map(|s| if counts[s] > 0 { bytes[s] / counts[s] } else { 0 })
+        .collect();
     // Donor chunk queue per shard (ascending chunk index).
     let mut chunks_of: Vec<Vec<usize>> = vec![Vec::new(); num_shards];
     for (idx, o) in owners.iter().enumerate() {
@@ -59,20 +121,53 @@ pub fn plan_moves(owners: &[ShardId], num_shards: usize, policy: BalancerPolicy)
             .enumerate()
             .min_by_key(|(i, c)| (**c, *i))
             .unwrap();
-        if max_c - min_c <= policy.threshold as i64 {
+        let (donor, recv) = if max_c - min_c > policy.threshold as i64 {
+            (max_s, min_s)
+        } else if policy.byte_threshold > 0 {
+            let (bmax_s, &bmax) = bytes
+                .iter()
+                .enumerate()
+                .max_by_key(|(i, b)| (**b, usize::MAX - i))
+                .unwrap();
+            let (bmin_s, &bmin) = bytes
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, b)| (**b, *i))
+                .unwrap();
+            let spread = bmax - bmin;
+            // Strict progress: the move must shrink the byte spread ...
+            if spread <= policy.byte_threshold as i64
+                || est[bmax_s] == 0
+                || est[bmax_s] >= spread
+            {
+                break;
+            }
+            // ... and must not break the chunk-count invariant.
+            let mut after = counts.clone();
+            after[bmax_s] -= 1;
+            after[bmin_s] += 1;
+            let spread_after =
+                after.iter().max().unwrap() - after.iter().min().unwrap();
+            if spread_after > policy.threshold as i64 {
+                break;
+            }
+            (bmax_s, bmin_s)
+        } else {
             break;
-        }
+        };
         // First not-yet-moved chunk of the donor.
-        let Some(&chunk) = chunks_of[max_s].iter().find(|c| !moved.contains(c)) else {
+        let Some(&chunk) = chunks_of[donor].iter().find(|c| !moved.contains(c)) else {
             break;
         };
         moved.insert(chunk);
-        counts[max_s] -= 1;
-        counts[min_s] += 1;
+        counts[donor] -= 1;
+        counts[recv] += 1;
+        bytes[donor] -= est[donor];
+        bytes[recv] += est[donor];
         moves.push(ProposedMove {
             chunk,
-            from: ShardId(max_s as u32),
-            to: ShardId(min_s as u32),
+            from: ShardId(donor as u32),
+            to: ShardId(recv as u32),
         });
     }
     moves
@@ -119,7 +214,11 @@ mod tests {
     #[test]
     fn respects_move_cap() {
         let o = owners(&[20, 0]);
-        let policy = BalancerPolicy { threshold: 2, max_moves_per_round: 3 };
+        let policy = BalancerPolicy {
+            threshold: 2,
+            max_moves_per_round: 3,
+            ..Default::default()
+        };
         let moves = plan_moves(&o, 2, policy);
         assert_eq!(moves.len(), 3);
         // Distinct chunks each time.
@@ -130,7 +229,11 @@ mod tests {
     #[test]
     fn empty_shard_receives_first() {
         let o = owners(&[4, 4, 0]);
-        let moves = plan_moves(&o, 3, BalancerPolicy { threshold: 1, max_moves_per_round: 8 });
+        let moves = plan_moves(
+            &o,
+            3,
+            BalancerPolicy { threshold: 1, max_moves_per_round: 8, ..Default::default() },
+        );
         assert!(moves.iter().all(|m| m.to == ShardId(2)));
     }
 
@@ -140,6 +243,134 @@ mod tests {
         let a = plan_moves(&o, 4, BalancerPolicy::default());
         let b = plan_moves(&o, 4, BalancerPolicy::default());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn no_shards_plans_nothing() {
+        assert!(plan_moves(&[], 0, BalancerPolicy::default()).is_empty());
+        assert!(plan_moves_with_loads(&[], &[], BalancerPolicy::default()).is_empty());
+    }
+
+    #[test]
+    fn all_empty_shards_plan_nothing() {
+        // Shards exist but own no chunks at all: nothing to move.
+        assert!(plan_moves(&[], 4, BalancerPolicy::default()).is_empty());
+    }
+
+    #[test]
+    fn spread_exactly_at_threshold_is_stable() {
+        // threshold = 2 means "balance when spread EXCEEDS 2": a spread
+        // of exactly 2 must propose nothing, and 3 must propose a move.
+        let policy = BalancerPolicy { byte_threshold: 0, ..Default::default() };
+        let at = owners(&[5, 3]);
+        assert!(plan_moves(&at, 2, policy).is_empty());
+        let over = owners(&[6, 3]);
+        assert_eq!(plan_moves(&over, 2, policy).len(), 1);
+    }
+
+    #[test]
+    fn donor_with_fewer_chunks_than_move_cap() {
+        // The donor owns only 3 chunks but the cap allows 8 moves: the
+        // plan must stop at the donor's supply (distinct chunks only),
+        // never propose a chunk twice, and never invent chunks.
+        let o = owners(&[3, 0]);
+        let policy = BalancerPolicy {
+            threshold: 0,
+            byte_threshold: 0,
+            max_moves_per_round: 8,
+        };
+        let moves = plan_moves(&o, 2, policy);
+        assert!(moves.len() <= 3, "only 3 chunks exist, got {moves:?}");
+        let set: std::collections::BTreeSet<_> = moves.iter().map(|m| m.chunk).collect();
+        assert_eq!(set.len(), moves.len(), "duplicate chunk in {moves:?}");
+        assert!(moves.iter().all(|m| m.chunk < 3));
+    }
+
+    #[test]
+    fn byte_skew_triggers_moves_when_counts_are_even() {
+        // Equal chunk counts, but shard 0 carries 10x the bytes: the
+        // byte trigger must plan moves count-only planning would skip.
+        let o = owners(&[4, 4]);
+        let loads = [
+            ShardLoad { bytes: 1_000_000 },
+            ShardLoad { bytes: 100_000 },
+        ];
+        let policy = BalancerPolicy {
+            threshold: 2,
+            byte_threshold: 200_000,
+            max_moves_per_round: 8,
+        };
+        assert!(plan_moves(&o, 2, policy).is_empty(), "count-only sees balance");
+        let moves = plan_moves_with_loads(&o, &loads, policy);
+        assert!(!moves.is_empty(), "byte spread must trigger moves");
+        assert!(moves.iter().all(|m| m.from == ShardId(0) && m.to == ShardId(1)));
+        // Applying the moves at the planner's own 250k/chunk estimate
+        // must strictly shrink the byte spread (no oscillation).
+        let mut b = [1_000_000i64, 100_000];
+        for m in &moves {
+            b[m.from.index()] -= 250_000;
+            b[m.to.index()] += 250_000;
+        }
+        assert!((b[0] - b[1]).abs() < 900_000, "spread must shrink, got {b:?}");
+    }
+
+    #[test]
+    fn byte_moves_never_violate_count_invariant() {
+        // Shard 0 is byte-heavy but owns barely more chunks; byte moves
+        // must stop before pushing the count spread past the threshold.
+        let o = owners(&[3, 2]);
+        let loads = [
+            ShardLoad { bytes: 10_000_000 },
+            ShardLoad { bytes: 0 },
+        ];
+        let policy = BalancerPolicy {
+            threshold: 2,
+            byte_threshold: 1,
+            max_moves_per_round: 16,
+        };
+        let moves = plan_moves_with_loads(&o, &loads, policy);
+        let mut counts = [3i64, 2];
+        for m in &moves {
+            counts[m.from.index()] -= 1;
+            counts[m.to.index()] += 1;
+        }
+        assert!(
+            (counts[0] - counts[1]).abs() <= 2 + 1,
+            "byte moves broke the count invariant: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn byte_trigger_converges_to_fixpoint() {
+        // Repeated rounds over the same (re-estimated) loads must reach
+        // an empty plan — the strict-progress guard forbids oscillation.
+        let mut o = owners(&[4, 4, 4]);
+        let mut bytes = [900_000u64, 90_000, 90_000];
+        let policy = BalancerPolicy {
+            threshold: 2,
+            byte_threshold: 150_000,
+            max_moves_per_round: 2,
+        };
+        for _ in 0..20 {
+            let mut counts = [0u64; 3];
+            for s in &o {
+                counts[s.index()] += 1;
+            }
+            let loads: Vec<ShardLoad> = (0..3)
+                .map(|s| ShardLoad { bytes: bytes[s] })
+                .collect();
+            let moves = plan_moves_with_loads(&o, &loads, policy);
+            if moves.is_empty() {
+                return; // converged
+            }
+            for m in moves {
+                let est = bytes[m.from.index()] / counts[m.from.index()].max(1);
+                bytes[m.from.index()] -= est;
+                bytes[m.to.index()] += est;
+                o[m.chunk] = m.to;
+            }
+        }
+        panic!("byte-aware planning did not converge");
     }
 
     #[test]
@@ -156,7 +387,11 @@ mod tests {
             |counts| {
                 let shards = counts.len();
                 let mut o = owners(counts);
-                let policy = BalancerPolicy { threshold: 2, max_moves_per_round: 64 };
+                let policy = BalancerPolicy {
+                    threshold: 2,
+                    byte_threshold: 0,
+                    max_moves_per_round: 64,
+                };
                 // Apply rounds until fixpoint; must converge quickly.
                 for _ in 0..50 {
                     let moves = plan_moves(&o, shards, policy);

@@ -11,6 +11,7 @@
 use anyhow::{bail, Result};
 
 use super::chunk::{ChunkMap, ShardKey};
+use super::migration::MState;
 use crate::util::ids::ShardId;
 
 /// Outcome of a version-guarded mutation.
@@ -21,12 +22,20 @@ pub enum VersionCheck {
     Stale { current: u64 },
 }
 
-/// A chunk migration in flight.
+/// A chunk migration in flight, carrying its M-state (see
+/// [`super::migration`] for the protocol). The key-position `range` is
+/// the migration's stable identity: chunk *indices* shift as other
+/// chunks split, so ownership is flipped by range, and splits of the
+/// migrating range itself are refused while the migration runs
+/// (invariant IM3).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Migration {
     pub chunk: usize,
+    /// Inclusive key-position bounds of the migrating chunk.
+    pub range: (u64, u64),
     pub from: ShardId,
     pub to: ShardId,
+    pub state: MState,
 }
 
 /// The metadata state machine.
@@ -95,16 +104,27 @@ impl ConfigState {
         if seen_version != self.map.version {
             return Ok(VersionCheck::Stale { current: self.map.version });
         }
+        // Invariant IM3: the migrating range is immutable while the
+        // migration runs — a split inside it would tear the range out
+        // from under the streamed cursor and the eventual flip.
+        if let Some(m) = &self.migration {
+            if chunk < self.map.num_chunks() {
+                let (lo, hi) = self.map.chunk_range(chunk);
+                if lo <= m.range.1 && m.range.0 <= hi {
+                    bail!("chunk {chunk} overlaps the in-flight migration range");
+                }
+            }
+        }
         self.map.split(chunk, at)?;
         debug_assert!(self.map.validate().is_ok());
         self.replicate();
         Ok(VersionCheck::Ok)
     }
 
-    /// Begin migrating `chunk` to `to`. Only one migration at a time
-    /// (MongoDB serializes per-collection migrations through the config
-    /// server — this serialization is one of the scaling costs the DES
-    /// models).
+    /// Begin migrating `chunk` to `to` (M1, `Streaming`). Only one
+    /// migration at a time (MongoDB serializes per-collection
+    /// migrations through the config server — this serialization is one
+    /// of the scaling costs the DES models).
     pub fn begin_migration(&mut self, chunk: usize, to: ShardId) -> Result<Migration> {
         if self.migration.is_some() {
             bail!("a migration is already in flight");
@@ -119,26 +139,90 @@ impl ConfigState {
         if from == to {
             bail!("chunk {chunk} already on {to}");
         }
-        let m = Migration { chunk, from, to };
+        let m = Migration {
+            chunk,
+            range: self.map.chunk_range(chunk),
+            from,
+            to,
+            state: MState::Streaming,
+        };
         self.migration = Some(m.clone());
         Ok(m)
     }
 
-    /// Commit the in-flight migration: flips ownership, bumps version.
+    /// Flip the in-flight migration's ownership (M2, `Flipped`): the
+    /// chunk is relocated by *range* — indices may have shifted as
+    /// other chunks split — reassigned to the destination, and the map
+    /// version bumps. The migration stays in flight until
+    /// [`Self::finish_migration`] (or an abort).
     pub fn commit_migration(&mut self) -> Result<u64> {
         let m = self
             .migration
-            .take()
+            .as_mut()
             .ok_or_else(|| anyhow::anyhow!("no migration in flight"))?;
-        self.map.move_chunk(m.chunk, m.to)?;
+        if m.state != MState::Streaming {
+            bail!("migration already {}", m.state);
+        }
+        let range = m.range;
+        let to = m.to;
+        let chunk = self.map.chunk_of(range.0);
+        if self.map.chunk_range(chunk) != range {
+            bail!("migrating range mutated under the flip (IM3 violated)");
+        }
+        self.map.move_chunk(chunk, to)?;
         debug_assert!(self.map.validate().is_ok());
+        let m = self.migration.as_mut().expect("checked above");
+        m.chunk = chunk;
+        m.state = MState::Flipped;
         self.replicate();
         Ok(self.map.version)
     }
 
-    /// Abort the in-flight migration (destination failed).
-    pub fn abort_migration(&mut self) {
-        self.migration = None;
+    /// Record a coordinator-observed state transition. States only move
+    /// forward; regressions are rejected.
+    pub fn advance_migration(&mut self, state: MState) -> Result<()> {
+        let m = self
+            .migration
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("no migration in flight"))?;
+        if state <= m.state {
+            bail!("migration cannot regress from {} to {state}", m.state);
+        }
+        m.state = state;
+        Ok(())
+    }
+
+    /// Clear a finished migration (after M4 cleanup). Returns the map
+    /// version.
+    pub fn finish_migration(&mut self) -> Result<u64> {
+        let m = self
+            .migration
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("no migration in flight"))?;
+        if m.state < MState::Flipped {
+            self.migration = Some(m);
+            bail!("cannot finish an unflipped migration");
+        }
+        Ok(self.map.version)
+    }
+
+    /// Abort the in-flight migration. If the owner map was already
+    /// flipped but the destination has *not* durably committed, the
+    /// flip is rolled back (the donor still owns the data). A
+    /// `Committed`/`Cleanup` migration is cleared without unflipping:
+    /// from the commit marker on, the protocol only rolls forward (the
+    /// next job's recovery pass finishes it).
+    pub fn abort_migration(&mut self) -> Option<Migration> {
+        let m = self.migration.take()?;
+        if m.state == MState::Flipped {
+            let chunk = self.map.chunk_of(m.range.0);
+            if self.map.chunk_range(chunk) == m.range {
+                let _ = self.map.move_chunk(chunk, m.from);
+                debug_assert!(self.map.validate().is_ok());
+                self.replicate();
+            }
+        }
+        Some(m)
     }
 
     pub fn migration(&self) -> Option<&Migration> {
@@ -195,12 +279,23 @@ mod tests {
         let to = ShardId((from.0 + 1) % 4);
         let m = s.begin_migration(0, to).unwrap();
         assert_eq!(m.from, from);
+        assert_eq!(m.state, MState::Streaming);
+        assert_eq!(m.range, s.map().chunk_range(0));
         // Only one at a time.
         assert!(s.begin_migration(1, to).is_err());
         let v = s.commit_migration().unwrap();
         assert_eq!(v, 2);
         assert_eq!(s.map().owners[0], to);
         assert_eq!(s.mirror(1).unwrap().owners[0], to);
+        // The flip keeps the migration in flight (M2) until cleanup.
+        assert_eq!(s.migration().unwrap().state, MState::Flipped);
+        assert!(s.commit_migration().is_err(), "cannot flip twice");
+        s.advance_migration(MState::Committed).unwrap();
+        assert!(
+            s.advance_migration(MState::Streaming).is_err(),
+            "states only move forward"
+        );
+        s.finish_migration().unwrap();
         assert!(s.migration().is_none());
     }
 
@@ -209,8 +304,57 @@ mod tests {
         let mut s = state();
         let to = ShardId((s.map().owners[0].0 + 1) % 4);
         s.begin_migration(0, to).unwrap();
-        s.abort_migration();
+        let aborted = s.abort_migration().unwrap();
+        assert_eq!(aborted.state, MState::Streaming);
         assert!(s.begin_migration(0, to).is_ok());
+    }
+
+    #[test]
+    fn abort_after_flip_rolls_the_owner_map_back() {
+        let mut s = state();
+        let from = s.map().owners[0];
+        let to = ShardId((from.0 + 1) % 4);
+        s.begin_migration(0, to).unwrap();
+        s.commit_migration().unwrap();
+        assert_eq!(s.map().owners[0], to);
+        s.abort_migration().unwrap();
+        assert_eq!(s.map().owners[0], from, "flip must roll back pre-marker");
+        assert_eq!(s.mirror(0).unwrap().owners[0], from);
+        assert!(s.migration().is_none());
+    }
+
+    #[test]
+    fn abort_after_commit_marker_never_unflips() {
+        let mut s = state();
+        let to = ShardId((s.map().owners[0].0 + 1) % 4);
+        s.begin_migration(0, to).unwrap();
+        s.commit_migration().unwrap();
+        s.advance_migration(MState::Committed).unwrap();
+        s.abort_migration().unwrap();
+        assert_eq!(
+            s.map().owners[0],
+            to,
+            "a committed migration only rolls forward"
+        );
+    }
+
+    #[test]
+    fn splits_avoid_the_migrating_range_and_flip_relocates_by_range() {
+        let mut s = state();
+        let to = ShardId((s.map().owners[0].0 + 1) % 4);
+        let m = s.begin_migration(2, to).unwrap();
+        // Splitting the migrating chunk is refused (IM3) ...
+        let (lo, hi) = s.map().chunk_range(2);
+        assert!(s.split_chunk(1, 2, lo + (hi - lo) / 2).is_err());
+        // ... but a split of chunk 0 is fine and shifts indices.
+        let (lo0, hi0) = s.map().chunk_range(0);
+        assert_eq!(s.split_chunk(1, 0, lo0 + (hi0 - lo0) / 2).unwrap(), VersionCheck::Ok);
+        // The flip still lands on the migrated *range*, now at index 3.
+        s.commit_migration().unwrap();
+        let flipped = s.migration().unwrap();
+        assert_eq!(flipped.chunk, 3);
+        assert_eq!(s.map().chunk_range(3), m.range);
+        assert_eq!(s.map().owners[3], to);
     }
 
     #[test]
@@ -221,5 +365,11 @@ mod tests {
         assert!(s.begin_migration(99, ShardId(1)).is_err()); // no chunk
         assert!(s.begin_migration(0, ShardId(99)).is_err()); // no shard
         assert!(s.commit_migration().is_err()); // nothing in flight
+        assert!(s.advance_migration(MState::Committed).is_err());
+        assert!(s.finish_migration().is_err());
+        // Finishing before the flip is a protocol error.
+        s.begin_migration(0, ShardId((owner.0 + 1) % 4)).unwrap();
+        assert!(s.finish_migration().is_err());
+        assert!(s.migration().is_some(), "failed finish must not drop the lock");
     }
 }

@@ -1,0 +1,405 @@
+//! Streaming, crash-safe chunk migration.
+//!
+//! The pre-refactor balancer shipped a whole chunk as one
+//! `Vec<Document>` through a single mailbox message: the donor's event
+//! loop was occupied for the full extract, the destination installed
+//! the copy in one giant write, and an abort silently orphaned whatever
+//! the destination had already installed. This module replaces that
+//! with a **cursor-style batch stream** over the donor's record store:
+//! every step is one bounded mailbox message, so donor and recipient
+//! keep serving ingest and queries *between* batches — the paper's
+//! requirement that the cluster run concurrently with the data-science
+//! workload extends to its own rebalancing.
+//!
+//! # Protocol (M-states)
+//!
+//! The coordinator (the cluster's balancer round) drives one migration
+//! at a time through the states below; the config server records the
+//! current state in its metadata (`ConfigStatsReply::migration_state`).
+//! Destination-side data is staged in a dedicated engine collection
+//! (`__migration`), invisible to queries, together with a meta record
+//! `{lo, hi, from}` — so the *durable* part of the state machine lives
+//! in the shard engines, the only persistent stores a queued job has.
+//!
+//! ```text
+//! M1 Streaming   MigrateBatch(donor) -> StageChunk(dest), cursor = last
+//!                rid seen; donor still owns the chunk and keeps serving
+//! M2 Flipped     config flips the owner map (version bump + SetMap
+//!                push); catch-up batches drain the writes that raced
+//!                the flip (they have higher rids than the cursor)
+//! M3 Committed   dest journals a commit marker into the staging
+//!                collection and syncs: the roll-forward point
+//! M4 Cleanup     donor deletes the range (one atomic remove_many
+//!                frame) and compacts, so moved-away data stops
+//!                occupying its journal and checkpoint chain; dest
+//!                publishes staging -> live (one atomic move_many frame)
+//! done           config clears the migration, counts it
+//! ```
+//!
+//! Abort (any failure before M3): the destination deletes the staged
+//! range — awaited, not fire-and-forget — and the config server rolls
+//! the owner map back if it was already flipped.
+//!
+//! # Invariants
+//!
+//! * **IM1 (exclusive visibility at rest)** — after any kill and
+//!   recovery, every migrated document is live on exactly one shard:
+//!   staging is invisible to queries, the commit marker is a single
+//!   atomic journal frame, and [`recover`] rolls an uncommitted staging
+//!   back (donor still has everything) or a committed one forward
+//!   (source delete is idempotent, publish is an atomic move).
+//! * **IM2 (bounded stall during the copy)** — while data streams (the
+//!   overwhelming majority of a migration's wall time), the donor's
+//!   event loop is never held for more than one `migration_batch_docs`
+//!   scan: batches are separate mailbox messages, so ingest and finds
+//!   interleave with the stream. The commit-point range delete and its
+//!   compaction are deliberately *not* streamed — one atomic frame, so
+//!   a kill can never half-delete the chunk (crash safety over latency
+//!   at the single commit instant). Each stream phase is additionally
+//!   pass-capped by the donor's record count, so sustained ingest
+//!   chasing the scan's tail cannot hold the balancer round forever.
+//! * **IM3 (immutable range)** — the config server refuses to split any
+//!   chunk overlapping the in-flight migration range, and relocates the
+//!   migrating chunk by *range* at flip time, so concurrent splits of
+//!   other chunks cannot redirect the flip.
+//! * **IM4 (storage hand-back)** — commit triggers a source compaction:
+//!   the moved-away documents leave the donor's journal and delta chain
+//!   instead of occupying the shared filesystem forever.
+//!
+//! The kill-window matrix for this protocol is exercised in
+//! `rust/tests/crash_matrix.rs` and documented in
+//! `docs/ARCHITECTURE.md`.
+
+use anyhow::Result;
+
+use crate::metrics::Registry;
+use crate::mongo::wire::{rpc, ConfigMailbox, ConfigRequest, ShardMailbox, ShardRequest};
+use crate::util::ids::ShardId;
+
+/// Name of the destination-side staging collection. One in-flight
+/// migration at a time (config-server serialized), so one collection
+/// suffices; its meta record pins the range and donor.
+pub const STAGING_COLLECTION: &str = "__migration";
+
+/// Migration state machine (see the module docs for the protocol).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MState {
+    /// M1: batches streaming donor → destination staging.
+    Streaming,
+    /// M2: owner map flipped; catch-up batches draining.
+    Flipped,
+    /// M3: destination wrote its durable commit marker — roll-forward
+    /// only from here.
+    Committed,
+    /// M4: source delete + compaction and destination publish.
+    Cleanup,
+}
+
+impl std::fmt::Display for MState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MState::Streaming => write!(f, "streaming"),
+            MState::Flipped => write!(f, "flipped"),
+            MState::Committed => write!(f, "committed"),
+            MState::Cleanup => write!(f, "cleanup"),
+        }
+    }
+}
+
+/// What one executed migration did (cluster metrics, tests).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MigrationOutcome {
+    /// Documents copied during M1 streaming.
+    pub docs_streamed: u64,
+    /// Documents copied by post-flip catch-up batches.
+    pub docs_caught_up: u64,
+    /// Batch messages the stream took (donor stall is bounded by one).
+    pub batches: u64,
+    /// Documents deleted from the source at commit.
+    pub docs_deleted: u64,
+    /// Documents published live on the destination.
+    pub docs_published: u64,
+    /// Bytes of journal the post-commit source compaction truncated.
+    pub source_journal_truncated: u64,
+}
+
+/// Outcome of the startup reconciliation pass ([`recover`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveredMigrations {
+    /// Committed migrations a kill interrupted, finished forward.
+    pub rolled_forward: u64,
+    /// Uncommitted staged ranges dropped (the donor still has the data).
+    pub rolled_back: u64,
+    /// Documents published by the roll-forwards.
+    pub docs_recovered: u64,
+}
+
+/// Drive one chunk migration end to end through the M-state protocol.
+///
+/// `batch_docs` bounds every stream message (and therefore the donor's
+/// per-message stall — invariant IM2). Failures before the commit
+/// marker abort cleanly: the staged range is deleted on the
+/// destination (awaited) and the config server rolls back. Failures
+/// after the marker leave the durable staging in place for the next
+/// job's [`recover`] pass — the migration rolls forward, never half
+/// applies.
+pub fn execute(
+    config: &ConfigMailbox,
+    shards: &[ShardMailbox],
+    chunk: usize,
+    to: ShardId,
+    batch_docs: usize,
+    metrics: &Registry,
+) -> Result<MigrationOutcome> {
+    let batch_docs = batch_docs.max(1);
+    let migration = rpc(config, |reply| ConfigRequest::BeginMigration { chunk, to, reply })
+        .map_err(|e| anyhow::anyhow!("begin: {e}"))?
+        .map_err(|e| anyhow::anyhow!("begin: {e}"))?;
+    let range = migration.range;
+    let from = migration.from;
+    let donor = &shards[from.index()];
+    let dest = &shards[to.index()];
+    let mut out = MigrationOutcome::default();
+
+    // Phases up to the commit marker can abort; afterwards the
+    // migration may only roll forward.
+    //
+    // Both stream phases carry a pass cap derived from the donor's
+    // live record count: every non-terminal batch advances the cursor
+    // past at least `batch_docs` records, so `docs / batch_docs + 8`
+    // batches provably cover every record that existed when the phase
+    // started. Without the cap, sustained ingest landing on the donor
+    // keeps growing the record store's tail and a scan chasing `done`
+    // might never observe the end — with it, M1 hands any remainder to
+    // catch-up, and catch-up (whose range writes are already rejected
+    // post-flip) provably covers every flip-time record.
+    let donor_batch_cap = |donor: &ShardMailbox| -> u64 {
+        let docs = rpc(donor, |reply| ShardRequest::Stats { reply })
+            .map(|s| s.collection.docs)
+            .unwrap_or(0);
+        docs / batch_docs as u64 + 8
+    };
+    let mut cursor: Option<u64> = None;
+    let pre_commit: Result<()> = (|| {
+        // M1 — stream the range in bounded batches. Writes landing on
+        // the donor during the stream get higher rids and are picked up
+        // by later batches (or by catch-up, if the cap fires first).
+        let cap = donor_batch_cap(donor);
+        stream_range(donor, dest, range, from, batch_docs, cap, &mut cursor, &mut out.batches, &mut out.docs_streamed)?;
+        // M2 — flip ownership at the config server (map version bump +
+        // SetMap push to every shard happens before the rpc replies, so
+        // catch-up batches sent after this line observe the donor's
+        // post-flip rejection of new writes in the range).
+        rpc(config, |reply| ConfigRequest::CommitMigration { reply })
+            .map_err(|e| anyhow::anyhow!("flip: {e}"))?
+            .map_err(|e| anyhow::anyhow!("flip: {e}"))?;
+        // Catch-up: drain writes that raced the flip.
+        let cap = donor_batch_cap(donor);
+        stream_range(donor, dest, range, from, batch_docs, cap, &mut cursor, &mut out.batches, &mut out.docs_caught_up)?;
+        // An empty chunk (common on pre-split ranges) migrates as a
+        // pure metadata flip: nothing was staged, so there is nothing
+        // to commit, delete, or publish — and CommitStaged would
+        // rightly refuse ("nothing staged").
+        if out.docs_streamed + out.docs_caught_up == 0 {
+            return Ok(());
+        }
+        // M3 — destination durably commits the staged range.
+        rpc(dest, |reply| ShardRequest::CommitStaged { reply })
+            .map_err(|e| anyhow::anyhow!("commit staged: {e}"))?
+            .map_err(|e| anyhow::anyhow!("commit staged: {e}"))?;
+        let _ = rpc(config, |reply| ConfigRequest::AdvanceMigration {
+            state: MState::Committed,
+            reply,
+        });
+        Ok(())
+    })();
+    if let Err(e) = pre_commit {
+        // Await the destination cleanup (the old code fired and forgot,
+        // orphaning the partial copy), then roll the config back — but
+        // only roll the owner map back when the destination *confirmed*
+        // the staged range was dropped. If it refused (the staging is
+        // already durably committed: the failure raced the marker's
+        // reply) or is unreachable, unflipping would let the donor
+        // accept new writes into a range the next job's roll-forward
+        // will delete — real data loss. Recording `Committed` first
+        // makes the config abort keep the flip (roll-forward pending).
+        match rpc(dest, |reply| ShardRequest::AbortStaged { reply }) {
+            Ok(Ok(_)) => {}
+            _ => {
+                let _ = rpc(config, |reply| ConfigRequest::AdvanceMigration {
+                    state: MState::Committed,
+                    reply,
+                });
+            }
+        }
+        let _ = rpc(config, |reply| ConfigRequest::AbortMigration { reply });
+        metrics.counter("cluster.migrations_failed").inc();
+        return Err(e);
+    }
+
+    // M4 — roll forward: source delete + compaction, then publish. An
+    // rpc failure here (a dying shard thread) leaves the committed
+    // staging on disk; the next job's `recover` finishes the protocol.
+    // An empty migration already moved with the flip alone.
+    if out.docs_streamed + out.docs_caught_up == 0 {
+        let _ = rpc(config, |reply| ConfigRequest::FinishMigration { reply });
+        return Ok(out);
+    }
+    let cleanup: Result<()> = (|| {
+        let _ = rpc(config, |reply| ConfigRequest::AdvanceMigration {
+            state: MState::Cleanup,
+            reply,
+        });
+        let del = rpc(donor, |reply| ShardRequest::DeleteChunk { range, compact: true, reply })
+            .map_err(|e| anyhow::anyhow!("source delete: {e}"))?
+            .map_err(|e| anyhow::anyhow!("source delete: {e}"))?;
+        out.docs_deleted = del.removed;
+        out.source_journal_truncated = del
+            .compacted
+            .as_ref()
+            .map(|ck| ck.journal_bytes_truncated)
+            .unwrap_or(0);
+        out.docs_published = rpc(dest, |reply| ShardRequest::PublishStaged { reply })
+            .map_err(|e| anyhow::anyhow!("publish: {e}"))?
+            .map_err(|e| anyhow::anyhow!("publish: {e}"))?;
+        Ok(())
+    })();
+    match cleanup {
+        Ok(()) => {
+            let _ = rpc(config, |reply| ConfigRequest::FinishMigration { reply });
+            metrics.counter("cluster.migration_batches").add(out.batches);
+            metrics
+                .counter("cluster.migration_docs")
+                .add(out.docs_streamed + out.docs_caught_up);
+            Ok(out)
+        }
+        Err(e) => {
+            // Release the config lock without counting the migration as
+            // done (a post-marker migration never unflips); the durable
+            // staging rolls forward at the next job's `recover` pass.
+            let _ = rpc(config, |reply| ConfigRequest::AbortMigration { reply });
+            metrics.counter("cluster.migrations_failed").inc();
+            Err(e)
+        }
+    }
+}
+
+/// One streaming pass: batches from the donor's resumable cursor into
+/// the destination's staging collection, until the donor reports the
+/// scan reached the end of its record store — or `max_batches`
+/// messages have been sent (liveness under sustained ingest; see the
+/// cap derivation in [`execute`]).
+#[allow(clippy::too_many_arguments)]
+fn stream_range(
+    donor: &ShardMailbox,
+    dest: &ShardMailbox,
+    range: (u64, u64),
+    from: ShardId,
+    batch_docs: usize,
+    max_batches: u64,
+    cursor: &mut Option<u64>,
+    batches: &mut u64,
+    docs: &mut u64,
+) -> Result<()> {
+    let mut sent = 0u64;
+    loop {
+        let after = *cursor;
+        let rep = rpc(donor, |reply| ShardRequest::MigrateBatch {
+            range,
+            after,
+            limit: batch_docs,
+            reply,
+        })
+        .map_err(|e| anyhow::anyhow!("stream: {e}"))?
+        .map_err(|e| anyhow::anyhow!("stream: {e}"))?;
+        if let Some(last) = rep.last {
+            *cursor = Some(last);
+        }
+        if !rep.docs.is_empty() {
+            let n = rep.docs.len() as u64;
+            rpc(dest, |reply| ShardRequest::StageChunk {
+                range,
+                from,
+                docs: rep.docs,
+                reply,
+            })
+            .map_err(|e| anyhow::anyhow!("stage: {e}"))?
+            .map_err(|e| anyhow::anyhow!("stage: {e}"))?;
+            *batches += 1;
+            *docs += n;
+        }
+        sent += 1;
+        if rep.done || sent >= max_batches {
+            return Ok(());
+        }
+    }
+}
+
+/// Startup reconciliation: finish whatever migration a kill
+/// interrupted. Runs in `Cluster::start` after the shards recover,
+/// before any client traffic. A committed staging rolls *forward*
+/// (source range delete — idempotent — then publish); an uncommitted
+/// one rolls *back* (staged range dropped; the donor never deleted).
+/// Either way invariant IM1 holds: no document is lost or duplicated.
+pub fn recover(shards: &[ShardMailbox], metrics: &Registry) -> Result<RecoveredMigrations> {
+    let mut out = RecoveredMigrations::default();
+    for (i, dest) in shards.iter().enumerate() {
+        let Ok(Some(staged)) = rpc(dest, |reply| ShardRequest::StagedState { reply }) else {
+            continue;
+        };
+        if staged.committed {
+            // The commit marker is durable: the migration happened.
+            // Finish the source delete (a no-op if it already ran) and
+            // only then publish — publishing while the donor still
+            // holds its copy would duplicate the whole range (IM1), so
+            // a *failed* delete leaves the committed staging in place
+            // for the next recovery attempt instead. A vanished source
+            // shard (shrunk topology) cannot hold a conflicting copy,
+            // so publishing is still exactly-once among live shards.
+            if staged.from.index() != i {
+                if let Some(src) = shards.get(staged.from.index()) {
+                    rpc(src, |reply| ShardRequest::DeleteChunk {
+                        range: staged.range,
+                        compact: true,
+                        reply,
+                    })
+                    .map_err(|e| anyhow::anyhow!("recover source delete: {e}"))?
+                    .map_err(|e| anyhow::anyhow!("recover source delete: {e}"))?;
+                }
+            }
+            let n = rpc(dest, |reply| ShardRequest::PublishStaged { reply })
+                .map_err(|e| anyhow::anyhow!("recover publish: {e}"))?
+                .map_err(|e| anyhow::anyhow!("recover publish: {e}"))?;
+            out.rolled_forward += 1;
+            out.docs_recovered += n;
+            metrics.counter("cluster.migrations_recovered").inc();
+        } else {
+            rpc(dest, |reply| ShardRequest::AbortStaged { reply })
+                .map_err(|e| anyhow::anyhow!("recover abort: {e}"))?
+                .map_err(|e| anyhow::anyhow!("recover abort: {e}"))?;
+            out.rolled_back += 1;
+            metrics.counter("cluster.migrations_rolled_back").inc();
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mstates_order_matches_protocol() {
+        assert!(MState::Streaming < MState::Flipped);
+        assert!(MState::Flipped < MState::Committed);
+        assert!(MState::Committed < MState::Cleanup);
+        assert_eq!(format!("{}", MState::Committed), "committed");
+    }
+
+    #[test]
+    fn outcome_defaults_are_zero() {
+        let o = MigrationOutcome::default();
+        assert_eq!(o.docs_streamed + o.docs_caught_up + o.docs_published, 0);
+        assert_eq!(RecoveredMigrations::default().rolled_forward, 0);
+    }
+}

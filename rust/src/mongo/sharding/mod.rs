@@ -1,10 +1,12 @@
-//! Sharding: shard keys, chunks, the config-server metadata state, and
-//! the balancer policy.
+//! Sharding: shard keys, chunks, the config-server metadata state, the
+//! balancer policy, and the streaming chunk-migration protocol.
 
 pub mod balancer;
 pub mod chunk;
 pub mod config_server;
+pub mod migration;
 
-pub use balancer::{plan_moves, BalancerPolicy};
+pub use balancer::{plan_moves, BalancerPolicy, ShardLoad};
 pub use chunk::{ChunkMap, ShardKey};
 pub use config_server::ConfigState;
+pub use migration::{MState, MigrationOutcome};

@@ -55,7 +55,10 @@
 //! Journal record: `u32 len | u8 op | u8 coll_len | coll | payload`,
 //! op 1 = insert(doc bytes), op 2 = remove(rid u64 + doc bytes for index
 //! maintenance), op 3 = insert_many(u32 count, then per document
-//! `u32 len | doc bytes`). An insert_many batch is one frame: recovery
+//! `u32 len | doc bytes`), op 4 = remove_many(u32 count, then rids
+//! only — the chunk-migration range delete), op 5 = move_many(dst
+//! name, then per record rid + doc bytes; header coll = source — the
+//! migration publish). Each multi-record op is one frame: recovery
 //! replays it atomically or — when the frame is torn by a mid-batch
 //! crash — discards it in full, never half-applied.
 //!
@@ -93,6 +96,17 @@ const CKPT_TMP: &str = "store.ckpt.tmp";
 const OP_INSERT: u8 = 1;
 const OP_REMOVE: u8 = 2;
 const OP_INSERT_MANY: u8 = 3;
+/// Batched remove (chunk-migration source delete): one atomic frame for
+/// a whole key range, so a kill can never half-delete a chunk.
+const OP_REMOVE_MANY: u8 = 4;
+/// Cross-collection move (migration publish): remove from the source
+/// collection and insert into the destination in one atomic frame, so
+/// replay never sees the records in both collections or in neither.
+const OP_MOVE_MANY: u8 = 5;
+
+/// Below this batch size, per-index maintenance runs inline: spawning
+/// scoped threads costs more than the index inserts they would cover.
+const INDEX_PARALLEL_MIN_DOCS: usize = 256;
 /// Legacy checkpoint magic: `magic | u8 compressed | body`.
 const CKPT_MAGIC_V1: &[u8; 8] = b"HPCCKPT1";
 /// Legacy pre-delta magic: `magic | u64 generation | u64 covered_seq |
@@ -242,6 +256,44 @@ impl Collection {
             dirty: BTreeSet::new(),
             tombstones: BTreeSet::new(),
         }
+    }
+
+    /// Install a whole batch: allocate rids and record bytes serially
+    /// (the record store is the ordering authority), then maintain each
+    /// secondary index over the full batch. With several indexes and a
+    /// large batch the per-index work runs on scoped threads — the
+    /// indexes are independent structures, so the maintenance that used
+    /// to be sequential per document parallelizes without locking, and
+    /// the result is bit-identical to the inline path.
+    fn insert_batch(&mut self, docs: &[Document], encoded: Vec<Vec<u8>>) -> Vec<RecordId> {
+        let mut rids = Vec::with_capacity(docs.len());
+        for enc in encoded {
+            let rid = self.next_rid;
+            self.next_rid += 1;
+            self.bytes += enc.len() as u64;
+            self.records.insert(rid, enc);
+            self.dirty.insert(rid);
+            rids.push(rid);
+        }
+        if self.indexes.len() > 1 && docs.len() >= INDEX_PARALLEL_MIN_DOCS {
+            let rids = &rids;
+            std::thread::scope(|s| {
+                for idx in self.indexes.iter_mut() {
+                    s.spawn(move || {
+                        for (doc, rid) in docs.iter().zip(rids) {
+                            idx.insert(doc, *rid);
+                        }
+                    });
+                }
+            });
+        } else {
+            for idx in &mut self.indexes {
+                for (doc, rid) in docs.iter().zip(&rids) {
+                    idx.insert(doc, *rid);
+                }
+            }
+        }
+        rids
     }
 
     fn insert_decoded(&mut self, doc: &Document, encoded: Vec<u8>) -> RecordId {
@@ -458,11 +510,105 @@ impl Engine {
             self.journal_record(OP_INSERT_MANY, coll, &payload);
         }
         let c = self.collections.get_mut(coll).expect("collection checked above");
-        let mut rids = Vec::with_capacity(docs.len());
-        for (doc, enc) in docs.iter().zip(encoded) {
-            rids.push(c.insert_decoded(doc, enc));
+        Ok(c.insert_batch(docs, encoded))
+    }
+
+    /// Remove a whole set of records as **one** multi-record journal
+    /// frame — the range-delete unit of chunk migration. Replay applies
+    /// the frame atomically (a torn frame is discarded whole), so a
+    /// kill can never half-delete a chunk. `rids` must be distinct and
+    /// present. Durable after the next [`Self::sync`].
+    pub fn remove_many(&mut self, coll: &str, rids: &[RecordId]) -> Result<Vec<Document>> {
+        if rids.is_empty() {
+            return Ok(Vec::new());
         }
-        Ok(rids)
+        anyhow::ensure!(rids.len() <= u32::MAX as usize, "remove_many batch too large");
+        let c = self
+            .collections
+            .get(coll)
+            .ok_or_else(|| anyhow::anyhow!("no collection `{coll}`"))?;
+        // Validate (and decode) every record up front: the journal frame
+        // and the in-memory mutation must cover exactly the same set, or
+        // a mid-batch failure would leave them disagreeing. The frame
+        // carries only the rids — unlike OP_REMOVE, no document bodies:
+        // replay removes by rid (index maintenance decodes the stored
+        // record), so a chunk-sized delete journals a few bytes per
+        // document instead of re-journaling the whole chunk at the
+        // migration commit instant.
+        let mut docs = Vec::with_capacity(rids.len());
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(rids.len() as u32).to_le_bytes());
+        for &rid in rids {
+            let bytes = c
+                .records
+                .get(&rid)
+                .ok_or_else(|| anyhow::anyhow!("no record {rid}"))?;
+            let doc = Document::decode(bytes)?;
+            payload.extend_from_slice(&rid.to_le_bytes());
+            docs.push(doc);
+        }
+        if self.opts.journal {
+            self.journal_record(OP_REMOVE_MANY, coll, &payload);
+        }
+        let c = self.collections.get_mut(coll).expect("collection checked above");
+        for &rid in rids {
+            c.remove(rid).expect("record validated above");
+        }
+        Ok(docs)
+    }
+
+    /// Move records from `src` to `dst` in **one** atomic journal frame
+    /// — the publish step of chunk migration: staged documents become
+    /// live with no replay state in which they exist in both
+    /// collections or in neither. The records are assigned fresh ids in
+    /// `dst` (collections have independent rid spaces); the returned
+    /// vector is in `rids` order. Durable after the next [`Self::sync`].
+    pub fn move_many(
+        &mut self,
+        src: &str,
+        dst: &str,
+        rids: &[RecordId],
+    ) -> Result<Vec<RecordId>> {
+        if rids.is_empty() {
+            return Ok(Vec::new());
+        }
+        anyhow::ensure!(src != dst, "move_many: src and dst are the same collection");
+        anyhow::ensure!(rids.len() <= u32::MAX as usize, "move_many batch too large");
+        anyhow::ensure!(dst.len() <= u8::MAX as usize, "collection name too long");
+        if !self.collections.contains_key(dst) {
+            bail!("no collection `{dst}`");
+        }
+        let c = self
+            .collections
+            .get(src)
+            .ok_or_else(|| anyhow::anyhow!("no collection `{src}`"))?;
+        let mut docs = Vec::with_capacity(rids.len());
+        let mut encs = Vec::with_capacity(rids.len());
+        let mut payload = Vec::new();
+        payload.push(dst.len() as u8);
+        payload.extend_from_slice(dst.as_bytes());
+        payload.extend_from_slice(&(rids.len() as u32).to_le_bytes());
+        for &rid in rids {
+            let bytes = c
+                .records
+                .get(&rid)
+                .ok_or_else(|| anyhow::anyhow!("no record {rid}"))?;
+            let doc = Document::decode(bytes)?;
+            payload.extend_from_slice(&rid.to_le_bytes());
+            payload.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            payload.extend_from_slice(bytes);
+            docs.push(doc);
+            encs.push(bytes.clone());
+        }
+        if self.opts.journal {
+            self.journal_record(OP_MOVE_MANY, src, &payload);
+        }
+        let c = self.collections.get_mut(src).expect("collection checked above");
+        for &rid in rids {
+            c.remove(rid).expect("record validated above");
+        }
+        let d = self.collections.get_mut(dst).expect("collection checked above");
+        Ok(d.insert_batch(&docs, encs))
     }
 
     /// Remove a record (chunk migration source side).
@@ -544,6 +690,31 @@ impl Engine {
             Some(c) => Box::new(
                 c.records
                     .iter()
+                    .map(|(rid, b)| (*rid, Document::decode(b).expect("corrupt record"))),
+            ),
+            None => Box::new(std::iter::empty()),
+        }
+    }
+
+    /// Scan in record-id order starting *after* `after` (exclusive;
+    /// `None` = from the beginning) — the resumable cursor the chunk
+    /// migration stream walks. Records inserted while a stream is
+    /// paused get higher ids, so resuming from the last seen id picks
+    /// them up.
+    pub fn scan_from<'a>(
+        &'a self,
+        coll: &str,
+        after: Option<RecordId>,
+    ) -> Box<dyn Iterator<Item = (RecordId, Document)> + 'a> {
+        use std::ops::Bound;
+        let lo = match after {
+            Some(r) => Bound::Excluded(r),
+            None => Bound::Unbounded,
+        };
+        match self.collections.get(coll) {
+            Some(c) => Box::new(
+                c.records
+                    .range((lo, Bound::Unbounded))
                     .map(|(rid, b)| (*rid, Document::decode(b).expect("corrupt record"))),
             ),
             None => Box::new(std::iter::empty()),
@@ -1096,6 +1267,71 @@ impl Engine {
                     if p != payload.len() {
                         bail!("insert_many frame has trailing bytes");
                     }
+                }
+                OP_REMOVE_MANY => {
+                    if payload.len() < 4 {
+                        bail!("remove_many frame missing count");
+                    }
+                    let n = u32::from_le_bytes(payload[..4].try_into()?) as usize;
+                    let mut p = 4usize;
+                    for i in 0..n {
+                        if p + 8 > payload.len() {
+                            bail!("remove_many frame truncated at record {i}");
+                        }
+                        let rid = u64::from_le_bytes(payload[p..p + 8].try_into()?);
+                        p += 8;
+                        let _ = c.remove(rid);
+                    }
+                    if p != payload.len() {
+                        bail!("remove_many frame has trailing bytes");
+                    }
+                }
+                OP_MOVE_MANY => {
+                    if payload.is_empty() {
+                        bail!("move_many frame missing destination");
+                    }
+                    let dst_len = payload[0] as usize;
+                    if 1 + dst_len + 4 > payload.len() {
+                        bail!("move_many frame truncated at destination name");
+                    }
+                    let dst = std::str::from_utf8(&payload[1..1 + dst_len])?.to_string();
+                    let n = u32::from_le_bytes(
+                        payload[1 + dst_len..1 + dst_len + 4].try_into()?,
+                    ) as usize;
+                    let mut p = 1 + dst_len + 4;
+                    let mut recs: Vec<(RecordId, Vec<u8>)> = Vec::with_capacity(n);
+                    for i in 0..n {
+                        if p + 12 > payload.len() {
+                            bail!("move_many frame truncated at record {i}");
+                        }
+                        let rid = u64::from_le_bytes(payload[p..p + 8].try_into()?);
+                        p += 8;
+                        let dl = u32::from_le_bytes(payload[p..p + 4].try_into()?) as usize;
+                        p += 4;
+                        if p + dl > payload.len() {
+                            bail!("move_many frame truncated at record {i} body");
+                        }
+                        recs.push((rid, payload[p..p + dl].to_vec()));
+                        p += dl;
+                    }
+                    if p != payload.len() {
+                        bail!("move_many frame has trailing bytes");
+                    }
+                    // Same order as the live path: remove from the frame's
+                    // source collection (the header name), then install
+                    // into the destination with freshly allocated rids —
+                    // replay reproduces the live allocation exactly.
+                    self.create_collection(&dst);
+                    let src_c = self.collections.get_mut(&coll).expect("created above");
+                    let mut docs = Vec::with_capacity(recs.len());
+                    let mut encs = Vec::with_capacity(recs.len());
+                    for (rid, bytes) in recs {
+                        let _ = src_c.remove(rid);
+                        docs.push(Document::decode(&bytes)?);
+                        encs.push(bytes);
+                    }
+                    let dst_c = self.collections.get_mut(&dst).expect("created above");
+                    dst_c.insert_batch(&docs, encs);
                 }
                 _ => bail!("unknown journal op {op}"),
             }
@@ -1865,5 +2101,109 @@ mod tests {
         assert_eq!(eng.frames_since_checkpoint(), 0);
         assert_eq!(eng.journal_bytes_since_checkpoint(), 0);
         assert_eq!(eng.journal_disk_bytes(), 0);
+    }
+
+    #[test]
+    fn remove_many_is_one_atomic_frame_and_replays() {
+        let dir = LocalDir::temp("eng24").unwrap();
+        let root = dir.describe();
+        {
+            let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+            eng.create_collection("m");
+            eng.create_index("m", IndexSpec::single("node_id")).unwrap();
+            let rids = eng
+                .insert_many("m", &(0..10).map(|t| doc(t, t % 2)).collect::<Vec<_>>())
+                .unwrap();
+            eng.sync().unwrap();
+            let before = eng.frames_since_checkpoint();
+            let docs = eng.remove_many("m", &rids[2..7]).unwrap();
+            assert_eq!(docs.len(), 5);
+            eng.sync().unwrap();
+            assert_eq!(
+                eng.frames_since_checkpoint(),
+                before + 1,
+                "one frame for the whole range"
+            );
+            assert_eq!(eng.stats("m").docs, 5);
+            // Unknown rid fails without mutating anything.
+            assert!(eng.remove_many("m", &[999]).is_err());
+            assert_eq!(eng.stats("m").docs, 5);
+        }
+        let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        assert_eq!(eng.stats("m").docs, 5, "replayed range delete must be exact");
+        assert!(eng.fetch("m", 3).is_none());
+        assert_eq!(eng.fetch("m", 8).unwrap().get_i64("ts"), Some(8));
+    }
+
+    #[test]
+    fn move_many_is_atomic_and_allocates_fresh_rids() {
+        let dir = LocalDir::temp("eng25").unwrap();
+        let root = dir.describe();
+        {
+            let mut eng = Engine::open(Box::new(dir), true, false).unwrap();
+            eng.create_collection("staged");
+            eng.create_collection("m");
+            eng.create_index("m", IndexSpec::single("node_id")).unwrap();
+            eng.insert_many("m", &[doc(100, 9)]).unwrap(); // live rid 0
+            let rids = eng
+                .insert_many("staged", &(0..6).map(|t| doc(t, 1)).collect::<Vec<_>>())
+                .unwrap();
+            eng.sync().unwrap();
+            let moved = eng.move_many("staged", "m", &rids).unwrap();
+            assert_eq!(moved, (1..=6).collect::<Vec<u64>>());
+            eng.sync().unwrap();
+            assert_eq!(eng.stats("staged").docs, 0);
+            assert_eq!(eng.stats("m").docs, 7);
+            // The destination indexes cover the moved records.
+            let idx = eng.index("m", "node_id_1").unwrap();
+            assert_eq!(idx.point(&[&Value::Int(1)]).len(), 6);
+        }
+        let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        assert_eq!(eng.stats("staged").docs, 0, "replayed move must empty the source");
+        assert_eq!(eng.stats("m").docs, 7);
+        assert_eq!(eng.fetch("m", 4).unwrap().get_i64("ts"), Some(3));
+    }
+
+    #[test]
+    fn scan_from_resumes_after_rid() {
+        let (mut eng, _) = temp_engine("eng26", false, false);
+        eng.create_collection("m");
+        for t in 0..10 {
+            eng.insert("m", &doc(t, 0)).unwrap();
+        }
+        let all: Vec<RecordId> = eng.scan_from("m", None).map(|(r, _)| r).collect();
+        assert_eq!(all, (0..10).collect::<Vec<u64>>());
+        let tail: Vec<RecordId> = eng.scan_from("m", Some(6)).map(|(r, _)| r).collect();
+        assert_eq!(tail, vec![7, 8, 9]);
+        assert_eq!(eng.scan_from("m", Some(99)).count(), 0);
+        assert_eq!(eng.scan_from("none", None).count(), 0);
+    }
+
+    #[test]
+    fn parallel_index_maintenance_matches_inline() {
+        // A batch above the parallel threshold with two indexes takes
+        // the scoped-thread path; per-document inserts take the inline
+        // path. Both must produce identical store and index contents.
+        let (mut par, _) = temp_engine("eng27a", false, false);
+        let (mut seq, _) = temp_engine("eng27b", false, false);
+        for eng in [&mut par, &mut seq] {
+            eng.create_collection("m");
+            eng.create_index("m", IndexSpec::single("ts")).unwrap();
+            eng.create_index("m", IndexSpec::single("node_id")).unwrap();
+        }
+        let docs: Vec<Document> = (0..(INDEX_PARALLEL_MIN_DOCS as i64 * 2))
+            .map(|t| doc(t, t % 13))
+            .collect();
+        par.insert_many("m", &docs).unwrap();
+        for d in &docs {
+            seq.insert("m", d).unwrap();
+        }
+        assert_eq!(par.stats("m"), seq.stats("m"));
+        for node in 0..13i64 {
+            assert_eq!(
+                par.index("m", "node_id_1").unwrap().point(&[&Value::Int(node)]),
+                seq.index("m", "node_id_1").unwrap().point(&[&Value::Int(node)]),
+            );
+        }
     }
 }

@@ -12,6 +12,7 @@ use crate::mongo::bson::Document;
 use crate::mongo::query::{Filter, FindOptions};
 use crate::mongo::sharding::chunk::ChunkMap;
 use crate::mongo::sharding::config_server::{Migration, VersionCheck};
+use crate::mongo::sharding::migration::MState;
 use crate::mongo::storage::index::IndexSpec;
 use crate::mongo::storage::{CheckpointStats, CollectionStats};
 use crate::util::ids::ShardId;
@@ -59,6 +60,45 @@ pub struct FindReply {
     pub cursor: Option<u64>,
 }
 
+/// One batch of a streaming chunk migration (source side).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MigrateBatchReply {
+    /// Documents of the requested range, in record-id order.
+    pub docs: Vec<Document>,
+    /// Record id of the last document returned — the resume cursor for
+    /// the next batch. `None` when this batch is empty.
+    pub last: Option<u64>,
+    /// True when the scan reached the end of the record store: nothing
+    /// of the range exists past `last` at scan time (writes arriving
+    /// later get higher record ids and need a further pass).
+    pub done: bool,
+}
+
+/// Durable staging state a destination shard reports after recovery —
+/// the input to the cluster's migration reconciliation pass.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StagedMigration {
+    /// Key-position range being migrated (inclusive bounds).
+    pub range: (u64, u64),
+    /// Donor shard the staged documents came from.
+    pub from: ShardId,
+    /// Whether the durable commit marker was written (roll forward) or
+    /// not (roll back).
+    pub committed: bool,
+    /// Staged data documents (meta records excluded).
+    pub docs: u64,
+}
+
+/// Result of a migration source delete.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeleteChunkReply {
+    /// Documents removed from the range.
+    pub removed: u64,
+    /// The triggered compaction, when one was requested: moved-away
+    /// data leaves the source's journal and checkpoint chain.
+    pub compacted: Option<CheckpointStats>,
+}
+
 /// Shard statistics snapshot.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ShardStatsReply {
@@ -80,6 +120,9 @@ pub struct ShardStatsReply {
     pub checkpoint_chain_len: u64,
     /// On-disk bytes of the shard's live delta chain.
     pub delta_disk_bytes: u64,
+    /// Data documents currently staged by an in-flight migration
+    /// (invisible to queries until published).
+    pub staged_docs: u64,
 }
 
 /// Requests handled by a shard server (`mongod`).
@@ -112,20 +155,57 @@ pub enum ShardRequest {
     },
     /// Config pushes a new chunk map after any metadata mutation.
     SetMap { map: ChunkMap },
-    /// Migration source: copy (do not delete) documents of a chunk range.
-    ExtractChunk {
+    /// Migration source: copy (do not delete) one bounded batch of the
+    /// range, resuming from the record-id cursor `after`. Each batch is
+    /// one mailbox message, so ingest and queries interleave with the
+    /// stream (invariant IM2 in `sharding::migration`).
+    MigrateBatch {
         range: (u64, u64),
-        reply: Reply<Result<Vec<Document>, WireError>>,
+        after: Option<u64>,
+        limit: usize,
+        reply: Reply<Result<MigrateBatchReply, WireError>>,
     },
-    /// Migration destination: install copied documents.
-    InstallChunk {
+    /// Migration destination: stage one copied batch into the
+    /// `__migration` collection through the group-committed
+    /// `insert_many` path. Invisible to queries until published.
+    StageChunk {
+        range: (u64, u64),
+        from: ShardId,
         docs: Vec<Document>,
         reply: Reply<Result<usize, WireError>>,
     },
-    /// Migration source: delete documents of a committed-away range.
+    /// Migration destination: durably mark the staged range committed
+    /// (one journal frame + sync) — the migration's roll-forward point.
+    /// Replies with the staged data-document count.
+    CommitStaged {
+        reply: Reply<Result<u64, WireError>>,
+    },
+    /// Migration destination: publish the committed staging into the
+    /// live collection (one atomic cross-collection move frame) and
+    /// clear the staging state. Idempotent: publishing an empty staging
+    /// is a no-op.
+    PublishStaged {
+        reply: Reply<Result<u64, WireError>>,
+    },
+    /// Migration destination: drop an *uncommitted* staged range (abort
+    /// path; refuses to drop a committed staging). Replies with the
+    /// number of staged documents discarded.
+    AbortStaged {
+        reply: Reply<Result<u64, WireError>>,
+    },
+    /// Migration source: delete documents of a committed-away range as
+    /// one atomic frame; with `compact` the delete is followed by a
+    /// triggered checkpoint so the moved-away data stops occupying the
+    /// journal and delta chain.
     DeleteChunk {
         range: (u64, u64),
-        reply: Reply<Result<usize, WireError>>,
+        compact: bool,
+        reply: Reply<Result<DeleteChunkReply, WireError>>,
+    },
+    /// Report any durable staging left by a killed migration (startup
+    /// reconciliation input).
+    StagedState {
+        reply: Reply<Option<StagedMigration>>,
     },
     Stats {
         reply: Reply<ShardStatsReply>,
@@ -159,12 +239,28 @@ pub enum ConfigRequest {
         to: ShardId,
         reply: Reply<Result<Migration, WireError>>,
     },
-    /// Commit the in-flight migration; returns the new map version.
+    /// Flip the in-flight migration's ownership (M2): relocates the
+    /// migrating chunk by range, bumps the version, pushes the new map.
+    /// Returns the new map version.
     CommitMigration {
         reply: Reply<Result<u64, WireError>>,
     },
-    /// Abort the in-flight migration.
-    AbortMigration,
+    /// Record a coordinator-observed state transition of the in-flight
+    /// migration (surfaced in [`ConfigStatsReply::migration_state`]).
+    AdvanceMigration {
+        state: MState,
+        reply: Reply<Result<(), WireError>>,
+    },
+    /// Clear the finished in-flight migration and count it.
+    FinishMigration {
+        reply: Reply<Result<u64, WireError>>,
+    },
+    /// Abort the in-flight migration — awaited by the coordinator. Rolls
+    /// the owner map back when the flip already happened; replies with
+    /// the aborted migration, `None` if nothing was in flight.
+    AbortMigration {
+        reply: Reply<Option<Migration>>,
+    },
     Stats {
         reply: Reply<ConfigStatsReply>,
     },
@@ -178,6 +274,10 @@ pub struct ConfigStatsReply {
     pub chunks: usize,
     pub oplog_len: u64,
     pub migrations_done: u64,
+    /// Migrations the coordinator aborted (rolled back).
+    pub migrations_aborted: u64,
+    /// M-state of the in-flight migration, if one is running.
+    pub migration_state: Option<MState>,
 }
 
 /// Wire-size estimate of a document batch (bytes a real deployment would

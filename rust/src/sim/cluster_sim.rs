@@ -46,6 +46,15 @@ pub struct SimSpec {
     pub full_checkpoint_chain: u32,
     /// OST count backing the store's scratch directories.
     pub osts: u32,
+    /// Balancer migration axis: chunk migrations interleaved with the
+    /// ingest phase, spread evenly over the corpus (0 = none, matching
+    /// a perfectly hashed workload that never rebalances).
+    pub migrations: u32,
+    /// Streaming migration batch size (documents per `MigrateBatch`
+    /// message, the live `--migration-batch-docs` knob): bounds the
+    /// donor's longest contiguous stall while paying one group-commit
+    /// frame per batch.
+    pub migration_batch: usize,
     /// User jobs for the query phase.
     pub query_jobs: u32,
     pub cost: CostModel,
@@ -75,6 +84,8 @@ impl SimSpec {
             checkpoint_bytes: 0,
             full_checkpoint_chain: 8,
             osts: 64,
+            migrations: 0,
+            migration_batch: 1_024,
             query_jobs,
             cost,
             seed: 0x51712,
@@ -104,6 +115,11 @@ pub struct SimReport {
     /// Compactions that rebased the delta chain into a full snapshot
     /// (the only ones whose cost scales with the live set).
     pub rebases: u64,
+    /// Chunk migrations executed during ingest (the balancer axis).
+    pub migrations: u64,
+    /// Longest single donor-CPU occupancy a migration batch caused —
+    /// the co-scheduled request's worst-case wait behind the stream.
+    pub migration_stall_ns: u64,
     pub chunks: u64,
     pub util_shard: f64,
     pub util_router: f64,
@@ -231,6 +247,16 @@ impl ClusterSim {
         // Routers that must refresh + re-route their next batch because
         // a split bumped the map version (the stale-version storm).
         let mut stale_routers = vec![0u32; r_count];
+        // Balancer migration axis: one chunk moves after every
+        // `mig_every` ingested documents.
+        let mig_every = if spec.migrations > 0 {
+            (total_docs / (spec.migrations as u64 + 1)).max(1)
+        } else {
+            u64::MAX
+        };
+        let mut next_migration_at = mig_every;
+        let mut migrations_done = 0u64;
+        let mut migration_stall = 0u64;
 
         let mut q: EventQueue<Ev> = EventQueue::new();
         for pe in 0..pes {
@@ -357,6 +383,58 @@ impl ClusterSim {
                 }
                 t_done = t_done.max(t_s);
             }
+            // Balancer migration axis: the stream is charged in
+            // `migration_batch`-sized steps — each batch occupies the
+            // donor CPU once (extract), crosses the fabric, and pays
+            // the recipient install plus one group-commit frame on its
+            // OST. Co-scheduled ingest requests queue behind at most
+            // one batch of donor work (invariant IM2 of the live
+            // protocol), which is what `migration_stall_ns` records.
+            while docs_done >= next_migration_at
+                && migrations_done < spec.migrations as u64
+            {
+                next_migration_at = next_migration_at.saturating_add(mig_every);
+                let donor = (migrations_done as usize) % s_count;
+                let dst = (donor + 1) % s_count;
+                let chunk_docs = (shard_docs[donor] / shard_chunks[donor].max(1)).max(1);
+                let mb = spec.migration_batch.max(1) as u64;
+                let mut left = chunk_docs;
+                let mut tm = t_done;
+                while left > 0 {
+                    let b_m = left.min(mb);
+                    left -= b_m;
+                    let extract = (b_m as f64 * cost.migrate_doc_ns / 2.0) as u64;
+                    let t_x = shard_cpu.serve(donor, tm, extract);
+                    migration_stall = migration_stall.max(extract);
+                    let t_net = fabric.serve(t_x, fabric_ns(b_m as f64 * cost.doc_bytes))
+                        + cost.net_latency_ns as u64;
+                    let install = (b_m as f64 * cost.migrate_doc_ns / 2.0) as u64
+                        + cost.journal_frame_ns as u64;
+                    let t_i = shard_cpu.serve(dst, t_net, install);
+                    tm = ost.serve(
+                        dst % o_count,
+                        t_i,
+                        ost_ns(b_m as f64 * cost.journal_bytes_per_doc),
+                    );
+                }
+                // Source range delete + the triggered post-commit
+                // compaction (a delta of the deleted range): the
+                // storage hand-back the lifecycle balancer guarantees.
+                // One contiguous donor occupancy — an atomic delete
+                // frame cannot stream — so it counts toward the stall
+                // too (it floors the stall curve at small batch sizes).
+                let cleanup = (chunk_docs as f64 * cost.checkpoint_doc_ns) as u64;
+                shard_cpu.serve(donor, tm, cleanup);
+                migration_stall = migration_stall.max(cleanup);
+                let moved = chunk_docs.min(shard_docs[donor]);
+                shard_docs[donor] -= moved;
+                shard_docs[dst] += moved;
+                if shard_chunks[donor] > 1 {
+                    shard_chunks[donor] -= 1;
+                    shard_chunks[dst] += 1;
+                }
+                migrations_done += 1;
+            }
             // Ack back to the client; next batch.
             let t_ack = t_done + cost.net_latency_ns as u64;
             ingest_end = ingest_end.max(t_ack);
@@ -463,6 +541,8 @@ impl ClusterSim {
             splits,
             checkpoints,
             rebases,
+            migrations: migrations_done,
+            migration_stall_ns: migration_stall,
             chunks: shard_chunks.iter().sum(),
             util_shard,
             util_router,
@@ -627,6 +707,44 @@ mod tests {
         assert_eq!(a.ingest_virt_ns, b.ingest_virt_ns);
         assert_eq!(a.splits, b.splits);
         assert_eq!(a.query_latency.p99(), b.query_latency.p99());
+    }
+
+    #[test]
+    fn migrations_cost_ingest_time_but_not_documents() {
+        let base = ClusterSim::new(small_spec(32)).run();
+        assert_eq!(base.migrations, 0, "axis off by default");
+        assert_eq!(base.migration_stall_ns, 0);
+        let mut spec = small_spec(32);
+        spec.migrations = 8;
+        let r = ClusterSim::new(spec).run();
+        assert_eq!(r.docs, base.docs, "migrations must not change the corpus");
+        assert_eq!(r.migrations, 8);
+        assert!(r.migration_stall_ns > 0);
+        assert!(
+            r.ingest_virt_ns >= base.ingest_virt_ns,
+            "migration work cannot make ingest faster"
+        );
+    }
+
+    #[test]
+    fn smaller_migration_batches_bound_the_donor_stall() {
+        // The whole point of the streaming protocol: the donor's
+        // longest contiguous stall scales with the batch size, at the
+        // price of more per-batch fixed costs.
+        let mut big = small_spec(32);
+        big.migrations = 4;
+        big.migration_batch = 16_384;
+        let mut small = big.clone();
+        small.migration_batch = 256;
+        let rb = ClusterSim::new(big).run();
+        let rs = ClusterSim::new(small).run();
+        assert_eq!(rb.docs, rs.docs);
+        assert!(
+            rs.migration_stall_ns * 4 < rb.migration_stall_ns,
+            "batch=256 stall {} must be far below batch=16384 stall {}",
+            rs.migration_stall_ns,
+            rb.migration_stall_ns
+        );
     }
 
     #[test]

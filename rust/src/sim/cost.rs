@@ -45,6 +45,12 @@ pub struct CostModel {
     /// paid only when the delta chain reaches
     /// `SimSpec::full_checkpoint_chain` and a full snapshot is written.
     pub rebase_doc_ns: f64,
+    /// Chunk-migration cost per moved document, split between the donor
+    /// (extract: fetch + filter) and the recipient (install: index +
+    /// journal). Derived at calibration time as `result_doc_ns +
+    /// insert_doc_ns` — a migrated document is read once on one shard
+    /// and written once on the other.
+    pub migrate_doc_ns: f64,
     /// Fixed per-shard cost of opening a find (planner, cursor).
     pub find_fixed_ns: f64,
     /// Index-scan cost per candidate record id.
@@ -85,6 +91,7 @@ impl Default for CostModel {
             journal_frame_ns: 25_000.0,
             checkpoint_doc_ns: 400.0,
             rebase_doc_ns: 400.0,
+            migrate_doc_ns: 7_500.0,
             find_fixed_ns: 40_000.0,
             index_candidate_ns: 90.0,
             result_doc_ns: 1_500.0,
@@ -112,6 +119,7 @@ impl CostModel {
             .set("journal_frame_ns", self.journal_frame_ns)
             .set("checkpoint_doc_ns", self.checkpoint_doc_ns)
             .set("rebase_doc_ns", self.rebase_doc_ns)
+            .set("migrate_doc_ns", self.migrate_doc_ns)
             .set("find_fixed_ns", self.find_fixed_ns)
             .set("index_candidate_ns", self.index_candidate_ns)
             .set("result_doc_ns", self.result_doc_ns)
@@ -139,6 +147,7 @@ impl CostModel {
             journal_frame_ns: f("journal_frame_ns", d.journal_frame_ns),
             checkpoint_doc_ns: f("checkpoint_doc_ns", d.checkpoint_doc_ns),
             rebase_doc_ns: f("rebase_doc_ns", d.rebase_doc_ns),
+            migrate_doc_ns: f("migrate_doc_ns", d.migrate_doc_ns),
             find_fixed_ns: f("find_fixed_ns", d.find_fixed_ns),
             index_candidate_ns: f("index_candidate_ns", d.index_candidate_ns),
             result_doc_ns: f("result_doc_ns", d.result_doc_ns),
@@ -305,6 +314,12 @@ impl CostModel {
         }
         cm.result_doc_ns = t.elapsed().as_nanos() as f64 / fetched.max(1) as f64;
 
+        // --- Migration: a moved document is fetched + filtered once on
+        // the donor and indexed + journaled once on the recipient, so
+        // the per-document cost composes from the two terms measured
+        // above rather than a separate (and redundant) harness.
+        cm.migrate_doc_ns = cm.result_doc_ns + cm.insert_doc_ns;
+
         // --- Shard: checkpoint serialization costs (storage lifecycle).
         // The DES charges each checkpoint's OST transfer separately, so
         // subtract the measured cost of writing an equivalently-sized
@@ -419,5 +434,10 @@ mod tests {
         assert!(cm.journal_frame_ns >= 1_000.0, "frame {}", cm.journal_frame_ns);
         assert!(cm.checkpoint_doc_ns >= 50.0, "ckpt {}", cm.checkpoint_doc_ns);
         assert!(cm.rebase_doc_ns >= 50.0, "rebase {}", cm.rebase_doc_ns);
+        assert!(
+            (cm.migrate_doc_ns - cm.result_doc_ns - cm.insert_doc_ns).abs() < 1e-6,
+            "migrate {} must compose extract + install",
+            cm.migrate_doc_ns
+        );
     }
 }

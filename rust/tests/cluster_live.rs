@@ -372,6 +372,182 @@ fn queries_stay_exact_under_concurrent_ingest_and_delta_compaction() {
 }
 
 #[test]
+fn balancer_streams_migrations_without_blocking_donor_ingest() {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+    // Skewed ranged corpus on shard 0; a probe client keeps inserting
+    // into the *migrating* key range while balancer rounds stream the
+    // chunks away. The stream must (a) really batch — several
+    // MigrateBatch messages per chunk, (b) keep acking the probe's
+    // inserts while it runs (the donor's event loop interleaves), and
+    // (c) neither lose nor duplicate a single document, including the
+    // probe's writes that race the ownership flip (the catch-up phase).
+    let mut spec = ClusterSpec::small(2, 1);
+    spec.chunks_per_shard = 1;
+    spec.store = StoreConfig {
+        shard_key: ShardKeyKind::Ranged,
+        max_chunk_docs: 400,
+        migration_batch_docs: 64,
+        ..Default::default()
+    };
+    let cluster = start(spec, "migflow");
+    let client = cluster.client();
+    let corpus = 3_000i64;
+    let docs: Vec<Document> = (0..corpus).map(|i| metric_doc(i, 7)).collect();
+    for c in docs.chunks(500) {
+        client.insert_many(c.to_vec()).unwrap();
+    }
+    let stats = cluster.stats();
+    assert!(stats.chunks > 4, "skewed ingest must have split chunks");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let acked = Arc::new(AtomicU64::new(0));
+    let probe = {
+        let stop = stop.clone();
+        let acked = acked.clone();
+        let c = cluster.client();
+        std::thread::spawn(move || -> i64 {
+            let mut ts = corpus;
+            while !stop.load(Ordering::Relaxed) {
+                let batch: Vec<Document> =
+                    (0..20).map(|i| metric_doc(ts + i, 7)).collect();
+                ts += 20;
+                c.insert_many(batch).unwrap();
+                acked.fetch_add(20, Ordering::Relaxed);
+            }
+            ts - corpus
+        })
+    };
+    let before_rounds = acked.load(Ordering::Relaxed);
+    let mut moved = 0;
+    for _ in 0..4 {
+        moved += cluster.run_balancer_round().unwrap();
+    }
+    let during_rounds = acked.load(Ordering::Relaxed) - before_rounds;
+    stop.store(true, Ordering::Relaxed);
+    let probed = probe.join().unwrap();
+
+    assert!(moved > 0, "skew must trigger migrations");
+    assert!(
+        cluster.metrics().counter("cluster.migration_batches").get() > moved as u64,
+        "chunks must stream in several bounded batches, not one-shot"
+    );
+    assert!(
+        during_rounds > 0,
+        "donor must keep acking ingest while its chunks migrate"
+    );
+    let stats = cluster.stats();
+    assert_eq!(
+        stats.docs as i64,
+        corpus + probed,
+        "exactly-once under writes racing the migration"
+    );
+    assert_eq!(stats.migrations_failed, 0);
+    assert!(stats.per_shard_docs.iter().all(|&d| d > 0), "{:?}", stats.per_shard_docs);
+    // The storage hand-back (IM4): every commit triggered a source
+    // compaction, so the donor's journal really gave bytes back to the
+    // shared filesystem — no moved-away data squatting until an
+    // unrelated threshold crossing.
+    assert!(cluster.metrics().counter("shard.checkpoints").get() > 0);
+    assert!(
+        cluster.metrics().counter("shard.journal_bytes_truncated").get() > 0,
+        "post-commit compaction must reclaim donor journal bytes"
+    );
+    cluster.shutdown();
+}
+
+#[test]
+fn queries_stay_sorted_and_counts_exact_across_balancer_rounds() {
+    use hpcstore::mongo::query::SortDir;
+    // Balancer rounds run *while* buffered ingest and sorted queries
+    // race them. Mid-migration scatter reads may transiently disagree
+    // about one in-flight chunk (the publish on the destination and the
+    // delete on the donor are separate event loops), but the k-way
+    // merged output must stay sorted at every probe — and at every
+    // round boundary (no migration in flight) the global doc count must
+    // be exact: staging is invisible, publish and delete are atomic
+    // frames.
+    let mut spec = ClusterSpec::small(3, 1);
+    spec.chunks_per_shard = 1;
+    spec.store = StoreConfig {
+        shard_key: ShardKeyKind::Ranged,
+        max_chunk_docs: 200,
+        migration_batch_docs: 32,
+        ..Default::default()
+    };
+    let cluster = start(spec, "migsort");
+    let client = cluster.client();
+    let corpus = 2_400i64;
+    for c in (0..corpus).collect::<Vec<i64>>().chunks(400) {
+        let docs: Vec<Document> = c.iter().map(|&i| metric_doc(i, 3)).collect();
+        client.insert_many(docs).unwrap();
+    }
+
+    let mut side_total = 0i64;
+    for round in 0..6i64 {
+        let writer = {
+            let c = cluster.client().pinned(0);
+            std::thread::spawn(move || -> i64 {
+                let mut inserted = 0i64;
+                for wave in 0..4i64 {
+                    let base = 1_000_000 + round * 1_000 + wave * 50;
+                    let docs: Vec<Document> =
+                        (0..50).map(|i| metric_doc(base + i, 3)).collect();
+                    inserted += c.insert_buffered(docs).unwrap().inserted as i64;
+                }
+                inserted
+            })
+        };
+        let prober = {
+            let c = cluster.client();
+            std::thread::spawn(move || {
+                for _ in 0..5 {
+                    let ts: Vec<i64> = c
+                        .find(
+                            Filter::range("ts", 0i64, corpus),
+                            FindOptions::default()
+                                .sort("ts", SortDir::Asc)
+                                .batch_size(128),
+                        )
+                        .unwrap()
+                        .map(|d| d.get_i64("ts").unwrap())
+                        .collect();
+                    assert!(
+                        ts.windows(2).all(|w| w[0] <= w[1]),
+                        "merged stream went unsorted during a migration"
+                    );
+                }
+            })
+        };
+        // The balancer round races the writer and the prober.
+        cluster.run_balancer_round().unwrap();
+        side_total += writer.join().unwrap();
+        prober.join().unwrap();
+        // Round boundary: nothing in flight — counts must be exact.
+        assert_eq!(
+            client.count_documents(Filter::True).unwrap() as i64,
+            corpus + side_total,
+            "round {round}: migration left a lost or duplicated document"
+        );
+    }
+    let stats = cluster.stats();
+    assert!(stats.migrations > 0, "skew must have triggered migrations");
+    assert_eq!(stats.migrations_failed, 0);
+    // Final content check: the stable corpus reads back exactly, in
+    // global order, wherever its chunks ended up.
+    let ts: Vec<i64> = client
+        .find(
+            Filter::range("ts", 0i64, corpus),
+            FindOptions::default().sort("ts", SortDir::Asc),
+        )
+        .unwrap()
+        .map(|d| d.get_i64("ts").unwrap())
+        .collect();
+    assert_eq!(ts, (0..corpus).collect::<Vec<i64>>());
+    cluster.shutdown();
+}
+
+#[test]
 fn sorted_scatter_gather_is_globally_ordered_across_shards() {
     use hpcstore::mongo::query::SortDir;
     // ≥ 2 shards, documents spread across them (hashed key), inserted in

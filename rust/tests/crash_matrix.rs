@@ -17,8 +17,15 @@
 
 use std::path::Path;
 
+use hpcstore::config::{ShardKeyKind, StoreConfig};
+use hpcstore::metrics::Registry;
 use hpcstore::mongo::bson::Document;
+use hpcstore::mongo::cluster::{Cluster, ClusterSpec};
+use hpcstore::mongo::query::Filter;
 use hpcstore::mongo::storage::{Engine, EngineOptions, LocalDir, StorageDir};
+use hpcstore::mongo::wire::{rpc, ShardRequest};
+use hpcstore::runtime::Kernels;
+use hpcstore::util::ids::ShardId;
 
 fn doc(i: u64) -> Document {
     Document::new()
@@ -538,4 +545,269 @@ fn lifecycle_survives_repeated_kill_restart_cycles() {
     }
     let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
     assert_eq!(eng.stats("metrics").docs, total);
+}
+
+// ---------------------------------------------------------------------------
+// Migration kill windows (streaming chunk migration — see
+// `sharding::migration` and docs/ARCHITECTURE.md §6).
+//
+// A two-shard cluster with a ranged key and a single-node corpus puts
+// every document into chunk 0 on shard 0. Each test drives the
+// migration wire protocol by hand up to a precise M-state, "kills" the
+// job (shutdown without a teardown checkpoint — storage-wise identical
+// to a walltime kill, since every protocol step is group-committed),
+// restarts on the same directories, and asserts the reconciliation
+// pass leaves exactly-once data: no document lost, none duplicated.
+
+/// Chunk 0 of a 2-shard × 1-chunk ranged pre-split covers positions
+/// `[0, u64::MAX / 2]`.
+const CHUNK0: (u64, u64) = (0, u64::MAX / 2);
+
+fn mig_doc(ts: i64) -> Document {
+    Document::new().set("ts", ts).set("node_id", 5i64).set("m0", ts as f64)
+}
+
+fn mig_spec() -> ClusterSpec {
+    let mut spec = ClusterSpec::small(2, 1);
+    spec.chunks_per_shard = 1;
+    spec.store = StoreConfig {
+        shard_key: ShardKeyKind::Ranged,
+        balancer: false, // the protocol is driven by hand here
+        ..Default::default()
+    };
+    spec
+}
+
+fn mig_roots(label: &str) -> Vec<String> {
+    (0..2)
+        .map(|i| LocalDir::temp(&format!("{label}-{i}")).unwrap().describe())
+        .collect()
+}
+
+fn mig_cluster(roots: &[String]) -> Cluster {
+    let roots = roots.to_vec();
+    Cluster::start(
+        mig_spec(),
+        move |sid| Ok(Box::new(LocalDir::new(&roots[sid.index()])?)),
+        Kernels::fallback(),
+        Registry::new(),
+    )
+    .unwrap()
+}
+
+/// Stream `limit`-sized batches of CHUNK0 from shard 0 into shard 1's
+/// staging; stop early after `max_batches` (`None` = drain the range).
+/// Returns the number of documents staged.
+fn stream_batches(cluster: &Cluster, limit: usize, max_batches: Option<usize>) -> u64 {
+    let shards = cluster.shard_mailboxes();
+    let mut after = None;
+    let mut staged = 0u64;
+    let mut batches = 0usize;
+    loop {
+        let rep = rpc(&shards[0], |reply| ShardRequest::MigrateBatch {
+            range: CHUNK0,
+            after,
+            limit,
+            reply,
+        })
+        .unwrap()
+        .unwrap();
+        if let Some(last) = rep.last {
+            after = Some(last);
+        }
+        if !rep.docs.is_empty() {
+            staged += rep.docs.len() as u64;
+            rpc(&shards[1], |reply| ShardRequest::StageChunk {
+                range: CHUNK0,
+                from: ShardId(0),
+                docs: rep.docs,
+                reply,
+            })
+            .unwrap()
+            .unwrap();
+            batches += 1;
+        }
+        if rep.done {
+            break;
+        }
+        if let Some(mx) = max_batches {
+            if batches >= mx {
+                break;
+            }
+        }
+    }
+    staged
+}
+
+#[test]
+fn kill_during_migration_stream_rolls_back_without_dup_or_loss() {
+    let roots = mig_roots("mig-stream");
+    {
+        let cluster = mig_cluster(&roots);
+        let client = cluster.client();
+        client.insert_many((0..600).map(mig_doc).collect()).unwrap();
+        // Kill mid-stream: three 64-doc batches staged, no commit.
+        let staged = stream_batches(&cluster, 64, Some(3));
+        assert_eq!(staged, 192);
+        cluster.shutdown();
+    }
+    {
+        // Restart: reconciliation must roll the uncommitted staging
+        // back — the donor still owns every document.
+        let cluster = mig_cluster(&roots);
+        assert_eq!(
+            cluster.metrics().counter("cluster.migrations_rolled_back").get(),
+            1
+        );
+        let client = cluster.client();
+        assert_eq!(client.count_documents(Filter::True).unwrap(), 600);
+        let stats = cluster.stats();
+        assert_eq!(stats.per_shard_docs, vec![600, 0], "partial copy must be dropped");
+        for s in cluster.shard_stats() {
+            assert_eq!(s.staged_docs, 0);
+        }
+        cluster.shutdown();
+    }
+    {
+        // Reconciliation is idempotent: a third job finds nothing to do.
+        let cluster = mig_cluster(&roots);
+        assert_eq!(
+            cluster.metrics().counter("cluster.migrations_rolled_back").get(),
+            0
+        );
+        assert_eq!(cluster.client().count_documents(Filter::True).unwrap(), 600);
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn kill_between_commit_marker_and_source_delete_rolls_forward() {
+    let roots = mig_roots("mig-marker");
+    {
+        let cluster = mig_cluster(&roots);
+        let client = cluster.client();
+        client.insert_many((0..500).map(mig_doc).collect()).unwrap();
+        let staged = stream_batches(&cluster, 128, None);
+        assert_eq!(staged, 500);
+        // The durable commit marker — the roll-forward point — then the
+        // kill lands before the source delete ever runs.
+        let n = rpc(&cluster.shard_mailboxes()[1], |reply| ShardRequest::CommitStaged {
+            reply,
+        })
+        .unwrap()
+        .unwrap();
+        assert_eq!(n, 500);
+        cluster.shutdown();
+    }
+    {
+        let cluster = mig_cluster(&roots);
+        assert_eq!(cluster.metrics().counter("cluster.migrations_recovered").get(), 1);
+        let client = cluster.client();
+        assert_eq!(
+            client.count_documents(Filter::True).unwrap(),
+            500,
+            "roll-forward must neither lose nor duplicate"
+        );
+        let stats = cluster.stats();
+        assert_eq!(stats.per_shard_docs, vec![0, 500], "data must end on the destination");
+        let shard_stats = cluster.shard_stats();
+        assert_eq!(shard_stats[1].staged_docs, 0);
+        // The recovery's source delete carries the triggered compaction:
+        // the moved-away documents left the donor's journal too.
+        assert_eq!(
+            shard_stats[0].journal_disk_bytes, 0,
+            "post-delete compaction must truncate the donor journal"
+        );
+        cluster.shutdown();
+    }
+    {
+        let cluster = mig_cluster(&roots);
+        assert_eq!(cluster.metrics().counter("cluster.migrations_recovered").get(), 0);
+        assert_eq!(cluster.client().count_documents(Filter::True).unwrap(), 500);
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn kill_between_source_delete_and_publish_rolls_forward() {
+    let roots = mig_roots("mig-delete");
+    {
+        let cluster = mig_cluster(&roots);
+        let client = cluster.client();
+        client.insert_many((0..400).map(mig_doc).collect()).unwrap();
+        assert_eq!(stream_batches(&cluster, 100, None), 400);
+        let shards = cluster.shard_mailboxes();
+        rpc(&shards[1], |reply| ShardRequest::CommitStaged { reply })
+            .unwrap()
+            .unwrap();
+        // The source delete runs (one atomic remove_many frame +
+        // compaction), then the kill lands before the publish.
+        let del = rpc(&shards[0], |reply| ShardRequest::DeleteChunk {
+            range: CHUNK0,
+            compact: true,
+            reply,
+        })
+        .unwrap()
+        .unwrap();
+        assert_eq!(del.removed, 400);
+        assert!(del.compacted.is_some());
+        cluster.shutdown();
+    }
+    {
+        let cluster = mig_cluster(&roots);
+        let client = cluster.client();
+        assert_eq!(
+            client.count_documents(Filter::True).unwrap(),
+            400,
+            "the staged copy is the only copy — publish must finish"
+        );
+        assert_eq!(cluster.stats().per_shard_docs, vec![0, 400]);
+        for s in cluster.shard_stats() {
+            assert_eq!(s.staged_docs, 0);
+        }
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn kill_during_post_delete_compaction_recovers_exactly() {
+    let roots = mig_roots("mig-compact");
+    {
+        let cluster = mig_cluster(&roots);
+        let client = cluster.client();
+        client.insert_many((0..300).map(mig_doc).collect()).unwrap();
+        assert_eq!(stream_batches(&cluster, 64, None), 300);
+        let shards = cluster.shard_mailboxes();
+        rpc(&shards[1], |reply| ShardRequest::CommitStaged { reply })
+            .unwrap()
+            .unwrap();
+        // The range delete is durable (compact: false), and the kill
+        // lands while the post-delete compaction is staging its
+        // checkpoint file.
+        let del = rpc(&shards[0], |reply| ShardRequest::DeleteChunk {
+            range: CHUNK0,
+            compact: false,
+            reply,
+        })
+        .unwrap()
+        .unwrap();
+        assert_eq!(del.removed, 300);
+        cluster.shutdown();
+    }
+    std::fs::write(
+        Path::new(&roots[0]).join("store.ckpt.tmp"),
+        b"HPCCKPT3\x00partial compaction garbage from a dying writer",
+    )
+    .unwrap();
+    {
+        let cluster = mig_cluster(&roots);
+        let client = cluster.client();
+        assert_eq!(client.count_documents(Filter::True).unwrap(), 300);
+        assert_eq!(cluster.stats().per_shard_docs, vec![0, 300]);
+        assert!(
+            !Path::new(&roots[0]).join("store.ckpt.tmp").exists(),
+            "recovery must discard the partial compaction staging file"
+        );
+        cluster.shutdown();
+    }
 }
