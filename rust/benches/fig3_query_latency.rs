@@ -1,11 +1,20 @@
 //! F3 — regenerate Figure 3: concurrent conditional-find latency vs
-//! cluster size.
+//! cluster size, plus the read-path axis.
 //!
 //! Paper: "cluster size maintains a similar query performance for
 //! various MongoDB cluster sizes ... each cluster size is servicing
 //! more concurrent quarries" (32 nodes → up to 64 concurrent finds,
 //! 64 → up to 128, and so on). The DES scales concurrency with client
 //! PEs and the latency distribution should stay roughly flat.
+//!
+//! The second DES table sweeps the **read-path regimes** at one cluster
+//! size: the pre-overhaul single-index plan with a decode per candidate,
+//! the raw (zero-copy) matcher over the same plan, and the compound
+//! `(node_id, ts)` plan where candidates == matches. The live
+//! cross-check runs the same sweep on a real mini-cluster and reads the
+//! planner/decode counters (`shard.find_candidates` vs
+//! `shard.find_matches`, `shard.find_decodes`) so the candidate ratio
+//! and decode-per-result are visible, not inferred.
 
 use hpcstore::benchkit::{quick_mode, Report};
 use hpcstore::config::WorkloadConfig;
@@ -37,10 +46,35 @@ fn main() {
     report.print();
     println!("\npaper: similar latency across cluster sizes despite proportional concurrency — shape reproduced\n");
 
+    // Read-path axis (DES, 64 nodes): what the compound plan and the
+    // raw matcher each buy on the canonical shape.
+    let mut axis = Report::new("Figure 3b — read-path axis (DES, 64 nodes)");
+    axis.set_custom(
+        ["plan", "finds/s", "p50", "p95", "p99"].iter().map(|s| s.to_string()).collect(),
+    );
+    for (label, compound, raw) in [
+        ("single-index + decode per candidate (pre-overhaul)", false, false),
+        ("single-index + raw matcher", false, true),
+        ("compound (node_id, ts) + raw (current)", true, true),
+    ] {
+        let mut spec = SimSpec::paper_preset(64, cost.clone()).unwrap();
+        spec.compound_index = compound;
+        spec.raw_match = raw;
+        let r = ClusterSim::new(spec).run();
+        axis.add_row(vec![
+            label.to_string(),
+            format!("{:.1}", r.queries_per_sec),
+            human_duration_ns(r.query_latency.p50()),
+            human_duration_ns(r.query_latency.p95()),
+            human_duration_ns(r.query_latency.p99()),
+        ]);
+    }
+    axis.print();
+
     if quick_mode() {
         return;
     }
-    // Live cross-check: one cluster, concurrency sweep.
+    // Live cross-check 1: one cluster, concurrency sweep.
     let kernels = Kernels::load_or_fallback("artifacts");
     let cluster = Cluster::start(
         ClusterSpec::small(3, 2),
@@ -50,8 +84,7 @@ fn main() {
     )
     .unwrap();
     let client = cluster.client();
-    client.create_index(IndexSpec::single("ts")).unwrap();
-    client.create_index(IndexSpec::single("node_id")).unwrap();
+    client.create_index(IndexSpec::compound(&["node_id", "ts"])).unwrap();
     let wl = WorkloadConfig {
         monitored_nodes: 128,
         metrics_per_doc: 20,
@@ -83,4 +116,64 @@ fn main() {
     }
     live.print();
     cluster.shutdown();
+
+    // Live cross-check 2: index-plan sweep on identical corpora. The
+    // candidate ratio and decode count come from the shard counters —
+    // compound must show candidates == matches and one decode per
+    // returned document.
+    let mut plans = Report::new("Figure 3c — live read-path sweep (plan vs overscan vs decodes)");
+    plans.set_custom(
+        ["indexes", "finds/s", "p50", "cand/match", "decodes/doc"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
+    let cases: Vec<(&str, Vec<IndexSpec>)> = vec![
+        (
+            "ts + node_id singles (intersection)",
+            vec![IndexSpec::single("ts"), IndexSpec::single("node_id")],
+        ),
+        ("compound (node_id, ts)", vec![IndexSpec::compound(&["node_id", "ts"])]),
+    ];
+    for (label, specs) in cases {
+        let metrics = Registry::new();
+        let cluster = Cluster::start(
+            ClusterSpec::small(2, 1),
+            |sid| Ok(Box::new(LocalDir::temp(&format!("f3c-{sid}"))?)),
+            Kernels::fallback(),
+            metrics.clone(),
+        )
+        .unwrap();
+        let client = cluster.client();
+        for spec in &specs {
+            client.create_index(spec.clone()).unwrap();
+        }
+        let wl = WorkloadConfig {
+            monitored_nodes: 128,
+            metrics_per_doc: 20,
+            days: 20.0 / 1440.0,
+            query_jobs: 16,
+            ..Default::default()
+        };
+        IngestDriver::new(OvisGenerator::new(wl.clone()), 1000, 2)
+            .run(&client)
+            .unwrap();
+        let before_cand = metrics.counter("shard.find_candidates").get();
+        let before_match = metrics.counter("shard.find_matches").get();
+        let before_dec = metrics.counter("shard.find_decodes").get();
+        let rep = QueryDriver::new(generate_jobs(&wl), 4).run(&client).unwrap();
+        assert_eq!(rep.count_mismatches, 0);
+        let cand = metrics.counter("shard.find_candidates").get() - before_cand;
+        let matched = metrics.counter("shard.find_matches").get() - before_match;
+        let decodes = metrics.counter("shard.find_decodes").get() - before_dec;
+        plans.add_row(vec![
+            label.to_string(),
+            format!("{:.1}", rep.queries_per_sec()),
+            human_duration_ns(rep.latency.p50()),
+            format!("{:.3}", cand as f64 / matched.max(1) as f64),
+            format!("{:.3}", decodes as f64 / rep.docs_returned.max(1) as f64),
+        ]);
+        cluster.shutdown();
+    }
+    plans.print();
 }

@@ -82,7 +82,7 @@ fn main() {
             let hi = Value::Int(start + (i % 4) + 1);
             i += 1;
             let idx = eng_ref.index("m", "ts_1").unwrap();
-            std::hint::black_box(idx.range_superset(Some(&lo), Some(&hi)));
+            std::hint::black_box(idx.range_superset(Some(&lo), Some(&hi)).count());
         }));
         let mut j = 0u64;
         report.push(bench.run("record fetch+decode", 1.0, move || {

@@ -173,6 +173,12 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let client = dep.client_from_hostfile()?;
     client.create_index(IndexSpec::single("ts")).map_err(anyhow::Error::msg)?;
     client.create_index(IndexSpec::single("node_id")).map_err(anyhow::Error::msg)?;
+    // The compound (node_id, ts) index serves the canonical query as
+    // one bounded range scan per node (candidates == matches); the
+    // singles stay as sort/fallback paths.
+    client
+        .create_index(IndexSpec::compound(&["node_id", "ts"]))
+        .map_err(anyhow::Error::msg)?;
 
     let wl = WorkloadConfig {
         monitored_nodes: monitored,

@@ -278,6 +278,277 @@ fn encode_value(v: &Value, out: &mut Vec<u8>) {
     }
 }
 
+/// A zero-copy view over one *encoded* document.
+///
+/// The read path stores records as encoded bytes; most of them are only
+/// ever probed for a field or two (`ts`, `node_id`) by the matcher or
+/// the kernel column extraction. `RawDoc` seeks a named field by
+/// skip-scanning the tag-prefixed encoding — no allocation, no
+/// materialized [`Document`] — and decodes a value lazily only when the
+/// caller actually looks at it.
+///
+/// Invariants (documented in docs/ARCHITECTURE.md §7):
+/// * The view never panics on malformed bytes: a seek over bytes not
+///   produced by [`Document::encode`] simply yields `None` (the engine
+///   only stores encoder output, so this is belt-and-braces).
+/// * `get` returns the *first* field of that name, matching
+///   [`Document::get`] (the encoder never emits duplicates).
+/// * `decode`/`project` are the only materialization points; everything
+///   else borrows from the underlying buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct RawDoc<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> RawDoc<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes }
+    }
+
+    /// The underlying encoded bytes.
+    pub fn bytes(&self) -> &'a [u8] {
+        self.bytes
+    }
+
+    /// Field count from the header (0 when the header is malformed).
+    pub fn field_count(&self) -> usize {
+        match self.bytes {
+            [a, b, ..] => u16::from_le_bytes([*a, *b]) as usize,
+            _ => 0,
+        }
+    }
+
+    /// Seek `name` and return a lazy view of its value.
+    pub fn get(&self, name: &str) -> Option<RawValue<'a>> {
+        let b = self.bytes;
+        let mut pos = 2usize;
+        for _ in 0..self.field_count() {
+            let nlen = *b.get(pos)? as usize;
+            pos += 1;
+            let fname = b.get(pos..pos + nlen)?;
+            pos += nlen;
+            if fname == name.as_bytes() {
+                return raw_value_at(b, pos).map(|(v, _)| v);
+            }
+            pos = skip_value(b, pos)?;
+        }
+        None
+    }
+
+    pub fn get_i64(&self, name: &str) -> Option<i64> {
+        self.get(name)?.as_i64()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name)?.as_f64()
+    }
+
+    /// Materialize the full document — the serve path's one decode.
+    pub fn decode(&self) -> Result<Document> {
+        Document::decode(self.bytes)
+    }
+
+    /// Decode only the named fields, in document order: the projection
+    /// path materializes exactly what it returns. Malformed bytes yield
+    /// the fields decoded so far.
+    pub fn project(&self, names: &[String]) -> Document {
+        let b = self.bytes;
+        let mut out = Document::new();
+        let mut pos = 2usize;
+        for _ in 0..self.field_count() {
+            let Some(&nlen) = b.get(pos) else { return out };
+            let nlen = nlen as usize;
+            pos += 1;
+            let Some(fname) = b.get(pos..pos + nlen) else { return out };
+            pos += nlen;
+            if names.iter().any(|n| n.as_bytes() == fname) {
+                let Some((v, next)) = raw_value_at(b, pos) else { return out };
+                if let (Ok(name), Some(value)) =
+                    (std::str::from_utf8(fname), v.to_value())
+                {
+                    out.put(name, value);
+                }
+                pos = next;
+            } else {
+                let Some(next) = skip_value(b, pos) else { return out };
+                pos = next;
+            }
+        }
+        out
+    }
+}
+
+/// A lazily decoded value inside a [`RawDoc`]: scalars are read in
+/// place; arrays and nested documents keep their encoded bytes and
+/// materialize only if actually compared against a container or
+/// projected.
+#[derive(Clone, Copy, Debug)]
+pub enum RawValue<'a> {
+    Null,
+    Bool(bool),
+    Int(i64),
+    F64(f64),
+    Str(&'a str),
+    /// Encoded array (tag byte included), materialized on demand.
+    Array(&'a [u8]),
+    /// Encoded nested document (tag byte included), materialized on
+    /// demand.
+    Doc(&'a [u8]),
+}
+
+impl<'a> RawValue<'a> {
+    /// Same type classes as [`Value::type_rank`].
+    pub fn type_rank(&self) -> u8 {
+        match self {
+            RawValue::Null => 0,
+            RawValue::Bool(_) => 1,
+            RawValue::Int(_) | RawValue::F64(_) => 2,
+            RawValue::Str(_) => 3,
+            RawValue::Array(_) => 4,
+            RawValue::Doc(_) => 5,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            RawValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            RawValue::F64(f) => Some(*f),
+            RawValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Materialize into an owned [`Value`] (`None` only for malformed
+    /// nested payloads).
+    pub fn to_value(&self) -> Option<Value> {
+        Some(match self {
+            RawValue::Null => Value::Null,
+            RawValue::Bool(b) => Value::Bool(*b),
+            RawValue::Int(i) => Value::Int(*i),
+            RawValue::F64(f) => Value::F64(*f),
+            RawValue::Str(s) => Value::Str((*s).to_string()),
+            RawValue::Array(bytes) | RawValue::Doc(bytes) => {
+                let mut cur = Cursor { bytes: *bytes, pos: 0 };
+                let v = decode_value(&mut cur).ok()?;
+                if cur.pos != bytes.len() {
+                    return None;
+                }
+                v
+            }
+        })
+    }
+
+    /// [`Value::cmp_total`] with the raw side on the left. Scalars
+    /// compare in place; containers materialize only when both sides
+    /// are the same type class (cross-class ordering needs no decode).
+    pub fn cmp_total(&self, other: &Value) -> std::cmp::Ordering {
+        use std::cmp::Ordering::*;
+        let (ra, rb) = (self.type_rank(), other.type_rank());
+        if ra != rb {
+            return ra.cmp(&rb);
+        }
+        match (self, other) {
+            (RawValue::Null, _) => Equal,
+            (RawValue::Bool(a), Value::Bool(b)) => a.cmp(b),
+            (a, b) if ra == 2 => {
+                let (x, y) = (a.as_f64().unwrap(), b.as_f64().unwrap());
+                x.partial_cmp(&y).unwrap_or(Equal)
+            }
+            (RawValue::Str(a), Value::Str(b)) => (*a).cmp(b.as_str()),
+            _ => match self.to_value() {
+                Some(v) => v.cmp_total(other),
+                // Malformed nested payload: mirror cmp_total's NaN
+                // posture and treat as Equal within the class.
+                None => Equal,
+            },
+        }
+    }
+}
+
+/// Lazily view the value whose tag byte sits at `pos`; returns the view
+/// and the offset just past the value.
+fn raw_value_at(b: &[u8], pos: usize) -> Option<(RawValue<'_>, usize)> {
+    let tag = *b.get(pos)?;
+    let start = pos;
+    let pos = pos + 1;
+    Some(match tag {
+        0 => (RawValue::Null, pos),
+        1 => (RawValue::Bool(*b.get(pos)? != 0), pos + 1),
+        2 => (
+            RawValue::Int(i64::from_le_bytes(b.get(pos..pos + 8)?.try_into().ok()?)),
+            pos + 8,
+        ),
+        3 => (
+            RawValue::F64(f64::from_le_bytes(b.get(pos..pos + 8)?.try_into().ok()?)),
+            pos + 8,
+        ),
+        4 => {
+            let len = u32::from_le_bytes(b.get(pos..pos + 4)?.try_into().ok()?) as usize;
+            let s = std::str::from_utf8(b.get(pos + 4..pos + 4 + len)?).ok()?;
+            (RawValue::Str(s), pos + 4 + len)
+        }
+        5 => {
+            let end = skip_value(b, start)?;
+            (RawValue::Array(&b[start..end]), end)
+        }
+        6 => {
+            let end = skip_value(b, start)?;
+            (RawValue::Doc(&b[start..end]), end)
+        }
+        _ => return None,
+    })
+}
+
+/// Offset just past the value whose tag byte sits at `pos` (`None` on
+/// malformed bytes) — the skip half of the skip-scan.
+fn skip_value(b: &[u8], pos: usize) -> Option<usize> {
+    let tag = *b.get(pos)?;
+    let pos = pos + 1;
+    Some(match tag {
+        0 => pos,
+        1 => {
+            b.get(pos)?;
+            pos + 1
+        }
+        2 | 3 => {
+            b.get(pos..pos + 8)?;
+            pos + 8
+        }
+        4 => {
+            let len = u32::from_le_bytes(b.get(pos..pos + 4)?.try_into().ok()?) as usize;
+            b.get(pos + 4..pos + 4 + len)?;
+            pos + 4 + len
+        }
+        5 => {
+            let count = u16::from_le_bytes(b.get(pos..pos + 2)?.try_into().ok()?) as usize;
+            let mut p = pos + 2;
+            for _ in 0..count {
+                p = skip_value(b, p)?;
+            }
+            p
+        }
+        6 => {
+            let count = u16::from_le_bytes(b.get(pos..pos + 2)?.try_into().ok()?) as usize;
+            let mut p = pos + 2;
+            for _ in 0..count {
+                let nlen = *b.get(p)? as usize;
+                p += 1;
+                b.get(p..p + nlen)?;
+                p += nlen;
+                p = skip_value(b, p)?;
+            }
+            p
+        }
+        _ => return None,
+    })
+}
+
 struct Cursor<'a> {
     bytes: &'a [u8],
     pos: usize,
@@ -412,6 +683,85 @@ mod tests {
         assert!(Document::decode(&ok).is_err());
         // Unknown tag.
         assert!(Document::decode(&[1, 0, 1, b'a', 99]).is_err());
+    }
+
+    #[test]
+    fn raw_doc_seeks_fields_without_decoding() {
+        let d = sample();
+        let enc = d.encode();
+        let raw = RawDoc::new(&enc);
+        assert_eq!(raw.field_count(), d.len());
+        assert_eq!(raw.get_i64("ts"), Some(25_246_080));
+        assert_eq!(raw.get_i64("node_id"), Some(1234));
+        assert_eq!(raw.get_f64("cpu_user"), Some(0.37));
+        assert!(matches!(raw.get("hostname"), Some(RawValue::Str("nid01234"))));
+        assert!(matches!(raw.get("none"), Some(RawValue::Null)));
+        assert!(raw.get("missing").is_none());
+        // Containers materialize lazily and exactly.
+        assert_eq!(raw.get("flags").unwrap().to_value().as_ref(), d.get("flags"));
+        assert_eq!(raw.get("nested").unwrap().to_value().as_ref(), d.get("nested"));
+        // Full decode round-trips.
+        assert_eq!(raw.decode().unwrap(), d);
+    }
+
+    #[test]
+    fn raw_projection_matches_document_projection() {
+        let d = sample();
+        let enc = d.encode();
+        let names: Vec<String> =
+            ["ts", "hostname", "nested", "missing"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(RawDoc::new(&enc).project(&names), d.project(&names));
+        // Empty projection.
+        assert_eq!(RawDoc::new(&enc).project(&[]), Document::new());
+    }
+
+    #[test]
+    fn raw_cmp_total_agrees_with_value_cmp_total() {
+        use std::cmp::Ordering;
+        let d = sample();
+        let enc = d.encode();
+        let raw = RawDoc::new(&enc);
+        for (name, _) in &d.fields {
+            let rv = raw.get(name).unwrap();
+            let dv = d.get(name).unwrap();
+            assert_eq!(rv.type_rank(), dv.type_rank(), "{name}");
+            // Against every field value of the same document — covers
+            // same-class and cross-class comparisons.
+            for (_, other) in &d.fields {
+                assert_eq!(rv.cmp_total(other), dv.cmp_total(other), "{name} vs {other:?}");
+            }
+        }
+        // Numeric cross-type through the raw side.
+        let n = Document::new().set("x", 2i64).encode();
+        let rx = RawDoc::new(&n).get("x").unwrap();
+        assert_eq!(rx.cmp_total(&Value::F64(2.0)), Ordering::Equal);
+        assert_eq!(rx.cmp_total(&Value::F64(2.5)), Ordering::Less);
+        assert_eq!(rx.cmp_total(&Value::Str("a".into())), Ordering::Less);
+    }
+
+    #[test]
+    fn raw_doc_tolerates_garbage() {
+        // Truncated, empty, and corrupt-tag buffers must yield None,
+        // never panic.
+        for bytes in [
+            &[][..],
+            &[1][..],
+            &[1, 0][..],                 // count=1, no field
+            &[1, 0, 3, b'a'][..],        // name overruns
+            &[1, 0, 1, b'a', 99][..],    // unknown tag
+            &[1, 0, 1, b'a', 2, 1][..],  // i64 payload truncated
+        ] {
+            let raw = RawDoc::new(bytes);
+            assert!(raw.get("a").is_none(), "{bytes:?}");
+            assert!(raw.get_i64("a").is_none());
+        }
+        // A valid prefix followed by a torn second field: the first
+        // field still resolves, the torn one does not.
+        let mut enc = Document::new().set("a", 7i64).set("b", 8i64).encode();
+        enc.truncate(enc.len() - 4);
+        let raw = RawDoc::new(&enc);
+        assert_eq!(raw.get_i64("a"), Some(7));
+        assert!(raw.get("b").is_none());
     }
 
     #[test]

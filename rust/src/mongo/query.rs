@@ -7,7 +7,7 @@
 
 use std::cmp::Ordering;
 
-use super::bson::{Document, Value};
+use super::bson::{Document, RawDoc, Value};
 
 /// Comparison operator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,6 +96,34 @@ impl Filter {
             },
             Filter::And(fs) => fs.iter().all(|f| f.matches(doc)),
             Filter::Or(fs) => fs.iter().any(|f| f.matches(doc)),
+        }
+    }
+
+    /// [`Filter::matches`] evaluated against the *encoded* record
+    /// bytes: fields are sought with [`RawDoc::get`] (a skip-scan), so
+    /// a rejected candidate costs no allocation and no full
+    /// [`Document`] decode. Agrees with `matches` on every
+    /// document/filter pair — sealed by the differential property test
+    /// `raw_matcher_agrees_with_decoded_matcher` below.
+    pub fn matches_raw(&self, doc: &RawDoc) -> bool {
+        match self {
+            Filter::True => true,
+            Filter::Cmp { field, op, value } => match doc.get(field) {
+                Some(v) if v.type_rank() == value.type_rank() => {
+                    op.eval(v.cmp_total(value))
+                }
+                Some(v) => {
+                    // Cross-class comparison only meaningful for $ne.
+                    *op == CmpOp::Ne && v.cmp_total(value) != Ordering::Equal
+                }
+                None => false,
+            },
+            Filter::In { field, values } => match doc.get(field) {
+                Some(v) => values.iter().any(|w| v.cmp_total(w) == Ordering::Equal),
+                None => false,
+            },
+            Filter::And(fs) => fs.iter().all(|f| f.matches_raw(doc)),
+            Filter::Or(fs) => fs.iter().any(|f| f.matches_raw(doc)),
         }
     }
 
@@ -330,5 +358,109 @@ mod tests {
     #[test]
     fn true_matches_everything() {
         assert!(Filter::True.matches(&Document::new()));
+    }
+
+    #[test]
+    fn raw_matcher_matches_the_papers_shape() {
+        let f = Filter::and(vec![
+            Filter::is_in("node_id", vec![Value::Int(4), Value::Int(5)]),
+            Filter::cmp("ts", CmpOp::Gte, 1000i64),
+            Filter::cmp("ts", CmpOp::Lt, 2000i64),
+        ]);
+        for (ts, node, want) in
+            [(1500, 4, true), (2500, 4, false), (1500, 6, false), (2000, 5, false)]
+        {
+            let enc = doc(ts, node).encode();
+            assert_eq!(f.matches_raw(&RawDoc::new(&enc)), want, "ts={ts} node={node}");
+        }
+    }
+
+    /// Differential property: the raw-bytes evaluator and the decoded
+    /// matcher must agree on randomized document/filter pairs covering
+    /// every operator, type class (incl. containers), missing fields,
+    /// and cross-class comparisons.
+    #[test]
+    fn raw_matcher_agrees_with_decoded_matcher() {
+        use crate::testing::{check_with, gens, Gen};
+        use crate::util::rng::Pcg32;
+
+        const FIELDS: [&str; 5] = ["ts", "node_id", "name", "load", "extra"];
+
+        fn rand_value(rng: &mut Pcg32, depth: u32) -> Value {
+            match rng.next_bounded(if depth == 0 { 7 } else { 5 }) {
+                0 => Value::Null,
+                1 => Value::Bool(rng.next_bounded(2) == 1),
+                2 => Value::Int(rng.next_bounded(20) as i64 - 10),
+                3 => Value::F64((rng.next_f64() - 0.5) * 8.0),
+                4 => Value::Str(gens::ident(4).generate(rng)),
+                5 => Value::Array(
+                    (0..rng.next_bounded(3)).map(|_| rand_value(rng, depth + 1)).collect(),
+                ),
+                _ => {
+                    let mut d = Document::new();
+                    for i in 0..rng.next_bounded(3) {
+                        d.put(&format!("k{i}"), rand_value(rng, depth + 1));
+                    }
+                    Value::Doc(d)
+                }
+            }
+        }
+
+        fn rand_doc(rng: &mut Pcg32) -> Document {
+            let mut d = Document::new();
+            for f in FIELDS {
+                // Leave some fields missing so absent-field semantics
+                // are exercised.
+                if rng.next_bounded(4) > 0 {
+                    d.put(f, rand_value(rng, 0));
+                }
+            }
+            d
+        }
+
+        fn rand_filter(rng: &mut Pcg32, depth: u32) -> Filter {
+            let field = FIELDS[rng.next_bounded(FIELDS.len() as u32) as usize];
+            match rng.next_bounded(if depth == 0 { 9 } else { 7 }) {
+                0 => Filter::True,
+                1 => Filter::cmp(field, CmpOp::Eq, rand_value(rng, 1)),
+                2 => Filter::cmp(field, CmpOp::Ne, rand_value(rng, 1)),
+                3 => Filter::cmp(field, CmpOp::Gt, rand_value(rng, 1)),
+                4 => Filter::cmp(field, CmpOp::Gte, rand_value(rng, 1)),
+                5 => Filter::cmp(field, CmpOp::Lt, rand_value(rng, 1)),
+                6 => Filter::cmp(field, CmpOp::Lte, rand_value(rng, 1)),
+                7 => Filter::Or(
+                    (0..1 + rng.next_bounded(3))
+                        .map(|_| rand_filter(rng, depth + 1))
+                        .collect(),
+                ),
+                _ => Filter::is_in(
+                    field,
+                    (0..rng.next_bounded(4)).map(|_| rand_value(rng, 1)).collect(),
+                ),
+            }
+        }
+
+        check_with(
+            "raw-matcher-differential",
+            0xBEEF,
+            512,
+            &(|rng: &mut Pcg32| {
+                let doc = rand_doc(rng);
+                let conjuncts = (1..=1 + rng.next_bounded(3))
+                    .map(|_| rand_filter(rng, 0))
+                    .collect();
+                (doc, Filter::And(conjuncts))
+            }),
+            |(doc, filter)| {
+                let enc = doc.encode();
+                let decoded = filter.matches(doc);
+                let raw = filter.matches_raw(&RawDoc::new(&enc));
+                if decoded == raw {
+                    Ok(())
+                } else {
+                    Err(format!("decoded {decoded} != raw {raw}"))
+                }
+            },
+        );
     }
 }

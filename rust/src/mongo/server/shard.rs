@@ -2,23 +2,35 @@
 //! filesystem directory, serves inserts/finds for the chunks it owns,
 //! triggers chunk splits, and participates in migrations.
 //!
-//! Query planning per shard:
-//! 1. `$in` on an indexed field → point lookups per value, residual
-//!    matcher on fetched docs.
-//! 2. range on an indexed field → index range scan; when the query is
-//!    the paper's canonical shape (ts range + node-id set) the candidate
-//!    columns are run through the AOT **filter kernel** instead of the
-//!    scalar matcher.
-//! 3. otherwise → full collection scan + matcher.
+//! Query planning per shard (decision tree in docs/ARCHITECTURE.md §7):
+//! 1. `$in` on node_id + the `(node_id, ts)` **compound index** → one
+//!    bounded range scan per node value; candidates ≈ matches (exactly
+//!    equal for the paper's canonical shape, whose `$lt` upper bound is
+//!    known exclusive).
+//! 2. `$in` on a single-field node_id index → point lookups; a ts range
+//!    with its own index intersects, building the probe set from the
+//!    smaller side.
+//! 3. range on an indexed field → index range scan.
+//! 4. otherwise → full collection scan.
+//!
+//! Candidates are **raw-matched** against the encoded record bytes
+//! ([`RawDoc`]) — a rejected candidate never materializes a
+//! [`Document`]; the canonical shape instead runs its (ts, node_id)
+//! columns through the AOT **filter kernel**, extracted raw. Matching
+//! records decode exactly once, when served (counted in
+//! `shard.find_decodes`). Cursors stream from a resumable scan position
+//! (index key or record id) instead of a fully materialized rid vector,
+//! so sorted-limit queries cut the scan off early.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::mongo::bson::{Document, Value};
-use crate::mongo::query::{Filter, FindOptions};
+use crate::mongo::bson::{Document, RawDoc, Value};
+use crate::mongo::query::{Filter, FindOptions, SortDir};
 use crate::mongo::sharding::chunk::ChunkMap;
 use crate::mongo::sharding::migration::STAGING_COLLECTION;
+use crate::mongo::storage::index::{encode_key, EncodedRange, Index};
 use crate::mongo::storage::{Engine, EngineOptions, RecordId, StorageDir};
 use crate::mongo::wire::{
     rpc, ConfigRequest, DeleteChunkReply, FindReply, InsertReply, MigrateBatchReply,
@@ -32,12 +44,108 @@ use crate::util::ids::ShardId;
 /// single OVIS metrics collection).
 pub const COLLECTION: &str = "metrics";
 
-struct CursorState {
-    rids: Vec<RecordId>,
+/// Index names the planner recognizes.
+const COMPOUND_INDEX: &str = "node_id_1_ts_1";
+const TS_INDEX: &str = "ts_1";
+const NODE_INDEX: &str = "node_id_1";
+
+/// Keys/rids pulled into a streaming cursor per refill step — bounds
+/// the work between mailbox turns without per-key round trips.
+const SCAN_RUN: usize = 256;
+
+/// One access path chosen by the planner.
+enum ScanPlan {
+    /// Materialized candidate rids (the index-intersection fallback and
+    /// point-lookup plans); the residual matcher still runs.
+    Rids(Vec<RecordId>),
+    /// Resumable scan over `index`: encoded `[lo, hi)` ranges walked in
+    /// order, yielding rids in index-key order. `rev` walks each range
+    /// descending (the builder orders `ranges` to match the overall
+    /// direction; every `rev` plan today is single-range).
+    Index { index: String, ranges: Vec<EncodedRange>, rev: bool },
+    /// Resumable full-collection scan in record-id order.
+    Table,
+}
+
+/// A streaming scan position: plan + residual filter + resume state.
+/// The position is a *key* (or record id), not an iterator, so the
+/// store may mutate between getMores (concurrent ingest) and the scan
+/// resumes correctly after it.
+struct ScanCursor {
+    plan: ScanPlan,
+    /// Residual filter, evaluated raw per candidate.
+    filter: Filter,
+    /// Current range within an `Index` plan.
+    range_idx: usize,
+    /// Last fully consumed key (`Index` plans) — the resume point.
+    after_key: Option<Vec<u8>>,
+    /// Last consumed record id (`Table` plans).
+    after_rid: Option<RecordId>,
+    /// Consumed prefix of a `Rids` plan.
     pos: usize,
+    /// Candidates pulled from the plan, awaiting the matcher.
+    pending: VecDeque<RecordId>,
+    /// The underlying scan is exhausted (pending may still hold rids).
+    done: bool,
+    /// Candidates examined / matched since the last metrics flush —
+    /// batched locally so the hot loop takes no registry locks.
+    seen: u64,
+    matched: u64,
+}
+
+impl ScanCursor {
+    fn new(plan: ScanPlan, filter: Filter) -> Self {
+        Self {
+            plan,
+            filter,
+            range_idx: 0,
+            after_key: None,
+            after_rid: None,
+            pos: 0,
+            pending: VecDeque::new(),
+            done: false,
+            seen: 0,
+            matched: 0,
+        }
+    }
+}
+
+/// Where an open cursor's documents come from.
+enum CursorSource {
+    /// Matched rids known up front (the kernel fast path).
+    Rids { rids: Vec<RecordId>, pos: usize },
+    /// Documents materialized at plan time (non-indexed sort fallback:
+    /// decoded once, sorted, projected, served from memory).
+    Docs { buf: VecDeque<Document> },
+    /// Streaming: candidates pulled lazily from a resumable scan,
+    /// raw-matched, decoded only when served.
+    Scan(ScanCursor),
+}
+
+struct CursorState {
+    src: CursorSource,
     projection: Option<Vec<String>>,
     batch: usize,
     remaining: Option<usize>,
+}
+
+/// Decode one raw record for the reply — the read path's only full
+/// materialization (projections decode just the projected fields). The
+/// caller counts it into `shard.find_decodes`.
+fn materialize(raw: &[u8], projection: Option<&[String]>) -> Document {
+    let rd = RawDoc::new(raw);
+    match projection {
+        Some(fields) => rd.project(fields),
+        None => rd.decode().expect("corrupt record"),
+    }
+}
+
+fn cursor_exhausted(cur: &CursorState) -> bool {
+    match &cur.src {
+        CursorSource::Rids { rids, pos } => *pos >= rids.len(),
+        CursorSource::Docs { buf } => buf.is_empty(),
+        CursorSource::Scan(scan) => scan.done && scan.pending.is_empty(),
+    }
 }
 
 /// Shard server state + event loop.
@@ -100,14 +208,16 @@ impl ShardServer {
             staged_docs: 0,
         };
         // Rebuild the position histogram from recovered records (second
-        // job re-attaching to persisted Lustre data). Staged migration
-        // documents are not live and never enter the histogram.
-        let recovered: Vec<Document> =
-            s.engine.scan(COLLECTION).map(|(_, d)| d).collect();
-        for doc in &recovered {
-            if let Some(pos) = s.position_of(doc) {
-                *s.positions.entry(pos).or_insert(0) += 1;
-            }
+        // job re-attaching to persisted Lustre data) — raw key-field
+        // probes, no per-record decode. Staged migration documents are
+        // not live and never enter the histogram.
+        let recovered: Vec<u64> = s
+            .engine
+            .scan_raw_from(COLLECTION, None)
+            .filter_map(|(_, raw)| s.position_of_raw(&RawDoc::new(raw)))
+            .collect();
+        for pos in recovered {
+            *s.positions.entry(pos).or_insert(0) += 1;
         }
         // Rebuild migration staging state: a killed migration leaves its
         // staging collection behind, and the cluster's reconciliation
@@ -273,6 +383,15 @@ impl ShardServer {
 
     /// Shard-key position of a document (`None` if key fields missing).
     fn position_of(&self, doc: &Document) -> Option<u64> {
+        let node = doc.get_i64("node_id")? as u32;
+        let ts = doc.get_i64("ts")? as u32;
+        Some(self.map.key.position(node, ts))
+    }
+
+    /// [`Self::position_of`] read straight from encoded record bytes —
+    /// the scans that only need positions (histogram rebuild, range
+    /// deletes, migration batching) never decode whole documents.
+    fn position_of_raw(&self, doc: &RawDoc) -> Option<u64> {
         let node = doc.get_i64("node_id")? as u32;
         let ts = doc.get_i64("ts")? as u32;
         Some(self.map.key.position(node, ts))
@@ -456,73 +575,14 @@ impl ShardServer {
         filter: &Filter,
         opts: &FindOptions,
     ) -> Result<FindReply, WireError> {
-        let candidates: Vec<RecordId> = self.plan_candidates(filter);
-        self.metrics
-            .counter("shard.find_candidates")
-            .add(candidates.len() as u64);
-
-        // Kernel fast path for the canonical shape over index candidates.
-        let rids: Vec<RecordId> = if let Some((lo, hi, nodes)) = Self::canonical_shape(filter) {
-            let max_node = nodes.iter().max().copied().unwrap_or(0);
-            let words = self.kernels.shapes().filter_w;
-            if (max_node as usize) < words * 32 && !nodes.is_empty() {
-                self.metrics.counter("shard.find_kernel_path").inc();
-                let mut ts_col = Vec::with_capacity(candidates.len());
-                let mut node_col = Vec::with_capacity(candidates.len());
-                let mut docs: Vec<(RecordId, Document)> = Vec::with_capacity(candidates.len());
-                for &rid in &candidates {
-                    if let Some(d) = self.engine.fetch(COLLECTION, rid) {
-                        ts_col.push(d.get_i64("ts").unwrap_or(-1).max(0) as u32);
-                        node_col.push(d.get_i64("node_id").unwrap_or(0).max(0) as u32);
-                        docs.push((rid, d));
-                    }
-                }
-                let bitmap = crate::runtime::fallback::build_bitmap(nodes, words);
-                let out = self
-                    .kernels
-                    .filter(&ts_col, &node_col, lo, hi, &bitmap)
-                    .map_err(|e| WireError::Server(e.to_string()))?;
-                docs.iter()
-                    .zip(&out.mask)
-                    .filter(|(_, &m)| m == 1)
-                    .map(|((rid, _), _)| *rid)
-                    .collect()
-            } else {
-                self.matcher_path(&candidates, filter)
-            }
-        } else {
-            self.matcher_path(&candidates, filter)
-        };
-
-        self.metrics.counter("shard.find_matches").add(rids.len() as u64);
+        let src = self.plan_source(filter, opts)?;
         let batch = opts.batch_size.unwrap_or(self.default_batch);
         let mut cur = CursorState {
-            rids,
-            pos: 0,
+            src,
             projection: opts.projection.clone(),
             batch,
             remaining: opts.limit,
         };
-        // Sort: materialize + order by field before serving (only sane
-        // with a limit; workload queries don't sort).
-        if let Some((field, dir)) = &opts.sort {
-            let mut docs: Vec<(RecordId, Document)> = cur
-                .rids
-                .iter()
-                .filter_map(|&r| self.engine.fetch(COLLECTION, r).map(|d| (r, d)))
-                .collect();
-            docs.sort_by(|(_, a), (_, b)| {
-                let o = a
-                    .get(field)
-                    .unwrap_or(&Value::Null)
-                    .cmp_total(b.get(field).unwrap_or(&Value::Null));
-                match dir {
-                    crate::mongo::query::SortDir::Asc => o,
-                    crate::mongo::query::SortDir::Desc => o.reverse(),
-                }
-            });
-            cur.rids = docs.into_iter().map(|(r, _)| r).collect();
-        }
         let reply = self.serve_batch(&mut cur);
         if reply.cursor.is_some() {
             let id = self.next_cursor;
@@ -534,114 +594,446 @@ impl ShardServer {
         }
     }
 
-    /// Choose an access path and produce candidate record ids.
-    fn plan_candidates(&self, filter: &Filter) -> Vec<RecordId> {
-        // 1. $in on indexed node_id → point lookups; when a ts range is
-        // also present and indexed, intersect the two rid sets (index
-        // intersection) so candidates ≈ matches instead of each node's
-        // full history.
-        if let Some(values) = filter.in_values("node_id") {
-            if let Some(idx) = self.engine.index(COLLECTION, "node_id_1") {
-                let mut rids = Vec::new();
-                for v in values {
-                    rids.extend(idx.point(&[v]));
-                }
-                if let Some((lo, hi)) = filter.index_range("ts") {
-                    if let Some(ts_idx) = self.engine.index(COLLECTION, "ts_1") {
-                        self.metrics.counter("shard.plan_intersect").inc();
-                        let ts_rids = ts_idx.range_superset(lo.as_ref(), hi.as_ref());
-                        let in_ts: std::collections::HashSet<RecordId> =
-                            ts_rids.into_iter().collect();
-                        rids.retain(|r| in_ts.contains(r));
-                        return rids;
-                    }
-                }
-                self.metrics.counter("shard.plan_in_points").inc();
-                return rids;
+    /// Build the cursor source for a find: the index-ordered sort path,
+    /// the kernel fast path, or a streaming scan with the raw matcher.
+    fn plan_source(
+        &self,
+        filter: &Filter,
+        opts: &FindOptions,
+    ) -> Result<CursorSource, WireError> {
+        if let Some((field, dir)) = &opts.sort {
+            // Index-ordered sort: a single-field index on the sort field
+            // serves rids in key order (reverse scan for Desc) — the
+            // limit cuts the scan off early instead of materializing,
+            // decoding, and sorting every match. Worth it when the
+            // index walk is bounded by the *filter* — it ranges the
+            // sort field, or matches everything. A selective filter on
+            // a different field (even with a limit: scarce matches
+            // would walk the whole sort index before filling it) is
+            // better served by its own plan + decode-once sort (below).
+            let sort_index = format!("{field}_1");
+            let bounded =
+                filter.index_range(field).is_some() || matches!(filter, Filter::True);
+            if bounded && self.engine.index(COLLECTION, &sort_index).is_some() {
+                self.metrics.counter("shard.plan_index_sort").inc();
+                let (lo, hi) = filter.index_range(field).unwrap_or((None, None));
+                let ranges =
+                    vec![Index::superset_bounds(&[], lo.as_ref(), hi.as_ref())];
+                return Ok(CursorSource::Scan(ScanCursor::new(
+                    ScanPlan::Index {
+                        index: sort_index,
+                        ranges,
+                        rev: *dir == SortDir::Desc,
+                    },
+                    filter.clone(),
+                )));
             }
+            // Sort field not indexed: drain the unsorted plan, decoding
+            // each match exactly once, sort in memory, serve from there.
+            return Ok(self.sorted_fallback(filter, opts, field, *dir));
         }
-        // 2. Range on indexed ts (inclusive superset; residual filter
-        // downstream restores exact operator semantics).
-        if let Some((lo, hi)) = filter.index_range("ts") {
-            if let Some(idx) = self.engine.index(COLLECTION, "ts_1") {
-                self.metrics.counter("shard.plan_ts_range").inc();
-                return idx.range_superset(lo.as_ref(), hi.as_ref());
-            }
-        }
-        // 2b. Range/eq on indexed node_id.
-        if let Some((lo, hi)) = filter.index_range("node_id") {
-            if let Some(idx) = self.engine.index(COLLECTION, "node_id_1") {
-                self.metrics.counter("shard.plan_node_range").inc();
-                return idx.range_superset(lo.as_ref(), hi.as_ref());
-            }
-        }
-        // 3. Full scan.
-        self.metrics.counter("shard.plan_full_scan").inc();
-        self.engine.record_ids(COLLECTION)
-    }
-
-    fn matcher_path(&self, candidates: &[RecordId], filter: &Filter) -> Vec<RecordId> {
-        self.metrics.counter("shard.find_matcher_path").inc();
-        candidates
-            .iter()
-            .filter_map(|&rid| {
-                let d = self.engine.fetch(COLLECTION, rid)?;
-                filter.matches(&d).then_some(rid)
-            })
-            .collect()
-    }
-
-    fn serve_batch(&self, cur: &mut CursorState) -> FindReply {
-        let mut docs = Vec::with_capacity(cur.batch.min(cur.rids.len() - cur.pos));
-        while cur.pos < cur.rids.len() && docs.len() < cur.batch {
-            if let Some(limit) = cur.remaining {
-                if limit == 0 {
-                    cur.pos = cur.rids.len();
-                    break;
-                }
-            }
-            let rid = cur.rids[cur.pos];
-            cur.pos += 1;
-            if let Some(doc) = self.engine.fetch(COLLECTION, rid) {
-                let doc = match &cur.projection {
-                    Some(fields) => doc.project(fields),
-                    None => doc,
-                };
-                docs.push(doc);
-                if let Some(r) = cur.remaining.as_mut() {
-                    *r -= 1;
-                }
-            }
-        }
-        let more = cur.pos < cur.rids.len() && cur.remaining != Some(0);
-        FindReply { docs, cursor: more.then_some(0) }
-    }
-
-    /// Count without materializing documents for the client. Uses the
-    /// same planner; the kernel path only needs the match count.
-    fn handle_count(&mut self, filter: &Filter) -> Result<u64, WireError> {
-        let candidates = self.plan_candidates(filter);
+        // Kernel fast path for the canonical shape over planned
+        // candidates — columns extracted raw, no document materialized.
         if let Some((lo, hi, nodes)) = Self::canonical_shape(filter) {
             let words = self.kernels.shapes().filter_w;
             let max_node = nodes.iter().max().copied().unwrap_or(0);
             if (max_node as usize) < words * 32 && !nodes.is_empty() {
-                let mut ts_col = Vec::with_capacity(candidates.len());
-                let mut node_col = Vec::with_capacity(candidates.len());
-                for &rid in &candidates {
-                    if let Some(d) = self.engine.fetch(COLLECTION, rid) {
-                        ts_col.push(d.get_i64("ts").unwrap_or(-1).max(0) as u32);
-                        node_col.push(d.get_i64("node_id").unwrap_or(0).max(0) as u32);
-                    }
-                }
-                let bitmap = crate::runtime::fallback::build_bitmap(nodes, words);
-                let out = self
-                    .kernels
-                    .filter(&ts_col, &node_col, lo, hi, &bitmap)
-                    .map_err(|e| WireError::Server(e.to_string()))?;
-                return Ok(out.count as u64);
+                self.metrics.counter("shard.find_kernel_path").inc();
+                let candidates = self.drain_plan(self.plan_scan(filter));
+                self.metrics
+                    .counter("shard.find_candidates")
+                    .add(candidates.len() as u64);
+                let rids = self.kernel_filter(&candidates, lo, hi, &nodes)?;
+                self.metrics.counter("shard.find_matches").add(rids.len() as u64);
+                return Ok(CursorSource::Rids { rids, pos: 0 });
             }
         }
-        Ok(self.matcher_path(&candidates, filter).len() as u64)
+        // General path: stream the planned scan through the raw matcher.
+        self.metrics.counter("shard.find_matcher_path").inc();
+        Ok(CursorSource::Scan(ScanCursor::new(self.plan_scan(filter), filter.clone())))
+    }
+
+    /// Choose an access path for `filter` — the planner decision tree
+    /// (module docs). Streaming plans yield candidates lazily; the
+    /// `Rids` plan is the materialized intersection/point fallback.
+    fn plan_scan(&self, filter: &Filter) -> ScanPlan {
+        // 1. `$in` on node_id.
+        if let Some(values) = filter.in_values("node_id") {
+            let ts_range = filter.index_range("ts");
+            // 1a. Compound (node_id, ts): one bounded range scan per
+            // node. For the canonical shape the `$lt` upper bound is
+            // known exclusive, so the bounds are *exact* — candidates
+            // == matches; any other operator mix gets an inclusive
+            // superset and the residual filter.
+            if self.engine.index(COLLECTION, COMPOUND_INDEX).is_some() {
+                self.metrics.counter("shard.plan_compound").inc();
+                // Exact bounds demand that the filter really pins BOTH
+                // ts sides ($gte lo and $lt hi): a canonical_shape
+                // default (0 / u32::MAX) encoded as an exact Int bound
+                // would wrongly exclude documents whose ts is missing
+                // or non-Int — keys of another type rank that a
+                // ts-unconstrained filter still matches. Partial or
+                // absent ts bounds take the inclusive superset and the
+                // residual filter.
+                let both_ts_bounds = matches!(&ts_range, Some((Some(_), Some(_))));
+                let ranges: Vec<EncodedRange> = match Self::canonical_shape(filter) {
+                    Some((lo, hi, nodes)) if both_ts_bounds => nodes
+                        .iter()
+                        .map(|&n| {
+                            let node = Value::Int(n as i64);
+                            (
+                                encode_key(&[&node, &Value::Int(lo as i64)]),
+                                encode_key(&[&node, &Value::Int(hi as i64)]),
+                            )
+                        })
+                        .collect(),
+                    _ => {
+                        let (lo, hi) = match &ts_range {
+                            Some((lo, hi)) => (lo.as_ref(), hi.as_ref()),
+                            None => (None, None),
+                        };
+                        values
+                            .iter()
+                            .map(|v| Index::superset_bounds(&[v], lo, hi))
+                            .collect()
+                    }
+                };
+                return ScanPlan::Index {
+                    index: COMPOUND_INDEX.to_string(),
+                    ranges,
+                    rev: false,
+                };
+            }
+            // 1b. Single node_id index: point lookups; with a ts index
+            // and range, intersect — the probe set is built from the
+            // smaller side and the larger side streams through it.
+            if let Some(idx) = self.engine.index(COLLECTION, NODE_INDEX) {
+                let in_len: usize = values.iter().map(|v| idx.point_len(&[v])).sum();
+                if let Some((lo, hi)) = &ts_range {
+                    if let Some(ts_idx) = self.engine.index(COLLECTION, TS_INDEX) {
+                        self.metrics.counter("shard.plan_intersect").inc();
+                        let ts_len =
+                            ts_idx.range_superset_len(lo.as_ref(), hi.as_ref());
+                        let rids: Vec<RecordId> = if in_len <= ts_len {
+                            let probe: HashSet<RecordId> = values
+                                .iter()
+                                .flat_map(|v| idx.point_iter(&[v]))
+                                .collect();
+                            ts_idx
+                                .range_superset(lo.as_ref(), hi.as_ref())
+                                .filter(|r| probe.contains(r))
+                                .collect()
+                        } else {
+                            let probe: HashSet<RecordId> = ts_idx
+                                .range_superset(lo.as_ref(), hi.as_ref())
+                                .collect();
+                            values
+                                .iter()
+                                .flat_map(|v| idx.point_iter(&[v]))
+                                .filter(|r| probe.contains(r))
+                                .collect()
+                        };
+                        return ScanPlan::Rids(rids);
+                    }
+                }
+                self.metrics.counter("shard.plan_in_points").inc();
+                let mut rids = Vec::with_capacity(in_len);
+                for v in values {
+                    rids.extend(idx.point_iter(&[v]));
+                }
+                return ScanPlan::Rids(rids);
+            }
+        }
+        // 2. Range on indexed ts (inclusive superset; the residual
+        // filter restores exact operator semantics).
+        if let Some((lo, hi)) = filter.index_range("ts") {
+            if self.engine.index(COLLECTION, TS_INDEX).is_some() {
+                self.metrics.counter("shard.plan_ts_range").inc();
+                return ScanPlan::Index {
+                    index: TS_INDEX.to_string(),
+                    ranges: vec![Index::superset_bounds(&[], lo.as_ref(), hi.as_ref())],
+                    rev: false,
+                };
+            }
+        }
+        // 2b. Range/eq on node_id: its own index, or the compound
+        // prefix (a (node_id, ts) scan bounded on node_id alone).
+        if let Some((lo, hi)) = filter.index_range("node_id") {
+            for index in [NODE_INDEX, COMPOUND_INDEX] {
+                if self.engine.index(COLLECTION, index).is_some() {
+                    self.metrics.counter("shard.plan_node_range").inc();
+                    return ScanPlan::Index {
+                        index: index.to_string(),
+                        ranges: vec![Index::superset_bounds(
+                            &[],
+                            lo.as_ref(),
+                            hi.as_ref(),
+                        )],
+                        rev: false,
+                    };
+                }
+            }
+        }
+        // 3. Full scan.
+        self.metrics.counter("shard.plan_full_scan").inc();
+        ScanPlan::Table
+    }
+
+    /// Drain a plan into a candidate rid vector (the kernel path wants
+    /// whole columns).
+    fn drain_plan(&self, plan: ScanPlan) -> Vec<RecordId> {
+        let mut scan = match plan {
+            ScanPlan::Rids(rids) => return rids,
+            plan => ScanCursor::new(plan, Filter::True),
+        };
+        let mut out = Vec::new();
+        loop {
+            out.extend(scan.pending.drain(..));
+            if !self.refill_scan(&mut scan) {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Run the AOT filter kernel over the candidates' (ts, node_id)
+    /// columns — extracted from the raw record bytes, no per-candidate
+    /// document decode — and return the matching rids in order.
+    fn kernel_filter(
+        &self,
+        candidates: &[RecordId],
+        lo: u32,
+        hi: u32,
+        nodes: &[u32],
+    ) -> Result<Vec<RecordId>, WireError> {
+        let words = self.kernels.shapes().filter_w;
+        let mut ts_col = Vec::with_capacity(candidates.len());
+        let mut node_col = Vec::with_capacity(candidates.len());
+        let mut rids = Vec::with_capacity(candidates.len());
+        for &rid in candidates {
+            if let Some(raw) = self.engine.fetch_raw(COLLECTION, rid) {
+                let d = RawDoc::new(raw);
+                ts_col.push(d.get_i64("ts").unwrap_or(-1).max(0) as u32);
+                node_col.push(d.get_i64("node_id").unwrap_or(0).max(0) as u32);
+                rids.push(rid);
+            }
+        }
+        let bitmap = crate::runtime::fallback::build_bitmap(nodes.iter().copied(), words);
+        let out = self
+            .kernels
+            .filter(&ts_col, &node_col, lo, hi, &bitmap)
+            .map_err(|e| WireError::Server(e.to_string()))?;
+        Ok(rids
+            .iter()
+            .zip(&out.mask)
+            .filter(|(_, &m)| m == 1)
+            .map(|(&rid, _)| rid)
+            .collect())
+    }
+
+    /// Non-indexed sort field: drain the unsorted plan, decoding each
+    /// match exactly once, sort the decoded documents, and serve the
+    /// cursor from memory. (The old path decoded every candidate to
+    /// match, every match again to sort, and every served doc a third
+    /// time.)
+    fn sorted_fallback(
+        &self,
+        filter: &Filter,
+        opts: &FindOptions,
+        field: &str,
+        dir: SortDir,
+    ) -> CursorSource {
+        let mut scan = ScanCursor::new(self.plan_scan(filter), filter.clone());
+        let mut docs: Vec<Document> = Vec::new();
+        while let Some((_, raw)) = self.next_scan_match(&mut scan) {
+            docs.push(RawDoc::new(raw).decode().expect("corrupt record"));
+        }
+        self.metrics.counter("shard.find_decodes").add(docs.len() as u64);
+        self.flush_scan_metrics(&mut scan);
+        docs.sort_by(|a, b| {
+            let o = a
+                .get(field)
+                .unwrap_or(&Value::Null)
+                .cmp_total(b.get(field).unwrap_or(&Value::Null));
+            match dir {
+                SortDir::Asc => o,
+                SortDir::Desc => o.reverse(),
+            }
+        });
+        // The cursor can only ever serve `limit` documents — don't keep
+        // (or project) the sorted tail beyond it.
+        if let Some(limit) = opts.limit {
+            docs.truncate(limit);
+        }
+        let buf = docs
+            .into_iter()
+            .map(|d| match &opts.projection {
+                Some(fields) => d.project(fields),
+                None => d,
+            })
+            .collect();
+        CursorSource::Docs { buf }
+    }
+
+    /// Advance a streaming scan to its next match: pull candidates from
+    /// the resumable plan, raw-match each against the encoded bytes,
+    /// and return the matching record id *with* its bytes (one record
+    /// lookup serves both the match and the materialization).
+    /// Candidate/match tallies accumulate on the cursor (flushed to the
+    /// registry per served batch).
+    fn next_scan_match<'e>(
+        &'e self,
+        scan: &mut ScanCursor,
+    ) -> Option<(RecordId, &'e [u8])> {
+        loop {
+            while let Some(rid) = scan.pending.pop_front() {
+                scan.seen += 1;
+                let Some(raw) = self.engine.fetch_raw(COLLECTION, rid) else {
+                    continue;
+                };
+                if scan.filter.matches_raw(&RawDoc::new(raw)) {
+                    scan.matched += 1;
+                    return Some((rid, raw));
+                }
+            }
+            if scan.done || !self.refill_scan(scan) {
+                scan.done = true;
+                return None;
+            }
+        }
+    }
+
+    /// Pull the next key run (index plans) or record-id run (table
+    /// scans) into `pending`. Returns false when the scan is exhausted.
+    fn refill_scan(&self, scan: &mut ScanCursor) -> bool {
+        match &scan.plan {
+            ScanPlan::Rids(rids) => {
+                if scan.pos >= rids.len() {
+                    return false;
+                }
+                let end = (scan.pos + SCAN_RUN).min(rids.len());
+                scan.pending.extend(rids[scan.pos..end].iter().copied());
+                scan.pos = end;
+                true
+            }
+            ScanPlan::Index { index, ranges, rev } => {
+                let Some(idx) = self.engine.index(COLLECTION, index) else {
+                    return false;
+                };
+                while scan.range_idx < ranges.len() {
+                    let range = &ranges[scan.range_idx];
+                    if let Some(key) = idx.pull_range(
+                        range,
+                        scan.after_key.as_deref(),
+                        *rev,
+                        SCAN_RUN,
+                        &mut scan.pending,
+                    ) {
+                        scan.after_key = Some(key);
+                        return true;
+                    }
+                    scan.range_idx += 1;
+                    scan.after_key = None;
+                }
+                false
+            }
+            ScanPlan::Table => {
+                let before = scan.pending.len();
+                for (rid, _) in self
+                    .engine
+                    .scan_raw_from(COLLECTION, scan.after_rid)
+                    .take(SCAN_RUN)
+                {
+                    scan.after_rid = Some(rid);
+                    scan.pending.push_back(rid);
+                }
+                scan.pending.len() > before
+            }
+        }
+    }
+
+    /// Publish (and reset) a scan's candidate/match tallies — batched
+    /// so the per-candidate hot loop takes no registry locks.
+    fn flush_scan_metrics(&self, scan: &mut ScanCursor) {
+        if scan.seen > 0 {
+            self.metrics.counter("shard.find_candidates").add(scan.seen);
+            scan.seen = 0;
+        }
+        if scan.matched > 0 {
+            self.metrics.counter("shard.find_matches").add(scan.matched);
+            scan.matched = 0;
+        }
+    }
+
+    fn serve_batch(&self, cur: &mut CursorState) -> FindReply {
+        let mut docs = Vec::with_capacity(cur.batch.min(64));
+        let mut decoded = 0u64;
+        while docs.len() < cur.batch && cur.remaining != Some(0) {
+            let doc = match &mut cur.src {
+                CursorSource::Rids { rids, pos } => {
+                    let mut out = None;
+                    while out.is_none() && *pos < rids.len() {
+                        let rid = rids[*pos];
+                        *pos += 1;
+                        if let Some(raw) = self.engine.fetch_raw(COLLECTION, rid) {
+                            decoded += 1;
+                            out = Some(materialize(raw, cur.projection.as_deref()));
+                        }
+                    }
+                    out
+                }
+                // Sorted-fallback documents were decoded (and projected)
+                // when the cursor was built.
+                CursorSource::Docs { buf } => buf.pop_front(),
+                CursorSource::Scan(scan) => self.next_scan_match(scan).map(|(_, raw)| {
+                    decoded += 1;
+                    materialize(raw, cur.projection.as_deref())
+                }),
+            };
+            let Some(doc) = doc else { break };
+            docs.push(doc);
+            if let Some(r) = cur.remaining.as_mut() {
+                *r -= 1;
+            }
+        }
+        if decoded > 0 {
+            self.metrics.counter("shard.find_decodes").add(decoded);
+        }
+        if let CursorSource::Scan(scan) = &mut cur.src {
+            self.flush_scan_metrics(scan);
+        }
+        let more = !cursor_exhausted(cur) && cur.remaining != Some(0);
+        FindReply { docs, cursor: more.then_some(0) }
+    }
+
+    /// Count without materializing documents for the client. The
+    /// canonical shape runs the kernel over raw-extracted columns; any
+    /// other filter streams the plan through the raw matcher — counting
+    /// decodes nothing at all.
+    fn handle_count(&mut self, filter: &Filter) -> Result<u64, WireError> {
+        // Counts examine candidates exactly like finds do, so both
+        // branches publish the candidate/match tallies — the ratio the
+        // planner regressions read covers finds and counts alike.
+        if let Some((lo, hi, nodes)) = Self::canonical_shape(filter) {
+            let words = self.kernels.shapes().filter_w;
+            let max_node = nodes.iter().max().copied().unwrap_or(0);
+            if (max_node as usize) < words * 32 && !nodes.is_empty() {
+                let candidates = self.drain_plan(self.plan_scan(filter));
+                self.metrics
+                    .counter("shard.find_candidates")
+                    .add(candidates.len() as u64);
+                let n = self.kernel_filter(&candidates, lo, hi, &nodes)?.len() as u64;
+                self.metrics.counter("shard.find_matches").add(n);
+                return Ok(n);
+            }
+        }
+        let mut scan = ScanCursor::new(self.plan_scan(filter), filter.clone());
+        let mut n = 0u64;
+        while self.next_scan_match(&mut scan).is_some() {
+            n += 1;
+        }
+        self.flush_scan_metrics(&mut scan);
+        Ok(n)
     }
 
     fn handle_get_more(&mut self, cursor: u64) -> Result<FindReply, WireError> {
@@ -673,12 +1065,16 @@ impl ShardServer {
         let mut last = None;
         let mut scanned = 0usize;
         let mut done = true;
-        for (rid, doc) in self.engine.scan_from(COLLECTION, after) {
+        // Raw walk: only records actually inside the migrating range
+        // decode; the (typically much larger) out-of-range remainder is
+        // probed for its key fields and skipped.
+        for (rid, raw) in self.engine.scan_raw_from(COLLECTION, after) {
             scanned += 1;
             last = Some(rid);
-            if let Some(pos) = self.position_of(&doc) {
+            let rd = RawDoc::new(raw);
+            if let Some(pos) = self.position_of_raw(&rd) {
                 if range.0 <= pos && pos <= range.1 {
-                    docs.push(doc);
+                    docs.push(rd.decode().expect("corrupt record"));
                 }
             }
             if docs.len() >= limit || scanned >= scan_cap {
@@ -761,13 +1157,16 @@ impl ShardServer {
         if self.staging.is_none() && self.engine.stats(STAGING_COLLECTION).docs == 0 {
             return Ok(0);
         }
-        let mut data: Vec<(RecordId, Document)> = Vec::new();
+        // Raw pass: the publish needs rids and key positions only —
+        // staged documents move as encoded bytes, never decoding here.
+        let mut data: Vec<(RecordId, Option<u64>)> = Vec::new();
         let mut meta: Vec<RecordId> = Vec::new();
-        for (rid, doc) in self.engine.scan(STAGING_COLLECTION) {
-            if doc.get_i64("__migmeta").is_some() || doc.get_i64("__migcommit").is_some() {
+        for (rid, raw) in self.engine.scan_raw_from(STAGING_COLLECTION, None) {
+            let rd = RawDoc::new(raw);
+            if rd.get_i64("__migmeta").is_some() || rd.get_i64("__migcommit").is_some() {
                 meta.push(rid);
             } else {
-                data.push((rid, doc));
+                data.push((rid, self.position_of_raw(&rd)));
             }
         }
         let rids: Vec<RecordId> = data.iter().map(|(r, _)| *r).collect();
@@ -781,9 +1180,9 @@ impl ShardServer {
                 .map_err(|e| WireError::Server(e.to_string()))?;
         }
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
-        for (_, doc) in &data {
-            if let Some(pos) = self.position_of(doc) {
-                *self.positions.entry(pos).or_insert(0) += 1;
+        for (_, pos) in &data {
+            if let Some(pos) = pos {
+                *self.positions.entry(*pos).or_insert(0) += 1;
             }
         }
         self.staging = None;
@@ -839,9 +1238,9 @@ impl ShardServer {
     ) -> Result<DeleteChunkReply, WireError> {
         let doomed: Vec<(RecordId, u64)> = self
             .engine
-            .scan(COLLECTION)
-            .filter_map(|(rid, d)| {
-                let pos = self.position_of(&d)?;
+            .scan_raw_from(COLLECTION, None)
+            .filter_map(|(rid, raw)| {
+                let pos = self.position_of_raw(&RawDoc::new(raw))?;
                 (range.0 <= pos && pos <= range.1).then_some((rid, pos))
             })
             .collect();

@@ -681,31 +681,27 @@ impl Engine {
             .map(|b| Document::decode(b).expect("corrupt record"))
     }
 
-    /// Full scan in record-id order.
-    pub fn scan<'a>(
-        &'a self,
-        coll: &str,
-    ) -> Box<dyn Iterator<Item = (RecordId, Document)> + 'a> {
-        match self.collections.get(coll) {
-            Some(c) => Box::new(
-                c.records
-                    .iter()
-                    .map(|(rid, b)| (*rid, Document::decode(b).expect("corrupt record"))),
-            ),
-            None => Box::new(std::iter::empty()),
-        }
+    /// Fetch one record's *encoded* bytes without decoding — the
+    /// zero-copy read path ([`crate::mongo::bson::RawDoc`] seeks named
+    /// fields in place). `None` if missing.
+    pub fn fetch_raw(&self, coll: &str, rid: RecordId) -> Option<&[u8]> {
+        self.collections
+            .get(coll)?
+            .records
+            .get(&rid)
+            .map(|b| b.as_slice())
     }
 
-    /// Scan in record-id order starting *after* `after` (exclusive;
-    /// `None` = from the beginning) — the resumable cursor the chunk
-    /// migration stream walks. Records inserted while a stream is
-    /// paused get higher ids, so resuming from the last seen id picks
-    /// them up.
-    pub fn scan_from<'a>(
+    /// Raw scan in record-id order starting *after* `after` (exclusive;
+    /// `None` = from the beginning): encoded bytes only, no per-record
+    /// decode — the streaming table scan of the shard read path and the
+    /// field-probe passes (position histograms, range deletes) that
+    /// never need whole documents.
+    pub fn scan_raw_from<'a>(
         &'a self,
         coll: &str,
         after: Option<RecordId>,
-    ) -> Box<dyn Iterator<Item = (RecordId, Document)> + 'a> {
+    ) -> Box<dyn Iterator<Item = (RecordId, &'a [u8])> + 'a> {
         use std::ops::Bound;
         let lo = match after {
             Some(r) => Bound::Excluded(r),
@@ -715,10 +711,34 @@ impl Engine {
             Some(c) => Box::new(
                 c.records
                     .range((lo, Bound::Unbounded))
-                    .map(|(rid, b)| (*rid, Document::decode(b).expect("corrupt record"))),
+                    .map(|(rid, b)| (*rid, b.as_slice())),
             ),
             None => Box::new(std::iter::empty()),
         }
+    }
+
+    /// Full scan in record-id order.
+    pub fn scan<'a>(
+        &'a self,
+        coll: &str,
+    ) -> Box<dyn Iterator<Item = (RecordId, Document)> + 'a> {
+        self.scan_from(coll, None)
+    }
+
+    /// Scan in record-id order starting *after* `after` (exclusive;
+    /// `None` = from the beginning) — the resumable cursor the chunk
+    /// migration stream walks. Records inserted while a stream is
+    /// paused get higher ids, so resuming from the last seen id picks
+    /// them up. Decoding wrapper over [`Engine::scan_raw_from`].
+    pub fn scan_from<'a>(
+        &'a self,
+        coll: &str,
+        after: Option<RecordId>,
+    ) -> Box<dyn Iterator<Item = (RecordId, Document)> + 'a> {
+        Box::new(
+            self.scan_raw_from(coll, after)
+                .map(|(rid, b)| (rid, Document::decode(b).expect("corrupt record"))),
+        )
     }
 
     /// Record ids only (migration batching).
@@ -1443,6 +1463,25 @@ mod tests {
     }
 
     #[test]
+    fn raw_fetch_and_scan_expose_encoded_bytes() {
+        use crate::mongo::bson::RawDoc;
+        let (mut eng, _) = temp_engine("eng1raw", false, false);
+        eng.create_collection("m");
+        let r0 = eng.insert("m", &doc(7, 70)).unwrap();
+        eng.insert("m", &doc(8, 80)).unwrap();
+        let raw = eng.fetch_raw("m", r0).unwrap();
+        assert_eq!(raw, doc(7, 70).encode().as_slice());
+        assert_eq!(RawDoc::new(raw).get_i64("node_id"), Some(70));
+        assert!(eng.fetch_raw("m", 999).is_none());
+        // Raw scan agrees with the decoding scan, resumes after a rid.
+        let all: Vec<RecordId> = eng.scan_raw_from("m", None).map(|(r, _)| r).collect();
+        assert_eq!(all, eng.record_ids("m"));
+        let tail: Vec<RecordId> = eng.scan_raw_from("m", Some(r0)).map(|(r, _)| r).collect();
+        assert_eq!(tail, vec![r0 + 1]);
+        assert_eq!(eng.scan_raw_from("nope", None).count(), 0);
+    }
+
+    #[test]
     fn indexes_maintained_on_insert_and_remove() {
         let (mut eng, _) = temp_engine("eng2", false, false);
         eng.create_collection("metrics");
@@ -1465,7 +1504,7 @@ mod tests {
         }
         eng.create_index("metrics", IndexSpec::single("ts")).unwrap();
         let idx = eng.index("metrics", "ts_1").unwrap();
-        assert_eq!(idx.range(Some(&Value::Int(5)), Some(&Value::Int(15))).len(), 10);
+        assert_eq!(idx.range(Some(&Value::Int(5)), Some(&Value::Int(15))).count(), 10);
     }
 
     #[test]

@@ -75,6 +75,11 @@ pub fn encode_value(v: &Value, out: &mut Vec<u8>) {
     }
 }
 
+/// Encoded `[lo, hi)` byte bounds of one index scan — built by the
+/// planner ([`Index::superset_bounds`] or exact `encode_key` pairs),
+/// walked by resumable cursors via [`Index::pull_range`].
+pub type EncodedRange = (Vec<u8>, Vec<u8>);
+
 /// Encode a (possibly compound) key from `values`.
 pub fn encode_key(values: &[&Value]) -> Vec<u8> {
     let mut out = Vec::with_capacity(values.len() * 10);
@@ -134,49 +139,194 @@ impl Index {
         self.map.get(&encode_key(values)).cloned().unwrap_or_default()
     }
 
-    /// Record ids in `[lo, hi)` on the first key field (prefix scan).
-    /// `None` bound = unbounded.
-    pub fn range(&self, lo: Option<&Value>, hi: Option<&Value>) -> Vec<RecordId> {
+    /// [`Index::point`] without the clone: record ids streamed from the
+    /// key's posting list.
+    pub fn point_iter<'a>(
+        &'a self,
+        values: &[&Value],
+    ) -> impl Iterator<Item = RecordId> + 'a {
+        self.map
+            .get(&encode_key(values))
+            .into_iter()
+            .flat_map(|rids| rids.iter().copied())
+    }
+
+    /// How many record ids a point lookup of `values` would return —
+    /// the planner's per-value cost estimate, one map probe.
+    pub fn point_len(&self, values: &[&Value]) -> usize {
+        self.map.get(&encode_key(values)).map_or(0, Vec::len)
+    }
+
+    /// Record ids in `[lo, hi)` on the first key field (prefix scan),
+    /// streamed without materializing a rid vector. `None` bound =
+    /// unbounded.
+    pub fn range<'a>(
+        &'a self,
+        lo: Option<&Value>,
+        hi: Option<&Value>,
+    ) -> impl Iterator<Item = RecordId> + 'a {
         let lo_b: Bound<Vec<u8>> = match lo {
             Some(v) => Bound::Included(encode_key(&[v])),
             None => Bound::Unbounded,
         };
+        // A half-open `[lo, hi)` prefix scan must exclude `hi` and every
+        // compound key extending it; `encode(hi)` is exactly that
+        // exclusive bound (every extension sorts at or after it).
         let hi_b: Bound<Vec<u8>> = match hi {
-            Some(v) => Bound::Excluded(prefix_upper(encode_key(&[v]))),
+            Some(v) => Bound::Excluded(encode_key(&[v])),
             None => Bound::Unbounded,
         };
-        let mut out = Vec::new();
-        for (_, rids) in self.map.range((lo_b, hi_b)) {
-            out.extend_from_slice(rids);
-        }
-        out
+        self.scan_bounds(lo_b, hi_b)
     }
 
     /// Superset scan with *inclusive* bounds on the first key field —
-    /// the planner's access path. The caller always applies a residual
-    /// filter (kernel or matcher), so including `hi` (and its compound
-    /// extensions) is correct for every operator mix ($lte, $eq, ...).
-    pub fn range_superset(&self, lo: Option<&Value>, hi: Option<&Value>) -> Vec<RecordId> {
-        let lo_b: Bound<Vec<u8>> = match lo {
-            Some(v) => Bound::Included(encode_key(&[v])),
-            None => Bound::Unbounded,
-        };
-        let hi_b: Bound<Vec<u8>> = match hi {
-            // Prefix-inclusive upper bound: every extension of encode(hi)
-            // continues with a type-rank byte <= 6, so appending 0x07
-            // excludes nothing that starts with the hi prefix.
-            Some(v) => {
-                let mut enc = encode_key(&[v]);
-                enc.push(0x07);
-                Bound::Excluded(enc)
-            }
-            None => Bound::Unbounded,
-        };
-        let mut out = Vec::new();
-        for (_, rids) in self.map.range((lo_b, hi_b)) {
-            out.extend_from_slice(rids);
+    /// the planner's access path, streamed without materializing a rid
+    /// vector. The caller always applies a residual filter (kernel or
+    /// matcher), so including `hi` (and its compound extensions) is
+    /// correct for every operator mix ($lte, $eq, ...).
+    pub fn range_superset<'a>(
+        &'a self,
+        lo: Option<&Value>,
+        hi: Option<&Value>,
+    ) -> impl Iterator<Item = RecordId> + 'a {
+        let (lo_b, hi_b) = Self::superset_bounds(&[], lo, hi);
+        let lo_b = if lo.is_some() { Bound::Included(lo_b) } else { Bound::Unbounded };
+        self.scan_bounds(lo_b, Bound::Excluded(hi_b))
+    }
+
+    /// How many record ids [`Index::range_superset`] would yield — the
+    /// planner's scan-cost estimate: O(distinct keys in range), no rid
+    /// allocation or copying.
+    pub fn range_superset_len(&self, lo: Option<&Value>, hi: Option<&Value>) -> usize {
+        let (lo_b, hi_b) = Self::superset_bounds(&[], lo, hi);
+        if lo_b > hi_b {
+            return 0;
         }
-        out
+        self.map.range(lo_b..hi_b).map(|(_, rids)| rids.len()).sum()
+    }
+
+    /// Iterate `map.range` defensively: inverted bounds (an empty query
+    /// range like `ts >= 10 && ts < 5`) yield an empty scan instead of
+    /// the `BTreeMap::range` start-after-end panic.
+    fn scan_bounds<'a>(
+        &'a self,
+        lo_b: Bound<Vec<u8>>,
+        hi_b: Bound<Vec<u8>>,
+    ) -> impl Iterator<Item = RecordId> + 'a {
+        let inverted = match (&lo_b, &hi_b) {
+            (Bound::Excluded(a), Bound::Excluded(b)) => a >= b,
+            (
+                Bound::Included(a) | Bound::Excluded(a),
+                Bound::Included(b) | Bound::Excluded(b),
+            ) => a > b,
+            _ => false,
+        };
+        let bounds = if inverted {
+            // Every real key is non-empty, so `< []` selects nothing.
+            (Bound::Unbounded, Bound::Excluded(Vec::new()))
+        } else {
+            (lo_b, hi_b)
+        };
+        self.map.range(bounds).flat_map(|(_, rids)| rids.iter().copied())
+    }
+
+    /// Encoded `[lo, hi)` scan bounds over keys whose leading fields
+    /// equal `prefix` and whose next field lies in `[lo, hi]` — an
+    /// inclusive *superset* on both sides (the caller's residual filter
+    /// restores exact operator semantics). Either bound `None` =
+    /// unbounded within the prefix; an empty prefix spans the whole
+    /// index (every document appears in every index: missing fields
+    /// encode as Null).
+    pub fn superset_bounds(
+        prefix: &[&Value],
+        lo: Option<&Value>,
+        hi: Option<&Value>,
+    ) -> EncodedRange {
+        let mut lo_b = encode_key(prefix);
+        if let Some(v) = lo {
+            encode_value(v, &mut lo_b);
+        }
+        let mut hi_b = encode_key(prefix);
+        if let Some(v) = hi {
+            encode_value(v, &mut hi_b);
+        }
+        // Every key extension continues with a type-rank byte <= 6, so
+        // appending 0x07 excludes nothing that starts with the hi
+        // prefix (and past the last in-prefix key when hi is None).
+        hi_b.push(0x07);
+        (lo_b, hi_b)
+    }
+
+    /// Batched cursor step: append the rids of whole keys from `range`
+    /// (after/before the `resume` key, walking descending when `rev`)
+    /// into `out` until at least `max` rids are pulled or the range is
+    /// exhausted, and return the last key consumed — the next resume
+    /// point. One tree seek per call, sequential iteration after it;
+    /// duplicate-key runs are never split. `None` = nothing left. The
+    /// resume point is a *key*, not an iterator: the index may mutate
+    /// between steps (concurrent ingest between getMores) and the scan
+    /// resumes correctly after it.
+    pub fn pull_range(
+        &self,
+        range: &EncodedRange,
+        resume: Option<&[u8]>,
+        rev: bool,
+        max: usize,
+        out: &mut std::collections::VecDeque<RecordId>,
+    ) -> Option<Vec<u8>> {
+        let (lo, hi) = range;
+        let mut last: Option<&[u8]> = None;
+        let mut pulled = 0usize;
+        if rev {
+            let end: &[u8] = match resume {
+                Some(k) => k,
+                None => hi.as_slice(),
+            };
+            if lo.as_slice() >= end {
+                return None;
+            }
+            for (k, rids) in self
+                .map
+                .range::<[u8], _>((Bound::Included(lo.as_slice()), Bound::Excluded(end)))
+                .rev()
+            {
+                out.extend(rids.iter().copied());
+                pulled += rids.len();
+                last = Some(k.as_slice());
+                if pulled >= max {
+                    break;
+                }
+            }
+        } else {
+            let start: Bound<&[u8]> = match resume {
+                Some(k) => {
+                    if k >= hi.as_slice() {
+                        return None;
+                    }
+                    Bound::Excluded(k)
+                }
+                None => {
+                    if lo.as_slice() >= hi.as_slice() {
+                        return None;
+                    }
+                    Bound::Included(lo.as_slice())
+                }
+            };
+            for (k, rids) in self
+                .map
+                .range::<[u8], _>((start, Bound::Excluded(hi.as_slice())))
+            {
+                out.extend(rids.iter().copied());
+                pulled += rids.len();
+                last = Some(k.as_slice());
+                if pulled >= max {
+                    break;
+                }
+            }
+        }
+        // One owned copy of the final resume key, not one per visited
+        // key — this runs on the hot read path.
+        last.map(|k| k.to_vec())
     }
 
     pub fn entries(&self) -> u64 {
@@ -194,17 +344,6 @@ impl Index {
             .map(|(k, v)| (k.len() + v.len() * 8 + 32) as u64)
             .sum()
     }
-}
-
-/// For an exclusive upper bound on a *prefix* scan we must exclude every
-/// key beginning with the hi prefix... but a half-open `[lo, hi)` range
-/// over the first field wants keys with first-field < hi, i.e. strictly
-/// before `encode(hi)` as a prefix. Any compound key starting with
-/// encode(hi) must be excluded, so the exclusive bound is exactly
-/// `encode(hi)` — except we must NOT exclude nothing more. Returning the
-/// encoding itself excludes `hi` and all its compound extensions.
-fn prefix_upper(enc: Vec<u8>) -> Vec<u8> {
-    enc
 }
 
 #[cfg(test)]
@@ -291,13 +430,21 @@ mod tests {
         for t in 0..100i64 {
             idx.insert(&d(t, 0), t as u64);
         }
-        let mut rids = idx.range(Some(&Value::Int(10)), Some(&Value::Int(20)));
+        let mut rids: Vec<RecordId> =
+            idx.range(Some(&Value::Int(10)), Some(&Value::Int(20))).collect();
         rids.sort_unstable();
         assert_eq!(rids, (10u64..20).collect::<Vec<_>>());
         // Unbounded sides.
-        assert_eq!(idx.range(None, Some(&Value::Int(5))).len(), 5);
-        assert_eq!(idx.range(Some(&Value::Int(95)), None).len(), 5);
-        assert_eq!(idx.range(None, None).len(), 100);
+        assert_eq!(idx.range(None, Some(&Value::Int(5))).count(), 5);
+        assert_eq!(idx.range(Some(&Value::Int(95)), None).count(), 5);
+        assert_eq!(idx.range(None, None).count(), 100);
+        // Inverted bounds are an empty scan, not a panic.
+        assert_eq!(idx.range(Some(&Value::Int(20)), Some(&Value::Int(10))).count(), 0);
+        assert_eq!(
+            idx.range_superset(Some(&Value::Int(20)), Some(&Value::Int(10))).count(),
+            0
+        );
+        assert_eq!(idx.range_superset_len(Some(&Value::Int(20)), Some(&Value::Int(10))), 0);
     }
 
     #[test]
@@ -309,12 +456,158 @@ mod tests {
             }
         }
         // Prefix range on node_id ∈ [2, 4).
-        let rids = idx.range(Some(&Value::Int(2)), Some(&Value::Int(4)));
+        let rids: Vec<RecordId> =
+            idx.range(Some(&Value::Int(2)), Some(&Value::Int(4))).collect();
         assert_eq!(rids.len(), 20);
         assert!(rids.iter().all(|&r| (20..40).contains(&r)));
         // Point on full compound key.
         let rids = idx.point(&[&Value::Int(3), &Value::Int(7)]);
         assert_eq!(rids, vec![37]);
+        assert_eq!(idx.point_len(&[&Value::Int(3), &Value::Int(7)]), 1);
+        assert_eq!(idx.point_iter(&[&Value::Int(3), &Value::Int(7)]).collect::<Vec<_>>(), vec![37]);
+    }
+
+    #[test]
+    fn superset_bounds_with_prefix_select_one_nodes_window() {
+        use std::collections::VecDeque;
+        // The compound planner's access path: prefix = node, next field
+        // bounded [lo, hi] inclusive-superset.
+        let mut idx = Index::new(IndexSpec::compound(&["node_id", "ts"]));
+        for node in 0..4i64 {
+            for t in 0..10i64 {
+                idx.insert(&d(t, node), (node * 10 + t) as u64);
+            }
+        }
+        let node = Value::Int(2);
+        // max = 1: one key per step, so the walk also proves per-key
+        // resumption.
+        let walk = |range: &EncodedRange| -> Vec<RecordId> {
+            let mut out: VecDeque<RecordId> = VecDeque::new();
+            let mut resume: Option<Vec<u8>> = None;
+            while let Some(k) = idx.pull_range(range, resume.as_deref(), false, 1, &mut out)
+            {
+                resume = Some(k);
+            }
+            out.into()
+        };
+        let range = Index::superset_bounds(
+            &[&node],
+            Some(&Value::Int(3)),
+            Some(&Value::Int(6)),
+        );
+        // Superset: ts in [3, 6] inclusive, node 2 only, ts order.
+        assert_eq!(walk(&range), vec![23, 24, 25, 26]);
+        // Whole-prefix scan: lo/hi unbounded inside the prefix.
+        assert_eq!(walk(&Index::superset_bounds(&[&node], None, None)).len(), 10);
+    }
+
+    #[test]
+    fn pull_range_single_steps_walk_both_directions_in_order() {
+        use std::collections::VecDeque;
+        let mut idx = Index::new(IndexSpec::single("ts"));
+        for t in 0..20i64 {
+            idx.insert(&d(t, 0), t as u64);
+            idx.insert(&d(t, 1), (100 + t) as u64); // duplicate keys
+        }
+        let range =
+            Index::superset_bounds(&[], Some(&Value::Int(5)), Some(&Value::Int(8)));
+        // max = 1 consumes exactly one whole key per step: keys 5..=8
+        // (superset-inclusive), two rids each, ascending.
+        let mut asc: Vec<Vec<RecordId>> = Vec::new();
+        let mut resume: Option<Vec<u8>> = None;
+        loop {
+            let mut out = VecDeque::new();
+            match idx.pull_range(&range, resume.as_deref(), false, 1, &mut out) {
+                Some(k) => resume = Some(k),
+                None => break,
+            }
+            let mut step: Vec<RecordId> = out.into();
+            step.sort_unstable();
+            asc.push(step);
+        }
+        assert_eq!(asc, vec![vec![5, 105], vec![6, 106], vec![7, 107], vec![8, 108]]);
+        // Descending walk visits the same keys reversed.
+        let mut desc: Vec<Vec<RecordId>> = Vec::new();
+        let mut resume: Option<Vec<u8>> = None;
+        loop {
+            let mut out = VecDeque::new();
+            match idx.pull_range(&range, resume.as_deref(), true, 1, &mut out) {
+                Some(k) => resume = Some(k),
+                None => break,
+            }
+            let mut step: Vec<RecordId> = out.into();
+            step.sort_unstable();
+            desc.push(step);
+        }
+        asc.reverse();
+        assert_eq!(desc, asc);
+        // Degenerate (inverted) range: both directions yield nothing.
+        let inverted =
+            Index::superset_bounds(&[], Some(&Value::Int(8)), Some(&Value::Int(5)));
+        let mut out = VecDeque::new();
+        assert!(idx.pull_range(&inverted, None, false, 1, &mut out).is_none());
+        assert!(idx.pull_range(&inverted, None, true, 1, &mut out).is_none());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pull_range_batches_keys_and_resumes_both_directions() {
+        use std::collections::VecDeque;
+        let mut idx = Index::new(IndexSpec::single("ts"));
+        for t in 0..30i64 {
+            idx.insert(&d(t, 0), t as u64);
+            idx.insert(&d(t, 1), (100 + t) as u64); // duplicate keys
+        }
+        let range =
+            Index::superset_bounds(&[], Some(&Value::Int(0)), Some(&Value::Int(29)));
+        for rev in [false, true] {
+            let mut out: VecDeque<RecordId> = VecDeque::new();
+            let mut resume: Option<Vec<u8>> = None;
+            let mut steps = 0;
+            loop {
+                match idx.pull_range(&range, resume.as_deref(), rev, 7, &mut out) {
+                    Some(k) => resume = Some(k),
+                    None => break,
+                }
+                steps += 1;
+            }
+            // All 60 rids arrive, whole keys per step (max=7 → 4 keys
+            // = 8 rids per step, 8 steps), and the per-key pairs stay
+            // adjacent in both directions.
+            assert_eq!(out.len(), 60, "rev={rev}");
+            assert!(steps <= 8, "rev={rev}: {steps} steps for 30 keys");
+            // Each key contributes its pair [t, 100+t] adjacently (keys
+            // are never split), so min-of-pair recovers the ts walk.
+            let rids: Vec<RecordId> = out.into();
+            let mut ts_order: Vec<u64> =
+                rids.chunks(2).map(|pair| pair[0].min(pair[1])).collect();
+            if rev {
+                ts_order.reverse();
+            }
+            assert!(
+                ts_order.windows(2).all(|w| w[0] <= w[1]),
+                "rev={rev}: keys out of order: {ts_order:?}"
+            );
+        }
+        // Exhausted range: an immediate None.
+        let empty =
+            Index::superset_bounds(&[], Some(&Value::Int(50)), Some(&Value::Int(60)));
+        let mut out = VecDeque::new();
+        assert!(idx.pull_range(&empty, None, false, 7, &mut out).is_none());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn range_superset_len_counts_without_allocating() {
+        let mut idx = Index::new(IndexSpec::single("ts"));
+        for t in 0..50i64 {
+            idx.insert(&d(t, 0), t as u64);
+        }
+        assert_eq!(
+            idx.range_superset_len(Some(&Value::Int(10)), Some(&Value::Int(19))),
+            idx.range_superset(Some(&Value::Int(10)), Some(&Value::Int(19))).count()
+        );
+        assert_eq!(idx.range_superset_len(None, None), 50);
     }
 
     #[test]

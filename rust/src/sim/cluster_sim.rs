@@ -57,6 +57,17 @@ pub struct SimSpec {
     pub migration_batch: usize,
     /// User jobs for the query phase.
     pub query_jobs: u32,
+    /// Read-path axis: with the (node_id, ts) compound index the shard
+    /// planner serves the canonical query as one bounded range scan per
+    /// node — candidates == matches, no ts-window side scan. Without
+    /// it, the single-index plan overscans (intersection superset) and
+    /// pays a pass over the ts window's rids.
+    pub compound_index: bool,
+    /// Read-path axis: raw (zero-copy) candidate matching — each
+    /// candidate costs a field probe over the encoded bytes instead of
+    /// a full document decode. Matches the live `RawDoc` matcher; off
+    /// reproduces the pre-overhaul decode-per-candidate path.
+    pub raw_match: bool,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -87,6 +98,8 @@ impl SimSpec {
             migrations: 0,
             migration_batch: 1_024,
             query_jobs,
+            compound_index: true,
+            raw_match: true,
             cost,
             seed: 0x51712,
         })
@@ -493,23 +506,37 @@ impl ClusterSim {
             // Router scatters the find.
             let r = (worker as usize) % r_count;
             let t_r = router_cpu.serve(r, t, cost.route_batch_fixed_ns as u64);
-            // Per-shard execution: the planner intersects the node_id
-            // point lookups with the ts-range index scan (index
-            // intersection, as the live shard does), so candidates are a
-            // small overscan of the matches; the ts-range leg costs one
-            // pass over the window's rids.
+            // Per-shard execution, mirroring the live planner's two
+            // regimes. Compound (node_id, ts): one bounded range scan
+            // per node — candidates == matches, no ts-window side
+            // scan. Single-index fallback: node_id point lookups
+            // intersected with the ts-range scan — candidates are a
+            // small overscan and the ts leg costs one pass over the
+            // window's rids. Per candidate the shard pays an index step
+            // + the kernel mask + either a raw field probe (`RawDoc`)
+            // or, pre-overhaul, a full decode; each *returned* document
+            // still pays fetch + serialize (`result_doc_ns`, measured
+            // through the decoding fetch).
             let matches_per_shard = job.expected_docs() as f64 / s_count as f64;
             let window_rids_per_shard = (spec.monitored_nodes as f64
                 * job.duration_min as f64
                 / s_count as f64)
                 .ceil();
-            let candidates_per_shard = matches_per_shard * 1.25 + 64.0;
+            let candidates_per_shard = if spec.compound_index {
+                matches_per_shard
+            } else {
+                matches_per_shard * 1.25 + 64.0
+            };
+            let ts_leg = if spec.compound_index { 0.0 } else { window_rids_per_shard };
+            let per_candidate = cost.index_candidate_ns
+                + cost.route_doc_ns // kernel mask
+                + if spec.raw_match { cost.doc_probe_ns } else { cost.doc_decode_ns };
             let mut t_done = t_r;
             for s in 0..s_count {
                 let svc = (cost.find_fixed_ns
-                    + window_rids_per_shard * cost.index_candidate_ns // ts-index leg
-                    + candidates_per_shard * (cost.index_candidate_ns + cost.result_doc_ns)
-                    + candidates_per_shard * cost.route_doc_ns) // kernel mask
+                    + ts_leg * cost.index_candidate_ns
+                    + candidates_per_shard * per_candidate
+                    + matches_per_shard * cost.result_doc_ns)
                     as u64;
                 let t_s = shard_cpu.serve(s, t_r + cost.net_latency_ns as u64, svc);
                 // Results stream back over the fabric.
@@ -638,6 +665,31 @@ mod tests {
         // a small factor despite 4x concurrency.
         let ratio = p50_128 / p50_32.max(1.0);
         assert!(ratio < 3.0 && ratio > 0.2, "latency ratio {ratio}");
+    }
+
+    #[test]
+    fn compound_and_raw_axes_speed_up_the_query_phase() {
+        // Same corpus and concurrency; only the read-path regime moves.
+        let base = small_spec(32);
+        let mut legacy = base.clone();
+        legacy.compound_index = false;
+        legacy.raw_match = false;
+        let mut raw_only = legacy.clone();
+        raw_only.raw_match = true;
+        let r_new = ClusterSim::new(base).run();
+        let r_raw = ClusterSim::new(raw_only).run();
+        let r_old = ClusterSim::new(legacy).run();
+        assert_eq!(r_new.queries, r_old.queries);
+        assert!(
+            r_raw.query_virt_ns <= r_old.query_virt_ns,
+            "raw matching cannot be slower than decode-per-candidate"
+        );
+        assert!(
+            r_new.query_virt_ns < r_old.query_virt_ns,
+            "compound+raw ({}) must beat the pre-overhaul path ({})",
+            r_new.query_virt_ns,
+            r_old.query_virt_ns
+        );
     }
 
     #[test]

@@ -55,6 +55,13 @@ pub struct CostModel {
     pub find_fixed_ns: f64,
     /// Index-scan cost per candidate record id.
     pub index_candidate_ns: f64,
+    /// Raw field probe per candidate (seek `ts`/`node_id` in the
+    /// encoded record bytes — the zero-copy matcher/kernel-extraction
+    /// cost; no allocation).
+    pub doc_probe_ns: f64,
+    /// Full document decode (the serve-path materialization, and the
+    /// per-candidate cost of the pre-raw read path).
+    pub doc_decode_ns: f64,
     /// Fetch + filter + serialize per result document (shard CPU).
     pub result_doc_ns: f64,
     /// Router-side merge per result document.
@@ -94,6 +101,8 @@ impl Default for CostModel {
             migrate_doc_ns: 7_500.0,
             find_fixed_ns: 40_000.0,
             index_candidate_ns: 90.0,
+            doc_probe_ns: 120.0,
+            doc_decode_ns: 1_100.0,
             result_doc_ns: 1_500.0,
             merge_doc_ns: 120.0,
             split_base_ns: 80_000.0,
@@ -122,6 +131,8 @@ impl CostModel {
             .set("migrate_doc_ns", self.migrate_doc_ns)
             .set("find_fixed_ns", self.find_fixed_ns)
             .set("index_candidate_ns", self.index_candidate_ns)
+            .set("doc_probe_ns", self.doc_probe_ns)
+            .set("doc_decode_ns", self.doc_decode_ns)
             .set("result_doc_ns", self.result_doc_ns)
             .set("merge_doc_ns", self.merge_doc_ns)
             .set("split_base_ns", self.split_base_ns)
@@ -150,6 +161,8 @@ impl CostModel {
             migrate_doc_ns: f("migrate_doc_ns", d.migrate_doc_ns),
             find_fixed_ns: f("find_fixed_ns", d.find_fixed_ns),
             index_candidate_ns: f("index_candidate_ns", d.index_candidate_ns),
+            doc_probe_ns: f("doc_probe_ns", d.doc_probe_ns),
+            doc_decode_ns: f("doc_decode_ns", d.doc_decode_ns),
             result_doc_ns: f("result_doc_ns", d.result_doc_ns),
             merge_doc_ns: f("merge_doc_ns", d.merge_doc_ns),
             split_base_ns: f("split_base_ns", d.split_base_ns),
@@ -300,7 +313,7 @@ impl CostModel {
             let hi = crate::mongo::bson::Value::Int(
                 gen.config().start_epoch_min as i64 + i as i64 + 4,
             );
-            candidates += idx.range_superset(Some(&lo), Some(&hi)).len();
+            candidates += idx.range_superset(Some(&lo), Some(&hi)).count();
         }
         cm.index_candidate_ns =
             (t.elapsed().as_nanos() as f64 / candidates.max(1) as f64).max(10.0);
@@ -313,6 +326,36 @@ impl CostModel {
             }
         }
         cm.result_doc_ns = t.elapsed().as_nanos() as f64 / fetched.max(1) as f64;
+
+        // --- Read path: raw field probe vs full document decode, over
+        // the calibration corpus's encoded records. The ratio is what
+        // the zero-copy matcher saves per *rejected* candidate; the
+        // decode term is what each *served* document still pays.
+        {
+            use crate::mongo::bson::{Document, RawDoc};
+            let encs: Vec<Vec<u8>> = docs.iter().map(Document::encode).collect();
+            let reps = if quick { 4 } else { 20 };
+            let t = Instant::now();
+            let mut acc = 0i64;
+            for _ in 0..reps {
+                for e in &encs {
+                    let rd = RawDoc::new(e);
+                    acc += rd.get_i64("ts").unwrap_or(0)
+                        + rd.get_i64("node_id").unwrap_or(0);
+                }
+            }
+            std::hint::black_box(acc);
+            cm.doc_probe_ns =
+                (t.elapsed().as_nanos() as f64 / (reps * encs.len()) as f64).max(5.0);
+            let t = Instant::now();
+            for _ in 0..reps {
+                for e in &encs {
+                    std::hint::black_box(Document::decode(e).expect("calib doc").len());
+                }
+            }
+            cm.doc_decode_ns =
+                (t.elapsed().as_nanos() as f64 / (reps * encs.len()) as f64).max(20.0);
+        }
 
         // --- Migration: a moved document is fetched + filtered once on
         // the donor and indexed + journaled once on the recipient, so
@@ -430,6 +473,8 @@ mod tests {
         assert!(cm.route_doc_ns >= 1.0 && cm.route_doc_ns < 1e5);
         assert!(cm.index_candidate_ns >= 10.0);
         assert!(cm.result_doc_ns > 50.0);
+        assert!(cm.doc_probe_ns >= 5.0, "probe {}", cm.doc_probe_ns);
+        assert!(cm.doc_decode_ns >= 20.0, "decode {}", cm.doc_decode_ns);
         assert!(cm.map_entry_ns > 0.0);
         assert!(cm.journal_frame_ns >= 1_000.0, "frame {}", cm.journal_frame_ns);
         assert!(cm.checkpoint_doc_ns >= 50.0, "ckpt {}", cm.checkpoint_doc_ns);

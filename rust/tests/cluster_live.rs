@@ -548,6 +548,141 @@ fn queries_stay_sorted_and_counts_exact_across_balancer_rounds() {
 }
 
 #[test]
+fn compound_plan_makes_candidates_equal_matches_and_bounds_decodes() {
+    // The read-path acceptance regression: on a seeded cluster with the
+    // (node_id, ts) compound index, the canonical query shape must scan
+    // *exactly* its result set (shard.find_candidates ==
+    // shard.find_matches) and decode at most one document per returned
+    // result (shard.find_decodes).
+    let metrics = Registry::new();
+    let cluster = Cluster::start(
+        ClusterSpec::small(2, 1),
+        |sid| Ok(Box::new(LocalDir::temp(&format!("cmpd-{sid}"))?)),
+        Kernels::fallback(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let client = cluster.client();
+    client.create_index(IndexSpec::compound(&["node_id", "ts"])).unwrap();
+    let docs: Vec<Document> = (0..400).map(|i| metric_doc(1000 + i, i % 8)).collect();
+    assert_eq!(client.insert_many(docs).unwrap().inserted, 400);
+
+    // Canonical shape: ts ∈ [1100, 1300), node_id ∈ {2, 3} → i ∈
+    // [100, 300) with i % 8 ∈ {2, 3} → 25 + 25 = 50 documents.
+    let f = Filter::and(vec![
+        Filter::is_in("node_id", vec![Value::Int(2), Value::Int(3)]),
+        Filter::cmp("ts", CmpOp::Gte, 1100i64),
+        Filter::cmp("ts", CmpOp::Lt, 1300i64),
+    ]);
+    let got: Vec<Document> =
+        client.find(f.clone(), FindOptions::default().batch_size(16)).unwrap().collect();
+    assert_eq!(got.len(), 50);
+    assert!(got.iter().all(|d| {
+        let n = d.get_i64("node_id").unwrap();
+        let ts = d.get_i64("ts").unwrap();
+        (n == 2 || n == 3) && (1100..1300).contains(&ts)
+    }));
+
+    let candidates = metrics.counter("shard.find_candidates").get();
+    let matches = metrics.counter("shard.find_matches").get();
+    let decodes = metrics.counter("shard.find_decodes").get();
+    assert!(metrics.counter("shard.plan_compound").get() > 0, "compound plan not chosen");
+    assert_eq!(candidates, matches, "compound plan must not overscan");
+    assert_eq!(matches, 50);
+    assert_eq!(decodes, 50, "exactly one decode per returned document");
+
+    // The exact-count path shares the plan and decodes nothing more.
+    assert_eq!(client.count_documents(f).unwrap(), 50);
+    assert_eq!(metrics.counter("shard.find_decodes").get(), 50);
+    cluster.shutdown();
+}
+
+#[test]
+fn single_index_intersection_still_exact_but_overscans() {
+    // Fallback regression: with only the single-field indexes the
+    // planner intersects (probing the smaller side); results stay
+    // exact, candidates may exceed matches, and the intersection
+    // counter proves the path taken.
+    let metrics = Registry::new();
+    let cluster = Cluster::start(
+        ClusterSpec::small(2, 1),
+        |sid| Ok(Box::new(LocalDir::temp(&format!("isect-{sid}"))?)),
+        Kernels::fallback(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let client = cluster.client();
+    client.create_index(IndexSpec::single("ts")).unwrap();
+    client.create_index(IndexSpec::single("node_id")).unwrap();
+    let docs: Vec<Document> = (0..400).map(|i| metric_doc(1000 + i, i % 8)).collect();
+    client.insert_many(docs).unwrap();
+    let f = Filter::and(vec![
+        Filter::is_in("node_id", vec![Value::Int(2), Value::Int(3)]),
+        Filter::cmp("ts", CmpOp::Gte, 1100i64),
+        Filter::cmp("ts", CmpOp::Lt, 1300i64),
+    ]);
+    let got = client.find(f, FindOptions::default()).unwrap().count();
+    assert_eq!(got, 50);
+    assert!(metrics.counter("shard.plan_intersect").get() > 0, "intersection not chosen");
+    let candidates = metrics.counter("shard.find_candidates").get();
+    let matches = metrics.counter("shard.find_matches").get();
+    assert_eq!(matches, 50);
+    assert!(candidates >= matches);
+    cluster.shutdown();
+}
+
+#[test]
+fn sorted_limit_streams_from_the_index_without_materializing() {
+    use hpcstore::mongo::query::SortDir;
+    // Index-ordered sorts: a sorted-limit find must stream rids from
+    // the ts index (early cutoff) instead of materializing and
+    // decoding the whole corpus — visible through shard.find_decodes.
+    let metrics = Registry::new();
+    let cluster = Cluster::start(
+        ClusterSpec::small(2, 1),
+        |sid| Ok(Box::new(LocalDir::temp(&format!("isort-{sid}"))?)),
+        Kernels::fallback(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let client = cluster.client();
+    client.create_index(IndexSpec::single("ts")).unwrap();
+    let n = 600i64;
+    // Scrambled insert order; 131 is coprime to 600, so ts values are
+    // the full 0..600 set.
+    let docs: Vec<Document> = (0..n).map(|i| metric_doc((i * 131) % n, i % 5)).collect();
+    client.insert_many(docs).unwrap();
+
+    let got: Vec<i64> = client
+        .find(
+            Filter::True,
+            FindOptions::default().sort("ts", SortDir::Desc).limit(10).batch_size(4),
+        )
+        .unwrap()
+        .map(|d| d.get_i64("ts").unwrap())
+        .collect();
+    assert_eq!(got, (n - 10..n).rev().collect::<Vec<i64>>());
+    let decodes = metrics.counter("shard.find_decodes").get();
+    assert!(
+        decodes <= 20,
+        "sorted-limit must decode at most limit docs per shard, got {decodes} for 600 docs"
+    );
+    assert!(metrics.counter("shard.plan_index_sort").get() > 0, "index sort not chosen");
+
+    // Ascending with a filter range: still index-ordered, still exact.
+    let got: Vec<i64> = client
+        .find(
+            Filter::range("ts", 100i64, 500i64),
+            FindOptions::default().sort("ts", SortDir::Asc).limit(5),
+        )
+        .unwrap()
+        .map(|d| d.get_i64("ts").unwrap())
+        .collect();
+    assert_eq!(got, vec![100, 101, 102, 103, 104]);
+    cluster.shutdown();
+}
+
+#[test]
 fn sorted_scatter_gather_is_globally_ordered_across_shards() {
     use hpcstore::mongo::query::SortDir;
     // ≥ 2 shards, documents spread across them (hashed key), inserted in
