@@ -1,0 +1,185 @@
+//! Rule: **journal-op exhaustiveness** (invariants I1/I2).
+//!
+//! The journal format is append-only and replayed after every
+//! scheduler kill, so an op code that is encoded but not replayed is
+//! silent data loss, and one that is never crash-tested is an
+//! unverified recovery path. For every `const OP_X: u8` declared in
+//! `storage/engine.rs` / `storage/delta.rs` this rule requires, in
+//! non-test code:
+//!
+//! 1. an **encode site** — `journal_record(OP_X, ...)` in the same
+//!    file (an op nobody writes is dead protocol surface);
+//! 2. a **replay arm** — `OP_X =>` in a match (recovery handles it);
+//! 3. a **crash-test marker** — a `// lint: journal-op(OP_X)` comment
+//!    in some `rust/tests/*.rs`, placed on the test that kills and
+//!    replays that frame kind.
+//!
+//! Markers naming an op that no longer exists are also flagged, so the
+//! test link rots loudly instead of silently.
+
+use super::lexer::TokKind;
+use super::{SourceTree, Violation};
+
+const RULE: &str = "journal-op";
+const OP_FILES: &[&str] =
+    &["rust/src/mongo/storage/engine.rs", "rust/src/mongo/storage/delta.rs"];
+
+pub fn check(tree: &SourceTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    // op name -> (file, decl line)
+    let mut ops: Vec<(String, String, usize)> = Vec::new();
+    for &path in OP_FILES {
+        let Some(f) = tree.lexed(path) else { continue };
+        let t = &f.tokens;
+        for i in 0..t.len() {
+            let is_op_decl = t[i].text == "const"
+                && t.get(i + 1).is_some_and(|n| {
+                    n.kind == TokKind::Ident && n.text.starts_with("OP_")
+                })
+                && t.get(i + 2).is_some_and(|c| c.text == ":")
+                && t.get(i + 3).is_some_and(|u| u.text == "u8");
+            if is_op_decl && !f.is_test_line(t[i].line) {
+                ops.push((t[i + 1].text.clone(), path.to_string(), t[i + 1].line));
+            }
+        }
+    }
+
+    for (op, path, decl_line) in &ops {
+        let f = tree.lexed(path).expect("op file was lexed above");
+        let t = &f.tokens;
+        let mut encoded = false;
+        let mut replayed = false;
+        for i in 0..t.len() {
+            if f.is_test_line(t[i].line) {
+                continue;
+            }
+            if t[i].text == "journal_record"
+                && t.get(i + 1).is_some_and(|p| p.text == "(")
+                && t.get(i + 2).is_some_and(|o| o.text == *op)
+            {
+                encoded = true;
+            }
+            if t[i].text == *op && t.get(i + 1).is_some_and(|a| a.text == "=>") {
+                replayed = true;
+            }
+        }
+        if !encoded {
+            out.push(Violation {
+                file: path.clone(),
+                line: *decl_line,
+                rule: RULE,
+                message: format!("journal op {op} is declared but never encoded via journal_record({op}, ..)"),
+            });
+        }
+        if !replayed {
+            out.push(Violation {
+                file: path.clone(),
+                line: *decl_line,
+                rule: RULE,
+                message: format!("journal op {op} has no replay arm ({op} => ...) — recovery would bail on frames it wrote"),
+            });
+        }
+        let tested = tree.paths_under("rust/tests/", ".rs").any(|tp| {
+            tree.lexed(tp).is_some_and(|tf| {
+                tf.comments.iter().any(|c| c.text.contains(&format!("lint: journal-op({op})")))
+            })
+        });
+        if !tested {
+            out.push(Violation {
+                file: path.clone(),
+                line: *decl_line,
+                rule: RULE,
+                message: format!("journal op {op} has no crash test — add a `// lint: journal-op({op})` marker on the rust/tests/ test that kills and replays it"),
+            });
+        }
+    }
+
+    // Stale markers: a test claims coverage of an op that is gone.
+    for tp in tree.paths_under("rust/tests/", ".rs") {
+        let Some(tf) = tree.lexed(tp) else { continue };
+        for c in &tf.comments {
+            let Some(rest) = c.text.split("lint: journal-op(").nth(1) else { continue };
+            let Some(name) = rest.split(')').next() else { continue };
+            if !ops.iter().any(|(op, _, _)| op == name) {
+                out.push(Violation {
+                    file: tp.to_string(),
+                    line: c.line,
+                    rule: RULE,
+                    message: format!("crash-test marker references unknown journal op {name}"),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(body: &str) -> String {
+        format!("const OP_A: u8 = 1;\nconst OP_B: u8 = 2;\n{body}")
+    }
+
+    fn tree(engine_body: &str, test_src: &str) -> SourceTree {
+        let mut t = SourceTree::new();
+        t.add("rust/src/mongo/storage/engine.rs", &engine(engine_body));
+        t.add("rust/tests/crash.rs", test_src);
+        t
+    }
+
+    #[test]
+    fn complete_op_passes() {
+        let t = tree(
+            "fn w(&mut self) { self.journal_record(OP_A, c, &p); self.journal_record(OP_B, c, &p); }\nfn r(op: u8) { match op { OP_A => {} OP_B => {} _ => {} } }",
+            "// lint: journal-op(OP_A)\n// lint: journal-op(OP_B)\nfn t() {}",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn missing_replay_arm_is_flagged_with_decl_line() {
+        let t = tree(
+            "fn w(&mut self) { self.journal_record(OP_A, c, &p); self.journal_record(OP_B, c, &p); }\nfn r(op: u8) { match op { OP_A => {} _ => {} } }",
+            "// lint: journal-op(OP_A)\n// lint: journal-op(OP_B)\nfn t() {}",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("OP_B") && v[0].message.contains("replay"));
+        assert_eq!(v[0].line, 2); // the OP_B declaration
+    }
+
+    #[test]
+    fn missing_encode_and_test_marker_are_flagged() {
+        let t = tree(
+            "fn w(&mut self) { self.journal_record(OP_A, c, &p); }\nfn r(op: u8) { match op { OP_A => {} OP_B => {} _ => {} } }",
+            "// lint: journal-op(OP_A)\nfn t() {}",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().any(|x| x.message.contains("never encoded")));
+        assert!(v.iter().any(|x| x.message.contains("no crash test")));
+    }
+
+    #[test]
+    fn stale_marker_is_flagged() {
+        let t = tree(
+            "fn w(&mut self) { self.journal_record(OP_A, c, &p); self.journal_record(OP_B, c, &p); }\nfn r(op: u8) { match op { OP_A => {} OP_B => {} _ => {} } }",
+            "// lint: journal-op(OP_A)\n// lint: journal-op(OP_B)\n// lint: journal-op(OP_GONE)\nfn t() {}",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("OP_GONE"));
+        assert_eq!(v[0].file, "rust/tests/crash.rs");
+    }
+
+    #[test]
+    fn test_module_ops_are_ignored() {
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/storage/engine.rs",
+            "#[cfg(test)]\nmod tests {\n    const OP_FAKE: u8 = 9;\n}\n",
+        );
+        assert!(check(&t).is_empty());
+    }
+}

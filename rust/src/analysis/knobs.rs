@@ -1,0 +1,164 @@
+//! Rule: **knob coverage** (the ablation surface).
+//!
+//! Every `StoreConfig` field is an experiment knob: the paper's
+//! ablations flip them from the command line, and EXPERIMENTS.md is
+//! the operator's index of what can be flipped. A field without a CLI
+//! flag can only be exercised by editing source; a flag without a docs
+//! row is invisible. For every field of `StoreConfig` in
+//! `rust/src/config/mod.rs` this rule requires:
+//!
+//! 1. a **CLI flag** — the flag name appears as a string literal in
+//!    `rust/src/main.rs` (the `FlagSpec` declaration). By default the
+//!    flag is the field name with `_` → `-`; fields whose flag is
+//!    spelled differently (e.g. `journal` → `--no-journal`) carry a
+//!    `// lint: knob(<flag>)` annotation naming it;
+//! 2. a **docs row** — `--<flag>` appears in `docs/EXPERIMENTS.md`.
+
+use super::lexer::TokKind;
+use super::{SourceTree, Violation};
+
+const RULE: &str = "knob-coverage";
+const CONFIG: &str = "rust/src/config/mod.rs";
+const MAIN: &str = "rust/src/main.rs";
+const EXPERIMENTS: &str = "docs/EXPERIMENTS.md";
+
+pub fn check(tree: &SourceTree) -> Vec<Violation> {
+    let Some(cfg) = tree.lexed(CONFIG) else { return Vec::new() };
+    let mut out = Vec::new();
+
+    // Locate `struct StoreConfig { ... }` and collect depth-1 fields.
+    let t = &cfg.tokens;
+    let mut fields: Vec<(String, usize)> = Vec::new();
+    let mut i = 0;
+    while i + 2 < t.len() {
+        if t[i].text == "struct"
+            && t[i + 1].text == "StoreConfig"
+            && t[i + 2].text == "{"
+        {
+            let mut j = i + 3;
+            let (mut bdepth, mut pdepth) = (1i32, 0i32);
+            while j < t.len() && bdepth > 0 {
+                match t[j].text.as_str() {
+                    "{" => bdepth += 1,
+                    "}" => bdepth -= 1,
+                    "(" | "[" | "<" => pdepth += 1,
+                    ")" | "]" | ">" => pdepth -= 1,
+                    _ if bdepth == 1
+                        && pdepth == 0
+                        && t[j].kind == TokKind::Ident
+                        && t[j].text != "pub"
+                        && t.get(j + 1).is_some_and(|c| c.text == ":") =>
+                    {
+                        fields.push((t[j].text.clone(), t[j].line));
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            break;
+        }
+        i += 1;
+    }
+
+    let main = tree.lexed(MAIN);
+    let experiments = tree.content(EXPERIMENTS).unwrap_or("");
+    for (field, line) in &fields {
+        // Explicit flag alias via annotation, else `_` → `-`.
+        let flag = cfg
+            .comments
+            .iter()
+            .filter(|c| {
+                c.line == *line
+                    || (c.line < *line
+                        && (c.line..*line).all(|l| cfg.is_comment_only(l)))
+            })
+            .find_map(|c| {
+                let rest = c.text.split("lint: knob(").nth(1)?;
+                rest.split(')').next().map(str::to_string)
+            })
+            .unwrap_or_else(|| field.replace('_', "-"));
+        let in_cli = main.as_ref().is_some_and(|m| {
+            m.tokens.iter().any(|tok| tok.kind == TokKind::Str && tok.text == flag)
+        });
+        if !in_cli {
+            out.push(Violation {
+                file: CONFIG.to_string(),
+                line: *line,
+                rule: RULE,
+                message: format!(
+                    "StoreConfig::{field} has no CLI flag \"{flag}\" in rust/src/main.rs (annotate `// lint: knob(<flag>)` if it is spelled differently)"
+                ),
+            });
+        }
+        if !experiments.contains(&format!("--{flag}")) {
+            out.push(Violation {
+                file: CONFIG.to_string(),
+                line: *line,
+                rule: RULE,
+                message: format!(
+                    "StoreConfig::{field} has no `--{flag}` knob row in docs/EXPERIMENTS.md"
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CONFIG_SRC: &str = "pub struct StoreConfig {\n    pub max_chunk_docs: u64,\n    // lint: knob(no-journal)\n    pub journal: bool,\n}\n";
+
+    fn tree(main: &str, experiments: &str) -> SourceTree {
+        let mut t = SourceTree::new();
+        t.add("rust/src/config/mod.rs", CONFIG_SRC);
+        t.add("rust/src/main.rs", main);
+        t.add("docs/EXPERIMENTS.md", experiments);
+        t
+    }
+
+    #[test]
+    fn covered_fields_pass() {
+        let t = tree(
+            "fn cli() { f(\"max-chunk-docs\"); f(\"no-journal\"); }",
+            "| `--max-chunk-docs` | split threshold |\n| `--no-journal` | disable WAL |\n",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn missing_flag_is_flagged_at_field_line() {
+        let t = tree(
+            "fn cli() { f(\"no-journal\"); }",
+            "| `--max-chunk-docs` | x |\n| `--no-journal` | x |\n",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("max-chunk-docs"));
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn missing_docs_row_is_flagged() {
+        let t = tree(
+            "fn cli() { f(\"max-chunk-docs\"); f(\"no-journal\"); }",
+            "| `--max-chunk-docs` | x |\n",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("--no-journal"));
+    }
+
+    #[test]
+    fn knob_annotation_renames_the_expected_flag() {
+        // Without the annotation, `journal` would demand `--journal`.
+        let t = tree(
+            "fn cli() { f(\"max-chunk-docs\"); f(\"journal\"); }",
+            "| `--max-chunk-docs` | x |\n| `--journal` | x |\n",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|x| x.message.contains("no-journal")));
+    }
+}

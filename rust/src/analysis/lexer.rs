@@ -1,0 +1,521 @@
+//! A lightweight Rust lexer — just enough structure for cross-file
+//! protocol lints, with no dependency on `syn` or the compiler.
+//!
+//! The lexer turns a source file into a flat token stream (identifiers,
+//! string literals, punctuation) with 1-indexed line numbers, plus the
+//! side tables the rules need:
+//!
+//! * `comments` — every `//` and `/* */` comment with its line, so
+//!   `// lint: allow(...)` annotations can be matched against flagged
+//!   tokens;
+//! * `comment_only` — per-line flag for "nothing but comment /
+//!   whitespace", which lets an annotation sit in the comment block
+//!   immediately above the code it excuses;
+//! * `test_lines` — per-line flag for code inside a `#[cfg(test)]`
+//!   item, so rules skip test modules without parsing items.
+//!
+//! It understands the token-level constructs that would otherwise
+//! corrupt a naive scan: nested block comments, string escapes, raw
+//! strings (`r#"..."#`), byte strings, and the char-literal vs
+//! lifetime ambiguity (`'a'` vs `'a`).
+
+/// Token classes the lint rules distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// String literal; `text` holds the *unquoted* contents.
+    Str,
+    /// Char literal (contents unparsed).
+    Char,
+    /// Numeric literal (loosely scanned).
+    Num,
+    /// Lifetime (`'a`), without the quote.
+    Lifetime,
+    /// Punctuation. Multi-char operators the rules care about (`::`,
+    /// `=>`, `->`) are fused into one token; everything else is one
+    /// char per token.
+    Punct,
+}
+
+/// One lexed token.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub text: String,
+    pub kind: TokKind,
+    /// 1-indexed source line of the token's first character.
+    pub line: usize,
+}
+
+/// One comment (either style), with leading `//` / `/*` stripped.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub text: String,
+    /// 1-indexed line of the comment's first character.
+    pub line: usize,
+}
+
+/// A lexed source file plus the per-line side tables.
+pub struct SourceFile {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    /// Index 0 unused; `comment_only[l]` — line `l` holds only
+    /// comments and/or whitespace.
+    comment_only: Vec<bool>,
+    /// Index 0 unused; `test_lines[l]` — line `l` is inside a
+    /// `#[cfg(test)]` item.
+    test_lines: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Lex `src` in full. Never fails: unterminated constructs are
+    /// closed at end of file (the real compiler rejects them; the lint
+    /// just needs to not misread the rest of the tree).
+    pub fn lex(src: &str) -> Self {
+        let lines = src.lines().count() + 2;
+        let mut lx = Lexer {
+            chars: src.chars().collect(),
+            pos: 0,
+            line: 1,
+            tokens: Vec::new(),
+            comments: Vec::new(),
+            code_on_line: vec![false; lines],
+            comment_on_line: vec![false; lines],
+        };
+        lx.run();
+        let comment_only = (0..lines)
+            .map(|l| lx.comment_on_line[l] && !lx.code_on_line[l])
+            .collect();
+        let mut f = SourceFile {
+            tokens: lx.tokens,
+            comments: lx.comments,
+            comment_only,
+            test_lines: vec![false; lines],
+        };
+        f.mask_cfg_test();
+        f
+    }
+
+    /// Is `line` (1-indexed) comment-and-whitespace only?
+    pub fn is_comment_only(&self, line: usize) -> bool {
+        self.comment_only.get(line).copied().unwrap_or(false)
+    }
+
+    /// Is `line` (1-indexed) inside a `#[cfg(test)]` item?
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_lines.get(line).copied().unwrap_or(false)
+    }
+
+    /// All comment text attached to `line` (there can be several
+    /// `/* */` on one line, though in practice zero or one).
+    pub fn comments_on_line(&self, line: usize) -> impl Iterator<Item = &str> {
+        self.comments.iter().filter(move |c| c.line == line).map(|c| c.text.as_str())
+    }
+
+    /// Does an annotation containing `needle` cover `line`? True if a
+    /// comment on `line` itself matches, or if one matches in the
+    /// contiguous block of comment-only lines immediately above.
+    pub fn annotated(&self, line: usize, needle: &str) -> bool {
+        if self.comments_on_line(line).any(|c| c.contains(needle)) {
+            return true;
+        }
+        let mut l = line;
+        while l > 1 && self.is_comment_only(l - 1) {
+            l -= 1;
+            if self.comments_on_line(l).any(|c| c.contains(needle)) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Mark every line covered by a `#[cfg(test)]` item. The scan
+    /// finds the attribute, skips any further attributes, then masks
+    /// through the item's `{ ... }` body (or to the terminating `;`
+    /// for bodiless items like `#[cfg(test)] use ...;`).
+    fn mask_cfg_test(&mut self) {
+        let t = &self.tokens;
+        let mut i = 0;
+        while i + 6 < t.len() {
+            let is_cfg_test = t[i].text == "#"
+                && t[i + 1].text == "["
+                && t[i + 2].text == "cfg"
+                && t[i + 3].text == "("
+                && t[i + 4].text == "test"
+                && t[i + 5].text == ")"
+                && t[i + 6].text == "]";
+            if !is_cfg_test {
+                i += 1;
+                continue;
+            }
+            let start_line = t[i].line;
+            let mut j = i + 7;
+            // Skip any further attributes on the item.
+            while j + 1 < t.len() && t[j].text == "#" && t[j + 1].text == "[" {
+                let mut depth = 0usize;
+                j += 1;
+                while j < t.len() {
+                    match t[j].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            // Mask to the end of the item: first `{...}` block, or the
+            // `;` that ends a bodiless item.
+            let mut end_line = start_line;
+            let mut depth = 0usize;
+            while j < t.len() {
+                match t[j].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth = depth.saturating_sub(1);
+                        if depth == 0 {
+                            end_line = t[j].line;
+                            break;
+                        }
+                    }
+                    ";" if depth == 0 => {
+                        end_line = t[j].line;
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            for l in start_line..=end_line.min(self.test_lines.len() - 1) {
+                self.test_lines[l] = true;
+            }
+            i = j.max(i + 1);
+        }
+    }
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+    tokens: Vec<Tok>,
+    comments: Vec<Comment>,
+    code_on_line: Vec<bool>,
+    comment_on_line: Vec<bool>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+
+    fn mark_code(&mut self, line: usize) {
+        if let Some(slot) = self.code_on_line.get_mut(line) {
+            *slot = true;
+        }
+    }
+
+    fn mark_comment(&mut self, from: usize, to: usize) {
+        for l in from..=to {
+            if let Some(slot) = self.comment_on_line.get_mut(l) {
+                *slot = true;
+            }
+        }
+    }
+
+    fn push(&mut self, text: String, kind: TokKind, line: usize) {
+        self.mark_code(line);
+        self.tokens.push(Tok { text, kind, line });
+    }
+
+    fn run(&mut self) {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            match c {
+                c if c.is_whitespace() => {
+                    self.bump();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(),
+                '/' if self.peek(1) == Some('*') => self.block_comment(),
+                '"' => self.string(line),
+                'r' | 'b' if self.raw_or_byte_string(line) => {}
+                '\'' => self.char_or_lifetime(line),
+                c if c.is_alphabetic() || c == '_' => self.ident(line),
+                c if c.is_ascii_digit() => self.number(line),
+                _ => self.punct(line),
+            }
+        }
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        self.bump();
+        self.bump();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.mark_comment(line, line);
+        self.comments.push(Comment { text: text.trim().to_string(), line });
+    }
+
+    fn block_comment(&mut self) {
+        let start = self.line;
+        let mut text = String::new();
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                self.bump();
+                self.bump();
+                text.push_str("/*");
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+                text.push_str("*/");
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        let end = self.line;
+        self.mark_comment(start, end);
+        self.comments.push(Comment { text: text.trim().to_string(), line: start });
+    }
+
+    fn string(&mut self, line: usize) {
+        let mut text = String::new();
+        self.bump(); // opening quote
+        while let Some(c) = self.peek(0) {
+            if c == '\\' {
+                text.push(c);
+                self.bump();
+                if let Some(e) = self.bump() {
+                    text.push(e);
+                }
+            } else if c == '"' {
+                self.bump();
+                break;
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.push(text, TokKind::Str, line);
+    }
+
+    /// Raw (`r"..."`, `r#"..."#`) and byte (`b"..."`, `br#"..."#`)
+    /// strings. Returns false (consuming nothing) when the `r`/`b` is
+    /// just the start of an identifier.
+    fn raw_or_byte_string(&mut self, line: usize) -> bool {
+        let mut ahead = 1; // past the r/b
+        if self.peek(0) == Some('b') && self.peek(1) == Some('r') {
+            ahead = 2;
+        }
+        let mut hashes = 0usize;
+        while self.peek(ahead) == Some('#') {
+            ahead += 1;
+            hashes += 1;
+        }
+        if self.peek(ahead) != Some('"') {
+            return false;
+        }
+        // `b"..."` without `r` is a plain byte string: no raw quoting.
+        let raw = self.peek(0) == Some('r') || self.peek(1) == Some('r');
+        if !raw && hashes > 0 {
+            return false;
+        }
+        for _ in 0..=ahead {
+            self.bump(); // prefix + hashes + opening quote
+        }
+        let mut text = String::new();
+        loop {
+            let Some(c) = self.peek(0) else { break };
+            if !raw && c == '\\' {
+                text.push(c);
+                self.bump();
+                if let Some(e) = self.bump() {
+                    text.push(e);
+                }
+                continue;
+            }
+            if c == '"' {
+                let mut matched = true;
+                for h in 0..hashes {
+                    if self.peek(1 + h) != Some('#') {
+                        matched = false;
+                        break;
+                    }
+                }
+                if matched {
+                    for _ in 0..=hashes {
+                        self.bump();
+                    }
+                    break;
+                }
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push(text, TokKind::Str, line);
+        true
+    }
+
+    fn char_or_lifetime(&mut self, line: usize) {
+        // `'a` (lifetime) vs `'a'` (char): a lifetime is `'` + ident
+        // char + NOT a closing quote. `'\...'` is always a char.
+        let c1 = self.peek(1);
+        let is_lifetime = matches!(c1, Some(c) if c.is_alphabetic() || c == '_')
+            && self.peek(2) != Some('\'');
+        if is_lifetime {
+            self.bump(); // quote
+            let mut text = String::new();
+            while let Some(c) = self.peek(0) {
+                if c.is_alphanumeric() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            self.push(text, TokKind::Lifetime, line);
+            return;
+        }
+        // Char literal.
+        self.bump(); // opening quote
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\\' {
+                text.push(c);
+                self.bump();
+                if let Some(e) = self.bump() {
+                    text.push(e);
+                }
+            } else if c == '\'' {
+                self.bump();
+                break;
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.push(text, TokKind::Char, line);
+    }
+
+    fn ident(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(text, TokKind::Ident, line);
+    }
+
+    fn number(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else if c == '.'
+                && matches!(self.peek(1), Some(d) if d.is_ascii_digit())
+            {
+                // `1.5` continues the number; `1..5` does not.
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(text, TokKind::Num, line);
+    }
+
+    fn punct(&mut self, line: usize) {
+        let c = self.peek(0).unwrap_or(' ');
+        // Fuse the multi-char operators the rules match on.
+        let fused = match (c, self.peek(1)) {
+            (':', Some(':')) => Some("::"),
+            ('=', Some('>')) => Some("=>"),
+            ('-', Some('>')) => Some("->"),
+            _ => None,
+        };
+        if let Some(op) = fused {
+            self.bump();
+            self.bump();
+            self.push(op.to_string(), TokKind::Punct, line);
+        } else {
+            self.bump();
+            self.push(c.to_string(), TokKind::Punct, line);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_comments_and_lifetimes() {
+        let f = SourceFile::lex(
+            "let s = \"a // not a comment\"; // real\nlet r = r#\"raw \"x\" body\"#;\nlet c: &'a str = 'b'.into();\n",
+        );
+        let strs: Vec<&str> = f
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, vec!["a // not a comment", "raw \"x\" body"]);
+        assert_eq!(f.comments.len(), 1);
+        assert_eq!(f.comments[0].text, "real");
+        assert!(f.tokens.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "a"));
+        assert!(f.tokens.iter().any(|t| t.kind == TokKind::Char && t.text == "b"));
+    }
+
+    #[test]
+    fn cfg_test_masking_and_comment_blocks() {
+        let src = "fn live() {}\n// above\n// block\nfn lint_target() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let f = SourceFile::lex(src);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(6));
+        assert!(f.is_test_line(7));
+        assert!(f.is_comment_only(2) && f.is_comment_only(3));
+        assert!(f.annotated(4, "block"));
+        assert!(!f.annotated(1, "block"));
+    }
+
+    #[test]
+    fn nested_block_comments_do_not_leak() {
+        let f = SourceFile::lex("/* a /* nested */ still comment */ fn f() {}\n");
+        assert!(f.tokens.iter().any(|t| t.text == "fn"));
+        assert!(!f.tokens.iter().any(|t| t.text == "nested"));
+    }
+}

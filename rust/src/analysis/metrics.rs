@@ -1,0 +1,322 @@
+//! Rule: **metrics registry** (the run-report surface).
+//!
+//! The bench harnesses and the paper's tables are assembled from
+//! metric names looked up at report time, so a typo'd name at a call
+//! site doesn't fail — it silently records into a counter nobody
+//! reads. This rule forces every metric name through one declared
+//! catalog (`metrics::names` in `rust/src/metrics/registry.rs`):
+//!
+//! 1. **no bare literals** — `.counter("...")` / `.observe("...")` /
+//!    `.gauge("...")` with a string literal in non-test
+//!    `rust/src/mongo/**` is flagged; call sites must use
+//!    `names::<CONST>`;
+//! 2. **no unknown constants** — `names::X` where `X` is not in the
+//!    catalog (fixture trees; the compiler catches this in the real
+//!    build);
+//! 3. **no dead entries** — a catalog constant never referenced from
+//!    non-test `rust/src/mongo/**` is flagged at its declaration;
+//! 4. **docs stay honest** — the table between
+//!    `<!-- metrics-catalog:begin -->` / `<!-- metrics-catalog:end -->`
+//!    in `docs/ARCHITECTURE.md` must list exactly the catalog's names
+//!    with matching kinds.
+
+use super::lexer::TokKind;
+use super::{SourceTree, Violation};
+
+const RULE: &str = "metrics-registry";
+const REGISTRY: &str = "rust/src/metrics/registry.rs";
+const ARCH: &str = "docs/ARCHITECTURE.md";
+
+pub fn check(tree: &SourceTree) -> Vec<Violation> {
+    let Some(reg) = tree.lexed(REGISTRY) else { return Vec::new() };
+    let mut out = Vec::new();
+
+    // Catalog: const ident -> (metric name, decl line, kind from CATALOG).
+    let t = &reg.tokens;
+    let mut consts: Vec<(String, String, usize)> = Vec::new();
+    let mut names_body = None;
+    for i in 0..t.len() {
+        if t[i].text == "mod" && t.get(i + 1).is_some_and(|n| n.text == "names") {
+            names_body = Some(i + 2);
+            break;
+        }
+    }
+    if let Some(start) = names_body {
+        let mut depth = 0i32;
+        let mut i = start;
+        while i < t.len() {
+            match t[i].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            // `pub const X: &str = "role.metric";`
+            if t[i].text == "const"
+                && t.get(i + 1).is_some_and(|n| n.kind == TokKind::Ident)
+                && t.get(i + 2).is_some_and(|c| c.text == ":")
+                && t.get(i + 3).is_some_and(|a| a.text == "&")
+                && t.get(i + 4).is_some_and(|s| s.text == "str")
+                && t.get(i + 5).is_some_and(|e| e.text == "=")
+                && t.get(i + 6).is_some_and(|v| v.kind == TokKind::Str)
+            {
+                consts.push((t[i + 1].text.clone(), t[i + 6].text.clone(), t[i + 1].line));
+            }
+            i += 1;
+        }
+    }
+
+    // Kinds from the CATALOG table: `(IDENT, "kind")` pairs.
+    let mut kinds: Vec<(String, String)> = Vec::new();
+    for i in 0..t.len() {
+        if t[i].text == "("
+            && t.get(i + 1).is_some_and(|n| n.kind == TokKind::Ident)
+            && t.get(i + 2).is_some_and(|c| c.text == ",")
+            && t.get(i + 3).is_some_and(|k| k.kind == TokKind::Str)
+            && t.get(i + 4).is_some_and(|c| c.text == ")")
+            && consts.iter().any(|(name, _, _)| *name == t[i + 1].text)
+        {
+            kinds.push((t[i + 1].text.clone(), t[i + 3].text.clone()));
+        }
+    }
+    for (name, _, line) in &consts {
+        if !kinds.iter().any(|(n, _)| n == name) {
+            out.push(Violation {
+                file: REGISTRY.to_string(),
+                line: *line,
+                rule: RULE,
+                message: format!("metric constant {name} is missing from the CATALOG kind table"),
+            });
+        }
+    }
+
+    // Call sites and references across non-test mongo code.
+    let mut referenced: Vec<String> = Vec::new();
+    for path in tree.paths_under("rust/src/mongo/", ".rs") {
+        let f = tree.lexed(path).expect("listed path is present");
+        let ft = &f.tokens;
+        for i in 0..ft.len() {
+            if f.is_test_line(ft[i].line) {
+                continue;
+            }
+            let is_record_call = ft[i].text == "."
+                && ft.get(i + 1).is_some_and(|m| {
+                    matches!(m.text.as_str(), "counter" | "observe" | "gauge")
+                })
+                && ft.get(i + 2).is_some_and(|p| p.text == "(");
+            if is_record_call {
+                if let Some(arg) = ft.get(i + 3) {
+                    if arg.kind == TokKind::Str {
+                        out.push(Violation {
+                            file: path.to_string(),
+                            line: arg.line,
+                            rule: RULE,
+                            message: format!(
+                                "bare metric-name literal \"{}\" — use a metrics::names constant so the catalog stays authoritative",
+                                arg.text
+                            ),
+                        });
+                    }
+                }
+            }
+            if ft[i].text == "names"
+                && ft.get(i + 1).is_some_and(|c| c.text == "::")
+                && ft.get(i + 2).is_some_and(|n| n.kind == TokKind::Ident)
+            {
+                let ident = &ft[i + 2].text;
+                if consts.iter().any(|(n, _, _)| n == ident) {
+                    referenced.push(ident.clone());
+                } else {
+                    out.push(Violation {
+                        file: path.to_string(),
+                        line: ft[i + 2].line,
+                        rule: RULE,
+                        message: format!("names::{ident} is not declared in the metrics catalog"),
+                    });
+                }
+            }
+        }
+    }
+    for (name, value, line) in &consts {
+        if !referenced.iter().any(|r| r == name) {
+            out.push(Violation {
+                file: REGISTRY.to_string(),
+                line: *line,
+                rule: RULE,
+                message: format!(
+                    "metric {name} (\"{value}\") is registered but never emitted from rust/src/mongo"
+                ),
+            });
+        }
+    }
+
+    check_docs(tree, &consts, &kinds, &mut out);
+    out
+}
+
+/// Cross-check the marker-delimited table in docs/ARCHITECTURE.md.
+fn check_docs(
+    tree: &SourceTree,
+    consts: &[(String, String, usize)],
+    kinds: &[(String, String)],
+    out: &mut Vec<Violation>,
+) {
+    let Some(md) = tree.content(ARCH) else {
+        out.push(Violation {
+            file: ARCH.to_string(),
+            line: 0,
+            rule: RULE,
+            message: "docs/ARCHITECTURE.md is missing — the metrics catalog table cannot be cross-checked".to_string(),
+        });
+        return;
+    };
+    let mut in_table = false;
+    let mut saw_markers = false;
+    let mut doc_rows: Vec<(String, String, usize)> = Vec::new(); // (name, kind, line)
+    for (idx, line) in md.lines().enumerate() {
+        let lineno = idx + 1;
+        if line.contains("metrics-catalog:begin") {
+            in_table = true;
+            saw_markers = true;
+            continue;
+        }
+        if line.contains("metrics-catalog:end") {
+            in_table = false;
+            continue;
+        }
+        if !in_table || !line.trim_start().starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.trim().trim_matches('|').split('|').collect();
+        if cells.len() < 2 {
+            continue;
+        }
+        let name_cell = cells[0].trim();
+        if !name_cell.starts_with('`') {
+            continue; // header or separator row
+        }
+        let name = name_cell.trim_matches('`').to_string();
+        doc_rows.push((name, cells[1].trim().to_string(), lineno));
+    }
+    if !saw_markers {
+        out.push(Violation {
+            file: ARCH.to_string(),
+            line: 0,
+            rule: RULE,
+            message: "no <!-- metrics-catalog:begin/end --> markers in docs/ARCHITECTURE.md — the metrics table is unchecked".to_string(),
+        });
+        return;
+    }
+    for (name, kind, lineno) in &doc_rows {
+        match consts.iter().find(|(_, v, _)| v == name) {
+            None => out.push(Violation {
+                file: ARCH.to_string(),
+                line: *lineno,
+                rule: RULE,
+                message: format!("docs list metric \"{name}\" which is not in the catalog"),
+            }),
+            Some((cname, _, _)) => {
+                if let Some((_, ckind)) = kinds.iter().find(|(n, _)| n == cname) {
+                    if ckind != kind {
+                        out.push(Violation {
+                            file: ARCH.to_string(),
+                            line: *lineno,
+                            rule: RULE,
+                            message: format!(
+                                "docs call \"{name}\" a {kind}; the catalog says {ckind}"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    for (_, value, line) in consts {
+        if !doc_rows.iter().any(|(n, _, _)| n == value) {
+            out.push(Violation {
+                file: REGISTRY.to_string(),
+                line: *line,
+                rule: RULE,
+                message: format!("metric \"{value}\" is missing from the docs/ARCHITECTURE.md catalog table"),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REG: &str = "pub mod names {\n    pub const SHARD_FIND_NS: &str = \"shard.find_ns\";\n    pub const SHARD_SPLITS: &str = \"shard.splits\";\n    pub const CATALOG: &[(&str, &str)] = &[\n        (SHARD_FIND_NS, \"histogram\"),\n        (SHARD_SPLITS, \"counter\"),\n    ];\n}\n";
+    const DOCS: &str = "<!-- metrics-catalog:begin -->\n| name | kind | description |\n| --- | --- | --- |\n| `shard.find_ns` | histogram | find latency |\n| `shard.splits` | counter | splits |\n<!-- metrics-catalog:end -->\n";
+
+    fn tree(shard: &str, docs: &str) -> SourceTree {
+        let mut t = SourceTree::new();
+        t.add("rust/src/metrics/registry.rs", REG);
+        t.add("rust/src/mongo/server/shard.rs", shard);
+        t.add("docs/ARCHITECTURE.md", docs);
+        t
+    }
+
+    #[test]
+    fn catalogued_call_sites_pass() {
+        let t = tree(
+            "fn f(&self) { self.metrics.observe(names::SHARD_FIND_NS, 1); self.metrics.counter(names::SHARD_SPLITS).inc(); }",
+            DOCS,
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn bare_literal_is_flagged_with_line() {
+        let t = tree(
+            "fn f(&self) { self.metrics.observe(names::SHARD_FIND_NS, 1); self.metrics.counter(names::SHARD_SPLITS).inc(); }\nfn g(&self) { self.metrics.counter(\"shard.splits\").inc(); }",
+            DOCS,
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("bare metric-name literal"));
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn typo_constant_and_dead_entry_are_flagged() {
+        let t = tree(
+            "fn f(&self) { self.metrics.observe(names::SHARD_FIND_MS, 1); }",
+            DOCS,
+        );
+        let v = check(&t);
+        assert!(v.iter().any(|x| x.message.contains("SHARD_FIND_MS")), "{v:?}");
+        // Both catalog entries are now unreferenced.
+        assert!(v.iter().any(|x| x.message.contains("never emitted")), "{v:?}");
+    }
+
+    #[test]
+    fn docs_drift_is_flagged() {
+        let t = tree(
+            "fn f(&self) { self.metrics.observe(names::SHARD_FIND_NS, 1); self.metrics.counter(names::SHARD_SPLITS).inc(); }",
+            "<!-- metrics-catalog:begin -->\n| `shard.find_ns` | counter | wrong kind |\n| `shard.ghost` | counter | no such metric |\n<!-- metrics-catalog:end -->\n",
+        );
+        let v = check(&t);
+        assert!(v.iter().any(|x| x.message.contains("the catalog says histogram")), "{v:?}");
+        assert!(v.iter().any(|x| x.message.contains("shard.ghost")), "{v:?}");
+        assert!(
+            v.iter().any(|x| x.message.contains("shard.splits")
+                && x.message.contains("missing from the docs")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn test_module_literals_are_ignored() {
+        let t = tree(
+            "fn f(&self) { self.metrics.observe(names::SHARD_FIND_NS, 1); self.metrics.counter(names::SHARD_SPLITS).inc(); }\n#[cfg(test)]\nmod tests {\n    fn t(m: &Registry) { m.counter(\"shard.splits\").inc(); }\n}\n",
+            DOCS,
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+}

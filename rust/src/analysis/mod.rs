@@ -1,0 +1,160 @@
+//! `pallas-lint`: offline static analysis for the project's cross-file
+//! protocol invariants (ARCHITECTURE.md §8).
+//!
+//! The repo's correctness story leans on invariants no single file can
+//! see: every journal op needs a replay arm *and* a crash test, every
+//! wire variant a dispatch arm *and* a reply, every metric literal a
+//! catalog entry, every `StoreConfig` field a CLI flag and a docs row.
+//! Five rule families machine-check them over a lexed token stream
+//! ([`lexer`]) — no `syn`, no build, no network:
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | [`journal`]  | journal-op exhaustiveness (encode ↔ replay ↔ crash test) |
+//! | [`wire`]     | wire pairing (variant ↔ dispatch arm ↔ reply) |
+//! | [`metrics`]  | metric names resolve against one catalog + docs table |
+//! | [`knobs`]    | `StoreConfig` field ↔ CLI flag ↔ EXPERIMENTS.md row |
+//! | [`panics`]   | no unannotated panic paths; no guard held across send/recv |
+//!
+//! Rules run over a [`SourceTree`] — a path→content map — so the same
+//! code path checks both the real repository (the `rust/tests/lint.rs`
+//! driver and the `pallas-lint` binary) and the known-bad fixture
+//! trees in each rule's self-tests.
+
+pub mod journal;
+pub mod knobs;
+pub mod lexer;
+pub mod metrics;
+pub mod panics;
+pub mod wire;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use lexer::SourceFile;
+
+/// One lint finding, pointing at a repo-relative `file:line`.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Repo-relative path with forward slashes.
+    pub file: String,
+    /// 1-indexed line (0 when the finding is file-scoped).
+    pub line: usize,
+    /// Stable rule family name (`journal-op`, `wire-pairing`,
+    /// `metrics-registry`, `knob-coverage`, `panic-path`).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The analyzed file set: repo-relative path → contents.
+///
+/// Built either from a repository root ([`SourceTree::from_repo_root`])
+/// or assembled by hand for fixture tests ([`SourceTree::add`]). Rust
+/// files are lexed once, on first access, and cached.
+#[derive(Default)]
+pub struct SourceTree {
+    files: BTreeMap<String, String>,
+    lexed: std::cell::RefCell<BTreeMap<String, std::rc::Rc<SourceFile>>>,
+}
+
+impl SourceTree {
+    /// Empty tree (fixture tests add files with [`SourceTree::add`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one file. `path` is repo-relative with forward slashes
+    /// (e.g. `rust/src/mongo/wire.rs`).
+    pub fn add(&mut self, path: &str, content: &str) -> &mut Self {
+        self.files.insert(path.to_string(), content.to_string());
+        self
+    }
+
+    /// Load the lint surface from a repository checkout: every `.rs`
+    /// under `rust/src/` and `rust/tests/`, plus the two docs files the
+    /// rules cross-check.
+    pub fn from_repo_root(root: &Path) -> std::io::Result<Self> {
+        let mut tree = Self::new();
+        for dir in ["rust/src", "rust/tests"] {
+            collect_rs(&root.join(dir), root, &mut tree)?;
+        }
+        for doc in ["docs/ARCHITECTURE.md", "docs/EXPERIMENTS.md"] {
+            if let Ok(content) = std::fs::read_to_string(root.join(doc)) {
+                tree.add(doc, &content);
+            }
+        }
+        Ok(tree)
+    }
+
+    /// Raw contents of one file, if present.
+    pub fn content(&self, path: &str) -> Option<&str> {
+        self.files.get(path).map(String::as_str)
+    }
+
+    /// Lexed view of one Rust file, if present (cached).
+    pub fn lexed(&self, path: &str) -> Option<std::rc::Rc<SourceFile>> {
+        if let Some(f) = self.lexed.borrow().get(path) {
+            return Some(f.clone());
+        }
+        let content = self.files.get(path)?;
+        let f = std::rc::Rc::new(SourceFile::lex(content));
+        self.lexed.borrow_mut().insert(path.to_string(), f.clone());
+        Some(f)
+    }
+
+    /// Paths matching `prefix` and `suffix` (both may be empty).
+    pub fn paths_under<'a>(
+        &'a self,
+        prefix: &'a str,
+        suffix: &'a str,
+    ) -> impl Iterator<Item = &'a str> {
+        self.files
+            .keys()
+            .filter(move |p| p.starts_with(prefix) && p.ends_with(suffix))
+            .map(String::as_str)
+    }
+}
+
+fn collect_rs(dir: &Path, root: &Path, tree: &mut SourceTree) -> std::io::Result<()> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // absent subtree: nothing to lint
+    };
+    for entry in entries {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, root, tree)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            tree.add(&rel, &std::fs::read_to_string(&path)?);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule family over the tree; findings are sorted by file
+/// then line so output (and test failures) are deterministic.
+pub fn run_all(tree: &SourceTree) -> Vec<Violation> {
+    let mut v = Vec::new();
+    v.extend(journal::check(tree));
+    v.extend(wire::check(tree));
+    v.extend(metrics::check(tree));
+    v.extend(knobs::check(tree));
+    v.extend(panics::check(tree));
+    v.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    v
+}

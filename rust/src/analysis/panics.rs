@@ -1,0 +1,236 @@
+//! Rule: **panic paths** (invariants I4–I7 stay reachable).
+//!
+//! A shard thread that panics takes its mailbox with it: every client
+//! blocked on a reply channel hangs, and the scheduler sees a stuck —
+//! not failed — job. So server-side code must propagate errors, and
+//! the rare provably-unreachable `unwrap`/`expect` must say *why* it
+//! is unreachable where the next editor will read it. In non-test
+//! code under `rust/src/mongo/{server,storage,sharding}`:
+//!
+//! 1. `unwrap()`, `expect(...)`, `panic!`, and `unreachable!` are
+//!    flagged unless covered by a `// lint: allow(panic, <reason>)`
+//!    annotation on the same line or in the comment block immediately
+//!    above;
+//! 2. a mutex guard bound by `let g = ....lock()...;` that is still
+//!    live (not `drop(g)`-ed, block not closed) at a channel
+//!    `send`/`recv` call is flagged — holding a lock across a
+//!    blocking channel op in event-loop code is a deadlock waiting
+//!    for its schedule (`// lint: allow(lock, <reason>)` to override).
+
+use super::lexer::{SourceFile, TokKind};
+use super::{SourceTree, Violation};
+
+const RULE: &str = "panic-path";
+const SCOPES: &[&str] = &[
+    "rust/src/mongo/server/",
+    "rust/src/mongo/storage/",
+    "rust/src/mongo/sharding/",
+];
+
+pub fn check(tree: &SourceTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for &scope in SCOPES {
+        for path in tree.paths_under(scope, ".rs") {
+            let f = tree.lexed(path).expect("listed path is present");
+            check_panics(&f, path, &mut out);
+            check_lock_discipline(&f, path, &mut out);
+        }
+    }
+    out
+}
+
+fn check_panics(f: &SourceFile, path: &str, out: &mut Vec<Violation>) {
+    let t = &f.tokens;
+    for i in 0..t.len() {
+        if f.is_test_line(t[i].line) {
+            continue;
+        }
+        let site = match t[i].text.as_str() {
+            "unwrap"
+                if i > 0
+                    && t[i - 1].text == "."
+                    && t.get(i + 1).is_some_and(|p| p.text == "(")
+                    && t.get(i + 2).is_some_and(|p| p.text == ")") =>
+            {
+                Some("unwrap()")
+            }
+            "expect"
+                if i > 0
+                    && t[i - 1].text == "."
+                    && t.get(i + 1).is_some_and(|p| p.text == "(") =>
+            {
+                Some("expect(..)")
+            }
+            "panic" | "unreachable"
+                if t.get(i + 1).is_some_and(|b| b.text == "!") =>
+            {
+                Some("panic-style macro")
+            }
+            _ => None,
+        };
+        let Some(what) = site else { continue };
+        if !f.annotated(t[i].line, "lint: allow(panic") {
+            out.push(Violation {
+                file: path.to_string(),
+                line: t[i].line,
+                rule: RULE,
+                message: format!(
+                    "{what} in server-side code — propagate the error, or annotate `// lint: allow(panic, <reason>)` with why it cannot fire"
+                ),
+            });
+        }
+    }
+}
+
+/// Flag a `let`-bound lock guard still live at a channel send/recv.
+fn check_lock_discipline(f: &SourceFile, path: &str, out: &mut Vec<Violation>) {
+    let t = &f.tokens;
+    for i in 0..t.len() {
+        if t[i].text != "let" || f.is_test_line(t[i].line) {
+            continue;
+        }
+        let mut g = i + 1;
+        if t.get(g).is_some_and(|m| m.text == "mut") {
+            g += 1;
+        }
+        let Some(guard) = t.get(g).filter(|n| n.kind == TokKind::Ident) else {
+            continue;
+        };
+        if t.get(g + 1).map(|e| e.text.as_str()) != Some("=") {
+            continue;
+        }
+        // Does the initializer (up to `;`) take a lock?
+        let mut j = g + 2;
+        let mut takes_lock = false;
+        while j < t.len() && t[j].text != ";" {
+            if t[j].text == "."
+                && t.get(j + 1).is_some_and(|m| m.text == "lock")
+                && t.get(j + 2).is_some_and(|p| p.text == "(")
+            {
+                takes_lock = true;
+            }
+            j += 1;
+        }
+        if !takes_lock {
+            continue;
+        }
+        // Guard is live from the `;` until `drop(guard)` or the end of
+        // the enclosing block.
+        let mut k = j + 1;
+        let mut depth = 0i32;
+        while k < t.len() {
+            match t[k].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth < 0 {
+                        break; // enclosing block closed: guard dropped
+                    }
+                }
+                "drop"
+                    if t.get(k + 1).is_some_and(|p| p.text == "(")
+                        && t.get(k + 2).is_some_and(|n| n.text == guard.text) =>
+                {
+                    break;
+                }
+                "." if t.get(k + 1).is_some_and(|m| {
+                    matches!(
+                        m.text.as_str(),
+                        "send" | "try_send" | "recv" | "try_recv" | "recv_timeout"
+                    )
+                }) && t.get(k + 2).is_some_and(|p| p.text == "(") =>
+                {
+                    let line = t[k + 1].line;
+                    if !f.annotated(line, "lint: allow(lock") {
+                        out.push(Violation {
+                            file: path.to_string(),
+                            line,
+                            rule: RULE,
+                            message: format!(
+                                "mutex guard `{}` (locked at line {}) is held across a channel {} — drop it first or annotate `// lint: allow(lock, <reason>)`",
+                                guard.text,
+                                guard.line,
+                                t[k + 1].text
+                            ),
+                        });
+                    }
+                    break; // one finding per guard is enough
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree(src: &str) -> SourceTree {
+        let mut t = SourceTree::new();
+        t.add("rust/src/mongo/server/shard.rs", src);
+        t
+    }
+
+    #[test]
+    fn annotated_panics_pass() {
+        let t = tree(
+            "fn f(x: Option<u8>) -> u8 {\n    // lint: allow(panic, x is checked by the caller)\n    x.unwrap()\n}\n",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn unannotated_unwrap_expect_and_macros_are_flagged() {
+        let t = tree(
+            "fn f(x: Option<u8>) -> u8 { x.unwrap() }\nfn g(x: Option<u8>) -> u8 { x.expect(\"always\") }\nfn h() { panic!(\"boom\") }\nfn i() { unreachable!() }\n",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 4, "{v:?}");
+        assert_eq!(v.iter().map(|x| x.line).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn test_module_panics_pass() {
+        let t = tree(
+            "fn f() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { None::<u8>.unwrap(); }\n}\n",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn out_of_scope_files_are_not_linted() {
+        let mut t = SourceTree::new();
+        // bson.rs sits directly under mongo/, outside the server scope.
+        t.add("rust/src/mongo/bson.rs", "fn f(x: Option<u8>) -> u8 { x.unwrap() }");
+        assert!(check(&t).is_empty());
+    }
+
+    #[test]
+    fn guard_across_send_is_flagged() {
+        let t = tree(
+            "fn f(&self) {\n    // lint: allow(panic, fixture)\n    let g = self.state.lock().unwrap();\n    self.tx.send(1);\n}\n",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("held across a channel send"));
+        assert_eq!(v[0].line, 4);
+    }
+
+    #[test]
+    fn dropped_guard_before_send_passes() {
+        let t = tree(
+            "fn f(&self) {\n    // lint: allow(panic, fixture)\n    let g = self.state.lock().unwrap();\n    drop(g);\n    self.tx.send(1);\n}\n",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn block_scoped_guard_passes() {
+        let t = tree(
+            "fn f(&self) {\n    {\n        // lint: allow(panic, fixture)\n        let g = self.state.lock().unwrap();\n    }\n    self.tx.send(1);\n}\n",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+}

@@ -1,0 +1,330 @@
+//! Rule: **wire pairing** (invariant I3).
+//!
+//! Every request enum variant (`ShardRequest` / `ConfigRequest` in
+//! `mongo/wire.rs`, `RouterRequest` in `mongo/server/router.rs`) is a
+//! protocol message, and a message nobody dispatches is a hang: the
+//! sender blocks on a reply channel whose sender side was dropped.
+//! For every variant of every `*Request` enum this rule requires, in
+//! non-test `rust/src/mongo/**` code:
+//!
+//! 1. a **dispatch arm** — `Enum::Variant ... =>` in some match (a
+//!    variant swallowed by a `_ =>` wildcard does not count, and any
+//!    wildcard arm in a match that dispatches request variants is
+//!    itself flagged: it would silently absorb the *next* variant
+//!    someone adds);
+//! 2. a **reply counterpart** — a `reply:` field in the variant, or an
+//!    explicit `// lint: allow(no_reply, <reason>)` annotation for
+//!    genuinely one-way messages (map pushes, shutdown).
+
+use super::lexer::TokKind;
+use super::{SourceTree, Violation};
+
+const RULE: &str = "wire-pairing";
+const ENUM_FILES: &[&str] =
+    &["rust/src/mongo/wire.rs", "rust/src/mongo/server/router.rs"];
+
+struct Variant {
+    enum_name: String,
+    name: String,
+    file: String,
+    line: usize,
+    has_reply: bool,
+}
+
+pub fn check(tree: &SourceTree) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut variants: Vec<Variant> = Vec::new();
+    for &path in ENUM_FILES {
+        if tree.lexed(path).is_some() {
+            collect_variants(tree, path, &mut variants);
+        }
+    }
+    let enum_names: Vec<&str> =
+        variants.iter().map(|v| v.enum_name.as_str()).collect();
+
+    // Scan every non-test mongo file once for dispatch arms and
+    // wildcard arms inside request-dispatch matches.
+    let mut dispatched: Vec<(String, String)> = Vec::new(); // (enum, variant)
+    for path in tree.paths_under("rust/src/mongo/", ".rs") {
+        let f = tree.lexed(path).expect("listed path is present");
+        scan_matches(&f, path, &enum_names, &mut dispatched, &mut out);
+    }
+
+    for v in &variants {
+        if !dispatched.iter().any(|(e, n)| *e == v.enum_name && *n == v.name) {
+            out.push(Violation {
+                file: v.file.clone(),
+                line: v.line,
+                rule: RULE,
+                message: format!(
+                    "{}::{} has no dispatch arm in rust/src/mongo — a sender of this message would hang",
+                    v.enum_name, v.name
+                ),
+            });
+        }
+        if !v.has_reply {
+            let f = tree.lexed(&v.file).expect("variant file is present");
+            if !f.annotated(v.line, "lint: allow(no_reply") {
+                out.push(Violation {
+                    file: v.file.clone(),
+                    line: v.line,
+                    rule: RULE,
+                    message: format!(
+                        "{}::{} carries no `reply` channel and no `// lint: allow(no_reply, <reason>)` annotation",
+                        v.enum_name, v.name
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Parse every `enum <X>Request {{ ... }}` in `path` into `variants`.
+fn collect_variants(tree: &SourceTree, path: &str, variants: &mut Vec<Variant>) {
+    let f = tree.lexed(path).expect("caller checked presence");
+    let t = &f.tokens;
+    let mut i = 0;
+    while i + 2 < t.len() {
+        let is_request_enum = t[i].text == "enum"
+            && t[i + 1].kind == TokKind::Ident
+            && t[i + 1].text.ends_with("Request")
+            && t[i + 2].text == "{";
+        if !is_request_enum {
+            i += 1;
+            continue;
+        }
+        let enum_name = t[i + 1].text.clone();
+        let mut j = i + 3; // first token inside the enum body
+        let (mut bdepth, mut pdepth, mut brdepth) = (1i32, 0i32, 0i32);
+        let mut expecting = true; // next ident at depth 1 starts a variant
+        while j < t.len() && bdepth > 0 {
+            let at_variant_level = bdepth == 1 && pdepth == 0 && brdepth == 0;
+            match t[j].text.as_str() {
+                "#" if at_variant_level && t.get(j + 1).is_some_and(|n| n.text == "[") => {
+                    // Skip an attribute without treating its contents
+                    // as variant tokens.
+                    j += 1;
+                    let mut d = 0i32;
+                    while j < t.len() {
+                        match t[j].text.as_str() {
+                            "[" => d += 1,
+                            "]" => {
+                                d -= 1;
+                                if d == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                }
+                "{" => bdepth += 1,
+                "}" => bdepth -= 1,
+                "(" => pdepth += 1,
+                ")" => pdepth -= 1,
+                "[" => brdepth += 1,
+                "]" => brdepth -= 1,
+                "," if at_variant_level => expecting = true,
+                _ if expecting && at_variant_level && t[j].kind == TokKind::Ident => {
+                    expecting = false;
+                    // Struct variants list fields in the `{ ... }` that
+                    // follows; a `reply` field there is the counterpart.
+                    let mut has_reply = false;
+                    if t.get(j + 1).is_some_and(|n| n.text == "{") {
+                        let mut k = j + 2;
+                        let mut d = 1i32;
+                        while k < t.len() && d > 0 {
+                            match t[k].text.as_str() {
+                                "{" => d += 1,
+                                "}" => d -= 1,
+                                "reply" if d == 1 => has_reply = true,
+                                _ => {}
+                            }
+                            k += 1;
+                        }
+                    }
+                    variants.push(Variant {
+                        enum_name: enum_name.clone(),
+                        name: t[j].text.clone(),
+                        file: path.to_string(),
+                        line: t[j].line,
+                        has_reply,
+                    });
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        i = j;
+    }
+}
+
+/// Find match blocks, record `Enum::Variant =>` dispatch arms, and
+/// flag `_ =>` wildcards inside matches that dispatch request enums.
+fn scan_matches(
+    f: &super::lexer::SourceFile,
+    path: &str,
+    enum_names: &[&str],
+    dispatched: &mut Vec<(String, String)>,
+    out: &mut Vec<Violation>,
+) {
+    let t = &f.tokens;
+    let mut i = 0;
+    while i < t.len() {
+        if t[i].text != "match" || f.is_test_line(t[i].line) {
+            i += 1;
+            continue;
+        }
+        // Find the match block's `{` (skip the scrutinee expression;
+        // struct literals cannot appear unparenthesized there).
+        let mut j = i + 1;
+        let mut pdepth = 0i32;
+        while j < t.len() {
+            match t[j].text.as_str() {
+                "(" | "[" => pdepth += 1,
+                ")" | "]" => pdepth -= 1,
+                "{" if pdepth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= t.len() {
+            break;
+        }
+        // Walk the arms at depth 1 of the block.
+        let mut k = j + 1;
+        let mut depth = 1i32;
+        let mut arm_dispatches = false;
+        let mut wildcards: Vec<usize> = Vec::new(); // lines of `_ =>`
+        while k < t.len() && depth > 0 {
+            match t[k].text.as_str() {
+                "{" => depth += 1,
+                "}" => depth -= 1,
+                "_" if depth == 1 && t.get(k + 1).is_some_and(|n| n.text == "=>") => {
+                    wildcards.push(t[k].line);
+                }
+                _ if depth == 1
+                    && t[k].kind == TokKind::Ident
+                    && enum_names.contains(&t[k].text.as_str())
+                    && t.get(k + 1).is_some_and(|c| c.text == "::")
+                    && t.get(k + 2).is_some_and(|v| v.kind == TokKind::Ident) =>
+                {
+                    // `Enum::Variant` then an optional bound pattern,
+                    // then `=>` (or `|`, continuing the same arm).
+                    let mut m = k + 3;
+                    if t.get(m).is_some_and(|p| p.text == "{" || p.text == "(") {
+                        let open = t[m].text.clone();
+                        let close = if open == "{" { "}" } else { ")" };
+                        let mut d = 1i32;
+                        m += 1;
+                        while m < t.len() && d > 0 {
+                            if t[m].text == open {
+                                d += 1;
+                            } else if t[m].text == close {
+                                d -= 1;
+                            }
+                            m += 1;
+                        }
+                    }
+                    if t.get(m).is_some_and(|a| a.text == "=>" || a.text == "|") {
+                        arm_dispatches = true;
+                        dispatched.push((t[k].text.clone(), t[k + 2].text.clone()));
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        if arm_dispatches {
+            for line in wildcards {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line,
+                    rule: RULE,
+                    message: "wildcard `_ =>` in a request-dispatch match — it would silently swallow the next variant added to the protocol".to_string(),
+                });
+            }
+        }
+        i += 1; // nested matches get their own pass
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD_WIRE: &str = "pub enum ShardRequest {\n    Insert { doc: Document, reply: Reply<u64> },\n    // lint: allow(no_reply, one-way push)\n    SetMap { map: ChunkMap },\n}\n";
+
+    fn tree(wire: &str, server: &str) -> SourceTree {
+        let mut t = SourceTree::new();
+        t.add("rust/src/mongo/wire.rs", wire);
+        t.add("rust/src/mongo/server/shard.rs", server);
+        t
+    }
+
+    #[test]
+    fn paired_variants_pass() {
+        let t = tree(
+            GOOD_WIRE,
+            "fn run(&mut self) { match req { ShardRequest::Insert { doc, reply } => {} ShardRequest::SetMap { map } => {} } }",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn undispatched_variant_is_flagged_at_its_declaration() {
+        let t = tree(
+            GOOD_WIRE,
+            "fn run(&mut self) { match req { ShardRequest::Insert { doc, reply } => {} } }",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("SetMap") && v[0].message.contains("no dispatch arm"));
+        assert_eq!((v[0].file.as_str(), v[0].line), ("rust/src/mongo/wire.rs", 4));
+    }
+
+    #[test]
+    fn wildcard_in_dispatch_match_is_flagged() {
+        let t = tree(
+            GOOD_WIRE,
+            "fn run(&mut self) { match req { ShardRequest::Insert { doc, reply } => {} ShardRequest::SetMap { map } => {} _ => {} } }",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("wildcard"));
+        assert_eq!(v[0].file, "rust/src/mongo/server/shard.rs");
+    }
+
+    #[test]
+    fn wildcard_in_unrelated_match_is_fine() {
+        let t = tree(
+            GOOD_WIRE,
+            "fn run(&mut self) { match req { ShardRequest::Insert { doc, reply } => {} ShardRequest::SetMap { map } => {} } }\nfn other(x: u8) { match x { 1 => {} _ => {} } }",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn missing_reply_without_annotation_is_flagged() {
+        let t = tree(
+            "pub enum ShardRequest {\n    Insert { doc: Document, reply: Reply<u64> },\n    SetMap { map: ChunkMap },\n}\n",
+            "fn run(&mut self) { match req { ShardRequest::Insert { doc, reply } => {} ShardRequest::SetMap { map } => {} } }",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("no `reply` channel"));
+    }
+
+    #[test]
+    fn dispatch_in_test_code_does_not_count() {
+        let t = tree(
+            GOOD_WIRE,
+            "fn run(&mut self) { match req { ShardRequest::Insert { doc, reply } => {} } }\n#[cfg(test)]\nmod tests {\n    fn t() { match req { ShardRequest::SetMap { map } => {} } }\n}\n",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("SetMap"));
+    }
+}

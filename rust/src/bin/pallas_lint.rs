@@ -1,0 +1,64 @@
+//! `pallas-lint` — run the in-tree protocol-invariant lints
+//! (ARCHITECTURE.md §8) over a repository checkout.
+//!
+//! Usage: `pallas-lint [REPO_ROOT]`. With no argument the repo root is
+//! found by walking up from the current directory to the first parent
+//! containing `rust/Cargo.toml`. Exit status: 0 clean, 1 violations,
+//! 2 usage/IO error.
+
+#![deny(unsafe_code)]
+
+use std::path::{Path, PathBuf};
+
+use hpcstore::analysis::{run_all, SourceTree};
+
+fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start.to_path_buf());
+    while let Some(dir) = cur {
+        if dir.join("rust/Cargo.toml").is_file() {
+            return Some(dir);
+        }
+        cur = dir.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+fn main() {
+    let arg = std::env::args().nth(1);
+    let root = match &arg {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let cwd = std::env::current_dir().unwrap_or_else(|e| {
+                eprintln!("pallas-lint: cannot read current dir: {e}");
+                std::process::exit(2);
+            });
+            match find_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!(
+                        "pallas-lint: no rust/Cargo.toml above {} — pass the repo root explicitly",
+                        cwd.display()
+                    );
+                    std::process::exit(2);
+                }
+            }
+        }
+    };
+    let tree = match SourceTree::from_repo_root(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("pallas-lint: failed to read {}: {e}", root.display());
+            std::process::exit(2);
+        }
+    };
+    let violations = run_all(&tree);
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("pallas-lint: clean ({} root)", root.display());
+    } else {
+        println!("pallas-lint: {} violation(s)", violations.len());
+        std::process::exit(1);
+    }
+}

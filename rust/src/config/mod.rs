@@ -132,6 +132,7 @@ pub struct StoreConfig {
     /// Split a chunk once it holds this many documents.
     pub max_chunk_docs: u64,
     /// Write-ahead journaling on shard servers.
+    // lint: knob(no-journal)
     pub journal: bool,
     /// Compress checkpoint blocks (in-tree LZSS codec).
     pub compress_checkpoints: bool,
@@ -146,8 +147,10 @@ pub struct StoreConfig {
     /// Incremental checkpoints: maximum delta generations per chain
     /// before a checkpoint rebases into a fresh full snapshot. 0 makes
     /// every checkpoint a full snapshot (the pre-delta behaviour).
+    // lint: knob(checkpoint-chain)
     pub full_checkpoint_chain: u32,
     /// insertMany sub-batch size the client uses.
+    // lint: knob(batch-size)
     pub insert_batch: usize,
     /// Router-side ingest buffer: flush to the shards once this many
     /// documents are buffered (buffered-ingest path).
@@ -158,6 +161,7 @@ pub struct StoreConfig {
     /// find cursor batch size.
     pub cursor_batch: usize,
     /// Run the chunk balancer.
+    // lint: knob(no-balancer)
     pub balancer: bool,
     /// Streaming chunk migration: documents per `MigrateBatch` message.
     /// Bounds the donor shard's per-message stall — ingest and queries

@@ -26,6 +26,12 @@
 //! Python/JAX runs only at build time (`make artifacts`); the request path
 //! is pure Rust + PJRT.
 
+// The whole tree is safe Rust today (the byte-level raw matching in
+// `bson.rs` is all bounds-checked slices); any future `unsafe` must
+// carry a scoped `#[allow(unsafe_code)]` and survive the Miri CI job.
+#![deny(unsafe_code)]
+
+pub mod analysis;
 pub mod benchkit;
 pub mod cli;
 pub mod config;

@@ -7,10 +7,12 @@
 //! * `calibrate` — measure the live cost model for the DES.
 //! * `table1`    — print the paper's Table 1 presets and workload sizes.
 
+#![deny(unsafe_code)]
+
 use anyhow::Result;
 
 use hpcstore::cli::{Args, Cli, CommandSpec, FlagSpec};
-use hpcstore::config::{LustreConfig, StoreConfig, Topology, WorkloadConfig, TABLE1};
+use hpcstore::config::{LustreConfig, ShardKeyKind, StoreConfig, Topology, WorkloadConfig, TABLE1};
 use hpcstore::hpc::lustre::Lustre;
 use hpcstore::hpc::runscript::RunScript;
 use hpcstore::hpc::scheduler::{Job, Scheduler};
@@ -37,7 +39,26 @@ fn cli() -> Cli {
                     f("pes", Some("N"), "client processing elements (default 4)"),
                     f("monitored", Some("N"), "monitored nodes in the corpus (default 128)"),
                     f("minutes", Some("N"), "minutes of data (default 30)"),
+                    f("shard-key", Some("KIND"), "shard key: hashed|ranged (default hashed)"),
+                    f(
+                        "max-chunk-docs",
+                        Some("N"),
+                        "split a chunk once it holds this many docs (default 100000)",
+                    ),
+                    f("no-journal", None, "disable write-ahead journaling on shards"),
+                    f(
+                        "compress-checkpoints",
+                        None,
+                        "compress checkpoint blocks (in-tree LZSS codec)",
+                    ),
                     f("batch-size", Some("N"), "insertMany batch size (default 1000)"),
+                    f(
+                        "router-flush-docs",
+                        Some("N"),
+                        "router ingest-buffer flush threshold in docs (default 4096)",
+                    ),
+                    f("cursor-batch", Some("N"), "find cursor batch size (default 1000)"),
+                    f("no-balancer", None, "disable the chunk balancer"),
                     f(
                         "flush-interval-ms",
                         Some("MS"),
@@ -143,7 +164,16 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let lustre = Lustre::mount(LustreConfig::default())?;
     let topo = Topology::small(shards, routers, pes);
     let store_defaults = StoreConfig::default();
+    // Every StoreConfig field is wired explicitly (no `..Default::default()`
+    // spread) so pallas-lint's knob-coverage rule can pair each field with
+    // its flag.
     let store = StoreConfig {
+        shard_key: ShardKeyKind::parse(
+            &args.get_or("shard-key", store_defaults.shard_key.name()),
+        )?,
+        max_chunk_docs: args.get_u64_or("max-chunk-docs", store_defaults.max_chunk_docs)?,
+        journal: !args.has_switch("no-journal"),
+        compress_checkpoints: args.has_switch("compress-checkpoints"),
         insert_batch: batch,
         flush_interval_ms,
         checkpoint_bytes: args
@@ -154,12 +184,18 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         full_checkpoint_chain: args
             .get_u64_or("checkpoint-chain", store_defaults.full_checkpoint_chain as u64)?
             as u32,
+        router_flush_docs: args
+            .get_u64_or("router-flush-docs", store_defaults.router_flush_docs as u64)?
+            as usize,
+        cursor_batch: args
+            .get_u64_or("cursor-batch", store_defaults.cursor_batch as u64)?
+            as usize,
+        balancer: !args.has_switch("no-balancer"),
         migration_batch_docs: args
             .get_u64_or("migration-batch-docs", store_defaults.migration_batch_docs as u64)?
             as usize,
         balancer_bytes: args
             .get_u64_or("balancer-bytes", store_defaults.balancer_bytes)?,
-        ..Default::default()
     };
     let script = RunScript::new(topo.clone(), store, lustre.clone(), kernels);
 

@@ -9,4 +9,4 @@ mod histogram;
 mod registry;
 
 pub use histogram::Histogram;
-pub use registry::{Counter, Gauge, Registry};
+pub use registry::{names, Counter, Gauge, Registry};

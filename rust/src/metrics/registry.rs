@@ -1,4 +1,12 @@
 //! Named metric registry shared across threads.
+//!
+//! Metric *names* used by the cluster roles are declared once, in
+//! [`names`]; call sites reference the constants instead of repeating
+//! string literals. `pallas-lint` (rule `metrics`) enforces this: a
+//! bare string literal at a `counter`/`gauge`/`observe` call site under
+//! `src/mongo/` fails tier-1, as does a catalog entry no call site
+//! references, or a catalog that disagrees with the table in
+//! docs/ARCHITECTURE.md §8.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
@@ -6,6 +14,137 @@ use std::sync::{Arc, Mutex};
 
 use super::Histogram;
 use crate::json::Value;
+
+/// The declared metric-name catalog.
+///
+/// One constant per metric the cluster roles emit, plus [`CATALOG`],
+/// the machine-readable table `pallas-lint` checks call sites and the
+/// ARCHITECTURE.md §8 table against. Names are `role.metric` with the
+/// role prefix naming the emitting component (`shard.*`, `router.*`,
+/// `config.*`) or the cross-role coordinator (`cluster.*`).
+#[allow(missing_docs)]
+pub mod names {
+    // -- shard server: request latency histograms ----------------------
+    pub const SHARD_INSERT_BATCH_NS: &str = "shard.insert_batch_ns";
+    pub const SHARD_FIND_NS: &str = "shard.find_ns";
+    pub const SHARD_COUNT_NS: &str = "shard.count_ns";
+    pub const SHARD_MIGRATE_BATCH_NS: &str = "shard.migrate_batch_ns";
+    // -- shard server: ingest + storage lifecycle -----------------------
+    pub const SHARD_GROUP_COMMITS: &str = "shard.group_commits";
+    pub const SHARD_DOCS_INSERTED: &str = "shard.docs_inserted";
+    pub const SHARD_STALE_VERSION: &str = "shard.stale_version";
+    /// Checkpoints this shard wrote. Incremented at THREE distinct
+    /// trigger sites in `server/shard.rs`, deliberately: the admin
+    /// `Checkpoint` command, the post-group-commit threshold hook
+    /// (`maybe_compact`), and the post-migration source compaction
+    /// (`delete_range` with `compact`). Each checkpoint goes through
+    /// exactly one of those paths, so the counter is exact — the three
+    /// sites are different *reasons*, not a double count.
+    pub const SHARD_CHECKPOINTS: &str = "shard.checkpoints";
+    pub const SHARD_REBASES: &str = "shard.rebases";
+    pub const SHARD_DELTA_BYTES: &str = "shard.delta_bytes";
+    pub const SHARD_SEGMENTS_TRUNCATED: &str = "shard.segments_truncated";
+    pub const SHARD_JOURNAL_BYTES_TRUNCATED: &str = "shard.journal_bytes_truncated";
+    pub const SHARD_CHECKPOINT_ERRORS: &str = "shard.checkpoint_errors";
+    // -- shard server: splits -------------------------------------------
+    pub const SHARD_SPLITS: &str = "shard.splits";
+    pub const SHARD_SPLIT_STALE: &str = "shard.split_stale";
+    // -- shard server: query planner + read path ------------------------
+    pub const SHARD_PLAN_INDEX_SORT: &str = "shard.plan_index_sort";
+    pub const SHARD_PLAN_COMPOUND: &str = "shard.plan_compound";
+    pub const SHARD_PLAN_INTERSECT: &str = "shard.plan_intersect";
+    pub const SHARD_PLAN_IN_POINTS: &str = "shard.plan_in_points";
+    pub const SHARD_PLAN_TS_RANGE: &str = "shard.plan_ts_range";
+    pub const SHARD_PLAN_NODE_RANGE: &str = "shard.plan_node_range";
+    pub const SHARD_PLAN_FULL_SCAN: &str = "shard.plan_full_scan";
+    pub const SHARD_FIND_KERNEL_PATH: &str = "shard.find_kernel_path";
+    pub const SHARD_FIND_MATCHER_PATH: &str = "shard.find_matcher_path";
+    pub const SHARD_FIND_CANDIDATES: &str = "shard.find_candidates";
+    pub const SHARD_FIND_MATCHES: &str = "shard.find_matches";
+    pub const SHARD_FIND_DECODES: &str = "shard.find_decodes";
+    // -- shard server: migration data plane -----------------------------
+    pub const SHARD_MIGRATION_DOCS_IN: &str = "shard.migration_docs_in";
+    pub const SHARD_MIGRATION_DOCS_OUT: &str = "shard.migration_docs_out";
+    pub const SHARD_MIGRATION_DOCS_PUBLISHED: &str = "shard.migration_docs_published";
+    pub const SHARD_MIGRATION_ABORTS: &str = "shard.migration_aborts";
+    // -- router ---------------------------------------------------------
+    pub const ROUTER_INSERT_MANY_NS: &str = "router.insert_many_ns";
+    pub const ROUTER_FIND_NS: &str = "router.find_ns";
+    pub const ROUTER_FLUSH_NS: &str = "router.flush_ns";
+    pub const ROUTER_INGEST_FLUSHES: &str = "router.ingest_flushes";
+    pub const ROUTER_INGEST_FLUSH_DOCS: &str = "router.ingest_flush_docs";
+    pub const ROUTER_MAP_REFRESH: &str = "router.map_refresh";
+    pub const ROUTER_STALE_RETRIES: &str = "router.stale_retries";
+    // -- config server --------------------------------------------------
+    pub const CONFIG_GET_MAP: &str = "config.get_map";
+    pub const CONFIG_REPORT_SPLIT: &str = "config.report_split";
+    pub const CONFIG_SPLITS: &str = "config.splits";
+    pub const CONFIG_MIGRATION_FLIPS: &str = "config.migration_flips";
+    pub const CONFIG_MIGRATIONS: &str = "config.migrations";
+    pub const CONFIG_MIGRATION_ABORTS: &str = "config.migration_aborts";
+    // -- cluster coordinator (balancer / migration driver) --------------
+    pub const CLUSTER_MIGRATIONS_FAILED: &str = "cluster.migrations_failed";
+    pub const CLUSTER_MIGRATION_BATCHES: &str = "cluster.migration_batches";
+    pub const CLUSTER_MIGRATION_DOCS: &str = "cluster.migration_docs";
+    pub const CLUSTER_MIGRATIONS_RECOVERED: &str = "cluster.migrations_recovered";
+    pub const CLUSTER_MIGRATIONS_ROLLED_BACK: &str = "cluster.migrations_rolled_back";
+
+    /// Every declared metric with its kind — the machine-readable
+    /// catalog. `pallas-lint` checks (a) every call-site name resolves
+    /// here, (b) every entry is referenced by some call site, and
+    /// (c) the docs/ARCHITECTURE.md §8 table lists exactly these rows.
+    pub const CATALOG: &[(&str, &str)] = &[
+        (SHARD_INSERT_BATCH_NS, "histogram"),
+        (SHARD_FIND_NS, "histogram"),
+        (SHARD_COUNT_NS, "histogram"),
+        (SHARD_MIGRATE_BATCH_NS, "histogram"),
+        (SHARD_GROUP_COMMITS, "counter"),
+        (SHARD_DOCS_INSERTED, "counter"),
+        (SHARD_STALE_VERSION, "counter"),
+        (SHARD_CHECKPOINTS, "counter"),
+        (SHARD_REBASES, "counter"),
+        (SHARD_DELTA_BYTES, "counter"),
+        (SHARD_SEGMENTS_TRUNCATED, "counter"),
+        (SHARD_JOURNAL_BYTES_TRUNCATED, "counter"),
+        (SHARD_CHECKPOINT_ERRORS, "counter"),
+        (SHARD_SPLITS, "counter"),
+        (SHARD_SPLIT_STALE, "counter"),
+        (SHARD_PLAN_INDEX_SORT, "counter"),
+        (SHARD_PLAN_COMPOUND, "counter"),
+        (SHARD_PLAN_INTERSECT, "counter"),
+        (SHARD_PLAN_IN_POINTS, "counter"),
+        (SHARD_PLAN_TS_RANGE, "counter"),
+        (SHARD_PLAN_NODE_RANGE, "counter"),
+        (SHARD_PLAN_FULL_SCAN, "counter"),
+        (SHARD_FIND_KERNEL_PATH, "counter"),
+        (SHARD_FIND_MATCHER_PATH, "counter"),
+        (SHARD_FIND_CANDIDATES, "counter"),
+        (SHARD_FIND_MATCHES, "counter"),
+        (SHARD_FIND_DECODES, "counter"),
+        (SHARD_MIGRATION_DOCS_IN, "counter"),
+        (SHARD_MIGRATION_DOCS_OUT, "counter"),
+        (SHARD_MIGRATION_DOCS_PUBLISHED, "counter"),
+        (SHARD_MIGRATION_ABORTS, "counter"),
+        (ROUTER_INSERT_MANY_NS, "histogram"),
+        (ROUTER_FIND_NS, "histogram"),
+        (ROUTER_FLUSH_NS, "histogram"),
+        (ROUTER_INGEST_FLUSHES, "counter"),
+        (ROUTER_INGEST_FLUSH_DOCS, "counter"),
+        (ROUTER_MAP_REFRESH, "counter"),
+        (ROUTER_STALE_RETRIES, "counter"),
+        (CONFIG_GET_MAP, "counter"),
+        (CONFIG_REPORT_SPLIT, "counter"),
+        (CONFIG_SPLITS, "counter"),
+        (CONFIG_MIGRATION_FLIPS, "counter"),
+        (CONFIG_MIGRATIONS, "counter"),
+        (CONFIG_MIGRATION_ABORTS, "counter"),
+        (CLUSTER_MIGRATIONS_FAILED, "counter"),
+        (CLUSTER_MIGRATION_BATCHES, "counter"),
+        (CLUSTER_MIGRATION_DOCS, "counter"),
+        (CLUSTER_MIGRATIONS_RECOVERED, "counter"),
+        (CLUSTER_MIGRATIONS_ROLLED_BACK, "counter"),
+    ];
+}
 
 /// Monotonic counter.
 #[derive(Clone, Default)]
@@ -153,6 +292,25 @@ impl Registry {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn catalog_names_unique_and_well_formed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, kind) in names::CATALOG {
+            assert!(seen.insert(*name), "duplicate catalog entry {name}");
+            assert!(
+                matches!(*kind, "counter" | "gauge" | "histogram"),
+                "bad kind {kind} for {name}"
+            );
+            let (role, metric) = name.split_once('.').expect("names are role.metric");
+            assert!(matches!(role, "shard" | "router" | "config" | "cluster"));
+            assert!(!metric.is_empty());
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase() || c == '.' || c == '_'),
+                "non-kebab name {name}"
+            );
+        }
+    }
 
     #[test]
     fn counters_shared_by_name() {

@@ -11,7 +11,7 @@ use std::sync::mpsc;
 use anyhow::{Context, Result};
 
 use crate::config::StoreConfig;
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::mongo::client::MongoClient;
 use crate::mongo::server::config::ConfigServer;
 use crate::mongo::server::router::{Router, RouterMailbox, RouterRequest};
@@ -297,7 +297,7 @@ impl Cluster {
             chunks: config.chunks,
             map_version: config.version,
             migrations: config.migrations_done,
-            migrations_failed: self.metrics.counter("cluster.migrations_failed").get(),
+            migrations_failed: self.metrics.counter(names::CLUSTER_MIGRATIONS_FAILED).get(),
             per_shard_docs: shard_stats.iter().map(|s| s.collection.docs).collect(),
             per_shard_bytes: shard_stats
                 .iter()

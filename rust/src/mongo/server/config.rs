@@ -12,7 +12,7 @@ use std::sync::mpsc;
 use crate::mongo::sharding::chunk::{ChunkMap, ShardKey};
 use crate::mongo::sharding::config_server::ConfigState;
 use crate::mongo::wire::{ConfigRequest, ConfigStatsReply, ShardRequest, WireError};
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 
 /// Config server process.
 pub struct ConfigServer {
@@ -64,6 +64,8 @@ impl ConfigServer {
         std::thread::Builder::new()
             .name("config-server".into())
             .spawn(move || self.run(rx))
+            // lint: allow(panic, thread spawn fails only on OS resource
+            // exhaustion at cluster startup, before any data is live)
             .expect("spawn config thread")
     }
 
@@ -78,11 +80,11 @@ impl ConfigServer {
             match req {
                 ConfigRequest::Shutdown => break,
                 ConfigRequest::GetMap { reply } => {
-                    self.metrics.counter("config.get_map").inc();
+                    self.metrics.counter(names::CONFIG_GET_MAP).inc();
                     let _ = reply.send(self.state.map().clone());
                 }
                 ConfigRequest::ReportSplit { seen_version, chunk, at, reply } => {
-                    self.metrics.counter("config.report_split").inc();
+                    self.metrics.counter(names::CONFIG_REPORT_SPLIT).inc();
                     let r = self
                         .state
                         .split_chunk(seen_version, chunk, at)
@@ -91,7 +93,7 @@ impl ConfigServer {
                         r,
                         Ok(crate::mongo::sharding::config_server::VersionCheck::Ok)
                     ) {
-                        self.metrics.counter("config.splits").inc();
+                        self.metrics.counter(names::CONFIG_SPLITS).inc();
                         self.push_map();
                     }
                     let _ = reply.send(r);
@@ -113,7 +115,7 @@ impl ConfigServer {
                         .commit_migration()
                         .map_err(|e| WireError::Server(e.to_string()));
                     if r.is_ok() {
-                        self.metrics.counter("config.migration_flips").inc();
+                        self.metrics.counter(names::CONFIG_MIGRATION_FLIPS).inc();
                         self.push_map();
                     }
                     let _ = reply.send(r);
@@ -132,7 +134,7 @@ impl ConfigServer {
                         .map_err(|e| WireError::Server(e.to_string()));
                     if r.is_ok() {
                         self.migrations_done += 1;
-                        self.metrics.counter("config.migrations").inc();
+                        self.metrics.counter(names::CONFIG_MIGRATIONS).inc();
                     }
                     let _ = reply.send(r);
                 }
@@ -141,7 +143,7 @@ impl ConfigServer {
                     let aborted = self.state.abort_migration();
                     if aborted.is_some() {
                         self.migrations_aborted += 1;
-                        self.metrics.counter("config.migration_aborts").inc();
+                        self.metrics.counter(names::CONFIG_MIGRATION_ABORTS).inc();
                         if self.state.version() != before {
                             // The abort rolled a flip back: re-push.
                             self.push_map();

@@ -26,7 +26,7 @@ use crate::mongo::wire::{
     batch_wire_bytes, find_wire_bytes, rpc, ConfigRequest, FindReply, Reply, ShardRequest,
     WireError,
 };
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::runtime::Kernels;
 use crate::util::ids::RouterId;
 
@@ -87,6 +87,8 @@ pub enum RouterRequest {
     Stats {
         reply: Reply<RouterStatsReply>,
     },
+    // lint: allow(no_reply, shutdown is fire-and-forget; callers join the
+    // server thread instead of waiting on a reply)
     Shutdown,
 }
 
@@ -186,6 +188,8 @@ impl Router {
         std::thread::Builder::new()
             .name(format!("{}", self.id))
             .spawn(move || self.run(rx))
+            // lint: allow(panic, thread spawn fails only on OS resource
+            // exhaustion at cluster startup, before any data is live)
             .expect("spawn router thread")
     }
 
@@ -225,7 +229,7 @@ impl Router {
                     let t = Instant::now();
                     let r = self.handle_insert_many(docs);
                     self.metrics
-                        .observe("router.insert_many_ns", t.elapsed().as_nanos() as u64);
+                        .observe(names::ROUTER_INSERT_MANY_NS, t.elapsed().as_nanos() as u64);
                     let _ = reply.send(r);
                 }
                 RouterRequest::InsertBuffered { docs, reply } => {
@@ -250,7 +254,8 @@ impl Router {
                     self.flush_ingest();
                     let t = Instant::now();
                     let r = self.handle_find(filter, opts);
-                    self.metrics.observe("router.find_ns", t.elapsed().as_nanos() as u64);
+                    self.metrics
+                        .observe(names::ROUTER_FIND_NS, t.elapsed().as_nanos() as u64);
                     let _ = reply.send(r);
                 }
                 RouterRequest::GetMore { cursor, reply } => {
@@ -302,9 +307,9 @@ impl Router {
         let t = Instant::now();
         let flushed = docs.len();
         let result = self.handle_insert_many(docs);
-        self.metrics.observe("router.flush_ns", t.elapsed().as_nanos() as u64);
-        self.metrics.counter("router.ingest_flushes").inc();
-        self.metrics.counter("router.ingest_flush_docs").add(flushed as u64);
+        self.metrics.observe(names::ROUTER_FLUSH_NS, t.elapsed().as_nanos() as u64);
+        self.metrics.counter(names::ROUTER_INGEST_FLUSHES).inc();
+        self.metrics.counter(names::ROUTER_INGEST_FLUSH_DOCS).add(flushed as u64);
         match result {
             Ok(rep) => {
                 // Success covers the whole flush; each contributor is
@@ -326,7 +331,7 @@ impl Router {
 
     fn refresh_map(&mut self) {
         if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
-            self.metrics.counter("router.map_refresh").inc();
+            self.metrics.counter(names::ROUTER_MAP_REFRESH).inc();
             self.map = map;
         }
     }
@@ -418,7 +423,7 @@ impl Router {
                         }
                     }
                     Err(WireError::StaleVersion { .. }) => {
-                        self.metrics.counter("router.stale_retries").inc();
+                        self.metrics.counter(names::ROUTER_STALE_RETRIES).inc();
                         pending.extend(batch);
                     }
                     Err(e) => return Err(e),
@@ -557,6 +562,8 @@ impl Router {
                 }
             };
             let Some(i) = next else { break };
+            // lint: allow(panic, both arms above only yield a stream index
+            // after refill() gave it a buffered head)
             docs.push(cur.streams[i].buf.pop_front().expect("head refilled above"));
         }
         if let Some(r) = cur.remaining.as_mut() {
@@ -596,6 +603,8 @@ fn best_head(streams: &[ShardStream], field: &str, dir: SortDir) -> Option<usize
         let better = match best {
             None => true,
             Some(b) => {
+                // lint: allow(panic, best is only ever set to a stream
+                // whose head was just observed)
                 let incumbent = streams[b].buf.front().expect("best stream has a head");
                 let ord = head
                     .get(field)

@@ -36,7 +36,7 @@ use crate::mongo::wire::{
     rpc, ConfigRequest, DeleteChunkReply, FindReply, InsertReply, MigrateBatchReply,
     ShardRequest, ShardStatsReply, StagedMigration, WireError,
 };
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::runtime::Kernels;
 use crate::util::ids::ShardId;
 
@@ -131,12 +131,18 @@ struct CursorState {
 
 /// Decode one raw record for the reply — the read path's only full
 /// materialization (projections decode just the projected fields). The
-/// caller counts it into `shard.find_decodes`.
-fn materialize(raw: &[u8], projection: Option<&[String]>) -> Document {
+/// caller counts it into `shard.find_decodes`. A record that fails to
+/// decode surfaces as a server error instead of killing the shard
+/// thread: the engine's bytes are validated on every write and replay,
+/// so reaching the error arm means on-disk or in-memory corruption the
+/// client deserves to hear about.
+fn materialize(raw: &[u8], projection: Option<&[String]>) -> Result<Document, WireError> {
     let rd = RawDoc::new(raw);
     match projection {
-        Some(fields) => rd.project(fields),
-        None => rd.decode().expect("corrupt record"),
+        Some(fields) => Ok(rd.project(fields)),
+        None => rd
+            .decode()
+            .map_err(|e| WireError::Server(format!("corrupt record: {e}"))),
     }
 }
 
@@ -264,6 +270,8 @@ impl ShardServer {
         std::thread::Builder::new()
             .name(name)
             .spawn(move || self.run(rx))
+            // lint: allow(panic, thread spawn fails only on OS resource
+            // exhaustion at cluster startup, before any data is live)
             .expect("spawn shard thread")
     }
 
@@ -278,13 +286,14 @@ impl ShardServer {
                     let t = Instant::now();
                     let r = self.handle_insert_many(version, docs);
                     self.metrics
-                        .observe("shard.insert_batch_ns", t.elapsed().as_nanos() as u64);
+                        .observe(names::SHARD_INSERT_BATCH_NS, t.elapsed().as_nanos() as u64);
                     let _ = reply.send(r);
                 }
                 ShardRequest::Find { filter, opts, reply } => {
                     let t = Instant::now();
                     let r = self.handle_find(&filter, &opts);
-                    self.metrics.observe("shard.find_ns", t.elapsed().as_nanos() as u64);
+                    self.metrics
+                        .observe(names::SHARD_FIND_NS, t.elapsed().as_nanos() as u64);
                     let _ = reply.send(r);
                 }
                 ShardRequest::GetMore { cursor, reply } => {
@@ -293,7 +302,8 @@ impl ShardServer {
                 ShardRequest::Count { filter, reply } => {
                     let t = Instant::now();
                     let r = self.handle_count(&filter);
-                    self.metrics.observe("shard.count_ns", t.elapsed().as_nanos() as u64);
+                    self.metrics
+                        .observe(names::SHARD_COUNT_NS, t.elapsed().as_nanos() as u64);
                     let _ = reply.send(r);
                 }
                 ShardRequest::CreateIndex { spec, reply } => {
@@ -307,8 +317,8 @@ impl ShardServer {
                     let t = Instant::now();
                     let r = self.handle_migrate_batch(range, after, limit);
                     self.metrics
-                        .observe("shard.migrate_batch_ns", t.elapsed().as_nanos() as u64);
-                    let _ = reply.send(Ok(r));
+                        .observe(names::SHARD_MIGRATE_BATCH_NS, t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
                 }
                 ShardRequest::StageChunk { range, from, docs, reply } => {
                     let r = self.handle_stage_chunk(range, from, docs);
@@ -339,7 +349,10 @@ impl ShardServer {
                         .checkpoint()
                         .map_err(|e| WireError::Server(e.to_string()));
                     if r.is_ok() {
-                        self.metrics.counter("shard.checkpoints").inc();
+                        // Admin-command trigger — one of the three
+                        // distinct `shard.checkpoints` sites (see the
+                        // constant's docs in `metrics::names`).
+                        self.metrics.counter(names::SHARD_CHECKPOINTS).inc();
                     }
                     let _ = reply.send(r);
                 }
@@ -359,23 +372,25 @@ impl ShardServer {
     fn maybe_compact(&mut self) {
         match self.engine.maybe_checkpoint() {
             Ok(Some(ck)) => {
-                self.metrics.counter("shard.checkpoints").inc();
+                // Threshold trigger — one of the three distinct
+                // `shard.checkpoints` sites (see `metrics::names`).
+                self.metrics.counter(names::SHARD_CHECKPOINTS).inc();
                 if ck.full {
                     // Generation 1 or a chain rebase: the one compaction
                     // whose cost scales with the live set.
-                    self.metrics.counter("shard.rebases").inc();
+                    self.metrics.counter(names::SHARD_REBASES).inc();
                 }
-                self.metrics.counter("shard.delta_bytes").add(ck.delta_bytes);
+                self.metrics.counter(names::SHARD_DELTA_BYTES).add(ck.delta_bytes);
                 self.metrics
-                    .counter("shard.segments_truncated")
+                    .counter(names::SHARD_SEGMENTS_TRUNCATED)
                     .add(ck.segments_truncated);
                 self.metrics
-                    .counter("shard.journal_bytes_truncated")
+                    .counter(names::SHARD_JOURNAL_BYTES_TRUNCATED)
                     .add(ck.journal_bytes_truncated);
             }
             Ok(None) => {}
             Err(e) => {
-                self.metrics.counter("shard.checkpoint_errors").inc();
+                self.metrics.counter(names::SHARD_CHECKPOINT_ERRORS).inc();
                 eprintln!("warn: {}: background checkpoint failed: {e:#}", self.id);
             }
         }
@@ -413,7 +428,7 @@ impl ShardServer {
             }
         }
         if version != self.map.version {
-            self.metrics.counter("shard.stale_version").inc();
+            self.metrics.counter(names::SHARD_STALE_VERSION).inc();
             return Err(WireError::StaleVersion { current: self.map.version });
         }
 
@@ -448,8 +463,8 @@ impl ShardServer {
         }
         // Group commit once per batch: one journal frame, one sync.
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
-        self.metrics.counter("shard.group_commits").inc();
-        self.metrics.counter("shard.docs_inserted").add(inserted as u64);
+        self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
+        self.metrics.counter(names::SHARD_DOCS_INSERTED).add(inserted as u64);
         self.maybe_compact();
 
         // Split any chunk that crossed the threshold.
@@ -500,7 +515,7 @@ impl ShardServer {
             use crate::mongo::sharding::config_server::VersionCheck;
             match check {
                 VersionCheck::Ok => {
-                    self.metrics.counter("shard.splits").inc();
+                    self.metrics.counter(names::SHARD_SPLITS).inc();
                     // Config pushes SetMap to everyone (including us); we
                     // may process it on the next loop turn. Update our
                     // local copy eagerly to keep counting accurate.
@@ -509,7 +524,7 @@ impl ShardServer {
                     }
                 }
                 VersionCheck::Stale { .. } => {
-                    self.metrics.counter("shard.split_stale").inc();
+                    self.metrics.counter(names::SHARD_SPLIT_STALE).inc();
                     if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
                         self.map = map;
                     }
@@ -583,7 +598,7 @@ impl ShardServer {
             batch,
             remaining: opts.limit,
         };
-        let reply = self.serve_batch(&mut cur);
+        let reply = self.serve_batch(&mut cur)?;
         if reply.cursor.is_some() {
             let id = self.next_cursor;
             self.next_cursor += 1;
@@ -615,7 +630,7 @@ impl ShardServer {
             let bounded =
                 filter.index_range(field).is_some() || matches!(filter, Filter::True);
             if bounded && self.engine.index(COLLECTION, &sort_index).is_some() {
-                self.metrics.counter("shard.plan_index_sort").inc();
+                self.metrics.counter(names::SHARD_PLAN_INDEX_SORT).inc();
                 let (lo, hi) = filter.index_range(field).unwrap_or((None, None));
                 let ranges =
                     vec![Index::superset_bounds(&[], lo.as_ref(), hi.as_ref())];
@@ -630,7 +645,7 @@ impl ShardServer {
             }
             // Sort field not indexed: drain the unsorted plan, decoding
             // each match exactly once, sort in memory, serve from there.
-            return Ok(self.sorted_fallback(filter, opts, field, *dir));
+            return self.sorted_fallback(filter, opts, field, *dir);
         }
         // Kernel fast path for the canonical shape over planned
         // candidates — columns extracted raw, no document materialized.
@@ -638,18 +653,18 @@ impl ShardServer {
             let words = self.kernels.shapes().filter_w;
             let max_node = nodes.iter().max().copied().unwrap_or(0);
             if (max_node as usize) < words * 32 && !nodes.is_empty() {
-                self.metrics.counter("shard.find_kernel_path").inc();
+                self.metrics.counter(names::SHARD_FIND_KERNEL_PATH).inc();
                 let candidates = self.drain_plan(self.plan_scan(filter));
                 self.metrics
-                    .counter("shard.find_candidates")
+                    .counter(names::SHARD_FIND_CANDIDATES)
                     .add(candidates.len() as u64);
                 let rids = self.kernel_filter(&candidates, lo, hi, &nodes)?;
-                self.metrics.counter("shard.find_matches").add(rids.len() as u64);
+                self.metrics.counter(names::SHARD_FIND_MATCHES).add(rids.len() as u64);
                 return Ok(CursorSource::Rids { rids, pos: 0 });
             }
         }
         // General path: stream the planned scan through the raw matcher.
-        self.metrics.counter("shard.find_matcher_path").inc();
+        self.metrics.counter(names::SHARD_FIND_MATCHER_PATH).inc();
         Ok(CursorSource::Scan(ScanCursor::new(self.plan_scan(filter), filter.clone())))
     }
 
@@ -666,7 +681,7 @@ impl ShardServer {
             // == matches; any other operator mix gets an inclusive
             // superset and the residual filter.
             if self.engine.index(COLLECTION, COMPOUND_INDEX).is_some() {
-                self.metrics.counter("shard.plan_compound").inc();
+                self.metrics.counter(names::SHARD_PLAN_COMPOUND).inc();
                 // Exact bounds demand that the filter really pins BOTH
                 // ts sides ($gte lo and $lt hi): a canonical_shape
                 // default (0 / u32::MAX) encoded as an exact Int bound
@@ -711,7 +726,7 @@ impl ShardServer {
                 let in_len: usize = values.iter().map(|v| idx.point_len(&[v])).sum();
                 if let Some((lo, hi)) = &ts_range {
                     if let Some(ts_idx) = self.engine.index(COLLECTION, TS_INDEX) {
-                        self.metrics.counter("shard.plan_intersect").inc();
+                        self.metrics.counter(names::SHARD_PLAN_INTERSECT).inc();
                         let ts_len =
                             ts_idx.range_superset_len(lo.as_ref(), hi.as_ref());
                         let rids: Vec<RecordId> = if in_len <= ts_len {
@@ -736,7 +751,7 @@ impl ShardServer {
                         return ScanPlan::Rids(rids);
                     }
                 }
-                self.metrics.counter("shard.plan_in_points").inc();
+                self.metrics.counter(names::SHARD_PLAN_IN_POINTS).inc();
                 let mut rids = Vec::with_capacity(in_len);
                 for v in values {
                     rids.extend(idx.point_iter(&[v]));
@@ -748,7 +763,7 @@ impl ShardServer {
         // filter restores exact operator semantics).
         if let Some((lo, hi)) = filter.index_range("ts") {
             if self.engine.index(COLLECTION, TS_INDEX).is_some() {
-                self.metrics.counter("shard.plan_ts_range").inc();
+                self.metrics.counter(names::SHARD_PLAN_TS_RANGE).inc();
                 return ScanPlan::Index {
                     index: TS_INDEX.to_string(),
                     ranges: vec![Index::superset_bounds(&[], lo.as_ref(), hi.as_ref())],
@@ -761,7 +776,7 @@ impl ShardServer {
         if let Some((lo, hi)) = filter.index_range("node_id") {
             for index in [NODE_INDEX, COMPOUND_INDEX] {
                 if self.engine.index(COLLECTION, index).is_some() {
-                    self.metrics.counter("shard.plan_node_range").inc();
+                    self.metrics.counter(names::SHARD_PLAN_NODE_RANGE).inc();
                     return ScanPlan::Index {
                         index: index.to_string(),
                         ranges: vec![Index::superset_bounds(
@@ -775,7 +790,7 @@ impl ShardServer {
             }
         }
         // 3. Full scan.
-        self.metrics.counter("shard.plan_full_scan").inc();
+        self.metrics.counter(names::SHARD_PLAN_FULL_SCAN).inc();
         ScanPlan::Table
     }
 
@@ -842,13 +857,17 @@ impl ShardServer {
         opts: &FindOptions,
         field: &str,
         dir: SortDir,
-    ) -> CursorSource {
+    ) -> Result<CursorSource, WireError> {
         let mut scan = ScanCursor::new(self.plan_scan(filter), filter.clone());
         let mut docs: Vec<Document> = Vec::new();
         while let Some((_, raw)) = self.next_scan_match(&mut scan) {
-            docs.push(RawDoc::new(raw).decode().expect("corrupt record"));
+            docs.push(
+                RawDoc::new(raw)
+                    .decode()
+                    .map_err(|e| WireError::Server(format!("corrupt record: {e}")))?,
+            );
         }
-        self.metrics.counter("shard.find_decodes").add(docs.len() as u64);
+        self.metrics.counter(names::SHARD_FIND_DECODES).add(docs.len() as u64);
         self.flush_scan_metrics(&mut scan);
         docs.sort_by(|a, b| {
             let o = a
@@ -872,7 +891,7 @@ impl ShardServer {
                 None => d,
             })
             .collect();
-        CursorSource::Docs { buf }
+        Ok(CursorSource::Docs { buf })
     }
 
     /// Advance a streaming scan to its next match: pull candidates from
@@ -956,16 +975,16 @@ impl ShardServer {
     /// so the per-candidate hot loop takes no registry locks.
     fn flush_scan_metrics(&self, scan: &mut ScanCursor) {
         if scan.seen > 0 {
-            self.metrics.counter("shard.find_candidates").add(scan.seen);
+            self.metrics.counter(names::SHARD_FIND_CANDIDATES).add(scan.seen);
             scan.seen = 0;
         }
         if scan.matched > 0 {
-            self.metrics.counter("shard.find_matches").add(scan.matched);
+            self.metrics.counter(names::SHARD_FIND_MATCHES).add(scan.matched);
             scan.matched = 0;
         }
     }
 
-    fn serve_batch(&self, cur: &mut CursorState) -> FindReply {
+    fn serve_batch(&self, cur: &mut CursorState) -> Result<FindReply, WireError> {
         let mut docs = Vec::with_capacity(cur.batch.min(64));
         let mut decoded = 0u64;
         while docs.len() < cur.batch && cur.remaining != Some(0) {
@@ -977,7 +996,7 @@ impl ShardServer {
                         *pos += 1;
                         if let Some(raw) = self.engine.fetch_raw(COLLECTION, rid) {
                             decoded += 1;
-                            out = Some(materialize(raw, cur.projection.as_deref()));
+                            out = Some(materialize(raw, cur.projection.as_deref())?);
                         }
                     }
                     out
@@ -985,10 +1004,13 @@ impl ShardServer {
                 // Sorted-fallback documents were decoded (and projected)
                 // when the cursor was built.
                 CursorSource::Docs { buf } => buf.pop_front(),
-                CursorSource::Scan(scan) => self.next_scan_match(scan).map(|(_, raw)| {
-                    decoded += 1;
-                    materialize(raw, cur.projection.as_deref())
-                }),
+                CursorSource::Scan(scan) => match self.next_scan_match(scan) {
+                    Some((_, raw)) => {
+                        decoded += 1;
+                        Some(materialize(raw, cur.projection.as_deref())?)
+                    }
+                    None => None,
+                },
             };
             let Some(doc) = doc else { break };
             docs.push(doc);
@@ -997,13 +1019,13 @@ impl ShardServer {
             }
         }
         if decoded > 0 {
-            self.metrics.counter("shard.find_decodes").add(decoded);
+            self.metrics.counter(names::SHARD_FIND_DECODES).add(decoded);
         }
         if let CursorSource::Scan(scan) = &mut cur.src {
             self.flush_scan_metrics(scan);
         }
         let more = !cursor_exhausted(cur) && cur.remaining != Some(0);
-        FindReply { docs, cursor: more.then_some(0) }
+        Ok(FindReply { docs, cursor: more.then_some(0) })
     }
 
     /// Count without materializing documents for the client. The
@@ -1020,10 +1042,10 @@ impl ShardServer {
             if (max_node as usize) < words * 32 && !nodes.is_empty() {
                 let candidates = self.drain_plan(self.plan_scan(filter));
                 self.metrics
-                    .counter("shard.find_candidates")
+                    .counter(names::SHARD_FIND_CANDIDATES)
                     .add(candidates.len() as u64);
                 let n = self.kernel_filter(&candidates, lo, hi, &nodes)?.len() as u64;
-                self.metrics.counter("shard.find_matches").add(n);
+                self.metrics.counter(names::SHARD_FIND_MATCHES).add(n);
                 return Ok(n);
             }
         }
@@ -1041,7 +1063,7 @@ impl ShardServer {
             .cursors
             .remove(&cursor)
             .ok_or(WireError::UnknownCursor(cursor))?;
-        let mut reply = self.serve_batch(&mut cur);
+        let mut reply = self.serve_batch(&mut cur)?;
         if reply.cursor.is_some() {
             self.cursors.insert(cursor, cur);
             reply.cursor = Some(cursor);
@@ -1058,7 +1080,7 @@ impl ShardServer {
         range: (u64, u64),
         after: Option<u64>,
         limit: usize,
-    ) -> MigrateBatchReply {
+    ) -> Result<MigrateBatchReply, WireError> {
         let limit = limit.max(1);
         let scan_cap = limit.saturating_mul(8).max(4096);
         let mut docs = Vec::new();
@@ -1074,7 +1096,10 @@ impl ShardServer {
             let rd = RawDoc::new(raw);
             if let Some(pos) = self.position_of_raw(&rd) {
                 if range.0 <= pos && pos <= range.1 {
-                    docs.push(rd.decode().expect("corrupt record"));
+                    docs.push(
+                        rd.decode()
+                            .map_err(|e| WireError::Server(format!("corrupt record: {e}")))?,
+                    );
                 }
             }
             if docs.len() >= limit || scanned >= scan_cap {
@@ -1082,7 +1107,7 @@ impl ShardServer {
                 break;
             }
         }
-        MigrateBatchReply { docs, last, done }
+        Ok(MigrateBatchReply { docs, last, done })
     }
 
     /// Migration destination: stage one copied batch in the
@@ -1125,7 +1150,7 @@ impl ShardServer {
             .map_err(|e| WireError::Server(e.to_string()))?;
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
         self.staged_docs += n as u64;
-        self.metrics.counter("shard.migration_docs_in").add(n as u64);
+        self.metrics.counter(names::SHARD_MIGRATION_DOCS_IN).add(n as u64);
         self.maybe_compact();
         Ok(n)
     }
@@ -1187,7 +1212,7 @@ impl ShardServer {
         }
         self.staging = None;
         self.staged_docs = 0;
-        self.metrics.counter("shard.migration_docs_published").add(n);
+        self.metrics.counter(names::SHARD_MIGRATION_DOCS_PUBLISHED).add(n);
         self.maybe_compact();
         Ok(n)
     }
@@ -1211,7 +1236,7 @@ impl ShardServer {
         }
         self.staging = None;
         self.staged_docs = 0;
-        self.metrics.counter("shard.migration_aborts").inc();
+        self.metrics.counter(names::SHARD_MIGRATION_ABORTS).inc();
         self.maybe_compact();
         Ok(dropped)
     }
@@ -1260,15 +1285,17 @@ impl ShardServer {
             }
             self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
         }
-        self.metrics.counter("shard.migration_docs_out").add(n);
+        self.metrics.counter(names::SHARD_MIGRATION_DOCS_OUT).add(n);
         let compacted = if compact && n > 0 {
             let ck = self
                 .engine
                 .checkpoint()
                 .map_err(|e| WireError::Server(e.to_string()))?;
-            self.metrics.counter("shard.checkpoints").inc();
+            // Post-migration source compaction — one of the three
+            // distinct `shard.checkpoints` sites (see `metrics::names`).
+            self.metrics.counter(names::SHARD_CHECKPOINTS).inc();
             self.metrics
-                .counter("shard.journal_bytes_truncated")
+                .counter(names::SHARD_JOURNAL_BYTES_TRUNCATED)
                 .add(ck.journal_bytes_truncated);
             Some(ck)
         } else {

@@ -158,6 +158,7 @@ impl ChunkMap {
         if self.bounds.len() != self.owners.len() {
             bail!("bounds/owners length mismatch");
         }
+        // lint: allow(panic, the is_empty bail above guarantees a last element)
         if *self.bounds.last().unwrap() != self.key.max_position() {
             bail!("last bound must be the top of the position space");
         }

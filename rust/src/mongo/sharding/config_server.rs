@@ -171,6 +171,8 @@ impl ConfigState {
         }
         self.map.move_chunk(chunk, to)?;
         debug_assert!(self.map.validate().is_ok());
+        // lint: allow(panic, presence was checked at function entry; move_chunk
+        // cannot clear the field, this re-borrow only satisfies the borrow checker)
         let m = self.migration.as_mut().expect("checked above");
         m.chunk = chunk;
         m.state = MState::Flipped;

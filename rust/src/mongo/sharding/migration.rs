@@ -72,7 +72,7 @@
 
 use anyhow::Result;
 
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::mongo::wire::{rpc, ConfigMailbox, ConfigRequest, ShardMailbox, ShardRequest};
 use crate::util::ids::ShardId;
 
@@ -233,7 +233,7 @@ pub fn execute(
             }
         }
         let _ = rpc(config, |reply| ConfigRequest::AbortMigration { reply });
-        metrics.counter("cluster.migrations_failed").inc();
+        metrics.counter(names::CLUSTER_MIGRATIONS_FAILED).inc();
         return Err(e);
     }
 
@@ -267,9 +267,9 @@ pub fn execute(
     match cleanup {
         Ok(()) => {
             let _ = rpc(config, |reply| ConfigRequest::FinishMigration { reply });
-            metrics.counter("cluster.migration_batches").add(out.batches);
+            metrics.counter(names::CLUSTER_MIGRATION_BATCHES).add(out.batches);
             metrics
-                .counter("cluster.migration_docs")
+                .counter(names::CLUSTER_MIGRATION_DOCS)
                 .add(out.docs_streamed + out.docs_caught_up);
             Ok(out)
         }
@@ -278,7 +278,7 @@ pub fn execute(
             // done (a post-marker migration never unflips); the durable
             // staging rolls forward at the next job's `recover` pass.
             let _ = rpc(config, |reply| ConfigRequest::AbortMigration { reply });
-            metrics.counter("cluster.migrations_failed").inc();
+            metrics.counter(names::CLUSTER_MIGRATIONS_FAILED).inc();
             Err(e)
         }
     }
@@ -372,13 +372,13 @@ pub fn recover(shards: &[ShardMailbox], metrics: &Registry) -> Result<RecoveredM
                 .map_err(|e| anyhow::anyhow!("recover publish: {e}"))?;
             out.rolled_forward += 1;
             out.docs_recovered += n;
-            metrics.counter("cluster.migrations_recovered").inc();
+            metrics.counter(names::CLUSTER_MIGRATIONS_RECOVERED).inc();
         } else {
             rpc(dest, |reply| ShardRequest::AbortStaged { reply })
                 .map_err(|e| anyhow::anyhow!("recover abort: {e}"))?
                 .map_err(|e| anyhow::anyhow!("recover abort: {e}"))?;
             out.rolled_back += 1;
-            metrics.counter("cluster.migrations_rolled_back").inc();
+            metrics.counter(names::CLUSTER_MIGRATIONS_ROLLED_BACK).inc();
         }
     }
     Ok(out)

@@ -457,6 +457,7 @@ impl Engine {
     /// records.
     pub fn create_index(&mut self, coll: &str, spec: IndexSpec) -> Result<()> {
         self.create_collection(coll);
+        // lint: allow(panic, create_collection on the line above inserts the entry)
         let c = self.collections.get_mut(coll).unwrap();
         if c.indexes.iter().any(|i| i.spec == spec) {
             return Ok(());
@@ -482,6 +483,7 @@ impl Engine {
         if self.opts.journal {
             self.journal_record(OP_INSERT, coll, &encoded);
         }
+        // lint: allow(panic, the contains_key check at function entry bails first)
         let c = self.collections.get_mut(coll).expect("collection checked above");
         Ok(c.insert_decoded(doc, encoded))
     }
@@ -509,6 +511,7 @@ impl Engine {
             }
             self.journal_record(OP_INSERT_MANY, coll, &payload);
         }
+        // lint: allow(panic, the contains_key check at function entry bails first)
         let c = self.collections.get_mut(coll).expect("collection checked above");
         Ok(c.insert_batch(docs, encoded))
     }
@@ -550,8 +553,10 @@ impl Engine {
         if self.opts.journal {
             self.journal_record(OP_REMOVE_MANY, coll, &payload);
         }
+        // lint: allow(panic, the collect loop above already resolved every rid in this collection)
         let c = self.collections.get_mut(coll).expect("collection checked above");
         for &rid in rids {
+            // lint: allow(panic, every rid was fetched from this collection above)
             c.remove(rid).expect("record validated above");
         }
         Ok(docs)
@@ -603,10 +608,13 @@ impl Engine {
         if self.opts.journal {
             self.journal_record(OP_MOVE_MANY, src, &payload);
         }
+        // lint: allow(panic, the collect loop above already resolved every rid in src)
         let c = self.collections.get_mut(src).expect("collection checked above");
         for &rid in rids {
+            // lint: allow(panic, every rid was fetched from src above)
             c.remove(rid).expect("record validated above");
         }
+        // lint: allow(panic, the contains_key(dst) check at function entry bails first)
         let d = self.collections.get_mut(dst).expect("collection checked above");
         Ok(d.insert_batch(&docs, encs))
     }
@@ -642,6 +650,7 @@ impl Engine {
             self.journal = Some(self.dir.create(&segment_name(self.current_seq))?);
         }
         let (seg_len, rotate) = {
+            // lint: allow(panic, the branch above replaces None with a fresh segment)
             let j = self.journal.as_mut().expect("journal opened above");
             j.append(&self.journal_buf)?;
             j.sync()?;
@@ -678,6 +687,7 @@ impl Engine {
             .get(coll)?
             .records
             .get(&rid)
+            // lint: allow(panic, in-memory bytes are validated on every write and replay)
             .map(|b| Document::decode(b).expect("corrupt record"))
     }
 
@@ -737,6 +747,7 @@ impl Engine {
     ) -> Box<dyn Iterator<Item = (RecordId, Document)> + 'a> {
         Box::new(
             self.scan_raw_from(coll, after)
+                // lint: allow(panic, in-memory bytes are validated on every write and replay)
                 .map(|(rid, b)| (rid, Document::decode(b).expect("corrupt record"))),
         )
     }
@@ -1164,6 +1175,7 @@ impl Engine {
                 let fields: Vec<&str> = joined.split(',').collect();
                 self.create_index(&dc.name, IndexSpec::compound(&fields))?;
             }
+            // lint: allow(panic, create_collection in the loop above inserts the entry)
             let c = self.collections.get_mut(&dc.name).expect("collection created above");
             for (rid, bytes) in dc.upserts {
                 c.apply_upsert(rid, bytes)?;
@@ -1251,6 +1263,7 @@ impl Engine {
             let coll = std::str::from_utf8(&rec[2..2 + coll_len])?.to_string();
             let payload = &rec[2 + coll_len..];
             self.create_collection(&coll);
+            // lint: allow(panic, create_collection on the line above inserts the entry)
             let c = self.collections.get_mut(&coll).unwrap();
             match op {
                 OP_INSERT => {
@@ -1342,6 +1355,7 @@ impl Engine {
                     // into the destination with freshly allocated rids —
                     // replay reproduces the live allocation exactly.
                     self.create_collection(&dst);
+                    // lint: allow(panic, create_collection(&coll) ran before this match)
                     let src_c = self.collections.get_mut(&coll).expect("created above");
                     let mut docs = Vec::with_capacity(recs.len());
                     let mut encs = Vec::with_capacity(recs.len());
@@ -1350,6 +1364,7 @@ impl Engine {
                         docs.push(Document::decode(&bytes)?);
                         encs.push(bytes);
                     }
+                    // lint: allow(panic, create_collection(&dst) at the top of this arm)
                     let dst_c = self.collections.get_mut(&dst).expect("created above");
                     dst_c.insert_batch(&docs, encs);
                 }

@@ -46,6 +46,7 @@ pub fn encode_value(v: &Value, out: &mut Vec<u8>) {
         Value::Null => {}
         Value::Bool(b) => out.push(*b as u8),
         Value::Int(_) | Value::F64(_) => {
+            // lint: allow(panic, as_f64 is total for the Int and F64 variants matched here)
             let f = v.as_f64().unwrap();
             let bits = f.to_bits();
             // Flip sign bit for positives, all bits for negatives: total

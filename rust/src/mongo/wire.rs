@@ -154,6 +154,8 @@ pub enum ShardRequest {
         reply: Reply<Result<(), WireError>>,
     },
     /// Config pushes a new chunk map after any metadata mutation.
+    // lint: allow(no_reply, one-way push from the config server; acking every
+    // map broadcast would serialize the config loop on the slowest shard)
     SetMap { map: ChunkMap },
     /// Migration source: copy (do not delete) one bounded batch of the
     /// range, resuming from the record-id cursor `after`. Each batch is
@@ -216,6 +218,8 @@ pub enum ShardRequest {
     Checkpoint {
         reply: Reply<Result<CheckpointStats, WireError>>,
     },
+    // lint: allow(no_reply, shutdown is fire-and-forget; callers join the
+    // server thread instead of waiting on a reply)
     Shutdown,
 }
 
@@ -264,6 +268,8 @@ pub enum ConfigRequest {
     Stats {
         reply: Reply<ConfigStatsReply>,
     },
+    // lint: allow(no_reply, shutdown is fire-and-forget; callers join the
+    // server thread instead of waiting on a reply)
     Shutdown,
 }
 

@@ -142,6 +142,10 @@ fn run_seed(seed: u64) {
 
     // Every fifth seed starts from a legacy pre-rotation store so the
     // v1-layout migration runs under the same differential check.
+    // lint: journal-op(OP_INSERT) — single-document frames, replayed and
+    // differentially checked against the model after every simulated kill.
+    // lint: journal-op(OP_REMOVE) — single-document removes interleave with
+    // the inserts under the same kill/replay differential check.
     if seed % 5 == 0 {
         let mut eng = Engine::open_with(
             Box::new(LocalDir::new(&root).unwrap()),

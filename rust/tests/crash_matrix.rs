@@ -74,6 +74,8 @@ fn journal_files_bytes(root: &str) -> u64 {
         .sum()
 }
 
+// lint: journal-op(OP_INSERT_MANY) — every batch below is one multi-record
+// journal frame whose replay is differentially checked after each kill.
 #[test]
 fn sustained_ingest_bounds_disk_and_replays_only_the_tail() {
     let threshold: u64 = 64 * 1024;
@@ -728,6 +730,10 @@ fn kill_between_commit_marker_and_source_delete_rolls_forward() {
     }
 }
 
+// lint: journal-op(OP_REMOVE_MANY) — the source delete is one atomic
+// remove_many frame; this kill point replays it against the staged copy.
+// lint: journal-op(OP_MOVE_MANY) — recovery's publish replays the staged →
+// live move_many frame after the kill.
 #[test]
 fn kill_between_source_delete_and_publish_rolls_forward() {
     let roots = mig_roots("mig-delete");
