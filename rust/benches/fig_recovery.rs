@@ -159,6 +159,7 @@ fn main() {
             checkpoint_bytes: 0,
             journal_segments: 4,
             full_checkpoint_chain: (k + 1).max(1) as u32,
+            ..EngineOptions::default()
         };
         let dir = LocalDir::temp(&format!("figrec-chain-{k}")).unwrap();
         let root = dir.describe();

@@ -171,6 +171,15 @@ pub struct StoreConfig {
     /// spread (live docs + on-disk journal/delta bytes) exceeds this
     /// (0 = chunk-count-only planning).
     pub balancer_bytes: u64,
+    /// Per-shard reader pool: threads serving finds/counts against MVCC
+    /// snapshots while the shard's event loop keeps ingesting. 0 keeps
+    /// reads on the event loop (still snapshot-isolated).
+    pub reader_threads: usize,
+    /// Snapshot retention window, in commits: a snapshot (open cursor)
+    /// may lag the writer by at most this many epochs before it expires
+    /// with a retryable error and its versions reclaim. 0 = unbounded
+    /// (versions are held as long as any snapshot is open).
+    pub snapshot_retention: u64,
 }
 
 impl Default for StoreConfig {
@@ -190,6 +199,8 @@ impl Default for StoreConfig {
             balancer: true,
             migration_batch_docs: 1_024,
             balancer_bytes: 256 * 1024 * 1024,
+            reader_threads: 0,
+            snapshot_retention: 0,
         }
     }
 }
@@ -210,7 +221,9 @@ impl StoreConfig {
             .set("cursor_batch", self.cursor_batch)
             .set("balancer", self.balancer)
             .set("migration_batch_docs", self.migration_batch_docs)
-            .set("balancer_bytes", self.balancer_bytes);
+            .set("balancer_bytes", self.balancer_bytes)
+            .set("reader_threads", self.reader_threads)
+            .set("snapshot_retention", self.snapshot_retention);
         v
     }
 
@@ -267,6 +280,14 @@ impl StoreConfig {
                 .get("balancer_bytes")
                 .and_then(Value::as_u64)
                 .unwrap_or(d.balancer_bytes),
+            reader_threads: v
+                .get("reader_threads")
+                .and_then(Value::as_usize)
+                .unwrap_or(d.reader_threads),
+            snapshot_retention: v
+                .get("snapshot_retention")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.snapshot_retention),
         })
     }
 }
@@ -548,6 +569,8 @@ mod tests {
         assert_eq!(c2.store.full_checkpoint_chain, c.store.full_checkpoint_chain);
         assert_eq!(c2.store.migration_batch_docs, c.store.migration_batch_docs);
         assert_eq!(c2.store.balancer_bytes, c.store.balancer_bytes);
+        assert_eq!(c2.store.reader_threads, c.store.reader_threads);
+        assert_eq!(c2.store.snapshot_retention, c.store.snapshot_retention);
         assert_eq!(c2.workload.monitored_nodes, c.workload.monitored_nodes);
         assert_eq!(c2.lustre.osts, c.lustre.osts);
     }

@@ -94,6 +94,16 @@ fn cli() -> Cli {
                         Some("BYTES"),
                         "byte-aware balancer: move chunks past this per-shard byte spread (default 256 MiB, 0 = count-only)",
                     ),
+                    f(
+                        "reader-threads",
+                        Some("N"),
+                        "per-shard reader pool serving finds/counts off the event loop (default 0 = inline)",
+                    ),
+                    f(
+                        "snapshot-retention",
+                        Some("N"),
+                        "commits an open snapshot may lag before expiring with a retryable error (default 0 = unbounded)",
+                    ),
                     f("artifacts", Some("DIR"), "AOT artifact dir (default artifacts)"),
                     f("fallback", None, "use the scalar kernel fallback"),
                 ],
@@ -196,6 +206,11 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             as usize,
         balancer_bytes: args
             .get_u64_or("balancer-bytes", store_defaults.balancer_bytes)?,
+        reader_threads: args
+            .get_u64_or("reader-threads", store_defaults.reader_threads as u64)?
+            as usize,
+        snapshot_retention: args
+            .get_u64_or("snapshot-retention", store_defaults.snapshot_retention)?,
     };
     let script = RunScript::new(topo.clone(), store, lustre.clone(), kernels);
 

@@ -62,6 +62,17 @@ pub mod names {
     pub const SHARD_FIND_CANDIDATES: &str = "shard.find_candidates";
     pub const SHARD_FIND_MATCHES: &str = "shard.find_matches";
     pub const SHARD_FIND_DECODES: &str = "shard.find_decodes";
+    // -- shard server: MVCC snapshot reads ------------------------------
+    /// Read requests (find/getMore/count) served against a pinned
+    /// snapshot — i.e. every read; the counter exists so mixed-workload
+    /// runs can ratio reads against `shard.group_commits`.
+    pub const SHARD_SNAPSHOT_READS: &str = "shard.snapshot_reads";
+    /// Snapshots currently pinned (open cursors + in-flight reads),
+    /// sampled by the writer at every maintenance turn.
+    pub const SHARD_SNAPSHOTS_OPEN: &str = "shard.snapshots_open";
+    /// Epochs between the committed epoch and the reclamation floor —
+    /// how far the oldest open snapshot holds garbage collection back.
+    pub const SHARD_RECLAIM_LAG: &str = "shard.reclaim_lag";
     // -- shard server: migration data plane -----------------------------
     pub const SHARD_MIGRATION_DOCS_IN: &str = "shard.migration_docs_in";
     pub const SHARD_MIGRATION_DOCS_OUT: &str = "shard.migration_docs_out";
@@ -121,6 +132,9 @@ pub mod names {
         (SHARD_FIND_CANDIDATES, "counter"),
         (SHARD_FIND_MATCHES, "counter"),
         (SHARD_FIND_DECODES, "counter"),
+        (SHARD_SNAPSHOT_READS, "counter"),
+        (SHARD_SNAPSHOTS_OPEN, "gauge"),
+        (SHARD_RECLAIM_LAG, "gauge"),
         (SHARD_MIGRATION_DOCS_IN, "counter"),
         (SHARD_MIGRATION_DOCS_OUT, "counter"),
         (SHARD_MIGRATION_DOCS_PUBLISHED, "counter"),

@@ -85,6 +85,7 @@ impl MongoClient {
             router,
             buffered: first.docs.into(),
             cursor: first.cursor,
+            err: None,
         })
     }
 
@@ -166,10 +167,25 @@ impl BulkWriter {
 }
 
 /// Iterates result documents, pulling `getMore` batches on demand.
+///
+/// A `getMore` failure ends the iteration; [`ClientCursor::error`]
+/// distinguishes a clean exhaustion (`None`) from a mid-drain error —
+/// notably [`WireError::SnapshotExpired`], where the cursor's pinned
+/// snapshot fell behind the retention window and the caller should
+/// reissue the `find`.
 pub struct ClientCursor {
     router: RouterMailbox,
     buffered: VecDeque<Document>,
     cursor: Option<u64>,
+    err: Option<WireError>,
+}
+
+impl ClientCursor {
+    /// The error that terminated iteration, if any. `None` after a
+    /// complete drain.
+    pub fn error(&self) -> Option<&WireError> {
+        self.err.as_ref()
+    }
 }
 
 impl Iterator for ClientCursor {
@@ -189,7 +205,14 @@ impl Iterator for ClientCursor {
                         return None;
                     }
                 }
-                _ => return None,
+                Ok(Err(e)) => {
+                    self.err = Some(e);
+                    return None;
+                }
+                Err(e) => {
+                    self.err = Some(e);
+                    return None;
+                }
             }
         }
     }

@@ -120,6 +120,7 @@ impl Cluster {
             checkpoint_bytes: spec.store.checkpoint_bytes,
             journal_segments: spec.store.journal_segments,
             full_checkpoint_chain: spec.store.full_checkpoint_chain,
+            snapshot_retention: spec.store.snapshot_retention,
         };
         for (i, rx) in shard_rxs.into_iter().enumerate() {
             let id = ShardId(i as u32);
@@ -133,6 +134,7 @@ impl Cluster {
                 engine_opts.clone(),
                 spec.store.max_chunk_docs,
                 spec.store.cursor_batch,
+                spec.store.reader_threads,
             )?;
             joins.push(server.spawn_with(rx));
         }

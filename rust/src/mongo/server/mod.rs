@@ -3,9 +3,11 @@
 //! element, paper §3.2).
 
 pub mod config;
+pub mod read;
 pub mod router;
 pub mod shard;
 
 pub use config::ConfigServer;
+pub use read::{ReadContext, ReadRequest, ReaderPool};
 pub use router::{InsertManyReply, Router, RouterMailbox, RouterRequest, RouterStatsReply};
 pub use shard::ShardServer;

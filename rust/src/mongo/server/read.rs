@@ -1,0 +1,1053 @@
+//! Snapshot-pinned read path + reader pool.
+//!
+//! Every `Find`/`GetMore`/`Count` executes against a [`ReadView`] — an
+//! MVCC snapshot of the shard's store pinned at the committed epoch
+//! (docs/ARCHITECTURE.md §9). The planner, streaming cursors, kernel
+//! fast path, and raw matcher all moved here from `shard.rs`,
+//! parameterized over the view, so the same code serves two dispatch
+//! modes:
+//!
+//! * `--reader-threads 0` (default): the shard event loop calls
+//!   [`ReadContext::serve`] inline — single-threaded, exactly the old
+//!   behaviour, but already snapshot-isolated.
+//! * `--reader-threads N`: the event loop forwards read requests to a
+//!   [`ReaderPool`] of N threads and immediately returns to ingest /
+//!   checkpoint / migration work. Readers never block the writer: a
+//!   view holds the store's `RwLock` read-side only for one bounded
+//!   batch (`SCAN_RUN` candidates / one reply batch).
+//!
+//! Open cursors pin their snapshot in the shared [`ReadContext`]
+//! registry; a `GetMore` re-pins the *same* epoch, so a cursor drains a
+//! frozen result set no matter how far ingest, range deletes, or a
+//! chunk-migration publish have advanced — or fails with the retryable
+//! [`WireError::SnapshotExpired`] once the retention knob reclaims its
+//! epoch. Mailbox ordering gives read-your-writes: a find forwarded
+//! after an insert batch commits pins an epoch at or past that commit.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::metrics::{names, Registry};
+use crate::mongo::bson::{Document, RawDoc, Value};
+use crate::mongo::query::{Filter, FindOptions, SortDir};
+use crate::mongo::storage::index::{encode_key, EncodedRange, Index};
+use crate::mongo::storage::{ReadView, RecordId, Snapshot, SnapshotExpired, StoreReader};
+use crate::mongo::wire::{FindReply, Reply, WireError};
+use crate::runtime::Kernels;
+
+use super::shard::COLLECTION;
+
+/// Index names the planner recognizes.
+const COMPOUND_INDEX: &str = "node_id_1_ts_1";
+const TS_INDEX: &str = "ts_1";
+const NODE_INDEX: &str = "node_id_1";
+
+/// Keys/rids pulled into a streaming cursor per refill step — bounds
+/// the work done under one store read guard without per-key round
+/// trips.
+const SCAN_RUN: usize = 256;
+
+/// Read requests a shard dispatches off its event loop. Mirrors the
+/// read subset of `ShardRequest`; the writer forwards the reply sender
+/// so the pool answers clients directly.
+pub enum ReadRequest {
+    Find {
+        filter: Filter,
+        opts: FindOptions,
+        reply: Reply<Result<FindReply, WireError>>,
+    },
+    GetMore {
+        cursor: u64,
+        reply: Reply<Result<FindReply, WireError>>,
+    },
+    Count {
+        filter: Filter,
+        reply: Reply<Result<u64, WireError>>,
+    },
+}
+
+/// One access path chosen by the planner.
+enum ScanPlan {
+    /// Materialized candidate rids (the index-intersection fallback and
+    /// point-lookup plans); the residual matcher still runs.
+    Rids(Vec<RecordId>),
+    /// Resumable scan over `index`: encoded `[lo, hi)` ranges walked in
+    /// order, yielding rids in index-key order. `rev` walks each range
+    /// descending (the builder orders `ranges` to match the overall
+    /// direction; every `rev` plan today is single-range).
+    Index { index: String, ranges: Vec<EncodedRange>, rev: bool },
+    /// Resumable full-collection scan in record-id order.
+    Table,
+}
+
+/// A streaming scan position: plan + residual filter + resume state.
+/// The position is a *key* (or record id), not an iterator, so the
+/// cursor survives between getMores without borrowing the store; the
+/// pinned snapshot keeps the result set frozen regardless.
+struct ScanCursor {
+    plan: ScanPlan,
+    /// Residual filter, evaluated raw per candidate.
+    filter: Filter,
+    /// Current range within an `Index` plan.
+    range_idx: usize,
+    /// Last fully consumed key (`Index` plans) — the resume point.
+    after_key: Option<Vec<u8>>,
+    /// Last consumed record id (`Table` plans).
+    after_rid: Option<RecordId>,
+    /// Consumed prefix of a `Rids` plan.
+    pos: usize,
+    /// Candidates pulled from the plan, awaiting the matcher.
+    pending: VecDeque<RecordId>,
+    /// The underlying scan is exhausted (pending may still hold rids).
+    done: bool,
+    /// Candidates examined / matched since the last metrics flush —
+    /// batched locally so the hot loop takes no registry locks.
+    seen: u64,
+    matched: u64,
+}
+
+impl ScanCursor {
+    fn new(plan: ScanPlan, filter: Filter) -> Self {
+        Self {
+            plan,
+            filter,
+            range_idx: 0,
+            after_key: None,
+            after_rid: None,
+            pos: 0,
+            pending: VecDeque::new(),
+            done: false,
+            seen: 0,
+            matched: 0,
+        }
+    }
+}
+
+/// Where an open cursor's documents come from.
+enum CursorSource {
+    /// Matched rids known up front (the kernel fast path).
+    Rids { rids: Vec<RecordId>, pos: usize },
+    /// Documents materialized at plan time (non-indexed sort fallback:
+    /// decoded once, sorted, projected, served from memory).
+    Docs { buf: VecDeque<Document> },
+    /// Streaming: candidates pulled lazily from a resumable scan,
+    /// raw-matched, decoded only when served.
+    Scan(ScanCursor),
+}
+
+struct CursorState {
+    src: CursorSource,
+    projection: Option<Vec<String>>,
+    batch: usize,
+    remaining: Option<usize>,
+}
+
+/// An open cursor: its position plus the snapshot pin that freezes its
+/// result set. Dropping the entry releases the pin (and, eventually,
+/// the dead versions it held back).
+struct CursorEntry {
+    cur: CursorState,
+    snap: Snapshot,
+}
+
+/// Decode one raw record for the reply — the read path's only full
+/// materialization (projections decode just the projected fields). The
+/// caller counts it into `shard.find_decodes`. A record that fails to
+/// decode surfaces as a server error instead of killing the serving
+/// thread: the engine's bytes are validated on every write and replay,
+/// so reaching the error arm means on-disk or in-memory corruption the
+/// client deserves to hear about.
+fn materialize(raw: &[u8], projection: Option<&[String]>) -> Result<Document, WireError> {
+    let rd = RawDoc::new(raw);
+    match projection {
+        Some(fields) => Ok(rd.project(fields)),
+        None => rd
+            .decode()
+            .map_err(|e| WireError::Server(format!("corrupt record: {e}"))),
+    }
+}
+
+fn cursor_exhausted(cur: &CursorState) -> bool {
+    match &cur.src {
+        CursorSource::Rids { rids, pos } => *pos >= rids.len(),
+        CursorSource::Docs { buf } => buf.is_empty(),
+        CursorSource::Scan(scan) => scan.done && scan.pending.is_empty(),
+    }
+}
+
+/// The paper's canonical query shape, *exactly*: a conjunction of
+/// `ts >= lo` (`$gte`), `ts < hi` (`$lt`) and `node_id $in [ints]` and
+/// nothing else — the only shape the filter kernel's predicate
+/// `lo <= ts < hi && node in set` evaluates completely. Any other
+/// filter takes the scalar matcher path.
+fn canonical_shape(filter: &Filter) -> Option<(u32, u32, Vec<u32>)> {
+    use crate::mongo::query::CmpOp;
+    let conjuncts = match filter {
+        Filter::And(fs) => fs.as_slice(),
+        f @ Filter::In { .. } => std::slice::from_ref(f),
+        _ => return None,
+    };
+    let mut lo: Option<u32> = None;
+    let mut hi: Option<u32> = None;
+    let mut nodes: Option<Vec<u32>> = None;
+    for c in conjuncts {
+        match c {
+            Filter::Cmp { field, op: CmpOp::Gte, value } if field == "ts" && lo.is_none() => {
+                let v = value.as_i64()?;
+                if !(0..=u32::MAX as i64).contains(&v) {
+                    return None;
+                }
+                lo = Some(v as u32);
+            }
+            Filter::Cmp { field, op: CmpOp::Lt, value } if field == "ts" && hi.is_none() => {
+                let v = value.as_i64()?;
+                if !(0..=u32::MAX as i64).contains(&v) {
+                    return None;
+                }
+                hi = Some(v as u32);
+            }
+            Filter::In { field, values } if field == "node_id" && nodes.is_none() => {
+                let mut ids = Vec::with_capacity(values.len());
+                for v in values {
+                    let n = v.as_i64()?;
+                    if !(0..=u32::MAX as i64).contains(&n) {
+                        return None;
+                    }
+                    ids.push(n as u32);
+                }
+                nodes = Some(ids);
+            }
+            _ => return None, // anything else → matcher path
+        }
+    }
+    Some((lo.unwrap_or(0), hi.unwrap_or(u32::MAX), nodes?))
+}
+
+/// Poison-recovering mutex lock: a reader thread that panicked mid-
+/// serve must not wedge every other reader (the shared state — cursor
+/// registry, pool queue — stays structurally valid; the panicking
+/// request's cursor is simply gone).
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn expired(e: SnapshotExpired) -> WireError {
+    WireError::SnapshotExpired { at: e.at, floor: e.floor }
+}
+
+/// Shared, thread-safe read state of one shard: the snapshot source,
+/// the kernel handle, and the snapshot-pinning cursor registry. The
+/// shard event loop and every reader-pool worker hold the same
+/// `Arc<ReadContext>`.
+pub struct ReadContext {
+    reader: StoreReader,
+    kernels: Kernels,
+    metrics: Registry,
+    default_batch: usize,
+    cursors: Mutex<HashMap<u64, CursorEntry>>,
+    next_cursor: AtomicU64,
+}
+
+impl ReadContext {
+    pub fn new(
+        reader: StoreReader,
+        kernels: Kernels,
+        metrics: Registry,
+        default_batch: usize,
+    ) -> Self {
+        Self {
+            reader,
+            kernels,
+            metrics,
+            default_batch,
+            cursors: Mutex::new(HashMap::new()),
+            next_cursor: AtomicU64::new(1),
+        }
+    }
+
+    /// Cursors currently open (each pins one snapshot).
+    pub fn open_cursors(&self) -> usize {
+        locked(&self.cursors).len()
+    }
+
+    /// Execute one read request and answer its reply channel. Called by
+    /// pool workers and — with `--reader-threads 0` — inline by the
+    /// shard event loop; request latency lands in the same histograms
+    /// either way.
+    pub fn serve(&self, req: ReadRequest) {
+        match req {
+            ReadRequest::Find { filter, opts, reply } => {
+                let t = Instant::now();
+                let r = self.handle_find(&filter, &opts);
+                self.metrics
+                    .observe(names::SHARD_FIND_NS, t.elapsed().as_nanos() as u64);
+                let _ = reply.send(r);
+            }
+            ReadRequest::GetMore { cursor, reply } => {
+                let _ = reply.send(self.handle_get_more(cursor));
+            }
+            ReadRequest::Count { filter, reply } => {
+                let t = Instant::now();
+                let r = self.handle_count(&filter);
+                self.metrics
+                    .observe(names::SHARD_COUNT_NS, t.elapsed().as_nanos() as u64);
+                let _ = reply.send(r);
+            }
+        }
+    }
+
+    pub fn handle_find(
+        &self,
+        filter: &Filter,
+        opts: &FindOptions,
+    ) -> Result<FindReply, WireError> {
+        self.metrics.counter(names::SHARD_SNAPSHOT_READS).inc();
+        let snap = self.reader.snapshot();
+        // A freshly pinned snapshot sits at the committed epoch; it can
+        // only be below the floor if the writer advanced retention-many
+        // epochs between the pin and this view — handled like any other
+        // expiry: clean retryable error.
+        let view = self.reader.view(&snap).map_err(expired)?;
+        let src = self.plan_source(&view, filter, opts)?;
+        let batch = opts.batch_size.unwrap_or(self.default_batch);
+        let mut cur = CursorState {
+            src,
+            projection: opts.projection.clone(),
+            batch,
+            remaining: opts.limit,
+        };
+        let reply = self.serve_batch(&view, &mut cur)?;
+        drop(view);
+        if reply.cursor.is_some() {
+            let id = self.next_cursor.fetch_add(1, Ordering::Relaxed);
+            locked(&self.cursors).insert(id, CursorEntry { cur, snap });
+            Ok(FindReply { docs: reply.docs, cursor: Some(id) })
+        } else {
+            // One-batch result: the snapshot unpins right here.
+            Ok(reply)
+        }
+    }
+
+    pub fn handle_get_more(&self, cursor: u64) -> Result<FindReply, WireError> {
+        self.metrics.counter(names::SHARD_SNAPSHOT_READS).inc();
+        // Remove-serve-reinsert doubles as mutual exclusion: two
+        // concurrent getMores on one cursor id cannot interleave batch
+        // state — the second sees UnknownCursor, like a drained cursor.
+        let CursorEntry { mut cur, snap } = locked(&self.cursors)
+            .remove(&cursor)
+            .ok_or(WireError::UnknownCursor(cursor))?;
+        let view = match self.reader.view(&snap) {
+            Ok(v) => v,
+            // The retention knob reclaimed this cursor's epoch while it
+            // idled: the cursor dies (snap unpins on drop) and the
+            // client retries with a fresh find.
+            Err(e) => return Err(expired(e)),
+        };
+        let mut reply = self.serve_batch(&view, &mut cur)?;
+        drop(view);
+        if reply.cursor.is_some() {
+            locked(&self.cursors).insert(cursor, CursorEntry { cur, snap });
+            reply.cursor = Some(cursor);
+        }
+        Ok(reply)
+    }
+
+    /// Count without materializing documents for the client. The
+    /// canonical shape runs the kernel over raw-extracted columns; any
+    /// other filter streams the plan through the raw matcher — counting
+    /// decodes nothing at all.
+    pub fn handle_count(&self, filter: &Filter) -> Result<u64, WireError> {
+        self.metrics.counter(names::SHARD_SNAPSHOT_READS).inc();
+        let snap = self.reader.snapshot();
+        let view = self.reader.view(&snap).map_err(expired)?;
+        // Counts examine candidates exactly like finds do, so both
+        // branches publish the candidate/match tallies — the ratio the
+        // planner regressions read covers finds and counts alike.
+        if let Some((lo, hi, nodes)) = canonical_shape(filter) {
+            let words = self.kernels.shapes().filter_w;
+            let max_node = nodes.iter().max().copied().unwrap_or(0);
+            if (max_node as usize) < words * 32 && !nodes.is_empty() {
+                let candidates = self.drain_plan(&view, self.plan_scan(&view, filter));
+                self.metrics
+                    .counter(names::SHARD_FIND_CANDIDATES)
+                    .add(candidates.len() as u64);
+                let n = self.kernel_filter(&view, &candidates, lo, hi, &nodes)?.len() as u64;
+                self.metrics.counter(names::SHARD_FIND_MATCHES).add(n);
+                return Ok(n);
+            }
+        }
+        let mut scan = ScanCursor::new(self.plan_scan(&view, filter), filter.clone());
+        let mut n = 0u64;
+        while self.next_scan_match(&view, &mut scan).is_some() {
+            n += 1;
+        }
+        self.flush_scan_metrics(&mut scan);
+        Ok(n)
+    }
+
+    /// Build the cursor source for a find: the index-ordered sort path,
+    /// the kernel fast path, or a streaming scan with the raw matcher.
+    fn plan_source(
+        &self,
+        view: &ReadView<'_>,
+        filter: &Filter,
+        opts: &FindOptions,
+    ) -> Result<CursorSource, WireError> {
+        if let Some((field, dir)) = &opts.sort {
+            // Index-ordered sort: a single-field index on the sort field
+            // serves rids in key order (reverse scan for Desc) — the
+            // limit cuts the scan off early instead of materializing,
+            // decoding, and sorting every match. Worth it when the
+            // index walk is bounded by the *filter* — it ranges the
+            // sort field, or matches everything. A selective filter on
+            // a different field (even with a limit: scarce matches
+            // would walk the whole sort index before filling it) is
+            // better served by its own plan + decode-once sort (below).
+            let sort_index = format!("{field}_1");
+            let bounded =
+                filter.index_range(field).is_some() || matches!(filter, Filter::True);
+            if bounded && view.index(COLLECTION, &sort_index).is_some() {
+                self.metrics.counter(names::SHARD_PLAN_INDEX_SORT).inc();
+                let (lo, hi) = filter.index_range(field).unwrap_or((None, None));
+                let ranges = vec![Index::superset_bounds(&[], lo.as_ref(), hi.as_ref())];
+                return Ok(CursorSource::Scan(ScanCursor::new(
+                    ScanPlan::Index {
+                        index: sort_index,
+                        ranges,
+                        rev: *dir == SortDir::Desc,
+                    },
+                    filter.clone(),
+                )));
+            }
+            // Sort field not indexed: drain the unsorted plan, decoding
+            // each match exactly once, sort in memory, serve from there.
+            return self.sorted_fallback(view, filter, opts, field, *dir);
+        }
+        // Kernel fast path for the canonical shape over planned
+        // candidates — columns extracted raw, no document materialized.
+        if let Some((lo, hi, nodes)) = canonical_shape(filter) {
+            let words = self.kernels.shapes().filter_w;
+            let max_node = nodes.iter().max().copied().unwrap_or(0);
+            if (max_node as usize) < words * 32 && !nodes.is_empty() {
+                self.metrics.counter(names::SHARD_FIND_KERNEL_PATH).inc();
+                let candidates = self.drain_plan(view, self.plan_scan(view, filter));
+                self.metrics
+                    .counter(names::SHARD_FIND_CANDIDATES)
+                    .add(candidates.len() as u64);
+                let rids = self.kernel_filter(view, &candidates, lo, hi, &nodes)?;
+                self.metrics.counter(names::SHARD_FIND_MATCHES).add(rids.len() as u64);
+                return Ok(CursorSource::Rids { rids, pos: 0 });
+            }
+        }
+        // General path: stream the planned scan through the raw matcher.
+        self.metrics.counter(names::SHARD_FIND_MATCHER_PATH).inc();
+        Ok(CursorSource::Scan(ScanCursor::new(
+            self.plan_scan(view, filter),
+            filter.clone(),
+        )))
+    }
+
+    /// Choose an access path for `filter` — the planner decision tree
+    /// (docs/ARCHITECTURE.md §7.1). Streaming plans yield candidates
+    /// lazily; the `Rids` plan is the materialized intersection/point
+    /// fallback. All cardinality estimates and probes evaluate at the
+    /// view's epoch, so the plan and the data it scans agree.
+    fn plan_scan(&self, view: &ReadView<'_>, filter: &Filter) -> ScanPlan {
+        let at = view.at();
+        // 1. `$in` on node_id.
+        if let Some(values) = filter.in_values("node_id") {
+            let ts_range = filter.index_range("ts");
+            // 1a. Compound (node_id, ts): one bounded range scan per
+            // node. For the canonical shape the `$lt` upper bound is
+            // known exclusive, so the bounds are *exact* — candidates
+            // == matches; any other operator mix gets an inclusive
+            // superset and the residual filter.
+            if view.index(COLLECTION, COMPOUND_INDEX).is_some() {
+                self.metrics.counter(names::SHARD_PLAN_COMPOUND).inc();
+                // Exact bounds demand that the filter really pins BOTH
+                // ts sides ($gte lo and $lt hi): a canonical_shape
+                // default (0 / u32::MAX) encoded as an exact Int bound
+                // would wrongly exclude documents whose ts is missing
+                // or non-Int — keys of another type rank that a
+                // ts-unconstrained filter still matches. Partial or
+                // absent ts bounds take the inclusive superset and the
+                // residual filter.
+                let both_ts_bounds = matches!(&ts_range, Some((Some(_), Some(_))));
+                let ranges: Vec<EncodedRange> = match canonical_shape(filter) {
+                    Some((lo, hi, nodes)) if both_ts_bounds => nodes
+                        .iter()
+                        .map(|&n| {
+                            let node = Value::Int(n as i64);
+                            (
+                                encode_key(&[&node, &Value::Int(lo as i64)]),
+                                encode_key(&[&node, &Value::Int(hi as i64)]),
+                            )
+                        })
+                        .collect(),
+                    _ => {
+                        let (lo, hi) = match &ts_range {
+                            Some((lo, hi)) => (lo.as_ref(), hi.as_ref()),
+                            None => (None, None),
+                        };
+                        values
+                            .iter()
+                            .map(|v| Index::superset_bounds(&[v], lo, hi))
+                            .collect()
+                    }
+                };
+                return ScanPlan::Index {
+                    index: COMPOUND_INDEX.to_string(),
+                    ranges,
+                    rev: false,
+                };
+            }
+            // 1b. Single node_id index: point lookups; with a ts index
+            // and range, intersect — the probe set is built from the
+            // smaller side and the larger side streams through it.
+            if let Some(idx) = view.index(COLLECTION, NODE_INDEX) {
+                let in_len: usize =
+                    values.iter().map(|v| idx.point_len_at(&[v], at)).sum();
+                if let Some((lo, hi)) = &ts_range {
+                    if let Some(ts_idx) = view.index(COLLECTION, TS_INDEX) {
+                        self.metrics.counter(names::SHARD_PLAN_INTERSECT).inc();
+                        let ts_len =
+                            ts_idx.range_superset_len_at(lo.as_ref(), hi.as_ref(), at);
+                        let rids: Vec<RecordId> = if in_len <= ts_len {
+                            let probe: HashSet<RecordId> = values
+                                .iter()
+                                .flat_map(|v| idx.point_iter_at(&[v], at))
+                                .collect();
+                            ts_idx
+                                .range_superset_at(lo.as_ref(), hi.as_ref(), at)
+                                .filter(|r| probe.contains(r))
+                                .collect()
+                        } else {
+                            let probe: HashSet<RecordId> = ts_idx
+                                .range_superset_at(lo.as_ref(), hi.as_ref(), at)
+                                .collect();
+                            values
+                                .iter()
+                                .flat_map(|v| idx.point_iter_at(&[v], at))
+                                .filter(|r| probe.contains(r))
+                                .collect()
+                        };
+                        return ScanPlan::Rids(rids);
+                    }
+                }
+                self.metrics.counter(names::SHARD_PLAN_IN_POINTS).inc();
+                let mut rids = Vec::with_capacity(in_len);
+                for v in values {
+                    rids.extend(idx.point_iter_at(&[v], at));
+                }
+                return ScanPlan::Rids(rids);
+            }
+        }
+        // 2. Range on indexed ts (inclusive superset; the residual
+        // filter restores exact operator semantics).
+        if let Some((lo, hi)) = filter.index_range("ts") {
+            if view.index(COLLECTION, TS_INDEX).is_some() {
+                self.metrics.counter(names::SHARD_PLAN_TS_RANGE).inc();
+                return ScanPlan::Index {
+                    index: TS_INDEX.to_string(),
+                    ranges: vec![Index::superset_bounds(&[], lo.as_ref(), hi.as_ref())],
+                    rev: false,
+                };
+            }
+        }
+        // 2b. Range/eq on node_id: its own index, or the compound
+        // prefix (a (node_id, ts) scan bounded on node_id alone).
+        if let Some((lo, hi)) = filter.index_range("node_id") {
+            for index in [NODE_INDEX, COMPOUND_INDEX] {
+                if view.index(COLLECTION, index).is_some() {
+                    self.metrics.counter(names::SHARD_PLAN_NODE_RANGE).inc();
+                    return ScanPlan::Index {
+                        index: index.to_string(),
+                        ranges: vec![Index::superset_bounds(
+                            &[],
+                            lo.as_ref(),
+                            hi.as_ref(),
+                        )],
+                        rev: false,
+                    };
+                }
+            }
+        }
+        // 3. Full scan.
+        self.metrics.counter(names::SHARD_PLAN_FULL_SCAN).inc();
+        ScanPlan::Table
+    }
+
+    /// Drain a plan into a candidate rid vector (the kernel path wants
+    /// whole columns).
+    fn drain_plan(&self, view: &ReadView<'_>, plan: ScanPlan) -> Vec<RecordId> {
+        let mut scan = match plan {
+            ScanPlan::Rids(rids) => return rids,
+            plan => ScanCursor::new(plan, Filter::True),
+        };
+        let mut out = Vec::new();
+        loop {
+            out.extend(scan.pending.drain(..));
+            if !self.refill_scan(view, &mut scan) {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Run the AOT filter kernel over the candidates' (ts, node_id)
+    /// columns — extracted from the raw record bytes, no per-candidate
+    /// document decode — and return the matching rids in order.
+    fn kernel_filter(
+        &self,
+        view: &ReadView<'_>,
+        candidates: &[RecordId],
+        lo: u32,
+        hi: u32,
+        nodes: &[u32],
+    ) -> Result<Vec<RecordId>, WireError> {
+        let words = self.kernels.shapes().filter_w;
+        let mut ts_col = Vec::with_capacity(candidates.len());
+        let mut node_col = Vec::with_capacity(candidates.len());
+        let mut rids = Vec::with_capacity(candidates.len());
+        for &rid in candidates {
+            if let Some(raw) = view.fetch_raw(COLLECTION, rid) {
+                let d = RawDoc::new(raw);
+                ts_col.push(d.get_i64("ts").unwrap_or(-1).max(0) as u32);
+                node_col.push(d.get_i64("node_id").unwrap_or(0).max(0) as u32);
+                rids.push(rid);
+            }
+        }
+        let bitmap = crate::runtime::fallback::build_bitmap(nodes.iter().copied(), words);
+        let out = self
+            .kernels
+            .filter(&ts_col, &node_col, lo, hi, &bitmap)
+            .map_err(|e| WireError::Server(e.to_string()))?;
+        Ok(rids
+            .iter()
+            .zip(&out.mask)
+            .filter(|(_, &m)| m == 1)
+            .map(|(&rid, _)| rid)
+            .collect())
+    }
+
+    /// Non-indexed sort field: drain the unsorted plan, decoding each
+    /// match exactly once, sort the decoded documents, and serve the
+    /// cursor from memory.
+    fn sorted_fallback(
+        &self,
+        view: &ReadView<'_>,
+        filter: &Filter,
+        opts: &FindOptions,
+        field: &str,
+        dir: SortDir,
+    ) -> Result<CursorSource, WireError> {
+        let mut scan = ScanCursor::new(self.plan_scan(view, filter), filter.clone());
+        let mut docs: Vec<Document> = Vec::new();
+        while let Some((_, raw)) = self.next_scan_match(view, &mut scan) {
+            docs.push(
+                RawDoc::new(raw)
+                    .decode()
+                    .map_err(|e| WireError::Server(format!("corrupt record: {e}")))?,
+            );
+        }
+        self.metrics.counter(names::SHARD_FIND_DECODES).add(docs.len() as u64);
+        self.flush_scan_metrics(&mut scan);
+        docs.sort_by(|a, b| {
+            let o = a
+                .get(field)
+                .unwrap_or(&Value::Null)
+                .cmp_total(b.get(field).unwrap_or(&Value::Null));
+            match dir {
+                SortDir::Asc => o,
+                SortDir::Desc => o.reverse(),
+            }
+        });
+        // The cursor can only ever serve `limit` documents — don't keep
+        // (or project) the sorted tail beyond it.
+        if let Some(limit) = opts.limit {
+            docs.truncate(limit);
+        }
+        let buf = docs
+            .into_iter()
+            .map(|d| match &opts.projection {
+                Some(fields) => d.project(fields),
+                None => d,
+            })
+            .collect();
+        Ok(CursorSource::Docs { buf })
+    }
+
+    /// Advance a streaming scan to its next match: pull candidates from
+    /// the resumable plan, raw-match each against the encoded bytes,
+    /// and return the matching record id *with* its bytes (one record
+    /// lookup serves both the match and the materialization).
+    /// Candidate/match tallies accumulate on the cursor (flushed to the
+    /// registry per served batch).
+    fn next_scan_match<'v>(
+        &self,
+        view: &'v ReadView<'_>,
+        scan: &mut ScanCursor,
+    ) -> Option<(RecordId, &'v [u8])> {
+        loop {
+            while let Some(rid) = scan.pending.pop_front() {
+                scan.seen += 1;
+                let Some(raw) = view.fetch_raw(COLLECTION, rid) else {
+                    continue;
+                };
+                if scan.filter.matches_raw(&RawDoc::new(raw)) {
+                    scan.matched += 1;
+                    return Some((rid, raw));
+                }
+            }
+            if scan.done || !self.refill_scan(view, scan) {
+                scan.done = true;
+                return None;
+            }
+        }
+    }
+
+    /// Pull the next key run (index plans) or record-id run (table
+    /// scans) into `pending`. Returns false when the scan is exhausted.
+    fn refill_scan(&self, view: &ReadView<'_>, scan: &mut ScanCursor) -> bool {
+        let at = view.at();
+        match &scan.plan {
+            ScanPlan::Rids(rids) => {
+                if scan.pos >= rids.len() {
+                    return false;
+                }
+                let end = (scan.pos + SCAN_RUN).min(rids.len());
+                scan.pending.extend(rids[scan.pos..end].iter().copied());
+                scan.pos = end;
+                true
+            }
+            ScanPlan::Index { index, ranges, rev } => {
+                let Some(idx) = view.index(COLLECTION, index) else {
+                    return false;
+                };
+                while scan.range_idx < ranges.len() {
+                    let range = &ranges[scan.range_idx];
+                    if let Some(key) = idx.pull_range_at(
+                        range,
+                        scan.after_key.as_deref(),
+                        *rev,
+                        SCAN_RUN,
+                        &mut scan.pending,
+                        at,
+                    ) {
+                        scan.after_key = Some(key);
+                        return true;
+                    }
+                    scan.range_idx += 1;
+                    scan.after_key = None;
+                }
+                false
+            }
+            ScanPlan::Table => {
+                let before = scan.pending.len();
+                for (rid, _) in view
+                    .scan_raw_from(COLLECTION, scan.after_rid)
+                    .take(SCAN_RUN)
+                {
+                    scan.after_rid = Some(rid);
+                    scan.pending.push_back(rid);
+                }
+                scan.pending.len() > before
+            }
+        }
+    }
+
+    /// Publish (and reset) a scan's candidate/match tallies — batched
+    /// so the per-candidate hot loop takes no registry locks.
+    fn flush_scan_metrics(&self, scan: &mut ScanCursor) {
+        if scan.seen > 0 {
+            self.metrics.counter(names::SHARD_FIND_CANDIDATES).add(scan.seen);
+            scan.seen = 0;
+        }
+        if scan.matched > 0 {
+            self.metrics.counter(names::SHARD_FIND_MATCHES).add(scan.matched);
+            scan.matched = 0;
+        }
+    }
+
+    fn serve_batch(
+        &self,
+        view: &ReadView<'_>,
+        cur: &mut CursorState,
+    ) -> Result<FindReply, WireError> {
+        let mut docs = Vec::with_capacity(cur.batch.min(64));
+        let mut decoded = 0u64;
+        while docs.len() < cur.batch && cur.remaining != Some(0) {
+            let doc = match &mut cur.src {
+                CursorSource::Rids { rids, pos } => {
+                    let mut out = None;
+                    while out.is_none() && *pos < rids.len() {
+                        let rid = rids[*pos];
+                        *pos += 1;
+                        if let Some(raw) = view.fetch_raw(COLLECTION, rid) {
+                            decoded += 1;
+                            out = Some(materialize(raw, cur.projection.as_deref())?);
+                        }
+                    }
+                    out
+                }
+                // Sorted-fallback documents were decoded (and projected)
+                // when the cursor was built.
+                CursorSource::Docs { buf } => buf.pop_front(),
+                CursorSource::Scan(scan) => match self.next_scan_match(view, scan) {
+                    Some((_, raw)) => {
+                        decoded += 1;
+                        Some(materialize(raw, cur.projection.as_deref())?)
+                    }
+                    None => None,
+                },
+            };
+            let Some(doc) = doc else { break };
+            docs.push(doc);
+            if let Some(r) = cur.remaining.as_mut() {
+                *r -= 1;
+            }
+        }
+        if decoded > 0 {
+            self.metrics.counter(names::SHARD_FIND_DECODES).add(decoded);
+        }
+        if let CursorSource::Scan(scan) = &mut cur.src {
+            self.flush_scan_metrics(scan);
+        }
+        let more = !cursor_exhausted(cur) && cur.remaining != Some(0);
+        Ok(FindReply { docs, cursor: more.then_some(0) })
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<ReadRequest>,
+    closed: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+/// N reader threads draining a shared queue of [`ReadRequest`]s. The
+/// shard event loop submits and returns to write traffic immediately;
+/// workers answer clients through the forwarded reply senders.
+///
+/// Shutdown drains: requests already queued are served before the
+/// workers exit, so no client hangs on a dropped reply sender.
+pub struct ReaderPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ReaderPool {
+    /// Start `threads` workers (named `<label>-rN`) over the shared
+    /// read context.
+    pub fn start(ctx: Arc<ReadContext>, threads: usize, label: &str) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(threads);
+        for n in 0..threads.max(1) {
+            let shared = Arc::clone(&shared);
+            let ctx = Arc::clone(&ctx);
+            let handle = std::thread::Builder::new()
+                .name(format!("{label}-r{n}"))
+                .spawn(move || worker_loop(&shared, &ctx))
+                // lint: allow(panic, thread spawn fails only on OS resource
+                // exhaustion at shard startup, before any request is queued)
+                .expect("spawn reader thread");
+            workers.push(handle);
+        }
+        Self { shared, workers }
+    }
+
+    /// Enqueue one read request; a sleeping worker wakes to take it.
+    pub fn submit(&self, req: ReadRequest) {
+        let mut state = locked(&self.shared.state);
+        state.queue.push_back(req);
+        drop(state);
+        self.shared.cv.notify_one();
+    }
+
+    /// Close the queue, serve what is already in it, and join the
+    /// workers.
+    pub fn shutdown(self) {
+        {
+            let mut state = locked(&self.shared.state);
+            state.closed = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, ctx: &ReadContext) {
+    loop {
+        let req = {
+            let mut state = locked(&shared.state);
+            loop {
+                if let Some(r) = state.queue.pop_front() {
+                    break Some(r);
+                }
+                if state.closed {
+                    break None;
+                }
+                state = match shared.cv.wait(state) {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+            }
+            // Queue guard drops here — request execution (store read
+            // locks, reply sends) never holds the pool lock.
+        };
+        match req {
+            Some(req) => ctx.serve(req),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mongo::storage::{Engine, EngineOptions, LocalDir};
+    use std::sync::mpsc;
+
+    fn doc(ts: i64, node: i64) -> Document {
+        Document::new().set("ts", ts).set("node_id", node)
+    }
+
+    fn ctx_with_docs(tag: &str, n: i64) -> (Engine, Arc<ReadContext>) {
+        let dir = LocalDir::temp(tag).unwrap();
+        let mut eng = Engine::open_with(Box::new(dir), EngineOptions::default()).unwrap();
+        eng.create_collection(COLLECTION);
+        let docs: Vec<Document> = (0..n).map(|i| doc(i, i % 4)).collect();
+        eng.insert_many(COLLECTION, &docs).unwrap();
+        let ctx = Arc::new(ReadContext::new(
+            eng.reader(),
+            Kernels::fallback(),
+            Registry::new(),
+            1_000,
+        ));
+        (eng, ctx)
+    }
+
+    #[test]
+    fn inline_find_serves_all_docs() {
+        let (_eng, ctx) = ctx_with_docs("readctx1", 10);
+        let r = ctx
+            .handle_find(&Filter::True, &FindOptions::default())
+            .unwrap();
+        assert_eq!(r.docs.len(), 10);
+        assert!(r.cursor.is_none());
+    }
+
+    #[test]
+    fn cursor_pins_snapshot_across_writer_removes() {
+        let (mut eng, ctx) = ctx_with_docs("readctx2", 10);
+        let opts = FindOptions { batch_size: Some(3), ..FindOptions::default() };
+        let first = ctx.handle_find(&Filter::True, &opts).unwrap();
+        assert_eq!(first.docs.len(), 3);
+        let cur = first.cursor.expect("more batches");
+        // The writer removes everything and reclaims; the cursor's
+        // snapshot must still drain the original ten documents.
+        let rids = eng.record_ids(COLLECTION);
+        eng.remove_many(COLLECTION, &rids).unwrap();
+        eng.reclaim();
+        assert_eq!(eng.stats(COLLECTION).docs, 0);
+        let mut total = first.docs.len();
+        let mut cursor = cur;
+        loop {
+            let r = ctx.handle_get_more(cursor).unwrap();
+            total += r.docs.len();
+            match r.cursor {
+                Some(c) => cursor = c,
+                None => break,
+            }
+        }
+        assert_eq!(total, 10, "pinned snapshot drains the frozen result set");
+        assert_eq!(ctx.open_cursors(), 0);
+        // With the cursor gone, reclamation can finally drop the dead
+        // versions.
+        eng.reclaim();
+        assert_eq!(eng.garbage_len(), 0);
+    }
+
+    #[test]
+    fn expired_snapshot_surfaces_retryable_error() {
+        let dir = LocalDir::temp("readctx3").unwrap();
+        let opts = EngineOptions { snapshot_retention: 2, ..EngineOptions::default() };
+        let mut eng = Engine::open_with(Box::new(dir), opts).unwrap();
+        eng.create_collection(COLLECTION);
+        let docs: Vec<Document> = (0..8).map(|i| doc(i, 0)).collect();
+        eng.insert_many(COLLECTION, &docs).unwrap();
+        let ctx = ReadContext::new(
+            eng.reader(),
+            Kernels::fallback(),
+            Registry::new(),
+            1_000,
+        );
+        let fopts = FindOptions { batch_size: Some(2), ..FindOptions::default() };
+        let first = ctx.handle_find(&Filter::True, &fopts).unwrap();
+        let cursor = first.cursor.expect("more batches");
+        // Advance the committed epoch past the retention window, then
+        // reclaim: the idle cursor's pin expires.
+        for i in 0..4 {
+            eng.insert_many(COLLECTION, &[doc(100 + i, 0)]).unwrap();
+        }
+        eng.reclaim();
+        let err = ctx.handle_get_more(cursor).unwrap_err();
+        assert!(
+            matches!(err, WireError::SnapshotExpired { .. }),
+            "expected SnapshotExpired, got {err:?}"
+        );
+        // The dead cursor unpinned its snapshot and left the registry.
+        assert_eq!(ctx.open_cursors(), 0);
+        assert_eq!(eng.snapshots_open(), 0);
+    }
+
+    #[test]
+    fn pool_serves_concurrent_reads_and_drains_on_shutdown() {
+        let (_eng, ctx) = ctx_with_docs("readctx4", 64);
+        let pool = ReaderPool::start(Arc::clone(&ctx), 3, "t");
+        let mut rxs = Vec::new();
+        for i in 0..32 {
+            let (tx, rx) = mpsc::channel();
+            if i % 2 == 0 {
+                pool.submit(ReadRequest::Find {
+                    filter: Filter::True,
+                    opts: FindOptions::default(),
+                    reply: tx,
+                });
+                rxs.push((rx, None));
+            } else {
+                let (ctx_tx, ctx_rx) = mpsc::channel();
+                pool.submit(ReadRequest::Count { filter: Filter::True, reply: ctx_tx });
+                drop(tx);
+                rxs.push((rx, Some(ctx_rx)));
+            }
+        }
+        pool.shutdown();
+        for (find_rx, count_rx) in rxs {
+            match count_rx {
+                Some(rx) => assert_eq!(rx.recv().unwrap().unwrap(), 64),
+                None => assert_eq!(find_rx.recv().unwrap().unwrap().docs.len(), 64),
+            }
+        }
+    }
+
+    #[test]
+    fn get_more_on_unknown_cursor_errors() {
+        let (_eng, ctx) = ctx_with_docs("readctx5", 4);
+        let err = ctx.handle_get_more(99).unwrap_err();
+        assert!(matches!(err, WireError::UnknownCursor(99)));
+    }
+}

@@ -1,158 +1,40 @@
 //! Shard server (`mongod`): owns a storage engine on its assigned
-//! filesystem directory, serves inserts/finds for the chunks it owns,
+//! filesystem directory, serves inserts for the chunks it owns,
 //! triggers chunk splits, and participates in migrations.
 //!
-//! Query planning per shard (decision tree in docs/ARCHITECTURE.md §7):
-//! 1. `$in` on node_id + the `(node_id, ts)` **compound index** → one
-//!    bounded range scan per node value; candidates ≈ matches (exactly
-//!    equal for the paper's canonical shape, whose `$lt` upper bound is
-//!    known exclusive).
-//! 2. `$in` on a single-field node_id index → point lookups; a ts range
-//!    with its own index intersects, building the probe set from the
-//!    smaller side.
-//! 3. range on an indexed field → index range scan.
-//! 4. otherwise → full collection scan.
+//! The event loop is the shard's **single writer**: inserts, index
+//! builds, checkpoints, migration staging/publishes, and range deletes
+//! all commit here, each under a fresh MVCC epoch. Reads
+//! (find/getMore/count) are *dispatched* instead of served inline: the
+//! query planner, streaming cursors, and the kernel fast path live in
+//! [`super::read`], executing against snapshot-pinned [`ReadView`]s —
+//! on this thread with `reader_threads == 0`, or on a [`ReaderPool`]
+//! that overlaps query latency with ingest (docs/ARCHITECTURE.md §9).
+//! After every group commit the writer reclaims versions no open
+//! snapshot can see ([`ShardServer::maybe_compact`]).
 //!
-//! Candidates are **raw-matched** against the encoded record bytes
-//! ([`RawDoc`]) — a rejected candidate never materializes a
-//! [`Document`]; the canonical shape instead runs its (ts, node_id)
-//! columns through the AOT **filter kernel**, extracted raw. Matching
-//! records decode exactly once, when served (counted in
-//! `shard.find_decodes`). Cursors stream from a resumable scan position
-//! (index key or record id) instead of a fully materialized rid vector,
-//! so sorted-limit queries cut the scan off early.
+//! [`ReadView`]: crate::mongo::storage::ReadView
 
-use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::mongo::bson::{Document, RawDoc, Value};
-use crate::mongo::query::{Filter, FindOptions, SortDir};
+use crate::metrics::{names, Registry};
+use crate::mongo::bson::{Document, RawDoc};
 use crate::mongo::sharding::chunk::ChunkMap;
 use crate::mongo::sharding::migration::STAGING_COLLECTION;
-use crate::mongo::storage::index::{encode_key, EncodedRange, Index};
 use crate::mongo::storage::{Engine, EngineOptions, RecordId, StorageDir};
 use crate::mongo::wire::{
-    rpc, ConfigRequest, DeleteChunkReply, FindReply, InsertReply, MigrateBatchReply,
-    ShardRequest, ShardStatsReply, StagedMigration, WireError,
+    rpc, ConfigRequest, DeleteChunkReply, InsertReply, MigrateBatchReply, ShardRequest,
+    ShardStatsReply, StagedMigration, WireError,
 };
-use crate::metrics::{names, Registry};
 use crate::runtime::Kernels;
 use crate::util::ids::ShardId;
+
+use super::read::{ReadContext, ReadRequest, ReaderPool};
 
 /// The sharded collection name (one sharded namespace, like the paper's
 /// single OVIS metrics collection).
 pub const COLLECTION: &str = "metrics";
-
-/// Index names the planner recognizes.
-const COMPOUND_INDEX: &str = "node_id_1_ts_1";
-const TS_INDEX: &str = "ts_1";
-const NODE_INDEX: &str = "node_id_1";
-
-/// Keys/rids pulled into a streaming cursor per refill step — bounds
-/// the work between mailbox turns without per-key round trips.
-const SCAN_RUN: usize = 256;
-
-/// One access path chosen by the planner.
-enum ScanPlan {
-    /// Materialized candidate rids (the index-intersection fallback and
-    /// point-lookup plans); the residual matcher still runs.
-    Rids(Vec<RecordId>),
-    /// Resumable scan over `index`: encoded `[lo, hi)` ranges walked in
-    /// order, yielding rids in index-key order. `rev` walks each range
-    /// descending (the builder orders `ranges` to match the overall
-    /// direction; every `rev` plan today is single-range).
-    Index { index: String, ranges: Vec<EncodedRange>, rev: bool },
-    /// Resumable full-collection scan in record-id order.
-    Table,
-}
-
-/// A streaming scan position: plan + residual filter + resume state.
-/// The position is a *key* (or record id), not an iterator, so the
-/// store may mutate between getMores (concurrent ingest) and the scan
-/// resumes correctly after it.
-struct ScanCursor {
-    plan: ScanPlan,
-    /// Residual filter, evaluated raw per candidate.
-    filter: Filter,
-    /// Current range within an `Index` plan.
-    range_idx: usize,
-    /// Last fully consumed key (`Index` plans) — the resume point.
-    after_key: Option<Vec<u8>>,
-    /// Last consumed record id (`Table` plans).
-    after_rid: Option<RecordId>,
-    /// Consumed prefix of a `Rids` plan.
-    pos: usize,
-    /// Candidates pulled from the plan, awaiting the matcher.
-    pending: VecDeque<RecordId>,
-    /// The underlying scan is exhausted (pending may still hold rids).
-    done: bool,
-    /// Candidates examined / matched since the last metrics flush —
-    /// batched locally so the hot loop takes no registry locks.
-    seen: u64,
-    matched: u64,
-}
-
-impl ScanCursor {
-    fn new(plan: ScanPlan, filter: Filter) -> Self {
-        Self {
-            plan,
-            filter,
-            range_idx: 0,
-            after_key: None,
-            after_rid: None,
-            pos: 0,
-            pending: VecDeque::new(),
-            done: false,
-            seen: 0,
-            matched: 0,
-        }
-    }
-}
-
-/// Where an open cursor's documents come from.
-enum CursorSource {
-    /// Matched rids known up front (the kernel fast path).
-    Rids { rids: Vec<RecordId>, pos: usize },
-    /// Documents materialized at plan time (non-indexed sort fallback:
-    /// decoded once, sorted, projected, served from memory).
-    Docs { buf: VecDeque<Document> },
-    /// Streaming: candidates pulled lazily from a resumable scan,
-    /// raw-matched, decoded only when served.
-    Scan(ScanCursor),
-}
-
-struct CursorState {
-    src: CursorSource,
-    projection: Option<Vec<String>>,
-    batch: usize,
-    remaining: Option<usize>,
-}
-
-/// Decode one raw record for the reply — the read path's only full
-/// materialization (projections decode just the projected fields). The
-/// caller counts it into `shard.find_decodes`. A record that fails to
-/// decode surfaces as a server error instead of killing the shard
-/// thread: the engine's bytes are validated on every write and replay,
-/// so reaching the error arm means on-disk or in-memory corruption the
-/// client deserves to hear about.
-fn materialize(raw: &[u8], projection: Option<&[String]>) -> Result<Document, WireError> {
-    let rd = RawDoc::new(raw);
-    match projection {
-        Some(fields) => Ok(rd.project(fields)),
-        None => rd
-            .decode()
-            .map_err(|e| WireError::Server(format!("corrupt record: {e}"))),
-    }
-}
-
-fn cursor_exhausted(cur: &CursorState) -> bool {
-    match &cur.src {
-        CursorSource::Rids { rids, pos } => *pos >= rids.len(),
-        CursorSource::Docs { buf } => buf.is_empty(),
-        CursorSource::Scan(scan) => scan.done && scan.pending.is_empty(),
-    }
-}
 
 /// Shard server state + event loop.
 pub struct ShardServer {
@@ -160,16 +42,18 @@ pub struct ShardServer {
     engine: Engine,
     map: ChunkMap,
     config: mpsc::Sender<ConfigRequest>,
-    kernels: Kernels,
     metrics: Registry,
-    cursors: HashMap<u64, CursorState>,
-    next_cursor: u64,
+    /// Shared read state: snapshot source, planner, cursor registry.
+    /// The event loop serves through it inline when no pool is running.
+    ctx: Arc<ReadContext>,
+    /// Reader threads (`--reader-threads > 0`); `None` keeps reads on
+    /// the event loop.
+    pool: Option<ReaderPool>,
     /// Split a chunk when its (position-histogram) doc count exceeds this.
     split_threshold: u64,
     /// Position histogram: key position → docs at that position. Range
     /// sums give per-chunk counts; medians give split points.
     positions: std::collections::BTreeMap<u64, u32>,
-    default_batch: usize,
     /// Migration staging on this destination — `(range, donor,
     /// committed)`, mirroring the durable `__migration` collection
     /// (rebuilt from it after a restart).
@@ -181,9 +65,10 @@ pub struct ShardServer {
 impl ShardServer {
     /// Open the shard's engine on `dir` (recovering any persisted
     /// state) and build the server. `engine_opts` carries the storage
-    /// lifecycle: journaling, checkpoint compression, and the
+    /// lifecycle: journaling, checkpoint compression, the
     /// auto-compaction threshold this server enforces after every group
-    /// commit.
+    /// commit, and the snapshot retention window. `reader_threads > 0`
+    /// starts a [`ReaderPool`] so finds/counts overlap with ingest.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: ShardId,
@@ -195,35 +80,47 @@ impl ShardServer {
         engine_opts: EngineOptions,
         split_threshold: u64,
         default_batch: usize,
+        reader_threads: usize,
     ) -> anyhow::Result<Self> {
         let mut engine = Engine::open_with(dir, engine_opts)?;
         engine.create_collection(COLLECTION);
+        let ctx = Arc::new(ReadContext::new(
+            engine.reader(),
+            kernels,
+            metrics.clone(),
+            default_batch,
+        ));
+        let pool = (reader_threads > 0)
+            .then(|| ReaderPool::start(Arc::clone(&ctx), reader_threads, &format!("{id}")));
         let mut s = Self {
             id,
             engine,
             map,
             config,
-            kernels,
             metrics,
-            cursors: HashMap::new(),
-            next_cursor: 1,
+            ctx,
+            pool,
             split_threshold,
             positions: Default::default(),
-            default_batch,
             staging: None,
             staged_docs: 0,
         };
         // Rebuild the position histogram from recovered records (second
         // job re-attaching to persisted Lustre data) — raw key-field
-        // probes, no per-record decode. Staged migration documents are
-        // not live and never enter the histogram.
-        let recovered: Vec<u64> = s
-            .engine
-            .scan_raw_from(COLLECTION, None)
-            .filter_map(|(_, raw)| s.position_of_raw(&RawDoc::new(raw)))
-            .collect();
-        for pos in recovered {
-            *s.positions.entry(pos).or_insert(0) += 1;
+        // probes under one latest-view guard, no per-record decode and
+        // no byte cloning. Staged migration documents are not live and
+        // never enter the histogram.
+        {
+            let reader = s.engine.reader();
+            let view = reader.latest();
+            let recovered: Vec<u64> = view
+                .scan_raw_from(COLLECTION, None)
+                .filter_map(|(_, raw)| s.position_of_raw(&RawDoc::new(raw)))
+                .collect();
+            drop(view);
+            for pos in recovered {
+                *s.positions.entry(pos).or_insert(0) += 1;
+            }
         }
         // Rebuild migration staging state: a killed migration leaves its
         // staging collection behind, and the cluster's reconciliation
@@ -275,6 +172,17 @@ impl ShardServer {
             .expect("spawn shard thread")
     }
 
+    /// Hand one read request to the pool, or serve it inline when no
+    /// pool is running. Mailbox order is preserved up to the hand-off,
+    /// so a find forwarded after an insert batch committed pins an
+    /// epoch at or past that commit (read-your-writes).
+    fn dispatch_read(&self, req: ReadRequest) {
+        match &self.pool {
+            Some(pool) => pool.submit(req),
+            None => self.ctx.serve(req),
+        }
+    }
+
     fn run(&mut self, rx: mpsc::Receiver<ShardRequest>) {
         while let Ok(req) = rx.recv() {
             match req {
@@ -290,21 +198,13 @@ impl ShardServer {
                     let _ = reply.send(r);
                 }
                 ShardRequest::Find { filter, opts, reply } => {
-                    let t = Instant::now();
-                    let r = self.handle_find(&filter, &opts);
-                    self.metrics
-                        .observe(names::SHARD_FIND_NS, t.elapsed().as_nanos() as u64);
-                    let _ = reply.send(r);
+                    self.dispatch_read(ReadRequest::Find { filter, opts, reply });
                 }
                 ShardRequest::GetMore { cursor, reply } => {
-                    let _ = reply.send(self.handle_get_more(cursor));
+                    self.dispatch_read(ReadRequest::GetMore { cursor, reply });
                 }
                 ShardRequest::Count { filter, reply } => {
-                    let t = Instant::now();
-                    let r = self.handle_count(&filter);
-                    self.metrics
-                        .observe(names::SHARD_COUNT_NS, t.elapsed().as_nanos() as u64);
-                    let _ = reply.send(r);
+                    self.dispatch_read(ReadRequest::Count { filter, reply });
                 }
                 ShardRequest::CreateIndex { spec, reply } => {
                     let r = self
@@ -358,18 +258,37 @@ impl ShardServer {
                 }
             }
         }
+        // Drain-and-join the reader pool before the event loop returns:
+        // queued reads still answer (no client hangs on a dropped reply
+        // sender), and no reader thread outlives the shard.
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
+        }
     }
 
-    /// Background compaction hook, run after every group commit: once
-    /// the engine has journaled past its configured threshold, write a
-    /// checkpoint and rotate/truncate the journal so the shard's
-    /// on-disk footprint on the shared filesystem stays bounded.
+    /// Background maintenance hook, run after every group commit:
+    ///
+    /// * **Reclamation** — expire snapshots past the retention window
+    ///   and physically drop every dead version no open snapshot can
+    ///   see, publishing the `shard.snapshots_open` /
+    ///   `shard.reclaim_lag` gauges.
+    /// * **Compaction** — once the engine has journaled past its
+    ///   configured threshold, write a checkpoint and rotate/truncate
+    ///   the journal so the shard's on-disk footprint on the shared
+    ///   filesystem stays bounded.
     ///
     /// A compaction failure must not fail the triggering write — the
     /// batch is already durable in the journal — so errors are counted
     /// and logged, and the next group commit retries (the byte counter
     /// keeps growing until a checkpoint succeeds).
     fn maybe_compact(&mut self) {
+        self.engine.reclaim();
+        self.metrics
+            .gauge(names::SHARD_SNAPSHOTS_OPEN)
+            .set(self.engine.snapshots_open() as i64);
+        self.metrics.gauge(names::SHARD_RECLAIM_LAG).set(
+            self.engine.epoch().saturating_sub(self.engine.snapshot_floor()) as i64,
+        );
         match self.engine.maybe_checkpoint() {
             Ok(Some(ck)) => {
                 // Threshold trigger — one of the three distinct
@@ -533,548 +452,14 @@ impl ShardServer {
         }
     }
 
-    /// The paper's canonical query shape, *exactly*: a conjunction of
-    /// `ts >= lo` (`$gte`), `ts < hi` (`$lt`) and `node_id $in [ints]`
-    /// and nothing else — the only shape the filter kernel's predicate
-    /// `lo <= ts < hi && node in set` evaluates completely. Any other
-    /// filter takes the scalar matcher path.
-    fn canonical_shape(filter: &Filter) -> Option<(u32, u32, Vec<u32>)> {
-        use crate::mongo::query::CmpOp;
-        let conjuncts = match filter {
-            Filter::And(fs) => fs.as_slice(),
-            f @ Filter::In { .. } => std::slice::from_ref(f),
-            _ => return None,
-        };
-        let mut lo: Option<u32> = None;
-        let mut hi: Option<u32> = None;
-        let mut nodes: Option<Vec<u32>> = None;
-        for c in conjuncts {
-            match c {
-                Filter::Cmp { field, op: CmpOp::Gte, value }
-                    if field == "ts" && lo.is_none() =>
-                {
-                    let v = value.as_i64()?;
-                    if !(0..=u32::MAX as i64).contains(&v) {
-                        return None;
-                    }
-                    lo = Some(v as u32);
-                }
-                Filter::Cmp { field, op: CmpOp::Lt, value }
-                    if field == "ts" && hi.is_none() =>
-                {
-                    let v = value.as_i64()?;
-                    if !(0..=u32::MAX as i64).contains(&v) {
-                        return None;
-                    }
-                    hi = Some(v as u32);
-                }
-                Filter::In { field, values } if field == "node_id" && nodes.is_none() => {
-                    let mut ids = Vec::with_capacity(values.len());
-                    for v in values {
-                        let n = v.as_i64()?;
-                        if !(0..=u32::MAX as i64).contains(&n) {
-                            return None;
-                        }
-                        ids.push(n as u32);
-                    }
-                    nodes = Some(ids);
-                }
-                _ => return None, // anything else → matcher path
-            }
-        }
-        Some((lo.unwrap_or(0), hi.unwrap_or(u32::MAX), nodes?))
-    }
-
-    fn handle_find(
-        &mut self,
-        filter: &Filter,
-        opts: &FindOptions,
-    ) -> Result<FindReply, WireError> {
-        let src = self.plan_source(filter, opts)?;
-        let batch = opts.batch_size.unwrap_or(self.default_batch);
-        let mut cur = CursorState {
-            src,
-            projection: opts.projection.clone(),
-            batch,
-            remaining: opts.limit,
-        };
-        let reply = self.serve_batch(&mut cur)?;
-        if reply.cursor.is_some() {
-            let id = self.next_cursor;
-            self.next_cursor += 1;
-            self.cursors.insert(id, cur);
-            Ok(FindReply { docs: reply.docs, cursor: Some(id) })
-        } else {
-            Ok(reply)
-        }
-    }
-
-    /// Build the cursor source for a find: the index-ordered sort path,
-    /// the kernel fast path, or a streaming scan with the raw matcher.
-    fn plan_source(
-        &self,
-        filter: &Filter,
-        opts: &FindOptions,
-    ) -> Result<CursorSource, WireError> {
-        if let Some((field, dir)) = &opts.sort {
-            // Index-ordered sort: a single-field index on the sort field
-            // serves rids in key order (reverse scan for Desc) — the
-            // limit cuts the scan off early instead of materializing,
-            // decoding, and sorting every match. Worth it when the
-            // index walk is bounded by the *filter* — it ranges the
-            // sort field, or matches everything. A selective filter on
-            // a different field (even with a limit: scarce matches
-            // would walk the whole sort index before filling it) is
-            // better served by its own plan + decode-once sort (below).
-            let sort_index = format!("{field}_1");
-            let bounded =
-                filter.index_range(field).is_some() || matches!(filter, Filter::True);
-            if bounded && self.engine.index(COLLECTION, &sort_index).is_some() {
-                self.metrics.counter(names::SHARD_PLAN_INDEX_SORT).inc();
-                let (lo, hi) = filter.index_range(field).unwrap_or((None, None));
-                let ranges =
-                    vec![Index::superset_bounds(&[], lo.as_ref(), hi.as_ref())];
-                return Ok(CursorSource::Scan(ScanCursor::new(
-                    ScanPlan::Index {
-                        index: sort_index,
-                        ranges,
-                        rev: *dir == SortDir::Desc,
-                    },
-                    filter.clone(),
-                )));
-            }
-            // Sort field not indexed: drain the unsorted plan, decoding
-            // each match exactly once, sort in memory, serve from there.
-            return self.sorted_fallback(filter, opts, field, *dir);
-        }
-        // Kernel fast path for the canonical shape over planned
-        // candidates — columns extracted raw, no document materialized.
-        if let Some((lo, hi, nodes)) = Self::canonical_shape(filter) {
-            let words = self.kernels.shapes().filter_w;
-            let max_node = nodes.iter().max().copied().unwrap_or(0);
-            if (max_node as usize) < words * 32 && !nodes.is_empty() {
-                self.metrics.counter(names::SHARD_FIND_KERNEL_PATH).inc();
-                let candidates = self.drain_plan(self.plan_scan(filter));
-                self.metrics
-                    .counter(names::SHARD_FIND_CANDIDATES)
-                    .add(candidates.len() as u64);
-                let rids = self.kernel_filter(&candidates, lo, hi, &nodes)?;
-                self.metrics.counter(names::SHARD_FIND_MATCHES).add(rids.len() as u64);
-                return Ok(CursorSource::Rids { rids, pos: 0 });
-            }
-        }
-        // General path: stream the planned scan through the raw matcher.
-        self.metrics.counter(names::SHARD_FIND_MATCHER_PATH).inc();
-        Ok(CursorSource::Scan(ScanCursor::new(self.plan_scan(filter), filter.clone())))
-    }
-
-    /// Choose an access path for `filter` — the planner decision tree
-    /// (module docs). Streaming plans yield candidates lazily; the
-    /// `Rids` plan is the materialized intersection/point fallback.
-    fn plan_scan(&self, filter: &Filter) -> ScanPlan {
-        // 1. `$in` on node_id.
-        if let Some(values) = filter.in_values("node_id") {
-            let ts_range = filter.index_range("ts");
-            // 1a. Compound (node_id, ts): one bounded range scan per
-            // node. For the canonical shape the `$lt` upper bound is
-            // known exclusive, so the bounds are *exact* — candidates
-            // == matches; any other operator mix gets an inclusive
-            // superset and the residual filter.
-            if self.engine.index(COLLECTION, COMPOUND_INDEX).is_some() {
-                self.metrics.counter(names::SHARD_PLAN_COMPOUND).inc();
-                // Exact bounds demand that the filter really pins BOTH
-                // ts sides ($gte lo and $lt hi): a canonical_shape
-                // default (0 / u32::MAX) encoded as an exact Int bound
-                // would wrongly exclude documents whose ts is missing
-                // or non-Int — keys of another type rank that a
-                // ts-unconstrained filter still matches. Partial or
-                // absent ts bounds take the inclusive superset and the
-                // residual filter.
-                let both_ts_bounds = matches!(&ts_range, Some((Some(_), Some(_))));
-                let ranges: Vec<EncodedRange> = match Self::canonical_shape(filter) {
-                    Some((lo, hi, nodes)) if both_ts_bounds => nodes
-                        .iter()
-                        .map(|&n| {
-                            let node = Value::Int(n as i64);
-                            (
-                                encode_key(&[&node, &Value::Int(lo as i64)]),
-                                encode_key(&[&node, &Value::Int(hi as i64)]),
-                            )
-                        })
-                        .collect(),
-                    _ => {
-                        let (lo, hi) = match &ts_range {
-                            Some((lo, hi)) => (lo.as_ref(), hi.as_ref()),
-                            None => (None, None),
-                        };
-                        values
-                            .iter()
-                            .map(|v| Index::superset_bounds(&[v], lo, hi))
-                            .collect()
-                    }
-                };
-                return ScanPlan::Index {
-                    index: COMPOUND_INDEX.to_string(),
-                    ranges,
-                    rev: false,
-                };
-            }
-            // 1b. Single node_id index: point lookups; with a ts index
-            // and range, intersect — the probe set is built from the
-            // smaller side and the larger side streams through it.
-            if let Some(idx) = self.engine.index(COLLECTION, NODE_INDEX) {
-                let in_len: usize = values.iter().map(|v| idx.point_len(&[v])).sum();
-                if let Some((lo, hi)) = &ts_range {
-                    if let Some(ts_idx) = self.engine.index(COLLECTION, TS_INDEX) {
-                        self.metrics.counter(names::SHARD_PLAN_INTERSECT).inc();
-                        let ts_len =
-                            ts_idx.range_superset_len(lo.as_ref(), hi.as_ref());
-                        let rids: Vec<RecordId> = if in_len <= ts_len {
-                            let probe: HashSet<RecordId> = values
-                                .iter()
-                                .flat_map(|v| idx.point_iter(&[v]))
-                                .collect();
-                            ts_idx
-                                .range_superset(lo.as_ref(), hi.as_ref())
-                                .filter(|r| probe.contains(r))
-                                .collect()
-                        } else {
-                            let probe: HashSet<RecordId> = ts_idx
-                                .range_superset(lo.as_ref(), hi.as_ref())
-                                .collect();
-                            values
-                                .iter()
-                                .flat_map(|v| idx.point_iter(&[v]))
-                                .filter(|r| probe.contains(r))
-                                .collect()
-                        };
-                        return ScanPlan::Rids(rids);
-                    }
-                }
-                self.metrics.counter(names::SHARD_PLAN_IN_POINTS).inc();
-                let mut rids = Vec::with_capacity(in_len);
-                for v in values {
-                    rids.extend(idx.point_iter(&[v]));
-                }
-                return ScanPlan::Rids(rids);
-            }
-        }
-        // 2. Range on indexed ts (inclusive superset; the residual
-        // filter restores exact operator semantics).
-        if let Some((lo, hi)) = filter.index_range("ts") {
-            if self.engine.index(COLLECTION, TS_INDEX).is_some() {
-                self.metrics.counter(names::SHARD_PLAN_TS_RANGE).inc();
-                return ScanPlan::Index {
-                    index: TS_INDEX.to_string(),
-                    ranges: vec![Index::superset_bounds(&[], lo.as_ref(), hi.as_ref())],
-                    rev: false,
-                };
-            }
-        }
-        // 2b. Range/eq on node_id: its own index, or the compound
-        // prefix (a (node_id, ts) scan bounded on node_id alone).
-        if let Some((lo, hi)) = filter.index_range("node_id") {
-            for index in [NODE_INDEX, COMPOUND_INDEX] {
-                if self.engine.index(COLLECTION, index).is_some() {
-                    self.metrics.counter(names::SHARD_PLAN_NODE_RANGE).inc();
-                    return ScanPlan::Index {
-                        index: index.to_string(),
-                        ranges: vec![Index::superset_bounds(
-                            &[],
-                            lo.as_ref(),
-                            hi.as_ref(),
-                        )],
-                        rev: false,
-                    };
-                }
-            }
-        }
-        // 3. Full scan.
-        self.metrics.counter(names::SHARD_PLAN_FULL_SCAN).inc();
-        ScanPlan::Table
-    }
-
-    /// Drain a plan into a candidate rid vector (the kernel path wants
-    /// whole columns).
-    fn drain_plan(&self, plan: ScanPlan) -> Vec<RecordId> {
-        let mut scan = match plan {
-            ScanPlan::Rids(rids) => return rids,
-            plan => ScanCursor::new(plan, Filter::True),
-        };
-        let mut out = Vec::new();
-        loop {
-            out.extend(scan.pending.drain(..));
-            if !self.refill_scan(&mut scan) {
-                break;
-            }
-        }
-        out
-    }
-
-    /// Run the AOT filter kernel over the candidates' (ts, node_id)
-    /// columns — extracted from the raw record bytes, no per-candidate
-    /// document decode — and return the matching rids in order.
-    fn kernel_filter(
-        &self,
-        candidates: &[RecordId],
-        lo: u32,
-        hi: u32,
-        nodes: &[u32],
-    ) -> Result<Vec<RecordId>, WireError> {
-        let words = self.kernels.shapes().filter_w;
-        let mut ts_col = Vec::with_capacity(candidates.len());
-        let mut node_col = Vec::with_capacity(candidates.len());
-        let mut rids = Vec::with_capacity(candidates.len());
-        for &rid in candidates {
-            if let Some(raw) = self.engine.fetch_raw(COLLECTION, rid) {
-                let d = RawDoc::new(raw);
-                ts_col.push(d.get_i64("ts").unwrap_or(-1).max(0) as u32);
-                node_col.push(d.get_i64("node_id").unwrap_or(0).max(0) as u32);
-                rids.push(rid);
-            }
-        }
-        let bitmap = crate::runtime::fallback::build_bitmap(nodes.iter().copied(), words);
-        let out = self
-            .kernels
-            .filter(&ts_col, &node_col, lo, hi, &bitmap)
-            .map_err(|e| WireError::Server(e.to_string()))?;
-        Ok(rids
-            .iter()
-            .zip(&out.mask)
-            .filter(|(_, &m)| m == 1)
-            .map(|(&rid, _)| rid)
-            .collect())
-    }
-
-    /// Non-indexed sort field: drain the unsorted plan, decoding each
-    /// match exactly once, sort the decoded documents, and serve the
-    /// cursor from memory. (The old path decoded every candidate to
-    /// match, every match again to sort, and every served doc a third
-    /// time.)
-    fn sorted_fallback(
-        &self,
-        filter: &Filter,
-        opts: &FindOptions,
-        field: &str,
-        dir: SortDir,
-    ) -> Result<CursorSource, WireError> {
-        let mut scan = ScanCursor::new(self.plan_scan(filter), filter.clone());
-        let mut docs: Vec<Document> = Vec::new();
-        while let Some((_, raw)) = self.next_scan_match(&mut scan) {
-            docs.push(
-                RawDoc::new(raw)
-                    .decode()
-                    .map_err(|e| WireError::Server(format!("corrupt record: {e}")))?,
-            );
-        }
-        self.metrics.counter(names::SHARD_FIND_DECODES).add(docs.len() as u64);
-        self.flush_scan_metrics(&mut scan);
-        docs.sort_by(|a, b| {
-            let o = a
-                .get(field)
-                .unwrap_or(&Value::Null)
-                .cmp_total(b.get(field).unwrap_or(&Value::Null));
-            match dir {
-                SortDir::Asc => o,
-                SortDir::Desc => o.reverse(),
-            }
-        });
-        // The cursor can only ever serve `limit` documents — don't keep
-        // (or project) the sorted tail beyond it.
-        if let Some(limit) = opts.limit {
-            docs.truncate(limit);
-        }
-        let buf = docs
-            .into_iter()
-            .map(|d| match &opts.projection {
-                Some(fields) => d.project(fields),
-                None => d,
-            })
-            .collect();
-        Ok(CursorSource::Docs { buf })
-    }
-
-    /// Advance a streaming scan to its next match: pull candidates from
-    /// the resumable plan, raw-match each against the encoded bytes,
-    /// and return the matching record id *with* its bytes (one record
-    /// lookup serves both the match and the materialization).
-    /// Candidate/match tallies accumulate on the cursor (flushed to the
-    /// registry per served batch).
-    fn next_scan_match<'e>(
-        &'e self,
-        scan: &mut ScanCursor,
-    ) -> Option<(RecordId, &'e [u8])> {
-        loop {
-            while let Some(rid) = scan.pending.pop_front() {
-                scan.seen += 1;
-                let Some(raw) = self.engine.fetch_raw(COLLECTION, rid) else {
-                    continue;
-                };
-                if scan.filter.matches_raw(&RawDoc::new(raw)) {
-                    scan.matched += 1;
-                    return Some((rid, raw));
-                }
-            }
-            if scan.done || !self.refill_scan(scan) {
-                scan.done = true;
-                return None;
-            }
-        }
-    }
-
-    /// Pull the next key run (index plans) or record-id run (table
-    /// scans) into `pending`. Returns false when the scan is exhausted.
-    fn refill_scan(&self, scan: &mut ScanCursor) -> bool {
-        match &scan.plan {
-            ScanPlan::Rids(rids) => {
-                if scan.pos >= rids.len() {
-                    return false;
-                }
-                let end = (scan.pos + SCAN_RUN).min(rids.len());
-                scan.pending.extend(rids[scan.pos..end].iter().copied());
-                scan.pos = end;
-                true
-            }
-            ScanPlan::Index { index, ranges, rev } => {
-                let Some(idx) = self.engine.index(COLLECTION, index) else {
-                    return false;
-                };
-                while scan.range_idx < ranges.len() {
-                    let range = &ranges[scan.range_idx];
-                    if let Some(key) = idx.pull_range(
-                        range,
-                        scan.after_key.as_deref(),
-                        *rev,
-                        SCAN_RUN,
-                        &mut scan.pending,
-                    ) {
-                        scan.after_key = Some(key);
-                        return true;
-                    }
-                    scan.range_idx += 1;
-                    scan.after_key = None;
-                }
-                false
-            }
-            ScanPlan::Table => {
-                let before = scan.pending.len();
-                for (rid, _) in self
-                    .engine
-                    .scan_raw_from(COLLECTION, scan.after_rid)
-                    .take(SCAN_RUN)
-                {
-                    scan.after_rid = Some(rid);
-                    scan.pending.push_back(rid);
-                }
-                scan.pending.len() > before
-            }
-        }
-    }
-
-    /// Publish (and reset) a scan's candidate/match tallies — batched
-    /// so the per-candidate hot loop takes no registry locks.
-    fn flush_scan_metrics(&self, scan: &mut ScanCursor) {
-        if scan.seen > 0 {
-            self.metrics.counter(names::SHARD_FIND_CANDIDATES).add(scan.seen);
-            scan.seen = 0;
-        }
-        if scan.matched > 0 {
-            self.metrics.counter(names::SHARD_FIND_MATCHES).add(scan.matched);
-            scan.matched = 0;
-        }
-    }
-
-    fn serve_batch(&self, cur: &mut CursorState) -> Result<FindReply, WireError> {
-        let mut docs = Vec::with_capacity(cur.batch.min(64));
-        let mut decoded = 0u64;
-        while docs.len() < cur.batch && cur.remaining != Some(0) {
-            let doc = match &mut cur.src {
-                CursorSource::Rids { rids, pos } => {
-                    let mut out = None;
-                    while out.is_none() && *pos < rids.len() {
-                        let rid = rids[*pos];
-                        *pos += 1;
-                        if let Some(raw) = self.engine.fetch_raw(COLLECTION, rid) {
-                            decoded += 1;
-                            out = Some(materialize(raw, cur.projection.as_deref())?);
-                        }
-                    }
-                    out
-                }
-                // Sorted-fallback documents were decoded (and projected)
-                // when the cursor was built.
-                CursorSource::Docs { buf } => buf.pop_front(),
-                CursorSource::Scan(scan) => match self.next_scan_match(scan) {
-                    Some((_, raw)) => {
-                        decoded += 1;
-                        Some(materialize(raw, cur.projection.as_deref())?)
-                    }
-                    None => None,
-                },
-            };
-            let Some(doc) = doc else { break };
-            docs.push(doc);
-            if let Some(r) = cur.remaining.as_mut() {
-                *r -= 1;
-            }
-        }
-        if decoded > 0 {
-            self.metrics.counter(names::SHARD_FIND_DECODES).add(decoded);
-        }
-        if let CursorSource::Scan(scan) = &mut cur.src {
-            self.flush_scan_metrics(scan);
-        }
-        let more = !cursor_exhausted(cur) && cur.remaining != Some(0);
-        Ok(FindReply { docs, cursor: more.then_some(0) })
-    }
-
-    /// Count without materializing documents for the client. The
-    /// canonical shape runs the kernel over raw-extracted columns; any
-    /// other filter streams the plan through the raw matcher — counting
-    /// decodes nothing at all.
-    fn handle_count(&mut self, filter: &Filter) -> Result<u64, WireError> {
-        // Counts examine candidates exactly like finds do, so both
-        // branches publish the candidate/match tallies — the ratio the
-        // planner regressions read covers finds and counts alike.
-        if let Some((lo, hi, nodes)) = Self::canonical_shape(filter) {
-            let words = self.kernels.shapes().filter_w;
-            let max_node = nodes.iter().max().copied().unwrap_or(0);
-            if (max_node as usize) < words * 32 && !nodes.is_empty() {
-                let candidates = self.drain_plan(self.plan_scan(filter));
-                self.metrics
-                    .counter(names::SHARD_FIND_CANDIDATES)
-                    .add(candidates.len() as u64);
-                let n = self.kernel_filter(&candidates, lo, hi, &nodes)?.len() as u64;
-                self.metrics.counter(names::SHARD_FIND_MATCHES).add(n);
-                return Ok(n);
-            }
-        }
-        let mut scan = ScanCursor::new(self.plan_scan(filter), filter.clone());
-        let mut n = 0u64;
-        while self.next_scan_match(&mut scan).is_some() {
-            n += 1;
-        }
-        self.flush_scan_metrics(&mut scan);
-        Ok(n)
-    }
-
-    fn handle_get_more(&mut self, cursor: u64) -> Result<FindReply, WireError> {
-        let mut cur = self
-            .cursors
-            .remove(&cursor)
-            .ok_or(WireError::UnknownCursor(cursor))?;
-        let mut reply = self.serve_batch(&mut cur)?;
-        if reply.cursor.is_some() {
-            self.cursors.insert(cursor, cur);
-            reply.cursor = Some(cursor);
-        }
-        Ok(reply)
-    }
-
     /// Migration source: one bounded batch of the range, resuming from
     /// the record-id cursor `after`. The scan itself is capped (not
     /// only the match count), so even a sparse range never holds the
-    /// event loop for more than a bounded walk — invariant IM2.
+    /// event loop for more than a bounded walk — invariant IM2. The
+    /// walk borrows raw bytes under one latest-view guard: only records
+    /// actually inside the migrating range decode; the (typically much
+    /// larger) out-of-range remainder is probed for its key fields and
+    /// skipped without cloning.
     fn handle_migrate_batch(
         &self,
         range: (u64, u64),
@@ -1087,10 +472,9 @@ impl ShardServer {
         let mut last = None;
         let mut scanned = 0usize;
         let mut done = true;
-        // Raw walk: only records actually inside the migrating range
-        // decode; the (typically much larger) out-of-range remainder is
-        // probed for its key fields and skipped.
-        for (rid, raw) in self.engine.scan_raw_from(COLLECTION, after) {
+        let reader = self.engine.reader();
+        let view = reader.latest();
+        for (rid, raw) in view.scan_raw_from(COLLECTION, after) {
             scanned += 1;
             last = Some(rid);
             let rd = RawDoc::new(raw);
@@ -1178,20 +562,31 @@ impl ShardServer {
     /// them in both collections or in neither), then drop the meta
     /// records. Idempotent: an empty or marker-only staging publishes
     /// nothing and just cleans up.
+    ///
+    /// A cursor pinned *before* this publish still drains the
+    /// pre-publish state (staged docs invisible); one pinned after sees
+    /// the moved documents exactly once — the regression battery in
+    /// `tests/cluster_live.rs` holds migrations to that.
     fn handle_publish_staged(&mut self) -> Result<u64, WireError> {
         if self.staging.is_none() && self.engine.stats(STAGING_COLLECTION).docs == 0 {
             return Ok(0);
         }
         // Raw pass: the publish needs rids and key positions only —
         // staged documents move as encoded bytes, never decoding here.
+        // The view is scoped: it must drop before `move_many` takes the
+        // store's write lock on this same thread.
         let mut data: Vec<(RecordId, Option<u64>)> = Vec::new();
         let mut meta: Vec<RecordId> = Vec::new();
-        for (rid, raw) in self.engine.scan_raw_from(STAGING_COLLECTION, None) {
-            let rd = RawDoc::new(raw);
-            if rd.get_i64("__migmeta").is_some() || rd.get_i64("__migcommit").is_some() {
-                meta.push(rid);
-            } else {
-                data.push((rid, self.position_of_raw(&rd)));
+        {
+            let reader = self.engine.reader();
+            let view = reader.latest();
+            for (rid, raw) in view.scan_raw_from(STAGING_COLLECTION, None) {
+                let rd = RawDoc::new(raw);
+                if rd.get_i64("__migmeta").is_some() || rd.get_i64("__migcommit").is_some() {
+                    meta.push(rid);
+                } else {
+                    data.push((rid, self.position_of_raw(&rd)));
+                }
             }
         }
         let rids: Vec<RecordId> = data.iter().map(|(r, _)| *r).collect();
@@ -1255,20 +650,25 @@ impl ShardServer {
     /// chunk), then — when `compact` — checkpoint immediately so the
     /// moved-away documents leave this shard's journal and delta chain
     /// instead of occupying the shared filesystem until the next
-    /// threshold crossing.
+    /// threshold crossing. Snapshots pinned before the delete keep
+    /// reading the doomed versions until reclamation catches up.
     fn delete_range(
         &mut self,
         range: (u64, u64),
         compact: bool,
     ) -> Result<DeleteChunkReply, WireError> {
-        let doomed: Vec<(RecordId, u64)> = self
-            .engine
-            .scan_raw_from(COLLECTION, None)
-            .filter_map(|(rid, raw)| {
-                let pos = self.position_of_raw(&RawDoc::new(raw))?;
-                (range.0 <= pos && pos <= range.1).then_some((rid, pos))
-            })
-            .collect();
+        // Scoped view: the doomed-set scan borrows raw bytes, and the
+        // guard must drop before `remove_many` takes the write lock.
+        let doomed: Vec<(RecordId, u64)> = {
+            let reader = self.engine.reader();
+            let view = reader.latest();
+            view.scan_raw_from(COLLECTION, None)
+                .filter_map(|(rid, raw)| {
+                    let pos = self.position_of_raw(&RawDoc::new(raw))?;
+                    (range.0 <= pos && pos <= range.1).then_some((rid, pos))
+                })
+                .collect()
+        };
         let rids: Vec<RecordId> = doomed.iter().map(|(r, _)| *r).collect();
         let n = rids.len() as u64;
         if !rids.is_empty() {

@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use std::ops::Bound;
 
 use super::engine::RecordId;
+use super::mvcc::{visible, Epoch, LATEST, LIVE};
 use crate::mongo::bson::{Document, Value};
 
 /// Index definition: one or more fields, ascending (the workload indexes
@@ -90,12 +91,26 @@ pub fn encode_key(values: &[&Value]) -> Vec<u8> {
     out
 }
 
-/// An in-memory ordered index.
+/// One index entry: a record id plus the epoch window it is visible in
+/// (see [`super::mvcc::visible`]). Postings of reclaimed records are
+/// physically pruned by [`Index::prune`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Posting {
+    pub rid: RecordId,
+    born: Epoch,
+    dead: Epoch,
+}
+
+/// An in-memory ordered index. Postings are epoch-versioned so snapshot
+/// reads ([`Epoch`]-pinned `_at` variants) and latest reads (the plain
+/// methods, which see exactly the live postings) share one structure.
+#[derive(Clone)]
 pub struct Index {
     pub spec: IndexSpec,
-    /// encoded key → record ids (duplicates common: same ts across all
+    /// encoded key → postings (duplicates common: same ts across all
     /// monitored nodes).
-    map: BTreeMap<Vec<u8>, Vec<RecordId>>,
+    map: BTreeMap<Vec<u8>, Vec<Posting>>,
+    /// Live postings (dead versions awaiting reclamation excluded).
     entries: u64,
 }
 
@@ -117,45 +132,120 @@ impl Index {
         encode_key(&vals)
     }
 
+    /// Insert a live posting born at epoch 0 — visible to every
+    /// snapshot. The standalone-index entry point (tests, benches, the
+    /// planner's cost fixtures); the engine stamps real epochs via
+    /// [`Index::insert_at`].
     pub fn insert(&mut self, doc: &Document, rid: RecordId) {
-        self.map.entry(self.key_of(doc)).or_default().push(rid);
-        self.entries += 1;
+        self.insert_version(doc, rid, 0, LIVE);
     }
 
+    /// Insert a live posting born at `born`.
+    pub fn insert_at(&mut self, doc: &Document, rid: RecordId, born: Epoch) {
+        self.insert_version(doc, rid, born, LIVE);
+    }
+
+    /// Insert a posting with explicit stamps — the index-backfill path,
+    /// which must reproduce the visibility window of each record version
+    /// (including dead-but-retained ones) so snapshot plans over a
+    /// freshly created index stay exact.
+    pub fn insert_version(&mut self, doc: &Document, rid: RecordId, born: Epoch, dead: Epoch) {
+        self.map
+            .entry(self.key_of(doc))
+            .or_default()
+            .push(Posting { rid, born, dead });
+        if dead == LIVE {
+            self.entries += 1;
+        }
+    }
+
+    /// Physically remove `rid`'s posting (live or dead) under `doc`'s
+    /// key — the pre-MVCC removal, still used by recovery folds (which
+    /// run before any snapshot exists) and standalone-index callers.
     pub fn remove(&mut self, doc: &Document, rid: RecordId) {
         let key = self.key_of(doc);
-        if let Some(rids) = self.map.get_mut(&key) {
-            if let Some(pos) = rids.iter().position(|r| *r == rid) {
-                rids.swap_remove(pos);
-                self.entries -= 1;
+        if let Some(postings) = self.map.get_mut(&key) {
+            if let Some(pos) = postings.iter().position(|p| p.rid == rid) {
+                if postings.swap_remove(pos).dead == LIVE {
+                    self.entries -= 1;
+                }
             }
-            if rids.is_empty() {
+            if postings.is_empty() {
                 self.map.remove(&key);
             }
         }
     }
 
-    /// Record ids whose key equals `values`.
-    pub fn point(&self, values: &[&Value]) -> Vec<RecordId> {
-        self.map.get(&encode_key(values)).cloned().unwrap_or_default()
+    /// Logically remove `rid`: stamp its live posting dead at `epoch`.
+    /// The posting stays until [`Index::prune`] (epoch reclamation) so
+    /// snapshots pinned before `epoch` keep reading it.
+    pub fn kill(&mut self, doc: &Document, rid: RecordId, epoch: Epoch) {
+        let key = self.key_of(doc);
+        if let Some(postings) = self.map.get_mut(&key) {
+            if let Some(p) =
+                postings.iter_mut().find(|p| p.rid == rid && p.dead == LIVE)
+            {
+                p.dead = epoch;
+                self.entries -= 1;
+            }
+        }
     }
 
-    /// [`Index::point`] without the clone: record ids streamed from the
-    /// key's posting list.
+    /// Physically drop `rid`'s *dead* posting under `doc`'s key — the
+    /// reclamation step once no open snapshot can read it.
+    pub fn prune(&mut self, doc: &Document, rid: RecordId) {
+        let key = self.key_of(doc);
+        if let Some(postings) = self.map.get_mut(&key) {
+            if let Some(pos) =
+                postings.iter().position(|p| p.rid == rid && p.dead != LIVE)
+            {
+                postings.swap_remove(pos);
+            }
+            if postings.is_empty() {
+                self.map.remove(&key);
+            }
+        }
+    }
+
+    /// Record ids whose key equals `values` (latest view).
+    pub fn point(&self, values: &[&Value]) -> Vec<RecordId> {
+        self.point_iter_at(values, LATEST).collect()
+    }
+
+    /// [`Index::point`] without the allocation: record ids streamed from
+    /// the key's posting list (latest view).
     pub fn point_iter<'a>(
         &'a self,
         values: &[&Value],
     ) -> impl Iterator<Item = RecordId> + 'a {
+        self.point_iter_at(values, LATEST)
+    }
+
+    /// Record ids whose key equals `values`, visible at snapshot `at`.
+    pub fn point_iter_at<'a>(
+        &'a self,
+        values: &[&Value],
+        at: Epoch,
+    ) -> impl Iterator<Item = RecordId> + 'a {
         self.map
             .get(&encode_key(values))
             .into_iter()
-            .flat_map(|rids| rids.iter().copied())
+            .flat_map(move |ps| {
+                ps.iter().filter(move |p| visible(p.born, p.dead, at)).map(|p| p.rid)
+            })
     }
 
     /// How many record ids a point lookup of `values` would return —
     /// the planner's per-value cost estimate, one map probe.
     pub fn point_len(&self, values: &[&Value]) -> usize {
-        self.map.get(&encode_key(values)).map_or(0, Vec::len)
+        self.point_len_at(values, LATEST)
+    }
+
+    /// [`Index::point_len`] at snapshot `at`.
+    pub fn point_len_at(&self, values: &[&Value], at: Epoch) -> usize {
+        self.map.get(&encode_key(values)).map_or(0, |ps| {
+            ps.iter().filter(|p| visible(p.born, p.dead, at)).count()
+        })
     }
 
     /// Record ids in `[lo, hi)` on the first key field (prefix scan),
@@ -177,7 +267,7 @@ impl Index {
             Some(v) => Bound::Excluded(encode_key(&[v])),
             None => Bound::Unbounded,
         };
-        self.scan_bounds(lo_b, hi_b)
+        self.scan_bounds(lo_b, hi_b, LATEST)
     }
 
     /// Superset scan with *inclusive* bounds on the first key field —
@@ -190,20 +280,43 @@ impl Index {
         lo: Option<&Value>,
         hi: Option<&Value>,
     ) -> impl Iterator<Item = RecordId> + 'a {
+        self.range_superset_at(lo, hi, LATEST)
+    }
+
+    /// [`Index::range_superset`] at snapshot `at`.
+    pub fn range_superset_at<'a>(
+        &'a self,
+        lo: Option<&Value>,
+        hi: Option<&Value>,
+        at: Epoch,
+    ) -> impl Iterator<Item = RecordId> + 'a {
         let (lo_b, hi_b) = Self::superset_bounds(&[], lo, hi);
         let lo_b = if lo.is_some() { Bound::Included(lo_b) } else { Bound::Unbounded };
-        self.scan_bounds(lo_b, Bound::Excluded(hi_b))
+        self.scan_bounds(lo_b, Bound::Excluded(hi_b), at)
     }
 
     /// How many record ids [`Index::range_superset`] would yield — the
-    /// planner's scan-cost estimate: O(distinct keys in range), no rid
+    /// planner's scan-cost estimate: O(postings in range), no rid
     /// allocation or copying.
     pub fn range_superset_len(&self, lo: Option<&Value>, hi: Option<&Value>) -> usize {
+        self.range_superset_len_at(lo, hi, LATEST)
+    }
+
+    /// [`Index::range_superset_len`] at snapshot `at`.
+    pub fn range_superset_len_at(
+        &self,
+        lo: Option<&Value>,
+        hi: Option<&Value>,
+        at: Epoch,
+    ) -> usize {
         let (lo_b, hi_b) = Self::superset_bounds(&[], lo, hi);
         if lo_b > hi_b {
             return 0;
         }
-        self.map.range(lo_b..hi_b).map(|(_, rids)| rids.len()).sum()
+        self.map
+            .range(lo_b..hi_b)
+            .map(|(_, ps)| ps.iter().filter(|p| visible(p.born, p.dead, at)).count())
+            .sum()
     }
 
     /// Iterate `map.range` defensively: inverted bounds (an empty query
@@ -213,6 +326,7 @@ impl Index {
         &'a self,
         lo_b: Bound<Vec<u8>>,
         hi_b: Bound<Vec<u8>>,
+        at: Epoch,
     ) -> impl Iterator<Item = RecordId> + 'a {
         let inverted = match (&lo_b, &hi_b) {
             (Bound::Excluded(a), Bound::Excluded(b)) => a >= b,
@@ -228,7 +342,9 @@ impl Index {
         } else {
             (lo_b, hi_b)
         };
-        self.map.range(bounds).flat_map(|(_, rids)| rids.iter().copied())
+        self.map.range(bounds).flat_map(move |(_, ps)| {
+            ps.iter().filter(move |p| visible(p.born, p.dead, at)).map(|p| p.rid)
+        })
     }
 
     /// Encoded `[lo, hi)` scan bounds over keys whose leading fields
@@ -275,6 +391,23 @@ impl Index {
         max: usize,
         out: &mut std::collections::VecDeque<RecordId>,
     ) -> Option<Vec<u8>> {
+        self.pull_range_at(range, resume, rev, max, out, LATEST)
+    }
+
+    /// [`Index::pull_range`] at snapshot `at`: only postings visible at
+    /// the pinned epoch are pulled. A key whose postings are all
+    /// invisible still advances the resume point (it counts toward
+    /// nothing), so a cursor never stalls on a fully-dead key run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pull_range_at(
+        &self,
+        range: &EncodedRange,
+        resume: Option<&[u8]>,
+        rev: bool,
+        max: usize,
+        out: &mut std::collections::VecDeque<RecordId>,
+        at: Epoch,
+    ) -> Option<Vec<u8>> {
         let (lo, hi) = range;
         let mut last: Option<&[u8]> = None;
         let mut pulled = 0usize;
@@ -286,13 +419,17 @@ impl Index {
             if lo.as_slice() >= end {
                 return None;
             }
-            for (k, rids) in self
+            for (k, ps) in self
                 .map
                 .range::<[u8], _>((Bound::Included(lo.as_slice()), Bound::Excluded(end)))
                 .rev()
             {
-                out.extend(rids.iter().copied());
-                pulled += rids.len();
+                for p in ps {
+                    if visible(p.born, p.dead, at) {
+                        out.push_back(p.rid);
+                        pulled += 1;
+                    }
+                }
                 last = Some(k.as_slice());
                 if pulled >= max {
                     break;
@@ -313,12 +450,16 @@ impl Index {
                     Bound::Included(lo.as_slice())
                 }
             };
-            for (k, rids) in self
+            for (k, ps) in self
                 .map
                 .range::<[u8], _>((start, Bound::Excluded(hi.as_slice())))
             {
-                out.extend(rids.iter().copied());
-                pulled += rids.len();
+                for p in ps {
+                    if visible(p.born, p.dead, at) {
+                        out.push_back(p.rid);
+                        pulled += 1;
+                    }
+                }
                 last = Some(k.as_slice());
                 if pulled >= max {
                     break;
@@ -330,6 +471,7 @@ impl Index {
         last.map(|k| k.to_vec())
     }
 
+    /// Live postings (dead versions awaiting reclamation excluded).
     pub fn entries(&self) -> u64 {
         self.entries
     }
@@ -342,7 +484,7 @@ impl Index {
     pub fn approx_bytes(&self) -> u64 {
         self.map
             .iter()
-            .map(|(k, v)| (k.len() + v.len() * 8 + 32) as u64)
+            .map(|(k, v)| (k.len() + v.len() * std::mem::size_of::<Posting>() + 32) as u64)
             .sum()
     }
 }

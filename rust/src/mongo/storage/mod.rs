@@ -12,14 +12,23 @@
 //! format), and the chain periodically rebases into a fresh full
 //! snapshot. The formats and the crash-recovery state machine are
 //! specified in `docs/ARCHITECTURE.md`.
+//!
+//! Reads are MVCC: records and index postings carry `[born, dead)`
+//! epoch stamps ([`mvcc`]), a [`StoreReader`] serves snapshot-pinned
+//! views from any thread while the single writer keeps committing, and
+//! [`Engine::reclaim`] drops dead versions once the oldest open
+//! snapshot advances (docs/ARCHITECTURE.md §9).
 
 pub mod delta;
 pub mod engine;
 pub mod index;
 pub mod io;
+pub mod mvcc;
 
 pub use engine::{
-    CheckpointStats, CollectionStats, Engine, EngineOptions, RecordId, RecoveryReport,
+    CheckpointStats, CollectionStats, Engine, EngineOptions, ReadView, RecordId,
+    RecoveryReport, Snapshot, SnapshotExpired, StoreReader,
 };
 pub use index::{encode_key, Index, IndexSpec};
 pub use io::{LocalDir, StorageDir, StorageFile};
+pub use mvcc::{Epoch, SnapshotTracker, LATEST, LIVE};

@@ -1,0 +1,226 @@
+//! MVCC primitives: epoch stamps, the visibility rule, and the open-
+//! snapshot tracker.
+//!
+//! The engine stamps every record and index posting with the epoch it
+//! was **born** at and the epoch it **died** at (`LIVE` = still alive).
+//! Each mutating engine call commits under one fresh epoch, so a whole
+//! ingest batch, range delete, or migration publish becomes visible
+//! atomically. A snapshot pins the committed epoch at open time and
+//! evaluates [`visible`] against it; the *latest* view passes
+//! [`LATEST`] and sees exactly the live set.
+//!
+//! Dead versions are retained until every snapshot that could still
+//! read them has closed — [`SnapshotTracker`] keeps the open-pin
+//! multiset and yields the reclamation floor. The rule, spelled out in
+//! docs/ARCHITECTURE.md §9:
+//!
+//! * a record dead at epoch `D` is readable by snapshots pinned at
+//!   `at < D`;
+//! * therefore it is reclaimable once the oldest open pin is `>= D`
+//!   (or no snapshot is open at all).
+//!
+//! This module is pure in-memory bookkeeping (no I/O, no threads), so
+//! the Miri CI job runs its tests in full.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Commit epoch. Epoch 0 is the recovered/initial state; every mutating
+/// engine call commits at the next epoch.
+pub type Epoch = u64;
+
+/// `dead` stamp of a live record or posting — never reached by real
+/// commits (an engine would need `u64::MAX` batches).
+pub const LIVE: Epoch = u64::MAX;
+
+/// Read epoch meaning "the latest committed state" — sees exactly the
+/// records whose `dead` stamp is [`LIVE`].
+pub const LATEST: Epoch = u64::MAX;
+
+/// The visibility rule: is a version stamped `[born, dead)` readable at
+/// epoch `at`?
+///
+/// * `at == LATEST`: the version is visible iff it is still live.
+/// * otherwise: visible iff it was born at or before `at` and died
+///   strictly after it — a version killed *at* epoch `e` is invisible
+///   to the snapshot pinned at `e` only if `e >= dead`; the pin taken
+///   *before* the kill (`at < dead`) still reads it.
+#[inline]
+pub fn visible(born: Epoch, dead: Epoch, at: Epoch) -> bool {
+    if at == LATEST {
+        dead == LIVE
+    } else {
+        born <= at && at < dead
+    }
+}
+
+/// Multiset of open snapshot pins, keyed by pinned epoch.
+///
+/// Shared by the writer (reclamation floor, retention expiry) and every
+/// reader thread (pin on snapshot open, unpin on cursor close/drain).
+/// The lock is taken for a map probe only — never across I/O.
+#[derive(Default)]
+pub struct SnapshotTracker {
+    pins: Mutex<BTreeMap<Epoch, usize>>,
+}
+
+impl SnapshotTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pin `at`: the caller promises to [`SnapshotTracker::unpin`] it
+    /// exactly once (the [`super::engine::Snapshot`] handle does this
+    /// on drop).
+    pub fn pin(&self, at: Epoch) {
+        let mut pins = match self.pins.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        *pins.entry(at).or_insert(0) += 1;
+    }
+
+    /// Release one pin of `at`. Unknown epochs are tolerated (a poisoned
+    /// panic unwind may race a drop); the multiset never underflows.
+    pub fn unpin(&self, at: Epoch) {
+        let mut pins = match self.pins.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if let Some(n) = pins.get_mut(&at) {
+            *n -= 1;
+            if *n == 0 {
+                pins.remove(&at);
+            }
+        }
+    }
+
+    /// Oldest open pin at or above `floor` — pins below the retention
+    /// floor are *expired* (their snapshots fail with a retryable error
+    /// on next use) and no longer hold reclamation back.
+    pub fn oldest_open(&self, floor: Epoch) -> Option<Epoch> {
+        let pins = match self.pins.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        pins.range(floor..).next().map(|(e, _)| *e)
+    }
+
+    /// Number of open pins (the `shard.snapshots_open` gauge).
+    pub fn open_count(&self) -> u64 {
+        let pins = match self.pins.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        pins.values().map(|n| *n as u64).sum()
+    }
+
+    /// The reclamation floor given the committed epoch and the retention
+    /// knob: every version dead at or below the returned epoch is
+    /// unreachable by any open (non-expired) or future snapshot.
+    ///
+    /// `retention == 0` keeps versions for as long as any snapshot is
+    /// open (unbounded); `retention = R` additionally expires pins older
+    /// than `epoch - R`, bounding how far behind the writer a reader
+    /// can hold the garbage queue.
+    pub fn reclaim_floor(&self, epoch: Epoch, retention: u64) -> Epoch {
+        let expiry = if retention == 0 { 0 } else { epoch.saturating_sub(retention) };
+        match self.oldest_open(expiry) {
+            Some(oldest) => oldest.max(expiry),
+            None => epoch.max(expiry),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_versions_visible_at_any_snapshot_after_birth() {
+        assert!(visible(0, LIVE, 0));
+        assert!(visible(3, LIVE, 3));
+        assert!(visible(3, LIVE, 1000));
+        assert!(!visible(3, LIVE, 2), "not yet born at the pinned epoch");
+        assert!(visible(3, LIVE, LATEST));
+    }
+
+    #[test]
+    fn dead_versions_visible_only_before_their_death_epoch() {
+        // Born at 2, killed at 5: snapshots 2..=4 read it, 5+ do not.
+        for at in 2..5 {
+            assert!(visible(2, 5, at), "at={at}");
+        }
+        assert!(!visible(2, 5, 5));
+        assert!(!visible(2, 5, 100));
+        assert!(!visible(2, 5, 1), "pre-birth snapshot");
+        assert!(!visible(2, 5, LATEST), "latest never sees dead versions");
+    }
+
+    #[test]
+    fn born_and_killed_in_one_epoch_is_never_visible() {
+        // Replay uses epoch 0 for both stamps: insert+remove nets out.
+        assert!(!visible(0, 0, 0));
+        assert!(!visible(7, 7, 7));
+        assert!(!visible(7, 7, LATEST));
+    }
+
+    #[test]
+    fn tracker_pins_unpin_and_count() {
+        let t = SnapshotTracker::new();
+        assert_eq!(t.open_count(), 0);
+        assert_eq!(t.oldest_open(0), None);
+        t.pin(5);
+        t.pin(5);
+        t.pin(9);
+        assert_eq!(t.open_count(), 3);
+        assert_eq!(t.oldest_open(0), Some(5));
+        t.unpin(5);
+        assert_eq!(t.oldest_open(0), Some(5), "one pin of 5 remains");
+        t.unpin(5);
+        assert_eq!(t.oldest_open(0), Some(9));
+        t.unpin(9);
+        assert_eq!(t.open_count(), 0);
+        // Unpinning an unknown epoch must not underflow or panic.
+        t.unpin(9);
+        assert_eq!(t.open_count(), 0);
+    }
+
+    #[test]
+    fn reclaim_floor_tracks_oldest_open_pin() {
+        let t = SnapshotTracker::new();
+        // No snapshots: everything up to the committed epoch reclaims.
+        assert_eq!(t.reclaim_floor(10, 0), 10);
+        t.pin(4);
+        t.pin(8);
+        assert_eq!(t.reclaim_floor(10, 0), 4);
+        t.unpin(4);
+        assert_eq!(t.reclaim_floor(10, 0), 8);
+        t.unpin(8);
+        assert_eq!(t.reclaim_floor(10, 0), 10);
+    }
+
+    #[test]
+    fn retention_expires_stale_pins() {
+        let t = SnapshotTracker::new();
+        t.pin(2);
+        // Unbounded retention: the stale pin holds the floor at 2.
+        assert_eq!(t.reclaim_floor(100, 0), 2);
+        // Retention 10: pins below 90 expire; the floor advances.
+        assert_eq!(t.reclaim_floor(100, 10), 90);
+        // A fresh pin above the expiry still holds the floor.
+        t.pin(95);
+        assert_eq!(t.reclaim_floor(100, 10), 95);
+        // The expired pin alone never drags the floor back down.
+        t.unpin(95);
+        assert_eq!(t.reclaim_floor(100, 10), 90);
+        t.unpin(2);
+    }
+
+    #[test]
+    fn reclaim_floor_with_retention_and_no_pins_is_the_epoch() {
+        let t = SnapshotTracker::new();
+        assert_eq!(t.reclaim_floor(100, 10), 100);
+        assert_eq!(t.reclaim_floor(5, 10), 5, "saturating expiry below retention");
+    }
+}

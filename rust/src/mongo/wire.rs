@@ -25,6 +25,11 @@ pub type Reply<T> = mpsc::Sender<T>;
 pub enum WireError {
     StaleVersion { current: u64 },
     UnknownCursor(u64),
+    /// The cursor's pinned MVCC snapshot fell behind the shard's
+    /// snapshot-retention window and its versions were reclaimed. The
+    /// cursor is dead; the query is cleanly retryable with a fresh
+    /// `find` (which pins the current epoch).
+    SnapshotExpired { at: u64, floor: u64 },
     Server(String),
 }
 
@@ -35,6 +40,10 @@ impl std::fmt::Display for WireError {
                 write!(f, "stale chunk map version (shard has {current})")
             }
             WireError::UnknownCursor(c) => write!(f, "unknown cursor {c}"),
+            WireError::SnapshotExpired { at, floor } => write!(
+                f,
+                "snapshot at epoch {at} expired (reclaim floor {floor}); retry the query"
+            ),
             WireError::Server(msg) => write!(f, "server error: {msg}"),
         }
     }

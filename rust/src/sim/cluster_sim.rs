@@ -68,6 +68,11 @@ pub struct SimSpec {
     /// a full document decode. Matches the live `RawDoc` matcher; off
     /// reproduces the pre-overhaul decode-per-candidate path.
     pub raw_match: bool,
+    /// Concurrent-runtime axis: per-shard MVCC reader threads serving
+    /// finds from pinned snapshots (the live `--reader-threads` knob).
+    /// 0 = reads run inline on the shard's single event loop; N > 0
+    /// models the reader pool as N query-phase servers per shard.
+    pub reader_threads: usize,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -100,6 +105,7 @@ impl SimSpec {
             query_jobs,
             compound_index: true,
             raw_match: true,
+            reader_threads: 0,
             cost,
             seed: 0x51712,
         })
@@ -477,9 +483,13 @@ impl ClusterSim {
         // --- Query phase ---------------------------------------------------
         // Fresh resources: the query experiment runs on the ingested
         // store ("each cluster size is servicing more concurrent
-        // queries" — concurrency = client PEs).
+        // queries" — concurrency = client PEs). With reader_threads = 0
+        // every shard serves finds on its single event loop; with N > 0
+        // the MVCC reader pool gives each shard N concurrent servers
+        // (snapshot reads never block on the writer).
         let mut router_cpu = Pool::new("router", topo.routers, 1);
-        let mut shard_cpu = Pool::new("shard", topo.shards, 1);
+        let mut shard_cpu =
+            Pool::new("shard", topo.shards, spec.reader_threads.max(1) as u32);
         let mut fabric = FlowMeter::new("fabric");
         let wl = WorkloadConfig {
             monitored_nodes: spec.monitored_nodes,
@@ -689,6 +699,36 @@ mod tests {
             "compound+raw ({}) must beat the pre-overhaul path ({})",
             r_new.query_virt_ns,
             r_old.query_virt_ns
+        );
+    }
+
+    #[test]
+    fn reader_pool_speeds_up_the_query_phase_only() {
+        // The MVCC reader-pool axis: extra query-phase servers per
+        // shard cut queueing under concurrent finds, and touch nothing
+        // in the ingest phase (writes stay on the event loop).
+        let base = small_spec(32);
+        let mut pooled = base.clone();
+        pooled.reader_threads = 2;
+        let r0 = ClusterSim::new(base).run();
+        let r2 = ClusterSim::new(pooled).run();
+        assert_eq!(r0.docs, r2.docs);
+        assert_eq!(r0.queries, r2.queries);
+        assert_eq!(
+            r0.ingest_virt_ns, r2.ingest_virt_ns,
+            "reader threads must not touch the ingest phase"
+        );
+        assert!(
+            r2.query_virt_ns < r0.query_virt_ns,
+            "2 readers/shard ({} ns) must beat inline reads ({} ns)",
+            r2.query_virt_ns,
+            r0.query_virt_ns
+        );
+        assert!(
+            r2.query_latency.p99() <= r0.query_latency.p99(),
+            "pooled p99 {} cannot exceed inline p99 {}",
+            r2.query_latency.p99(),
+            r0.query_latency.p99()
         );
     }
 

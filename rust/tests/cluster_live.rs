@@ -748,3 +748,223 @@ fn sorted_scatter_gather_is_globally_ordered_across_shards() {
     assert_eq!(got, (40..80).rev().collect::<Vec<i64>>());
     cluster.shutdown();
 }
+
+#[test]
+fn reader_pool_serves_exact_results_under_concurrent_ingest() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    use hpcstore::metrics::names;
+
+    // The per-shard MVCC reader pool (--reader-threads): finds and
+    // counts run on pool workers against pinned snapshots while the
+    // writer keeps committing on the event loop. Every query must see
+    // one frozen epoch — exact counts against a closed-form corpus —
+    // and the snapshot-read counter proves the path taken.
+    let mut spec = ClusterSpec::small(2, 2);
+    spec.store = StoreConfig { reader_threads: 2, ..Default::default() };
+    let metrics = Registry::new();
+    let cluster = Cluster::start(
+        spec,
+        |sid| Ok(Box::new(LocalDir::temp(&format!("rpool-{sid}"))?)),
+        Kernels::fallback(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let client = cluster.client();
+    client.create_index(IndexSpec::compound(&["node_id", "ts"])).unwrap();
+    // Stable corpus: ts 0..1000, node_id = ts % 10, so any (node set,
+    // ts range) result size is computable in closed form.
+    let docs: Vec<Document> = (0..1000).map(|i| metric_doc(i, i % 10)).collect();
+    client.insert_many(docs).unwrap();
+
+    // Background writer on a disjoint ts range (>= 1_000_000): commits
+    // churn epochs under the readers without touching their windows.
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let c = cluster.client().pinned(1);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || -> usize {
+            let mut inserted = 0usize;
+            let mut ts = 1_000_000i64;
+            while !stop.load(Ordering::Relaxed) {
+                let docs: Vec<Document> =
+                    (0..50).map(|i| metric_doc(ts + i, (ts + i) % 10)).collect();
+                ts += 50;
+                inserted += c.insert_many(docs).unwrap().inserted;
+            }
+            inserted
+        })
+    };
+    let mut readers = Vec::new();
+    for t in 0..4u64 {
+        let c = cluster.client().pinned(t as usize);
+        readers.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::seeded(0xC0FFEE + t);
+            for _ in 0..25 {
+                let lo = rng.next_bounded(900) as i64;
+                let hi = lo + 1 + rng.next_bounded(100) as i64;
+                let n0 = rng.next_bounded(10) as i64;
+                let n1 = (n0 + 1) % 10;
+                let f = Filter::and(vec![
+                    Filter::is_in("node_id", vec![Value::Int(n0), Value::Int(n1)]),
+                    Filter::cmp("ts", CmpOp::Gte, lo),
+                    Filter::cmp("ts", CmpOp::Lt, hi),
+                ]);
+                let expected =
+                    (lo..hi).filter(|ts| ts % 10 == n0 || ts % 10 == n1).count();
+                let got = c
+                    .find(f.clone(), FindOptions::default().batch_size(16))
+                    .unwrap()
+                    .count();
+                assert_eq!(got, expected, "find [{lo},{hi}) nodes {{{n0},{n1}}}");
+                assert_eq!(c.count_documents(f).unwrap(), expected);
+            }
+        }));
+    }
+    for r in readers {
+        r.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    assert!(writer.join().unwrap() > 0);
+    assert_eq!(client.count_documents(Filter::range("ts", 0i64, 1000i64)).unwrap(), 1000);
+    assert!(
+        metrics.counter(names::SHARD_SNAPSHOT_READS).get() > 0,
+        "pool reads must be served from pinned snapshots"
+    );
+    cluster.shutdown();
+}
+
+#[test]
+fn cursor_across_migration_commit_drains_the_pinned_snapshot_exactly_once() {
+    use std::collections::HashMap;
+
+    // Snapshot/migration interplay (ARCHITECTURE.md §9): a cursor
+    // opened *before* a chunk migration commits must drain its pinned
+    // world exactly once. The donor's moved range is dead-marked, not
+    // physically dropped, while the pin holds; the recipient's copy was
+    // born after every shard stream pinned — so each moved document
+    // appears exactly once, never twice and never zero times.
+    let mut spec = ClusterSpec::small(2, 1);
+    spec.chunks_per_shard = 1;
+    spec.store = StoreConfig {
+        shard_key: ShardKeyKind::Ranged,
+        max_chunk_docs: 200,
+        migration_batch_docs: 32,
+        reader_threads: 1,
+        ..Default::default()
+    };
+    let cluster = start(spec, "migcur");
+    let client = cluster.client();
+    let corpus = 2_000i64;
+    for c in (0..corpus).collect::<Vec<i64>>().chunks(400) {
+        let docs: Vec<Document> = c.iter().map(|&i| metric_doc(i, 7)).collect();
+        client.insert_many(docs).unwrap();
+    }
+    assert!(cluster.stats().chunks > 4, "skewed ingest must have split chunks");
+
+    // Open the cursor and pull a prefix: every shard stream pins its
+    // snapshot here, before any chunk moves.
+    let mut cur =
+        client.find(Filter::True, FindOptions::default().batch_size(64)).unwrap();
+    let mut seen: Vec<i64> = Vec::with_capacity(corpus as usize);
+    for _ in 0..100 {
+        seen.push(cur.next().expect("corpus prefix").get_i64("ts").unwrap());
+    }
+
+    // Chunks migrate while the cursor is parked mid-drain.
+    let mut moved = 0;
+    for _ in 0..3 {
+        moved += cluster.run_balancer_round().unwrap();
+    }
+    assert!(moved > 0, "skew must trigger migrations");
+
+    // Drain the rest of the pinned pre-migration world.
+    seen.extend(cur.by_ref().map(|d| d.get_i64("ts").unwrap()));
+    assert!(
+        cur.error().is_none(),
+        "retention 0 must never expire a cursor: {:?}",
+        cur.error()
+    );
+    let mut counts: HashMap<i64, usize> = HashMap::new();
+    for ts in &seen {
+        *counts.entry(*ts).or_default() += 1;
+    }
+    for ts in 0..corpus {
+        assert_eq!(
+            counts.get(&ts).copied().unwrap_or(0),
+            1,
+            "ts {ts}: the moved range must be seen exactly once"
+        );
+    }
+    assert_eq!(seen.len() as i64, corpus);
+
+    // The post-migration world reads back the same set on a fresh find.
+    assert_eq!(client.count_documents(Filter::True).unwrap() as i64, corpus);
+    let stats = cluster.stats();
+    assert_eq!(stats.migrations_failed, 0);
+    assert!(stats.per_shard_docs.iter().all(|&d| d > 0), "{:?}", stats.per_shard_docs);
+    cluster.shutdown();
+}
+
+#[test]
+fn cursor_past_retention_fails_retryably_and_a_fresh_find_succeeds() {
+    use hpcstore::mongo::wire::WireError;
+
+    // The IS2 bound end-to-end: with --snapshot-retention set, a cursor
+    // parked while the writer commits past the window dies with the
+    // clean, retryable SnapshotExpired — never a silent short or wrong
+    // result — and reissuing the find (fresh pin at the current epoch)
+    // succeeds.
+    let mut spec = ClusterSpec::small(2, 1);
+    spec.store =
+        StoreConfig { reader_threads: 1, snapshot_retention: 4, ..Default::default() };
+    let cluster = start(spec, "retexp");
+    let client = cluster.client();
+    client
+        .insert_many((0..600).map(|i| metric_doc(i, i % 6)).collect())
+        .unwrap();
+
+    // Park a cursor after exactly its first batch.
+    let mut cur = client
+        .find(Filter::range("ts", 0i64, 600i64), FindOptions::default().batch_size(32))
+        .unwrap();
+    for _ in 0..32 {
+        cur.next().expect("first batch");
+    }
+
+    // 40 separate commits: each group commit bumps the epoch and runs
+    // reclamation, so the parked pin falls past retention = 4 on every
+    // shard the writer touches.
+    for wave in 0..40i64 {
+        client
+            .insert_many(
+                (0..10).map(|i| metric_doc(1_000_000 + wave * 10 + i, 0)).collect(),
+            )
+            .unwrap();
+    }
+
+    // Whatever was already buffered router-side may still arrive; the
+    // first shard GetMore against the expired pin must end the cursor
+    // with the retryable error, not a quiet truncation.
+    let tail = cur.by_ref().count();
+    assert!(tail < 600 - 32, "expired cursor cannot have drained the corpus");
+    let err = cur
+        .error()
+        .cloned()
+        .expect("parked cursor must fail loudly, not truncate silently");
+    match err {
+        WireError::SnapshotExpired { at, floor } => {
+            assert!(at < floor, "expiry means the floor passed the pin: {at} vs {floor}")
+        }
+        other => panic!("expected SnapshotExpired, got {other:?}"),
+    }
+
+    // The documented recovery: retry with a fresh find.
+    let again = client
+        .find(Filter::range("ts", 0i64, 600i64), FindOptions::default().batch_size(32))
+        .unwrap()
+        .count();
+    assert_eq!(again, 600);
+    cluster.shutdown();
+}

@@ -130,6 +130,7 @@ fn run_seed(seed: u64) {
         checkpoint_bytes: 6 * 1024,
         journal_segments: 2,
         full_checkpoint_chain: 3,
+        ..EngineOptions::default()
     };
     let root = {
         let dir = LocalDir::temp(&format!("fuzz-{seed}")).unwrap();

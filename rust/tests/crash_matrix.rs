@@ -46,6 +46,7 @@ fn lifecycle(checkpoint_bytes: u64) -> EngineOptions {
         checkpoint_bytes,
         journal_segments: 4,
         full_checkpoint_chain: 4,
+        ..EngineOptions::default()
     }
 }
 
@@ -58,6 +59,7 @@ fn manual(full_checkpoint_chain: u32) -> EngineOptions {
         checkpoint_bytes: 0,
         journal_segments: 4,
         full_checkpoint_chain,
+        ..EngineOptions::default()
     }
 }
 
@@ -816,4 +818,134 @@ fn kill_during_post_delete_compaction_recovers_exactly() {
         );
         cluster.shutdown();
     }
+}
+
+// --- MVCC snapshot kill windows (ARCHITECTURE.md §9.4) ---------------
+//
+// Epochs, snapshot pins, and the reclaim garbage list are memory-only:
+// a kill anywhere in the snapshot lifecycle must leave recovery exactly
+// where the journal/checkpoint state machine puts it, with every
+// reader-side structure forgotten.
+
+#[test]
+fn kill_during_reclaim_under_open_snapshot_replays_to_last_commit() {
+    use hpcstore::mongo::storage::RecordId;
+
+    let opts = manual(4);
+    let dir = LocalDir::temp("cm-mvcc-reclaim").unwrap();
+    let root = dir.describe();
+    let survivors: u64;
+    {
+        let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        let rids: Vec<RecordId> = eng.insert_many("metrics", &batch(0, 40)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap();
+        eng.insert_many("metrics", &batch(40, 20)).unwrap();
+        eng.sync().unwrap();
+
+        // A reader pins the 60-doc epoch, then the writer removes a
+        // synced range and reclaims. The pin holds the floor back, so
+        // the removed versions stay resident (IS1)...
+        let reader = eng.reader();
+        let snap = reader.snapshot();
+        for rid in rids.iter().take(10) {
+            eng.remove("metrics", *rid).unwrap();
+        }
+        eng.sync().unwrap();
+        survivors = eng.stats("metrics").docs;
+        let freed = eng.reclaim();
+        assert_eq!(freed, 0, "open snapshot must hold the reclaim floor");
+        assert!(eng.garbage_len() > 0, "the removed versions are pending reclaim");
+        {
+            let view = reader.view(&snap).unwrap();
+            assert_eq!(view.doc_count("metrics"), 60, "pinned epoch still sees 60");
+        }
+        // ... and the kill lands here: snapshot open, garbage queued,
+        // reclaim incomplete. Drop without checkpoint = kill.
+    }
+    let mut eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+    assert_eq!(
+        eng.stats("metrics").docs,
+        survivors,
+        "recovery must land on the last durable commit (the removes were synced)"
+    );
+    // All MVCC state died with the process: no pins survive a restart,
+    // nothing is left to reclaim, and a fresh snapshot sees the
+    // replayed live set.
+    assert_eq!(eng.snapshots_open(), 0, "snapshot pins must not survive a kill");
+    eng.reclaim();
+    assert_eq!(eng.garbage_len(), 0, "a recovered store starts garbage-free");
+    let reader = eng.reader();
+    let snap = reader.snapshot();
+    let view = reader.view(&snap).unwrap();
+    assert_eq!(view.doc_count("metrics"), survivors);
+}
+
+#[test]
+fn kill_mid_getmore_under_open_snapshot_drops_reader_state() {
+    use std::sync::{mpsc, Arc};
+
+    use hpcstore::mongo::query::FindOptions;
+    use hpcstore::mongo::server::{ReadContext, ReadRequest};
+
+    let opts = manual(4);
+    let dir = LocalDir::temp("cm-mvcc-getmore").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        eng.insert_many("metrics", &batch(0, 30)).unwrap();
+        eng.sync().unwrap();
+
+        // A cursor is mid-drain: find + one getMore served, the rest
+        // unfetched, its snapshot pinned in the read context.
+        let ctx = Arc::new(ReadContext::new(
+            eng.reader(),
+            Kernels::fallback(),
+            Registry::new(),
+            8,
+        ));
+        let (tx, rx) = mpsc::channel();
+        ctx.serve(ReadRequest::Find {
+            filter: Filter::True,
+            opts: FindOptions::default().batch_size(8),
+            reply: tx,
+        });
+        let first = rx.recv().unwrap().unwrap();
+        let cursor = first.cursor.expect("30 docs at batch 8 leaves a cursor");
+        let (tx, rx) = mpsc::channel();
+        ctx.serve(ReadRequest::GetMore { cursor, reply: tx });
+        rx.recv().unwrap().unwrap();
+        assert_eq!(ctx.open_cursors(), 1);
+        assert_eq!(eng.snapshots_open(), 1);
+
+        // The writer commits past the pinned epoch, then the kill
+        // lands before the next getMore: engine and reader state die
+        // together (ctx is dropped with the shard).
+        eng.insert_many("metrics", &batch(30, 10)).unwrap();
+        eng.sync().unwrap();
+    }
+    let mut eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+    assert_eq!(
+        eng.stats("metrics").docs,
+        40,
+        "recovery replays every synced commit, including those past the pinned epoch"
+    );
+    assert_eq!(eng.snapshots_open(), 0, "cursor pins must not survive a kill");
+    eng.reclaim();
+    assert_eq!(eng.garbage_len(), 0);
+
+    // A fresh read context over the recovered store serves the same
+    // query from scratch — the dead cursor is gone, not resumable.
+    let ctx = Arc::new(ReadContext::new(
+        eng.reader(),
+        Kernels::fallback(),
+        Registry::new(),
+        64,
+    ));
+    assert_eq!(ctx.open_cursors(), 0, "reader state starts empty after recovery");
+    let (tx, rx) = mpsc::channel();
+    ctx.serve(ReadRequest::Count { filter: Filter::True, reply: tx });
+    assert_eq!(rx.recv().unwrap().unwrap(), 40);
 }

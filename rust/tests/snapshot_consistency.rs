@@ -1,0 +1,358 @@
+//! MVCC snapshot-consistency battery — the concurrent-runtime seal.
+//!
+//! Two randomized differential harnesses (ARCHITECTURE.md §9.4), both
+//! seed-swept like `crash_fuzz`:
+//!
+//! * **Engine level** — reader threads pin snapshots and answer
+//!   queries while the writer ingests, removes, checkpoints, and
+//!   reclaims. Every concurrent answer is re-run *quiesced* through
+//!   the same pinned snapshot after the writer joins; the two answers
+//!   must be identical (IS1: with retention 0 an open snapshot's
+//!   versions survive any amount of writer churn).
+//! * **Reader-pool level** — the real `ReadContext`/`ReaderPool`
+//!   dispatch path serves canonical finds/counts while the writer
+//!   commits; results must be exact for the pinned epoch (bounded by
+//!   the commit counter at submit/reply time), duplicate-free, and a
+//!   cursor drained long after its `find` must stay frozen at its
+//!   snapshot instead of chasing the growing table.
+//!
+//! Knobs (documented in docs/EXPERIMENTS.md §6): `SNAPSHOT_FUZZ_SEEDS`
+//! is either a count ("32" sweeps seeds 0..32) or a comma list
+//! ("7,19" replays those seeds). Default: 8 seeds (CI crash job: 16).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use hpcstore::metrics::{names, Registry};
+use hpcstore::mongo::bson::{Document, Value};
+use hpcstore::mongo::query::{CmpOp, Filter, FindOptions};
+use hpcstore::mongo::server::{ReadContext, ReadRequest, ReaderPool};
+use hpcstore::mongo::storage::index::IndexSpec;
+use hpcstore::mongo::storage::{
+    Engine, EngineOptions, LocalDir, RecordId, ReadView, Snapshot, StoreReader,
+};
+use hpcstore::mongo::wire::WireError;
+use hpcstore::runtime::Kernels;
+use hpcstore::util::rng::Pcg32;
+
+type CountRx = mpsc::Receiver<Result<u64, WireError>>;
+
+fn seeds() -> Vec<u64> {
+    match std::env::var("SNAPSHOT_FUZZ_SEEDS") {
+        Ok(s) if s.contains(',') => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("SNAPSHOT_FUZZ_SEEDS: bad seed"))
+            .collect(),
+        Ok(s) => {
+            let n: u64 = s.trim().parse().expect("SNAPSHOT_FUZZ_SEEDS: bad count");
+            (0..n).collect()
+        }
+        Err(_) => (0..8).collect(),
+    }
+}
+
+fn doc(ts: i64, node: i64) -> Document {
+    Document::new().set("ts", ts).set("node_id", node).set("m0", ts as f64 * 0.5)
+}
+
+fn open_engine(tag: &str) -> Engine {
+    let dir = LocalDir::temp(tag).unwrap();
+    let mut eng = Engine::open_with(
+        Box::new(dir),
+        EngineOptions { journal: true, ..EngineOptions::default() },
+    )
+    .unwrap();
+    eng.create_collection("metrics");
+    eng.create_index("metrics", IndexSpec::compound(&["node_id", "ts"])).unwrap();
+    eng.create_index("metrics", IndexSpec::single("ts")).unwrap();
+    eng
+}
+
+/// Scan-and-filter at one view: (match count, ts checksum). Decodes
+/// every record so the answer is independent of any index state — the
+/// oracle side of the differential.
+fn scan_query(view: &ReadView<'_>, node: i64, lo: i64, hi: i64) -> (u64, i64) {
+    let mut count = 0u64;
+    let mut sum = 0i64;
+    for (_rid, bytes) in view.scan_raw_from("metrics", None) {
+        let d = Document::decode(bytes).expect("engine stores encoder output");
+        let ts = d.get("ts").and_then(Value::as_i64).unwrap();
+        let n = d.get("node_id").and_then(Value::as_i64).unwrap();
+        if n == node && ts >= lo && ts < hi {
+            count += 1;
+            sum += ts;
+        }
+    }
+    (count, sum)
+}
+
+/// One recorded concurrent read: the pinned snapshot, the query
+/// parameters, and the answer computed live.
+struct Recorded {
+    snap: Snapshot,
+    node: i64,
+    lo: i64,
+    hi: i64,
+    answer: (u64, i64),
+}
+
+fn reader_thread(
+    reader: StoreReader,
+    stop: Arc<AtomicBool>,
+    seed: u64,
+    stream: u64,
+) -> Vec<Recorded> {
+    let mut rng = Pcg32::new(seed ^ 0x9e37_79b9_7f4a_7c15, stream);
+    let mut out = Vec::new();
+    let mut queries = 0u32;
+    // Guarantee coverage even if the writer finishes first: every
+    // reader answers at least 16 queries before honoring `stop`.
+    while queries < 16 || !stop.load(Ordering::Relaxed) {
+        let snap = reader.snapshot();
+        let view = reader
+            .view(&snap)
+            .expect("retention 0: a just-pinned snapshot cannot be expired");
+        let node = rng.next_bounded(8) as i64;
+        let lo = rng.next_bounded(4_000) as i64;
+        let hi = lo + 1 + rng.next_bounded(4_000) as i64;
+        let answer = scan_query(&view, node, lo, hi);
+        // Two passes over one view must agree — a torn iterator here
+        // would mean the view observes concurrent mutation.
+        assert_eq!(
+            scan_query(&view, node, lo, hi),
+            answer,
+            "seed {seed}: two scans of one snapshot view disagree"
+        );
+        drop(view);
+        queries += 1;
+        if out.len() < 48 {
+            out.push(Recorded { snap, node, lo, hi, answer });
+        }
+        if queries >= 4096 {
+            break; // runaway guard if the writer stalls
+        }
+    }
+    out
+}
+
+/// Engine-level battery for one seed: concurrent answers must equal a
+/// quiesced re-run through the same pinned snapshot.
+fn engine_battery(seed: u64) {
+    let mut eng = open_engine(&format!("snapfuzz-{seed}"));
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..3)
+        .map(|r| {
+            let reader = eng.reader();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || reader_thread(reader, stop, seed, r + 1))
+        })
+        .collect();
+
+    // Writer: deterministic op stream. Unique, monotone timestamps so
+    // every document is distinguishable in checksums.
+    let mut rng = Pcg32::seeded(seed);
+    let mut next_ts = 0i64;
+    let mut live: Vec<RecordId> = Vec::new();
+    for _step in 0..150 {
+        match rng.next_bounded(10) {
+            0..=6 => {
+                let n = 1 + rng.next_bounded(24) as usize;
+                let batch: Vec<Document> = (0..n)
+                    .map(|_| {
+                        let d = doc(next_ts, rng.next_bounded(8) as i64);
+                        next_ts += 1;
+                        d
+                    })
+                    .collect();
+                live.extend(eng.insert_many("metrics", &batch).unwrap());
+            }
+            7 | 8 => {
+                for _ in 0..rng.next_bounded(8) {
+                    if live.is_empty() {
+                        break;
+                    }
+                    let i = rng.next_bounded(live.len() as u32) as usize;
+                    let rid = live.swap_remove(i);
+                    eng.remove("metrics", rid).unwrap();
+                }
+            }
+            _ => {
+                eng.checkpoint().unwrap();
+            }
+        }
+        eng.sync().unwrap();
+        eng.reclaim();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let recorded: Vec<Recorded> =
+        handles.into_iter().flat_map(|h| h.join().expect("reader thread")).collect();
+    assert!(!recorded.is_empty(), "seed {seed}: no concurrent reads recorded");
+
+    // Quiesced: the writer is done; every recorded snapshot is still
+    // pinned, so its epoch's versions must all have survived reclaim.
+    eng.reclaim();
+    let reader = eng.reader();
+    for r in &recorded {
+        let view = reader
+            .view(&r.snap)
+            .expect("retention 0: pinned snapshots never expire");
+        assert_eq!(view.at(), r.snap.at());
+        assert_eq!(
+            scan_query(&view, r.node, r.lo, r.hi),
+            r.answer,
+            "seed {seed}: quiesced re-run at epoch {} disagrees with the concurrent read",
+            r.snap.at(),
+        );
+    }
+
+    // Dropping the pins must let reclamation drain everything.
+    drop(recorded);
+    eng.reclaim();
+    assert_eq!(eng.snapshots_open(), 0, "seed {seed}: leaked snapshot pins");
+    assert_eq!(eng.garbage_len(), 0, "seed {seed}: unpinned garbage not reclaimed");
+}
+
+fn canonical_filter(nodes: &[i64], lo: i64, hi: i64) -> Filter {
+    Filter::And(vec![
+        Filter::is_in("node_id", nodes.iter().map(|&n| Value::Int(n)).collect()),
+        Filter::Cmp { field: "ts".into(), op: CmpOp::Gte, value: Value::Int(lo) },
+        Filter::Cmp { field: "ts".into(), op: CmpOp::Lt, value: Value::Int(hi) },
+    ])
+}
+
+/// Reader-pool battery for one seed: the real dispatch path under live
+/// ingest. Insert-only, so per-filter counts are monotone in the epoch
+/// and every reply can be sandwiched between the commit counter at
+/// submit and at receive.
+fn pool_battery(seed: u64) {
+    let mut eng = open_engine(&format!("snappool-{seed}"));
+    let metrics = Registry::new();
+    let ctx = Arc::new(ReadContext::new(
+        eng.reader(),
+        Kernels::fallback(),
+        metrics.clone(),
+        64,
+    ));
+    let pool = ReaderPool::start(Arc::clone(&ctx), 3, "snapfuzz");
+    let committed = Arc::new(AtomicU64::new(0));
+
+    let mut rng = Pcg32::seeded(seed ^ 0x5eed);
+    let mut next_ts = 0i64;
+    // In-flight counts: (reply receiver, lower bound at submit).
+    let mut counts: Vec<(CountRx, u64)> = Vec::new();
+    // One cursor opened early and drained only after the corpus has
+    // grown far past its snapshot.
+    let mut frozen: Option<(u64, usize, u64)> = None; // (cursor, first batch len, hi bound)
+    let all_nodes: Vec<i64> = (0..8).collect();
+
+    for step in 0..120 {
+        let n = 1 + rng.next_bounded(24) as usize;
+        let batch: Vec<Document> = (0..n)
+            .map(|_| {
+                let d = doc(next_ts, rng.next_bounded(8) as i64);
+                next_ts += 1;
+                d
+            })
+            .collect();
+        eng.insert_many("metrics", &batch).unwrap();
+        eng.sync().unwrap();
+        eng.reclaim();
+        committed.store(next_ts as u64, Ordering::SeqCst);
+
+        if step % 5 == 0 {
+            // Count over the whole corpus: the reply must equal the
+            // corpus size at some epoch between submit and receive.
+            let (tx, rx) = mpsc::channel();
+            let lo_bound = committed.load(Ordering::SeqCst);
+            pool.submit(ReadRequest::Count {
+                filter: canonical_filter(&all_nodes, 0, i64::MAX),
+                reply: tx,
+            });
+            counts.push((rx, lo_bound));
+        }
+        if step == 20 {
+            // Open the frozen cursor: small first batch, then let the
+            // writer run far ahead before draining.
+            let (tx, rx) = mpsc::channel();
+            let lo_bound = committed.load(Ordering::SeqCst);
+            pool.submit(ReadRequest::Find {
+                filter: canonical_filter(&all_nodes, 0, i64::MAX),
+                opts: FindOptions::default().batch_size(8),
+                reply: tx,
+            });
+            let reply = rx.recv().expect("pool dropped a find reply").expect("find failed");
+            let hi_bound = committed.load(Ordering::SeqCst);
+            assert!(lo_bound >= 8, "corpus too small for the frozen-cursor check");
+            let cursor = reply.cursor.expect("batch 8 over >8 docs must leave a cursor");
+            assert_eq!(reply.docs.len(), 8);
+            frozen = Some((cursor, reply.docs.len(), hi_bound));
+        }
+    }
+
+    // Collect the in-flight counts: each executed at one epoch between
+    // its submit bound and now, and the corpus only ever grew.
+    let final_count = committed.load(Ordering::SeqCst);
+    for (rx, lo_bound) in counts {
+        let got = rx.recv().expect("pool dropped a count reply").expect("count failed");
+        assert!(
+            got >= lo_bound && got <= final_count,
+            "seed {seed}: count {got} outside its epoch window [{lo_bound}, {final_count}]"
+        );
+    }
+
+    // Drain the frozen cursor: the writer has long since moved on, but
+    // the pinned snapshot must keep the result set at its epoch — no
+    // new documents (count ≤ hi bound), no duplicates, no losses
+    // (count ≥ lo bound implied by ts uniqueness + bound below).
+    let (cursor, first_len, hi_bound) = frozen.expect("step 20 always runs");
+    let mut seen = std::collections::HashSet::new();
+    let mut total = first_len as u64;
+    let mut cur = Some(cursor);
+    while let Some(c) = cur {
+        let (tx, rx) = mpsc::channel();
+        pool.submit(ReadRequest::GetMore { cursor: c, reply: tx });
+        let reply = rx.recv().expect("pool dropped a getMore reply").expect("getMore failed");
+        for d in &reply.docs {
+            let ts = d.get("ts").and_then(Value::as_i64).unwrap();
+            assert!(seen.insert(ts), "seed {seed}: document ts={ts} served twice");
+        }
+        total += reply.docs.len() as u64;
+        cur = reply.cursor;
+    }
+    assert!(
+        total <= hi_bound,
+        "seed {seed}: cursor returned {total} docs but only {hi_bound} existed when it \
+         pinned its snapshot — the drain chased the live table"
+    );
+    assert!(
+        total >= 8,
+        "seed {seed}: frozen cursor lost documents (drained {total})"
+    );
+    assert_eq!(ctx.open_cursors(), 0, "seed {seed}: drained cursor not closed");
+
+    assert!(
+        metrics.counter(names::SHARD_SNAPSHOT_READS).get() > 0,
+        "seed {seed}: pool reads did not count as snapshot reads"
+    );
+    pool.shutdown();
+    eng.reclaim();
+    assert_eq!(eng.snapshots_open(), 0, "seed {seed}: pool leaked snapshot pins");
+}
+
+#[test]
+fn concurrent_reads_match_quiesced_rerun_at_pinned_epoch() {
+    let seeds = seeds();
+    assert!(!seeds.is_empty(), "SNAPSHOT_FUZZ_SEEDS selected no seeds");
+    for seed in seeds {
+        engine_battery(seed);
+    }
+}
+
+#[test]
+fn reader_pool_serves_exact_frozen_results_under_live_ingest() {
+    let seeds = seeds();
+    assert!(!seeds.is_empty(), "SNAPSHOT_FUZZ_SEEDS selected no seeds");
+    for seed in seeds {
+        pool_battery(seed);
+    }
+}
