@@ -318,6 +318,48 @@ mod tests {
     }
 
     #[test]
+    fn crud_write_variants_pair_across_both_enum_files() {
+        // The CRUD write path added Update/Delete to *both* enum files
+        // (RouterRequest lives in router.rs, the second entry of
+        // ENUM_FILES) plus the migration's one-way ClearStaged push:
+        // variants must be collected from both files and their dispatch
+        // arms found wherever they live.
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/wire.rs",
+            "pub enum ShardRequest {\n    Update { filter: Filter, set: Document, reply: Reply<UpdateReply> },\n    Delete { filter: Filter, reply: Reply<DeleteReply> },\n    // lint: allow(no_reply, one-way staging cleanup after publish)\n    ClearStaged { range: (u64, u64) },\n}\n",
+        );
+        t.add(
+            "rust/src/mongo/server/router.rs",
+            "pub enum RouterRequest {\n    Update { filter: Filter, set: Document, reply: Reply<Result<UpdateReply, WireError>> },\n    Delete { filter: Filter, reply: Reply<Result<DeleteReply, WireError>> },\n}\nfn run(&mut self) { match req { RouterRequest::Update { filter, set, reply } => {} RouterRequest::Delete { filter, reply } => {} } }",
+        );
+        t.add(
+            "rust/src/mongo/server/shard.rs",
+            "fn run(&mut self) { match req { ShardRequest::Update { filter, set, reply } => {} ShardRequest::Delete { filter, reply } => {} ShardRequest::ClearStaged { range } => {} } }",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn undispatched_crud_variant_is_flagged() {
+        // Forgetting the shard-side arm for a freshly added write op is
+        // exactly the hang this rule exists for: the router would block
+        // on a reply channel nobody serves.
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/wire.rs",
+            "pub enum ShardRequest {\n    Update { set: Document, reply: Reply<UpdateReply> },\n    Delete { filter: Filter, reply: Reply<DeleteReply> },\n}\n",
+        );
+        t.add(
+            "rust/src/mongo/server/shard.rs",
+            "fn run(&mut self) { match req { ShardRequest::Update { set, reply } => {} } }",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("Delete") && v[0].message.contains("no dispatch arm"));
+    }
+
+    #[test]
     fn dispatch_in_test_code_does_not_count() {
         let t = tree(
             GOOD_WIRE,

@@ -29,10 +29,18 @@ pub mod names {
     pub const SHARD_FIND_NS: &str = "shard.find_ns";
     pub const SHARD_COUNT_NS: &str = "shard.count_ns";
     pub const SHARD_MIGRATE_BATCH_NS: &str = "shard.migrate_batch_ns";
+    pub const SHARD_UPDATE_NS: &str = "shard.update_ns";
+    pub const SHARD_DELETE_NS: &str = "shard.delete_ns";
     // -- shard server: ingest + storage lifecycle -----------------------
     pub const SHARD_GROUP_COMMITS: &str = "shard.group_commits";
     pub const SHARD_DOCS_INSERTED: &str = "shard.docs_inserted";
+    pub const SHARD_DOCS_UPDATED: &str = "shard.docs_updated";
+    pub const SHARD_DOCS_DELETED: &str = "shard.docs_deleted";
     pub const SHARD_STALE_VERSION: &str = "shard.stale_version";
+    /// Filter-driven writes rejected with `MigrationInFlight` because a
+    /// matched document sits in an active handoff range (the router
+    /// retries once the migration settles).
+    pub const SHARD_WRITE_CONFLICTS: &str = "shard.write_conflicts";
     /// Checkpoints this shard wrote. Incremented at THREE distinct
     /// trigger sites in `server/shard.rs`, deliberately: the admin
     /// `Checkpoint` command, the post-group-commit threshold hook
@@ -78,19 +86,34 @@ pub mod names {
     pub const SHARD_MIGRATION_DOCS_OUT: &str = "shard.migration_docs_out";
     pub const SHARD_MIGRATION_DOCS_PUBLISHED: &str = "shard.migration_docs_published";
     pub const SHARD_MIGRATION_ABORTS: &str = "shard.migration_aborts";
+    /// Live documents a read skipped because the shard's fence marked
+    /// them orphans of a published handoff (donor-side filtering).
+    pub const SHARD_ORPHANS_FILTERED: &str = "shard.orphans_filtered";
     // -- router ---------------------------------------------------------
     pub const ROUTER_INSERT_MANY_NS: &str = "router.insert_many_ns";
     pub const ROUTER_FIND_NS: &str = "router.find_ns";
+    pub const ROUTER_UPDATE_NS: &str = "router.update_ns";
+    pub const ROUTER_DELETE_NS: &str = "router.delete_ns";
     pub const ROUTER_FLUSH_NS: &str = "router.flush_ns";
     pub const ROUTER_INGEST_FLUSHES: &str = "router.ingest_flushes";
     pub const ROUTER_INGEST_FLUSH_DOCS: &str = "router.ingest_flush_docs";
     pub const ROUTER_MAP_REFRESH: &str = "router.map_refresh";
     pub const ROUTER_STALE_RETRIES: &str = "router.stale_retries";
+    /// Filter-driven writes re-scattered after a `MigrationInFlight`
+    /// rejection (per blocked shard per pass).
+    pub const ROUTER_WRITE_BLOCKED_RETRIES: &str = "router.write_blocked_retries";
+    /// Count scatters repeated because the per-shard replies carried
+    /// different chunk-map versions (version-uniform count retry).
+    pub const ROUTER_COUNT_RETRIES: &str = "router.count_retries";
+    /// Documents the router dropped from a find because its map marked
+    /// them orphans of a published handoff on the sending shard.
+    pub const ROUTER_ORPHANS_FILTERED: &str = "router.orphans_filtered";
     // -- config server --------------------------------------------------
     pub const CONFIG_GET_MAP: &str = "config.get_map";
     pub const CONFIG_REPORT_SPLIT: &str = "config.report_split";
     pub const CONFIG_SPLITS: &str = "config.splits";
     pub const CONFIG_MIGRATION_FLIPS: &str = "config.migration_flips";
+    pub const CONFIG_MIGRATION_PUBLISHES: &str = "config.migration_publishes";
     pub const CONFIG_MIGRATIONS: &str = "config.migrations";
     pub const CONFIG_MIGRATION_ABORTS: &str = "config.migration_aborts";
     // -- cluster coordinator (balancer / migration driver) --------------
@@ -109,9 +132,14 @@ pub mod names {
         (SHARD_FIND_NS, "histogram"),
         (SHARD_COUNT_NS, "histogram"),
         (SHARD_MIGRATE_BATCH_NS, "histogram"),
+        (SHARD_UPDATE_NS, "histogram"),
+        (SHARD_DELETE_NS, "histogram"),
         (SHARD_GROUP_COMMITS, "counter"),
         (SHARD_DOCS_INSERTED, "counter"),
+        (SHARD_DOCS_UPDATED, "counter"),
+        (SHARD_DOCS_DELETED, "counter"),
         (SHARD_STALE_VERSION, "counter"),
+        (SHARD_WRITE_CONFLICTS, "counter"),
         (SHARD_CHECKPOINTS, "counter"),
         (SHARD_REBASES, "counter"),
         (SHARD_DELTA_BYTES, "counter"),
@@ -139,17 +167,24 @@ pub mod names {
         (SHARD_MIGRATION_DOCS_OUT, "counter"),
         (SHARD_MIGRATION_DOCS_PUBLISHED, "counter"),
         (SHARD_MIGRATION_ABORTS, "counter"),
+        (SHARD_ORPHANS_FILTERED, "counter"),
         (ROUTER_INSERT_MANY_NS, "histogram"),
         (ROUTER_FIND_NS, "histogram"),
+        (ROUTER_UPDATE_NS, "histogram"),
+        (ROUTER_DELETE_NS, "histogram"),
         (ROUTER_FLUSH_NS, "histogram"),
         (ROUTER_INGEST_FLUSHES, "counter"),
         (ROUTER_INGEST_FLUSH_DOCS, "counter"),
         (ROUTER_MAP_REFRESH, "counter"),
         (ROUTER_STALE_RETRIES, "counter"),
+        (ROUTER_WRITE_BLOCKED_RETRIES, "counter"),
+        (ROUTER_COUNT_RETRIES, "counter"),
+        (ROUTER_ORPHANS_FILTERED, "counter"),
         (CONFIG_GET_MAP, "counter"),
         (CONFIG_REPORT_SPLIT, "counter"),
         (CONFIG_SPLITS, "counter"),
         (CONFIG_MIGRATION_FLIPS, "counter"),
+        (CONFIG_MIGRATION_PUBLISHES, "counter"),
         (CONFIG_MIGRATIONS, "counter"),
         (CONFIG_MIGRATION_ABORTS, "counter"),
         (CLUSTER_MIGRATIONS_FAILED, "counter"),

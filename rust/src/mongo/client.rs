@@ -15,7 +15,7 @@ use crate::mongo::bson::Document;
 use crate::mongo::query::{Filter, FindOptions};
 use crate::mongo::server::router::{InsertManyReply, RouterMailbox, RouterRequest};
 use crate::mongo::storage::index::IndexSpec;
-use crate::mongo::wire::{rpc, WireError};
+use crate::mongo::wire::{rpc, DeleteReply, UpdateReply, WireError};
 
 /// Thread-safe, cloneable client handle.
 #[derive(Clone)]
@@ -96,6 +96,18 @@ impl MongoClient {
         Ok(n as usize)
     }
 
+    /// `updateMany(filter, {$set: set})`: top-level field merge on every
+    /// matching document, cluster-wide. Shard-key fields (`node_id`,
+    /// `ts`) are immutable — updates naming them are rejected.
+    pub fn update_many(&self, filter: Filter, set: Document) -> Result<UpdateReply, WireError> {
+        rpc(self.pick(), |reply| RouterRequest::Update { filter, set, reply })?
+    }
+
+    /// `deleteMany(filter)`: remove every matching document, cluster-wide.
+    pub fn delete_many(&self, filter: Filter) -> Result<DeleteReply, WireError> {
+        rpc(self.pick(), |reply| RouterRequest::Delete { filter, reply })?
+    }
+
     /// `createIndex` on every shard (idempotent).
     pub fn create_index(&self, spec: IndexSpec) -> Result<(), WireError> {
         rpc(self.pick(), |reply| RouterRequest::CreateIndex { spec, reply })?
@@ -163,6 +175,32 @@ impl BulkWriter {
     pub fn finish(mut self) -> Result<InsertManyReply, WireError> {
         self.flush()?;
         Ok(InsertManyReply { inserted: self.inserted, rerouted: self.rerouted })
+    }
+}
+
+impl Drop for BulkWriter {
+    /// Dropping a part-full writer flushes the tail instead of silently
+    /// losing it — a run script that returns early (or unwinds) must
+    /// not leave its last sub-batch-size of documents client-side.
+    /// Best-effort: a flush failure here is reported on stderr, never a
+    /// panic (drop can run during unwinding, where a second panic
+    /// aborts). [`BulkWriter::finish`] remains the right way to end a
+    /// writer — it surfaces the error and the totals.
+    fn drop(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let tail = self.buf.len();
+        match self.flush() {
+            Ok(()) => eprintln!(
+                "BulkWriter dropped with {tail} buffered document(s); flushed implicitly \
+                 (use finish() to observe totals)"
+            ),
+            Err(e) => eprintln!(
+                "BulkWriter dropped with {tail} buffered document(s) and the implicit \
+                 flush failed: {e}"
+            ),
+        }
     }
 }
 

@@ -99,10 +99,16 @@ impl ConfigServer {
                     let _ = reply.send(r);
                 }
                 ConfigRequest::BeginMigration { chunk, to, reply } => {
+                    // Begin records the handoff (version bump): push the
+                    // map before replying so every shard knows the range
+                    // has copies in motion before any data streams.
                     let r = self
                         .state
                         .begin_migration(chunk, to)
                         .map_err(|e| WireError::Server(e.to_string()));
+                    if r.is_ok() {
+                        self.push_map();
+                    }
                     let _ = reply.send(r);
                 }
                 ConfigRequest::CommitMigration { reply } => {
@@ -127,7 +133,24 @@ impl ConfigServer {
                         .map_err(|e| WireError::Server(e.to_string()));
                     let _ = reply.send(r);
                 }
+                ConfigRequest::PublishMigration { reply } => {
+                    // The orphan instant: from this version on the
+                    // donor's copies of the range are duplicates. Push
+                    // before replying — the coordinator's source delete
+                    // is therefore ordered after SetMap in the donor's
+                    // mailbox, so the donor filters before it deletes.
+                    let r = self
+                        .state
+                        .publish_migration()
+                        .map_err(|e| WireError::Server(e.to_string()));
+                    if r.is_ok() {
+                        self.metrics.counter(names::CONFIG_MIGRATION_PUBLISHES).inc();
+                        self.push_map();
+                    }
+                    let _ = reply.send(r);
+                }
                 ConfigRequest::FinishMigration { reply } => {
+                    let before = self.state.version();
                     let r = self
                         .state
                         .finish_migration()
@@ -135,6 +158,10 @@ impl ConfigServer {
                     if r.is_ok() {
                         self.migrations_done += 1;
                         self.metrics.counter(names::CONFIG_MIGRATIONS).inc();
+                        if self.state.version() != before {
+                            // Finishing dropped the handoff: re-push.
+                            self.push_map();
+                        }
                     }
                     let _ = reply.send(r);
                 }

@@ -32,9 +32,10 @@ use std::time::Instant;
 use crate::metrics::{names, Registry};
 use crate::mongo::bson::{Document, RawDoc, Value};
 use crate::mongo::query::{Filter, FindOptions, SortDir};
+use crate::mongo::sharding::chunk::ShardKey;
 use crate::mongo::storage::index::{encode_key, EncodedRange, Index};
 use crate::mongo::storage::{ReadView, RecordId, Snapshot, SnapshotExpired, StoreReader};
-use crate::mongo::wire::{FindReply, Reply, WireError};
+use crate::mongo::wire::{CountReply, FindReply, Reply, WireError};
 use crate::runtime::Kernels;
 
 use super::shard::COLLECTION;
@@ -64,8 +65,65 @@ pub enum ReadRequest {
     },
     Count {
         filter: Filter,
-        reply: Reply<Result<u64, WireError>>,
+        reply: Reply<Result<CountReply, WireError>>,
     },
+}
+
+/// Orphan fence: what this shard's readers must *not* serve while a
+/// chunk migration's copies are in motion (docs/ARCHITECTURE.md §6.3).
+/// The shard event loop updates the shared fence when it processes a
+/// `SetMap` or publishes a staged chunk; every read copies the fence
+/// *before* pinning its snapshot (so a fence naming a published handoff
+/// is always paired with a snapshot that already contains the published
+/// documents) and a cursor freezes its copy for its whole drain.
+///
+/// Both filters default to `None` — the fence costs two `Option` checks
+/// per request outside migration windows.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReadFence {
+    /// Chunk-map version the fence reflects; `Count` replies carry it
+    /// so the router can insist on a version-uniform scatter.
+    pub version: u64,
+    /// Shard key for position extraction (present iff `exclude_range`
+    /// is).
+    pub key: Option<ShardKey>,
+    /// Donor-side orphan filter: the map shows a *published* handoff
+    /// naming this shard as donor — live documents whose shard-key
+    /// position falls in this inclusive range are duplicates of the
+    /// destination's published copies and must be dropped.
+    pub exclude_range: Option<(u64, u64)>,
+    /// Destination-side mask: the contiguous record-id run a
+    /// `PublishStaged` made live *before* this shard processed the map
+    /// version that marks the handoff published. Until that map
+    /// arrives, the donor's copies are still what the cluster counts —
+    /// serving these rids too would double-count the range.
+    pub mask_rids: Option<(RecordId, RecordId)>,
+}
+
+impl ReadFence {
+    #[inline]
+    fn active(&self) -> bool {
+        self.exclude_range.is_some() || self.mask_rids.is_some()
+    }
+
+    /// Must `rid` (with record bytes `raw`) be hidden from this read?
+    fn excludes(&self, rid: RecordId, raw: &[u8]) -> bool {
+        if let Some((lo, hi)) = self.mask_rids {
+            if lo <= rid && rid <= hi {
+                return true;
+            }
+        }
+        if let (Some(key), Some((lo, hi))) = (self.key.as_ref(), self.exclude_range) {
+            let d = RawDoc::new(raw);
+            if let (Some(node), Some(ts)) = (d.get_i64("node_id"), d.get_i64("ts")) {
+                let pos = key.position(node as u32, ts as u32);
+                if lo <= pos && pos <= hi {
+                    return true;
+                }
+            }
+        }
+        false
+    }
 }
 
 /// One access path chosen by the planner.
@@ -90,6 +148,8 @@ struct ScanCursor {
     plan: ScanPlan,
     /// Residual filter, evaluated raw per candidate.
     filter: Filter,
+    /// Orphan fence frozen when the scan was built (migration windows).
+    fence: ReadFence,
     /// Current range within an `Index` plan.
     range_idx: usize,
     /// Last fully consumed key (`Index` plans) — the resume point.
@@ -102,17 +162,20 @@ struct ScanCursor {
     pending: VecDeque<RecordId>,
     /// The underlying scan is exhausted (pending may still hold rids).
     done: bool,
-    /// Candidates examined / matched since the last metrics flush —
-    /// batched locally so the hot loop takes no registry locks.
+    /// Candidates examined / matched / fence-dropped since the last
+    /// metrics flush — batched locally so the hot loop takes no
+    /// registry locks.
     seen: u64,
     matched: u64,
+    orphans: u64,
 }
 
 impl ScanCursor {
-    fn new(plan: ScanPlan, filter: Filter) -> Self {
+    fn new(plan: ScanPlan, filter: Filter, fence: ReadFence) -> Self {
         Self {
             plan,
             filter,
+            fence,
             range_idx: 0,
             after_key: None,
             after_rid: None,
@@ -121,6 +184,7 @@ impl ScanCursor {
             done: false,
             seen: 0,
             matched: 0,
+            orphans: 0,
         }
     }
 }
@@ -251,6 +315,9 @@ pub struct ReadContext {
     default_batch: usize,
     cursors: Mutex<HashMap<u64, CursorEntry>>,
     next_cursor: AtomicU64,
+    /// Shared orphan fence (see [`ReadFence`]); written by the shard
+    /// event loop, copied by every read before it pins its snapshot.
+    fence: Mutex<ReadFence>,
 }
 
 impl ReadContext {
@@ -267,12 +334,26 @@ impl ReadContext {
             default_batch,
             cursors: Mutex::new(HashMap::new()),
             next_cursor: AtomicU64::new(1),
+            fence: Mutex::new(ReadFence::default()),
         }
     }
 
     /// Cursors currently open (each pins one snapshot).
     pub fn open_cursors(&self) -> usize {
         locked(&self.cursors).len()
+    }
+
+    /// Replace the orphan fence (shard event loop, on `SetMap` or a
+    /// staged-chunk publish). Reads started after this call observe the
+    /// new fence; cursors already open keep their frozen copy, which is
+    /// consistent with their frozen snapshot.
+    pub fn set_fence(&self, fence: ReadFence) {
+        *locked(&self.fence) = fence;
+    }
+
+    /// Copy of the current fence.
+    pub fn fence(&self) -> ReadFence {
+        *locked(&self.fence)
     }
 
     /// Execute one read request and answer its reply channel. Called by
@@ -307,13 +388,18 @@ impl ReadContext {
         opts: &FindOptions,
     ) -> Result<FindReply, WireError> {
         self.metrics.counter(names::SHARD_SNAPSHOT_READS).inc();
+        // Fence before snapshot: if the fence names a published
+        // handoff, the publish committed before the fence was set, so
+        // the snapshot pinned *after* the copy already contains the
+        // published documents the fence's filtering presumes.
+        let fence = self.fence();
         let snap = self.reader.snapshot();
         // A freshly pinned snapshot sits at the committed epoch; it can
         // only be below the floor if the writer advanced retention-many
         // epochs between the pin and this view — handled like any other
         // expiry: clean retryable error.
         let view = self.reader.view(&snap).map_err(expired)?;
-        let src = self.plan_source(&view, filter, opts)?;
+        let src = self.plan_source(&view, filter, opts, fence)?;
         let batch = opts.batch_size.unwrap_or(self.default_batch);
         let mut cur = CursorState {
             src,
@@ -361,8 +447,12 @@ impl ReadContext {
     /// canonical shape runs the kernel over raw-extracted columns; any
     /// other filter streams the plan through the raw matcher — counting
     /// decodes nothing at all.
-    pub fn handle_count(&self, filter: &Filter) -> Result<u64, WireError> {
+    pub fn handle_count(&self, filter: &Filter) -> Result<CountReply, WireError> {
         self.metrics.counter(names::SHARD_SNAPSHOT_READS).inc();
+        // Fence before snapshot — same ordering argument as in
+        // [`Self::handle_find`]. The fence's map version travels in the
+        // reply for the router's uniform-version retry.
+        let fence = self.fence();
         let snap = self.reader.snapshot();
         let view = self.reader.view(&snap).map_err(expired)?;
         // Counts examine candidates exactly like finds do, so both
@@ -376,18 +466,19 @@ impl ReadContext {
                 self.metrics
                     .counter(names::SHARD_FIND_CANDIDATES)
                     .add(candidates.len() as u64);
-                let n = self.kernel_filter(&view, &candidates, lo, hi, &nodes)?.len() as u64;
+                let n =
+                    self.kernel_filter(&view, &candidates, lo, hi, &nodes, &fence)?.len() as u64;
                 self.metrics.counter(names::SHARD_FIND_MATCHES).add(n);
-                return Ok(n);
+                return Ok(CountReply { n, version: fence.version });
             }
         }
-        let mut scan = ScanCursor::new(self.plan_scan(&view, filter), filter.clone());
+        let mut scan = ScanCursor::new(self.plan_scan(&view, filter), filter.clone(), fence);
         let mut n = 0u64;
         while self.next_scan_match(&view, &mut scan).is_some() {
             n += 1;
         }
         self.flush_scan_metrics(&mut scan);
-        Ok(n)
+        Ok(CountReply { n, version: fence.version })
     }
 
     /// Build the cursor source for a find: the index-ordered sort path,
@@ -397,6 +488,7 @@ impl ReadContext {
         view: &ReadView<'_>,
         filter: &Filter,
         opts: &FindOptions,
+        fence: ReadFence,
     ) -> Result<CursorSource, WireError> {
         if let Some((field, dir)) = &opts.sort {
             // Index-ordered sort: a single-field index on the sort field
@@ -422,11 +514,12 @@ impl ReadContext {
                         rev: *dir == SortDir::Desc,
                     },
                     filter.clone(),
+                    fence,
                 )));
             }
             // Sort field not indexed: drain the unsorted plan, decoding
             // each match exactly once, sort in memory, serve from there.
-            return self.sorted_fallback(view, filter, opts, field, *dir);
+            return self.sorted_fallback(view, filter, opts, field, *dir, fence);
         }
         // Kernel fast path for the canonical shape over planned
         // candidates — columns extracted raw, no document materialized.
@@ -439,7 +532,7 @@ impl ReadContext {
                 self.metrics
                     .counter(names::SHARD_FIND_CANDIDATES)
                     .add(candidates.len() as u64);
-                let rids = self.kernel_filter(view, &candidates, lo, hi, &nodes)?;
+                let rids = self.kernel_filter(view, &candidates, lo, hi, &nodes, &fence)?;
                 self.metrics.counter(names::SHARD_FIND_MATCHES).add(rids.len() as u64);
                 return Ok(CursorSource::Rids { rids, pos: 0 });
             }
@@ -449,6 +542,7 @@ impl ReadContext {
         Ok(CursorSource::Scan(ScanCursor::new(
             self.plan_scan(view, filter),
             filter.clone(),
+            fence,
         )))
     }
 
@@ -585,9 +679,11 @@ impl ReadContext {
     /// Drain a plan into a candidate rid vector (the kernel path wants
     /// whole columns).
     fn drain_plan(&self, view: &ReadView<'_>, plan: ScanPlan) -> Vec<RecordId> {
+        // Candidates are not fence-filtered here: the kernel path that
+        // consumes them applies the fence in `kernel_filter`.
         let mut scan = match plan {
             ScanPlan::Rids(rids) => return rids,
-            plan => ScanCursor::new(plan, Filter::True),
+            plan => ScanCursor::new(plan, Filter::True, ReadFence::default()),
         };
         let mut out = Vec::new();
         loop {
@@ -609,18 +705,28 @@ impl ReadContext {
         lo: u32,
         hi: u32,
         nodes: &[u32],
+        fence: &ReadFence,
     ) -> Result<Vec<RecordId>, WireError> {
         let words = self.kernels.shapes().filter_w;
+        let fence_on = fence.active();
+        let mut orphans = 0u64;
         let mut ts_col = Vec::with_capacity(candidates.len());
         let mut node_col = Vec::with_capacity(candidates.len());
         let mut rids = Vec::with_capacity(candidates.len());
         for &rid in candidates {
             if let Some(raw) = view.fetch_raw(COLLECTION, rid) {
+                if fence_on && fence.excludes(rid, raw) {
+                    orphans += 1;
+                    continue;
+                }
                 let d = RawDoc::new(raw);
                 ts_col.push(d.get_i64("ts").unwrap_or(-1).max(0) as u32);
                 node_col.push(d.get_i64("node_id").unwrap_or(0).max(0) as u32);
                 rids.push(rid);
             }
+        }
+        if orphans > 0 {
+            self.metrics.counter(names::SHARD_ORPHANS_FILTERED).add(orphans);
         }
         let bitmap = crate::runtime::fallback::build_bitmap(nodes.iter().copied(), words);
         let out = self
@@ -645,8 +751,9 @@ impl ReadContext {
         opts: &FindOptions,
         field: &str,
         dir: SortDir,
+        fence: ReadFence,
     ) -> Result<CursorSource, WireError> {
-        let mut scan = ScanCursor::new(self.plan_scan(view, filter), filter.clone());
+        let mut scan = ScanCursor::new(self.plan_scan(view, filter), filter.clone(), fence);
         let mut docs: Vec<Document> = Vec::new();
         while let Some((_, raw)) = self.next_scan_match(view, &mut scan) {
             docs.push(
@@ -693,12 +800,17 @@ impl ReadContext {
         view: &'v ReadView<'_>,
         scan: &mut ScanCursor,
     ) -> Option<(RecordId, &'v [u8])> {
+        let fence_on = scan.fence.active();
         loop {
             while let Some(rid) = scan.pending.pop_front() {
                 scan.seen += 1;
                 let Some(raw) = view.fetch_raw(COLLECTION, rid) else {
                     continue;
                 };
+                if fence_on && scan.fence.excludes(rid, raw) {
+                    scan.orphans += 1;
+                    continue;
+                }
                 if scan.filter.matches_raw(&RawDoc::new(raw)) {
                     scan.matched += 1;
                     return Some((rid, raw));
@@ -771,6 +883,10 @@ impl ReadContext {
         if scan.matched > 0 {
             self.metrics.counter(names::SHARD_FIND_MATCHES).add(scan.matched);
             scan.matched = 0;
+        }
+        if scan.orphans > 0 {
+            self.metrics.counter(names::SHARD_ORPHANS_FILTERED).add(scan.orphans);
+            scan.orphans = 0;
         }
     }
 
@@ -1038,7 +1154,7 @@ mod tests {
         pool.shutdown();
         for (find_rx, count_rx) in rxs {
             match count_rx {
-                Some(rx) => assert_eq!(rx.recv().unwrap().unwrap(), 64),
+                Some(rx) => assert_eq!(rx.recv().unwrap().unwrap().n, 64),
                 None => assert_eq!(find_rx.recv().unwrap().unwrap().docs.len(), 64),
             }
         }

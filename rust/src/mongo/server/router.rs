@@ -21,10 +21,10 @@ use std::time::{Duration, Instant};
 use crate::config::ShardKeyKind;
 use crate::mongo::bson::{Document, Value};
 use crate::mongo::query::{Filter, FindOptions, SortDir};
-use crate::mongo::sharding::chunk::ChunkMap;
+use crate::mongo::sharding::chunk::{ChunkMap, ShardKey};
 use crate::mongo::wire::{
-    batch_wire_bytes, find_wire_bytes, rpc, ConfigRequest, FindReply, Reply, ShardRequest,
-    WireError,
+    batch_wire_bytes, find_wire_bytes, rpc, ConfigRequest, DeleteReply, FindReply, Reply,
+    ShardRequest, UpdateReply, WireError,
 };
 use crate::metrics::{names, Registry};
 use crate::runtime::Kernels;
@@ -75,10 +75,25 @@ pub enum RouterRequest {
         cursor: u64,
         reply: Reply<Result<FindReply, WireError>>,
     },
-    /// Cluster-wide count: scatter to all shards, sum.
+    /// Cluster-wide count: scatter to all shards, sum — retried until
+    /// every shard answered under the same chunk-map version, so the
+    /// per-shard counts compose exactly even mid-migration.
     Count {
         filter: Filter,
         reply: Reply<Result<u64, WireError>>,
+    },
+    /// Filter-driven cluster-wide update (`$set`-style top-level field
+    /// merge). Targeted to the owner set when the filter pins the shard
+    /// key, broadcast otherwise.
+    Update {
+        filter: Filter,
+        set: Document,
+        reply: Reply<Result<UpdateReply, WireError>>,
+    },
+    /// Filter-driven cluster-wide delete.
+    Delete {
+        filter: Filter,
+        reply: Reply<Result<DeleteReply, WireError>>,
     },
     CreateIndex {
         spec: crate::mongo::storage::index::IndexSpec,
@@ -101,6 +116,12 @@ struct ShardStream {
     shard: usize,
     cursor: Option<u64>,
     buf: VecDeque<Document>,
+    /// Set when, at scatter time, the router's map said this shard is
+    /// the donor of a *published* migration handoff: documents in the
+    /// range are orphans (the destination's copy is live) and every
+    /// batch this stream pulls — first reply and GetMores alike — is
+    /// filtered through it.
+    orphan_fence: Option<(ShardKey, (u64, u64))>,
 }
 
 struct RouterCursor {
@@ -264,6 +285,24 @@ impl Router {
                 RouterRequest::Count { filter, reply } => {
                     self.flush_ingest();
                     let _ = reply.send(self.handle_count(filter));
+                }
+                RouterRequest::Update { filter, set, reply } => {
+                    // Read-your-writes for the filter: buffered inserts
+                    // must be visible to the update's match.
+                    self.flush_ingest();
+                    let t = Instant::now();
+                    let r = self.handle_update(filter, set);
+                    self.metrics
+                        .observe(names::ROUTER_UPDATE_NS, t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
+                }
+                RouterRequest::Delete { filter, reply } => {
+                    self.flush_ingest();
+                    let t = Instant::now();
+                    let r = self.handle_delete(filter);
+                    self.metrics
+                        .observe(names::ROUTER_DELETE_NS, t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
                 }
                 RouterRequest::CreateIndex { spec, reply } => {
                     self.flush_ingest();
@@ -472,11 +511,24 @@ impl Router {
             let rep = rx
                 .recv()
                 .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
-            if !rep.docs.is_empty() || rep.cursor.is_some() {
+            // Donor of a published handoff: its leftover copies of the
+            // range are orphans. The shard's own read fence drops them
+            // once its SetMap lands; this router-side fence covers the
+            // gap where the router already knows and the donor does not.
+            let orphan_fence = match self.map.handoff {
+                Some(h) if h.published && h.from.index() == s => Some((self.map.key, h.range)),
+                _ => None,
+            };
+            let mut docs = rep.docs;
+            if let Some((key, range)) = orphan_fence {
+                drop_orphans(&mut docs, key, range, &self.metrics);
+            }
+            if !docs.is_empty() || rep.cursor.is_some() {
                 cur.streams.push(ShardStream {
                     shard: s,
                     cursor: rep.cursor,
-                    buf: rep.docs.into(),
+                    buf: docs.into(),
+                    orphan_fence,
                 });
             }
         }
@@ -491,24 +543,209 @@ impl Router {
         }
     }
 
+    /// Cluster-wide count with a **version-uniform scatter**. Every
+    /// shard's reply carries the chunk-map version it served under;
+    /// per-shard counts only compose exactly when those versions agree
+    /// (under one map, the donor-side fence and the destination's
+    /// publish mask partition a migrating range between exactly the
+    /// shards that map says hold it — see ARCHITECTURE.md §6.3). On
+    /// disagreement — a SetMap push caught mid-broadcast — the scatter
+    /// is simply retried; the skew window is one mailbox drain long.
     fn handle_count(&mut self, filter: Filter) -> Result<u64, WireError> {
         self.finds += 1;
-        self.wire_bytes_out += find_wire_bytes(&filter) * self.shards.len() as u64;
-        let mut rxs = Vec::with_capacity(self.shards.len());
-        for (s, shard) in self.shards.iter().enumerate() {
-            let (tx, rx) = mpsc::channel();
-            shard
-                .send(ShardRequest::Count { filter: filter.clone(), reply: tx })
-                .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
-            rxs.push((s, rx));
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let mut attempt = 0u32;
+        loop {
+            if attempt > 0 {
+                self.metrics.counter(names::ROUTER_COUNT_RETRIES).inc();
+                if attempt > 8 {
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                self.refresh_map();
+            }
+            attempt += 1;
+            self.wire_bytes_out += find_wire_bytes(&filter) * self.shards.len() as u64;
+            let mut rxs = Vec::with_capacity(self.shards.len());
+            for (s, shard) in self.shards.iter().enumerate() {
+                let (tx, rx) = mpsc::channel();
+                shard
+                    .send(ShardRequest::Count { filter: filter.clone(), reply: tx })
+                    .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
+                rxs.push((s, rx));
+            }
+            let mut total = 0u64;
+            let mut versions = Vec::with_capacity(self.shards.len());
+            for (s, rx) in rxs {
+                let rep = rx
+                    .recv()
+                    .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
+                total += rep.n;
+                versions.push(rep.version);
+            }
+            if versions.windows(2).all(|w| w[0] == w[1]) {
+                return Ok(total);
+            }
+            if Instant::now() >= deadline {
+                return Err(WireError::Server(
+                    "count: shards would not converge on one chunk-map version".into(),
+                ));
+            }
         }
-        let mut total = 0u64;
-        for (s, rx) in rxs {
-            total += rx
-                .recv()
-                .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
+    }
+
+    /// Shards a filter-driven write must visit: a superset of the
+    /// shards holding matching documents under the router's map.
+    /// Broadcast is always correct; the fast path prunes to the owner
+    /// set when the filter pins the shard key. With a handoff in
+    /// flight the answer is always broadcast — two shards hold copies
+    /// of the range and the donor-side fence arbitrates.
+    fn target_shards(&self, filter: &Filter) -> Vec<usize> {
+        let all: Vec<usize> = (0..self.shards.len()).collect();
+        if self.map.handoff.is_some() {
+            return all;
         }
-        Ok(total)
+        let Some(nodes) = exact_node_pins(filter) else { return all };
+        let mut hit = vec![false; self.shards.len()];
+        match self.map.key.kind {
+            ShardKeyKind::Hashed => {
+                // Hashed positions scatter (node, ts) pairs across the
+                // ring, so only a fully pinned key routes.
+                let Some(ts) = exact_int(filter, "ts") else { return all };
+                for node in nodes {
+                    hit[self.map.owner_of(self.map.key.position(node, ts)).index()] = true;
+                }
+            }
+            ShardKeyKind::Ranged => {
+                // Ranged positions are (node << 32) | ts: each node's
+                // ts window is one contiguous position interval. The
+                // bounds are widened to inclusive (a $lt hi keeps hi) —
+                // targeting only ever needs a superset.
+                let (ts_lo, ts_hi) = ts_bounds(filter);
+                for node in nodes {
+                    let lo = self.map.chunk_of(self.map.key.position(node, ts_lo));
+                    let hi = self.map.chunk_of(self.map.key.position(node, ts_hi));
+                    for c in lo..=hi {
+                        hit[self.map.owners[c].index()] = true;
+                    }
+                }
+            }
+        }
+        let picked: Vec<usize> =
+            (0..self.shards.len()).filter(|&s| hit[s]).collect();
+        if picked.is_empty() { all } else { picked }
+    }
+
+    /// Scatter a filter-driven write to its target shards, retrying
+    /// per-shard rejections until the map settles. Shards that already
+    /// applied the write are never re-sent to (`done`), so each shard
+    /// applies the batch at most once; `StaleVersion` and
+    /// `MigrationInFlight` rejections happen *before* any mutation, so
+    /// retrying them cannot double-apply.
+    fn scatter_write<R, F>(
+        &mut self,
+        filter: &Filter,
+        request: F,
+        mut merge: impl FnMut(R),
+    ) -> Result<(), WireError>
+    where
+        F: Fn(u64, Reply<Result<R, WireError>>) -> ShardRequest,
+        R: Send + 'static,
+    {
+        let mut done = vec![false; self.shards.len()];
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            // Recompute targets each pass: a migration finishing
+            // between passes can move matching documents to a shard
+            // the previous owner set did not include.
+            let targets: Vec<usize> = self
+                .target_shards(filter)
+                .into_iter()
+                .filter(|&s| !done[s])
+                .collect();
+            if targets.is_empty() {
+                return Ok(());
+            }
+            let mut rxs = Vec::with_capacity(targets.len());
+            for &s in &targets {
+                self.wire_bytes_out += find_wire_bytes(filter);
+                let (tx, rx) = mpsc::channel();
+                self.shards[s]
+                    .send(request(self.map.version, tx))
+                    .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
+                rxs.push((s, rx));
+            }
+            let mut blocked = false;
+            let mut pending = false;
+            for (s, rx) in rxs {
+                let r = rx
+                    .recv()
+                    .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))?;
+                match r {
+                    Ok(rep) => {
+                        done[s] = true;
+                        merge(rep);
+                    }
+                    Err(WireError::StaleVersion { .. }) => {
+                        self.metrics.counter(names::ROUTER_STALE_RETRIES).inc();
+                        pending = true;
+                    }
+                    Err(WireError::MigrationInFlight { .. }) => {
+                        self.metrics.counter(names::ROUTER_WRITE_BLOCKED_RETRIES).inc();
+                        blocked = true;
+                        pending = true;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if !pending {
+                // Everything sent this pass landed; loop once more to
+                // see whether the (unchanged) owner set is now covered.
+                continue;
+            }
+            if Instant::now() >= deadline {
+                return Err(WireError::Server(
+                    "write: shards still rejecting after retries (migration stuck?)".into(),
+                ));
+            }
+            if blocked {
+                // The blocking migration needs its coordinator to make
+                // progress; yield rather than hammer the donor.
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            self.refresh_map();
+        }
+    }
+
+    fn handle_update(&mut self, filter: Filter, set: Document) -> Result<UpdateReply, WireError> {
+        let mut out = UpdateReply::default();
+        self.scatter_write(
+            &filter,
+            |version, reply| ShardRequest::Update {
+                version,
+                filter: filter.clone(),
+                set: set.clone(),
+                reply,
+            },
+            |rep: UpdateReply| {
+                out.matched += rep.matched;
+                out.modified += rep.modified;
+            },
+        )?;
+        Ok(out)
+    }
+
+    fn handle_delete(&mut self, filter: Filter) -> Result<DeleteReply, WireError> {
+        let mut out = DeleteReply::default();
+        self.scatter_write(
+            &filter,
+            |version, reply| ShardRequest::Delete {
+                version,
+                filter: filter.clone(),
+                reply,
+            },
+            |rep: DeleteReply| out.deleted += rep.deleted,
+        )?;
+        Ok(out)
     }
 
     /// Refill `stream` from its shard until it has a buffered head or
@@ -520,7 +757,11 @@ impl Router {
                 cursor: c,
                 reply,
             })??;
-            stream.buf.extend(rep.docs);
+            let mut docs = rep.docs;
+            if let Some((key, range)) = stream.orphan_fence {
+                drop_orphans(&mut docs, key, range, &self.metrics);
+            }
+            stream.buf.extend(docs);
             stream.cursor = rep.cursor;
         }
         Ok(())
@@ -589,6 +830,73 @@ impl Router {
         }
         Ok(rep)
     }
+}
+
+/// Drop documents whose shard-key position falls in a published
+/// handoff's range — leftover donor copies the destination already
+/// serves. Documents missing a key field (a projection stripped it)
+/// are kept: the fence must never lose a legitimate document, and the
+/// donor's own shard-side fence still covers them one SetMap later.
+fn drop_orphans(docs: &mut Vec<Document>, key: ShardKey, range: (u64, u64), metrics: &Registry) {
+    let before = docs.len();
+    docs.retain(|d| {
+        let (Some(node), Some(ts)) = (d.get_i64("node_id"), d.get_i64("ts")) else {
+            return true;
+        };
+        let pos = key.position(node.max(0) as u32, ts.max(0) as u32);
+        !(range.0 <= pos && pos <= range.1)
+    });
+    if docs.len() < before {
+        metrics
+            .counter(names::ROUTER_ORPHANS_FILTERED)
+            .add((before - docs.len()) as u64);
+    }
+}
+
+/// Exact `node_id` pins from a filter's top-level conjuncts (`$in`
+/// list or equality), if every pinned value is a representable u32.
+/// `None` means the filter does not pin the node — broadcast.
+fn exact_node_pins(filter: &Filter) -> Option<Vec<u32>> {
+    if let Some(values) = filter.in_values("node_id") {
+        let mut nodes = Vec::with_capacity(values.len());
+        for v in values {
+            match v {
+                Value::Int(n) if (0..=u32::MAX as i64).contains(n) => nodes.push(*n as u32),
+                _ => return None,
+            }
+        }
+        return (!nodes.is_empty()).then_some(nodes);
+    }
+    exact_int(filter, "node_id").map(|n| vec![n])
+}
+
+/// The single value `field` is pinned to, when the filter's range
+/// bounds collapse to one representable u32.
+fn exact_int(filter: &Filter, field: &str) -> Option<u32> {
+    match filter.index_range(field) {
+        Some((Some(Value::Int(lo)), Some(Value::Int(hi))))
+            if lo == hi && (0..=u32::MAX as i64).contains(&lo) =>
+        {
+            Some(lo as u32)
+        }
+        _ => None,
+    }
+}
+
+/// `ts` bounds for ranged-key targeting, widened to an inclusive u32
+/// window (missing bounds span the whole axis).
+fn ts_bounds(filter: &Filter) -> (u32, u32) {
+    let mut lo = 0u32;
+    let mut hi = u32::MAX;
+    if let Some((l, h)) = filter.index_range("ts") {
+        if let Some(Value::Int(v)) = l {
+            lo = v.clamp(0, u32::MAX as i64) as u32;
+        }
+        if let Some(Value::Int(v)) = h {
+            hi = v.clamp(0, u32::MAX as i64) as u32;
+        }
+    }
+    (lo, hi)
 }
 
 /// Index of the stream whose head document comes next in the merged
@@ -673,6 +981,7 @@ mod tests {
             shard,
             cursor: None,
             buf: ts.iter().map(|&t| Document::new().set("ts", t)).collect(),
+            orphan_fence: None,
         };
         let streams = vec![stream(0, &[5, 9]), stream(1, &[]), stream(2, &[3, 4])];
         assert_eq!(best_head(&streams, "ts", SortDir::Asc), Some(2));
@@ -682,5 +991,51 @@ mod tests {
         let tied = vec![stream(0, &[7]), stream(1, &[7])];
         assert_eq!(best_head(&tied, "ts", SortDir::Asc), Some(0));
         assert_eq!(best_head(&tied, "ts", SortDir::Desc), Some(0));
+    }
+
+    #[test]
+    fn write_targeting_extracts_key_pins() {
+        use crate::mongo::query::CmpOp;
+
+        // $in pins a node list.
+        let f = Filter::and(vec![
+            Filter::is_in("node_id", vec![Value::Int(3), Value::Int(9)]),
+            Filter::cmp("ts", CmpOp::Gte, 100i64),
+            Filter::cmp("ts", CmpOp::Lt, 200i64),
+        ]);
+        assert_eq!(exact_node_pins(&f), Some(vec![3, 9]));
+        // ts bounds widen $lt to inclusive (a superset is fine).
+        assert_eq!(ts_bounds(&f), (100, 200));
+        assert_eq!(exact_int(&f, "ts"), None);
+
+        // Equality pins a single node; an exact ts pins fully.
+        let f = Filter::and(vec![Filter::eq("node_id", 7i64), Filter::eq("ts", 42i64)]);
+        assert_eq!(exact_node_pins(&f), Some(vec![7]));
+        assert_eq!(exact_int(&f, "ts"), Some(42));
+
+        // No pin, negative pin, or non-int pin → broadcast.
+        assert_eq!(exact_node_pins(&Filter::True), None);
+        assert_eq!(exact_node_pins(&Filter::eq("node_id", -1i64)), None);
+        assert_eq!(exact_node_pins(&Filter::eq("node_id", "x")), None);
+        assert_eq!(ts_bounds(&Filter::True), (0, u32::MAX));
+    }
+
+    #[test]
+    fn drop_orphans_filters_by_position_and_keeps_unkeyed_docs() {
+        let key = ShardKey::ranged();
+        let metrics = Registry::new();
+        let doc = |node: i64, ts: i64| Document::new().set("node_id", node).set("ts", ts);
+        let range = (key.position(5, 0), key.position(5, u32::MAX));
+        let mut docs = vec![
+            doc(4, 10),                         // outside the range: kept
+            doc(5, 10),                         // inside: dropped
+            Document::new().set("load", 1.5),   // no key fields: kept
+            doc(5, 999),                        // inside: dropped
+            doc(6, 0),                          // outside: kept
+        ];
+        drop_orphans(&mut docs, key, range, &metrics);
+        assert_eq!(docs.len(), 3);
+        assert!(docs.iter().all(|d| d.get_i64("node_id") != Some(5)));
+        assert_eq!(metrics.counter(names::ROUTER_ORPHANS_FILTERED).get(), 2);
     }
 }

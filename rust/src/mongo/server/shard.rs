@@ -20,17 +20,18 @@ use std::time::Instant;
 
 use crate::metrics::{names, Registry};
 use crate::mongo::bson::{Document, RawDoc};
+use crate::mongo::query::Filter;
 use crate::mongo::sharding::chunk::ChunkMap;
 use crate::mongo::sharding::migration::STAGING_COLLECTION;
 use crate::mongo::storage::{Engine, EngineOptions, RecordId, StorageDir};
 use crate::mongo::wire::{
-    rpc, ConfigRequest, DeleteChunkReply, InsertReply, MigrateBatchReply, ShardRequest,
-    ShardStatsReply, StagedMigration, WireError,
+    rpc, ConfigRequest, DeleteChunkReply, DeleteReply, InsertReply, MigrateBatchReply,
+    ShardRequest, ShardStatsReply, StagedMigration, UpdateReply, WireError,
 };
 use crate::runtime::Kernels;
 use crate::util::ids::ShardId;
 
-use super::read::{ReadContext, ReadRequest, ReaderPool};
+use super::read::{ReadContext, ReadFence, ReadRequest, ReaderPool};
 
 /// The sharded collection name (one sharded namespace, like the paper's
 /// single OVIS metrics collection).
@@ -60,6 +61,13 @@ pub struct ShardServer {
     staging: Option<((u64, u64), ShardId, bool)>,
     /// Staged data documents (meta records excluded).
     staged_docs: u64,
+    /// Record-id run a `PublishStaged` made live while this shard's own
+    /// map still shows the handoff *unpublished*: until the SetMap that
+    /// marks it published arrives, readers here must not serve these
+    /// rids (the donor's copies are still what the cluster counts —
+    /// both would double-count the range). In-memory only: recovery
+    /// publishes before any traffic, so a restart never needs it.
+    publish_mask: Option<(RecordId, RecordId)>,
 }
 
 impl ShardServer {
@@ -104,6 +112,7 @@ impl ShardServer {
             positions: Default::default(),
             staging: None,
             staged_docs: 0,
+            publish_mask: None,
         };
         // Rebuild the position histogram from recovered records (second
         // job re-attaching to persisted Lustre data) — raw key-field
@@ -150,7 +159,38 @@ impl ShardServer {
             // uncommitted so reconciliation rolls it back.
             s.staging = Some((range, from, committed && meta_seen));
         }
+        s.refresh_fence();
         Ok(s)
+    }
+
+    /// Install a new chunk map and derive the readers' orphan fence
+    /// from it. Every map change funnels through here so the fence can
+    /// never lag the map on this shard.
+    fn install_map(&mut self, map: ChunkMap) {
+        self.map = map;
+        // The publish mask exists to bridge [publish applied, published
+        // map processed]; once the map marks the handoff published (or
+        // drops it), the donor-side range filter takes over.
+        if !matches!(self.map.handoff, Some(h) if !h.published) {
+            self.publish_mask = None;
+        }
+        self.refresh_fence();
+    }
+
+    /// Recompute the shared [`ReadFence`] from the current map +
+    /// publish mask.
+    fn refresh_fence(&self) {
+        let mut fence = ReadFence { version: self.map.version, ..ReadFence::default() };
+        if let Some(h) = self.map.handoff {
+            if h.published && h.from == self.id {
+                // This shard donated the range and the destination's
+                // copy is live: every remaining local copy is an orphan.
+                fence.key = Some(self.map.key);
+                fence.exclude_range = Some(h.range);
+            }
+        }
+        fence.mask_rids = self.publish_mask;
+        self.ctx.set_fence(fence);
     }
 
     /// Spawn the event loop thread; returns its mailbox and join handle.
@@ -188,7 +228,7 @@ impl ShardServer {
             match req {
                 ShardRequest::Shutdown => break,
                 ShardRequest::SetMap { map } => {
-                    self.map = map;
+                    self.install_map(map);
                 }
                 ShardRequest::InsertBatch { version, docs, reply } => {
                     let t = Instant::now();
@@ -205,6 +245,20 @@ impl ShardServer {
                 }
                 ShardRequest::Count { filter, reply } => {
                     self.dispatch_read(ReadRequest::Count { filter, reply });
+                }
+                ShardRequest::Update { version, filter, set, reply } => {
+                    let t = Instant::now();
+                    let r = self.handle_update(version, &filter, &set);
+                    self.metrics
+                        .observe(names::SHARD_UPDATE_NS, t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
+                }
+                ShardRequest::Delete { version, filter, reply } => {
+                    let t = Instant::now();
+                    let r = self.handle_delete(version, &filter);
+                    self.metrics
+                        .observe(names::SHARD_DELETE_NS, t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
                 }
                 ShardRequest::CreateIndex { spec, reply } => {
                     let r = self
@@ -232,6 +286,9 @@ impl ShardServer {
                 }
                 ShardRequest::AbortStaged { reply } => {
                     let _ = reply.send(self.handle_abort_staged());
+                }
+                ShardRequest::ClearStaged { reply } => {
+                    let _ = reply.send(self.handle_clear_staged());
                 }
                 ShardRequest::DeleteChunk { range, compact, reply } => {
                     let r = self.delete_range(range, compact);
@@ -339,17 +396,7 @@ impl ShardServer {
         version: u64,
         docs: Vec<Document>,
     ) -> Result<InsertReply, WireError> {
-        // Version handshake: if the router is ahead, catch up from the
-        // config server; if the router is behind, tell it to refresh.
-        if version > self.map.version {
-            if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
-                self.map = map;
-            }
-        }
-        if version != self.map.version {
-            self.metrics.counter(names::SHARD_STALE_VERSION).inc();
-            return Err(WireError::StaleVersion { current: self.map.version });
-        }
+        self.check_version(version)?;
 
         // Split the batch into owned documents and wrong-owner rejects,
         // then index + journal the owned run as ONE multi-record frame.
@@ -391,6 +438,146 @@ impl ShardServer {
             self.maybe_split(chunk);
         }
         Ok(InsertReply { inserted, wrong_owner })
+    }
+
+    /// Version handshake shared by every routed write: if the router is
+    /// ahead, catch up from the config server; if the router is behind,
+    /// tell it to refresh.
+    fn check_version(&mut self, version: u64) -> Result<(), WireError> {
+        if version > self.map.version {
+            if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
+                self.install_map(map);
+            }
+        }
+        if version != self.map.version {
+            self.metrics.counter(names::SHARD_STALE_VERSION).inc();
+            return Err(WireError::StaleVersion { current: self.map.version });
+        }
+        Ok(())
+    }
+
+    /// Filter-driven `$set` update of this shard's matching documents.
+    /// Matching is raw (no decode for non-matches); matched documents
+    /// decode once, merge the `$set` fields, and the changed subset
+    /// commits as **one** `update_many` journal frame + group commit —
+    /// MVCC batch-atomic, so a snapshot pinned before the batch reads
+    /// only pre-update versions.
+    ///
+    /// Shard-key fields are immutable (a key change would relocate the
+    /// document across chunks — that is a delete + insert, not an
+    /// update), which also keeps the position histogram exact.
+    fn handle_update(
+        &mut self,
+        version: u64,
+        filter: &Filter,
+        set: &Document,
+    ) -> Result<UpdateReply, WireError> {
+        self.check_version(version)?;
+        if set.get("node_id").is_some() || set.get("ts").is_some() {
+            return Err(WireError::Server(
+                "shard-key fields (node_id, ts) are immutable under update".into(),
+            ));
+        }
+        if set.is_empty() {
+            return Err(WireError::Server("empty $set document".into()));
+        }
+        let matched = self.match_for_write(filter)?;
+        let matched_n = matched.len() as u64;
+        let mut updates: Vec<(RecordId, Document)> = Vec::with_capacity(matched.len());
+        for (rid, doc, _) in matched {
+            let mut merged = doc.clone();
+            for (k, v) in &set.fields {
+                merged.put(k, v.clone());
+            }
+            if merged != doc {
+                updates.push((rid, merged));
+            }
+        }
+        let modified = updates.len() as u64;
+        if !updates.is_empty() {
+            self.engine
+                .update_many(COLLECTION, &updates)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            // Group commit once per batch: one journal frame, one sync.
+            self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+            self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
+            self.metrics.counter(names::SHARD_DOCS_UPDATED).add(modified);
+        }
+        self.maybe_compact();
+        Ok(UpdateReply { matched: matched_n, modified })
+    }
+
+    /// Filter-driven delete: matched documents leave as **one**
+    /// `delete_many` journal frame + group commit, and the position
+    /// histogram decrements so chunk counts stay exact.
+    fn handle_delete(&mut self, version: u64, filter: &Filter) -> Result<DeleteReply, WireError> {
+        self.check_version(version)?;
+        let matched = self.match_for_write(filter)?;
+        let deleted = matched.len() as u64;
+        if !matched.is_empty() {
+            let rids: Vec<RecordId> = matched.iter().map(|(r, _, _)| *r).collect();
+            self.engine
+                .delete_many(COLLECTION, &rids)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+            for (_, _, pos) in &matched {
+                if let Some(pos) = pos {
+                    if let Some(c) = self.positions.get_mut(pos) {
+                        *c -= 1;
+                        if *c == 0 {
+                            self.positions.remove(pos);
+                        }
+                    }
+                }
+            }
+            self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
+            self.metrics.counter(names::SHARD_DOCS_DELETED).add(deleted);
+        }
+        self.maybe_compact();
+        Ok(DeleteReply { deleted })
+    }
+
+    /// Collect the live documents a mutating filter matches — rid,
+    /// decoded document, shard-key position — under one scoped
+    /// latest-view guard (dropped before the caller takes the write
+    /// lock).
+    ///
+    /// **Migration fence:** a match inside an active handoff range is
+    /// refused with the retryable [`WireError::MigrationInFlight`]. The
+    /// migration's rid-cursor copy stream cannot see an update (the new
+    /// version gets a rid *behind* nothing — it escapes the cursor, so
+    /// the destination would publish the stale copy) nor a delete (the
+    /// already-streamed copy would resurrect on the destination), so
+    /// range writes wait out the handoff; the router retries with
+    /// backoff. Inserts stay allowed — new rids land *ahead* of the
+    /// cursor and are picked up by later batches or catch-up.
+    #[allow(clippy::type_complexity)]
+    fn match_for_write(
+        &self,
+        filter: &Filter,
+    ) -> Result<Vec<(RecordId, Document, Option<u64>)>, WireError> {
+        let handoff = self.map.handoff;
+        let mut matched: Vec<(RecordId, Document, Option<u64>)> = Vec::new();
+        let reader = self.engine.reader();
+        let view = reader.latest();
+        for (rid, raw) in view.scan_raw_from(COLLECTION, None) {
+            let rd = RawDoc::new(raw);
+            if !filter.matches_raw(&rd) {
+                continue;
+            }
+            let pos = self.position_of_raw(&rd);
+            if let (Some(h), Some(p)) = (&handoff, pos) {
+                if h.covers(p) {
+                    self.metrics.counter(names::SHARD_WRITE_CONFLICTS).inc();
+                    return Err(WireError::MigrationInFlight { range: h.range });
+                }
+            }
+            let doc = rd
+                .decode()
+                .map_err(|e| WireError::Server(format!("corrupt record: {e}")))?;
+            matched.push((rid, doc, pos));
+        }
+        Ok(matched)
     }
 
     fn chunk_doc_count(&self, chunk: usize) -> u64 {
@@ -439,13 +626,13 @@ impl ShardServer {
                     // may process it on the next loop turn. Update our
                     // local copy eagerly to keep counting accurate.
                     if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
-                        self.map = map;
+                        self.install_map(map);
                     }
                 }
                 VersionCheck::Stale { .. } => {
                     self.metrics.counter(names::SHARD_SPLIT_STALE).inc();
                     if let Ok(map) = rpc(&self.config, |reply| ConfigRequest::GetMap { reply }) {
-                        self.map = map;
+                        self.install_map(map);
                     }
                 }
             }
@@ -559,9 +746,17 @@ impl ShardServer {
 
     /// Migration destination: publish the staged documents into the
     /// live collection as **one atomic move frame** (replay never sees
-    /// them in both collections or in neither), then drop the meta
-    /// records. Idempotent: an empty or marker-only staging publishes
-    /// nothing and just cleans up.
+    /// them in both collections or in neither). The staging *meta*
+    /// records survive — they are the durable marker that keeps a crash
+    /// after this publish on the committed (roll-forward) recovery
+    /// path; [`Self::handle_clear_staged`] drops them once the donor's
+    /// copy is deleted. Idempotent: a drained or empty staging
+    /// publishes 0 documents.
+    ///
+    /// Until this shard processes the map version that marks the
+    /// handoff published, the freshly moved rid run is masked from
+    /// local reads (`publish_mask` → [`ReadFence`]): the donor's copies
+    /// are still what the cluster counts during that bridge.
     ///
     /// A cursor pinned *before* this publish still drains the
     /// pre-publish state (staged docs invisible); one pinned after sees
@@ -576,36 +771,42 @@ impl ShardServer {
         // The view is scoped: it must drop before `move_many` takes the
         // store's write lock on this same thread.
         let mut data: Vec<(RecordId, Option<u64>)> = Vec::new();
-        let mut meta: Vec<RecordId> = Vec::new();
         {
             let reader = self.engine.reader();
             let view = reader.latest();
             for (rid, raw) in view.scan_raw_from(STAGING_COLLECTION, None) {
                 let rd = RawDoc::new(raw);
-                if rd.get_i64("__migmeta").is_some() || rd.get_i64("__migcommit").is_some() {
-                    meta.push(rid);
-                } else {
+                if rd.get_i64("__migmeta").is_none() && rd.get_i64("__migcommit").is_none() {
                     data.push((rid, self.position_of_raw(&rd)));
                 }
             }
         }
         let rids: Vec<RecordId> = data.iter().map(|(r, _)| *r).collect();
         let n = rids.len() as u64;
-        self.engine
+        let fresh = self
+            .engine
             .move_many(STAGING_COLLECTION, COLLECTION, &rids)
             .map_err(|e| WireError::Server(e.to_string()))?;
-        if !meta.is_empty() {
-            self.engine
-                .remove_many(STAGING_COLLECTION, &meta)
-                .map_err(|e| WireError::Server(e.to_string()))?;
-        }
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
         for (_, pos) in &data {
             if let Some(pos) = pos {
                 *self.positions.entry(*pos).or_insert(0) += 1;
             }
         }
-        self.staging = None;
+        // Mask the published run from local reads while our own map
+        // still shows the handoff unpublished (the bridge between the
+        // publish applying here and the published map arriving).
+        if let (Some(&lo), Some(&hi)) = (fresh.iter().min(), fresh.iter().max()) {
+            if matches!(self.map.handoff, Some(h) if !h.published) {
+                self.publish_mask = Some((lo, hi));
+                self.refresh_fence();
+            }
+        }
+        // Keep the staging identity: committed, fully drained. A repeat
+        // publish is a 0-document no-op; ClearStaged retires it.
+        if let Some((range, from, _)) = self.staging {
+            self.staging = Some((range, from, true));
+        }
         self.staged_docs = 0;
         self.metrics.counter(names::SHARD_MIGRATION_DOCS_PUBLISHED).add(n);
         self.maybe_compact();
@@ -634,6 +835,29 @@ impl ShardServer {
         self.metrics.counter(names::SHARD_MIGRATION_ABORTS).inc();
         self.maybe_compact();
         Ok(dropped)
+    }
+
+    /// Migration destination: retire the drained staging meta left by
+    /// [`Self::handle_publish_staged`] — the migration's final durable
+    /// step, after the donor's range delete confirmed. Idempotent: with
+    /// nothing staged this is a no-op.
+    fn handle_clear_staged(&mut self) -> Result<(), WireError> {
+        if self.staged_docs > 0 {
+            return Err(WireError::Server(
+                "staging still holds data documents; publish or abort first".into(),
+            ));
+        }
+        let rids = self.engine.record_ids(STAGING_COLLECTION);
+        if !rids.is_empty() {
+            self.engine
+                .remove_many(STAGING_COLLECTION, &rids)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+        }
+        self.staging = None;
+        self.staged_docs = 0;
+        self.maybe_compact();
+        Ok(())
     }
 
     fn staged_state(&self) -> Option<StagedMigration> {

@@ -48,6 +48,40 @@ impl ShardKey {
     }
 }
 
+/// The in-flight migration handoff descriptor, carried *inside* the
+/// chunk map so it propagates atomically with the version through
+/// `GetMap`/`SetMap` pushes.
+///
+/// While a handoff is active, the map's `owners` row alone cannot tell
+/// a reader which shard's copy of the range is authoritative: between
+/// the flip and the destination's publish the donor still holds the
+/// only live copy, and between the publish and the donor's range delete
+/// both shards hold one. The `published` flag splits those phases:
+///
+/// * `published == false` — the destination has not made its staged
+///   copy live; the donor's copy is the one readers must see.
+/// * `published == true` — the destination's copy is live; the donor's
+///   leftover copy (until its range delete lands) is an **orphan** and
+///   every read on the donor must filter it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MigrationHandoff {
+    /// Inclusive position range `[lo, hi]` being handed off.
+    pub range: (u64, u64),
+    /// Donor shard (the pre-flip owner).
+    pub from: ShardId,
+    /// Set by the config server after the destination published the
+    /// staged copy (and before the donor's range delete is issued).
+    pub published: bool,
+}
+
+impl MigrationHandoff {
+    /// Whether `position` falls inside the handed-off range.
+    #[inline]
+    pub fn covers(&self, position: u64) -> bool {
+        self.range.0 <= position && position <= self.range.1
+    }
+}
+
 /// The versioned chunk table.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ChunkMap {
@@ -58,6 +92,9 @@ pub struct ChunkMap {
     pub bounds: Vec<u64>,
     /// Owning shard per chunk.
     pub owners: Vec<ShardId>,
+    /// In-flight migration handoff, if any (at most one at a time —
+    /// the config server serializes migrations).
+    pub handoff: Option<MigrationHandoff>,
 }
 
 impl ChunkMap {
@@ -74,7 +111,20 @@ impl ChunkMap {
             bounds.push(b);
             owners.push(ShardId((i % num_shards as u64) as u32));
         }
-        Self { key, version: 1, bounds, owners }
+        Self { key, version: 1, bounds, owners, handoff: None }
+    }
+
+    /// The shard whose copy of `position` readers must treat as
+    /// authoritative under this map — the `owners` row, except while an
+    /// unpublished handoff covers the position (the destination owns it
+    /// on paper but has not made its copy live yet, so the donor's copy
+    /// is still the one to read).
+    #[inline]
+    pub fn effective_read_owner(&self, position: u64) -> ShardId {
+        match &self.handoff {
+            Some(h) if !h.published && h.covers(position) => h.from,
+            _ => self.owner_of(position),
+        }
     }
 
     pub fn num_chunks(&self) -> usize {
@@ -192,6 +242,7 @@ mod tests {
             version: 1,
             bounds: vec![100, 200, u32::MAX as u64],
             owners: vec![ShardId(0), ShardId(1), ShardId(2)],
+            handoff: None,
         };
         m.validate().unwrap();
         assert_eq!(m.chunk_of(0), 0);
@@ -267,6 +318,28 @@ mod tests {
     #[should_panic(expected = "hashed keys")]
     fn kernel_tables_reject_ranged() {
         ChunkMap::pre_split(ShardKey::ranged(), 2, 1).kernel_tables();
+    }
+
+    #[test]
+    fn effective_read_owner_tracks_handoff_phases() {
+        let mut m = ChunkMap::pre_split(ShardKey::ranged(), 2, 1);
+        let (lo, hi) = m.chunk_range(0);
+        let donor = m.owners[0];
+        let dest = ShardId(1);
+        m.move_chunk(0, dest).unwrap(); // the flip
+        // Unpublished handoff: the donor's copy is authoritative even
+        // though the owners row says the destination owns the range.
+        m.handoff = Some(MigrationHandoff { range: (lo, hi), from: donor, published: false });
+        assert_eq!(m.effective_read_owner(lo), donor);
+        assert_eq!(m.effective_read_owner(hi), donor);
+        assert_eq!(m.effective_read_owner(hi + 1), m.owner_of(hi + 1));
+        // Published: ownership follows the map; the donor's leftover
+        // copy is an orphan.
+        m.handoff = Some(MigrationHandoff { range: (lo, hi), from: donor, published: true });
+        assert_eq!(m.effective_read_owner(lo), dest);
+        // No handoff: plain owners row.
+        m.handoff = None;
+        assert_eq!(m.effective_read_owner(lo), dest);
     }
 
     #[test]

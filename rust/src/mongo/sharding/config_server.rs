@@ -10,7 +10,7 @@
 
 use anyhow::{bail, Result};
 
-use super::chunk::{ChunkMap, ShardKey};
+use super::chunk::{ChunkMap, MigrationHandoff, ShardKey};
 use super::migration::MState;
 use crate::util::ids::ShardId;
 
@@ -124,10 +124,19 @@ impl ConfigState {
     /// Begin migrating `chunk` to `to` (M1, `Streaming`). Only one
     /// migration at a time (MongoDB serializes per-collection
     /// migrations through the config server — this serialization is one
-    /// of the scaling costs the DES models).
+    /// of the scaling costs the DES models). Records the handoff in the
+    /// chunk map (version bump) so every shard and router learns —
+    /// atomically with map propagation — which range has copies in
+    /// motion (read filtering + write fencing, ARCHITECTURE.md §6.3).
     pub fn begin_migration(&mut self, chunk: usize, to: ShardId) -> Result<Migration> {
         if self.migration.is_some() {
             bail!("a migration is already in flight");
+        }
+        if self.map.handoff.is_some() {
+            // A post-marker abort keeps the handoff: the donor's orphan
+            // copies still need filtering until the next job's recovery
+            // reconciles the data. Overwriting it would unfilter them.
+            bail!("unreconciled handoff from an aborted migration");
         }
         if chunk >= self.map.num_chunks() {
             bail!("no chunk {chunk}");
@@ -146,7 +155,11 @@ impl ConfigState {
             to,
             state: MState::Streaming,
         };
+        self.map.handoff = Some(MigrationHandoff { range: m.range, from, published: false });
+        self.map.version += 1;
+        debug_assert!(self.map.validate().is_ok());
         self.migration = Some(m.clone());
+        self.replicate();
         Ok(m)
     }
 
@@ -194,8 +207,36 @@ impl ConfigState {
         Ok(())
     }
 
-    /// Clear a finished migration (after M4 cleanup). Returns the map
-    /// version.
+    /// Mark the in-flight migration's staged copy as published on the
+    /// destination: from this map version on, the donor's remaining
+    /// copies of the range are orphans and every reader must drop them.
+    /// Returns the new map version.
+    pub fn publish_migration(&mut self) -> Result<u64> {
+        let m = self
+            .migration
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no migration in flight"))?;
+        if m.state < MState::Committed {
+            bail!("cannot publish an uncommitted migration ({})", m.state);
+        }
+        let h = self
+            .map
+            .handoff
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("no handoff recorded for the migration"))?;
+        if h.published {
+            bail!("handoff already published");
+        }
+        h.published = true;
+        self.map.version += 1;
+        debug_assert!(self.map.validate().is_ok());
+        self.replicate();
+        Ok(self.map.version)
+    }
+
+    /// Clear a finished migration (after M4 cleanup): drops the handoff
+    /// — the donor's copy is deleted, reads need no filtering — and
+    /// bumps the version. Returns the map version.
     pub fn finish_migration(&mut self) -> Result<u64> {
         let m = self
             .migration
@@ -204,6 +245,12 @@ impl ConfigState {
         if m.state < MState::Flipped {
             self.migration = Some(m);
             bail!("cannot finish an unflipped migration");
+        }
+        if self.map.handoff.is_some() {
+            self.map.handoff = None;
+            self.map.version += 1;
+            debug_assert!(self.map.validate().is_ok());
+            self.replicate();
         }
         Ok(self.map.version)
     }
@@ -216,13 +263,28 @@ impl ConfigState {
     /// next job's recovery pass finishes it).
     pub fn abort_migration(&mut self) -> Option<Migration> {
         let m = self.migration.take()?;
+        let mut mutated = false;
         if m.state == MState::Flipped {
             let chunk = self.map.chunk_of(m.range.0);
             if self.map.chunk_range(chunk) == m.range {
                 let _ = self.map.move_chunk(chunk, m.from);
-                debug_assert!(self.map.validate().is_ok());
-                self.replicate();
+                mutated = true;
             }
+        }
+        // A rolled-back migration drops its handoff (the donor owns and
+        // holds everything again); a committed one keeps it — the
+        // published flag is what keeps the donor's orphan copies
+        // filtered until the next job's recovery deletes them.
+        if m.state < MState::Committed && self.map.handoff.is_some() {
+            self.map.handoff = None;
+            if !mutated {
+                self.map.version += 1;
+            }
+            mutated = true;
+        }
+        if mutated {
+            debug_assert!(self.map.validate().is_ok());
+            self.replicate();
         }
         Some(m)
     }
@@ -283,21 +345,33 @@ mod tests {
         assert_eq!(m.from, from);
         assert_eq!(m.state, MState::Streaming);
         assert_eq!(m.range, s.map().chunk_range(0));
+        // Begin records the (unpublished) handoff and bumps the map.
+        assert_eq!(s.version(), 2);
+        let h = s.map().handoff.expect("begin records the handoff");
+        assert_eq!((h.range, h.from, h.published), (m.range, from, false));
+        assert_eq!(s.mirror(0).unwrap().handoff, Some(h));
         // Only one at a time.
         assert!(s.begin_migration(1, to).is_err());
         let v = s.commit_migration().unwrap();
-        assert_eq!(v, 2);
+        assert_eq!(v, 3);
         assert_eq!(s.map().owners[0], to);
         assert_eq!(s.mirror(1).unwrap().owners[0], to);
         // The flip keeps the migration in flight (M2) until cleanup.
         assert_eq!(s.migration().unwrap().state, MState::Flipped);
         assert!(s.commit_migration().is_err(), "cannot flip twice");
+        assert!(s.publish_migration().is_err(), "publish needs the marker");
         s.advance_migration(MState::Committed).unwrap();
         assert!(
             s.advance_migration(MState::Streaming).is_err(),
             "states only move forward"
         );
-        s.finish_migration().unwrap();
+        let v = s.publish_migration().unwrap();
+        assert_eq!(v, 4);
+        assert!(s.map().handoff.unwrap().published);
+        assert!(s.publish_migration().is_err(), "cannot publish twice");
+        let v = s.finish_migration().unwrap();
+        assert_eq!(v, 5, "finish drops the handoff with a version bump");
+        assert!(s.map().handoff.is_none());
         assert!(s.migration().is_none());
     }
 
@@ -308,6 +382,7 @@ mod tests {
         s.begin_migration(0, to).unwrap();
         let aborted = s.abort_migration().unwrap();
         assert_eq!(aborted.state, MState::Streaming);
+        assert!(s.map().handoff.is_none(), "rolled-back abort drops the handoff");
         assert!(s.begin_migration(0, to).is_ok());
     }
 
@@ -338,6 +413,14 @@ mod tests {
             to,
             "a committed migration only rolls forward"
         );
+        assert!(
+            s.map().handoff.is_some(),
+            "post-marker abort keeps the handoff: the donor's copies still need filtering"
+        );
+        assert!(
+            s.begin_migration(1, ShardId(2)).is_err(),
+            "no new migration until the handoff is reconciled"
+        );
     }
 
     #[test]
@@ -347,10 +430,10 @@ mod tests {
         let m = s.begin_migration(2, to).unwrap();
         // Splitting the migrating chunk is refused (IM3) ...
         let (lo, hi) = s.map().chunk_range(2);
-        assert!(s.split_chunk(1, 2, lo + (hi - lo) / 2).is_err());
+        assert!(s.split_chunk(2, 2, lo + (hi - lo) / 2).is_err());
         // ... but a split of chunk 0 is fine and shifts indices.
         let (lo0, hi0) = s.map().chunk_range(0);
-        assert_eq!(s.split_chunk(1, 0, lo0 + (hi0 - lo0) / 2).unwrap(), VersionCheck::Ok);
+        assert_eq!(s.split_chunk(2, 0, lo0 + (hi0 - lo0) / 2).unwrap(), VersionCheck::Ok);
         // The flip still lands on the migrated *range*, now at index 3.
         s.commit_migration().unwrap();
         let flipped = s.migration().unwrap();

@@ -29,12 +29,25 @@
 //!                the flip (they have higher rids than the cursor)
 //! M3 Committed   dest journals a commit marker into the staging
 //!                collection and syncs: the roll-forward point
-//! M4 Cleanup     donor deletes the range (one atomic remove_many
-//!                frame) and compacts, so moved-away data stops
-//!                occupying its journal and checkpoint chain; dest
-//!                publishes staging -> live (one atomic move_many frame)
-//! done           config clears the migration, counts it
+//! M4 Cleanup     dest publishes staging -> live (one atomic move_many
+//!                frame; the staging meta survives); config marks the
+//!                handoff *published* (version bump + SetMap push: the
+//!                donor's copies of the range are orphans from this
+//!                instant and every reader's fence drops them); donor
+//!                deletes the range (one atomic remove_many frame) and
+//!                compacts; dest retires the staging meta (ClearStaged)
+//! done           config clears the migration + handoff, counts it
 //! ```
+//!
+//! The M4 order is **publish before delete**. Between those two
+//! instants both shards hold a copy of the range, and the chunk map's
+//! published [`MigrationHandoff`](super::chunk::MigrationHandoff)
+//! tells readers which copy to drop (the donor's). The pre-refactor
+//! order (delete first) had the opposite — and unfixable — window:
+//! after the donor's delete and before the destination's publish the
+//! range was live *nowhere*, so a scatter `Count` at that instant
+//! undercounted. That was the transient orphan-read window
+//! ARCHITECTURE.md §6.3 used to document as a known gap.
 //!
 //! Abort (any failure before M3): the destination deletes the staged
 //! range — awaited, not fire-and-forget — and the config server rolls
@@ -237,8 +250,9 @@ pub fn execute(
         return Err(e);
     }
 
-    // M4 — roll forward: source delete + compaction, then publish. An
-    // rpc failure here (a dying shard thread) leaves the committed
+    // M4 — roll forward: publish, mark the handoff published, source
+    // delete + compaction, retire the staging meta. An rpc failure
+    // anywhere here (a dying shard thread) leaves the committed
     // staging on disk; the next job's `recover` finishes the protocol.
     // An empty migration already moved with the flip alone.
     if out.docs_streamed + out.docs_caught_up == 0 {
@@ -250,6 +264,20 @@ pub fn execute(
             state: MState::Cleanup,
             reply,
         });
+        // Publish first: from here both shards hold the range, and the
+        // published handoff (next step) tells readers to drop the
+        // donor's copy. Deleting first would open an undercount window.
+        out.docs_published = rpc(dest, |reply| ShardRequest::PublishStaged { reply })
+            .map_err(|e| anyhow::anyhow!("publish: {e}"))?
+            .map_err(|e| anyhow::anyhow!("publish: {e}"))?;
+        // Mark the handoff published. The config pushes the new map to
+        // every shard *before* replying, so the donor's mailbox orders
+        // SetMap(published) ahead of the DeleteChunk below: the donor
+        // filters its orphans before it deletes them, and no reader
+        // ever sees the range double-counted or missing.
+        rpc(config, |reply| ConfigRequest::PublishMigration { reply })
+            .map_err(|e| anyhow::anyhow!("mark published: {e}"))?
+            .map_err(|e| anyhow::anyhow!("mark published: {e}"))?;
         let del = rpc(donor, |reply| ShardRequest::DeleteChunk { range, compact: true, reply })
             .map_err(|e| anyhow::anyhow!("source delete: {e}"))?
             .map_err(|e| anyhow::anyhow!("source delete: {e}"))?;
@@ -259,9 +287,11 @@ pub fn execute(
             .as_ref()
             .map(|ck| ck.journal_bytes_truncated)
             .unwrap_or(0);
-        out.docs_published = rpc(dest, |reply| ShardRequest::PublishStaged { reply })
-            .map_err(|e| anyhow::anyhow!("publish: {e}"))?
-            .map_err(|e| anyhow::anyhow!("publish: {e}"))?;
+        // The donor's copy is gone: the staging meta (kept by publish
+        // so a kill before this point rolls forward) can now retire.
+        rpc(dest, |reply| ShardRequest::ClearStaged { reply })
+            .map_err(|e| anyhow::anyhow!("clear staged: {e}"))?
+            .map_err(|e| anyhow::anyhow!("clear staged: {e}"))?;
         Ok(())
     })();
     match cleanup {
@@ -370,6 +400,14 @@ pub fn recover(shards: &[ShardMailbox], metrics: &Registry) -> Result<RecoveredM
             let n = rpc(dest, |reply| ShardRequest::PublishStaged { reply })
                 .map_err(|e| anyhow::anyhow!("recover publish: {e}"))?
                 .map_err(|e| anyhow::anyhow!("recover publish: {e}"))?;
+            // Recovery runs before any client traffic, so the
+            // delete-then-publish order above is unobservable (no
+            // reader exists to see the gap) and the live path's
+            // publish-first fence is unnecessary. Publish keeps the
+            // staging meta; retire it now that the source is clean.
+            rpc(dest, |reply| ShardRequest::ClearStaged { reply })
+                .map_err(|e| anyhow::anyhow!("recover clear staged: {e}"))?
+                .map_err(|e| anyhow::anyhow!("recover clear staged: {e}"))?;
             out.rolled_forward += 1;
             out.docs_recovered += n;
             metrics.counter(names::CLUSTER_MIGRATIONS_RECOVERED).inc();

@@ -76,9 +76,14 @@
 //! `u32 len | doc bytes`), op 4 = remove_many(u32 count, then rids
 //! only — the chunk-migration range delete), op 5 = move_many(dst
 //! name, then per record rid + doc bytes; header coll = source — the
-//! migration publish). Each multi-record op is one frame: recovery
-//! replays it atomically or — when the frame is torn by a mid-batch
-//! crash — discards it in full, never half-applied.
+//! migration publish), op 6 = update_many(u32 count, then per record
+//! `u64 old_rid | u32 len | new doc bytes` — the CRUD overwrite; replay
+//! kills the old version and installs the replacement under a fresh
+//! rid), op 7 = delete_many(u32 count, then rids only — the CRUD
+//! delete, distinct from op 4 so client deletes and migration range
+//! deletes stay distinguishable). Each multi-record op is one frame:
+//! recovery replays it atomically or — when the frame is torn by a
+//! mid-batch crash — discards it in full, never half-applied.
 //!
 //! Checkpoints use the `HPCCKPT3` header (see [`super::delta`]):
 //! magic, kind (full/delta), generation, base generation, covered
@@ -123,6 +128,17 @@ const OP_REMOVE_MANY: u8 = 4;
 /// collection and insert into the destination in one atomic frame, so
 /// replay never sees the records in both collections or in neither.
 const OP_MOVE_MANY: u8 = 5;
+/// Batched overwrite (the CRUD update path): per record the old rid and
+/// the full new document in one atomic frame. The old version is killed
+/// and the replacement inserted under a fresh rid at one epoch, so a
+/// pinned snapshot sees either every pre-update version or every
+/// post-update one, never a half-applied batch.
+const OP_UPDATE_MANY: u8 = 6;
+/// Batched CRUD delete: rids only, one atomic frame per `delete_many`
+/// call. Same payload shape as [`OP_REMOVE_MANY`] but a distinct opcode
+/// so the journal (and the crash matrix) can tell a client-driven
+/// delete from a migration range delete.
+const OP_DELETE_MANY: u8 = 7;
 
 /// Below this batch size, per-index maintenance runs inline: spawning
 /// scoped threads costs more than the index inserts they would cover.
@@ -961,6 +977,119 @@ impl Engine {
         let moved = d.insert_batch(&docs, encs, epoch);
         store.epoch = epoch;
         Ok(moved)
+    }
+
+    /// Overwrite a whole batch of records as **one** multi-record
+    /// journal frame — the CRUD update path. Each `(old_rid, new_doc)`
+    /// pair kills the old version (`dead = e`) and installs the
+    /// replacement under a freshly allocated rid (`born = e`) at one
+    /// shared epoch, so record ids keep exactly one version each and a
+    /// pinned snapshot opened before the batch reads only pre-update
+    /// versions. Every secondary index (including the compound
+    /// `(node_id, ts)` index) gets its kill + insert deltas through the
+    /// ordinary `Collection::remove`/`insert_decoded` maintenance.
+    /// `old_rid`s must be distinct and live. Returns the fresh rids in
+    /// `updates` order. Durable after the next [`Self::sync`].
+    pub fn update_many(
+        &mut self,
+        coll: &str,
+        updates: &[(RecordId, Document)],
+    ) -> Result<Vec<RecordId>> {
+        if updates.is_empty() {
+            return Ok(Vec::new());
+        }
+        anyhow::ensure!(updates.len() <= u32::MAX as usize, "update_many batch too large");
+        // Validate every old rid live and encode every replacement under
+        // a read guard before journaling: the frame and the in-memory
+        // mutation must cover exactly the same set (single writer —
+        // nothing invalidates the check in between).
+        let mut encoded = Vec::with_capacity(updates.len());
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(updates.len() as u32).to_le_bytes());
+        {
+            let store = read_store(&self.store);
+            let c = store
+                .collections
+                .get(coll)
+                .ok_or_else(|| anyhow::anyhow!("no collection `{coll}`"))?;
+            let mut seen = BTreeSet::new();
+            for (rid, doc) in updates {
+                anyhow::ensure!(seen.insert(*rid), "duplicate rid {rid} in update batch");
+                c.records
+                    .get(rid)
+                    .filter(|r| r.dead == LIVE)
+                    .ok_or_else(|| anyhow::anyhow!("no record {rid}"))?;
+                let enc = doc.encode();
+                payload.extend_from_slice(&rid.to_le_bytes());
+                payload.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+                payload.extend_from_slice(&enc);
+                encoded.push(enc);
+            }
+        }
+        if self.opts.journal {
+            self.journal_record(OP_UPDATE_MANY, coll, &payload);
+        }
+        // One epoch for the whole batch: a snapshot sees every old
+        // version or every new one, never a half-applied overwrite.
+        let mut store = write_store(&self.store);
+        let epoch = store.epoch + 1;
+        // lint: allow(panic, the validation loop above already resolved every rid in this collection)
+        let c = store.collections.get_mut(coll).expect("collection checked above");
+        let mut fresh = Vec::with_capacity(updates.len());
+        for ((rid, doc), enc) in updates.iter().zip(encoded) {
+            // lint: allow(panic, every rid was fetched live from this collection above)
+            c.remove(*rid, epoch).expect("record validated above");
+            fresh.push(c.insert_decoded(doc, enc, epoch));
+        }
+        store.epoch = epoch;
+        Ok(fresh)
+    }
+
+    /// Delete a whole batch of records as **one** multi-record journal
+    /// frame — the CRUD delete path. Identical application semantics to
+    /// [`Self::remove_many`] (rids-only payload, batch-atomic epoch,
+    /// per-index kill deltas) under a distinct opcode, so the journal
+    /// tells a client-driven delete from a migration range delete.
+    /// `rids` must be distinct and live. Durable after the next
+    /// [`Self::sync`].
+    pub fn delete_many(&mut self, coll: &str, rids: &[RecordId]) -> Result<Vec<Document>> {
+        if rids.is_empty() {
+            return Ok(Vec::new());
+        }
+        anyhow::ensure!(rids.len() <= u32::MAX as usize, "delete_many batch too large");
+        let mut docs = Vec::with_capacity(rids.len());
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(rids.len() as u32).to_le_bytes());
+        {
+            let store = read_store(&self.store);
+            let c = store
+                .collections
+                .get(coll)
+                .ok_or_else(|| anyhow::anyhow!("no collection `{coll}`"))?;
+            for &rid in rids {
+                let rec = c
+                    .records
+                    .get(&rid)
+                    .filter(|r| r.dead == LIVE)
+                    .ok_or_else(|| anyhow::anyhow!("no record {rid}"))?;
+                let doc = Document::decode(&rec.bytes)?;
+                payload.extend_from_slice(&rid.to_le_bytes());
+                docs.push(doc);
+            }
+        }
+        if self.opts.journal {
+            self.journal_record(OP_DELETE_MANY, coll, &payload);
+        }
+        let mut store = write_store(&self.store);
+        let epoch = store.epoch + 1;
+        // lint: allow(panic, the collect loop above already resolved every rid in this collection)
+        let c = store.collections.get_mut(coll).expect("collection checked above");
+        for &rid in rids {
+            // lint: allow(panic, every rid was fetched live from this collection above)
+            c.remove(rid, epoch).expect("record validated above");
+        }
+        store.epoch = epoch;
+        Ok(docs)
     }
 
     /// Remove a record (chunk migration source side).
@@ -1834,6 +1963,58 @@ impl Engine {
                     // lint: allow(panic, create_collection_in(&dst) at the top of this arm)
                     let dst_c = store.collections.get_mut(&dst).expect("created above");
                     dst_c.insert_batch(&docs, encs, 0);
+                }
+                OP_UPDATE_MANY => {
+                    if payload.len() < 4 {
+                        bail!("update_many frame missing count");
+                    }
+                    let n = u32::from_le_bytes(payload[..4].try_into()?) as usize;
+                    let mut p = 4usize;
+                    let mut recs: Vec<(RecordId, Vec<u8>)> = Vec::with_capacity(n);
+                    for i in 0..n {
+                        if p + 12 > payload.len() {
+                            bail!("update_many frame truncated at record {i}");
+                        }
+                        let rid = u64::from_le_bytes(payload[p..p + 8].try_into()?);
+                        p += 8;
+                        let dl = u32::from_le_bytes(payload[p..p + 4].try_into()?) as usize;
+                        p += 4;
+                        if p + dl > payload.len() {
+                            bail!("update_many frame truncated at record {i} body");
+                        }
+                        recs.push((rid, payload[p..p + dl].to_vec()));
+                        p += dl;
+                    }
+                    if p != payload.len() {
+                        bail!("update_many frame has trailing bytes");
+                    }
+                    // Same order as the live path: kill the old version,
+                    // then install the replacement under a freshly
+                    // allocated rid — replay reproduces the live
+                    // allocation exactly.
+                    for (rid, bytes) in recs {
+                        let _ = c.remove(rid, 0);
+                        let doc = Document::decode(&bytes)?;
+                        c.insert_decoded(&doc, bytes, 0);
+                    }
+                }
+                OP_DELETE_MANY => {
+                    if payload.len() < 4 {
+                        bail!("delete_many frame missing count");
+                    }
+                    let n = u32::from_le_bytes(payload[..4].try_into()?) as usize;
+                    let mut p = 4usize;
+                    for i in 0..n {
+                        if p + 8 > payload.len() {
+                            bail!("delete_many frame truncated at record {i}");
+                        }
+                        let rid = u64::from_le_bytes(payload[p..p + 8].try_into()?);
+                        p += 8;
+                        let _ = c.remove(rid, 0);
+                    }
+                    if p != payload.len() {
+                        bail!("delete_many frame has trailing bytes");
+                    }
                 }
                 _ => bail!("unknown journal op {op}"),
             }

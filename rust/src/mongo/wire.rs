@@ -30,6 +30,11 @@ pub enum WireError {
     /// cursor is dead; the query is cleanly retryable with a fresh
     /// `find` (which pins the current epoch).
     SnapshotExpired { at: u64, floor: u64 },
+    /// The write touched a key range with an in-flight chunk migration
+    /// (the rid-cursor copy stream cannot see updates/deletes applied
+    /// behind it). Cleanly retryable: the migration finishes or aborts
+    /// in bounded time, after which the write proceeds normally.
+    MigrationInFlight { range: (u64, u64) },
     Server(String),
 }
 
@@ -43,6 +48,11 @@ impl std::fmt::Display for WireError {
             WireError::SnapshotExpired { at, floor } => write!(
                 f,
                 "snapshot at epoch {at} expired (reclaim floor {floor}); retry the query"
+            ),
+            WireError::MigrationInFlight { range } => write!(
+                f,
+                "write overlaps chunk range [{}, {}] with an in-flight migration; retry",
+                range.0, range.1
             ),
             WireError::Server(msg) => write!(f, "server error: {msg}"),
         }
@@ -59,6 +69,35 @@ pub struct InsertReply {
     /// does not own their chunk — the router re-routes these after a map
     /// refresh (`ordered=false` semantics: keep going, collect errors).
     pub wrong_owner: Vec<usize>,
+}
+
+/// Result of a shard-side count. Carries the chunk-map version the
+/// shard served under so the router can insist on a version-uniform
+/// scatter: during a migration's publish/delete instant the per-shard
+/// counts are only mutually consistent when every shard answered under
+/// the same map (see ARCHITECTURE.md §6.3).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CountReply {
+    pub n: u64,
+    /// Chunk-map version in force when the count was taken.
+    pub version: u64,
+}
+
+/// Result of a shard-side filtered update.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct UpdateReply {
+    /// Documents the filter matched on this shard.
+    pub matched: u64,
+    /// Documents whose bytes actually changed (a `$set` to the same
+    /// value matches but does not modify).
+    pub modified: u64,
+}
+
+/// Result of a shard-side filtered delete.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeleteReply {
+    /// Documents removed on this shard.
+    pub deleted: u64,
 }
 
 /// One find/getMore result batch.
@@ -153,10 +192,28 @@ pub enum ShardRequest {
         reply: Reply<Result<FindReply, WireError>>,
     },
     /// Count matching documents without returning them (the `count`
-    /// command; spares the wire the result set).
+    /// command; spares the wire the result set). The reply carries the
+    /// serving map version for the router's uniform-version retry.
     Count {
         filter: Filter,
-        reply: Reply<Result<u64, WireError>>,
+        reply: Reply<Result<CountReply, WireError>>,
+    },
+    /// Filter-driven update (`$set`-style top-level field merge) of a
+    /// routed leg. Runs on the event loop like inserts; shard-key
+    /// fields are immutable (rejected server-side). One journal frame
+    /// per batch, MVCC batch-atomic.
+    Update {
+        version: u64,
+        filter: Filter,
+        set: Document,
+        reply: Reply<Result<UpdateReply, WireError>>,
+    },
+    /// Filter-driven delete of a routed leg; one journal frame per
+    /// batch, MVCC batch-atomic.
+    Delete {
+        version: u64,
+        filter: Filter,
+        reply: Reply<Result<DeleteReply, WireError>>,
     },
     CreateIndex {
         spec: IndexSpec,
@@ -192,11 +249,20 @@ pub enum ShardRequest {
         reply: Reply<Result<u64, WireError>>,
     },
     /// Migration destination: publish the committed staging into the
-    /// live collection (one atomic cross-collection move frame) and
-    /// clear the staging state. Idempotent: publishing an empty staging
-    /// is a no-op.
+    /// live collection (one atomic cross-collection move frame). The
+    /// staging *meta* record survives (with a drained document count)
+    /// so a crash after publish still recovers to the committed path;
+    /// [`ShardRequest::ClearStaged`] removes it once the donor's copy
+    /// is deleted. Idempotent: re-publishing a drained staging is a
+    /// 0-document no-op.
     PublishStaged {
         reply: Reply<Result<u64, WireError>>,
+    },
+    /// Migration destination: drop the drained staging meta left by
+    /// [`ShardRequest::PublishStaged`] — the migration's final step,
+    /// after the donor's range delete. Idempotent.
+    ClearStaged {
+        reply: Reply<Result<(), WireError>>,
     },
     /// Migration destination: drop an *uncommitted* staged range (abort
     /// path; refuses to drop a committed staging). Replies with the
@@ -256,6 +322,14 @@ pub enum ConfigRequest {
     /// migrating chunk by range, bumps the version, pushes the new map.
     /// Returns the new map version.
     CommitMigration {
+        reply: Reply<Result<u64, WireError>>,
+    },
+    /// Mark the in-flight migration's staged copy as published on the
+    /// destination: sets the chunk map's handoff to `published`, bumps
+    /// the version, pushes the new map. From this instant the donor's
+    /// remaining copies of the range are orphans and readers must drop
+    /// them (ARCHITECTURE.md §6.3). Returns the new map version.
+    PublishMigration {
         reply: Reply<Result<u64, WireError>>,
     },
     /// Record a coordinator-observed state transition of the in-flight

@@ -68,6 +68,18 @@ pub struct SimSpec {
     /// a full document decode. Matches the live `RawDoc` matcher; off
     /// reproduces the pre-overhaul decode-per-candidate path.
     pub raw_match: bool,
+    /// CRUD-mix axis: `updateMany` scatters interleaved with ingest,
+    /// expressed per 100 client insert batches (0 = ingest-only, the
+    /// paper's workload). Each mutation matches `crud_docs_per_op`
+    /// documents spread across every shard and pays the calibrated
+    /// `update_doc_ns` per document plus one journal frame per shard
+    /// (the live engine journals one `OP_UPDATE_MANY` frame per batch).
+    pub updates_per_100_batches: u32,
+    /// `deleteMany` scatters per 100 insert batches (see above; the
+    /// live engine journals rids only, one `OP_DELETE_MANY` frame).
+    pub deletes_per_100_batches: u32,
+    /// Documents matched by one updateMany/deleteMany scatter.
+    pub crud_docs_per_op: u64,
     /// Concurrent-runtime axis: per-shard MVCC reader threads serving
     /// finds from pinned snapshots (the live `--reader-threads` knob).
     /// 0 = reads run inline on the shard's single event loop; N > 0
@@ -105,6 +117,9 @@ impl SimSpec {
             query_jobs,
             compound_index: true,
             raw_match: true,
+            updates_per_100_batches: 0,
+            deletes_per_100_batches: 0,
+            crud_docs_per_op: 256,
             reader_threads: 0,
             cost,
             seed: 0x51712,
@@ -136,6 +151,12 @@ pub struct SimReport {
     pub rebases: u64,
     /// Chunk migrations executed during ingest (the balancer axis).
     pub migrations: u64,
+    /// `updateMany` scatters executed during ingest (CRUD-mix axis).
+    pub updates: u64,
+    /// `deleteMany` scatters executed during ingest (CRUD-mix axis).
+    pub deletes: u64,
+    pub docs_updated: u64,
+    pub docs_deleted: u64,
     /// Longest single donor-CPU occupancy a migration batch caused —
     /// the co-scheduled request's worst-case wait behind the stream.
     pub migration_stall_ns: u64,
@@ -276,6 +297,12 @@ impl ClusterSim {
         let mut next_migration_at = mig_every;
         let mut migrations_done = 0u64;
         let mut migration_stall = 0u64;
+        // CRUD-mix axis bookkeeping.
+        let mut batches_done = 0u64;
+        let mut updates_done = 0u64;
+        let mut deletes_done = 0u64;
+        let mut docs_updated = 0u64;
+        let mut docs_deleted = 0u64;
 
         let mut q: EventQueue<Ev> = EventQueue::new();
         for pe in 0..pes {
@@ -454,6 +481,60 @@ impl ClusterSim {
                 }
                 migrations_done += 1;
             }
+            // CRUD-mix axis: updateMany / deleteMany scatters issued by
+            // the same closed-loop PEs, paced per 100 insert batches.
+            // The router broadcasts (mutation filters rarely pin every
+            // shard key); each shard walks its share of the matches
+            // through the index + raw matcher, rewrites (or kills) the
+            // versions, and pays one group-commit journal frame — the
+            // live engine journals one OP_UPDATE_MANY / OP_DELETE_MANY
+            // frame per batch, full replacement bytes for updates, rids
+            // only for deletes.
+            batches_done += 1;
+            let per_shard = (spec.crud_docs_per_op as f64 / s_count as f64).max(1.0);
+            while updates_done < batches_done * spec.updates_per_100_batches as u64 / 100 {
+                updates_done += 1;
+                docs_updated += spec.crud_docs_per_op;
+                let t_r = router_cpu
+                    .serve((pe as usize) % r_count, t_done, cost.route_batch_fixed_ns as u64);
+                for s in 0..s_count {
+                    let svc = (cost.find_fixed_ns
+                        + per_shard
+                            * (cost.index_candidate_ns
+                                + cost.doc_probe_ns
+                                + cost.update_doc_ns)) as u64;
+                    let t_s = shard_cpu.serve(s, t_r + cost.net_latency_ns as u64, svc);
+                    let t_j = ost.serve(
+                        s % o_count,
+                        t_s,
+                        ost_ns(per_shard * cost.journal_bytes_per_doc)
+                            + cost.journal_frame_ns as u64,
+                    );
+                    t_done = t_done.max(t_j + cost.net_latency_ns as u64);
+                }
+            }
+            while deletes_done < batches_done * spec.deletes_per_100_batches as u64 / 100 {
+                deletes_done += 1;
+                docs_deleted += spec.crud_docs_per_op;
+                let t_r = router_cpu
+                    .serve((pe as usize) % r_count, t_done, cost.route_batch_fixed_ns as u64);
+                for s in 0..s_count {
+                    let svc = (cost.find_fixed_ns
+                        + per_shard
+                            * (cost.index_candidate_ns
+                                + cost.doc_probe_ns
+                                + cost.delete_doc_ns)) as u64;
+                    let t_s = shard_cpu.serve(s, t_r + cost.net_latency_ns as u64, svc);
+                    // Rid-only journal frame: 8 bytes per killed doc.
+                    let t_j = ost.serve(
+                        s % o_count,
+                        t_s,
+                        ost_ns(per_shard * 8.0) + cost.journal_frame_ns as u64,
+                    );
+                    t_done = t_done.max(t_j + cost.net_latency_ns as u64);
+                    shard_docs[s] -= (per_shard as u64).min(shard_docs[s]);
+                }
+            }
             // Ack back to the client; next batch.
             let t_ack = t_done + cost.net_latency_ns as u64;
             ingest_end = ingest_end.max(t_ack);
@@ -579,6 +660,10 @@ impl ClusterSim {
             checkpoints,
             rebases,
             migrations: migrations_done,
+            updates: updates_done,
+            deletes: deletes_done,
+            docs_updated,
+            docs_deleted,
             migration_stall_ns: migration_stall,
             chunks: shard_chunks.iter().sum(),
             util_shard,
@@ -836,6 +921,45 @@ mod tests {
             "batch=256 stall {} must be far below batch=16384 stall {}",
             rs.migration_stall_ns,
             rb.migration_stall_ns
+        );
+    }
+
+    #[test]
+    fn crud_mix_costs_ingest_time_but_not_corpus() {
+        let base = ClusterSim::new(small_spec(32)).run();
+        assert_eq!(base.updates, 0, "axis off by default");
+        assert_eq!(base.deletes, 0);
+        let mut spec = small_spec(32);
+        spec.updates_per_100_batches = 20;
+        spec.deletes_per_100_batches = 10;
+        let r = ClusterSim::new(spec).run();
+        assert_eq!(r.docs, base.docs, "mutations must not change the ingested corpus");
+        assert!(r.updates > 0 && r.deletes > 0);
+        assert_eq!(r.docs_updated, r.updates * 256);
+        assert_eq!(r.docs_deleted, r.deletes * 256);
+        assert!(
+            r.ingest_virt_ns > base.ingest_virt_ns,
+            "mutation work must cost virtual time"
+        );
+    }
+
+    #[test]
+    fn update_heavy_mix_costs_more_than_delete_heavy() {
+        // Same op cadence; updates rewrite full documents (and journal
+        // their bytes), deletes journal rids — the calibrated terms
+        // must order the two profiles.
+        let mut upd = small_spec(32);
+        upd.updates_per_100_batches = 30;
+        let mut del = small_spec(32);
+        del.deletes_per_100_batches = 30;
+        let ru = ClusterSim::new(upd).run();
+        let rd = ClusterSim::new(del).run();
+        assert_eq!(ru.updates, rd.deletes, "same cadence must yield same op count");
+        assert!(
+            ru.ingest_virt_ns > rd.ingest_virt_ns,
+            "update-heavy ({} ns) must cost more than delete-heavy ({} ns)",
+            ru.ingest_virt_ns,
+            rd.ingest_virt_ns
         );
     }
 

@@ -30,6 +30,13 @@ pub struct CostModel {
     /// Storage-engine insert incl. journal append + 2 index updates
     /// (shard CPU), per document.
     pub insert_doc_ns: f64,
+    /// Storage-engine in-place update per document: kill the old
+    /// version, insert the replacement, maintain both indexes, journal
+    /// one OP_UPDATE_MANY frame per batch (shard CPU).
+    pub update_doc_ns: f64,
+    /// Storage-engine delete per document: kill + index removal, rids
+    /// journaled in one OP_DELETE_MANY frame per batch (shard CPU).
+    pub delete_doc_ns: f64,
     /// Journal bytes per document (OST traffic).
     pub journal_bytes_per_doc: f64,
     /// Fixed cost per journal *frame* (group commit: append + flush),
@@ -94,6 +101,8 @@ impl Default for CostModel {
             route_doc_ns: 25.0,
             dispatch_doc_ns: 120.0,
             insert_doc_ns: 6_000.0,
+            update_doc_ns: 7_000.0,
+            delete_doc_ns: 2_500.0,
             journal_bytes_per_doc: 1_450.0,
             journal_frame_ns: 25_000.0,
             checkpoint_doc_ns: 400.0,
@@ -124,6 +133,8 @@ impl CostModel {
             .set("route_doc_ns", self.route_doc_ns)
             .set("dispatch_doc_ns", self.dispatch_doc_ns)
             .set("insert_doc_ns", self.insert_doc_ns)
+            .set("update_doc_ns", self.update_doc_ns)
+            .set("delete_doc_ns", self.delete_doc_ns)
             .set("journal_bytes_per_doc", self.journal_bytes_per_doc)
             .set("journal_frame_ns", self.journal_frame_ns)
             .set("checkpoint_doc_ns", self.checkpoint_doc_ns)
@@ -154,6 +165,8 @@ impl CostModel {
             route_doc_ns: f("route_doc_ns", d.route_doc_ns),
             dispatch_doc_ns: f("dispatch_doc_ns", d.dispatch_doc_ns),
             insert_doc_ns: f("insert_doc_ns", d.insert_doc_ns),
+            update_doc_ns: f("update_doc_ns", d.update_doc_ns),
+            delete_doc_ns: f("delete_doc_ns", d.delete_doc_ns),
             journal_bytes_per_doc: f("journal_bytes_per_doc", d.journal_bytes_per_doc),
             journal_frame_ns: f("journal_frame_ns", d.journal_frame_ns),
             checkpoint_doc_ns: f("checkpoint_doc_ns", d.checkpoint_doc_ns),
@@ -357,6 +370,33 @@ impl CostModel {
                 (t.elapsed().as_nanos() as f64 / (reps * encs.len()) as f64).max(20.0);
         }
 
+        // --- Shard: update / delete per document, measured as one
+        // batch each (both journal a single frame per batch, like the
+        // live write path). Updates overwrite a prefix of the corpus
+        // with a re-tagged copy; the delete then removes exactly the
+        // replacement records, leaving the rest of the corpus for the
+        // checkpoint calibration below.
+        {
+            let rids = eng.record_ids("m");
+            let k = rids.len().min(if quick { 512 } else { 2048 }).max(1);
+            let updates: Vec<(crate::mongo::storage::RecordId, crate::mongo::bson::Document)> =
+                rids[..k]
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &rid)| (rid, gen.doc_at(i as u64).set("flag", 1i64)))
+                    .collect();
+            let t = Instant::now();
+            let new_rids = eng.update_many("m", &updates)?;
+            eng.sync()?;
+            cm.update_doc_ns =
+                (t.elapsed().as_nanos() as f64 / k as f64).max(50.0);
+            let t = Instant::now();
+            eng.delete_many("m", &new_rids)?;
+            eng.sync()?;
+            cm.delete_doc_ns =
+                (t.elapsed().as_nanos() as f64 / k as f64).max(50.0);
+        }
+
         // --- Migration: a moved document is fetched + filtered once on
         // the donor and indexed + journaled once on the recipient, so
         // the per-document cost composes from the two terms measured
@@ -470,6 +510,8 @@ mod tests {
         assert!(cm.gen_doc_ns > 100.0 && cm.gen_doc_ns < 1e6, "gen {}", cm.gen_doc_ns);
         assert!(cm.doc_bytes > 500.0 && cm.doc_bytes < 5000.0, "bytes {}", cm.doc_bytes);
         assert!(cm.insert_doc_ns > 200.0 && cm.insert_doc_ns < 1e7, "ins {}", cm.insert_doc_ns);
+        assert!(cm.update_doc_ns >= 50.0 && cm.update_doc_ns < 1e7, "upd {}", cm.update_doc_ns);
+        assert!(cm.delete_doc_ns >= 50.0 && cm.delete_doc_ns < 1e7, "del {}", cm.delete_doc_ns);
         assert!(cm.route_doc_ns >= 1.0 && cm.route_doc_ns < 1e5);
         assert!(cm.index_candidate_ns >= 10.0);
         assert!(cm.result_doc_ns > 50.0);

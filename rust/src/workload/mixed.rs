@@ -1,0 +1,453 @@
+//! Mixed CRUD workload driver — reads, inserts, updates, and deletes
+//! interleaved over the live cluster.
+//!
+//! The paper's workloads are ingest-then-query; operational clusters
+//! also re-tag samples (`updateMany`) and expire old windows
+//! (`deleteMany`). This driver generalizes the PE model of
+//! [`super::ingest`]: each PE thread owns a disjoint timestamp column,
+//! draws operations from a weighted mix, and targets nodes by a
+//! zipfian popularity law — a few hot nodes absorb most of the update
+//! and read traffic, the realistic worst case for the shard holding
+//! the hot chunk.
+//!
+//! Three named profiles drive the `fig_crud` bench and the live/DES
+//! comparison (docs/EXPERIMENTS.md):
+//!
+//! * `update_heavy` — re-tagging burst: updates dominate mutations.
+//! * `delete_heavy` — retention storm: deletes dominate mutations.
+//! * `time_window_churn` — steady ingest with the *oldest* time
+//!   window expired cluster-wide as new data lands (ts-only broadcast
+//!   deletes, the churn pattern of a ring-buffer retention policy).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::ovis::OvisGenerator;
+use crate::config::WorkloadConfig;
+use crate::metrics::Histogram;
+use crate::mongo::bson::{Document, Value};
+use crate::mongo::client::MongoClient;
+use crate::mongo::query::{CmpOp, Filter, FindOptions};
+use crate::util::rng::Pcg32;
+
+/// Operation weights (relative, not percentages).
+#[derive(Clone, Copy, Debug)]
+pub struct OpMix {
+    pub reads: u32,
+    pub inserts: u32,
+    pub updates: u32,
+    pub deletes: u32,
+}
+
+impl OpMix {
+    pub fn total(&self) -> u32 {
+        self.reads + self.inserts + self.updates + self.deletes
+    }
+}
+
+/// Named workload profiles (the bench's sweep axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixProfile {
+    UpdateHeavy,
+    DeleteHeavy,
+    TimeWindowChurn,
+}
+
+impl MixProfile {
+    pub const ALL: [MixProfile; 3] =
+        [MixProfile::UpdateHeavy, MixProfile::DeleteHeavy, MixProfile::TimeWindowChurn];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MixProfile::UpdateHeavy => "update_heavy",
+            MixProfile::DeleteHeavy => "delete_heavy",
+            MixProfile::TimeWindowChurn => "time_window_churn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MixProfile> {
+        Self::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    pub fn weights(self) -> OpMix {
+        match self {
+            MixProfile::UpdateHeavy => {
+                OpMix { reads: 30, inserts: 30, updates: 35, deletes: 5 }
+            }
+            MixProfile::DeleteHeavy => {
+                OpMix { reads: 30, inserts: 30, updates: 5, deletes: 35 }
+            }
+            MixProfile::TimeWindowChurn => {
+                OpMix { reads: 30, inserts: 50, updates: 5, deletes: 15 }
+            }
+        }
+    }
+}
+
+/// Zipfian sampler over ranks `0..n` (rank 0 hottest): cumulative
+/// `1/(i+1)^s` table, inverted by binary search.
+pub struct Zipf {
+    cum: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: u32, s: f64) -> Self {
+        let n = n.max(1);
+        let mut cum = Vec::with_capacity(n as usize);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += 1.0 / f64::from(i + 1).powf(s);
+            cum.push(acc);
+        }
+        for c in &mut cum {
+            *c /= acc;
+        }
+        Self { cum }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> u32 {
+        let u = rng.next_f64();
+        let i = self.cum.partition_point(|&c| c < u);
+        i.min(self.cum.len() - 1) as u32
+    }
+}
+
+/// Outcome of a mixed run.
+#[derive(Clone, Debug)]
+pub struct MixedReport {
+    pub profile: &'static str,
+    pub ops: u64,
+    pub reads: u64,
+    pub inserts: u64,
+    pub updates: u64,
+    pub deletes: u64,
+    pub docs_read: u64,
+    pub docs_inserted: u64,
+    pub docs_matched: u64,
+    pub docs_modified: u64,
+    pub docs_deleted: u64,
+    pub wall_ns: u64,
+    /// Per-operation end-to-end latency, all classes pooled.
+    pub latency: Histogram,
+    pub pes: usize,
+}
+
+impl MixedReport {
+    pub fn ops_per_sec(&self) -> f64 {
+        self.ops as f64 * 1e9 / self.wall_ns.max(1) as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} ops ({}r/{}i/{}u/{}d) in {:.2}s over {} PEs → {:.0} ops/s; \
+             +{} docs, ~{} modified, -{} deleted; latency p50 {} p95 {}",
+            self.profile,
+            self.ops,
+            self.reads,
+            self.inserts,
+            self.updates,
+            self.deletes,
+            self.wall_ns as f64 / 1e9,
+            self.pes,
+            self.ops_per_sec(),
+            self.docs_inserted,
+            self.docs_modified,
+            self.docs_deleted,
+            crate::util::fmt::human_duration_ns(self.latency.p50()),
+            crate::util::fmt::human_duration_ns(self.latency.p95()),
+        )
+    }
+}
+
+/// Mixed CRUD driver. `ops` operations are split across `pes` PE
+/// threads; each PE writes timestamps in its own disjoint column so
+/// deletes/updates by one PE never race another PE's bookkeeping.
+pub struct MixedDriver {
+    pub gen: OvisGenerator,
+    pub profile: MixProfile,
+    pub ops: u64,
+    pub pes: usize,
+    /// Documents per insert operation.
+    pub insert_batch: usize,
+    /// Minutes covered by one read / update / delete window.
+    pub window: u32,
+    /// Zipf skew for node popularity (0 = uniform).
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+/// Width of one PE's private timestamp column.
+const PE_TS_STRIDE: u32 = 1 << 24;
+
+impl MixedDriver {
+    pub fn new(cfg: WorkloadConfig, profile: MixProfile, ops: u64, pes: usize) -> Self {
+        Self {
+            gen: OvisGenerator::new(cfg),
+            profile,
+            ops,
+            pes: pes.max(1),
+            insert_batch: 32,
+            window: 16,
+            zipf_s: 1.1,
+            seed: 0xC0DE,
+        }
+    }
+
+    pub fn run(&self, client: &MongoClient) -> Result<MixedReport> {
+        let gen = Arc::new(self.gen.clone());
+        let nodes = gen.config().monitored_nodes.max(1);
+        let mix = self.profile.weights();
+        let total_w = mix.total().max(1);
+        let profile = self.profile;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for pe in 0..self.pes {
+            let gen = gen.clone();
+            let client = client.pinned(pe);
+            let ops = per_pe_ops(self.ops, self.pes, pe);
+            let (insert_batch, window, zipf_s, seed) =
+                (self.insert_batch.max(1), self.window.max(1), self.zipf_s, self.seed);
+            handles.push(std::thread::spawn(move || -> Result<PeTally> {
+                let mut rng = Pcg32::new(seed, pe as u64 + 1);
+                let zipf = Zipf::new(nodes, zipf_s);
+                let mut tally = PeTally::default();
+                // This PE's private timestamp column: inserts advance
+                // `next_ts`, churn deletes trail behind at `expired`.
+                let base = pe as u32 * PE_TS_STRIDE;
+                let mut next_ts = base;
+                let mut expired = base;
+                for _ in 0..ops {
+                    let pick = rng.next_bounded(total_w);
+                    let t = Instant::now();
+                    if pick < mix.reads {
+                        let node = zipf.sample(&mut rng);
+                        let (lo, hi) = span_window(&mut rng, base, next_ts, window);
+                        let docs = client
+                            .find(
+                                window_filter(&[node], lo, hi),
+                                FindOptions::default().batch_size(512),
+                            )
+                            .map_err(|e| anyhow::anyhow!("find: {e}"))?
+                            .count();
+                        tally.reads += 1;
+                        tally.docs_read += docs as u64;
+                    } else if pick < mix.reads + mix.inserts {
+                        let batch: Vec<Document> = (0..insert_batch)
+                            .map(|_| {
+                                let node = zipf.sample(&mut rng);
+                                let d = gen.doc(node, next_ts);
+                                next_ts += 1;
+                                d
+                            })
+                            .collect();
+                        let n = batch.len();
+                        client
+                            .insert_many(batch)
+                            .map_err(|e| anyhow::anyhow!("insert_many: {e}"))?;
+                        tally.inserts += 1;
+                        tally.docs_inserted += n as u64;
+                    } else if pick < mix.reads + mix.inserts + mix.updates {
+                        // Re-tag one hot node's recent window.
+                        let node = zipf.sample(&mut rng);
+                        let (lo, hi) = span_window(&mut rng, base, next_ts, window);
+                        let set = Document::new()
+                            .set("flag", 1i64)
+                            .set("m00", rng.next_f64());
+                        let rep = client
+                            .update_many(window_filter(&[node], lo, hi), set)
+                            .map_err(|e| anyhow::anyhow!("update_many: {e}"))?;
+                        tally.updates += 1;
+                        tally.docs_matched += rep.matched;
+                        tally.docs_modified += rep.modified;
+                    } else {
+                        let filter = if profile == MixProfile::TimeWindowChurn {
+                            // Expire the oldest not-yet-expired window of
+                            // this PE's column, across every node.
+                            let lo = expired;
+                            let hi = lo.saturating_add(window).min(next_ts);
+                            expired = hi;
+                            ts_filter(lo, hi)
+                        } else {
+                            let node = zipf.sample(&mut rng);
+                            let (lo, hi) = span_window(&mut rng, base, next_ts, window);
+                            window_filter(&[node], lo, hi)
+                        };
+                        let rep = client
+                            .delete_many(filter)
+                            .map_err(|e| anyhow::anyhow!("delete_many: {e}"))?;
+                        tally.deletes += 1;
+                        tally.docs_deleted += rep.deleted;
+                    }
+                    tally.latency.record(t.elapsed().as_nanos() as u64);
+                }
+                Ok(tally)
+            }));
+        }
+        let mut agg = PeTally::default();
+        for h in handles {
+            let t = h.join().expect("mixed PE panicked")?;
+            agg.merge(&t);
+        }
+        let wall_ns = t0.elapsed().as_nanos() as u64;
+        Ok(MixedReport {
+            profile: self.profile.name(),
+            ops: agg.reads + agg.inserts + agg.updates + agg.deletes,
+            reads: agg.reads,
+            inserts: agg.inserts,
+            updates: agg.updates,
+            deletes: agg.deletes,
+            docs_read: agg.docs_read,
+            docs_inserted: agg.docs_inserted,
+            docs_matched: agg.docs_matched,
+            docs_modified: agg.docs_modified,
+            docs_deleted: agg.docs_deleted,
+            wall_ns,
+            latency: agg.latency,
+            pes: self.pes,
+        })
+    }
+}
+
+#[derive(Default)]
+struct PeTally {
+    reads: u64,
+    inserts: u64,
+    updates: u64,
+    deletes: u64,
+    docs_read: u64,
+    docs_inserted: u64,
+    docs_matched: u64,
+    docs_modified: u64,
+    docs_deleted: u64,
+    latency: Histogram,
+}
+
+impl PeTally {
+    fn merge(&mut self, o: &PeTally) {
+        self.reads += o.reads;
+        self.inserts += o.inserts;
+        self.updates += o.updates;
+        self.deletes += o.deletes;
+        self.docs_read += o.docs_read;
+        self.docs_inserted += o.docs_inserted;
+        self.docs_matched += o.docs_matched;
+        self.docs_modified += o.docs_modified;
+        self.docs_deleted += o.docs_deleted;
+        self.latency.merge(&o.latency);
+    }
+}
+
+/// Operations assigned to PE `pe` of `pes` (remainder spread left).
+fn per_pe_ops(total: u64, pes: usize, pe: usize) -> u64 {
+    let pes = pes as u64;
+    total / pes + u64::from((pe as u64) < total % pes)
+}
+
+/// A random `window`-minute `[lo, hi)` inside `[base, next_ts)`;
+/// degenerates to the first window before anything was inserted.
+fn span_window(rng: &mut Pcg32, base: u32, next_ts: u32, window: u32) -> (u32, u32) {
+    let span = next_ts.saturating_sub(base);
+    if span == 0 {
+        return (base, base + window);
+    }
+    let lo = base + rng.next_bounded(span);
+    (lo, lo.saturating_add(window))
+}
+
+/// The canonical conditional-find shape over an explicit node list.
+pub fn window_filter(nodes: &[u32], lo: u32, hi: u32) -> Filter {
+    Filter::And(vec![
+        Filter::is_in("node_id", nodes.iter().map(|&n| Value::Int(n as i64)).collect()),
+        Filter::Cmp { field: "ts".into(), op: CmpOp::Gte, value: Value::Int(lo as i64) },
+        Filter::Cmp { field: "ts".into(), op: CmpOp::Lt, value: Value::Int(hi as i64) },
+    ])
+}
+
+/// Timestamp-window-only filter (node-agnostic churn deletes).
+pub fn ts_filter(lo: u32, hi: u32) -> Filter {
+    Filter::And(vec![
+        Filter::Cmp { field: "ts".into(), op: CmpOp::Gte, value: Value::Int(lo as i64) },
+        Filter::Cmp { field: "ts".into(), op: CmpOp::Lt, value: Value::Int(hi as i64) },
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Registry;
+    use crate::mongo::cluster::{Cluster, ClusterSpec};
+    use crate::mongo::storage::LocalDir;
+    use crate::runtime::Kernels;
+
+    #[test]
+    fn zipf_prefers_low_ranks() {
+        let zipf = Zipf::new(64, 1.2);
+        let mut rng = Pcg32::seeded(7);
+        let mut head = 0u32;
+        for _ in 0..2_000 {
+            let r = zipf.sample(&mut rng);
+            assert!(r < 64);
+            if r < 8 {
+                head += 1;
+            }
+        }
+        // With s=1.2 the top 8 of 64 ranks carry well over half the mass.
+        assert!(head > 1_000, "zipf head got only {head}/2000 samples");
+    }
+
+    #[test]
+    fn profiles_parse_and_weigh() {
+        for p in MixProfile::ALL {
+            assert_eq!(MixProfile::parse(p.name()), Some(p));
+            assert!(p.weights().total() > 0);
+        }
+        assert_eq!(MixProfile::parse("nope"), None);
+        assert!(
+            MixProfile::UpdateHeavy.weights().updates
+                > MixProfile::UpdateHeavy.weights().deletes
+        );
+        assert!(
+            MixProfile::DeleteHeavy.weights().deletes
+                > MixProfile::DeleteHeavy.weights().updates
+        );
+    }
+
+    #[test]
+    fn mixed_workload_runs_and_counts_balance() {
+        let cluster = Cluster::start(
+            ClusterSpec::small(2, 2),
+            |sid| Ok(Box::new(LocalDir::temp(&format!("mix-{sid}"))?)),
+            Kernels::fallback(),
+            Registry::new(),
+        )
+        .unwrap();
+        let client = cluster.client();
+        for profile in MixProfile::ALL {
+            let cfg = WorkloadConfig {
+                monitored_nodes: 16,
+                metrics_per_doc: 4,
+                ..Default::default()
+            };
+            let mut driver = MixedDriver::new(cfg, profile, 60, 2);
+            driver.insert_batch = 8;
+            let before = client.count_documents(Filter::True).unwrap() as u64;
+            let report = driver.run(&client).unwrap();
+            assert_eq!(report.ops, 60, "{}: every op must run", profile.name());
+            assert!(report.inserts > 0, "{}: no inserts drawn", profile.name());
+            assert!(report.docs_inserted > 0);
+            assert!(report.docs_modified <= report.docs_matched);
+            // The cluster-wide document count must balance the ledger:
+            // inserts add, deletes remove, updates are count-neutral.
+            let after = client.count_documents(Filter::True).unwrap() as u64;
+            assert_eq!(
+                after,
+                before + report.docs_inserted - report.docs_deleted,
+                "{}: count ledger out of balance",
+                profile.name()
+            );
+        }
+        cluster.shutdown();
+    }
+}

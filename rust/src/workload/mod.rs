@@ -4,10 +4,12 @@
 pub mod csvstore;
 pub mod ingest;
 pub mod jobs;
+pub mod mixed;
 pub mod ovis;
 pub mod queries;
 
 pub use ingest::{IngestDriver, IngestReport};
 pub use jobs::UserJob;
+pub use mixed::{MixProfile, MixedDriver, MixedReport, OpMix};
 pub use ovis::OvisGenerator;
 pub use queries::{QueryDriver, QueryReport};

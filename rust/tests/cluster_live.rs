@@ -266,6 +266,31 @@ fn buffered_ingest_and_bulk_writer() {
 }
 
 #[test]
+fn bulk_writer_drop_flushes_the_tail() {
+    // Regression: a BulkWriter dropped part-full used to silently lose
+    // its buffered tail — every push below the flush threshold since
+    // the last flush vanished unless the caller remembered `finish()`.
+    // Drop now flushes best-effort.
+    let cluster = start(ClusterSpec::small(2, 1), "bwdrop");
+    let client = cluster.client();
+    {
+        let mut bw = client.bulk_writer(64, std::time::Duration::from_secs(60));
+        for i in 0..100i64 {
+            bw.push(metric_doc(i, i % 4)).unwrap();
+        }
+        // 64 flushed by the size trigger, 36 still buffered; the
+        // deadline is far away, so only Drop can save them.
+        assert_eq!(bw.buffered(), 36);
+    }
+    assert_eq!(
+        client.count_documents(Filter::True).unwrap(),
+        100,
+        "BulkWriter::drop lost the buffered tail"
+    );
+    cluster.shutdown();
+}
+
+#[test]
 fn concurrent_clients_ingest_safely() {
     let cluster = start(ClusterSpec::small(3, 2), "conc");
     let mut handles = Vec::new();
@@ -544,6 +569,106 @@ fn queries_stay_sorted_and_counts_exact_across_balancer_rounds() {
         .map(|d| d.get_i64("ts").unwrap())
         .collect();
     assert_eq!(ts, (0..corpus).collect::<Vec<i64>>());
+    cluster.shutdown();
+}
+
+#[test]
+fn scatter_count_stays_exact_at_every_instant_across_migrations() {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+    // Headline regression for the orphan-read window (ARCHITECTURE.md
+    // §6.3). Before the fix, a scatter Count issued in the instant
+    // between a migration's publish on the destination and the delete
+    // on the donor could see the moved chunk on both shards — or, with
+    // the old delete-before-publish ordering, on neither. The donor
+    // fence plus the version-uniform count scatter must make Count
+    // exact at *arbitrary* instants, not just at round boundaries,
+    // while updates and deletes hammer the same chunks the balancer is
+    // streaming.
+    let mut spec = ClusterSpec::small(3, 1);
+    spec.chunks_per_shard = 1;
+    spec.store = StoreConfig {
+        shard_key: ShardKeyKind::Ranged,
+        max_chunk_docs: 150,
+        migration_batch_docs: 25,
+        ..Default::default()
+    };
+    let cluster = start(spec, "orphan");
+    let client = cluster.client();
+    let corpus = 1_800i64;
+    for c in (0..corpus).collect::<Vec<i64>>().chunks(300) {
+        let docs: Vec<Document> = c.iter().map(|&i| metric_doc(i, 3)).collect();
+        client.insert_many(docs).unwrap();
+    }
+
+    // Prober: hammers Count over the stable ts range for the whole
+    // run. Updates inside the range are count-neutral and the churn
+    // deletes only touch ts >= 1_000_000, so the expected value is a
+    // constant — any deviation, at any instant, is a lost or
+    // double-counted chunk.
+    let stop = Arc::new(AtomicBool::new(false));
+    let probes = Arc::new(AtomicU64::new(0));
+    let prober = {
+        let stop = stop.clone();
+        let probes = probes.clone();
+        let c = cluster.client();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let n = c.count_documents(Filter::range("ts", 0i64, corpus)).unwrap();
+                assert_eq!(
+                    n as i64, corpus,
+                    "orphan window: count drifted mid-migration"
+                );
+                probes.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+    };
+
+    let mut side_ledger = 0i64;
+    for round in 0..6i64 {
+        // Mutator: updates inside the counted range (MVCC kill+insert
+        // churn on the very chunks being streamed) plus insert→delete
+        // churn outside it, racing the balancer round.
+        let mutator = {
+            let c = cluster.client().pinned(1);
+            std::thread::spawn(move || -> i64 {
+                let mut delta = 0i64;
+                for wave in 0..4i64 {
+                    let lo = (round * 4 + wave) * 70 % corpus;
+                    let rep = c
+                        .update_many(
+                            Filter::range("ts", lo, lo + 70),
+                            Document::new().set("tag", round * 10 + wave),
+                        )
+                        .unwrap();
+                    assert!(rep.modified <= rep.matched);
+                    let base = 1_000_000 + round * 1_000 + wave * 100;
+                    let docs: Vec<Document> =
+                        (0..60).map(|i| metric_doc(base + i, 3)).collect();
+                    delta += c.insert_many(docs).unwrap().inserted as i64;
+                    let del =
+                        c.delete_many(Filter::range("ts", base, base + 30)).unwrap();
+                    assert_eq!(del.deleted, 30, "delete must be exactly-once");
+                    delta -= del.deleted as i64;
+                }
+                delta
+            })
+        };
+        cluster.run_balancer_round().unwrap();
+        side_ledger += mutator.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    prober.join().unwrap();
+    assert!(probes.load(Ordering::Relaxed) > 0, "prober never got a probe in");
+
+    let stats = cluster.stats();
+    assert!(stats.migrations > 0, "skew must have triggered migrations");
+    assert_eq!(stats.migrations_failed, 0);
+    assert_eq!(
+        client.count_documents(Filter::True).unwrap() as i64,
+        corpus + side_ledger,
+        "full-corpus ledger out of balance after migrations + churn"
+    );
     cluster.shutdown();
 }
 

@@ -1,7 +1,8 @@
 //! Randomized differential crash-recovery fuzzing.
 //!
 //! Each seed drives a deterministic op stream (insert / insert_many /
-//! remove / group commit / checkpoint) against both a storage
+//! remove / update_many / delete_many / group commit / checkpoint)
+//! against both a storage
 //! [`Engine`] and a plain in-memory model, snapshotting the model after
 //! every journal frame. The engine is then killed, the on-disk state is
 //! optionally mutated the way a real mid-write kill would leave it —
@@ -189,7 +190,7 @@ fn run_seed(seed: u64) {
     let ops = 80 + rng.next_bounded(120) as usize;
     for _ in 0..ops {
         match rng.next_bounded(100) {
-            0..=34 => {
+            0..=29 => {
                 // One insert = one journal frame.
                 let rid = eng.insert("metrics", &doc(next_ts)).unwrap();
                 assert_eq!(rid, next_rid, "seed {seed}: rid allocation diverged");
@@ -198,7 +199,7 @@ fn run_seed(seed: u64) {
                 next_ts += 1;
                 run.push(&model, next_rid);
             }
-            35..=59 => {
+            30..=49 => {
                 // One batch = one multi-record frame (atomic on replay).
                 let k = 1 + rng.next_bounded(24) as i64;
                 let docs: Vec<Document> = (0..k).map(|i| doc(next_ts + i)).collect();
@@ -211,7 +212,7 @@ fn run_seed(seed: u64) {
                 next_ts += k;
                 run.push(&model, next_rid);
             }
-            60..=74 => {
+            50..=59 => {
                 if model.is_empty() {
                     continue;
                 }
@@ -226,7 +227,63 @@ fn run_seed(seed: u64) {
                 model.remove(&rid);
                 run.push(&model, next_rid);
             }
-            75..=92 => {
+            60..=69 => {
+                // One update batch = one OP_UPDATE_MANY frame: each pair
+                // kills the old rid and installs the replacement under
+                // the next sequential rid. The model mirrors both sides,
+                // so a replay that loses, doubles, or reorders a pair
+                // diverges at the diff (or at the rid probe).
+                if model.is_empty() {
+                    continue;
+                }
+                let keys: Vec<u64> = model.keys().copied().collect();
+                let mut targets = std::collections::BTreeSet::new();
+                for _ in 0..1 + rng.next_bounded(8) {
+                    targets.insert(keys[rng.next_bounded(keys.len() as u32) as usize]);
+                }
+                let mut updates = Vec::with_capacity(targets.len());
+                for &old in &targets {
+                    updates.push((old, doc(next_ts)));
+                    next_ts += 1;
+                }
+                let fresh = eng.update_many("metrics", &updates).unwrap();
+                assert_eq!(fresh.len(), updates.len());
+                for (i, ((old, d), new)) in updates.iter().zip(fresh).enumerate() {
+                    assert_eq!(
+                        new,
+                        next_rid + i as u64,
+                        "seed {seed}: update rid allocation diverged"
+                    );
+                    model.remove(old);
+                    model.insert(new, d.get_i64("ts").expect("fuzz docs carry ts"));
+                }
+                next_rid += updates.len() as u64;
+                run.push(&model, next_rid);
+            }
+            70..=79 => {
+                // One delete batch = one rid-only OP_DELETE_MANY frame.
+                if model.is_empty() {
+                    continue;
+                }
+                let keys: Vec<u64> = model.keys().copied().collect();
+                let mut picked = std::collections::BTreeSet::new();
+                for _ in 0..1 + rng.next_bounded(8) {
+                    picked.insert(keys[rng.next_bounded(keys.len() as u32) as usize]);
+                }
+                let victims: Vec<u64> = picked.into_iter().collect();
+                let removed = eng.delete_many("metrics", &victims).unwrap();
+                assert_eq!(removed.len(), victims.len());
+                for (rid, d) in victims.iter().zip(removed) {
+                    assert_eq!(
+                        d.get_i64("ts"),
+                        model.get(rid).copied(),
+                        "seed {seed}: deleted the wrong document"
+                    );
+                    model.remove(rid);
+                }
+                run.push(&model, next_rid);
+            }
+            80..=93 => {
                 // Group commit + background compaction hook — exactly
                 // the shard-server write pattern.
                 eng.sync().unwrap();

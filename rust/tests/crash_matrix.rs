@@ -778,6 +778,55 @@ fn kill_between_source_delete_and_publish_rolls_forward() {
 }
 
 #[test]
+fn kill_between_publish_and_source_delete_rolls_forward() {
+    let roots = mig_roots("mig-publish");
+    {
+        let cluster = mig_cluster(&roots);
+        let client = cluster.client();
+        client.insert_many((0..350).map(mig_doc).collect()).unwrap();
+        assert_eq!(stream_batches(&cluster, 100, None), 350);
+        let shards = cluster.shard_mailboxes();
+        rpc(&shards[1], |reply| ShardRequest::CommitStaged { reply })
+            .unwrap()
+            .unwrap();
+        // The live M4 order publishes FIRST (the orphan-read fix): the
+        // destination goes live while the donor still holds its copy,
+        // and the kill lands before the donor delete or ClearStaged.
+        let n = rpc(&shards[1], |reply| ShardRequest::PublishStaged { reply })
+            .unwrap()
+            .unwrap();
+        assert_eq!(n, 350);
+        cluster.shutdown();
+    }
+    {
+        // Restart: the drained staging meta + marker survive, so
+        // recovery rolls forward — the donor delete removes the orphan
+        // copy, the re-publish moves nothing, ClearStaged retires the
+        // meta. No document is lost or duplicated.
+        let cluster = mig_cluster(&roots);
+        assert_eq!(cluster.metrics().counter("cluster.migrations_recovered").get(), 1);
+        let client = cluster.client();
+        assert_eq!(
+            client.count_documents(Filter::True).unwrap(),
+            350,
+            "recovery must delete the donor's orphan copy exactly once"
+        );
+        assert_eq!(cluster.stats().per_shard_docs, vec![0, 350]);
+        for s in cluster.shard_stats() {
+            assert_eq!(s.staged_docs, 0);
+        }
+        cluster.shutdown();
+    }
+    {
+        // Idempotent: a third job finds nothing to reconcile.
+        let cluster = mig_cluster(&roots);
+        assert_eq!(cluster.metrics().counter("cluster.migrations_recovered").get(), 0);
+        assert_eq!(cluster.client().count_documents(Filter::True).unwrap(), 350);
+        cluster.shutdown();
+    }
+}
+
+#[test]
 fn kill_during_post_delete_compaction_recovers_exactly() {
     let roots = mig_roots("mig-compact");
     {
@@ -947,5 +996,133 @@ fn kill_mid_getmore_under_open_snapshot_drops_reader_state() {
     assert_eq!(ctx.open_cursors(), 0, "reader state starts empty after recovery");
     let (tx, rx) = mpsc::channel();
     ctx.serve(ReadRequest::Count { filter: Filter::True, reply: tx });
-    assert_eq!(rx.recv().unwrap().unwrap(), 40);
+    assert_eq!(rx.recv().unwrap().unwrap().n, 40);
+}
+
+// --- CRUD journal ops kill windows (OP_UPDATE_MANY / OP_DELETE_MANY) --
+//
+// The full write path journals one frame per batch: an update frame
+// carries `old_rid → new doc bytes` pairs, a delete frame carries rids
+// only. The two windows that matter: a kill *after* the sync must
+// replay the frame exactly once (no lost update, no double delete); a
+// kill *before* the sync must leave the pre-mutation state — frames
+// are atomic, never partial.
+
+// lint: journal-op(OP_UPDATE_MANY) — the synced batch below is one
+// update frame (kill old rid + insert new version per record); the kill
+// lands before any checkpoint covers it, so recovery must replay each
+// pair exactly once.
+#[test]
+fn kill_after_synced_update_replays_the_update_frame_exactly_once() {
+    use hpcstore::mongo::bson::Value;
+    use hpcstore::mongo::storage::RecordId;
+
+    let opts = manual(4);
+    let dir = LocalDir::temp("cm-upd").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        let rids: Vec<RecordId> = eng.insert_many("metrics", &batch(0, 30)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap(); // gen 1: the update frame is the only tail
+        let updates: Vec<(RecordId, Document)> = rids
+            .iter()
+            .take(10)
+            .enumerate()
+            .map(|(i, &rid)| (rid, doc(i as u64).set("rev", 1i64)))
+            .collect();
+        eng.update_many("metrics", &updates).unwrap();
+        eng.sync().unwrap();
+        // Kill: the frame is durable, nothing covers it yet.
+    }
+    let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 30, "updates are count-neutral");
+    assert_eq!(
+        eng.recovery_report().frames_replayed,
+        1,
+        "exactly the one update frame"
+    );
+    // Every kill+insert pair applied once: 10 documents carry the new
+    // version, the other 20 the old, and none twice.
+    let reader = eng.reader();
+    let snap = reader.snapshot();
+    let view = reader.view(&snap).unwrap();
+    let mut seen = 0u64;
+    let mut updated = 0u64;
+    for (_rid, bytes) in view.scan_raw_from("metrics", None) {
+        let d = Document::decode(bytes).unwrap();
+        seen += 1;
+        if d.get("rev").and_then(Value::as_i64) == Some(1) {
+            updated += 1;
+        }
+    }
+    assert_eq!(seen, 30);
+    assert_eq!(updated, 10, "replayed update frame must hit each target once");
+}
+
+// lint: journal-op(OP_DELETE_MANY) — the synced rid-only batch below is
+// one delete frame; replaying it twice would remove documents that were
+// never targeted, replaying it zero times would resurrect the victims.
+#[test]
+fn kill_after_synced_delete_replays_the_delete_frame_exactly_once() {
+    use hpcstore::mongo::bson::Value;
+    use hpcstore::mongo::storage::RecordId;
+
+    let opts = manual(4);
+    let dir = LocalDir::temp("cm-del").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        let rids: Vec<RecordId> = eng.insert_many("metrics", &batch(0, 40)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap();
+        // Every third document: 14 victims of 40.
+        let victims: Vec<RecordId> = rids.iter().copied().step_by(3).collect();
+        let removed = eng.delete_many("metrics", &victims).unwrap();
+        assert_eq!(removed.len(), victims.len());
+        eng.sync().unwrap();
+        // Kill: the delete frame is durable, the checkpoint predates it.
+    }
+    let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 26);
+    assert_eq!(eng.recovery_report().frames_replayed, 1);
+    // The surviving ts set is exactly the complement of the victims.
+    let reader = eng.reader();
+    let snap = reader.snapshot();
+    let view = reader.view(&snap).unwrap();
+    let mut ts: Vec<i64> = view
+        .scan_raw_from("metrics", None)
+        .map(|(_rid, bytes)| {
+            Document::decode(bytes).unwrap().get("ts").and_then(Value::as_i64).unwrap()
+        })
+        .collect();
+    ts.sort_unstable();
+    let expect: Vec<i64> = (0..40i64).filter(|t| t % 3 != 0).collect();
+    assert_eq!(ts, expect, "replayed delete frame must remove exactly the victims");
+}
+
+#[test]
+fn unsynced_update_and_delete_frames_vanish_at_the_kill() {
+    use hpcstore::mongo::storage::RecordId;
+
+    let opts = manual(4);
+    let dir = LocalDir::temp("cm-crud-unsynced").unwrap();
+    let root = dir.describe();
+    {
+        let mut eng = Engine::open_with(Box::new(dir), opts.clone()).unwrap();
+        eng.create_collection("metrics");
+        let rids: Vec<RecordId> = eng.insert_many("metrics", &batch(0, 20)).unwrap();
+        eng.sync().unwrap();
+        eng.checkpoint().unwrap();
+        let updates: Vec<(RecordId, Document)> =
+            vec![(rids[0], doc(0).set("rev", 7i64))];
+        eng.update_many("metrics", &updates).unwrap();
+        eng.delete_many("metrics", &rids[5..10]).unwrap();
+        // Kill before the sync: both frames were buffered only.
+    }
+    let eng = Engine::open_with(Box::new(LocalDir::new(&root).unwrap()), opts).unwrap();
+    assert_eq!(eng.stats("metrics").docs, 20, "unsynced CRUD frames must vanish");
+    assert_eq!(eng.recovery_report().frames_replayed, 0);
 }

@@ -31,11 +31,11 @@ use hpcstore::mongo::storage::index::IndexSpec;
 use hpcstore::mongo::storage::{
     Engine, EngineOptions, LocalDir, RecordId, ReadView, Snapshot, StoreReader,
 };
-use hpcstore::mongo::wire::WireError;
+use hpcstore::mongo::wire::{CountReply, WireError};
 use hpcstore::runtime::Kernels;
 use hpcstore::util::rng::Pcg32;
 
-type CountRx = mpsc::Receiver<Result<u64, WireError>>;
+type CountRx = mpsc::Receiver<Result<CountReply, WireError>>;
 
 fn seeds() -> Vec<u64> {
     match std::env::var("SNAPSHOT_FUZZ_SEEDS") {
@@ -149,22 +149,30 @@ fn engine_battery(seed: u64) {
         .collect();
 
     // Writer: deterministic op stream. Unique, monotone timestamps so
-    // every document is distinguishable in checksums.
+    // every document is distinguishable in checksums. `live` remembers
+    // each record's (rid, ts, node) so updates can rebuild the exact
+    // key fields of the document they overwrite.
     let mut rng = Pcg32::seeded(seed);
     let mut next_ts = 0i64;
-    let mut live: Vec<RecordId> = Vec::new();
+    let mut live: Vec<(RecordId, i64, i64)> = Vec::new();
     for _step in 0..150 {
-        match rng.next_bounded(10) {
+        match rng.next_bounded(12) {
             0..=6 => {
                 let n = 1 + rng.next_bounded(24) as usize;
+                let mut meta = Vec::with_capacity(n);
                 let batch: Vec<Document> = (0..n)
                     .map(|_| {
-                        let d = doc(next_ts, rng.next_bounded(8) as i64);
+                        let node = rng.next_bounded(8) as i64;
+                        let d = doc(next_ts, node);
+                        meta.push((next_ts, node));
                         next_ts += 1;
                         d
                     })
                     .collect();
-                live.extend(eng.insert_many("metrics", &batch).unwrap());
+                let rids = eng.insert_many("metrics", &batch).unwrap();
+                live.extend(
+                    rids.into_iter().zip(meta).map(|(r, (ts, node))| (r, ts, node)),
+                );
             }
             7 | 8 => {
                 for _ in 0..rng.next_bounded(8) {
@@ -172,8 +180,41 @@ fn engine_battery(seed: u64) {
                         break;
                     }
                     let i = rng.next_bounded(live.len() as u32) as usize;
-                    let rid = live.swap_remove(i);
+                    let (rid, _, _) = live.swap_remove(i);
                     eng.remove("metrics", rid).unwrap();
+                }
+            }
+            9 | 10 => {
+                // Overwrite a few live documents (same ts/node_id, new
+                // payload): the engine kills the old rid and inserts the
+                // replacement at one epoch. A snapshot pinned on either
+                // side must serve each updated document exactly once —
+                // never zero (lost to the kill) nor twice (old version
+                // plus its replacement) — which the count/checksum
+                // differential below would catch.
+                let mut picked = std::collections::HashSet::new();
+                let mut targets = Vec::new();
+                for _ in 0..rng.next_bounded(6) {
+                    if live.is_empty() {
+                        break;
+                    }
+                    let i = rng.next_bounded(live.len() as u32) as usize;
+                    if picked.insert(i) {
+                        targets.push(i);
+                    }
+                }
+                if !targets.is_empty() {
+                    let updates: Vec<(RecordId, Document)> = targets
+                        .iter()
+                        .map(|&i| {
+                            let (rid, ts, node) = live[i];
+                            (rid, doc(ts, node).set("rev", next_ts))
+                        })
+                        .collect();
+                    let new_rids = eng.update_many("metrics", &updates).unwrap();
+                    for (&i, &new_rid) in targets.iter().zip(&new_rids) {
+                        live[i].0 = new_rid;
+                    }
                 }
             }
             _ => {
@@ -293,7 +334,7 @@ fn pool_battery(seed: u64) {
     // its submit bound and now, and the corpus only ever grew.
     let final_count = committed.load(Ordering::SeqCst);
     for (rx, lo_bound) in counts {
-        let got = rx.recv().expect("pool dropped a count reply").expect("count failed");
+        let got = rx.recv().expect("pool dropped a count reply").expect("count failed").n;
         assert!(
             got >= lo_bound && got <= final_count,
             "seed {seed}: count {got} outside its epoch window [{lo_bound}, {final_count}]"
@@ -337,6 +378,57 @@ fn pool_battery(seed: u64) {
     pool.shutdown();
     eng.reclaim();
     assert_eq!(eng.snapshots_open(), 0, "seed {seed}: pool leaked snapshot pins");
+}
+
+/// Overwrite visibility, pinned explicitly: a snapshot opened *before*
+/// an update batch serves only pre-update versions — all of them,
+/// exactly once — while a snapshot opened after serves only the
+/// replacements.
+#[test]
+fn pinned_snapshot_reads_only_pre_update_versions() {
+    let mut eng = open_engine("snapupd");
+    let docs: Vec<Document> = (0..32i64).map(|i| doc(i, i % 4)).collect();
+    let rids = eng.insert_many("metrics", &docs).unwrap();
+    eng.sync().unwrap();
+    let reader = eng.reader();
+    let snap = reader.snapshot();
+
+    // Overwrite every document after the pin, then reclaim: the pin
+    // must hold the dead pre-update versions back.
+    let updates: Vec<(RecordId, Document)> = rids
+        .iter()
+        .enumerate()
+        .map(|(i, &rid)| (rid, doc(i as i64, (i as i64) % 4).set("rev", 1i64)))
+        .collect();
+    eng.update_many("metrics", &updates).unwrap();
+    eng.sync().unwrap();
+    eng.reclaim();
+
+    let view = reader.view(&snap).expect("pinned snapshot survives reclaim");
+    let mut pre = 0u64;
+    for (_rid, bytes) in view.scan_raw_from("metrics", None) {
+        let d = Document::decode(bytes).unwrap();
+        assert!(d.get("rev").is_none(), "pinned view leaked a post-update version");
+        pre += 1;
+    }
+    assert_eq!(pre, 32, "pinned view must serve every pre-update version exactly once");
+    drop(view);
+
+    let snap2 = reader.snapshot();
+    let view2 = reader.view(&snap2).unwrap();
+    let mut post = 0u64;
+    for (_rid, bytes) in view2.scan_raw_from("metrics", None) {
+        let d = Document::decode(bytes).unwrap();
+        assert_eq!(d.get_i64("rev"), Some(1), "fresh view must serve the replacement");
+        post += 1;
+    }
+    assert_eq!(post, 32);
+    drop(view2);
+
+    drop(snap);
+    drop(snap2);
+    eng.reclaim();
+    assert_eq!(eng.garbage_len(), 0, "unpinning must release the overwritten versions");
 }
 
 #[test]
