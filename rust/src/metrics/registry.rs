@@ -102,6 +102,11 @@ pub mod names {
     /// Filter-driven writes re-scattered after a `MigrationInFlight`
     /// rejection (per blocked shard per pass).
     pub const ROUTER_WRITE_BLOCKED_RETRIES: &str = "router.write_blocked_retries";
+    /// Filter-driven writes re-broadcast to *all* shards because the
+    /// chunk-map version moved mid-retry: a migration may have made
+    /// matching documents live on a shard that already applied, so its
+    /// `done` flag is no longer trustworthy.
+    pub const ROUTER_WRITE_RESCATTERS: &str = "router.write_rescatters";
     /// Count scatters repeated because the per-shard replies carried
     /// different chunk-map versions (version-uniform count retry).
     pub const ROUTER_COUNT_RETRIES: &str = "router.count_retries";
@@ -178,6 +183,7 @@ pub mod names {
         (ROUTER_MAP_REFRESH, "counter"),
         (ROUTER_STALE_RETRIES, "counter"),
         (ROUTER_WRITE_BLOCKED_RETRIES, "counter"),
+        (ROUTER_WRITE_RESCATTERS, "counter"),
         (ROUTER_COUNT_RETRIES, "counter"),
         (ROUTER_ORPHANS_FILTERED, "counter"),
         (CONFIG_GET_MAP, "counter"),

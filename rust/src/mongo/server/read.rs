@@ -79,7 +79,12 @@ pub enum ReadRequest {
 ///
 /// Both filters default to `None` — the fence costs two `Option` checks
 /// per request outside migration windows.
-#[derive(Clone, Copy, Debug, Default)]
+///
+/// `PartialEq` backs the fence/pin stability check in
+/// [`ReadContext::pin_with_fence`]: a read's fence copy and snapshot
+/// are only used together once the fence reads identically on both
+/// sides of the pin.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ReadFence {
     /// Chunk-map version the fence reflects; `Count` replies carry it
     /// so the router can insist on a version-uniform scatter.
@@ -116,7 +121,11 @@ impl ReadFence {
         if let (Some(key), Some((lo, hi))) = (self.key.as_ref(), self.exclude_range) {
             let d = RawDoc::new(raw);
             if let (Some(node), Some(ts)) = (d.get_i64("node_id"), d.get_i64("ts")) {
-                let pos = key.position(node as u32, ts as u32);
+                // Same negative-value clamp as every other position
+                // site (`ShardKey::position_i64`): the shard fence and
+                // the router fence must classify a document
+                // identically.
+                let pos = key.position_i64(node, ts);
                 if lo <= pos && pos <= hi {
                     return true;
                 }
@@ -356,6 +365,36 @@ impl ReadContext {
         *locked(&self.fence)
     }
 
+    /// Pin a snapshot paired with a fence copy that is **stable across
+    /// the pin**: copy the fence, pin, re-read, and retry the pin until
+    /// the fence did not move in between (a seqlock read). The pairing
+    /// is what the fence's correctness rests on — the publish path
+    /// installs its rid mask *before* the staged documents become
+    /// visible to a fresh snapshot, so any snapshot that already
+    /// contains a freshly published run can only leave this function
+    /// paired with a fence that masks it. Without the re-check, a
+    /// reader could copy a mask-less fence just ahead of the publish,
+    /// then pin a snapshot containing the published documents and serve
+    /// them unmasked under the pre-publish map version — transiently
+    /// double-counting the range against the donor's still-live copies
+    /// while passing the router's version-uniform check.
+    ///
+    /// Fence changes are migration-rate events, so the retry loop
+    /// settles immediately outside a publish/SetMap instant.
+    fn pin_with_fence(&self) -> (ReadFence, Snapshot) {
+        let mut fence = self.fence();
+        loop {
+            let snap = self.reader.snapshot();
+            let now = self.fence();
+            if now == fence {
+                return (fence, snap);
+            }
+            // Fence moved mid-pin: the snapshot unpins on drop, the
+            // fresh fence copy governs the next attempt.
+            fence = now;
+        }
+    }
+
     /// Execute one read request and answer its reply channel. Called by
     /// pool workers and — with `--reader-threads 0` — inline by the
     /// shard event loop; request latency lands in the same histograms
@@ -388,12 +427,13 @@ impl ReadContext {
         opts: &FindOptions,
     ) -> Result<FindReply, WireError> {
         self.metrics.counter(names::SHARD_SNAPSHOT_READS).inc();
-        // Fence before snapshot: if the fence names a published
-        // handoff, the publish committed before the fence was set, so
-        // the snapshot pinned *after* the copy already contains the
-        // published documents the fence's filtering presumes.
-        let fence = self.fence();
-        let snap = self.reader.snapshot();
+        // Fence and snapshot pinned as a stable pair: if the fence
+        // names a published handoff, the publish committed before the
+        // fence was set, so the snapshot already contains the published
+        // documents the fence's filtering presumes — and the seqlock
+        // re-check guarantees the converse pairing for the publish
+        // mask (see `pin_with_fence`).
+        let (fence, snap) = self.pin_with_fence();
         // A freshly pinned snapshot sits at the committed epoch; it can
         // only be below the floor if the writer advanced retention-many
         // epochs between the pin and this view — handled like any other
@@ -449,11 +489,10 @@ impl ReadContext {
     /// decodes nothing at all.
     pub fn handle_count(&self, filter: &Filter) -> Result<CountReply, WireError> {
         self.metrics.counter(names::SHARD_SNAPSHOT_READS).inc();
-        // Fence before snapshot — same ordering argument as in
+        // Fence/snapshot pinned as a stable pair — same argument as in
         // [`Self::handle_find`]. The fence's map version travels in the
         // reply for the router's uniform-version retry.
-        let fence = self.fence();
-        let snap = self.reader.snapshot();
+        let (fence, snap) = self.pin_with_fence();
         let view = self.reader.view(&snap).map_err(expired)?;
         // Counts examine candidates exactly like finds do, so both
         // branches publish the candidate/match tallies — the ratio the
@@ -1158,6 +1197,45 @@ mod tests {
                 None => assert_eq!(find_rx.recv().unwrap().unwrap().docs.len(), 64),
             }
         }
+    }
+
+    #[test]
+    fn fence_clamps_negative_keys_like_every_other_position_site() {
+        // Out-of-domain (negative) key fields clamp to 0 through
+        // `ShardKey::position_i64` — the same convention the router's
+        // `drop_orphans` and the kernel column path use. A wrapping
+        // cast here would position-classify the document differently
+        // on the shard fence vs the router fence, making orphan
+        // filtering inconsistent.
+        let key = ShardKey::ranged();
+        let raw = |node: i64, ts: i64| {
+            Document::new().set("node_id", node).set("ts", ts).encode()
+        };
+        let low_fence = ReadFence {
+            version: 1,
+            key: Some(key),
+            exclude_range: Some((key.position(0, 0), key.position(0, u32::MAX))),
+            mask_rids: None,
+        };
+        // node -3 clamps to 0: inside the node-0 range, excluded.
+        assert!(low_fence.excludes(0, &raw(-3, 7)));
+        // negative ts clamps to 0, still node 0: excluded.
+        assert!(low_fence.excludes(1, &raw(0, -5)));
+        // genuinely out of range: kept.
+        assert!(!low_fence.excludes(2, &raw(1, 7)));
+        // A wrapping cast would have sent node -1 to u32::MAX; the
+        // clamp must keep it out of the top-of-space range.
+        let high_fence = ReadFence {
+            version: 1,
+            key: Some(key),
+            exclude_range: Some((
+                key.position(u32::MAX, 0),
+                key.position(u32::MAX, u32::MAX),
+            )),
+            mask_rids: None,
+        };
+        assert!(!high_fence.excludes(3, &raw(-1, 5)));
+        assert!(high_fence.excludes(4, &raw(u32::MAX as i64, 5)));
     }
 
     #[test]

@@ -637,20 +637,32 @@ impl Router {
 
     /// Scatter a filter-driven write to its target shards, retrying
     /// per-shard rejections until the map settles. Shards that already
-    /// applied the write are never re-sent to (`done`), so each shard
-    /// applies the batch at most once; `StaleVersion` and
-    /// `MigrationInFlight` rejections happen *before* any mutation, so
-    /// retrying them cannot double-apply.
+    /// applied the write are not re-sent to (`done`) **while the map
+    /// stays put**; when the chunk-map version moves mid-retry, every
+    /// `done` flag resets and the write re-broadcasts. The reset is
+    /// what makes the write complete across a concurrent migration: at
+    /// the first pass the destination can apply (successfully, to what
+    /// it owns) while the matching documents of the moving range sit
+    /// invisibly in its *staging* collection — once the migration
+    /// publishes them, a `done` destination would never be re-sent to
+    /// and the write would silently skip the moved range even though
+    /// the donor rejected it all along. Re-application is safe —
+    /// `StaleVersion`/`MigrationInFlight` rejections happen *before*
+    /// any mutation, and a repeated `$set`/delete is idempotent on
+    /// document state — but the reply counters overlap across passes,
+    /// so the caller gets every reply each shard produced (outer index
+    /// = shard, in pass order) and folds them with that in mind.
     fn scatter_write<R, F>(
         &mut self,
         filter: &Filter,
         request: F,
-        mut merge: impl FnMut(R),
-    ) -> Result<(), WireError>
+    ) -> Result<Vec<Vec<R>>, WireError>
     where
         F: Fn(u64, Reply<Result<R, WireError>>) -> ShardRequest,
         R: Send + 'static,
     {
+        let mut replies: Vec<Vec<R>> =
+            (0..self.shards.len()).map(|_| Vec::new()).collect();
         let mut done = vec![false; self.shards.len()];
         let deadline = Instant::now() + Duration::from_secs(2);
         loop {
@@ -663,7 +675,7 @@ impl Router {
                 .filter(|&s| !done[s])
                 .collect();
             if targets.is_empty() {
-                return Ok(());
+                return Ok(replies);
             }
             let mut rxs = Vec::with_capacity(targets.len());
             for &s in &targets {
@@ -683,7 +695,7 @@ impl Router {
                 match r {
                     Ok(rep) => {
                         done[s] = true;
-                        merge(rep);
+                        replies[s].push(rep);
                     }
                     Err(WireError::StaleVersion { .. }) => {
                         self.metrics.counter(names::ROUTER_STALE_RETRIES).inc();
@@ -712,40 +724,61 @@ impl Router {
                 // progress; yield rather than hammer the donor.
                 std::thread::sleep(Duration::from_millis(1));
             }
+            let seen = self.map.version;
             self.refresh_map();
+            if self.map.version != seen {
+                // Chunks moved while shards were rejecting: documents
+                // the write must reach may now be live on a shard that
+                // already replied (published out of its staging, or
+                // rebalanced onto it). Re-send everywhere; shards with
+                // nothing new to apply answer idempotently.
+                self.metrics.counter(names::ROUTER_WRITE_RESCATTERS).inc();
+                done.iter_mut().for_each(|d| *d = false);
+            }
         }
     }
 
     fn handle_update(&mut self, filter: Filter, set: Document) -> Result<UpdateReply, WireError> {
+        let replies = self.scatter_write(&filter, |version, reply| ShardRequest::Update {
+            version,
+            filter: filter.clone(),
+            set: set.clone(),
+            reply,
+        })?;
+        // Fold per-shard reply histories. A shard re-sent after a map
+        // change reports overlapping `matched` counts across its passes
+        // (the same document can match twice), so `matched` takes each
+        // shard's *latest* reply — the freshest view of what it owns
+        // under the settled map. `modified` sums exactly: a `$set`
+        // cannot re-modify a document it already changed.
         let mut out = UpdateReply::default();
-        self.scatter_write(
-            &filter,
-            |version, reply| ShardRequest::Update {
-                version,
-                filter: filter.clone(),
-                set: set.clone(),
-                reply,
-            },
-            |rep: UpdateReply| {
-                out.matched += rep.matched;
-                out.modified += rep.modified;
-            },
-        )?;
+        for shard_replies in &replies {
+            if let Some(last) = shard_replies.last() {
+                out.matched += last.matched;
+            }
+            out.modified += shard_replies.iter().map(|r| r.modified).sum::<u64>();
+        }
+        // A `$set` that un-matches its own documents can make a later
+        // pass's `matched` view miss documents an earlier pass already
+        // modified; never report fewer matched than modified.
+        out.matched = out.matched.max(out.modified);
         Ok(out)
     }
 
     fn handle_delete(&mut self, filter: Filter) -> Result<DeleteReply, WireError> {
-        let mut out = DeleteReply::default();
-        self.scatter_write(
-            &filter,
-            |version, reply| ShardRequest::Delete {
-                version,
-                filter: filter.clone(),
-                reply,
-            },
-            |rep: DeleteReply| out.deleted += rep.deleted,
-        )?;
-        Ok(out)
+        let replies = self.scatter_write(&filter, |version, reply| ShardRequest::Delete {
+            version,
+            filter: filter.clone(),
+            reply,
+        })?;
+        // Deleted counts sum exactly across passes and shards: a
+        // document deletes at most once cluster-wide (in-range copies
+        // are rejected on both migration ends until the handoff clears,
+        // so a donor orphan and its published twin can never both be
+        // deleted).
+        Ok(DeleteReply {
+            deleted: replies.iter().flatten().map(|r| r.deleted).sum(),
+        })
     }
 
     /// Refill `stream` from its shard until it has a buffered head or
@@ -843,7 +876,7 @@ fn drop_orphans(docs: &mut Vec<Document>, key: ShardKey, range: (u64, u64), metr
         let (Some(node), Some(ts)) = (d.get_i64("node_id"), d.get_i64("ts")) else {
             return true;
         };
-        let pos = key.position(node.max(0) as u32, ts.max(0) as u32);
+        let pos = key.position_i64(node, ts);
         !(range.0 <= pos && pos <= range.1)
     });
     if docs.len() < before {
@@ -1032,10 +1065,19 @@ mod tests {
             Document::new().set("load", 1.5),   // no key fields: kept
             doc(5, 999),                        // inside: dropped
             doc(6, 0),                          // outside: kept
+            doc(-2, 10),                        // clamps to node 0: kept
         ];
         drop_orphans(&mut docs, key, range, &metrics);
-        assert_eq!(docs.len(), 3);
+        assert_eq!(docs.len(), 4);
         assert!(docs.iter().all(|d| d.get_i64("node_id") != Some(5)));
         assert_eq!(metrics.counter(names::ROUTER_ORPHANS_FILTERED).get(), 2);
+
+        // Negative keys clamp (never wrap): a node-0 fence catches
+        // them, exactly like the shard-side `ReadFence::excludes`.
+        let zero_range = (key.position(0, 0), key.position(0, u32::MAX));
+        let mut docs = vec![doc(-2, 10), doc(0, -7), doc(1, 10)];
+        drop_orphans(&mut docs, key, zero_range, &metrics);
+        assert_eq!(docs.len(), 1);
+        assert_eq!(docs[0].get_i64("node_id"), Some(1));
     }
 }

@@ -373,19 +373,19 @@ impl ShardServer {
     }
 
     /// Shard-key position of a document (`None` if key fields missing).
+    /// Out-of-domain (negative) values clamp through
+    /// [`crate::mongo::sharding::chunk::ShardKey::position_i64`] — the
+    /// shared convention, so placement, migration, the read fences, and
+    /// the router's orphan filter all classify a document identically.
     fn position_of(&self, doc: &Document) -> Option<u64> {
-        let node = doc.get_i64("node_id")? as u32;
-        let ts = doc.get_i64("ts")? as u32;
-        Some(self.map.key.position(node, ts))
+        Some(self.map.key.position_i64(doc.get_i64("node_id")?, doc.get_i64("ts")?))
     }
 
     /// [`Self::position_of`] read straight from encoded record bytes —
     /// the scans that only need positions (histogram rebuild, range
     /// deletes, migration batching) never decode whole documents.
     fn position_of_raw(&self, doc: &RawDoc) -> Option<u64> {
-        let node = doc.get_i64("node_id")? as u32;
-        let ts = doc.get_i64("ts")? as u32;
-        Some(self.map.key.position(node, ts))
+        Some(self.map.key.position_i64(doc.get_i64("node_id")?, doc.get_i64("ts")?))
     }
 
     /// Bulk-ingest leg on the shard: version handshake, owner filtering,
@@ -551,6 +551,13 @@ impl ShardServer {
     /// range writes wait out the handoff; the router retries with
     /// backoff. Inserts stay allowed — new rids land *ahead* of the
     /// cursor and are picked up by later batches or catch-up.
+    ///
+    /// The check is deliberately role-agnostic: the *destination* of a
+    /// published handoff rejects in-range matches too, until the
+    /// handoff clears from its map. That double-sided refusal is what
+    /// lets the router re-broadcast a write after a mid-retry map
+    /// change without ever applying it to both copies of the range —
+    /// and guarantees exactly one side eventually accepts it.
     #[allow(clippy::type_complexity)]
     fn match_for_write(
         &self,
@@ -783,23 +790,50 @@ impl ShardServer {
         }
         let rids: Vec<RecordId> = data.iter().map(|(r, _)| *r).collect();
         let n = rids.len() as u64;
-        let fresh = self
-            .engine
-            .move_many(STAGING_COLLECTION, COLLECTION, &rids)
-            .map_err(|e| WireError::Server(e.to_string()))?;
+        // Mask the about-to-be-published run from local reads while our
+        // own map still shows the handoff unpublished (the bridge
+        // between the publish applying here and the published map
+        // arriving). The mask must be installed **before** `move_many`
+        // commits: a reader pairs its fence copy with its snapshot via
+        // a seqlock re-check (`ReadContext::pin_with_fence`), and that
+        // check is only airtight if no snapshot can contain the
+        // published run while the fence predates the mask. The run's
+        // exact rids don't exist yet, so the pre-mask is open-ended
+        // from the collection's next rid; this event loop is the only
+        // writer, so nothing else can allocate into that run before the
+        // mask is tightened to the moved rids right after the move.
+        let premask = matches!(self.map.handoff, Some(h) if !h.published);
+        if premask {
+            self.publish_mask =
+                Some((self.engine.next_record_id(COLLECTION), RecordId::MAX));
+            self.refresh_fence();
+        }
+        let fresh = match self.engine.move_many(STAGING_COLLECTION, COLLECTION, &rids) {
+            Ok(fresh) => fresh,
+            Err(e) => {
+                // Nothing moved: the open-ended pre-mask must not
+                // outlive the attempt (it would swallow future inserts).
+                if premask {
+                    self.publish_mask = None;
+                    self.refresh_fence();
+                }
+                return Err(WireError::Server(e.to_string()));
+            }
+        };
+        if premask {
+            // Tighten to the rids actually moved (the move is committed
+            // and visible, so the mask stays even if the sync below
+            // fails); an empty move needs no mask at all.
+            self.publish_mask = match (fresh.iter().min(), fresh.iter().max()) {
+                (Some(&lo), Some(&hi)) => Some((lo, hi)),
+                _ => None,
+            };
+            self.refresh_fence();
+        }
         self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
         for (_, pos) in &data {
             if let Some(pos) = pos {
                 *self.positions.entry(*pos).or_insert(0) += 1;
-            }
-        }
-        // Mask the published run from local reads while our own map
-        // still shows the handoff unpublished (the bridge between the
-        // publish applying here and the published map arriving).
-        if let (Some(&lo), Some(&hi)) = (fresh.iter().min(), fresh.iter().max()) {
-            if matches!(self.map.handoff, Some(h) if !h.published) {
-                self.publish_mask = Some((lo, hi));
-                self.refresh_fence();
             }
         }
         // Keep the staging identity: committed, fully drained. A repeat

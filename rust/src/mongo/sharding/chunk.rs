@@ -39,6 +39,21 @@ impl ShardKey {
         }
     }
 
+    /// Position from raw `i64` key fields, clamping negatives to 0 —
+    /// the **single** out-of-domain convention shared by ingest
+    /// placement, migration batching, the shard-side read fence, the
+    /// router's orphan filter, and the kernel column extraction. Any
+    /// two layers that classified an out-of-domain document differently
+    /// (wrapping cast here, clamp there) would disagree on whether it
+    /// is an orphan, and a migration could lose or double-serve it.
+    #[inline]
+    pub fn position_i64(&self, node_id: i64, ts_min: i64) -> u64 {
+        self.position(
+            node_id.clamp(0, u32::MAX as i64) as u32,
+            ts_min.clamp(0, u32::MAX as i64) as u32,
+        )
+    }
+
     /// Top of the position space.
     pub fn max_position(&self) -> u64 {
         match self.kind {

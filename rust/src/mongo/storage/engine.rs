@@ -1314,6 +1314,19 @@ impl Engine {
             .unwrap_or_default()
     }
 
+    /// Next record id `coll` will allocate. Record ids are allocated
+    /// serially per collection and never reused, so with no interleaved
+    /// write a batch of `n` inserts (or moves into `coll`) lands on
+    /// exactly `[next, next + n)` — the shard publish path pre-masks
+    /// that run *before* the move commits so no reader can pair a
+    /// publish-bearing snapshot with a mask-less fence.
+    pub fn next_record_id(&self, coll: &str) -> RecordId {
+        read_store(&self.store)
+            .collections
+            .get(coll)
+            .map_or(0, |c| c.next_rid)
+    }
+
     /// Look up a secondary index by name, cloned out of the store (the
     /// read path borrows via [`ReadView::index`] instead).
     pub fn index(&self, coll: &str, name: &str) -> Option<Index> {
@@ -2869,6 +2882,35 @@ mod tests {
         assert_eq!(eng.stats("staged").docs, 0, "replayed move must empty the source");
         assert_eq!(eng.stats("m").docs, 7);
         assert_eq!(eng.fetch("m", 4).unwrap().get_i64("ts"), Some(3));
+    }
+
+    #[test]
+    fn next_record_id_predicts_the_move_many_run() {
+        // The shard publish path pre-masks `[next_record_id, MAX]`
+        // before `move_many` commits and then tightens to the moved
+        // rids — that is only sound if, with no interleaved write, the
+        // move lands on exactly the predicted contiguous run.
+        let (mut eng, _) = temp_engine("eng26b", false, false);
+        eng.create_collection("staged");
+        eng.create_collection("m");
+        assert_eq!(eng.next_record_id("m"), 0);
+        assert_eq!(eng.next_record_id("missing"), 0);
+        eng.insert_many("m", &(0..3).map(|t| doc(t, 0)).collect::<Vec<_>>())
+            .unwrap();
+        let staged = eng
+            .insert_many("staged", &(0..5).map(|t| doc(t, 1)).collect::<Vec<_>>())
+            .unwrap();
+        let predicted = eng.next_record_id("m");
+        assert_eq!(predicted, 3);
+        let moved = eng.move_many("staged", "m", &staged).unwrap();
+        assert_eq!(
+            moved,
+            (predicted..predicted + 5).collect::<Vec<RecordId>>(),
+            "move must fill exactly the predicted rid run"
+        );
+        // Removes never give rids back: the prediction only grows.
+        eng.remove_many("m", &moved).unwrap();
+        assert_eq!(eng.next_record_id("m"), predicted + 5);
     }
 
     #[test]

@@ -673,6 +673,106 @@ fn scatter_count_stays_exact_at_every_instant_across_migrations() {
 }
 
 #[test]
+fn filter_writes_reach_documents_migrated_mid_scatter() {
+    // Headline regression for the migration lost-write window
+    // (ARCHITECTURE.md §6.3 item 5). The dangerous interleaving: the
+    // router's first scatter pass succeeds on the *destination* of an
+    // in-flight migration while that shard still holds the moving
+    // range invisibly staged, and the donor rejects with
+    // MigrationInFlight. Once the chunks publish, a router that only
+    // retries not-yet-done shards never re-sends to the destination —
+    // the migrated documents silently miss the update or delete while
+    // the call reports success. Counts never drift (a lost `$set` is
+    // count-neutral), which is exactly why the orphan-count test above
+    // cannot see this bug: only a per-document field assertion can.
+    let mut spec = ClusterSpec::small(3, 1);
+    spec.chunks_per_shard = 1;
+    spec.store = StoreConfig {
+        shard_key: ShardKeyKind::Ranged,
+        max_chunk_docs: 150,
+        migration_batch_docs: 25,
+        ..Default::default()
+    };
+    let cluster = start(spec, "lostwrite");
+    let client = cluster.client();
+    // Skewed corpus: everything on one ranged chunk chain, so every
+    // balancer round streams chunks the writer is stamping.
+    let corpus = 1_500i64;
+    for c in (0..corpus).collect::<Vec<i64>>().chunks(300) {
+        let docs: Vec<Document> = c.iter().map(|&i| metric_doc(i, 3)).collect();
+        client.insert_many(docs).unwrap();
+    }
+
+    for round in 0..5i64 {
+        // Writer: stamps the WHOLE corpus in waves while the balancer
+        // streams chunks, so some scatters are guaranteed to straddle
+        // an active handoff (donor rejecting, destination holding part
+        // of the matches staged).
+        let writer = {
+            let c = cluster.client().pinned(1);
+            std::thread::spawn(move || {
+                let mut last = 0i64;
+                for wave in 0..3i64 {
+                    last = round * 10 + wave;
+                    let rep = c
+                        .update_many(
+                            Filter::range("ts", 0i64, corpus),
+                            Document::new().set("stamp", last),
+                        )
+                        .unwrap();
+                    // Exactly-once across both migration ends: every
+                    // document matched once and changed once — a
+                    // double apply (donor copy + published twin) would
+                    // overshoot, a lost re-send would undershoot.
+                    assert_eq!(rep.matched as i64, corpus, "wave {last}: matched");
+                    assert_eq!(rep.modified as i64, corpus, "wave {last}: modified");
+                }
+                last
+            })
+        };
+        cluster.run_balancer_round().unwrap();
+        let last = writer.join().unwrap();
+        // The write completed, the round settled: EVERY document must
+        // carry the final wave's stamp. One missing stamp is one
+        // document the scatter lost to a mid-write chunk move.
+        let stamped = client
+            .count_documents(Filter::and(vec![
+                Filter::range("ts", 0i64, corpus),
+                Filter::eq("stamp", last),
+            ]))
+            .unwrap();
+        assert_eq!(
+            stamped as i64, corpus,
+            "round {round}: documents missed a racing update_many"
+        );
+    }
+
+    // Delete leg of the same window: remove a band while one more
+    // round runs. Both migration ends refuse in-range matches until
+    // the handoff clears, so a donor orphan and its published twin can
+    // never both report a delete — the tally must be exact.
+    let band = 200i64;
+    let deleter = {
+        let c = cluster.client().pinned(1);
+        std::thread::spawn(move || {
+            c.delete_many(Filter::range("ts", 0i64, band)).unwrap().deleted
+        })
+    };
+    cluster.run_balancer_round().unwrap();
+    assert_eq!(deleter.join().unwrap() as i64, band, "delete must be exactly-once");
+    assert_eq!(
+        client.count_documents(Filter::True).unwrap() as i64,
+        corpus - band,
+        "ledger out of balance after racing delete"
+    );
+
+    let stats = cluster.stats();
+    assert!(stats.migrations > 0, "skew must have triggered migrations");
+    assert_eq!(stats.migrations_failed, 0);
+    cluster.shutdown();
+}
+
+#[test]
 fn compound_plan_makes_candidates_equal_matches_and_bounds_decodes() {
     // The read-path acceptance regression: on a seeded cluster with the
     // (node_id, ts) compound index, the canonical query shape must scan
