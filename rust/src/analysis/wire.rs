@@ -360,6 +360,46 @@ mod tests {
     }
 
     #[test]
+    fn aggregate_variants_pair_across_both_enum_files() {
+        // The aggregation push-down adds Aggregate to both enum files:
+        // the router scatters ShardRequest::Aggregate (served via the
+        // read-path dispatch in shard.rs) and clients send
+        // RouterRequest::Aggregate (served on the router event loop).
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/wire.rs",
+            "pub enum ShardRequest {\n    Aggregate { pipeline: AggPipeline, partial: bool, reply: Reply<Result<AggregateReply, WireError>> },\n}\n",
+        );
+        t.add(
+            "rust/src/mongo/server/router.rs",
+            "pub enum RouterRequest {\n    Aggregate { pipeline: AggPipeline, reply: Reply<Result<Vec<Document>, WireError>> },\n}\nfn run(&mut self) { match req { RouterRequest::Aggregate { pipeline, reply } => {} } }",
+        );
+        t.add(
+            "rust/src/mongo/server/shard.rs",
+            "fn run(&mut self) { match req { ShardRequest::Aggregate { pipeline, partial, reply } => {} } }",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn undispatched_aggregate_variant_is_flagged() {
+        // An Aggregate variant nobody serves is the scatter-side hang:
+        // the router would block on every shard's reply channel.
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/wire.rs",
+            "pub enum ShardRequest {\n    Aggregate { pipeline: AggPipeline, partial: bool, reply: Reply<Result<AggregateReply, WireError>> },\n    Count { filter: Filter, reply: Reply<Result<CountReply, WireError>> },\n}\n",
+        );
+        t.add(
+            "rust/src/mongo/server/shard.rs",
+            "fn run(&mut self) { match req { ShardRequest::Count { filter, reply } => {} } }",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("Aggregate") && v[0].message.contains("no dispatch arm"));
+    }
+
+    #[test]
     fn dispatch_in_test_code_does_not_count() {
         let t = tree(
             GOOD_WIRE,

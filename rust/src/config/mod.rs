@@ -180,6 +180,11 @@ pub struct StoreConfig {
     /// with a retryable error and its versions reclaim. 0 = unbounded
     /// (versions are held as long as any snapshot is open).
     pub snapshot_retention: u64,
+    /// Aggregation push-down: shards fold `aggregate` matches into
+    /// per-group partial accumulator tables and ship those (default).
+    /// Off = shards ship every matching document and the router folds
+    /// centrally — the full-ship bench baseline.
+    pub agg_partial: bool,
 }
 
 impl Default for StoreConfig {
@@ -201,6 +206,7 @@ impl Default for StoreConfig {
             balancer_bytes: 256 * 1024 * 1024,
             reader_threads: 0,
             snapshot_retention: 0,
+            agg_partial: true,
         }
     }
 }
@@ -223,7 +229,8 @@ impl StoreConfig {
             .set("migration_batch_docs", self.migration_batch_docs)
             .set("balancer_bytes", self.balancer_bytes)
             .set("reader_threads", self.reader_threads)
-            .set("snapshot_retention", self.snapshot_retention);
+            .set("snapshot_retention", self.snapshot_retention)
+            .set("agg_partial", self.agg_partial);
         v
     }
 
@@ -288,6 +295,10 @@ impl StoreConfig {
                 .get("snapshot_retention")
                 .and_then(Value::as_u64)
                 .unwrap_or(d.snapshot_retention),
+            agg_partial: v
+                .get("agg_partial")
+                .and_then(Value::as_bool)
+                .unwrap_or(d.agg_partial),
         })
     }
 }
@@ -571,6 +582,7 @@ mod tests {
         assert_eq!(c2.store.balancer_bytes, c.store.balancer_bytes);
         assert_eq!(c2.store.reader_threads, c.store.reader_threads);
         assert_eq!(c2.store.snapshot_retention, c.store.snapshot_retention);
+        assert_eq!(c2.store.agg_partial, c.store.agg_partial);
         assert_eq!(c2.workload.monitored_nodes, c.workload.monitored_nodes);
         assert_eq!(c2.lustre.osts, c.lustre.osts);
     }

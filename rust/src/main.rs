@@ -104,6 +104,11 @@ fn cli() -> Cli {
                         Some("N"),
                         "commits an open snapshot may lag before expiring with a retryable error (default 0 = unbounded)",
                     ),
+                    f(
+                        "agg-partial",
+                        Some("BOOL"),
+                        "aggregation push-down: shards ship per-group partial accumulators (default true; false = ship matching docs, full-ship baseline)",
+                    ),
                     f("artifacts", Some("DIR"), "AOT artifact dir (default artifacts)"),
                     f("fallback", None, "use the scalar kernel fallback"),
                 ],
@@ -211,6 +216,11 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             as usize,
         snapshot_retention: args
             .get_u64_or("snapshot-retention", store_defaults.snapshot_retention)?,
+        agg_partial: match args.get_or("agg-partial", "true").as_str() {
+            "true" | "on" | "1" => true,
+            "false" | "off" | "0" => false,
+            other => anyhow::bail!("--agg-partial expects true|false, got `{other}`"),
+        },
     };
     let script = RunScript::new(topo.clone(), store, lustre.clone(), kernels);
 

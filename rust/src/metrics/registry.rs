@@ -70,6 +70,22 @@ pub mod names {
     pub const SHARD_FIND_CANDIDATES: &str = "shard.find_candidates";
     pub const SHARD_FIND_MATCHES: &str = "shard.find_matches";
     pub const SHARD_FIND_DECODES: &str = "shard.find_decodes";
+    // -- shard server: aggregation push-down ----------------------------
+    /// `Aggregate` request latency (both partial and full-ship modes).
+    pub const SHARD_AGG_NS: &str = "shard.agg_ns";
+    /// Matching documents an aggregation folded (partial mode) or
+    /// shipped (full-ship mode).
+    pub const SHARD_AGG_DOCS: &str = "shard.agg_docs";
+    /// Partial accumulator rows returned — one per group this shard
+    /// saw; the push-down win is `agg_docs >> agg_groups`.
+    pub const SHARD_AGG_GROUPS: &str = "shard.agg_groups";
+    /// Partial aggregations whose accumulate loop ran on the compiled
+    /// stats kernel (the pipeline shape and every probed value passed
+    /// the losslessness gate).
+    pub const SHARD_AGG_KERNEL_PATH: &str = "shard.agg_kernel_path";
+    /// Partial aggregations folded scalar-side (shape ineligible, or a
+    /// record failed the kernel's exactness gate mid-scan).
+    pub const SHARD_AGG_SCALAR_PATH: &str = "shard.agg_scalar_path";
     // -- shard server: MVCC snapshot reads ------------------------------
     /// Read requests (find/getMore/count) served against a pinned
     /// snapshot — i.e. every read; the counter exists so mixed-workload
@@ -113,6 +129,21 @@ pub mod names {
     /// Documents the router dropped from a find because its map marked
     /// them orphans of a published handoff on the sending shard.
     pub const ROUTER_ORPHANS_FILTERED: &str = "router.orphans_filtered";
+    /// `aggregate` request latency end-to-end (scatter, merge,
+    /// finalize), both modes.
+    pub const ROUTER_AGG_NS: &str = "router.agg_ns";
+    /// Partial accumulator rows received from shards — bounded by
+    /// groups × shards regardless of how many documents matched.
+    pub const ROUTER_AGG_PARTIAL_ROWS: &str = "router.agg_partial_rows";
+    /// Matching documents shipped whole to the router (full-ship
+    /// baseline mode; zero when push-down is on).
+    pub const ROUTER_AGG_DOCS_SHIPPED: &str = "router.agg_docs_shipped";
+    /// Estimated shard→router reply bytes for aggregations — the wire
+    /// quantity `fig_aggregation` sweeps.
+    pub const ROUTER_AGG_REPLY_BYTES: &str = "router.agg_reply_bytes";
+    /// Aggregate scatters repeated because per-shard replies carried
+    /// different chunk-map versions (version-uniform retry).
+    pub const ROUTER_AGG_RETRIES: &str = "router.agg_retries";
     // -- config server --------------------------------------------------
     pub const CONFIG_GET_MAP: &str = "config.get_map";
     pub const CONFIG_REPORT_SPLIT: &str = "config.report_split";
@@ -165,6 +196,11 @@ pub mod names {
         (SHARD_FIND_CANDIDATES, "counter"),
         (SHARD_FIND_MATCHES, "counter"),
         (SHARD_FIND_DECODES, "counter"),
+        (SHARD_AGG_NS, "histogram"),
+        (SHARD_AGG_DOCS, "counter"),
+        (SHARD_AGG_GROUPS, "counter"),
+        (SHARD_AGG_KERNEL_PATH, "counter"),
+        (SHARD_AGG_SCALAR_PATH, "counter"),
         (SHARD_SNAPSHOT_READS, "counter"),
         (SHARD_SNAPSHOTS_OPEN, "gauge"),
         (SHARD_RECLAIM_LAG, "gauge"),
@@ -186,6 +222,11 @@ pub mod names {
         (ROUTER_WRITE_RESCATTERS, "counter"),
         (ROUTER_COUNT_RETRIES, "counter"),
         (ROUTER_ORPHANS_FILTERED, "counter"),
+        (ROUTER_AGG_NS, "histogram"),
+        (ROUTER_AGG_PARTIAL_ROWS, "counter"),
+        (ROUTER_AGG_DOCS_SHIPPED, "counter"),
+        (ROUTER_AGG_REPLY_BYTES, "counter"),
+        (ROUTER_AGG_RETRIES, "counter"),
         (CONFIG_GET_MAP, "counter"),
         (CONFIG_REPORT_SPLIT, "counter"),
         (CONFIG_SPLITS, "counter"),

@@ -1,0 +1,985 @@
+//! Aggregation pipeline: `$match / $project / $group / $sort / $limit`
+//! with shard-side partial accumulators.
+//!
+//! The pipeline executes in two phases (ARCHITECTURE.md §7.4):
+//!
+//! * **Shard fold** — each shard evaluates `$match` with the planner +
+//!   zero-copy raw matcher over a pinned MVCC snapshot and folds every
+//!   matching record into a per-group [`AccState`] table using
+//!   [`RawDoc`] field probes (no full decode on the accumulate path).
+//!   The reply is one [`AggRow`] table: O(groups), not O(matched docs).
+//! * **Router merge** — partial states merge with a closed algebra
+//!   (count/sum add, min/max fold under [`Value::cmp_total`]); `avg`
+//!   travels as a (sum, count) pair and divides only at finalize, since
+//!   a mean of per-shard means would weight shards, not documents.
+//!   Final `$sort`/`$limit` run over the merged, finalized rows.
+//!
+//! [`AggPipeline::execute_docs`] is the naive decode-everything
+//! reference executor: it folds decoded [`Document`]s through the same
+//! finalize step and doubles as the router's central fold for the
+//! full-ship baseline (`--agg-partial 0`). The distributed raw-probe
+//! fold + merge must agree with it bit-for-bit — sealed by the
+//! differential property test `sharded_fold_agrees_with_reference`.
+//!
+//! Semantics (the subset the paper's rollups need, kept deterministic):
+//! * Group keys are scalars; a missing `$group` field — or a
+//!   container-valued one — groups under null. `Int(2)` and `F64(2.0)`
+//!   are distinct keys (grouping is by value identity, not numeric
+//!   coercion); merged rows order by [`GroupKey`]'s total order.
+//! * `count` counts documents; `sum`/`avg` accumulate numeric values in
+//!   f64 and ignore non-numeric or missing fields (`sum` of none is
+//!   `0.0`, `avg` of none is null); `min`/`max` fold any present value
+//!   under the total order and are null over an empty set.
+//! * `$project` restricts which fields the group/accumulate stages can
+//!   see; `$sort` orders finalized rows by an output field (missing →
+//!   null, ties keep the group-key order — the same missing/tie posture
+//!   as the router's k-way document merge).
+
+use std::cmp::Ordering;
+use std::collections::HashMap;
+
+use super::bson::{Document, RawDoc, RawValue, Value};
+use super::query::{Filter, SortDir};
+
+/// Accumulator operator inside `$group`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccOp {
+    /// Documents in the group (the accumulated field is ignored).
+    Count,
+    /// f64 sum of numeric values (0.0 over the empty set).
+    Sum,
+    /// Minimum under the total value order (null over the empty set).
+    Min,
+    /// Maximum under the total value order (null over the empty set).
+    Max,
+    /// Mean of numeric values — carried as a (sum, count) pair and
+    /// divided only at finalize (null over the empty set).
+    Avg,
+}
+
+/// One named accumulator: `name: {$op: "$field"}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccSpec {
+    pub name: String,
+    pub op: AccOp,
+    pub field: String,
+}
+
+/// The pipeline. Stages are fixed-order (match → project → group →
+/// sort → limit), which is the shape every shard can push down whole.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct AggPipeline {
+    /// `$match` ({} when absent).
+    pub filter: Filter,
+    /// `$project`: the fields later stages may see (None = all).
+    pub project: Option<Vec<String>>,
+    /// `$group` key field (None = one global group).
+    pub group_by: Option<String>,
+    /// The `$group` accumulators, in output order.
+    pub accs: Vec<AccSpec>,
+    /// Final `$sort` on an output field (`_id` or an accumulator name).
+    pub sort: Option<(String, SortDir)>,
+    /// Final `$limit`.
+    pub limit: Option<usize>,
+}
+
+impl AggPipeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn matching(mut self, filter: Filter) -> Self {
+        self.filter = filter;
+        self
+    }
+
+    pub fn project(mut self, fields: &[&str]) -> Self {
+        self.project = Some(fields.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    pub fn group_by(mut self, field: &str) -> Self {
+        self.group_by = Some(field.to_string());
+        self
+    }
+
+    pub fn acc(mut self, name: &str, op: AccOp, field: &str) -> Self {
+        self.accs.push(AccSpec { name: name.into(), op, field: field.into() });
+        self
+    }
+
+    pub fn count(self, name: &str) -> Self {
+        self.acc(name, AccOp::Count, "")
+    }
+
+    pub fn sum(self, name: &str, field: &str) -> Self {
+        self.acc(name, AccOp::Sum, field)
+    }
+
+    pub fn min(self, name: &str, field: &str) -> Self {
+        self.acc(name, AccOp::Min, field)
+    }
+
+    pub fn max(self, name: &str, field: &str) -> Self {
+        self.acc(name, AccOp::Max, field)
+    }
+
+    pub fn avg(self, name: &str, field: &str) -> Self {
+        self.acc(name, AccOp::Avg, field)
+    }
+
+    pub fn sort(mut self, field: &str, dir: SortDir) -> Self {
+        self.sort = Some((field.to_string(), dir));
+        self
+    }
+
+    pub fn limit(mut self, n: usize) -> Self {
+        self.limit = Some(n);
+        self
+    }
+
+    /// Is `field` visible past the `$project` stage?
+    pub fn sees(&self, field: &str) -> bool {
+        match &self.project {
+            Some(fields) => fields.iter().any(|f| f == field),
+            None => true,
+        }
+    }
+
+    /// The kernel-accumulate shape: `Some((key_field, value_field))`
+    /// when the fold can route through the compiled stats kernel — a
+    /// visible scalar group key, every accumulator `count`/`min`/`max`,
+    /// and all min/max on one shared visible field. `sum`/`avg` stay on
+    /// the scalar fold: the stats artifact returns a (f32) mean, and a
+    /// partial sum reconstructed from a rounded mean is lossy, while
+    /// min/max/count are exact whenever the inputs are (the per-value
+    /// losslessness check lives at the fold site in `server/read.rs`).
+    pub fn kernel_shape(&self) -> Option<(&str, &str)> {
+        let key = self.group_by.as_deref().filter(|k| self.sees(k))?;
+        let mut value: Option<&str> = None;
+        for spec in &self.accs {
+            match spec.op {
+                AccOp::Count => {}
+                AccOp::Min | AccOp::Max => {
+                    if !self.sees(&spec.field) {
+                        return None;
+                    }
+                    match value {
+                        None => value = Some(&spec.field),
+                        Some(v) if v == spec.field => {}
+                        Some(_) => return None,
+                    }
+                }
+                AccOp::Sum | AccOp::Avg => return None,
+            }
+        }
+        value.map(|v| (key, v))
+    }
+
+    /// Wire-size estimate for transport accounting (request leg).
+    pub fn encoded_len(&self) -> usize {
+        self.filter.encoded_len()
+            + self.project.iter().flatten().map(|f| 1 + f.len()).sum::<usize>()
+            + self.group_by.as_ref().map_or(0, |g| 1 + g.len())
+            + self.accs.iter().map(|a| 2 + a.name.len() + a.field.len()).sum::<usize>()
+            + self.sort.as_ref().map_or(0, |(f, _)| 2 + f.len())
+            + 16
+    }
+
+    /// The naive decode-everything reference executor: filter decoded
+    /// documents, fold them through the same accumulator algebra, and
+    /// finalize. Doubles as the router's central fold for the full-ship
+    /// baseline; the distributed raw-probe fold must agree bit-for-bit.
+    pub fn execute_docs<'a>(
+        &self,
+        docs: impl IntoIterator<Item = &'a Document>,
+    ) -> Vec<Document> {
+        let mut table = PartialTable::new();
+        for d in docs {
+            if self.filter.matches(d) {
+                table.fold_doc(self, d);
+            }
+        }
+        self.finalize(table)
+    }
+
+    /// Merge-side terminal: order groups by key, finalize accumulator
+    /// states into output documents, then apply `$sort`/`$limit`.
+    pub fn finalize(&self, table: PartialTable) -> Vec<Document> {
+        let mut out: Vec<Document> = table
+            .into_rows()
+            .into_iter()
+            .map(|row| {
+                let mut d = Document::new().set("_id", row.key.to_value());
+                for (spec, st) in self.accs.iter().zip(row.accs) {
+                    d.put(&spec.name, st.finalize());
+                }
+                d
+            })
+            .collect();
+        if let Some((field, dir)) = &self.sort {
+            // Same comparison posture as the router's k-way document
+            // merge: missing sort fields order as null; a stable sort
+            // keeps the group-key order on ties.
+            out.sort_by(|a, b| {
+                let va = a.get(field).unwrap_or(&Value::Null);
+                let vb = b.get(field).unwrap_or(&Value::Null);
+                let ord = va.cmp_total(vb);
+                match dir {
+                    SortDir::Asc => ord,
+                    SortDir::Desc => ord.reverse(),
+                }
+            });
+        }
+        if let Some(n) = self.limit {
+            out.truncate(n);
+        }
+        out
+    }
+}
+
+/// A group key: the scalar identity a document's `$group` field value
+/// hashes and orders by. Container values and missing fields key as
+/// [`GroupKey::Null`]; `F64` keys by bit pattern (`f64::total_cmp`
+/// order), so equality, hashing, and ordering always agree.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum GroupKey {
+    Null,
+    Bool(bool),
+    Int(i64),
+    F64(u64),
+    Str(String),
+}
+
+impl GroupKey {
+    pub fn from_value(v: &Value) -> GroupKey {
+        match v {
+            Value::Null | Value::Array(_) | Value::Doc(_) => GroupKey::Null,
+            Value::Bool(b) => GroupKey::Bool(*b),
+            Value::Int(i) => GroupKey::Int(*i),
+            Value::F64(f) => GroupKey::F64(f.to_bits()),
+            Value::Str(s) => GroupKey::Str(s.clone()),
+        }
+    }
+
+    pub fn from_raw(v: &RawValue<'_>) -> GroupKey {
+        match v {
+            RawValue::Null | RawValue::Array(_) | RawValue::Doc(_) => GroupKey::Null,
+            RawValue::Bool(b) => GroupKey::Bool(*b),
+            RawValue::Int(i) => GroupKey::Int(*i),
+            RawValue::F64(f) => GroupKey::F64(f.to_bits()),
+            RawValue::Str(s) => GroupKey::Str((*s).to_string()),
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        match self {
+            GroupKey::Null => Value::Null,
+            GroupKey::Bool(b) => Value::Bool(*b),
+            GroupKey::Int(i) => Value::Int(*i),
+            GroupKey::F64(bits) => Value::F64(f64::from_bits(*bits)),
+            GroupKey::Str(s) => Value::Str(s.clone()),
+        }
+    }
+
+    fn rank(&self) -> u8 {
+        match self {
+            GroupKey::Null => 0,
+            GroupKey::Bool(_) => 1,
+            GroupKey::Int(_) => 2,
+            GroupKey::F64(_) => 3,
+            GroupKey::Str(_) => 4,
+        }
+    }
+
+    /// Wire-size estimate of the key inside an [`AggRow`].
+    fn wire_bytes(&self) -> usize {
+        1 + match self {
+            GroupKey::Null => 0,
+            GroupKey::Bool(_) => 1,
+            GroupKey::Int(_) | GroupKey::F64(_) => 8,
+            GroupKey::Str(s) => 4 + s.len(),
+        }
+    }
+}
+
+impl Ord for GroupKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        let (ra, rb) = (self.rank(), other.rank());
+        if ra != rb {
+            return ra.cmp(&rb);
+        }
+        match (self, other) {
+            (GroupKey::Bool(a), GroupKey::Bool(b)) => a.cmp(b),
+            (GroupKey::Int(a), GroupKey::Int(b)) => a.cmp(b),
+            (GroupKey::F64(a), GroupKey::F64(b)) => {
+                f64::from_bits(*a).total_cmp(&f64::from_bits(*b))
+            }
+            (GroupKey::Str(a), GroupKey::Str(b)) => a.cmp(b),
+            _ => Ordering::Equal,
+        }
+    }
+}
+
+impl PartialOrd for GroupKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One accumulator's *partial* state — the thing that crosses the wire
+/// and merges. The algebra is closed under merge: merging any split of
+/// a document set yields the state of folding it whole.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AccState {
+    Count(u64),
+    Sum(f64),
+    Min(Option<Value>),
+    Max(Option<Value>),
+    /// `avg` ships the (sum, count) pair; dividing per shard and
+    /// re-averaging would weight shards, not documents.
+    Avg { sum: f64, n: u64 },
+}
+
+impl AccState {
+    pub fn init(op: AccOp) -> AccState {
+        match op {
+            AccOp::Count => AccState::Count(0),
+            AccOp::Sum => AccState::Sum(0.0),
+            AccOp::Min => AccState::Min(None),
+            AccOp::Max => AccState::Max(None),
+            AccOp::Avg => AccState::Avg { sum: 0.0, n: 0 },
+        }
+    }
+
+    /// Fold one document's field value (None = missing or projected
+    /// away). `Count` ignores the value entirely.
+    pub fn fold(&mut self, v: Option<&Value>) {
+        match self {
+            AccState::Count(n) => *n += 1,
+            AccState::Sum(s) => {
+                if let Some(x) = v.and_then(Value::as_f64) {
+                    *s += x;
+                }
+            }
+            AccState::Avg { sum, n } => {
+                if let Some(x) = v.and_then(Value::as_f64) {
+                    *sum += x;
+                    *n += 1;
+                }
+            }
+            AccState::Min(cur) => {
+                if let Some(v) = v {
+                    let wins = cur
+                        .as_ref()
+                        .map_or(true, |c| v.cmp_total(c) == Ordering::Less);
+                    if wins {
+                        *cur = Some(v.clone());
+                    }
+                }
+            }
+            AccState::Max(cur) => {
+                if let Some(v) = v {
+                    let wins = cur
+                        .as_ref()
+                        .map_or(true, |c| v.cmp_total(c) == Ordering::Greater);
+                    if wins {
+                        *cur = Some(v.clone());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Raw-path fold: probes decide via [`RawValue::cmp_total`] and
+    /// materialize a value only when it wins the fold.
+    pub fn fold_raw(&mut self, v: Option<&RawValue<'_>>) {
+        match self {
+            AccState::Count(n) => *n += 1,
+            AccState::Sum(s) => {
+                if let Some(x) = v.and_then(RawValue::as_f64) {
+                    *s += x;
+                }
+            }
+            AccState::Avg { sum, n } => {
+                if let Some(x) = v.and_then(RawValue::as_f64) {
+                    *sum += x;
+                    *n += 1;
+                }
+            }
+            AccState::Min(cur) => {
+                if let Some(v) = v {
+                    let wins = cur
+                        .as_ref()
+                        .map_or(true, |c| v.cmp_total(c) == Ordering::Less);
+                    if wins {
+                        if let Some(owned) = v.to_value() {
+                            *cur = Some(owned);
+                        }
+                    }
+                }
+            }
+            AccState::Max(cur) => {
+                if let Some(v) = v {
+                    let wins = cur
+                        .as_ref()
+                        .map_or(true, |c| v.cmp_total(c) == Ordering::Greater);
+                    if wins {
+                        if let Some(owned) = v.to_value() {
+                            *cur = Some(owned);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Merge another shard's partial state into this one. States of
+    /// mismatched kinds (a malformed reply) leave `self` unchanged.
+    pub fn merge(&mut self, other: &AccState) {
+        match (self, other) {
+            (AccState::Count(a), AccState::Count(b)) => *a += b,
+            (AccState::Sum(a), AccState::Sum(b)) => *a += b,
+            (AccState::Avg { sum, n }, AccState::Avg { sum: s2, n: n2 }) => {
+                *sum += s2;
+                *n += n2;
+            }
+            (AccState::Min(a), AccState::Min(b)) => {
+                if let Some(bv) = b {
+                    let wins = a
+                        .as_ref()
+                        .map_or(true, |av| bv.cmp_total(av) == Ordering::Less);
+                    if wins {
+                        *a = Some(bv.clone());
+                    }
+                }
+            }
+            (AccState::Max(a), AccState::Max(b)) => {
+                if let Some(bv) = b {
+                    let wins = a
+                        .as_ref()
+                        .map_or(true, |av| bv.cmp_total(av) == Ordering::Greater);
+                    if wins {
+                        *a = Some(bv.clone());
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Terminal value: this is where `avg` divides — the one lossy step,
+    /// deferred past every merge.
+    pub fn finalize(self) -> Value {
+        match self {
+            AccState::Count(n) => Value::Int(n as i64),
+            AccState::Sum(s) => Value::F64(s),
+            AccState::Min(v) | AccState::Max(v) => v.unwrap_or(Value::Null),
+            AccState::Avg { sum, n } => {
+                if n == 0 {
+                    Value::Null
+                } else {
+                    Value::F64(sum / n as f64)
+                }
+            }
+        }
+    }
+
+    /// Wire-size estimate inside an [`AggRow`].
+    fn wire_bytes(&self) -> usize {
+        1 + match self {
+            AccState::Count(_) | AccState::Sum(_) => 8,
+            AccState::Avg { .. } => 16,
+            AccState::Min(v) | AccState::Max(v) => match v {
+                None => 0,
+                Some(Value::Str(s)) => 5 + s.len(),
+                Some(_) => 9,
+            },
+        }
+    }
+}
+
+/// One group's partial accumulator row — the unit a shard ships.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggRow {
+    pub key: GroupKey,
+    pub accs: Vec<AccState>,
+}
+
+impl AggRow {
+    /// Wire-size estimate for transport accounting (reply leg).
+    pub fn wire_bytes(&self) -> usize {
+        self.key.wire_bytes() + self.accs.iter().map(AccState::wire_bytes).sum::<usize>()
+    }
+}
+
+/// A group → partial-accumulator table: the shard's fold target and the
+/// router's merge target.
+#[derive(Default)]
+pub struct PartialTable {
+    groups: HashMap<GroupKey, Vec<AccState>>,
+}
+
+impl PartialTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    fn states_for(&mut self, p: &AggPipeline, key: GroupKey) -> &mut Vec<AccState> {
+        self.groups
+            .entry(key)
+            .or_insert_with(|| p.accs.iter().map(|a| AccState::init(a.op)).collect())
+    }
+
+    /// Fold one decoded document (reference executor / full-ship fold).
+    pub fn fold_doc(&mut self, p: &AggPipeline, d: &Document) {
+        let key = match &p.group_by {
+            Some(k) if p.sees(k) => {
+                d.get(k).map(GroupKey::from_value).unwrap_or(GroupKey::Null)
+            }
+            _ => GroupKey::Null,
+        };
+        let states = self.states_for(p, key);
+        for (st, spec) in states.iter_mut().zip(&p.accs) {
+            let v = if p.sees(&spec.field) { d.get(&spec.field) } else { None };
+            st.fold(v);
+        }
+    }
+
+    /// Fold one *encoded* record via [`RawDoc`] probes — the shard's
+    /// accumulate path. No full decode: each stage seeks only the
+    /// fields it names, and min/max materialize a value only on a win.
+    pub fn fold_raw(&mut self, p: &AggPipeline, raw: &RawDoc<'_>) {
+        let key = match &p.group_by {
+            Some(k) if p.sees(k) => {
+                raw.get(k).map(|v| GroupKey::from_raw(&v)).unwrap_or(GroupKey::Null)
+            }
+            _ => GroupKey::Null,
+        };
+        let states = self.states_for(p, key);
+        for (st, spec) in states.iter_mut().zip(&p.accs) {
+            let v = if p.sees(&spec.field) { raw.get(&spec.field) } else { None };
+            st.fold_raw(v.as_ref());
+        }
+    }
+
+    /// Install a fully-built group row (the kernel accumulate path
+    /// constructs states from column reductions).
+    pub fn insert_group(&mut self, key: GroupKey, states: Vec<AccState>) {
+        self.groups.insert(key, states);
+    }
+
+    /// Kernel-path bail-out: replay one gathered `(Int key, F64 value)`
+    /// column pair through the scalar fold. Only meaningful for
+    /// kernel-shaped pipelines (every accumulator is count/min/max on
+    /// the one gathered field), where it reproduces exactly the states
+    /// [`Self::fold_raw`] would have built for that record.
+    pub fn fold_kernel_pair(&mut self, p: &AggPipeline, key: i64, value: f64) {
+        let v = Value::F64(value);
+        let states = self.states_for(p, GroupKey::Int(key));
+        for st in states.iter_mut() {
+            st.fold(Some(&v));
+        }
+    }
+
+    /// Merge one shard's partial rows (router side).
+    pub fn merge_rows(&mut self, p: &AggPipeline, rows: Vec<AggRow>) {
+        for row in rows {
+            let states = self.states_for(p, row.key);
+            for (st, other) in states.iter_mut().zip(&row.accs) {
+                st.merge(other);
+            }
+        }
+    }
+
+    /// Drain into rows ordered by the group-key total order — the
+    /// deterministic base order `$sort` ties preserve.
+    pub fn into_rows(self) -> Vec<AggRow> {
+        let mut rows: Vec<AggRow> = self
+            .groups
+            .into_iter()
+            .map(|(key, accs)| AggRow { key, accs })
+            .collect();
+        rows.sort_by(|a, b| a.key.cmp(&b.key));
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mongo::query::CmpOp;
+    use crate::testing::check_with;
+    use crate::util::rng::Pcg32;
+
+    fn doc(ts: i64, node: i64, load: f64) -> Document {
+        Document::new().set("ts", ts).set("node_id", node).set("load", load)
+    }
+
+    fn window_rollup() -> AggPipeline {
+        AggPipeline::new()
+            .matching(Filter::range("ts", 10i64, 40i64))
+            .group_by("node_id")
+            .count("n")
+            .sum("total", "load")
+            .min("lo", "load")
+            .max("hi", "load")
+            .avg("mean", "load")
+    }
+
+    #[test]
+    fn reference_executor_groups_and_accumulates() {
+        let docs: Vec<Document> = vec![
+            doc(10, 1, 2.0),
+            doc(20, 1, 4.0),
+            doc(30, 2, 8.0),
+            doc(50, 1, 100.0), // outside the window
+        ];
+        let rows = window_rollup().execute_docs(&docs);
+        assert_eq!(rows.len(), 2);
+        let g1 = &rows[0];
+        assert_eq!(g1.get_i64("_id"), Some(1));
+        assert_eq!(g1.get_i64("n"), Some(2));
+        assert_eq!(g1.get_f64("total"), Some(6.0));
+        assert_eq!(g1.get_f64("lo"), Some(2.0));
+        assert_eq!(g1.get_f64("hi"), Some(4.0));
+        assert_eq!(g1.get_f64("mean"), Some(3.0));
+        let g2 = &rows[1];
+        assert_eq!(g2.get_i64("_id"), Some(2));
+        assert_eq!(g2.get_i64("n"), Some(1));
+        assert_eq!(g2.get_f64("mean"), Some(8.0));
+    }
+
+    #[test]
+    fn sort_and_limit_apply_after_finalize() {
+        let docs: Vec<Document> =
+            (0..12).map(|i| doc(i, i % 4, (i % 4) as f64)).collect();
+        let p = AggPipeline::new()
+            .group_by("node_id")
+            .count("n")
+            .avg("mean", "load")
+            .sort("mean", SortDir::Desc)
+            .limit(2);
+        let rows = p.execute_docs(&docs);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get_i64("_id"), Some(3));
+        assert_eq!(rows[1].get_i64("_id"), Some(2));
+    }
+
+    #[test]
+    fn project_hides_fields_from_group_and_accumulate() {
+        let docs = vec![doc(1, 1, 5.0), doc(2, 2, 7.0)];
+        let p = AggPipeline::new()
+            .project(&["ts"])
+            .group_by("node_id") // projected away -> one null group
+            .count("n")
+            .sum("s", "load"); // projected away -> 0.0
+        let rows = p.execute_docs(&docs);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("_id"), Some(&Value::Null));
+        assert_eq!(rows[0].get_i64("n"), Some(2));
+        assert_eq!(rows[0].get_f64("s"), Some(0.0));
+    }
+
+    #[test]
+    fn missing_and_nonnumeric_field_semantics() {
+        let docs = vec![
+            Document::new().set("node_id", 1i64).set("v", 3i64),
+            Document::new().set("node_id", 1i64).set("v", "text"),
+            Document::new().set("node_id", 1i64), // v missing
+        ];
+        let p = AggPipeline::new()
+            .group_by("node_id")
+            .count("n")
+            .sum("s", "v")
+            .min("lo", "v")
+            .max("hi", "v")
+            .avg("mean", "v");
+        let rows = p.execute_docs(&docs);
+        assert_eq!(rows[0].get_i64("n"), Some(3));
+        // sum/avg: only the numeric value contributes.
+        assert_eq!(rows[0].get_f64("s"), Some(3.0));
+        assert_eq!(rows[0].get_f64("mean"), Some(3.0));
+        // min/max fold any present value under the total order
+        // (numbers < strings).
+        assert_eq!(rows[0].get("lo"), Some(&Value::Int(3)));
+        assert_eq!(rows[0].get("hi"), Some(&Value::Str("text".into())));
+        // Empty group: sum is 0.0, min/max/avg are null.
+        let empty = AggPipeline::new().sum("s", "v").min("lo", "v").avg("a", "v");
+        let rows = empty.execute_docs(&[] as &[Document]);
+        assert_eq!(rows.len(), 0, "no documents -> no groups");
+    }
+
+    #[test]
+    fn avg_must_finalize_at_merge_not_per_shard() {
+        // Shard A holds one doc (v=0), shard B holds three (v=4 each):
+        // mean of per-shard means would be 2.0; the true mean is 3.0.
+        let p = AggPipeline::new().avg("mean", "v");
+        let a = vec![Document::new().set("v", 0i64)];
+        let b: Vec<Document> = (0..3).map(|_| Document::new().set("v", 4i64)).collect();
+        let mut ta = PartialTable::new();
+        for d in &a {
+            ta.fold_doc(&p, d);
+        }
+        let mut tb = PartialTable::new();
+        for d in &b {
+            tb.fold_doc(&p, d);
+        }
+        let mut merged = PartialTable::new();
+        merged.merge_rows(&p, ta.into_rows());
+        merged.merge_rows(&p, tb.into_rows());
+        let rows = p.finalize(merged);
+        assert_eq!(rows[0].get_f64("mean"), Some(3.0));
+    }
+
+    #[test]
+    fn group_keys_order_hash_and_roundtrip_consistently() {
+        let vals = [
+            Value::Null,
+            Value::Bool(false),
+            Value::Bool(true),
+            Value::Int(-3),
+            Value::Int(7),
+            Value::F64(-0.5),
+            Value::F64(2.25),
+            Value::Str("a".into()),
+            Value::Str("b".into()),
+        ];
+        let keys: Vec<GroupKey> = vals.iter().map(GroupKey::from_value).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(sorted, keys, "construction order above is the total order");
+        for (v, k) in vals.iter().zip(&keys) {
+            assert_eq!(&k.to_value(), v);
+            // Raw and decoded construction agree.
+            let enc = Document::new().set("k", v.clone()).encode();
+            let raw = RawDoc::new(&enc);
+            assert_eq!(&GroupKey::from_raw(&raw.get("k").unwrap()), k);
+        }
+        // Containers key as null.
+        assert_eq!(
+            GroupKey::from_value(&Value::Array(vec![Value::Int(1)])),
+            GroupKey::Null
+        );
+    }
+
+    #[test]
+    fn kernel_shape_gate() {
+        let ok = AggPipeline::new()
+            .group_by("node_id")
+            .count("n")
+            .min("lo", "load")
+            .max("hi", "load");
+        assert_eq!(ok.kernel_shape(), Some(("node_id", "load")));
+        // sum/avg exclude the kernel path (lossy mean->sum).
+        assert!(window_rollup().kernel_shape().is_none());
+        // Two distinct min/max fields exclude it.
+        let two = AggPipeline::new().group_by("n").min("a", "x").max("b", "y");
+        assert!(two.kernel_shape().is_none());
+        // No group key, or a projected-away one, excludes it.
+        assert!(AggPipeline::new().min("a", "x").kernel_shape().is_none());
+        let hidden = AggPipeline::new().project(&["x"]).group_by("n").min("a", "x");
+        assert!(hidden.kernel_shape().is_none());
+        // Count-only pipelines have no column to reduce.
+        assert!(AggPipeline::new().group_by("n").count("c").kernel_shape().is_none());
+    }
+
+    /// Exact-in-f64 random values: integers and quarter fractions keep
+    /// every sum order-independent, so the distributed fold (per-shard
+    /// partials merged in shard order) is bit-identical to the central
+    /// fold.
+    fn rand_metric(rng: &mut Pcg32) -> Value {
+        match rng.next_bounded(3) {
+            0 => Value::Int(rng.next_bounded(64) as i64 - 32),
+            1 => Value::F64((rng.next_bounded(257) as f64 - 128.0) * 0.25),
+            _ => Value::Null,
+        }
+    }
+
+    fn rand_corpus_doc(rng: &mut Pcg32) -> Document {
+        let mut d = Document::new();
+        if rng.next_bounded(8) > 0 {
+            d.put("ts", Value::Int(rng.next_bounded(100) as i64));
+        }
+        if rng.next_bounded(8) > 0 {
+            d.put("node_id", Value::Int(rng.next_bounded(6) as i64));
+        }
+        if rng.next_bounded(4) > 0 {
+            d.put("load", rand_metric(rng));
+        }
+        if rng.next_bounded(4) == 0 {
+            d.put("tag", Value::Str(format!("t{}", rng.next_bounded(3))));
+        }
+        d
+    }
+
+    fn rand_pipeline(rng: &mut Pcg32) -> AggPipeline {
+        const FIELDS: [&str; 4] = ["ts", "node_id", "load", "tag"];
+        let field = |rng: &mut Pcg32| FIELDS[rng.next_bounded(4) as usize];
+        let mut p = AggPipeline::new();
+        p = match rng.next_bounded(4) {
+            0 => p,
+            1 => p.matching(Filter::range(
+                "ts",
+                rng.next_bounded(50) as i64,
+                (50 + rng.next_bounded(60)) as i64,
+            )),
+            2 => p.matching(Filter::cmp(
+                field(rng),
+                CmpOp::Gte,
+                Value::Int(rng.next_bounded(40) as i64 - 20),
+            )),
+            _ => p.matching(Filter::is_in(
+                "node_id",
+                (0..1 + rng.next_bounded(3)).map(|i| Value::Int(i as i64)).collect(),
+            )),
+        };
+        if rng.next_bounded(4) == 0 {
+            let keep: Vec<&str> =
+                FIELDS.iter().copied().filter(|_| rng.next_bounded(2) == 0).collect();
+            p = p.project(&keep);
+        }
+        if rng.next_bounded(5) > 0 {
+            p = p.group_by(field(rng));
+        }
+        for i in 0..1 + rng.next_bounded(4) {
+            let f = field(rng);
+            p = match rng.next_bounded(5) {
+                0 => p.count(&format!("a{i}")),
+                1 => p.sum(&format!("a{i}"), f),
+                2 => p.min(&format!("a{i}"), f),
+                3 => p.max(&format!("a{i}"), f),
+                _ => p.avg(&format!("a{i}"), f),
+            };
+        }
+        if rng.next_bounded(2) == 0 {
+            let by = if rng.next_bounded(2) == 0 { "_id" } else { "a0" };
+            let dir = if rng.next_bounded(2) == 0 { SortDir::Asc } else { SortDir::Desc };
+            p = p.sort(by, dir);
+        }
+        if rng.next_bounded(3) == 0 {
+            p = p.limit(1 + rng.next_bounded(5) as usize);
+        }
+        p
+    }
+
+    /// The tentpole differential: a random corpus partitioned over k
+    /// simulated shards, folded per shard over *encoded bytes* with the
+    /// raw-probe path, merged in shard order, and finalized — must be
+    /// bit-identical to the naive decode-everything reference executor
+    /// over the whole corpus.
+    #[test]
+    fn sharded_fold_agrees_with_reference() {
+        check_with(
+            "agg-sharded-differential",
+            0xA66,
+            256,
+            &(|rng: &mut Pcg32| {
+                let docs: Vec<Document> =
+                    (0..rng.next_bounded(60)).map(|_| rand_corpus_doc(rng)).collect();
+                let shards = 1 + rng.next_bounded(4) as usize;
+                let pipeline = rand_pipeline(rng);
+                (docs, shards, pipeline)
+            }),
+            |(docs, shards, pipeline)| {
+                let reference = pipeline.execute_docs(docs.iter());
+
+                // Distribute round-robin, fold each shard over encoded
+                // bytes, merge partials in shard order.
+                let mut merged = PartialTable::new();
+                let mut shipped_rows = 0usize;
+                for s in 0..*shards {
+                    let mut t = PartialTable::new();
+                    for d in docs.iter().skip(s).step_by(*shards) {
+                        let enc = d.encode();
+                        let raw = RawDoc::new(&enc);
+                        if pipeline.filter.matches_raw(&raw) {
+                            t.fold_raw(pipeline, &raw);
+                        }
+                    }
+                    let rows = t.into_rows();
+                    shipped_rows += rows.len();
+                    merged.merge_rows(pipeline, rows);
+                }
+                let distributed = pipeline.finalize(merged);
+
+                if distributed != reference {
+                    return Err(format!(
+                        "distributed {distributed:?} != reference {reference:?}"
+                    ));
+                }
+                // The partial reply is O(groups): each shard ships at
+                // most one row per distinct group key.
+                let matched: Vec<&Document> =
+                    docs.iter().filter(|d| pipeline.filter.matches(d)).collect();
+                let groups: std::collections::HashSet<GroupKey> = matched
+                    .iter()
+                    .map(|d| match &pipeline.group_by {
+                        Some(k) if pipeline.sees(k) => d
+                            .get(k)
+                            .map(GroupKey::from_value)
+                            .unwrap_or(GroupKey::Null),
+                        _ => GroupKey::Null,
+                    })
+                    .collect();
+                if shipped_rows > groups.len() * *shards {
+                    return Err(format!(
+                        "shipped {shipped_rows} rows > groups {} x shards {shards}",
+                        groups.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn merge_is_associative_over_random_splits() {
+        check_with(
+            "agg-merge-associative",
+            0x51AB,
+            128,
+            &(|rng: &mut Pcg32| {
+                let docs: Vec<Document> =
+                    (0..1 + rng.next_bounded(40)).map(|_| rand_corpus_doc(rng)).collect();
+                let cut = rng.next_bounded(docs.len() as u32) as usize;
+                (docs, cut)
+            }),
+            |(docs, cut)| {
+                let p = AggPipeline::new()
+                    .group_by("node_id")
+                    .count("n")
+                    .sum("s", "load")
+                    .min("lo", "load")
+                    .max("hi", "load")
+                    .avg("m", "load");
+                let whole = p.execute_docs(docs.iter());
+                let mut left = PartialTable::new();
+                for d in &docs[..*cut] {
+                    left.fold_doc(&p, d);
+                }
+                let mut right = PartialTable::new();
+                for d in &docs[*cut..] {
+                    right.fold_doc(&p, d);
+                }
+                let mut merged = PartialTable::new();
+                merged.merge_rows(&p, left.into_rows());
+                merged.merge_rows(&p, right.into_rows());
+                let split = p.finalize(merged);
+                if split == whole {
+                    Ok(())
+                } else {
+                    Err(format!("split {split:?} != whole {whole:?}"))
+                }
+            },
+        );
+    }
+}

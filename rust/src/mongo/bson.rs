@@ -181,13 +181,15 @@ impl Document {
         self.fields.is_empty()
     }
 
-    /// Project onto the named fields (keeping document order).
-    pub fn project(&self, names: &[String]) -> Document {
+    /// Project onto the named fields (keeping document order). Generic
+    /// over the name type so hot call sites can pass `&["ts", ..]`
+    /// without allocating a `Vec<String>` per projection.
+    pub fn project<S: AsRef<str>>(&self, names: &[S]) -> Document {
         Document {
             fields: self
                 .fields
                 .iter()
-                .filter(|(k, _)| names.iter().any(|n| n == k))
+                .filter(|(k, _)| names.iter().any(|n| n.as_ref() == k))
                 .cloned()
                 .collect(),
         }
@@ -350,8 +352,9 @@ impl<'a> RawDoc<'a> {
 
     /// Decode only the named fields, in document order: the projection
     /// path materializes exactly what it returns. Malformed bytes yield
-    /// the fields decoded so far.
-    pub fn project(&self, names: &[String]) -> Document {
+    /// the fields decoded so far. Generic over the name type (see
+    /// [`Document::project`]) so callers never allocate per projection.
+    pub fn project<S: AsRef<str>>(&self, names: &[S]) -> Document {
         let b = self.bytes;
         let mut out = Document::new();
         let mut pos = 2usize;
@@ -361,7 +364,7 @@ impl<'a> RawDoc<'a> {
             pos += 1;
             let Some(fname) = b.get(pos..pos + nlen) else { return out };
             pos += nlen;
-            if names.iter().any(|n| n.as_bytes() == fname) {
+            if names.iter().any(|n| n.as_ref().as_bytes() == fname) {
                 let Some((v, next)) = raw_value_at(b, pos) else { return out };
                 if let (Ok(name), Some(value)) =
                     (std::str::from_utf8(fname), v.to_value())
@@ -658,9 +661,11 @@ mod tests {
     #[test]
     fn projection() {
         let d = sample();
-        let p = d.project(&["ts".to_string(), "hostname".to_string()]);
+        let p = d.project(&["ts", "hostname"]);
         assert_eq!(p.len(), 2);
         assert!(p.get("cpu_user").is_none());
+        // Owned names keep working through the generic signature.
+        assert_eq!(d.project(&["ts".to_string()]), d.project(&["ts"]));
     }
 
     #[test]
@@ -708,11 +713,10 @@ mod tests {
     fn raw_projection_matches_document_projection() {
         let d = sample();
         let enc = d.encode();
-        let names: Vec<String> =
-            ["ts", "hostname", "nested", "missing"].iter().map(|s| s.to_string()).collect();
+        let names = ["ts", "hostname", "nested", "missing"];
         assert_eq!(RawDoc::new(&enc).project(&names), d.project(&names));
         // Empty projection.
-        assert_eq!(RawDoc::new(&enc).project(&[]), Document::new());
+        assert_eq!(RawDoc::new(&enc).project::<&str>(&[]), Document::new());
     }
 
     #[test]

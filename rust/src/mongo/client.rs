@@ -11,6 +11,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::mongo::aggregate::AggPipeline;
 use crate::mongo::bson::Document;
 use crate::mongo::query::{Filter, FindOptions};
 use crate::mongo::server::router::{InsertManyReply, RouterMailbox, RouterRequest};
@@ -94,6 +95,14 @@ impl MongoClient {
     pub fn count_documents(&self, filter: Filter) -> Result<usize, WireError> {
         let n = rpc(self.pick(), |reply| RouterRequest::Count { filter, reply })??;
         Ok(n as usize)
+    }
+
+    /// `aggregate(pipeline)`: `$match`/`$project`/`$group`/`$sort`/
+    /// `$limit`, executed shard-side. With aggregation push-down on
+    /// (`--agg-partial`, the default), only per-group partial
+    /// accumulator rows cross the wire — not matching documents.
+    pub fn aggregate(&self, pipeline: AggPipeline) -> Result<Vec<Document>, WireError> {
+        rpc(self.pick(), |reply| RouterRequest::Aggregate { pipeline, reply })?
     }
 
     /// `updateMany(filter, {$set: set})`: top-level field merge on every

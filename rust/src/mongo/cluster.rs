@@ -151,6 +151,7 @@ impl Cluster {
                 spec.store.cursor_batch,
                 spec.store.router_flush_docs,
                 std::time::Duration::from_millis(spec.store.flush_interval_ms),
+                spec.store.agg_partial,
             );
             let (tx, join) = router.spawn();
             routers.push(tx);

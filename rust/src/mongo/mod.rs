@@ -16,6 +16,7 @@
 //!
 //! [`client`] is the pymongo-analogue the run-script workloads use.
 
+pub mod aggregate;
 pub mod bson;
 pub mod client;
 pub mod cluster;
@@ -25,6 +26,7 @@ pub mod sharding;
 pub mod storage;
 pub mod wire;
 
+pub use aggregate::{AccOp, AggPipeline};
 pub use bson::{Document, Value};
 pub use client::{BulkWriter, MongoClient};
 pub use cluster::Cluster;

@@ -48,6 +48,13 @@ pub enum Filter {
     Or(Vec<Filter>),
 }
 
+impl Default for Filter {
+    /// The empty filter `{}`.
+    fn default() -> Self {
+        Filter::True
+    }
+}
+
 impl Filter {
     /// `{field: value}` equality shorthand.
     pub fn eq(field: &str, value: impl Into<Value>) -> Filter {

@@ -30,12 +30,13 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::metrics::{names, Registry};
-use crate::mongo::bson::{Document, RawDoc, Value};
+use crate::mongo::aggregate::{AccOp, AccState, AggPipeline, GroupKey, PartialTable};
+use crate::mongo::bson::{Document, RawDoc, RawValue, Value};
 use crate::mongo::query::{Filter, FindOptions, SortDir};
 use crate::mongo::sharding::chunk::ShardKey;
 use crate::mongo::storage::index::{encode_key, EncodedRange, Index};
 use crate::mongo::storage::{ReadView, RecordId, Snapshot, SnapshotExpired, StoreReader};
-use crate::mongo::wire::{CountReply, FindReply, Reply, WireError};
+use crate::mongo::wire::{AggregateReply, CountReply, FindReply, Reply, WireError};
 use crate::runtime::Kernels;
 
 use super::shard::COLLECTION;
@@ -66,6 +67,14 @@ pub enum ReadRequest {
     Count {
         filter: Filter,
         reply: Reply<Result<CountReply, WireError>>,
+    },
+    /// Aggregation leg: fold matches into per-group partial accumulators
+    /// over raw bytes (`partial`), or decode and ship every match for
+    /// the router's central fold (the full-ship baseline).
+    Aggregate {
+        pipeline: AggPipeline,
+        partial: bool,
+        reply: Reply<Result<AggregateReply, WireError>>,
     },
 }
 
@@ -418,6 +427,13 @@ impl ReadContext {
                     .observe(names::SHARD_COUNT_NS, t.elapsed().as_nanos() as u64);
                 let _ = reply.send(r);
             }
+            ReadRequest::Aggregate { pipeline, partial, reply } => {
+                let t = Instant::now();
+                let r = self.handle_aggregate(&pipeline, partial);
+                self.metrics
+                    .observe(names::SHARD_AGG_NS, t.elapsed().as_nanos() as u64);
+                let _ = reply.send(r);
+            }
         }
     }
 
@@ -518,6 +534,180 @@ impl ReadContext {
         }
         self.flush_scan_metrics(&mut scan);
         Ok(CountReply { n, version: fence.version })
+    }
+
+    /// Execute one aggregation leg over a pinned snapshot
+    /// (docs/ARCHITECTURE.md §7.4). The partial push-down path streams
+    /// the planned `$match` scan through the raw matcher and folds each
+    /// match into per-group accumulators straight off the encoded bytes
+    /// — no document decode, so `shard.find_decodes` stays flat — and
+    /// ships the O(groups) table. The full-ship baseline
+    /// (`--agg-partial 0`) decodes every match for the router's central
+    /// fold, which is exactly the traffic the push-down exists to kill.
+    pub fn handle_aggregate(
+        &self,
+        pipeline: &AggPipeline,
+        partial: bool,
+    ) -> Result<AggregateReply, WireError> {
+        self.metrics.counter(names::SHARD_SNAPSHOT_READS).inc();
+        // Fence/snapshot pinned as a stable pair — same argument as in
+        // [`Self::handle_find`]; the fence's map version travels in the
+        // reply for the router's uniform-version retry.
+        let (fence, snap) = self.pin_with_fence();
+        let view = self.reader.view(&snap).map_err(expired)?;
+        let mut scan = ScanCursor::new(
+            self.plan_scan(&view, &pipeline.filter),
+            pipeline.filter.clone(),
+            fence,
+        );
+        if !partial {
+            let mut docs = Vec::new();
+            while let Some((_, raw)) = self.next_scan_match(&view, &mut scan) {
+                docs.push(
+                    RawDoc::new(raw)
+                        .decode()
+                        .map_err(|e| WireError::Server(format!("corrupt record: {e}")))?,
+                );
+            }
+            self.metrics.counter(names::SHARD_FIND_DECODES).add(docs.len() as u64);
+            self.metrics.counter(names::SHARD_AGG_DOCS).add(docs.len() as u64);
+            self.flush_scan_metrics(&mut scan);
+            return Ok(AggregateReply { rows: Vec::new(), docs, version: fence.version });
+        }
+        let mut table = PartialTable::new();
+        let mut folded = 0u64;
+        let kernel_shape = pipeline
+            .kernel_shape()
+            .filter(|_| self.kernels.shapes().stats_m > 0);
+        let mut kernel_served = false;
+        match kernel_shape {
+            Some((key_field, value_field)) => {
+                // Gather (key, value) columns while every record stays
+                // provably lossless for the f32 kernel: an `Int` key and
+                // an `F64` value that round-trips through f32. The first
+                // non-conforming record bails the whole leg to the
+                // scalar fold (replaying what was gathered), so the
+                // kernel can never change a result — the same posture as
+                // the canonical-shape gate on the find path.
+                let mut pairs: Vec<(i64, f64)> = Vec::new();
+                let mut eligible = true;
+                while let Some((_, raw)) = self.next_scan_match(&view, &mut scan) {
+                    folded += 1;
+                    let rd = RawDoc::new(raw);
+                    if eligible {
+                        match (rd.get(key_field), rd.get(value_field)) {
+                            (Some(RawValue::Int(k)), Some(RawValue::F64(v)))
+                                if (v as f32) as f64 == v =>
+                            {
+                                pairs.push((k, v));
+                                continue;
+                            }
+                            _ => {
+                                eligible = false;
+                                for &(k, v) in &pairs {
+                                    table.fold_kernel_pair(pipeline, k, v);
+                                }
+                                pairs.clear();
+                            }
+                        }
+                    }
+                    table.fold_raw(pipeline, &rd);
+                }
+                if eligible {
+                    table = self.kernel_accumulate(pipeline, &pairs)?;
+                    kernel_served = true;
+                }
+            }
+            None => {
+                while let Some((_, raw)) = self.next_scan_match(&view, &mut scan) {
+                    folded += 1;
+                    table.fold_raw(pipeline, &RawDoc::new(raw));
+                }
+            }
+        }
+        self.metrics
+            .counter(if kernel_served {
+                names::SHARD_AGG_KERNEL_PATH
+            } else {
+                names::SHARD_AGG_SCALAR_PATH
+            })
+            .inc();
+        self.metrics.counter(names::SHARD_AGG_DOCS).add(folded);
+        self.flush_scan_metrics(&mut scan);
+        let rows = table.into_rows();
+        self.metrics.counter(names::SHARD_AGG_GROUPS).add(rows.len() as u64);
+        Ok(AggregateReply { rows, docs: Vec::new(), version: fence.version })
+    }
+
+    /// Reduce gathered `(group key, value)` columns with the compiled
+    /// stats kernel: groups pack as *columns* of a `[b, stats_m]` batch
+    /// (the kernel reduces per column), short columns padded by
+    /// repeating their first value — a no-op for min/max, the only
+    /// value-dependent states a kernel-shaped pipeline has. Counts come
+    /// from the scalar bucket sizes. Inputs passed the f32 round-trip
+    /// gate, so the reduced min/max are bit-identical to the scalar
+    /// fold's.
+    fn kernel_accumulate(
+        &self,
+        pipeline: &AggPipeline,
+        pairs: &[(i64, f64)],
+    ) -> Result<PartialTable, WireError> {
+        let m = self.kernels.shapes().stats_m;
+        let mut order: Vec<i64> = Vec::new();
+        let mut cols: HashMap<i64, Vec<f32>> = HashMap::new();
+        for &(k, v) in pairs {
+            cols.entry(k)
+                .or_insert_with(|| {
+                    order.push(k);
+                    Vec::new()
+                })
+                .push(v as f32);
+        }
+        let mut table = PartialTable::new();
+        for chunk in order.chunks(m) {
+            let b = chunk.iter().map(|k| cols[k].len()).max().unwrap_or(0);
+            if b == 0 {
+                continue;
+            }
+            // Row-major [b, m]: column c holds group c's values; surplus
+            // columns repeat column 0 and their outputs are ignored.
+            let mut buf = vec![0f32; b * m];
+            for (c, k) in chunk.iter().enumerate() {
+                let vals = &cols[k];
+                for (r, slot) in buf.chunks_exact_mut(m).enumerate() {
+                    slot[c] = vals[r.min(vals.len() - 1)];
+                }
+            }
+            for c in chunk.len()..m {
+                for slot in buf.chunks_exact_mut(m) {
+                    slot[c] = slot[0];
+                }
+            }
+            let out = self
+                .kernels
+                .stats(&buf, b, m)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            for (c, k) in chunk.iter().enumerate() {
+                let n = cols[k].len() as u64;
+                let states = pipeline
+                    .accs
+                    .iter()
+                    .map(|spec| match spec.op {
+                        AccOp::Count => AccState::Count(n),
+                        AccOp::Min => AccState::Min(Some(Value::F64(out.min[c] as f64))),
+                        AccOp::Max => AccState::Max(Some(Value::F64(out.max[c] as f64))),
+                        // Unreachable for kernel-shaped pipelines
+                        // (`kernel_shape` excludes sum/avg); keep the
+                        // fold identity so a logic slip degrades to a
+                        // mergeable zero state instead of a panic.
+                        AccOp::Sum => AccState::Sum(0.0),
+                        AccOp::Avg => AccState::Avg { sum: 0.0, n: 0 },
+                    })
+                    .collect();
+                table.insert_group(GroupKey::Int(*k), states);
+            }
+        }
+        Ok(table)
     }
 
     /// Build the cursor source for a find: the index-ordered sort path,
@@ -1243,5 +1433,108 @@ mod tests {
         let (_eng, ctx) = ctx_with_docs("readctx5", 4);
         let err = ctx.handle_get_more(99).unwrap_err();
         assert!(matches!(err, WireError::UnknownCursor(99)));
+    }
+
+    /// Engine + context whose registry handle the test keeps, with a
+    /// canonical-numeric corpus: Int ts/node_id plus an f64 metric
+    /// column exact in f32 (`i * 0.5`).
+    fn agg_fixture(tag: &str, n: i64) -> (Engine, ReadContext, Registry, Vec<Document>) {
+        let dir = LocalDir::temp(tag).unwrap();
+        let mut eng = Engine::open_with(Box::new(dir), EngineOptions::default()).unwrap();
+        eng.create_collection(COLLECTION);
+        let docs: Vec<Document> = (0..n)
+            .map(|i| doc(i, i % 4).set("load", (i % 7) as f64 * 0.5))
+            .collect();
+        eng.insert_many(COLLECTION, &docs).unwrap();
+        let metrics = Registry::new();
+        let ctx =
+            ReadContext::new(eng.reader(), Kernels::fallback(), metrics.clone(), 1_000);
+        (eng, ctx, metrics, docs)
+    }
+
+    fn merged_result(p: &AggPipeline, rows: Vec<crate::mongo::aggregate::AggRow>) -> Vec<Document> {
+        let mut t = PartialTable::new();
+        t.merge_rows(p, rows);
+        p.finalize(t)
+    }
+
+    #[test]
+    fn aggregate_partial_agrees_with_reference_and_decodes_nothing() {
+        let (_eng, ctx, metrics, docs) = agg_fixture("readagg1", 40);
+        // sum/avg force the scalar fold (kernel shape excludes them).
+        let p = AggPipeline::new()
+            .matching(Filter::range("ts", 5i64, 35i64))
+            .group_by("node_id")
+            .count("n")
+            .sum("total", "load")
+            .avg("mean", "load");
+        let r = ctx.handle_aggregate(&p, true).unwrap();
+        assert!(r.docs.is_empty(), "partial mode ships no documents");
+        assert!(r.rows.len() <= 4, "one row per group, not per match");
+        assert_eq!(merged_result(&p, r.rows), p.execute_docs(&docs));
+        // The accumulate path probes raw bytes; nothing is decoded.
+        assert_eq!(metrics.counter(names::SHARD_FIND_DECODES).get(), 0);
+        assert_eq!(metrics.counter(names::SHARD_AGG_SCALAR_PATH).get(), 1);
+        assert_eq!(metrics.counter(names::SHARD_AGG_KERNEL_PATH).get(), 0);
+        assert_eq!(metrics.counter(names::SHARD_AGG_DOCS).get(), 30);
+        assert_eq!(
+            metrics.counter(names::SHARD_AGG_GROUPS).get(),
+            r.rows.len() as u64
+        );
+    }
+
+    #[test]
+    fn aggregate_kernel_path_is_lossless_and_counted() {
+        let (_eng, ctx, metrics, docs) = agg_fixture("readagg2", 64);
+        let p = AggPipeline::new()
+            .group_by("node_id")
+            .count("n")
+            .min("lo", "load")
+            .max("hi", "load");
+        assert!(p.kernel_shape().is_some());
+        let r = ctx.handle_aggregate(&p, true).unwrap();
+        assert_eq!(metrics.counter(names::SHARD_AGG_KERNEL_PATH).get(), 1);
+        assert_eq!(metrics.counter(names::SHARD_AGG_SCALAR_PATH).get(), 0);
+        assert_eq!(metrics.counter(names::SHARD_FIND_DECODES).get(), 0);
+        // f32-exact inputs: the kernel reduction is bit-identical to the
+        // scalar oracle.
+        assert_eq!(merged_result(&p, r.rows), p.execute_docs(&docs));
+    }
+
+    #[test]
+    fn aggregate_kernel_bails_to_scalar_on_inexact_values() {
+        let (mut eng, ctx, metrics, mut docs) = agg_fixture("readagg3", 16);
+        // 0.1 does not round-trip through f32: the gate must bail the
+        // whole leg to the scalar fold mid-scan, with identical results.
+        let odd = doc(100, 1).set("load", 0.1f64);
+        eng.insert_many(COLLECTION, &[odd.clone()]).unwrap();
+        docs.push(odd);
+        let p = AggPipeline::new()
+            .group_by("node_id")
+            .count("n")
+            .min("lo", "load")
+            .max("hi", "load");
+        let r = ctx.handle_aggregate(&p, true).unwrap();
+        assert_eq!(metrics.counter(names::SHARD_AGG_KERNEL_PATH).get(), 0);
+        assert_eq!(metrics.counter(names::SHARD_AGG_SCALAR_PATH).get(), 1);
+        assert_eq!(merged_result(&p, r.rows), p.execute_docs(&docs));
+    }
+
+    #[test]
+    fn aggregate_full_ship_decodes_and_ships_every_match() {
+        let (_eng, ctx, metrics, docs) = agg_fixture("readagg4", 24);
+        let p = AggPipeline::new()
+            .matching(Filter::range("ts", 0i64, 12i64))
+            .group_by("node_id")
+            .count("n")
+            .avg("mean", "load");
+        let r = ctx.handle_aggregate(&p, false).unwrap();
+        assert!(r.rows.is_empty(), "full-ship mode ships documents");
+        assert_eq!(r.docs.len(), 12, "every match crosses the wire");
+        assert_eq!(metrics.counter(names::SHARD_FIND_DECODES).get(), 12);
+        assert_eq!(metrics.counter(names::SHARD_AGG_DOCS).get(), 12);
+        // The central fold over shipped documents is the reference
+        // executor by construction.
+        assert_eq!(p.execute_docs(&r.docs), p.execute_docs(&docs));
     }
 }

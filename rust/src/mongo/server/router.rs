@@ -19,12 +19,13 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::config::ShardKeyKind;
+use crate::mongo::aggregate::{AggPipeline, PartialTable};
 use crate::mongo::bson::{Document, Value};
 use crate::mongo::query::{Filter, FindOptions, SortDir};
 use crate::mongo::sharding::chunk::{ChunkMap, ShardKey};
 use crate::mongo::wire::{
-    batch_wire_bytes, find_wire_bytes, rpc, ConfigRequest, DeleteReply, FindReply, Reply,
-    ShardRequest, UpdateReply, WireError,
+    agg_reply_wire_bytes, agg_wire_bytes, batch_wire_bytes, find_wire_bytes, rpc, ConfigRequest,
+    DeleteReply, FindReply, Reply, ShardRequest, UpdateReply, WireError,
 };
 use crate::metrics::{names, Registry};
 use crate::runtime::Kernels;
@@ -81,6 +82,15 @@ pub enum RouterRequest {
     Count {
         filter: Filter,
         reply: Reply<Result<u64, WireError>>,
+    },
+    /// Cluster-wide aggregation: scatter the pipeline to all shards
+    /// under the same version-uniform protocol as `Count`, merge the
+    /// per-shard partial accumulator tables (or, in full-ship baseline
+    /// mode, centrally fold the shipped documents), then apply the
+    /// final `$sort`/`$limit` and reply with result documents.
+    Aggregate {
+        pipeline: AggPipeline,
+        reply: Reply<Result<Vec<Document>, WireError>>,
     },
     /// Filter-driven cluster-wide update (`$set`-style top-level field
     /// merge). Targeted to the owner set when the filter pins the shard
@@ -150,6 +160,11 @@ pub struct Router {
     flush_docs: usize,
     /// Flush the ingest buffer at this deadline after its first doc.
     flush_interval: Duration,
+    /// Aggregation push-down: when set, shards fold matches into
+    /// partial accumulator tables and ship those; when clear, shards
+    /// ship every matching document and the router folds centrally
+    /// (the bench baseline).
+    agg_partial: bool,
     /// Buffered-ingest documents awaiting the next flush.
     ingest_buf: Vec<Document>,
     /// Per-contributor (doc count, reply) acks for the buffered docs.
@@ -175,6 +190,7 @@ impl Router {
         default_batch: usize,
         flush_docs: usize,
         flush_interval: Duration,
+        agg_partial: bool,
     ) -> Self {
         Self {
             id,
@@ -188,6 +204,7 @@ impl Router {
             default_batch,
             flush_docs: flush_docs.max(1),
             flush_interval,
+            agg_partial,
             ingest_buf: Vec::new(),
             pending_acks: Vec::new(),
             buffered_since: None,
@@ -285,6 +302,16 @@ impl Router {
                 RouterRequest::Count { filter, reply } => {
                     self.flush_ingest();
                     let _ = reply.send(self.handle_count(filter));
+                }
+                RouterRequest::Aggregate { pipeline, reply } => {
+                    // Read-your-writes: buffered docs must be visible
+                    // to the pipeline's $match.
+                    self.flush_ingest();
+                    let t = Instant::now();
+                    let r = self.handle_aggregate(pipeline);
+                    self.metrics
+                        .observe(names::ROUTER_AGG_NS, t.elapsed().as_nanos() as u64);
+                    let _ = reply.send(r);
                 }
                 RouterRequest::Update { filter, set, reply } => {
                     // Read-your-writes for the filter: buffered inserts
@@ -588,6 +615,89 @@ impl Router {
             if Instant::now() >= deadline {
                 return Err(WireError::Server(
                     "count: shards would not converge on one chunk-map version".into(),
+                ));
+            }
+        }
+    }
+
+    /// Cluster-wide aggregation under the same **version-uniform
+    /// scatter** as [`Self::handle_count`]: per-shard partial
+    /// accumulator tables only compose exactly when every shard served
+    /// under one chunk-map version (the donor-side fence and the
+    /// destination's publish mask then partition a migrating range
+    /// between exactly the shards the map says hold it — no document is
+    /// folded twice or zero times). On version skew the scatter
+    /// retries; the window is one mailbox drain long.
+    ///
+    /// In push-down mode (`agg_partial`) each shard ships one
+    /// accumulator row per group it saw and the router merges the
+    /// partials — `avg` stays a (sum, count) pair until the terminal
+    /// finalize here, which is what makes the distributed mean exact.
+    /// In full-ship baseline mode the shards ship every matching
+    /// document and the router folds them centrally through the same
+    /// reference executor the differential tests compare against.
+    fn handle_aggregate(&mut self, pipeline: AggPipeline) -> Result<Vec<Document>, WireError> {
+        self.finds += 1;
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let mut attempt = 0u32;
+        loop {
+            if attempt > 0 {
+                self.metrics.counter(names::ROUTER_AGG_RETRIES).inc();
+                if attempt > 8 {
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                self.refresh_map();
+            }
+            attempt += 1;
+            self.wire_bytes_out += agg_wire_bytes(&pipeline) * self.shards.len() as u64;
+            let mut rxs = Vec::with_capacity(self.shards.len());
+            for (s, shard) in self.shards.iter().enumerate() {
+                let (tx, rx) = mpsc::channel();
+                shard
+                    .send(ShardRequest::Aggregate {
+                        pipeline: pipeline.clone(),
+                        partial: self.agg_partial,
+                        reply: tx,
+                    })
+                    .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
+                rxs.push((s, rx));
+            }
+            // Gather every reply before merging: the merge is only
+            // valid once the versions are known to agree.
+            let mut replies = Vec::with_capacity(self.shards.len());
+            let mut versions = Vec::with_capacity(self.shards.len());
+            for (s, rx) in rxs {
+                let rep = rx
+                    .recv()
+                    .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
+                versions.push(rep.version);
+                replies.push(rep);
+            }
+            if versions.windows(2).all(|w| w[0] == w[1]) {
+                let mut table = PartialTable::new();
+                let mut shipped_docs = Vec::new();
+                for rep in replies {
+                    self.metrics
+                        .counter(names::ROUTER_AGG_REPLY_BYTES)
+                        .add(agg_reply_wire_bytes(&rep));
+                    self.metrics
+                        .counter(names::ROUTER_AGG_PARTIAL_ROWS)
+                        .add(rep.rows.len() as u64);
+                    self.metrics
+                        .counter(names::ROUTER_AGG_DOCS_SHIPPED)
+                        .add(rep.docs.len() as u64);
+                    table.merge_rows(&pipeline, rep.rows);
+                    shipped_docs.extend(rep.docs);
+                }
+                return Ok(if self.agg_partial {
+                    pipeline.finalize(table)
+                } else {
+                    pipeline.execute_docs(&shipped_docs)
+                });
+            }
+            if Instant::now() >= deadline {
+                return Err(WireError::Server(
+                    "aggregate: shards would not converge on one chunk-map version".into(),
                 ));
             }
         }

@@ -246,6 +246,9 @@ impl ShardServer {
                 ShardRequest::Count { filter, reply } => {
                     self.dispatch_read(ReadRequest::Count { filter, reply });
                 }
+                ShardRequest::Aggregate { pipeline, partial, reply } => {
+                    self.dispatch_read(ReadRequest::Aggregate { pipeline, partial, reply });
+                }
                 ShardRequest::Update { version, filter, set, reply } => {
                     let t = Instant::now();
                     let r = self.handle_update(version, &filter, &set);

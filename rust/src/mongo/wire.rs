@@ -8,6 +8,7 @@
 
 use std::sync::mpsc;
 
+use crate::mongo::aggregate::{AggPipeline, AggRow};
 use crate::mongo::bson::Document;
 use crate::mongo::query::{Filter, FindOptions};
 use crate::mongo::sharding::chunk::ChunkMap;
@@ -98,6 +99,22 @@ pub struct UpdateReply {
 pub struct DeleteReply {
     /// Documents removed on this shard.
     pub deleted: u64,
+}
+
+/// Result of a shard-side aggregation leg. Exactly one of `rows`/`docs`
+/// is populated: the partial push-down path ships one accumulator row
+/// per group (O(groups) on the wire), the full-ship baseline ships every
+/// matched document for a central fold at the router. Carries the
+/// serving map version for the router's uniform-version retry, same as
+/// [`CountReply`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AggregateReply {
+    /// Per-group partial accumulator rows (`--agg-partial 1`).
+    pub rows: Vec<AggRow>,
+    /// Matched documents for the router's central fold (`--agg-partial 0`).
+    pub docs: Vec<Document>,
+    /// Chunk-map version in force when the shard folded.
+    pub version: u64,
 }
 
 /// One find/getMore result batch.
@@ -197,6 +214,17 @@ pub enum ShardRequest {
     Count {
         filter: Filter,
         reply: Reply<Result<CountReply, WireError>>,
+    },
+    /// Execute an aggregation pipeline leg over a pinned snapshot.
+    /// With `partial` the shard folds matches into per-group partial
+    /// accumulators over raw bytes and ships the O(groups) table; without
+    /// it the shard decodes and ships every matched document (the bench
+    /// baseline). The reply carries the serving map version for the
+    /// router's uniform-version retry.
+    Aggregate {
+        pipeline: AggPipeline,
+        partial: bool,
+        reply: Reply<Result<AggregateReply, WireError>>,
     },
     /// Filter-driven update (`$set`-style top-level field merge) of a
     /// routed leg. Runs on the event loop like inserts; shard-key
@@ -378,6 +406,18 @@ pub fn batch_wire_bytes(docs: &[Document]) -> u64 {
 /// Wire-size estimate of a find request.
 pub fn find_wire_bytes(filter: &Filter) -> u64 {
     filter.encoded_len() as u64 + 32
+}
+
+/// Wire-size estimate of an aggregate request.
+pub fn agg_wire_bytes(pipeline: &AggPipeline) -> u64 {
+    pipeline.encoded_len() as u64 + 32
+}
+
+/// Wire-size estimate of an aggregate reply (partial rows + any
+/// full-ship documents — whichever leg the reply used).
+pub fn agg_reply_wire_bytes(reply: &AggregateReply) -> u64 {
+    reply.rows.iter().map(|r| r.wire_bytes() as u64).sum::<u64>()
+        + batch_wire_bytes(&reply.docs)
 }
 
 /// Typed sender for a shard's mailbox.

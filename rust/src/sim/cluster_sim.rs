@@ -85,6 +85,18 @@ pub struct SimSpec {
     /// 0 = reads run inline on the shard's single event loop; N > 0
     /// models the reader pool as N query-phase servers per shard.
     pub reader_threads: usize,
+    /// Aggregation axis: `aggregate` scatters appended to the query
+    /// phase (0 = off, the paper's workload). Each matches a 30-minute
+    /// window over every monitored node and groups it into
+    /// `agg_groups` buckets.
+    pub aggregations: u32,
+    /// Aggregation push-down (the live `--agg-partial` knob): shards
+    /// fold matches into per-group partial rows (`agg_doc_ns` each)
+    /// and ship one row per group; off ships every matching document
+    /// and the router folds centrally — the full-ship baseline.
+    pub agg_partial: bool,
+    /// Group cardinality of each simulated aggregation.
+    pub agg_groups: u32,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -121,6 +133,9 @@ impl SimSpec {
             deletes_per_100_batches: 0,
             crud_docs_per_op: 256,
             reader_threads: 0,
+            aggregations: 0,
+            agg_partial: true,
+            agg_groups: 64,
             cost,
             seed: 0x51712,
         })
@@ -171,6 +186,11 @@ pub struct SimReport {
     pub query_virt_ns: u64,
     pub queries_per_sec: f64,
     pub query_latency: Histogram,
+    /// Aggregation scatters executed in the query phase (the axis).
+    pub aggregations: u64,
+    /// Shard→router reply payload the aggregations put on the fabric —
+    /// partial rows or whole documents depending on `agg_partial`.
+    pub agg_reply_bytes: u64,
     pub events: u64,
 }
 
@@ -648,6 +668,60 @@ impl ClusterSim {
             }
         }
 
+        // Aggregation axis: pipeline scatters appended to the query
+        // phase. Each matches a 30-minute window over every monitored
+        // node. Push-down: the shard folds each match into its partial
+        // table (index step + raw-probe fold, no decode) and ships one
+        // ~row per group; the router merges groups × shards rows.
+        // Full-ship: each match pays probe + fetch/serialize, crosses
+        // the fabric whole, and the router folds centrally at the same
+        // per-document cost the shards would have paid.
+        let mut aggregations_done = 0u64;
+        let mut agg_reply_bytes = 0u64;
+        // One accumulator row on the wire: group key + a few tagged
+        // (op, f64/u64) accumulator states.
+        const AGG_ROW_BYTES: f64 = 48.0;
+        for a in 0..spec.aggregations {
+            let r = (a as usize) % r_count;
+            let t_r = router_cpu.serve(r, query_end, cost.route_batch_fixed_ns as u64);
+            let matches_per_shard =
+                (spec.monitored_nodes as f64 * 30.0 / s_count as f64).max(1.0);
+            let rows_per_shard = (spec.agg_groups.max(1) as f64).min(matches_per_shard);
+            let mut t_done = t_r;
+            for s in 0..s_count {
+                let (svc, reply_bytes) = if spec.agg_partial {
+                    (
+                        (cost.find_fixed_ns
+                            + matches_per_shard
+                                * (cost.index_candidate_ns + cost.agg_doc_ns))
+                            as u64,
+                        rows_per_shard * AGG_ROW_BYTES,
+                    )
+                } else {
+                    (
+                        (cost.find_fixed_ns
+                            + matches_per_shard
+                                * (cost.index_candidate_ns
+                                    + cost.doc_probe_ns
+                                    + cost.result_doc_ns)) as u64,
+                        matches_per_shard * cost.doc_bytes,
+                    )
+                };
+                agg_reply_bytes += reply_bytes as u64;
+                let t_s = shard_cpu.serve(s, t_r + cost.net_latency_ns as u64, svc);
+                let t_net = fabric.serve(t_s, fabric_ns(reply_bytes));
+                t_done = t_done.max(t_net + cost.net_latency_ns as u64);
+            }
+            let merge_svc = if spec.agg_partial {
+                (rows_per_shard * s_count as f64 * cost.agg_merge_group_ns) as u64
+            } else {
+                (matches_per_shard * s_count as f64 * cost.agg_doc_ns) as u64
+            };
+            let t_m = router_cpu.serve(r, t_done, merge_svc);
+            query_end = query_end.max(t_m);
+            aggregations_done += 1;
+        }
+
         SimReport {
             nodes: topo.total_nodes,
             shards: topo.shards,
@@ -675,6 +749,8 @@ impl ClusterSim {
             query_virt_ns: query_end,
             queries_per_sec: queries as f64 * 1e9 / query_end.max(1) as f64,
             query_latency: latency,
+            aggregations: aggregations_done,
+            agg_reply_bytes,
             events: ingest_events + q.processed(),
         }
     }
@@ -960,6 +1036,54 @@ mod tests {
             "update-heavy ({} ns) must cost more than delete-heavy ({} ns)",
             ru.ingest_virt_ns,
             rd.ingest_virt_ns
+        );
+    }
+
+    #[test]
+    fn aggregation_axis_off_by_default_and_costs_query_time() {
+        let base = ClusterSim::new(small_spec(32)).run();
+        assert_eq!(base.aggregations, 0, "axis off by default");
+        assert_eq!(base.agg_reply_bytes, 0);
+        let mut spec = small_spec(32);
+        spec.aggregations = 16;
+        let r = ClusterSim::new(spec).run();
+        assert_eq!(r.aggregations, 16);
+        assert!(r.agg_reply_bytes > 0);
+        assert_eq!(r.docs, base.docs, "aggregations must not change the corpus");
+        assert_eq!(
+            r.ingest_virt_ns, base.ingest_virt_ns,
+            "the axis lives in the query phase only"
+        );
+        assert!(
+            r.query_virt_ns > base.query_virt_ns,
+            "aggregation work must cost virtual time"
+        );
+    }
+
+    #[test]
+    fn partial_aggregation_beats_full_ship() {
+        // Same scatters, same matches; the only difference is whether
+        // shards ship per-group rows or whole matching documents.
+        let mut partial = small_spec(32);
+        partial.aggregations = 16;
+        partial.agg_groups = 8;
+        partial.agg_partial = true;
+        let mut full = partial.clone();
+        full.agg_partial = false;
+        let rp = ClusterSim::new(partial).run();
+        let rf = ClusterSim::new(full).run();
+        assert_eq!(rp.aggregations, rf.aggregations);
+        assert!(
+            rp.agg_reply_bytes * 10 < rf.agg_reply_bytes,
+            "partial replies ({} B) must be far below full-ship ({} B)",
+            rp.agg_reply_bytes,
+            rf.agg_reply_bytes
+        );
+        assert!(
+            rp.query_virt_ns < rf.query_virt_ns,
+            "push-down ({} ns) must beat full-ship ({} ns)",
+            rp.query_virt_ns,
+            rf.query_virt_ns
         );
     }
 

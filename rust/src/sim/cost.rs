@@ -73,6 +73,14 @@ pub struct CostModel {
     pub result_doc_ns: f64,
     /// Router-side merge per result document.
     pub merge_doc_ns: f64,
+    /// Aggregation push-down: fold one matching record into the
+    /// shard's partial accumulator table (raw field probes + group
+    /// upsert; no decode).
+    pub agg_doc_ns: f64,
+    /// Router-side merge per partial accumulator row received — the
+    /// per-group term that replaces `merge_doc_ns` × matches when
+    /// push-down is on.
+    pub agg_merge_group_ns: f64,
     /// Config-server fixed cost of committing a chunk split.
     pub split_base_ns: f64,
     /// Config-server cost per chunk-map *entry* per member refresh
@@ -114,6 +122,8 @@ impl Default for CostModel {
             doc_decode_ns: 1_100.0,
             result_doc_ns: 1_500.0,
             merge_doc_ns: 120.0,
+            agg_doc_ns: 350.0,
+            agg_merge_group_ns: 400.0,
             split_base_ns: 80_000.0,
             map_entry_ns: 2.0,
             refresh_fixed_ns: 60_000.0,
@@ -146,6 +156,8 @@ impl CostModel {
             .set("doc_decode_ns", self.doc_decode_ns)
             .set("result_doc_ns", self.result_doc_ns)
             .set("merge_doc_ns", self.merge_doc_ns)
+            .set("agg_doc_ns", self.agg_doc_ns)
+            .set("agg_merge_group_ns", self.agg_merge_group_ns)
             .set("split_base_ns", self.split_base_ns)
             .set("map_entry_ns", self.map_entry_ns)
             .set("refresh_fixed_ns", self.refresh_fixed_ns)
@@ -178,6 +190,8 @@ impl CostModel {
             doc_decode_ns: f("doc_decode_ns", d.doc_decode_ns),
             result_doc_ns: f("result_doc_ns", d.result_doc_ns),
             merge_doc_ns: f("merge_doc_ns", d.merge_doc_ns),
+            agg_doc_ns: f("agg_doc_ns", d.agg_doc_ns),
+            agg_merge_group_ns: f("agg_merge_group_ns", d.agg_merge_group_ns),
             split_base_ns: f("split_base_ns", d.split_base_ns),
             map_entry_ns: f("map_entry_ns", d.map_entry_ns),
             refresh_fixed_ns: f("refresh_fixed_ns", d.refresh_fixed_ns),
@@ -370,6 +384,40 @@ impl CostModel {
                 (t.elapsed().as_nanos() as f64 / (reps * encs.len()) as f64).max(20.0);
         }
 
+        // --- Aggregation push-down: fold one encoded record into a
+        // partial accumulator table (the shard-side scalar path), and
+        // the router-side merge per partial row received.
+        {
+            use crate::mongo::aggregate::{AggPipeline, PartialTable};
+            use crate::mongo::bson::{Document, RawDoc};
+            let p = AggPipeline::new()
+                .group_by("node_id")
+                .count("n")
+                .avg("mean_ts", "ts");
+            let encs: Vec<Vec<u8>> = docs.iter().map(Document::encode).collect();
+            let reps = if quick { 4 } else { 20 };
+            let t = Instant::now();
+            let mut table = PartialTable::new();
+            for _ in 0..reps {
+                for e in &encs {
+                    table.fold_raw(&p, &RawDoc::new(e));
+                }
+            }
+            cm.agg_doc_ns =
+                (t.elapsed().as_nanos() as f64 / (reps * encs.len()) as f64).max(10.0);
+            let rows = table.into_rows();
+            let merges = if quick { 50 } else { 500 };
+            let t = Instant::now();
+            for _ in 0..merges {
+                let mut m = PartialTable::new();
+                m.merge_rows(&p, rows.clone());
+                std::hint::black_box(m.len());
+            }
+            cm.agg_merge_group_ns = (t.elapsed().as_nanos() as f64
+                / (merges as f64 * rows.len().max(1) as f64))
+                .max(10.0);
+        }
+
         // --- Shard: update / delete per document, measured as one
         // batch each (both journal a single frame per batch, like the
         // live write path). Updates overwrite a prefix of the corpus
@@ -517,6 +565,12 @@ mod tests {
         assert!(cm.result_doc_ns > 50.0);
         assert!(cm.doc_probe_ns >= 5.0, "probe {}", cm.doc_probe_ns);
         assert!(cm.doc_decode_ns >= 20.0, "decode {}", cm.doc_decode_ns);
+        assert!(cm.agg_doc_ns >= 10.0 && cm.agg_doc_ns < 1e6, "agg {}", cm.agg_doc_ns);
+        assert!(
+            cm.agg_merge_group_ns >= 10.0 && cm.agg_merge_group_ns < 1e7,
+            "agg merge {}",
+            cm.agg_merge_group_ns
+        );
         assert!(cm.map_entry_ns > 0.0);
         assert!(cm.journal_frame_ns >= 1_000.0, "frame {}", cm.journal_frame_ns);
         assert!(cm.checkpoint_doc_ns >= 50.0, "ckpt {}", cm.checkpoint_doc_ns);

@@ -1193,3 +1193,71 @@ fn cursor_past_retention_fails_retryably_and_a_fresh_find_succeeds() {
     assert_eq!(again, 600);
     cluster.shutdown();
 }
+
+#[test]
+fn aggregation_pushdown_ships_groups_not_documents() {
+    use hpcstore::metrics::names;
+    use hpcstore::mongo::aggregate::AggPipeline;
+    use hpcstore::mongo::query::SortDir;
+
+    // The push-down reply-size law, counter-asserted end to end: with
+    // --agg-partial the shards reply with one accumulator row per live
+    // group and decode nothing; with the full-ship baseline every
+    // matched document crosses the wire and is decoded for the
+    // router's central fold. Both modes must agree bit-for-bit with
+    // the in-process reference executor — including `avg`, whose
+    // sum/count parts only finalize at the router merge.
+    let corpus: Vec<Document> = (0..900).map(|i| metric_doc(i, i % 6)).collect();
+    let matched = 600u64; // ts in [100, 700)
+    let groups = 6u64;
+    let shards = 2u64;
+    let pipeline = AggPipeline::new()
+        .matching(Filter::range("ts", 100i64, 700i64))
+        .group_by("node_id")
+        .count("n")
+        .sum("cpu", "cpu_user")
+        .avg("mem", "mem_used")
+        .min("first_ts", "ts")
+        .max("last_ts", "ts")
+        .sort("n", SortDir::Desc)
+        .limit(8);
+    let expected = pipeline.execute_docs(&corpus);
+    assert_eq!(expected.len(), groups as usize);
+
+    for partial in [true, false] {
+        let mut spec = ClusterSpec::small(shards as u32, 1);
+        spec.store = StoreConfig { agg_partial: partial, ..Default::default() };
+        let cluster = start(spec, if partial { "aggp" } else { "aggf" });
+        let client = cluster.client();
+        client.create_index(IndexSpec::compound(&["node_id", "ts"])).unwrap();
+        client.insert_many(corpus.clone()).unwrap();
+
+        let decodes_before =
+            cluster.metrics().counter(names::SHARD_FIND_DECODES).get();
+        let got = client.aggregate(pipeline.clone()).unwrap();
+        assert_eq!(
+            got, expected,
+            "partial={partial}: distributed aggregate diverged from the \
+             reference executor"
+        );
+
+        let m = cluster.metrics();
+        let rows = m.counter(names::ROUTER_AGG_PARTIAL_ROWS).get();
+        let shipped = m.counter(names::ROUTER_AGG_DOCS_SHIPPED).get();
+        let decodes = m.counter(names::SHARD_FIND_DECODES).get() - decodes_before;
+        assert_eq!(m.counter(names::SHARD_AGG_DOCS).get(), matched);
+        if partial {
+            assert!(rows > 0 && rows <= groups * shards, "rows = {rows}");
+            assert_eq!(shipped, 0, "push-down must ship no documents");
+            assert_eq!(decodes, 0, "the raw fold must leave find_decodes flat");
+            // sum/avg in the pipeline force the scalar fold.
+            assert_eq!(m.counter(names::SHARD_AGG_SCALAR_PATH).get(), shards);
+            assert_eq!(m.counter(names::SHARD_AGG_KERNEL_PATH).get(), 0);
+        } else {
+            assert_eq!(rows, 0);
+            assert_eq!(shipped, matched, "full ship moves every match");
+            assert_eq!(decodes, matched, "full ship decodes every match");
+        }
+        cluster.shutdown();
+    }
+}

@@ -15,6 +15,12 @@
 //!   the commit counter at submit/reply time), duplicate-free, and a
 //!   cursor drained long after its `find` must stay frozen at its
 //!   snapshot instead of chasing the growing table.
+//! * **Aggregation level** — `ReadRequest::Aggregate` (both the
+//!   partial-accumulator push-down and the full-ship baseline) runs
+//!   against a corpus whose every document is atomically rewritten
+//!   (`rev` bumped, key fields preserved) wave after wave; every reply
+//!   must come from exactly one epoch — static per-group count and
+//!   ts-checksum, and one single `rev` across the whole result.
 //!
 //! Knobs (documented in docs/EXPERIMENTS.md §6): `SNAPSHOT_FUZZ_SEEDS`
 //! is either a count ("32" sweeps seeds 0..32) or a comma list
@@ -380,6 +386,122 @@ fn pool_battery(seed: u64) {
     assert_eq!(eng.snapshots_open(), 0, "seed {seed}: pool leaked snapshot pins");
 }
 
+/// Aggregation battery for one seed: `ReadRequest::Aggregate` replies
+/// under churn must each reflect exactly one snapshot. The corpus is
+/// fixed (512 docs, 8 node groups, unique ts) and the writer rewrites
+/// *every* document in one batch-atomic `update_many` per wave (same
+/// ts/node_id, `rev` bumped to the wave number). Group structure is
+/// therefore an invariant — per-group count and ts checksum never
+/// change — while `rev` is a perfect epoch dye: a reply mixing two
+/// epochs would show two different `rev` values, and min(rev) ==
+/// max(rev) across the whole result proves snapshot uniformity.
+fn aggregation_battery(seed: u64) {
+    use hpcstore::mongo::aggregate::{AggPipeline, PartialTable};
+    use hpcstore::mongo::wire::AggregateReply;
+
+    type AggRx = mpsc::Receiver<Result<AggregateReply, WireError>>;
+
+    let mut eng = open_engine(&format!("snapagg-{seed}"));
+    let metrics = Registry::new();
+    let ctx = Arc::new(ReadContext::new(
+        eng.reader(),
+        Kernels::fallback(),
+        metrics.clone(),
+        64,
+    ));
+    let pool = ReaderPool::start(Arc::clone(&ctx), 3, "snapagg");
+
+    let groups = 8i64;
+    let per_group = 64i64;
+    let corpus: Vec<Document> = (0..groups * per_group)
+        .map(|i| doc(i, i % groups).set("rev", 0i64))
+        .collect();
+    let mut rids = eng.insert_many("metrics", &corpus).unwrap();
+    eng.sync().unwrap();
+
+    let pipeline = AggPipeline::new()
+        .group_by("node_id")
+        .count("n")
+        .sum("ts_sum", "ts")
+        .min("rlo", "rev")
+        .max("rhi", "rev");
+    // Node n owns ts ∈ {n, n+8, …}: 64 terms of an arithmetic series.
+    let ts_sum = |n: i64| (per_group * n + groups * (per_group * (per_group - 1) / 2)) as f64;
+
+    let mut rng = Pcg32::seeded(seed ^ 0xa66);
+    let waves = 40 + rng.next_bounded(40) as i64;
+    let mut inflight: Vec<(AggRx, bool)> = Vec::new();
+    for wave in 1..=waves {
+        // Every wave rewrites the whole corpus at one epoch.
+        let updates: Vec<(RecordId, Document)> = rids
+            .iter()
+            .enumerate()
+            .map(|(i, &rid)| {
+                let i = i as i64;
+                (rid, doc(i, i % groups).set("rev", wave))
+            })
+            .collect();
+        rids = eng.update_many("metrics", &updates).unwrap();
+        eng.sync().unwrap();
+        eng.reclaim();
+
+        let partial = rng.next_bounded(2) == 0;
+        let (tx, rx) = mpsc::channel();
+        pool.submit(ReadRequest::Aggregate {
+            pipeline: pipeline.clone(),
+            partial,
+            reply: tx,
+        });
+        inflight.push((rx, partial));
+    }
+
+    for (rx, partial) in inflight {
+        let rep = rx
+            .recv()
+            .expect("pool dropped an aggregate reply")
+            .expect("aggregate failed");
+        // Merge exactly as the router does for a one-shard scatter.
+        let rows = if partial {
+            assert!(rep.docs.is_empty(), "seed {seed}: push-down shipped documents");
+            let mut table = PartialTable::new();
+            table.merge_rows(&pipeline, rep.rows);
+            pipeline.finalize(table)
+        } else {
+            assert!(rep.rows.is_empty(), "seed {seed}: full ship sent partial rows");
+            pipeline.execute_docs(&rep.docs)
+        };
+        assert_eq!(rows.len(), groups as usize, "seed {seed}: group structure broke");
+        let mut revs = std::collections::HashSet::new();
+        for row in &rows {
+            let node = row.get_i64("_id").unwrap();
+            assert_eq!(row.get_i64("n"), Some(per_group), "seed {seed}: node {node}");
+            assert_eq!(
+                row.get_f64("ts_sum"),
+                Some(ts_sum(node)),
+                "seed {seed}: node {node} ts checksum moved — mixed-epoch read"
+            );
+            let (rlo, rhi) = (row.get_i64("rlo").unwrap(), row.get_i64("rhi").unwrap());
+            assert_eq!(
+                rlo, rhi,
+                "seed {seed}: node {node} saw two revs in one group — torn snapshot"
+            );
+            revs.insert(rlo);
+        }
+        // One epoch across the *whole* scatter leg, not just per group.
+        assert_eq!(
+            revs.len(),
+            1,
+            "seed {seed}: one reply mixed epochs across groups: {revs:?}"
+        );
+        let rev = *revs.iter().next().unwrap();
+        assert!((0..=waves).contains(&rev), "seed {seed}: impossible rev {rev}");
+    }
+
+    pool.shutdown();
+    eng.reclaim();
+    assert_eq!(eng.snapshots_open(), 0, "seed {seed}: aggregate leaked snapshot pins");
+}
+
 /// Overwrite visibility, pinned explicitly: a snapshot opened *before*
 /// an update batch serves only pre-update versions — all of them,
 /// exactly once — while a snapshot opened after serves only the
@@ -446,5 +568,14 @@ fn reader_pool_serves_exact_frozen_results_under_live_ingest() {
     assert!(!seeds.is_empty(), "SNAPSHOT_FUZZ_SEEDS selected no seeds");
     for seed in seeds {
         pool_battery(seed);
+    }
+}
+
+#[test]
+fn aggregation_replies_are_snapshot_uniform_under_churn() {
+    let seeds = seeds();
+    assert!(!seeds.is_empty(), "SNAPSHOT_FUZZ_SEEDS selected no seeds");
+    for seed in seeds {
+        aggregation_battery(seed);
     }
 }
