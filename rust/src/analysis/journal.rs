@@ -182,4 +182,41 @@ mod tests {
         );
         assert!(check(&t).is_empty());
     }
+
+    #[test]
+    fn atomic_multi_op_satisfied_by_a_failover_kill_window_marker() {
+        // The replica-set path journals a data op and its oplog entry
+        // as one OP_MULTI frame; the marker for it lives in the
+        // failover kill-window tests, a *different* test file from the
+        // storage crash suite — markers must be collected from every
+        // rust/tests/*.rs file, not one blessed suite.
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/storage/engine.rs",
+            "const OP_MULTI: u8 = 7;\nfn w(&mut self) { self.journal_record(OP_MULTI, c, &p); }\nfn r(op: u8) { match op { OP_MULTI => {} _ => {} } }",
+        );
+        t.add("rust/tests/crash_matrix.rs", "// lint: journal-op(OP_MULTI)\nfn t() {}");
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn atomic_multi_op_without_a_kill_window_test_is_flagged() {
+        // An atomic frame op that no crash test exercises is exactly
+        // the gap the replica-set proof obligation closes: the frame's
+        // all-or-nothing replay is a *claim* until a kill window pins
+        // it.
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/storage/engine.rs",
+            "const OP_MULTI: u8 = 7;\nfn w(&mut self) { self.journal_record(OP_MULTI, c, &p); }\nfn r(op: u8) { match op { OP_MULTI => {} _ => {} } }",
+        );
+        t.add("rust/tests/crash_matrix.rs", "fn t() {}");
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(
+            v[0].message.contains("OP_MULTI") && v[0].message.contains("no crash test"),
+            "{:?}",
+            v[0]
+        );
+    }
 }

@@ -409,4 +409,70 @@ mod tests {
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].message.contains("SetMap"));
     }
+
+    #[test]
+    fn replication_one_way_variants_pass_with_no_reply_annotations() {
+        // The replica-set protocol is four one-way mailbox messages
+        // (Replicate, ReplicationAck, RequestVote, VoteReply): a
+        // blocking reply channel would deadlock two event loops
+        // messaging each other, so each carries the allow(no_reply)
+        // annotation — and each still needs its dispatch arm.
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/wire.rs",
+            "pub enum ShardRequest {\n    // lint: allow(no_reply, one-way; follower acks via ReplicationAck)\n    Replicate { term: u64, entries: Vec<Document>, commit: u64, reset: bool },\n    // lint: allow(no_reply, one-way; leader folds acks on its own loop)\n    ReplicationAck { member: u32, term: u64, ack_index: u64, success: bool },\n    // lint: allow(no_reply, one-way; votes return as VoteReply messages)\n    RequestVote { term: u64, candidate: u32, last_term: u64, last_index: u64 },\n    // lint: allow(no_reply, one-way; answer to RequestVote)\n    VoteReply { term: u64, from: u32, granted: bool },\n}\n",
+        );
+        t.add(
+            "rust/src/mongo/server/shard.rs",
+            "fn run(&mut self) { match req { ShardRequest::Replicate { term, entries, commit, reset } => {} ShardRequest::ReplicationAck { member, term, ack_index, success } => {} ShardRequest::RequestVote { term, candidate, last_term, last_index } => {} ShardRequest::VoteReply { term, from, granted } => {} } }",
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn unannotated_replication_message_is_flagged() {
+        // A one-way replication message without the allow(no_reply)
+        // annotation must be flagged: either it should carry a reply
+        // channel, or the author must state why it cannot.
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/wire.rs",
+            "pub enum ShardRequest {\n    ReplicationAck { member: u32, term: u64, ack_index: u64, success: bool },\n}\n",
+        );
+        t.add(
+            "rust/src/mongo/server/shard.rs",
+            "fn run(&mut self) { match req { ShardRequest::ReplicationAck { member, term, ack_index, success } => {} } }",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(
+            v[0].message.contains("ReplicationAck")
+                && v[0].message.contains("no `reply` channel"),
+            "{:?}",
+            v[0]
+        );
+    }
+
+    #[test]
+    fn undispatched_replication_message_is_flagged() {
+        // An annotated one-way message still needs a dispatch arm: a
+        // Replicate nobody serves means secondaries silently never
+        // tail the oplog.
+        let mut t = SourceTree::new();
+        t.add(
+            "rust/src/mongo/wire.rs",
+            "pub enum ShardRequest {\n    // lint: allow(no_reply, one-way; follower acks via ReplicationAck)\n    Replicate { term: u64, entries: Vec<Document>, commit: u64, reset: bool },\n    // lint: allow(no_reply, one-way; leader folds acks on its own loop)\n    ReplicationAck { member: u32, term: u64, ack_index: u64, success: bool },\n}\n",
+        );
+        t.add(
+            "rust/src/mongo/server/shard.rs",
+            "fn run(&mut self) { match req { ShardRequest::ReplicationAck { member, term, ack_index, success } => {} } }",
+        );
+        let v = check(&t);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(
+            v[0].message.contains("Replicate") && v[0].message.contains("no dispatch arm"),
+            "{:?}",
+            v[0]
+        );
+    }
 }

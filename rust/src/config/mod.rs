@@ -37,6 +37,65 @@ impl ShardKeyKind {
     }
 }
 
+/// Durability contract a write acknowledgement promises (replica sets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteConcern {
+    /// Acknowledge once the primary has durably applied (its own group
+    /// commit). Survives a primary restart, not a primary loss.
+    One,
+    /// Acknowledge once a majority of the replica set has durably
+    /// applied the entry — the write survives any minority loss,
+    /// including the primary itself (the failover guarantee the crash
+    /// harness proves). With `replicas = 1` this degenerates to `One`.
+    Majority,
+}
+
+impl WriteConcern {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "1" | "one" => Ok(Self::One),
+            "majority" => Ok(Self::Majority),
+            _ => bail!("unknown write concern `{s}` (1|majority)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::One => "1",
+            Self::Majority => "majority",
+        }
+    }
+}
+
+/// Which replica-set member the router targets for reads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadPreference {
+    /// Read from the primary (read-your-writes under `w:majority`).
+    Primary,
+    /// Prefer secondaries (read scaling); served from pinned MVCC
+    /// snapshots, falling back to the primary when no secondary is
+    /// reachable. A secondary may lag the primary by uncommitted tail
+    /// entries — reads are snapshot-consistent, not linearizable.
+    Secondary,
+}
+
+impl ReadPreference {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "primary" => Ok(Self::Primary),
+            "secondary" => Ok(Self::Secondary),
+            _ => bail!("unknown read preference `{s}` (primary|secondary)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Primary => "primary",
+            Self::Secondary => "secondary",
+        }
+    }
+}
+
 /// Cluster topology: how job nodes are assigned to roles (paper §3.2/§4).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Topology {
@@ -185,6 +244,27 @@ pub struct StoreConfig {
     /// Off = shards ship every matching document and the router folds
     /// centrally — the full-ship bench baseline.
     pub agg_partial: bool,
+    /// Replica-set size per logical shard. 1 = no replication (the
+    /// single-member seed behaviour: no oplog, no elections, no ticks).
+    /// >1 runs one primary plus `replicas - 1` oplog-tailing
+    /// secondaries per shard; requires the balancer off (the oplog does
+    /// not carry migration ops).
+    pub replicas: u32,
+    /// Write concern the routers attach to writes (`1` | `majority`).
+    pub write_concern: WriteConcern,
+    /// Read preference the routers use (`primary` | `secondary`).
+    pub read_preference: ReadPreference,
+    /// Router write-retry deadline, ms: how long a router keeps
+    /// retrying a write past `StaleVersion` / `MigrationInFlight` /
+    /// `NotPrimary` (with jittered exponential backoff) before giving
+    /// up.
+    pub write_retry_ms: u64,
+    /// Election timeout base, ms: a secondary that hears nothing from a
+    /// primary for a randomized interval in `[t, 2t)` stands for
+    /// election. Must comfortably exceed `heartbeat_ms`.
+    pub election_timeout_ms: u64,
+    /// Primary heartbeat interval, ms (empty `Replicate` keep-alives).
+    pub heartbeat_ms: u64,
 }
 
 impl Default for StoreConfig {
@@ -207,6 +287,12 @@ impl Default for StoreConfig {
             reader_threads: 0,
             snapshot_retention: 0,
             agg_partial: true,
+            replicas: 1,
+            write_concern: WriteConcern::Majority,
+            read_preference: ReadPreference::Primary,
+            write_retry_ms: 2_000,
+            election_timeout_ms: 150,
+            heartbeat_ms: 50,
         }
     }
 }
@@ -230,7 +316,13 @@ impl StoreConfig {
             .set("balancer_bytes", self.balancer_bytes)
             .set("reader_threads", self.reader_threads)
             .set("snapshot_retention", self.snapshot_retention)
-            .set("agg_partial", self.agg_partial);
+            .set("agg_partial", self.agg_partial)
+            .set("replicas", self.replicas)
+            .set("write_concern", self.write_concern.name())
+            .set("read_preference", self.read_preference.name())
+            .set("write_retry_ms", self.write_retry_ms)
+            .set("election_timeout_ms", self.election_timeout_ms)
+            .set("heartbeat_ms", self.heartbeat_ms);
         v
     }
 
@@ -299,6 +391,30 @@ impl StoreConfig {
                 .get("agg_partial")
                 .and_then(Value::as_bool)
                 .unwrap_or(d.agg_partial),
+            replicas: v
+                .get("replicas")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.replicas as u64) as u32,
+            write_concern: match v.get("write_concern").and_then(Value::as_str) {
+                Some(s) => WriteConcern::parse(s)?,
+                None => d.write_concern,
+            },
+            read_preference: match v.get("read_preference").and_then(Value::as_str) {
+                Some(s) => ReadPreference::parse(s)?,
+                None => d.read_preference,
+            },
+            write_retry_ms: v
+                .get("write_retry_ms")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.write_retry_ms),
+            election_timeout_ms: v
+                .get("election_timeout_ms")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.election_timeout_ms),
+            heartbeat_ms: v
+                .get("heartbeat_ms")
+                .and_then(Value::as_u64)
+                .unwrap_or(d.heartbeat_ms),
         })
     }
 }
@@ -583,6 +699,12 @@ mod tests {
         assert_eq!(c2.store.reader_threads, c.store.reader_threads);
         assert_eq!(c2.store.snapshot_retention, c.store.snapshot_retention);
         assert_eq!(c2.store.agg_partial, c.store.agg_partial);
+        assert_eq!(c2.store.replicas, c.store.replicas);
+        assert_eq!(c2.store.write_concern, c.store.write_concern);
+        assert_eq!(c2.store.read_preference, c.store.read_preference);
+        assert_eq!(c2.store.write_retry_ms, c.store.write_retry_ms);
+        assert_eq!(c2.store.election_timeout_ms, c.store.election_timeout_ms);
+        assert_eq!(c2.store.heartbeat_ms, c.store.heartbeat_ms);
         assert_eq!(c2.workload.monitored_nodes, c.workload.monitored_nodes);
         assert_eq!(c2.lustre.osts, c.lustre.osts);
     }
@@ -592,6 +714,17 @@ mod tests {
         assert_eq!(ShardKeyKind::parse("hashed").unwrap(), ShardKeyKind::Hashed);
         assert_eq!(ShardKeyKind::parse("ranged").unwrap(), ShardKeyKind::Ranged);
         assert!(ShardKeyKind::parse("zoned").is_err());
+    }
+
+    #[test]
+    fn write_concern_and_read_preference_parse() {
+        assert_eq!(WriteConcern::parse("1").unwrap(), WriteConcern::One);
+        assert_eq!(WriteConcern::parse("one").unwrap(), WriteConcern::One);
+        assert_eq!(WriteConcern::parse("majority").unwrap(), WriteConcern::Majority);
+        assert!(WriteConcern::parse("all").is_err());
+        assert_eq!(ReadPreference::parse("primary").unwrap(), ReadPreference::Primary);
+        assert_eq!(ReadPreference::parse("secondary").unwrap(), ReadPreference::Secondary);
+        assert!(ReadPreference::parse("nearest").is_err());
     }
 
     #[test]

@@ -12,7 +12,10 @@
 use anyhow::Result;
 
 use hpcstore::cli::{Args, Cli, CommandSpec, FlagSpec};
-use hpcstore::config::{LustreConfig, ShardKeyKind, StoreConfig, Topology, WorkloadConfig, TABLE1};
+use hpcstore::config::{
+    LustreConfig, ReadPreference, ShardKeyKind, StoreConfig, Topology, WorkloadConfig,
+    WriteConcern, TABLE1,
+};
 use hpcstore::hpc::lustre::Lustre;
 use hpcstore::hpc::runscript::RunScript;
 use hpcstore::hpc::scheduler::{Job, Scheduler};
@@ -108,6 +111,36 @@ fn cli() -> Cli {
                         "agg-partial",
                         Some("BOOL"),
                         "aggregation push-down: shards ship per-group partial accumulators (default true; false = ship matching docs, full-ship baseline)",
+                    ),
+                    f(
+                        "replicas",
+                        Some("N"),
+                        "members per replica set: 1 primary + N-1 oplog-tailing secondaries (default 1 = unreplicated; >1 disables the balancer)",
+                    ),
+                    f(
+                        "write-concern",
+                        Some("W"),
+                        "write acknowledgement level: 1 (primary durable) | majority (majority durable, survives failover; default)",
+                    ),
+                    f(
+                        "read-preference",
+                        Some("PREF"),
+                        "member reads target: primary (default) | secondary (snapshot reads, may lag)",
+                    ),
+                    f(
+                        "write-retry-ms",
+                        Some("MS"),
+                        "router write-retry deadline past StaleVersion/MigrationInFlight/NotPrimary rejects (default 2000)",
+                    ),
+                    f(
+                        "election-timeout-ms",
+                        Some("MS"),
+                        "election timeout base: a quiet secondary stands for election after [t, 2t) ms (default 150)",
+                    ),
+                    f(
+                        "heartbeat-ms",
+                        Some("MS"),
+                        "primary heartbeat/replication interval (default 50)",
                     ),
                     f("artifacts", Some("DIR"), "AOT artifact dir (default artifacts)"),
                     f("fallback", None, "use the scalar kernel fallback"),
@@ -221,6 +254,17 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             "false" | "off" | "0" => false,
             other => anyhow::bail!("--agg-partial expects true|false, got `{other}`"),
         },
+        replicas: args.get_u64_or("replicas", store_defaults.replicas as u64)? as u32,
+        write_concern: WriteConcern::parse(
+            &args.get_or("write-concern", store_defaults.write_concern.name()),
+        )?,
+        read_preference: ReadPreference::parse(
+            &args.get_or("read-preference", store_defaults.read_preference.name()),
+        )?,
+        write_retry_ms: args.get_u64_or("write-retry-ms", store_defaults.write_retry_ms)?,
+        election_timeout_ms: args
+            .get_u64_or("election-timeout-ms", store_defaults.election_timeout_ms)?,
+        heartbeat_ms: args.get_u64_or("heartbeat-ms", store_defaults.heartbeat_ms)?,
     };
     let script = RunScript::new(topo.clone(), store, lustre.clone(), kernels);
 

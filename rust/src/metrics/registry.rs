@@ -105,6 +105,24 @@ pub mod names {
     /// Live documents a read skipped because the shard's fence marked
     /// them orphans of a published handoff (donor-side filtering).
     pub const SHARD_ORPHANS_FILTERED: &str = "shard.orphans_filtered";
+    // -- shard server: replica set / oplog replication -------------------
+    /// Oplog entries this member appended as primary (data + `__oplog`
+    /// journaled as one atomic frame).
+    pub const SHARD_OPLOG_APPENDS: &str = "shard.oplog_appends";
+    /// Oplog entries this member applied as a secondary (tailed from
+    /// the primary's `Replicate` batches).
+    pub const SHARD_OPLOG_APPLIED: &str = "shard.oplog_applied";
+    /// Elections this member started (became candidate after an
+    /// election timeout).
+    pub const SHARD_ELECTIONS: &str = "shard.elections";
+    /// Current replication term (persisted hard state), as a gauge.
+    pub const SHARD_TERM: &str = "shard.term";
+    /// `Replicate` messages this member sent as primary (heartbeats and
+    /// entry batches share the message).
+    pub const SHARD_HEARTBEATS: &str = "shard.heartbeats";
+    /// Full-log resyncs this member performed after its log diverged
+    /// from the leader's (invariant IR4).
+    pub const SHARD_RESYNCS: &str = "shard.resyncs";
     // -- router ---------------------------------------------------------
     pub const ROUTER_INSERT_MANY_NS: &str = "router.insert_many_ns";
     pub const ROUTER_FIND_NS: &str = "router.find_ns";
@@ -144,6 +162,12 @@ pub mod names {
     /// Aggregate scatters repeated because per-shard replies carried
     /// different chunk-map versions (version-uniform retry).
     pub const ROUTER_AGG_RETRIES: &str = "router.agg_retries";
+    /// Writes re-targeted after a `NotPrimary` rejection (the router
+    /// updates its primary hint and retries with jittered backoff).
+    pub const ROUTER_NOT_PRIMARY_RETRIES: &str = "router.not_primary_retries";
+    /// Requests that found every member channel of a shard dead and
+    /// surfaced `ShardUnavailable` (or degraded per read preference).
+    pub const ROUTER_SHARD_UNAVAILABLE: &str = "router.shard_unavailable";
     // -- config server --------------------------------------------------
     pub const CONFIG_GET_MAP: &str = "config.get_map";
     pub const CONFIG_REPORT_SPLIT: &str = "config.report_split";
@@ -209,6 +233,12 @@ pub mod names {
         (SHARD_MIGRATION_DOCS_PUBLISHED, "counter"),
         (SHARD_MIGRATION_ABORTS, "counter"),
         (SHARD_ORPHANS_FILTERED, "counter"),
+        (SHARD_OPLOG_APPENDS, "counter"),
+        (SHARD_OPLOG_APPLIED, "counter"),
+        (SHARD_ELECTIONS, "counter"),
+        (SHARD_TERM, "gauge"),
+        (SHARD_HEARTBEATS, "counter"),
+        (SHARD_RESYNCS, "counter"),
         (ROUTER_INSERT_MANY_NS, "histogram"),
         (ROUTER_FIND_NS, "histogram"),
         (ROUTER_UPDATE_NS, "histogram"),
@@ -227,6 +257,8 @@ pub mod names {
         (ROUTER_AGG_DOCS_SHIPPED, "counter"),
         (ROUTER_AGG_REPLY_BYTES, "counter"),
         (ROUTER_AGG_RETRIES, "counter"),
+        (ROUTER_NOT_PRIMARY_RETRIES, "counter"),
+        (ROUTER_SHARD_UNAVAILABLE, "counter"),
         (CONFIG_GET_MAP, "counter"),
         (CONFIG_REPORT_SPLIT, "counter"),
         (CONFIG_SPLITS, "counter"),

@@ -216,10 +216,20 @@ impl Drop for BulkWriter {
 /// Iterates result documents, pulling `getMore` batches on demand.
 ///
 /// A `getMore` failure ends the iteration; [`ClientCursor::error`]
-/// distinguishes a clean exhaustion (`None`) from a mid-drain error —
-/// notably [`WireError::SnapshotExpired`], where the cursor's pinned
-/// snapshot fell behind the retention window and the caller should
-/// reissue the `find`.
+/// distinguishes a clean exhaustion (`None`) from a mid-drain error:
+///
+/// * [`WireError::SnapshotExpired`] — the cursor's pinned snapshot
+///   fell behind the retention window; reissue the `find`.
+/// * [`WireError::NotPrimary`] — the member serving the cursor was
+///   deposed mid-drain; reissue the `find` (it will route freshly).
+/// * [`WireError::ShardUnavailable`] — the member serving the cursor
+///   died; its cursor state died with it. Reissue the `find`.
+///
+/// All three are *retryable for a read* ([`ClientCursor::retryable`]):
+/// re-running the `find` from scratch re-reads a consistent snapshot
+/// and cannot double-apply anything. Callers that treat iterator end
+/// as "all results seen" must check [`ClientCursor::error`] first —
+/// a dead shard mid-drain is **not** exhaustion.
 pub struct ClientCursor {
     router: RouterMailbox,
     buffered: VecDeque<Document>,
@@ -232,6 +242,18 @@ impl ClientCursor {
     /// complete drain.
     pub fn error(&self) -> Option<&WireError> {
         self.err.as_ref()
+    }
+
+    /// True when iteration ended on an error a fresh `find` cleanly
+    /// recovers from. Wider than [`WireError::retryable`]: a dead
+    /// shard ([`WireError::ShardUnavailable`]) is ambiguous for a
+    /// *write*, but a re-read is always safe.
+    pub fn retryable(&self) -> bool {
+        match &self.err {
+            Some(WireError::ShardUnavailable { .. }) => true,
+            Some(e) => e.retryable(),
+            None => false,
+        }
     }
 }
 

@@ -14,12 +14,13 @@ use crate::config::StoreConfig;
 use crate::metrics::{names, Registry};
 use crate::mongo::client::MongoClient;
 use crate::mongo::server::config::ConfigServer;
+use crate::mongo::server::replica::ReplicaConfig;
 use crate::mongo::server::router::{Router, RouterMailbox, RouterRequest};
 use crate::mongo::server::shard::ShardServer;
 use crate::mongo::sharding::balancer::{plan_moves_with_loads, BalancerPolicy, ShardLoad};
 use crate::mongo::sharding::chunk::ShardKey;
 use crate::mongo::sharding::migration;
-use crate::mongo::storage::{CheckpointStats, EngineOptions, StorageDir};
+use crate::mongo::storage::{CheckpointStats, EngineOptions, LocalDir, StorageDir};
 use crate::mongo::wire::{rpc, ConfigRequest, ConfigStatsReply, ShardRequest, ShardStatsReply};
 use crate::runtime::Kernels;
 use crate::util::ids::{RouterId, ShardId};
@@ -72,7 +73,12 @@ pub struct ClusterStats {
 pub struct Cluster {
     spec: ClusterSpec,
     config: mpsc::Sender<ConfigRequest>,
+    /// Member-0 mailbox per logical shard — the admin/balancer plane
+    /// (stats, checkpoints, migrations) speaks to the bootstrap member.
     shards: Vec<mpsc::Sender<ShardRequest>>,
+    /// All replica-set member mailboxes, `members[shard][member]`
+    /// (a single column per shard when `--replicas 1`).
+    members: Vec<Vec<mpsc::Sender<ShardRequest>>>,
     routers: Vec<RouterMailbox>,
     joins: Vec<std::thread::JoinHandle<()>>,
     metrics: Registry,
@@ -81,25 +87,70 @@ pub struct Cluster {
 
 impl Cluster {
     /// Start all roles. `dir_for` supplies each shard's storage
-    /// directory (Lustre-assigned in the full stack, temp dirs in tests).
+    /// directory (Lustre-assigned in the full stack, temp dirs in
+    /// tests); with `--replicas > 1` the extra members get scratch
+    /// directories — tests that exercise member restart/rejoin use
+    /// [`Cluster::start_with_members`] to place every member.
     pub fn start(
         spec: ClusterSpec,
         dir_for: impl Fn(ShardId) -> Result<Box<dyn StorageDir>>,
         kernels: Kernels,
         metrics: Registry,
     ) -> Result<Cluster> {
+        Self::start_with_members(
+            spec,
+            |sid, member| {
+                if member == 0 {
+                    dir_for(sid)
+                } else {
+                    Ok(Box::new(LocalDir::temp(&format!("{sid}-m{member}"))?))
+                }
+            },
+            kernels,
+            metrics,
+        )
+    }
+
+    /// Start all roles with per-member storage placement: each replica
+    /// of each shard is a full [`ShardServer`] on its own directory
+    /// (one mongod per directory, as in the paper's deployment).
+    pub fn start_with_members(
+        mut spec: ClusterSpec,
+        dir_for: impl Fn(ShardId, u32) -> Result<Box<dyn StorageDir>>,
+        kernels: Kernels,
+        metrics: Registry,
+    ) -> Result<Cluster> {
         anyhow::ensure!(spec.shards > 0 && spec.routers > 0, "degenerate topology");
+        let replicas = spec.store.replicas.max(1);
+        if replicas > 1 && spec.store.balancer {
+            // Chunk migration streams records between shards outside
+            // the oplog, so it cannot coexist with replication yet:
+            // secondaries would never see migrated data. Replicated
+            // clusters run with static chunk placement.
+            eprintln!(
+                "warn: balancer disabled: chunk migration bypasses the oplog (replicas > 1)"
+            );
+            spec.store.balancer = false;
+        }
 
         // Pre-create every mailbox so roles can reference each other
         // before any thread runs.
         let (config_tx, config_rx) = mpsc::channel();
-        let mut shard_txs = Vec::new();
-        let mut shard_rxs = Vec::new();
+        let mut members: Vec<Vec<mpsc::Sender<ShardRequest>>> = Vec::new();
+        let mut member_rxs: Vec<Vec<mpsc::Receiver<ShardRequest>>> = Vec::new();
         for _ in 0..spec.shards {
-            let (tx, rx) = mpsc::channel();
-            shard_txs.push(tx);
-            shard_rxs.push(rx);
+            let mut txs = Vec::new();
+            let mut rxs = Vec::new();
+            for _ in 0..replicas {
+                let (tx, rx) = mpsc::channel();
+                txs.push(tx);
+                rxs.push(rx);
+            }
+            members.push(txs);
+            member_rxs.push(rxs);
         }
+        let shard_txs: Vec<mpsc::Sender<ShardRequest>> =
+            members.iter().map(|m| m[0].clone()).collect();
 
         let mut config_server = ConfigServer::new(
             spec.key(),
@@ -109,7 +160,10 @@ impl Cluster {
             metrics.clone(),
         );
         let initial_map = config_server.initial_map();
-        config_server.set_shards(shard_txs.clone());
+        // Every member of every set tracks the chunk map: SetMap is
+        // broadcast to all of them, so a promoted secondary serves with
+        // a current map, not a bootstrap-era one.
+        config_server.set_shards(members.iter().flatten().cloned().collect());
 
         let mut joins = Vec::new();
         joins.push(config_server.spawn_with(config_rx));
@@ -122,21 +176,32 @@ impl Cluster {
             full_checkpoint_chain: spec.store.full_checkpoint_chain,
             snapshot_retention: spec.store.snapshot_retention,
         };
-        for (i, rx) in shard_rxs.into_iter().enumerate() {
-            let id = ShardId(i as u32);
-            let server = ShardServer::new(
-                id,
-                dir_for(id).with_context(|| format!("storage dir for {id}"))?,
-                initial_map.clone(),
-                config_tx.clone(),
-                kernels.clone(),
-                metrics.clone(),
-                engine_opts.clone(),
-                spec.store.max_chunk_docs,
-                spec.store.cursor_batch,
-                spec.store.reader_threads,
-            )?;
-            joins.push(server.spawn_with(rx));
+        for (s, rxs) in member_rxs.into_iter().enumerate() {
+            let id = ShardId(s as u32);
+            for (m, rx) in rxs.into_iter().enumerate() {
+                let replica = (replicas > 1).then(|| ReplicaConfig {
+                    member: m as u32,
+                    peers: members[s].clone(),
+                    election_timeout_ms: spec.store.election_timeout_ms,
+                    heartbeat_ms: spec.store.heartbeat_ms,
+                    bootstrap_primary: m == 0,
+                });
+                let server = ShardServer::new(
+                    id,
+                    dir_for(id, m as u32)
+                        .with_context(|| format!("storage dir for {id} member {m}"))?,
+                    initial_map.clone(),
+                    config_tx.clone(),
+                    kernels.clone(),
+                    metrics.clone(),
+                    engine_opts.clone(),
+                    spec.store.max_chunk_docs,
+                    spec.store.cursor_batch,
+                    spec.store.reader_threads,
+                    replica,
+                )?;
+                joins.push(server.spawn_with(rx));
+            }
         }
 
         let mut routers = Vec::new();
@@ -144,7 +209,7 @@ impl Cluster {
             let router = Router::new(
                 RouterId(i),
                 initial_map.clone(),
-                shard_txs.clone(),
+                members.clone(),
                 config_tx.clone(),
                 kernels.clone(),
                 metrics.clone(),
@@ -152,6 +217,9 @@ impl Cluster {
                 spec.store.router_flush_docs,
                 std::time::Duration::from_millis(spec.store.flush_interval_ms),
                 spec.store.agg_partial,
+                spec.store.write_concern,
+                spec.store.read_preference,
+                spec.store.write_retry_ms,
             );
             let (tx, join) = router.spawn();
             routers.push(tx);
@@ -172,6 +240,7 @@ impl Cluster {
             spec,
             config: config_tx,
             shards: shard_txs,
+            members,
             routers,
             joins,
             metrics,
@@ -197,9 +266,26 @@ impl Cluster {
 
     /// Shard mailboxes — the crash-matrix kill-window tests drive the
     /// migration wire protocol against them directly to freeze the
-    /// cluster in precise mid-protocol states.
+    /// cluster in precise mid-protocol states. With replicas these are
+    /// the member-0 (bootstrap-primary) mailboxes.
     pub fn shard_mailboxes(&self) -> &[mpsc::Sender<ShardRequest>] {
         &self.shards
+    }
+
+    /// Mailboxes of one shard's replica-set members.
+    pub fn member_mailboxes(&self, shard: usize) -> &[mpsc::Sender<ShardRequest>] {
+        &self.members[shard]
+    }
+
+    /// Kill one replica-set member (failover drills): its event loop
+    /// exits without checkpointing or handing anything off — peers and
+    /// routers just see a dead mailbox, exactly like a crashed mongod.
+    /// Durable state stays on its directory; member *restart* (rejoin
+    /// with persisted term, catch-up by oplog tailing) is exercised at
+    /// the `ShardServer` level by the crash harness, which controls the
+    /// replacement mailbox wiring.
+    pub fn kill_member(&self, shard: usize, member: usize) {
+        let _ = self.members[shard][member].send(ShardRequest::Shutdown);
     }
 
     /// One balancer round: plan against the current chunk table *and*
@@ -309,13 +395,14 @@ impl Cluster {
         }
     }
 
-    /// Graceful shutdown: stop routers, then shards, then config.
+    /// Graceful shutdown: stop routers, then every shard member, then
+    /// config.
     pub fn shutdown(mut self) {
         for r in &self.routers {
             let _ = r.send(RouterRequest::Shutdown);
         }
-        for s in &self.shards {
-            let _ = s.send(ShardRequest::Shutdown);
+        for m in self.members.iter().flatten() {
+            let _ = m.send(ShardRequest::Shutdown);
         }
         let _ = self.config.send(ConfigRequest::Shutdown);
         for j in self.joins.drain(..) {

@@ -4,10 +4,12 @@
 
 pub mod config;
 pub mod read;
+pub mod replica;
 pub mod router;
 pub mod shard;
 
 pub use config::ConfigServer;
 pub use read::{ReadContext, ReadRequest, ReaderPool};
+pub use replica::{ReplicaConfig, Role};
 pub use router::{InsertManyReply, Router, RouterMailbox, RouterRequest, RouterStatsReply};
 pub use shard::ShardServer;

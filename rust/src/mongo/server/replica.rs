@@ -1,0 +1,1159 @@
+//! Replica-set role engine: oplog replication and Raft-inspired
+//! elections for one shard member (docs/ARCHITECTURE.md §10).
+//!
+//! Each logical shard can run as a **replica set** of `--replicas`
+//! members. Every member is a full [`ShardServer`] with its own engine
+//! directory; this module adds the replication state machine on top:
+//!
+//! * **Oplog** — an ordinary engine collection ([`OPLOG`]) whose
+//!   entries are ordered by `(term, index)`. A primary journals each
+//!   client write *and* its oplog entry as one [`AtomicOp`] frame
+//!   (`OP_MULTI`), so the entry and the op it describes are atomic
+//!   under crash recovery: replay restores both or neither.
+//! * **Role engine** — primary / secondary / candidate with terms,
+//!   randomized election timeouts, and majority quorum. Hard state
+//!   (`term`, `voted_for`) persists in [`RAFT_STATE`] through the same
+//!   journal, and is synced before any vote or candidacy leaves this
+//!   member — a restart rejoins with its term intact.
+//! * **Log tailing** — secondaries apply `Replicate` batches through
+//!   the engine's atomic-frame path at their own MVCC epochs; "entry
+//!   present in the log" and "applied to the data collection" are the
+//!   same fact by construction. Retransmission from the leader's
+//!   `next[]` cursor doubles as catch-up tailing for a rejoined member.
+//!
+//! Invariants (asserted by the failover kill-window suite):
+//!
+//! * **IR1** — at most one primary per term: a vote is granted at most
+//!   once per term and a candidate needs a majority.
+//! * **IR2** — an elected primary holds every committed entry: votes
+//!   are refused to candidates whose `(last_term, last_index)` lags the
+//!   voter's (the Raft election restriction).
+//! * **IR3** — an entry commits only when a majority has durably
+//!   applied it in the leader's current term; committed entries are
+//!   never undone, and `w:majority` replies release only at commit.
+//! * **IR4** — a rejoining member whose log diverged (uncommitted
+//!   suffix from a deposed primary) discards it via a full resync
+//!   (`reset` replication) — no divergent write is ever double-applied.
+//!
+//! All replication traffic is **one-way mailbox messages** between
+//! event loops (`Replicate`/`ReplicationAck`, `RequestVote`/
+//! `VoteReply`); a blocking reply channel would deadlock two members
+//! messaging each other, so acks are folded in on each member's own
+//! loop turn.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::metrics::names;
+use crate::mongo::bson::{Document, Value};
+use crate::mongo::storage::{AtomicOp, RecordId};
+use crate::mongo::wire::{
+    DeleteReply, InsertReply, Reply, RoleReply, ShardRequest, UpdateReply, WireError,
+};
+
+use super::shard::{ShardServer, COLLECTION};
+
+/// The oplog collection: one document per replicated op, ordered by
+/// `(term, index)`. Journaled atomically with the data op it describes.
+pub const OPLOG: &str = "__oplog";
+
+/// Durable Raft hard state: a single document `{term, voted_for}`,
+/// updated (journal + sync) before any vote or candidacy acts.
+pub const RAFT_STATE: &str = "__raft";
+
+/// Cap on entries per `Replicate` batch (resyncs ship the full log).
+const MAX_REPLICATE_BATCH: usize = 512;
+
+/// A member's role in its replica set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Primary,
+    Secondary,
+    Candidate,
+}
+
+/// Wiring for one replica-set member, passed to `ShardServer::new`.
+pub struct ReplicaConfig {
+    /// This member's index within the set (0-based).
+    pub member: u32,
+    /// Mailboxes of **every** member of this shard's set, self
+    /// included at `peers[member]` (sends skip the self slot).
+    pub peers: Vec<mpsc::Sender<ShardRequest>>,
+    /// Base election timeout; actual deadlines are jittered to
+    /// `[T, 2T)` so concurrent candidacies rarely collide.
+    pub election_timeout_ms: u64,
+    /// Primary heartbeat / replication fan-out interval.
+    pub heartbeat_ms: u64,
+    /// Seed this member as the term-1 primary — only honoured on a
+    /// **fresh** member (no persisted term, empty oplog); a restarted
+    /// member always rejoins as a secondary with its persisted term.
+    pub bootstrap_primary: bool,
+}
+
+/// A client reply parked until its oplog entry commits (`w:majority`).
+pub(super) enum PendingReply {
+    Insert {
+        reply: Reply<Result<InsertReply, WireError>>,
+        value: InsertReply,
+    },
+    Update {
+        reply: Reply<Result<UpdateReply, WireError>>,
+        value: UpdateReply,
+    },
+    Delete {
+        reply: Reply<Result<DeleteReply, WireError>>,
+        value: DeleteReply,
+    },
+}
+
+impl PendingReply {
+    fn send_ok(self) {
+        match self {
+            PendingReply::Insert { reply, value } => {
+                let _ = reply.send(Ok(value));
+            }
+            PendingReply::Update { reply, value } => {
+                let _ = reply.send(Ok(value));
+            }
+            PendingReply::Delete { reply, value } => {
+                let _ = reply.send(Ok(value));
+            }
+        }
+    }
+
+    pub(super) fn send_err(self, e: WireError) {
+        match self {
+            PendingReply::Insert { reply, .. } => {
+                let _ = reply.send(Err(e));
+            }
+            PendingReply::Update { reply, .. } => {
+                let _ = reply.send(Err(e));
+            }
+            PendingReply::Delete { reply, .. } => {
+                let _ = reply.send(Err(e));
+            }
+        }
+    }
+}
+
+/// Per-member replication state (`None` on an unreplicated shard —
+/// every hook below is a no-op then, preserving single-member
+/// behaviour exactly).
+pub(super) struct ReplicaState {
+    pub(super) member: u32,
+    pub(super) peers: Vec<mpsc::Sender<ShardRequest>>,
+    pub(super) role: Role,
+    /// Current term (hard state, persisted in [`RAFT_STATE`]).
+    pub(super) term: u64,
+    /// Who this member voted for in `term` (hard state).
+    pub(super) voted_for: Option<u32>,
+    /// Last known leader (the `NotPrimary` redirect hint).
+    pub(super) leader: Option<u32>,
+    /// In-memory oplog cache, `log[i]` = entry with index `i + 1`;
+    /// rebuilt from the durable [`OPLOG`] collection at startup.
+    pub(super) log: Vec<Document>,
+    /// Highest committed index (majority-replicated in current term).
+    pub(super) commit: u64,
+    /// Leader state: next index to send each member.
+    pub(super) next: Vec<u64>,
+    /// Leader state: highest index each member has durably acked.
+    pub(super) match_idx: Vec<u64>,
+    /// Candidate state: bitmask of members whose vote we hold.
+    pub(super) votes_from: u64,
+    /// `w:majority` replies parked until their `(term, index)` commits.
+    pub(super) pending: Vec<(u64, u64, PendingReply)>,
+    election_timeout: Duration,
+    heartbeat: Duration,
+    pub(super) election_deadline: Instant,
+    pub(super) heartbeat_deadline: Instant,
+    /// xorshift64 state for election-timeout jitter.
+    rng: u64,
+    /// Record id of the [`RAFT_STATE`] document (updates re-id it).
+    raft_rid: Option<RecordId>,
+}
+
+impl ReplicaState {
+    /// Term of the log entry at 1-based `index` (0 for the empty
+    /// prefix or out-of-range probes).
+    pub(super) fn term_at(&self, index: u64) -> u64 {
+        if index == 0 || index > self.log.len() as u64 {
+            return 0;
+        }
+        self.log[(index - 1) as usize]
+            .get_i64("term")
+            .unwrap_or(0)
+            .max(0) as u64
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x
+    }
+
+    /// Re-arm the election timer to `now + [T, 2T)`.
+    pub(super) fn reset_election_deadline(&mut self) {
+        let base = (self.election_timeout.as_millis() as u64).max(1);
+        let jitter = self.next_rand() % base;
+        self.election_deadline = Instant::now() + Duration::from_millis(base + jitter);
+    }
+}
+
+/// Per-process random seed for the jitter stream, distinct per member.
+fn seed(member: u32) -> u64 {
+    use std::collections::hash_map::RandomState;
+    use std::hash::{BuildHasher, Hasher};
+    let mut h = RandomState::new().build_hasher();
+    h.write_u32(member);
+    h.finish() | 1
+}
+
+fn server_err(e: anyhow::Error) -> WireError {
+    WireError::Server(e.to_string())
+}
+
+/// The `docs`-style array field of an oplog entry, decoded to owned
+/// documents (non-document elements are ignored — entries are built
+/// by [`docs_value`], so they never occur).
+fn doc_array(entry: &Document, field: &str) -> Vec<Document> {
+    match entry.get(field) {
+        Some(Value::Array(items)) => items
+            .iter()
+            .filter_map(|v| match v {
+                Value::Doc(d) => Some(d.clone()),
+                _ => None,
+            })
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Wrap a document batch as an oplog-entry array field.
+pub(super) fn docs_value(docs: &[Document]) -> Value {
+    Value::Array(docs.iter().cloned().map(Value::Doc).collect())
+}
+
+impl ShardServer {
+    /// Initialise replication state from the engine's recovered
+    /// contents: the [`RAFT_STATE`] hard state, the [`OPLOG`] cache,
+    /// and (on a **fresh** bootstrap member only) the term-1 primary
+    /// seed. Called once from `ShardServer::new`.
+    pub(super) fn replica_init(&mut self, cfg: ReplicaConfig) {
+        self.engine.create_collection(OPLOG);
+        self.engine.create_collection(RAFT_STATE);
+        let mut term = 0u64;
+        let mut voted_for = None;
+        let mut raft_rid = None;
+        for (rid, d) in self.engine.scan(RAFT_STATE) {
+            term = d.get_i64("term").unwrap_or(0).max(0) as u64;
+            voted_for = match d.get_i64("voted_for") {
+                Some(v) if v >= 0 => Some(v as u32),
+                _ => None,
+            };
+            raft_rid = Some(rid);
+        }
+        let mut log: Vec<Document> = self.engine.scan(OPLOG).map(|(_, d)| d).collect();
+        log.sort_by_key(|e| e.get_i64("index").unwrap_or(0));
+        let fresh = term == 0 && voted_for.is_none() && log.is_empty();
+        let n = cfg.peers.len();
+        let mut r = ReplicaState {
+            member: cfg.member,
+            peers: cfg.peers,
+            role: Role::Secondary,
+            term,
+            voted_for,
+            leader: None,
+            log,
+            commit: 0,
+            next: vec![1; n],
+            match_idx: vec![0; n],
+            votes_from: 0,
+            pending: Vec::new(),
+            election_timeout: Duration::from_millis(cfg.election_timeout_ms.max(1)),
+            heartbeat: Duration::from_millis(cfg.heartbeat_ms.max(1)),
+            election_deadline: Instant::now(),
+            heartbeat_deadline: Instant::now(),
+            rng: seed(cfg.member),
+            raft_rid,
+        };
+        r.reset_election_deadline();
+        self.metrics.gauge(names::SHARD_TERM).set(term as i64);
+        self.replica = Some(r);
+        if cfg.bootstrap_primary && fresh {
+            // Fresh cluster: seed member 0 as the term-1 primary so the
+            // set accepts writes without waiting out an election. A
+            // restarted member never takes this path — it rejoins as a
+            // secondary under its persisted term and catches up by
+            // oplog tailing (or wins a real election).
+            if let Some(r) = self.replica.as_mut() {
+                r.term = 1;
+                r.voted_for = Some(r.member);
+            }
+            if let Err(e) = self.persist_hard_state() {
+                eprintln!("warn: {}: bootstrap hard-state persist failed: {e}", self.id);
+            }
+            self.become_primary();
+        }
+    }
+
+    /// How long the event loop may block before a replication timer
+    /// (heartbeat or election) needs service.
+    pub(super) fn replica_poll(&self) -> Duration {
+        match &self.replica {
+            Some(r) => {
+                let deadline = match r.role {
+                    Role::Primary => r.heartbeat_deadline,
+                    _ => r.election_deadline,
+                };
+                deadline
+                    .saturating_duration_since(Instant::now())
+                    .max(Duration::from_millis(1))
+            }
+            None => Duration::from_secs(3600),
+        }
+    }
+
+    /// Service expired replication timers: a primary fans out its log
+    /// (heartbeat + retransmission + catch-up in one message), a
+    /// non-primary whose election timer expired starts a candidacy.
+    pub(super) fn replica_tick(&mut self) {
+        let now = Instant::now();
+        let (is_primary, hb_due, el_due) = match &self.replica {
+            Some(r) => (
+                r.role == Role::Primary,
+                now >= r.heartbeat_deadline,
+                now >= r.election_deadline,
+            ),
+            None => return,
+        };
+        if is_primary {
+            if hb_due {
+                self.replicate_all();
+                if let Some(r) = self.replica.as_mut() {
+                    r.heartbeat_deadline = now + r.heartbeat;
+                }
+            }
+        } else if el_due {
+            self.start_election();
+        }
+    }
+
+    /// The `NotPrimary` rejection this member hands a misdirected
+    /// write, carrying its best leader hint.
+    pub(super) fn not_primary(&self) -> WireError {
+        match &self.replica {
+            Some(r) => WireError::NotPrimary { leader: r.leader, term: r.term },
+            None => WireError::NotPrimary { leader: None, term: 0 },
+        }
+    }
+
+    /// True when this member must reject client writes (`replica` set
+    /// and not primary).
+    pub(super) fn rejects_writes(&self) -> bool {
+        matches!(&self.replica, Some(r) if r.role != Role::Primary)
+    }
+
+    pub(super) fn role_reply(&self) -> RoleReply {
+        match &self.replica {
+            Some(r) => {
+                let last_index = r.log.len() as u64;
+                RoleReply {
+                    role: match r.role {
+                        Role::Primary => "primary",
+                        Role::Secondary => "secondary",
+                        Role::Candidate => "candidate",
+                    },
+                    term: r.term,
+                    last: (r.term_at(last_index), last_index),
+                    commit: r.commit,
+                    leader: r.leader,
+                }
+            }
+            // An unreplicated shard is its own primary in every sense
+            // that matters to a router.
+            None => RoleReply {
+                role: "primary",
+                term: 0,
+                last: (0, 0),
+                commit: 0,
+                leader: None,
+            },
+        }
+    }
+
+    /// Park a `w:majority` reply until its `(term, index)` entry
+    /// commits ([`Self::drain_pending`] resolves its fate).
+    pub(super) fn park_reply(&mut self, slot: (u64, u64), reply: PendingReply) {
+        match self.replica.as_mut() {
+            Some(r) => r.pending.push((slot.0, slot.1, reply)),
+            // Unreachable by construction (writes only park when the
+            // append returned a slot, which requires a replica), but a
+            // stranded client reply would be worse than a late error.
+            None => reply.send_err(WireError::Server(
+                "write concern majority requires a replica set".into(),
+            )),
+        }
+    }
+
+    fn peer_send(&self, member: u32, msg: ShardRequest) {
+        if let Some(r) = &self.replica {
+            if let Some(tx) = r.peers.get(member as usize) {
+                let _ = tx.send(msg);
+            }
+        }
+    }
+
+    /// Durably persist `{term, voted_for}` — journal frame **and
+    /// sync** — before the vote or candidacy it records can act. The
+    /// update re-ids the record, so the fresh rid is tracked.
+    fn persist_hard_state(&mut self) -> Result<(), WireError> {
+        let Some(r) = self.replica.as_mut() else { return Ok(()) };
+        let doc = Document::new()
+            .set("term", r.term as i64)
+            .set("voted_for", r.voted_for.map(|v| v as i64).unwrap_or(-1));
+        let fresh = match r.raft_rid {
+            Some(rid) => self
+                .engine
+                .update_many(RAFT_STATE, &[(rid, doc)])
+                .map_err(server_err)?,
+            None => self
+                .engine
+                .insert_many(RAFT_STATE, &[doc])
+                .map_err(server_err)?,
+        };
+        r.raft_rid = fresh.first().copied().or(r.raft_rid);
+        let term = r.term;
+        self.engine.sync().map_err(server_err)?;
+        self.metrics.gauge(names::SHARD_TERM).set(term as i64);
+        Ok(())
+    }
+
+    /// Primary-side oplog append: the data leg (if any) and its oplog
+    /// entry journal as **one** atomic frame, group-commit, then the
+    /// entry fans out to the secondaries. Returns the entry's
+    /// `(term, index)` — the slot a `w:majority` reply parks under.
+    pub(super) fn primary_append(
+        &mut self,
+        data: Option<AtomicOp>,
+        kind: &str,
+        fields: Vec<(&str, Value)>,
+    ) -> Result<(u64, u64), WireError> {
+        let (term, index) = match self.replica.as_ref() {
+            Some(r) => (r.term, r.log.len() as u64 + 1),
+            None => return Err(WireError::Server("not a replica-set member".into())),
+        };
+        let mut entry = Document::new()
+            .set("term", term as i64)
+            .set("index", index as i64)
+            .set("kind", kind);
+        for (k, v) in fields {
+            entry.put(k, v);
+        }
+        let oplog_leg = AtomicOp::Insert { coll: OPLOG.to_string(), docs: vec![entry.clone()] };
+        let ops: Vec<AtomicOp> = match data {
+            Some(d) => vec![d, oplog_leg],
+            None => vec![oplog_leg],
+        };
+        self.engine.apply_atomic(&ops).map_err(server_err)?;
+        self.engine.sync().map_err(server_err)?;
+        self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
+        self.metrics.counter(names::SHARD_OPLOG_APPENDS).inc();
+        if let Some(r) = self.replica.as_mut() {
+            r.log.push(entry);
+        }
+        self.replicate_all();
+        Ok((term, index))
+    }
+
+    /// Fan the log out to every peer from its `next[]` cursor — one
+    /// message serves as heartbeat, replication, retransmission, and
+    /// catch-up tailing (the cursor only advances on ack).
+    pub(super) fn replicate_all(&mut self) {
+        let msgs: Vec<(u32, ShardRequest)> = {
+            let Some(r) = &self.replica else { return };
+            if r.role != Role::Primary {
+                return;
+            }
+            (0..r.peers.len() as u32)
+                .filter(|m| *m != r.member)
+                .map(|m| {
+                    let next = r.next[m as usize].max(1);
+                    let prev_index = next - 1;
+                    let from = prev_index as usize;
+                    let entries: Vec<Document> = r
+                        .log
+                        .get(from..)
+                        .unwrap_or(&[])
+                        .iter()
+                        .take(MAX_REPLICATE_BATCH)
+                        .cloned()
+                        .collect();
+                    (
+                        m,
+                        ShardRequest::Replicate {
+                            term: r.term,
+                            leader: r.member,
+                            prev_term: r.term_at(prev_index),
+                            prev_index,
+                            entries,
+                            commit: r.commit,
+                            reset: false,
+                        },
+                    )
+                })
+                .collect()
+        };
+        for (m, msg) in msgs {
+            self.metrics.counter(names::SHARD_HEARTBEATS).inc();
+            self.peer_send(m, msg);
+        }
+    }
+
+    /// Adopt a higher term observed on any message: step down to
+    /// secondary, clear the vote, persist. Parked `w:majority` replies
+    /// stay parked — their fate resolves when the new leader's log
+    /// reaches this member (kept entries drain at commit, overwritten
+    /// ones fail on resync).
+    fn adopt_term(&mut self, term: u64) {
+        if let Some(r) = self.replica.as_mut() {
+            r.term = term;
+            r.voted_for = None;
+            r.role = Role::Secondary;
+            r.leader = None;
+            r.votes_from = 0;
+            r.reset_election_deadline();
+        }
+        if let Err(e) = self.persist_hard_state() {
+            eprintln!("warn: {}: hard-state persist failed: {e}", self.id);
+        }
+    }
+
+    /// Election timeout fired: start a candidacy in the next term.
+    /// The incremented term persists (journal + sync) before any
+    /// `RequestVote` leaves this member.
+    fn start_election(&mut self) {
+        {
+            let Some(r) = self.replica.as_mut() else { return };
+            r.term += 1;
+            r.role = Role::Candidate;
+            r.voted_for = Some(r.member);
+            r.leader = None;
+            r.votes_from = 1u64 << (r.member as u64 & 63);
+            r.reset_election_deadline();
+        }
+        self.metrics.counter(names::SHARD_ELECTIONS).inc();
+        if let Err(e) = self.persist_hard_state() {
+            // Candidacy without a durable term could double-vote after
+            // a restart; stay secondary and retry next timeout.
+            eprintln!("warn: {}: election persist failed: {e}", self.id);
+            if let Some(r) = self.replica.as_mut() {
+                r.role = Role::Secondary;
+            }
+            return;
+        }
+        let (single, msgs) = {
+            let Some(r) = &self.replica else { return };
+            let last_index = r.log.len() as u64;
+            let msgs: Vec<(u32, ShardRequest)> = (0..r.peers.len() as u32)
+                .filter(|m| *m != r.member)
+                .map(|m| {
+                    (
+                        m,
+                        ShardRequest::RequestVote {
+                            term: r.term,
+                            candidate: r.member,
+                            last_term: r.term_at(last_index),
+                            last_index,
+                        },
+                    )
+                })
+                .collect();
+            (r.peers.len() == 1, msgs)
+        };
+        if single {
+            self.become_primary();
+            return;
+        }
+        for (m, msg) in msgs {
+            self.peer_send(m, msg);
+        }
+    }
+
+    /// Majority secured: take the primary role. The no-op entry in the
+    /// new term is what lets prior-term entries commit (IR3/Raft
+    /// §5.4.2 — a leader never counts replicas of old-term entries
+    /// directly).
+    fn become_primary(&mut self) {
+        {
+            let Some(r) = self.replica.as_mut() else { return };
+            r.role = Role::Primary;
+            r.leader = Some(r.member);
+            let next0 = r.log.len() as u64 + 1;
+            r.next = vec![next0; r.peers.len()];
+            r.match_idx = vec![0; r.peers.len()];
+            r.heartbeat_deadline = Instant::now();
+        }
+        if let Err(e) = self.primary_append(None, "n", Vec::new()) {
+            eprintln!("warn: {}: term no-op append failed: {e}", self.id);
+        }
+        if let Some(r) = self.replica.as_mut() {
+            r.heartbeat_deadline = Instant::now() + r.heartbeat;
+        }
+    }
+
+    /// Vote request from a candidate (IR1 + IR2: one grant per term,
+    /// and only to candidates whose log is at least as up-to-date).
+    /// The grant persists (journal + sync) before the reply leaves.
+    pub(super) fn handle_request_vote(
+        &mut self,
+        term: u64,
+        candidate: u32,
+        last_term: u64,
+        last_index: u64,
+    ) {
+        let member = match self.replica.as_ref() {
+            Some(r) => r.member,
+            None => return,
+        };
+        let our_term = match self.replica.as_ref() {
+            Some(r) => r.term,
+            None => return,
+        };
+        if term > our_term {
+            self.adopt_term(term);
+        }
+        let mut granted = false;
+        let reply_term = {
+            let Some(r) = self.replica.as_mut() else { return };
+            if term == r.term {
+                let my_last_index = r.log.len() as u64;
+                let my_last_term = r.term_at(my_last_index);
+                let up_to_date = (last_term, last_index) >= (my_last_term, my_last_index);
+                let free = r.voted_for.is_none() || r.voted_for == Some(candidate);
+                if up_to_date && free {
+                    r.voted_for = Some(candidate);
+                    r.reset_election_deadline();
+                    granted = true;
+                }
+            }
+            r.term
+        };
+        if granted && self.persist_hard_state().is_err() {
+            // Never grant a vote the disk could forget (a restart
+            // would free this member to vote twice in one term).
+            granted = false;
+            if let Some(r) = self.replica.as_mut() {
+                r.voted_for = None;
+            }
+        }
+        self.peer_send(
+            candidate,
+            ShardRequest::VoteReply { term: reply_term, from: member, granted },
+        );
+    }
+
+    /// A vote arrived; a majority promotes this candidate.
+    pub(super) fn handle_vote_reply(&mut self, term: u64, from: u32, granted: bool) {
+        let our_term = match self.replica.as_ref() {
+            Some(r) => r.term,
+            None => return,
+        };
+        if term > our_term {
+            self.adopt_term(term);
+            return;
+        }
+        {
+            let Some(r) = self.replica.as_mut() else { return };
+            if r.role != Role::Candidate || term != r.term || !granted {
+                return;
+            }
+            let bit = 1u64 << (from as u64 & 63);
+            if r.votes_from & bit != 0 {
+                return;
+            }
+            r.votes_from |= bit;
+            if (r.votes_from.count_ones() as usize) * 2 <= r.peers.len() {
+                return;
+            }
+        }
+        self.become_primary();
+    }
+
+    /// An oplog batch (or heartbeat, or full-log resync) from the
+    /// member claiming leadership of `term`.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn handle_replicate(
+        &mut self,
+        term: u64,
+        leader: u32,
+        prev_term: u64,
+        prev_index: u64,
+        entries: Vec<Document>,
+        commit: u64,
+        reset: bool,
+    ) {
+        let (our_term, member) = match self.replica.as_ref() {
+            Some(r) => (r.term, r.member),
+            None => return,
+        };
+        if term < our_term {
+            self.peer_send(
+                leader,
+                ShardRequest::ReplicationAck {
+                    member,
+                    term: our_term,
+                    ack_index: 0,
+                    success: false,
+                },
+            );
+            return;
+        }
+        if term > our_term {
+            self.adopt_term(term);
+        }
+        if let Some(r) = self.replica.as_mut() {
+            // A current-term Replicate is proof of a live leader: even
+            // a candidate steps back down (IR1 — it lost this term).
+            r.role = Role::Secondary;
+            r.leader = Some(leader);
+            r.reset_election_deadline();
+        }
+        if reset {
+            self.resync_wipe();
+        }
+        let prev_ok = match self.replica.as_ref() {
+            Some(r) => {
+                reset
+                    || (prev_index <= r.log.len() as u64 && r.term_at(prev_index) == prev_term)
+            }
+            None => return,
+        };
+        if !prev_ok {
+            self.peer_send(
+                leader,
+                ShardRequest::ReplicationAck { member, term, ack_index: 0, success: false },
+            );
+            return;
+        }
+        let base = if reset { 0 } else { prev_index };
+        let mut applied = 0u64; // entries verified-or-applied past `base`
+        let mut ok = true;
+        for entry in &entries {
+            let idx = entry.get_i64("index").unwrap_or(0).max(0) as u64;
+            let eterm = entry.get_i64("term").unwrap_or(0).max(0) as u64;
+            if idx != base + applied + 1 {
+                ok = false; // gap or malformed batch — resync will fix
+                break;
+            }
+            let (have, matches) = match self.replica.as_ref() {
+                Some(r) => (idx <= r.log.len() as u64, r.term_at(idx) == eterm),
+                None => return,
+            };
+            if have {
+                if !matches {
+                    // Divergent suffix (uncommitted entries from a
+                    // deposed leader): nack so the leader resyncs us
+                    // (IR4) — never overwrite in place.
+                    ok = false;
+                    break;
+                }
+                applied += 1; // dedupe: already durably applied
+                continue;
+            }
+            match self.secondary_apply_entry(entry) {
+                Ok(()) => {
+                    if let Some(r) = self.replica.as_mut() {
+                        r.log.push(entry.clone());
+                    }
+                    self.metrics.counter(names::SHARD_OPLOG_APPLIED).inc();
+                    applied += 1;
+                }
+                Err(e) => {
+                    eprintln!("warn: {}: oplog apply at index {idx} failed: {e}", self.id);
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        // One group commit per batch: the ack below is a durability
+        // promise, so nothing acks before the sync lands.
+        if (applied > 0 || reset) && self.engine.sync().is_err() {
+            ok = false;
+        } else if applied > 0 {
+            self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
+        }
+        let ack_index = base + applied;
+        if let Some(r) = self.replica.as_mut() {
+            let last = r.log.len() as u64;
+            // Commit never exceeds the verified prefix (a longer local
+            // log may still hold an unverified divergent suffix).
+            r.commit = r.commit.max(commit.min(ack_index).min(last));
+        }
+        self.drain_pending();
+        self.peer_send(
+            leader,
+            ShardRequest::ReplicationAck { member, term, ack_index, success: ok },
+        );
+    }
+
+    /// A follower acked (or nacked) a `Replicate` batch.
+    pub(super) fn handle_replication_ack(
+        &mut self,
+        member: u32,
+        term: u64,
+        ack_index: u64,
+        success: bool,
+    ) {
+        let our_term = match self.replica.as_ref() {
+            Some(r) => r.term,
+            None => return,
+        };
+        if term > our_term {
+            self.adopt_term(term);
+            return;
+        }
+        if term < our_term || !matches!(&self.replica, Some(r) if r.role == Role::Primary) {
+            return;
+        }
+        let m = member as usize;
+        if success {
+            if let Some(r) = self.replica.as_mut() {
+                if let Some(mi) = r.match_idx.get_mut(m) {
+                    *mi = (*mi).max(ack_index);
+                }
+                if let Some(nx) = r.next.get_mut(m) {
+                    *nx = (*nx).max(ack_index + 1);
+                }
+            }
+            self.advance_commit();
+        } else {
+            // Prev-check missed: this follower's log diverged from
+            // ours. Ship the full log with `reset` — it wipes and
+            // re-applies, discarding its divergent suffix (IR4).
+            if let Some(r) = self.replica.as_mut() {
+                if let Some(nx) = r.next.get_mut(m) {
+                    *nx = 1;
+                }
+                if let Some(mi) = r.match_idx.get_mut(m) {
+                    *mi = 0;
+                }
+            }
+            let msg = match self.replica.as_ref() {
+                Some(r) => ShardRequest::Replicate {
+                    term: r.term,
+                    leader: r.member,
+                    prev_term: 0,
+                    prev_index: 0,
+                    entries: r.log.clone(),
+                    commit: r.commit,
+                    reset: true,
+                },
+                None => return,
+            };
+            self.metrics.counter(names::SHARD_HEARTBEATS).inc();
+            self.peer_send(member, msg);
+        }
+    }
+
+    /// Leader commit rule (IR3): an index commits once a majority of
+    /// members (self included) holds it durably **and** its entry is
+    /// from the current term; earlier-term entries commit transitively
+    /// under it.
+    fn advance_commit(&mut self) {
+        {
+            let Some(r) = self.replica.as_mut() else { return };
+            if r.role != Role::Primary {
+                return;
+            }
+            let n_members = r.peers.len();
+            let last = r.log.len() as u64;
+            let mut commit = r.commit;
+            for idx in (r.commit + 1)..=last {
+                if r.term_at(idx) != r.term {
+                    continue;
+                }
+                let member = r.member;
+                let holders = 1 + r
+                    .match_idx
+                    .iter()
+                    .enumerate()
+                    .filter(|(m, mi)| *m as u32 != member && **mi >= idx)
+                    .count();
+                if holders * 2 > n_members {
+                    commit = idx;
+                }
+            }
+            r.commit = commit;
+        }
+        self.drain_pending();
+    }
+
+    /// Resolve parked `w:majority` replies against the current log:
+    /// a committed entry with its parked term releases `Ok`; an entry
+    /// overwritten or dropped by a resync (the write was rolled back —
+    /// it is gone cluster-wide, so a retry cannot double-apply) fails
+    /// with `NotPrimary`; anything else keeps waiting.
+    fn drain_pending(&mut self) {
+        let err = self.not_primary();
+        let Some(r) = self.replica.as_mut() else { return };
+        if r.pending.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut r.pending);
+        let commit = r.commit;
+        let mut keep = Vec::new();
+        let mut acks = Vec::new();
+        let mut fails = Vec::new();
+        for (term, index, reply) in pending {
+            let present = index >= 1 && index <= r.log.len() as u64;
+            if present && r.term_at(index) == term {
+                if index <= commit {
+                    acks.push(reply);
+                } else {
+                    keep.push((term, index, reply));
+                }
+            } else if present {
+                fails.push(reply); // overwritten by a resync
+            } else {
+                fails.push(reply); // log shrank past it (resync)
+            }
+        }
+        r.pending = keep;
+        for reply in acks {
+            reply.send_ok();
+        }
+        for reply in fails {
+            reply.send_err(err.clone());
+        }
+    }
+
+    /// Full-log resync (IR4): wipe the data collection, the oplog, the
+    /// position histogram, and the log cache; the caller then applies
+    /// the leader's full log. Deliberately **not** one atomic frame —
+    /// a crash mid-resync leaves a partial log that the next rejoin
+    /// corrects with another reset (correct-by-retry; the member never
+    /// acks, so nothing depends on the torn state).
+    fn resync_wipe(&mut self) {
+        self.metrics.counter(names::SHARD_RESYNCS).inc();
+        let data = self.engine.record_ids(COLLECTION);
+        if !data.is_empty() {
+            if let Err(e) = self.engine.remove_many(COLLECTION, &data) {
+                eprintln!("warn: {}: resync data wipe failed: {e:#}", self.id);
+            }
+        }
+        let oplog = self.engine.record_ids(OPLOG);
+        if !oplog.is_empty() {
+            if let Err(e) = self.engine.remove_many(OPLOG, &oplog) {
+                eprintln!("warn: {}: resync oplog wipe failed: {e:#}", self.id);
+            }
+        }
+        self.positions.clear();
+        if let Some(r) = self.replica.as_mut() {
+            r.log.clear();
+            r.commit = 0;
+        }
+    }
+
+    /// Apply one tailed oplog entry through the engine's atomic-frame
+    /// path at this member's own MVCC epoch. The entry itself rides in
+    /// the same frame, so "entry in the log" ⇔ "op applied" holds
+    /// across crashes. Updates and deletes resolve their record ids
+    /// **content-addressed**: the entry carries the old document, and
+    /// rids differ across members, so the local rid is found by
+    /// byte-comparing stored records against the old doc's encoding.
+    fn secondary_apply_entry(&mut self, entry: &Document) -> Result<(), WireError> {
+        let kind = entry.get("kind").and_then(Value::as_str).unwrap_or("?").to_string();
+        let oplog_leg = AtomicOp::Insert { coll: OPLOG.to_string(), docs: vec![entry.clone()] };
+        match kind.as_str() {
+            "n" => {
+                self.engine.apply_atomic(&[oplog_leg]).map_err(server_err)?;
+            }
+            "i" => {
+                let docs = doc_array(entry, "docs");
+                let positions: Vec<u64> =
+                    docs.iter().filter_map(|d| self.position_of(d)).collect();
+                self.engine
+                    .apply_atomic(&[
+                        AtomicOp::Insert { coll: COLLECTION.to_string(), docs },
+                        oplog_leg,
+                    ])
+                    .map_err(server_err)?;
+                for pos in positions {
+                    *self.positions.entry(pos).or_insert(0) += 1;
+                }
+            }
+            "u" => {
+                let pairs = doc_array(entry, "pairs");
+                let mut olds = Vec::with_capacity(pairs.len());
+                let mut news = Vec::with_capacity(pairs.len());
+                for p in &pairs {
+                    match (p.get("old"), p.get("new")) {
+                        (Some(Value::Doc(o)), Some(Value::Doc(n))) => {
+                            olds.push(o.clone());
+                            news.push(n.clone());
+                        }
+                        _ => {
+                            return Err(WireError::Server(
+                                "malformed update oplog entry".into(),
+                            ))
+                        }
+                    }
+                }
+                let rids = self.resolve_rids(&olds)?;
+                let updates: Vec<(RecordId, Document)> = rids.into_iter().zip(news).collect();
+                self.engine
+                    .apply_atomic(&[
+                        AtomicOp::Update { coll: COLLECTION.to_string(), updates },
+                        oplog_leg,
+                    ])
+                    .map_err(server_err)?;
+                // Shard-key fields are immutable under update, so the
+                // position histogram is unchanged.
+            }
+            "d" => {
+                let olds = doc_array(entry, "olds");
+                let rids = self.resolve_rids(&olds)?;
+                self.engine
+                    .apply_atomic(&[
+                        AtomicOp::Remove { coll: COLLECTION.to_string(), rids },
+                        oplog_leg,
+                    ])
+                    .map_err(server_err)?;
+                for old in &olds {
+                    if let Some(pos) = self.position_of(old) {
+                        if let Some(c) = self.positions.get_mut(&pos) {
+                            *c -= 1;
+                            if *c == 0 {
+                                self.positions.remove(&pos);
+                            }
+                        }
+                    }
+                }
+            }
+            k => {
+                return Err(WireError::Server(format!("unknown oplog entry kind `{k}`")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Content-addressed rid resolution: find the local record whose
+    /// stored bytes equal each old document's encoding. Duplicate
+    /// documents map to *distinct* rids (first-match-wins per slot), so
+    /// a batch deleting two identical docs resolves two records.
+    fn resolve_rids(&self, olds: &[Document]) -> Result<Vec<RecordId>, WireError> {
+        let encoded: Vec<Vec<u8>> = olds.iter().map(|d| d.encode()).collect();
+        let mut out: Vec<Option<RecordId>> = vec![None; olds.len()];
+        let mut remaining = olds.len();
+        let reader = self.engine.reader();
+        let view = reader.latest();
+        for (rid, raw) in view.scan_raw_from(COLLECTION, None) {
+            if remaining == 0 {
+                break;
+            }
+            for (i, enc) in encoded.iter().enumerate() {
+                if out[i].is_none() && enc.as_slice() == raw {
+                    out[i] = Some(rid);
+                    remaining -= 1;
+                    break;
+                }
+            }
+        }
+        let rids: Vec<RecordId> = out.into_iter().flatten().collect();
+        if rids.len() != olds.len() {
+            return Err(WireError::Server(
+                "oplog apply: old document not present on this member (log divergence)".into(),
+            ));
+        }
+        Ok(rids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(term: i64, index: i64) -> Document {
+        Document::new().set("term", term).set("index", index).set("kind", "n")
+    }
+
+    #[test]
+    fn docs_value_round_trips_through_doc_array() {
+        let docs = vec![
+            Document::new().set("ts", 1i64).set("node_id", 2i64),
+            Document::new().set("ts", 3i64).set("load", 0.5),
+        ];
+        let e = Document::new().set("kind", "i").set("docs", docs_value(&docs));
+        assert_eq!(doc_array(&e, "docs"), docs);
+        assert!(doc_array(&e, "missing").is_empty());
+    }
+
+    #[test]
+    fn seed_is_nonzero_and_member_distinct_stream() {
+        // xorshift64 requires a nonzero seed; `| 1` guarantees it.
+        assert_ne!(seed(0), 0);
+        assert_ne!(seed(7), 0);
+    }
+
+    #[test]
+    fn term_at_reads_the_one_based_log() {
+        let r = ReplicaState {
+            member: 0,
+            peers: Vec::new(),
+            role: Role::Secondary,
+            term: 3,
+            voted_for: None,
+            leader: None,
+            log: vec![entry(1, 1), entry(1, 2), entry(3, 3)],
+            commit: 0,
+            next: Vec::new(),
+            match_idx: Vec::new(),
+            votes_from: 0,
+            pending: Vec::new(),
+            election_timeout: Duration::from_millis(150),
+            heartbeat: Duration::from_millis(50),
+            election_deadline: Instant::now(),
+            heartbeat_deadline: Instant::now(),
+            rng: seed(0),
+            raft_rid: None,
+        };
+        assert_eq!(r.term_at(0), 0); // empty prefix
+        assert_eq!(r.term_at(1), 1);
+        assert_eq!(r.term_at(3), 3);
+        assert_eq!(r.term_at(4), 0); // out of range
+    }
+
+    #[test]
+    fn election_jitter_stays_in_one_to_two_timeouts() {
+        let mut r = ReplicaState {
+            member: 1,
+            peers: Vec::new(),
+            role: Role::Secondary,
+            term: 0,
+            voted_for: None,
+            leader: None,
+            log: Vec::new(),
+            commit: 0,
+            next: Vec::new(),
+            match_idx: Vec::new(),
+            votes_from: 0,
+            pending: Vec::new(),
+            election_timeout: Duration::from_millis(100),
+            heartbeat: Duration::from_millis(50),
+            election_deadline: Instant::now(),
+            heartbeat_deadline: Instant::now(),
+            rng: seed(1),
+            raft_rid: None,
+        };
+        for _ in 0..64 {
+            let before = Instant::now();
+            r.reset_election_deadline();
+            let dt = r.election_deadline.saturating_duration_since(before);
+            assert!(dt >= Duration::from_millis(100), "jitter below base: {dt:?}");
+            assert!(dt < Duration::from_millis(201), "jitter above 2T: {dt:?}");
+        }
+    }
+}

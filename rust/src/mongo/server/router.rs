@@ -13,12 +13,25 @@
 //!   each shard returns its results fully ordered, so taking the best
 //!   head across streams yields one *globally* ordered result, not a
 //!   per-shard-ordered concatenation.
+//!
+//! With replica sets (`replicas > 1`) each logical shard is a member
+//! list. Writes go to the member the router believes is primary (the
+//! `primary_hint`); a `NotPrimary` reject updates the hint from the
+//! reply's leader field and retries after a jittered backoff — safe,
+//! because a rejected write mutated nothing. A *dead* member is
+//! different: a send that never reached a mailbox is retried against
+//! the next member (nothing was delivered), but a reply channel that
+//! dies **after** the send surfaces as the typed
+//! [`WireError::ShardUnavailable`] — the write may or may not have
+//! applied, and blind resend could double-apply, so the ambiguity is
+//! the client's to resolve (ARCHITECTURE.md §10). Reads carry no such
+//! ambiguity and degrade across members per the read preference.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::config::ShardKeyKind;
+use crate::config::{ReadPreference, ShardKeyKind, WriteConcern};
 use crate::mongo::aggregate::{AggPipeline, PartialTable};
 use crate::mongo::bson::{Document, Value};
 use crate::mongo::query::{Filter, FindOptions, SortDir};
@@ -30,6 +43,14 @@ use crate::mongo::wire::{
 use crate::metrics::{names, Registry};
 use crate::runtime::Kernels;
 use crate::util::ids::RouterId;
+use crate::util::Backoff;
+
+/// Backoff base/cap (µs) for router retry loops: small enough that a
+/// one-bounce stale-version retry costs microseconds, capped low
+/// enough that an election-length outage is polled a few times per
+/// heartbeat interval rather than once.
+const BACKOFF_BASE_US: u64 = 200;
+const BACKOFF_CAP_US: u64 = 20_000;
 
 /// Result of an `insertMany` through the router.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -124,6 +145,9 @@ pub type RouterMailbox = mpsc::Sender<RouterRequest>;
 /// shard-side cursor, if any.
 struct ShardStream {
     shard: usize,
+    /// Member the stream was opened on: shard-side cursors live in one
+    /// member's reader state, so every GetMore must go back to it.
+    member: usize,
     cursor: Option<u64>,
     buf: VecDeque<Document>,
     /// Set when, at scatter time, the router's map said this shard is
@@ -149,7 +173,12 @@ struct RouterCursor {
 pub struct Router {
     id: RouterId,
     map: ChunkMap,
-    shards: Vec<mpsc::Sender<ShardRequest>>,
+    /// Per-shard member mailboxes (`members[shard][member]`). An
+    /// unreplicated cluster has one member per shard.
+    members: Vec<Vec<mpsc::Sender<ShardRequest>>>,
+    /// Which member of each shard the router currently believes is
+    /// primary. Corrected lazily from `NotPrimary` rejects.
+    primary_hint: Vec<usize>,
     config: mpsc::Sender<ConfigRequest>,
     kernels: Kernels,
     metrics: Registry,
@@ -165,6 +194,16 @@ pub struct Router {
     /// ship every matching document and the router folds centrally
     /// (the bench baseline).
     agg_partial: bool,
+    /// Write concern stamped on every shard write; `Majority` holds
+    /// the shard's reply until a majority of members durably applied.
+    wc: WriteConcern,
+    /// Which member reads are routed to (primary vs. a secondary).
+    read_pref: ReadPreference,
+    /// Deadline for write/scatter retry loops (`StoreConfig::
+    /// write_retry_ms`): how long the router keeps retrying
+    /// stale-version, migration-blocked, and not-primary rejects
+    /// before giving up.
+    write_retry_ms: u64,
     /// Buffered-ingest documents awaiting the next flush.
     ingest_buf: Vec<Document>,
     /// Per-contributor (doc count, reply) acks for the buffered docs.
@@ -183,7 +222,7 @@ impl Router {
     pub fn new(
         id: RouterId,
         map: ChunkMap,
-        shards: Vec<mpsc::Sender<ShardRequest>>,
+        members: Vec<Vec<mpsc::Sender<ShardRequest>>>,
         config: mpsc::Sender<ConfigRequest>,
         kernels: Kernels,
         metrics: Registry,
@@ -191,11 +230,16 @@ impl Router {
         flush_docs: usize,
         flush_interval: Duration,
         agg_partial: bool,
+        wc: WriteConcern,
+        read_pref: ReadPreference,
+        write_retry_ms: u64,
     ) -> Self {
+        let primary_hint = vec![0; members.len()];
         Self {
             id,
             map,
-            shards,
+            members,
+            primary_hint,
             config,
             kernels,
             metrics,
@@ -205,6 +249,9 @@ impl Router {
             flush_docs: flush_docs.max(1),
             flush_interval,
             agg_partial,
+            wc,
+            read_pref,
+            write_retry_ms,
             ingest_buf: Vec::new(),
             pending_acks: Vec::new(),
             buffered_since: None,
@@ -333,9 +380,12 @@ impl Router {
                 }
                 RouterRequest::CreateIndex { spec, reply } => {
                     self.flush_ingest();
+                    // Every member builds the index: secondaries serve
+                    // reads from their own engines, so index state must
+                    // exist cluster-wide, not just on primaries.
                     let mut result = Ok(());
-                    for shard in &self.shards {
-                        match rpc(shard, |reply| ShardRequest::CreateIndex {
+                    for member in self.members.iter().flatten() {
+                        match rpc(member, |reply| ShardRequest::CreateIndex {
                             spec: spec.clone(),
                             reply,
                         }) {
@@ -402,10 +452,81 @@ impl Router {
         }
     }
 
+    fn num_shards(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Mailbox writes to `shard` target: the hinted primary member.
+    fn write_tx(&self, shard: usize) -> &mpsc::Sender<ShardRequest> {
+        &self.members[shard][self.primary_hint[shard]]
+    }
+
+    /// Rotate the primary hint for `shard` after a `NotPrimary` reject
+    /// or a dead member: follow the reject's leader hint when it names
+    /// a valid member, otherwise try the next member round-robin (an
+    /// election in progress has no leader to name yet).
+    fn update_primary_hint(&mut self, shard: usize, leader: Option<u32>) {
+        let n = self.members[shard].len();
+        self.primary_hint[shard] = match leader {
+            Some(l) if (l as usize) < n => l as usize,
+            _ => (self.primary_hint[shard] + 1) % n.max(1),
+        };
+    }
+
+    /// Typed dead-shard error; counts the encounter. Returned when no
+    /// member of `shard` can take a request, or when a member died
+    /// after accepting a write (the ambiguous case the router must not
+    /// blindly retry — see the module doc).
+    fn shard_unavailable(&self, shard: usize) -> WireError {
+        self.metrics.counter(names::ROUTER_SHARD_UNAVAILABLE).inc();
+        WireError::ShardUnavailable { shard: shard as u32 }
+    }
+
+    /// Member index reads on `shard` prefer under the read preference.
+    fn read_member(&self, shard: usize) -> usize {
+        let n = self.members[shard].len();
+        match self.read_pref {
+            ReadPreference::Primary => self.primary_hint[shard],
+            // Deterministic "any secondary": the member after the
+            // hinted primary. Secondary reads serve from that member's
+            // own MVCC snapshots and may trail the primary by the
+            // replication lag (ARCHITECTURE.md §10).
+            ReadPreference::Secondary if n > 1 => (self.primary_hint[shard] + 1) % n,
+            ReadPreference::Secondary => 0,
+        }
+    }
+
+    /// Send a read-path request to `shard`: the read-preference member
+    /// first, degrading to any member whose mailbox is still open (a
+    /// read served by a stale member is still a valid snapshot read).
+    /// Returns the member that accepted the send plus the reply
+    /// channel; every member dead ⇒ typed `ShardUnavailable`, never a
+    /// hang.
+    fn send_read<R>(
+        &self,
+        shard: usize,
+        mk: impl Fn(Reply<R>) -> ShardRequest,
+    ) -> Result<(usize, mpsc::Receiver<R>), WireError> {
+        let n = self.members[shard].len();
+        let start = self.read_member(shard);
+        for k in 0..n {
+            let m = (start + k) % n;
+            let (tx, rx) = mpsc::channel();
+            if self.members[shard][m].send(mk(tx)).is_ok() {
+                if k > 0 {
+                    // Preferred member was dead; record the degrade.
+                    self.metrics.counter(names::ROUTER_SHARD_UNAVAILABLE).inc();
+                }
+                return Ok((m, rx));
+            }
+        }
+        Err(self.shard_unavailable(shard))
+    }
+
     /// Partition `docs` by owning shard. Hashed keys go through the AOT
     /// route kernel; ranged keys use scalar positions.
     fn partition(&self, docs: Vec<Document>) -> Result<Vec<Vec<Document>>, WireError> {
-        let num_shards = self.shards.len();
+        let num_shards = self.num_shards();
         let mut per_shard: Vec<Vec<Document>> = (0..num_shards).map(|_| Vec::new()).collect();
         match self.map.key.kind {
             ShardKeyKind::Hashed => {
@@ -448,16 +569,25 @@ impl Router {
         let mut pending = docs;
         let mut inserted = 0usize;
         let mut rerouted = 0usize;
-        // Unordered retry loop: a concurrent split/migration can bounce a
-        // sub-batch at most a few times before the map stabilizes.
-        for attempt in 0..5 {
-            if pending.is_empty() {
-                break;
-            }
-            if attempt > 0 {
+        // Unordered retry loop: a concurrent split/migration bounces a
+        // sub-batch at most a few times before the map stabilizes, and
+        // a failover bounces it with `NotPrimary` until the new leader
+        // is found. Both rejects happen before any mutation, so the
+        // resend cannot double-insert. The loop is bounded by the
+        // write-retry deadline, with jittered backoff between passes.
+        let deadline = Instant::now() + Duration::from_millis(self.write_retry_ms);
+        let mut backoff = Backoff::new(BACKOFF_BASE_US, BACKOFF_CAP_US);
+        let mut first_pass = true;
+        while !pending.is_empty() {
+            if !first_pass {
+                if Instant::now() >= deadline {
+                    break;
+                }
+                backoff.wait();
                 self.refresh_map();
                 rerouted += pending.len();
             }
+            first_pass = false;
             let per_shard = self.partition(std::mem::take(&mut pending))?;
             // Dispatch all sub-batches, then collect replies (concurrent
             // across shards — the shards process in parallel threads).
@@ -468,19 +598,29 @@ impl Router {
                 }
                 self.wire_bytes_out += batch_wire_bytes(&batch);
                 let (tx, rx) = mpsc::channel();
-                self.shards[s]
-                    .send(ShardRequest::InsertBatch {
-                        version: self.map.version,
-                        docs: batch.clone(),
-                        reply: tx,
-                    })
-                    .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
-                in_flight.push((s, batch, rx));
+                match self.write_tx(s).send(ShardRequest::InsertBatch {
+                    version: self.map.version,
+                    docs: batch.clone(),
+                    wc: self.wc,
+                    reply: tx,
+                }) {
+                    Ok(()) => in_flight.push((s, batch, rx)),
+                    Err(_) if self.members[s].len() > 1 => {
+                        // The hinted member's mailbox is closed and the
+                        // batch never reached it — safe to re-aim at
+                        // another member next pass.
+                        self.metrics.counter(names::ROUTER_SHARD_UNAVAILABLE).inc();
+                        self.update_primary_hint(s, None);
+                        pending.extend(batch);
+                    }
+                    Err(_) => return Err(self.shard_unavailable(s)),
+                }
             }
             for (s, batch, rx) in in_flight {
-                let r = rx
-                    .recv()
-                    .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))?;
+                // The send was accepted; a dropped reply means the
+                // member died mid-request and the batch's fate is
+                // unknown — surface the typed error, never resend.
+                let r = rx.recv().map_err(|_| self.shard_unavailable(s))?;
                 match r {
                     Ok(rep) => {
                         inserted += rep.inserted;
@@ -490,6 +630,11 @@ impl Router {
                     }
                     Err(WireError::StaleVersion { .. }) => {
                         self.metrics.counter(names::ROUTER_STALE_RETRIES).inc();
+                        pending.extend(batch);
+                    }
+                    Err(WireError::NotPrimary { leader, .. }) => {
+                        self.metrics.counter(names::ROUTER_NOT_PRIMARY_RETRIES).inc();
+                        self.update_primary_hint(s, leader);
                         pending.extend(batch);
                     }
                     Err(e) => return Err(e),
@@ -511,20 +656,17 @@ impl Router {
         opts: FindOptions,
     ) -> Result<FindReply, WireError> {
         self.finds += 1;
-        self.wire_bytes_out += find_wire_bytes(&filter) * self.shards.len() as u64;
+        self.wire_bytes_out += find_wire_bytes(&filter) * self.num_shards() as u64;
         let batch = opts.batch_size.unwrap_or(self.default_batch);
-        // Scatter.
-        let mut rxs = Vec::with_capacity(self.shards.len());
-        for (s, shard) in self.shards.iter().enumerate() {
-            let (tx, rx) = mpsc::channel();
-            shard
-                .send(ShardRequest::Find {
-                    filter: filter.clone(),
-                    opts: opts.clone(),
-                    reply: tx,
-                })
-                .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
-            rxs.push((s, rx));
+        // Scatter to the read-preference member of every shard.
+        let mut rxs = Vec::with_capacity(self.num_shards());
+        for s in 0..self.num_shards() {
+            let (m, rx) = self.send_read(s, |reply| ShardRequest::Find {
+                filter: filter.clone(),
+                opts: opts.clone(),
+                reply,
+            })?;
+            rxs.push((s, m, rx));
         }
         // Gather one stream per shard; sorted queries are k-way merged
         // across them in serve_router_batch.
@@ -534,10 +676,8 @@ impl Router {
             remaining: opts.limit,
             batch,
         };
-        for (s, rx) in rxs {
-            let rep = rx
-                .recv()
-                .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
+        for (s, m, rx) in rxs {
+            let rep = rx.recv().map_err(|_| self.shard_unavailable(s))??;
             // Donor of a published handoff: its leftover copies of the
             // range are orphans. The shard's own read fence drops them
             // once its SetMap lands; this router-side fence covers the
@@ -553,6 +693,7 @@ impl Router {
             if !docs.is_empty() || rep.cursor.is_some() {
                 cur.streams.push(ShardStream {
                     shard: s,
+                    member: m,
                     cursor: rep.cursor,
                     buf: docs.into(),
                     orphan_fence,
@@ -580,32 +721,27 @@ impl Router {
     /// is simply retried; the skew window is one mailbox drain long.
     fn handle_count(&mut self, filter: Filter) -> Result<u64, WireError> {
         self.finds += 1;
-        let deadline = Instant::now() + Duration::from_secs(2);
-        let mut attempt = 0u32;
+        let deadline = Instant::now() + Duration::from_millis(self.write_retry_ms);
+        let mut backoff = Backoff::new(BACKOFF_BASE_US, BACKOFF_CAP_US);
+        let mut first_pass = true;
         loop {
-            if attempt > 0 {
+            if !first_pass {
                 self.metrics.counter(names::ROUTER_COUNT_RETRIES).inc();
-                if attempt > 8 {
-                    std::thread::sleep(Duration::from_micros(500));
-                }
+                backoff.wait();
                 self.refresh_map();
             }
-            attempt += 1;
-            self.wire_bytes_out += find_wire_bytes(&filter) * self.shards.len() as u64;
-            let mut rxs = Vec::with_capacity(self.shards.len());
-            for (s, shard) in self.shards.iter().enumerate() {
-                let (tx, rx) = mpsc::channel();
-                shard
-                    .send(ShardRequest::Count { filter: filter.clone(), reply: tx })
-                    .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
+            first_pass = false;
+            self.wire_bytes_out += find_wire_bytes(&filter) * self.num_shards() as u64;
+            let mut rxs = Vec::with_capacity(self.num_shards());
+            for s in 0..self.num_shards() {
+                let (_, rx) = self
+                    .send_read(s, |reply| ShardRequest::Count { filter: filter.clone(), reply })?;
                 rxs.push((s, rx));
             }
             let mut total = 0u64;
-            let mut versions = Vec::with_capacity(self.shards.len());
+            let mut versions = Vec::with_capacity(self.num_shards());
             for (s, rx) in rxs {
-                let rep = rx
-                    .recv()
-                    .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
+                let rep = rx.recv().map_err(|_| self.shard_unavailable(s))??;
                 total += rep.n;
                 versions.push(rep.version);
             }
@@ -638,38 +774,32 @@ impl Router {
     /// reference executor the differential tests compare against.
     fn handle_aggregate(&mut self, pipeline: AggPipeline) -> Result<Vec<Document>, WireError> {
         self.finds += 1;
-        let deadline = Instant::now() + Duration::from_secs(2);
-        let mut attempt = 0u32;
+        let deadline = Instant::now() + Duration::from_millis(self.write_retry_ms);
+        let mut backoff = Backoff::new(BACKOFF_BASE_US, BACKOFF_CAP_US);
+        let mut first_pass = true;
         loop {
-            if attempt > 0 {
+            if !first_pass {
                 self.metrics.counter(names::ROUTER_AGG_RETRIES).inc();
-                if attempt > 8 {
-                    std::thread::sleep(Duration::from_micros(500));
-                }
+                backoff.wait();
                 self.refresh_map();
             }
-            attempt += 1;
-            self.wire_bytes_out += agg_wire_bytes(&pipeline) * self.shards.len() as u64;
-            let mut rxs = Vec::with_capacity(self.shards.len());
-            for (s, shard) in self.shards.iter().enumerate() {
-                let (tx, rx) = mpsc::channel();
-                shard
-                    .send(ShardRequest::Aggregate {
-                        pipeline: pipeline.clone(),
-                        partial: self.agg_partial,
-                        reply: tx,
-                    })
-                    .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
+            first_pass = false;
+            self.wire_bytes_out += agg_wire_bytes(&pipeline) * self.num_shards() as u64;
+            let mut rxs = Vec::with_capacity(self.num_shards());
+            for s in 0..self.num_shards() {
+                let (_, rx) = self.send_read(s, |reply| ShardRequest::Aggregate {
+                    pipeline: pipeline.clone(),
+                    partial: self.agg_partial,
+                    reply,
+                })?;
                 rxs.push((s, rx));
             }
             // Gather every reply before merging: the merge is only
             // valid once the versions are known to agree.
-            let mut replies = Vec::with_capacity(self.shards.len());
-            let mut versions = Vec::with_capacity(self.shards.len());
+            let mut replies = Vec::with_capacity(self.num_shards());
+            let mut versions = Vec::with_capacity(self.num_shards());
             for (s, rx) in rxs {
-                let rep = rx
-                    .recv()
-                    .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))??;
+                let rep = rx.recv().map_err(|_| self.shard_unavailable(s))??;
                 versions.push(rep.version);
                 replies.push(rep);
             }
@@ -710,12 +840,12 @@ impl Router {
     /// flight the answer is always broadcast — two shards hold copies
     /// of the range and the donor-side fence arbitrates.
     fn target_shards(&self, filter: &Filter) -> Vec<usize> {
-        let all: Vec<usize> = (0..self.shards.len()).collect();
+        let all: Vec<usize> = (0..self.num_shards()).collect();
         if self.map.handoff.is_some() {
             return all;
         }
         let Some(nodes) = exact_node_pins(filter) else { return all };
-        let mut hit = vec![false; self.shards.len()];
+        let mut hit = vec![false; self.num_shards()];
         match self.map.key.kind {
             ShardKeyKind::Hashed => {
                 // Hashed positions scatter (node, ts) pairs across the
@@ -741,7 +871,7 @@ impl Router {
             }
         }
         let picked: Vec<usize> =
-            (0..self.shards.len()).filter(|&s| hit[s]).collect();
+            (0..self.num_shards()).filter(|&s| hit[s]).collect();
         if picked.is_empty() { all } else { picked }
     }
 
@@ -772,9 +902,10 @@ impl Router {
         R: Send + 'static,
     {
         let mut replies: Vec<Vec<R>> =
-            (0..self.shards.len()).map(|_| Vec::new()).collect();
-        let mut done = vec![false; self.shards.len()];
-        let deadline = Instant::now() + Duration::from_secs(2);
+            (0..self.num_shards()).map(|_| Vec::new()).collect();
+        let mut done = vec![false; self.num_shards()];
+        let deadline = Instant::now() + Duration::from_millis(self.write_retry_ms);
+        let mut backoff = Backoff::new(BACKOFF_BASE_US, BACKOFF_CAP_US);
         loop {
             // Recompute targets each pass: a migration finishing
             // between passes can move matching documents to a shard
@@ -788,20 +919,29 @@ impl Router {
                 return Ok(replies);
             }
             let mut rxs = Vec::with_capacity(targets.len());
+            let mut pending = false;
             for &s in &targets {
                 self.wire_bytes_out += find_wire_bytes(filter);
                 let (tx, rx) = mpsc::channel();
-                self.shards[s]
-                    .send(request(self.map.version, tx))
-                    .map_err(|_| WireError::Server(format!("shard {s} mailbox closed")))?;
-                rxs.push((s, rx));
+                match self.write_tx(s).send(request(self.map.version, tx)) {
+                    Ok(()) => rxs.push((s, rx)),
+                    Err(_) if self.members[s].len() > 1 => {
+                        // Never delivered — safe to re-aim at another
+                        // member on the next pass.
+                        self.metrics.counter(names::ROUTER_SHARD_UNAVAILABLE).inc();
+                        self.update_primary_hint(s, None);
+                        pending = true;
+                    }
+                    Err(_) => return Err(self.shard_unavailable(s)),
+                }
             }
             let mut blocked = false;
-            let mut pending = false;
             for (s, rx) in rxs {
-                let r = rx
-                    .recv()
-                    .map_err(|_| WireError::Server(format!("shard {s} dropped reply")))?;
+                // Delivered but the member died before replying: the
+                // leg's fate is unknown and `$set`/delete counters
+                // would skew on a blind resend — surface the typed
+                // error instead (see the module doc).
+                let r = rx.recv().map_err(|_| self.shard_unavailable(s))?;
                 match r {
                     Ok(rep) => {
                         done[s] = true;
@@ -814,6 +954,11 @@ impl Router {
                     Err(WireError::MigrationInFlight { .. }) => {
                         self.metrics.counter(names::ROUTER_WRITE_BLOCKED_RETRIES).inc();
                         blocked = true;
+                        pending = true;
+                    }
+                    Err(WireError::NotPrimary { leader, .. }) => {
+                        self.metrics.counter(names::ROUTER_NOT_PRIMARY_RETRIES).inc();
+                        self.update_primary_hint(s, leader);
                         pending = true;
                     }
                     Err(e) => return Err(e),
@@ -833,6 +978,10 @@ impl Router {
                 // The blocking migration needs its coordinator to make
                 // progress; yield rather than hammer the donor.
                 std::thread::sleep(Duration::from_millis(1));
+            } else {
+                // Stale map, mid-election, or dead hinted member:
+                // decorrelated exponential backoff before the re-aim.
+                backoff.wait();
             }
             let seen = self.map.version;
             self.refresh_map();
@@ -849,10 +998,12 @@ impl Router {
     }
 
     fn handle_update(&mut self, filter: Filter, set: Document) -> Result<UpdateReply, WireError> {
+        let wc = self.wc;
         let replies = self.scatter_write(&filter, |version, reply| ShardRequest::Update {
             version,
             filter: filter.clone(),
             set: set.clone(),
+            wc,
             reply,
         })?;
         // Fold per-shard reply histories. A shard re-sent after a map
@@ -876,9 +1027,11 @@ impl Router {
     }
 
     fn handle_delete(&mut self, filter: Filter) -> Result<DeleteReply, WireError> {
+        let wc = self.wc;
         let replies = self.scatter_write(&filter, |version, reply| ShardRequest::Delete {
             version,
             filter: filter.clone(),
+            wc,
             reply,
         })?;
         // Deleted counts sum exactly across passes and shards: a
@@ -892,14 +1045,17 @@ impl Router {
     }
 
     /// Refill `stream` from its shard until it has a buffered head or
-    /// its shard-side cursor is exhausted.
+    /// its shard-side cursor is exhausted. The GetMore goes back to the
+    /// member the cursor was opened on (cursor state is member-local);
+    /// if that member has died, the typed `ShardUnavailable` tells the
+    /// client this cursor is gone for a *retryable* reason — re-issue
+    /// the find — rather than reading as quiet exhaustion.
     fn refill(&self, stream: &mut ShardStream) -> Result<(), WireError> {
         while stream.buf.is_empty() {
             let Some(c) = stream.cursor else { return Ok(()) };
-            let rep = rpc(&self.shards[stream.shard], |reply| ShardRequest::GetMore {
-                cursor: c,
-                reply,
-            })??;
+            let member = &self.members[stream.shard][stream.member];
+            let rep = rpc(member, |reply| ShardRequest::GetMore { cursor: c, reply })
+                .map_err(|_| self.shard_unavailable(stream.shard))??;
             let mut docs = rep.docs;
             if let Some((key, range)) = stream.orphan_fence {
                 drop_orphans(&mut docs, key, range, &self.metrics);
@@ -1122,6 +1278,7 @@ mod tests {
     fn best_head_picks_min_asc_max_desc_and_skips_dry_streams() {
         let stream = |shard: usize, ts: &[i64]| ShardStream {
             shard,
+            member: 0,
             cursor: None,
             buf: ts.iter().map(|&t| Document::new().set("ts", t)).collect(),
             orphan_fence: None,

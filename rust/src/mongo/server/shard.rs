@@ -18,12 +18,13 @@
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
+use crate::config::WriteConcern;
 use crate::metrics::{names, Registry};
-use crate::mongo::bson::{Document, RawDoc};
+use crate::mongo::bson::{Document, RawDoc, Value};
 use crate::mongo::query::Filter;
 use crate::mongo::sharding::chunk::ChunkMap;
 use crate::mongo::sharding::migration::STAGING_COLLECTION;
-use crate::mongo::storage::{Engine, EngineOptions, RecordId, StorageDir};
+use crate::mongo::storage::{AtomicOp, Engine, EngineOptions, RecordId, StorageDir};
 use crate::mongo::wire::{
     rpc, ConfigRequest, DeleteChunkReply, DeleteReply, InsertReply, MigrateBatchReply,
     ShardRequest, ShardStatsReply, StagedMigration, UpdateReply, WireError,
@@ -32,42 +33,49 @@ use crate::runtime::Kernels;
 use crate::util::ids::ShardId;
 
 use super::read::{ReadContext, ReadFence, ReadRequest, ReaderPool};
+use super::replica::{docs_value, PendingReply, ReplicaConfig, ReplicaState, Role};
 
 /// The sharded collection name (one sharded namespace, like the paper's
 /// single OVIS metrics collection).
 pub const COLLECTION: &str = "metrics";
 
-/// Shard server state + event loop.
+/// Shard server state + event loop. Fields are `pub(super)` because
+/// the replica-set role engine ([`super::replica`]) extends this type
+/// from a sibling module.
 pub struct ShardServer {
-    id: ShardId,
-    engine: Engine,
-    map: ChunkMap,
-    config: mpsc::Sender<ConfigRequest>,
-    metrics: Registry,
+    pub(super) id: ShardId,
+    pub(super) engine: Engine,
+    pub(super) map: ChunkMap,
+    pub(super) config: mpsc::Sender<ConfigRequest>,
+    pub(super) metrics: Registry,
     /// Shared read state: snapshot source, planner, cursor registry.
     /// The event loop serves through it inline when no pool is running.
-    ctx: Arc<ReadContext>,
+    pub(super) ctx: Arc<ReadContext>,
     /// Reader threads (`--reader-threads > 0`); `None` keeps reads on
     /// the event loop.
-    pool: Option<ReaderPool>,
+    pub(super) pool: Option<ReaderPool>,
     /// Split a chunk when its (position-histogram) doc count exceeds this.
-    split_threshold: u64,
+    pub(super) split_threshold: u64,
     /// Position histogram: key position → docs at that position. Range
     /// sums give per-chunk counts; medians give split points.
-    positions: std::collections::BTreeMap<u64, u32>,
+    pub(super) positions: std::collections::BTreeMap<u64, u32>,
     /// Migration staging on this destination — `(range, donor,
     /// committed)`, mirroring the durable `__migration` collection
     /// (rebuilt from it after a restart).
-    staging: Option<((u64, u64), ShardId, bool)>,
+    pub(super) staging: Option<((u64, u64), ShardId, bool)>,
     /// Staged data documents (meta records excluded).
-    staged_docs: u64,
+    pub(super) staged_docs: u64,
     /// Record-id run a `PublishStaged` made live while this shard's own
     /// map still shows the handoff *unpublished*: until the SetMap that
     /// marks it published arrives, readers here must not serve these
     /// rids (the donor's copies are still what the cluster counts —
     /// both would double-count the range). In-memory only: recovery
     /// publishes before any traffic, so a restart never needs it.
-    publish_mask: Option<(RecordId, RecordId)>,
+    pub(super) publish_mask: Option<(RecordId, RecordId)>,
+    /// Replica-set role engine state; `None` on an unreplicated shard
+    /// (`--replicas 1`), which keeps every replication hook a no-op and
+    /// the write path byte-identical to the single-member build.
+    pub(super) replica: Option<ReplicaState>,
 }
 
 impl ShardServer {
@@ -77,6 +85,8 @@ impl ShardServer {
     /// auto-compaction threshold this server enforces after every group
     /// commit, and the snapshot retention window. `reader_threads > 0`
     /// starts a [`ReaderPool`] so finds/counts overlap with ingest.
+    /// `replica` wires this server into its shard's replica set
+    /// (`None` on an unreplicated shard).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: ShardId,
@@ -89,6 +99,7 @@ impl ShardServer {
         split_threshold: u64,
         default_batch: usize,
         reader_threads: usize,
+        replica: Option<ReplicaConfig>,
     ) -> anyhow::Result<Self> {
         let mut engine = Engine::open_with(dir, engine_opts)?;
         engine.create_collection(COLLECTION);
@@ -113,6 +124,7 @@ impl ShardServer {
             staging: None,
             staged_docs: 0,
             publish_mask: None,
+            replica: None,
         };
         // Rebuild the position histogram from recovered records (second
         // job re-attaching to persisted Lustre data) — raw key-field
@@ -160,6 +172,13 @@ impl ShardServer {
             s.staging = Some((range, from, committed && meta_seen));
         }
         s.refresh_fence();
+        // Join the replica set last: hard state + oplog recover from
+        // the engine (a restarted member rejoins with its term intact),
+        // and a fresh bootstrap member may immediately take the primary
+        // role and fan out.
+        if let Some(cfg) = replica {
+            s.replica_init(cfg);
+        }
         Ok(s)
     }
 
@@ -224,97 +243,31 @@ impl ShardServer {
     }
 
     fn run(&mut self, rx: mpsc::Receiver<ShardRequest>) {
-        while let Ok(req) = rx.recv() {
-            match req {
-                ShardRequest::Shutdown => break,
-                ShardRequest::SetMap { map } => {
-                    self.install_map(map);
-                }
-                ShardRequest::InsertBatch { version, docs, reply } => {
-                    let t = Instant::now();
-                    let r = self.handle_insert_many(version, docs);
-                    self.metrics
-                        .observe(names::SHARD_INSERT_BATCH_NS, t.elapsed().as_nanos() as u64);
-                    let _ = reply.send(r);
-                }
-                ShardRequest::Find { filter, opts, reply } => {
-                    self.dispatch_read(ReadRequest::Find { filter, opts, reply });
-                }
-                ShardRequest::GetMore { cursor, reply } => {
-                    self.dispatch_read(ReadRequest::GetMore { cursor, reply });
-                }
-                ShardRequest::Count { filter, reply } => {
-                    self.dispatch_read(ReadRequest::Count { filter, reply });
-                }
-                ShardRequest::Aggregate { pipeline, partial, reply } => {
-                    self.dispatch_read(ReadRequest::Aggregate { pipeline, partial, reply });
-                }
-                ShardRequest::Update { version, filter, set, reply } => {
-                    let t = Instant::now();
-                    let r = self.handle_update(version, &filter, &set);
-                    self.metrics
-                        .observe(names::SHARD_UPDATE_NS, t.elapsed().as_nanos() as u64);
-                    let _ = reply.send(r);
-                }
-                ShardRequest::Delete { version, filter, reply } => {
-                    let t = Instant::now();
-                    let r = self.handle_delete(version, &filter);
-                    self.metrics
-                        .observe(names::SHARD_DELETE_NS, t.elapsed().as_nanos() as u64);
-                    let _ = reply.send(r);
-                }
-                ShardRequest::CreateIndex { spec, reply } => {
-                    let r = self
-                        .engine
-                        .create_index(COLLECTION, spec)
-                        .map_err(|e| WireError::Server(e.to_string()));
-                    let _ = reply.send(r);
-                }
-                ShardRequest::MigrateBatch { range, after, limit, reply } => {
-                    let t = Instant::now();
-                    let r = self.handle_migrate_batch(range, after, limit);
-                    self.metrics
-                        .observe(names::SHARD_MIGRATE_BATCH_NS, t.elapsed().as_nanos() as u64);
-                    let _ = reply.send(r);
-                }
-                ShardRequest::StageChunk { range, from, docs, reply } => {
-                    let r = self.handle_stage_chunk(range, from, docs);
-                    let _ = reply.send(r);
-                }
-                ShardRequest::CommitStaged { reply } => {
-                    let _ = reply.send(self.handle_commit_staged());
-                }
-                ShardRequest::PublishStaged { reply } => {
-                    let _ = reply.send(self.handle_publish_staged());
-                }
-                ShardRequest::AbortStaged { reply } => {
-                    let _ = reply.send(self.handle_abort_staged());
-                }
-                ShardRequest::ClearStaged { reply } => {
-                    let _ = reply.send(self.handle_clear_staged());
-                }
-                ShardRequest::DeleteChunk { range, compact, reply } => {
-                    let r = self.delete_range(range, compact);
-                    let _ = reply.send(r);
-                }
-                ShardRequest::StagedState { reply } => {
-                    let _ = reply.send(self.staged_state());
-                }
-                ShardRequest::Stats { reply } => {
-                    let _ = reply.send(self.stats());
-                }
-                ShardRequest::Checkpoint { reply } => {
-                    let r = self
-                        .engine
-                        .checkpoint()
-                        .map_err(|e| WireError::Server(e.to_string()));
-                    if r.is_ok() {
-                        // Admin-command trigger — one of the three
-                        // distinct `shard.checkpoints` sites (see the
-                        // constant's docs in `metrics::names`).
-                        self.metrics.counter(names::SHARD_CHECKPOINTS).inc();
+        loop {
+            if self.replica.is_some() {
+                // Replicated members poll so replication timers
+                // (heartbeat fan-out, election timeout) fire even on an
+                // idle mailbox.
+                match rx.recv_timeout(self.replica_poll()) {
+                    Ok(req) => {
+                        if self.handle(req) {
+                            break;
+                        }
+                        self.replica_tick();
                     }
-                    let _ = reply.send(r);
+                    Err(mpsc::RecvTimeoutError::Timeout) => self.replica_tick(),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            } else {
+                // Unreplicated: plain blocking recv, exactly the
+                // pre-replication event loop.
+                match rx.recv() {
+                    Ok(req) => {
+                        if self.handle(req) {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
                 }
             }
         }
@@ -324,6 +277,158 @@ impl ShardServer {
         if let Some(pool) = self.pool.take() {
             pool.shutdown();
         }
+    }
+
+    /// Serve one mailbox request; returns `true` on shutdown.
+    fn handle(&mut self, req: ShardRequest) -> bool {
+        match req {
+            ShardRequest::Shutdown => return true,
+            ShardRequest::SetMap { map } => {
+                self.install_map(map);
+            }
+            ShardRequest::InsertBatch { version, docs, wc, reply } => {
+                let t = Instant::now();
+                let r = self.handle_insert_many(version, docs);
+                self.metrics
+                    .observe(names::SHARD_INSERT_BATCH_NS, t.elapsed().as_nanos() as u64);
+                match r {
+                    Ok((value, Some(slot))) if wc == WriteConcern::Majority => {
+                        self.park_reply(slot, PendingReply::Insert { reply, value });
+                    }
+                    Ok((value, _)) => {
+                        let _ = reply.send(Ok(value));
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
+            }
+            ShardRequest::Find { filter, opts, reply } => {
+                self.dispatch_read(ReadRequest::Find { filter, opts, reply });
+            }
+            ShardRequest::GetMore { cursor, reply } => {
+                self.dispatch_read(ReadRequest::GetMore { cursor, reply });
+            }
+            ShardRequest::Count { filter, reply } => {
+                self.dispatch_read(ReadRequest::Count { filter, reply });
+            }
+            ShardRequest::Aggregate { pipeline, partial, reply } => {
+                self.dispatch_read(ReadRequest::Aggregate { pipeline, partial, reply });
+            }
+            ShardRequest::Update { version, filter, set, wc, reply } => {
+                let t = Instant::now();
+                let r = self.handle_update(version, &filter, &set);
+                self.metrics
+                    .observe(names::SHARD_UPDATE_NS, t.elapsed().as_nanos() as u64);
+                match r {
+                    Ok((value, Some(slot))) if wc == WriteConcern::Majority => {
+                        self.park_reply(slot, PendingReply::Update { reply, value });
+                    }
+                    Ok((value, _)) => {
+                        let _ = reply.send(Ok(value));
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
+            }
+            ShardRequest::Delete { version, filter, wc, reply } => {
+                let t = Instant::now();
+                let r = self.handle_delete(version, &filter);
+                self.metrics
+                    .observe(names::SHARD_DELETE_NS, t.elapsed().as_nanos() as u64);
+                match r {
+                    Ok((value, Some(slot))) if wc == WriteConcern::Majority => {
+                        self.park_reply(slot, PendingReply::Delete { reply, value });
+                    }
+                    Ok((value, _)) => {
+                        let _ = reply.send(Ok(value));
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
+            }
+            ShardRequest::CreateIndex { spec, reply } => {
+                let r = self
+                    .engine
+                    .create_index(COLLECTION, spec)
+                    .map_err(|e| WireError::Server(e.to_string()));
+                let _ = reply.send(r);
+            }
+            ShardRequest::MigrateBatch { range, after, limit, reply } => {
+                let t = Instant::now();
+                let r = self.handle_migrate_batch(range, after, limit);
+                self.metrics
+                    .observe(names::SHARD_MIGRATE_BATCH_NS, t.elapsed().as_nanos() as u64);
+                let _ = reply.send(r);
+            }
+            ShardRequest::StageChunk { range, from, docs, reply } => {
+                let r = self.handle_stage_chunk(range, from, docs);
+                let _ = reply.send(r);
+            }
+            ShardRequest::CommitStaged { reply } => {
+                let _ = reply.send(self.handle_commit_staged());
+            }
+            ShardRequest::PublishStaged { reply } => {
+                let _ = reply.send(self.handle_publish_staged());
+            }
+            ShardRequest::AbortStaged { reply } => {
+                let _ = reply.send(self.handle_abort_staged());
+            }
+            ShardRequest::ClearStaged { reply } => {
+                let _ = reply.send(self.handle_clear_staged());
+            }
+            ShardRequest::DeleteChunk { range, compact, reply } => {
+                let r = self.delete_range(range, compact);
+                let _ = reply.send(r);
+            }
+            ShardRequest::StagedState { reply } => {
+                let _ = reply.send(self.staged_state());
+            }
+            ShardRequest::Stats { reply } => {
+                let _ = reply.send(self.stats());
+            }
+            ShardRequest::Checkpoint { reply } => {
+                let r = self
+                    .engine
+                    .checkpoint()
+                    .map_err(|e| WireError::Server(e.to_string()));
+                if r.is_ok() {
+                    // Admin-command trigger — one of the three
+                    // distinct `shard.checkpoints` sites (see the
+                    // constant's docs in `metrics::names`).
+                    self.metrics.counter(names::SHARD_CHECKPOINTS).inc();
+                }
+                let _ = reply.send(r);
+            }
+            ShardRequest::Replicate {
+                term,
+                leader,
+                prev_term,
+                prev_index,
+                entries,
+                commit,
+                reset,
+            } => {
+                self.handle_replicate(
+                    term, leader, prev_term, prev_index, entries, commit, reset,
+                );
+            }
+            ShardRequest::ReplicationAck { member, term, ack_index, success } => {
+                self.handle_replication_ack(member, term, ack_index, success);
+            }
+            ShardRequest::RequestVote { term, candidate, last_term, last_index } => {
+                self.handle_request_vote(term, candidate, last_term, last_index);
+            }
+            ShardRequest::VoteReply { term, from, granted } => {
+                self.handle_vote_reply(term, from, granted);
+            }
+            ShardRequest::RoleInfo { reply } => {
+                let _ = reply.send(self.role_reply());
+            }
+        }
+        false
     }
 
     /// Background maintenance hook, run after every group commit:
@@ -380,7 +485,7 @@ impl ShardServer {
     /// [`crate::mongo::sharding::chunk::ShardKey::position_i64`] — the
     /// shared convention, so placement, migration, the read fences, and
     /// the router's orphan filter all classify a document identically.
-    fn position_of(&self, doc: &Document) -> Option<u64> {
+    pub(super) fn position_of(&self, doc: &Document) -> Option<u64> {
         Some(self.map.key.position_i64(doc.get_i64("node_id")?, doc.get_i64("ts")?))
     }
 
@@ -394,11 +499,21 @@ impl ShardServer {
     /// Bulk-ingest leg on the shard: version handshake, owner filtering,
     /// then the owned run is indexed and journaled as a whole batch with
     /// a single group commit.
+    ///
+    /// On a replica-set primary the owned run and its oplog entry
+    /// journal as **one** atomic frame ([`Self::primary_append`]); the
+    /// returned `(term, index)` slot lets the caller park the reply
+    /// until the entry commits (`w:majority`). An unreplicated shard
+    /// (or an empty owned run) returns `None` — the reply releases
+    /// immediately.
     fn handle_insert_many(
         &mut self,
         version: u64,
         docs: Vec<Document>,
-    ) -> Result<InsertReply, WireError> {
+    ) -> Result<(InsertReply, Option<(u64, u64)>), WireError> {
+        if self.rejects_writes() {
+            return Err(self.not_primary());
+        }
         self.check_version(version)?;
 
         // Split the batch into owned documents and wrong-owner rejects,
@@ -424,15 +539,26 @@ impl ShardServer {
             owned_pos.push(pos);
         }
         let inserted = owned_docs.len();
-        self.engine
-            .insert_many(COLLECTION, &owned_docs)
-            .map_err(|e| WireError::Server(e.to_string()))?;
+        let slot = if self.replica.is_some() {
+            if owned_docs.is_empty() {
+                None // nothing applied ⇒ no oplog entry to replicate
+            } else {
+                let entry_docs = docs_value(&owned_docs);
+                let data = AtomicOp::Insert { coll: COLLECTION.to_string(), docs: owned_docs };
+                Some(self.primary_append(Some(data), "i", vec![("docs", entry_docs)])?)
+            }
+        } else {
+            self.engine
+                .insert_many(COLLECTION, &owned_docs)
+                .map_err(|e| WireError::Server(e.to_string()))?;
+            // Group commit once per batch: one journal frame, one sync.
+            self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+            self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
+            None
+        };
         for pos in owned_pos {
             *self.positions.entry(pos).or_insert(0) += 1;
         }
-        // Group commit once per batch: one journal frame, one sync.
-        self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
-        self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
         self.metrics.counter(names::SHARD_DOCS_INSERTED).add(inserted as u64);
         self.maybe_compact();
 
@@ -440,7 +566,7 @@ impl ShardServer {
         for chunk in touched_chunks {
             self.maybe_split(chunk);
         }
-        Ok(InsertReply { inserted, wrong_owner })
+        Ok((InsertReply { inserted, wrong_owner }, slot))
     }
 
     /// Version handshake shared by every routed write: if the router is
@@ -474,7 +600,10 @@ impl ShardServer {
         version: u64,
         filter: &Filter,
         set: &Document,
-    ) -> Result<UpdateReply, WireError> {
+    ) -> Result<(UpdateReply, Option<(u64, u64)>), WireError> {
+        if self.rejects_writes() {
+            return Err(self.not_primary());
+        }
         self.check_version(version)?;
         if set.get("node_id").is_some() || set.get("ts").is_some() {
             return Err(WireError::Server(
@@ -487,42 +616,75 @@ impl ShardServer {
         let matched = self.match_for_write(filter)?;
         let matched_n = matched.len() as u64;
         let mut updates: Vec<(RecordId, Document)> = Vec::with_capacity(matched.len());
+        // Oplog form: `(old, new)` pairs — secondaries hold different
+        // record ids, so they re-resolve each old document by content.
+        let mut pairs: Vec<Document> = Vec::with_capacity(matched.len());
         for (rid, doc, _) in matched {
             let mut merged = doc.clone();
             for (k, v) in &set.fields {
                 merged.put(k, v.clone());
             }
             if merged != doc {
+                pairs.push(
+                    Document::new()
+                        .set("old", Value::Doc(doc))
+                        .set("new", Value::Doc(merged.clone())),
+                );
                 updates.push((rid, merged));
             }
         }
         let modified = updates.len() as u64;
+        let mut slot = None;
         if !updates.is_empty() {
-            self.engine
-                .update_many(COLLECTION, &updates)
-                .map_err(|e| WireError::Server(e.to_string()))?;
-            // Group commit once per batch: one journal frame, one sync.
-            self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
-            self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
+            if self.replica.is_some() {
+                let entry_pairs = docs_value(&pairs);
+                let data = AtomicOp::Update { coll: COLLECTION.to_string(), updates };
+                slot = Some(self.primary_append(Some(data), "u", vec![("pairs", entry_pairs)])?);
+            } else {
+                self.engine
+                    .update_many(COLLECTION, &updates)
+                    .map_err(|e| WireError::Server(e.to_string()))?;
+                // Group commit once per batch: one journal frame, one sync.
+                self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+                self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
+            }
             self.metrics.counter(names::SHARD_DOCS_UPDATED).add(modified);
         }
         self.maybe_compact();
-        Ok(UpdateReply { matched: matched_n, modified })
+        Ok((UpdateReply { matched: matched_n, modified }, slot))
     }
 
     /// Filter-driven delete: matched documents leave as **one**
     /// `delete_many` journal frame + group commit, and the position
     /// histogram decrements so chunk counts stay exact.
-    fn handle_delete(&mut self, version: u64, filter: &Filter) -> Result<DeleteReply, WireError> {
+    fn handle_delete(
+        &mut self,
+        version: u64,
+        filter: &Filter,
+    ) -> Result<(DeleteReply, Option<(u64, u64)>), WireError> {
+        if self.rejects_writes() {
+            return Err(self.not_primary());
+        }
         self.check_version(version)?;
         let matched = self.match_for_write(filter)?;
         let deleted = matched.len() as u64;
+        let mut slot = None;
         if !matched.is_empty() {
             let rids: Vec<RecordId> = matched.iter().map(|(r, _, _)| *r).collect();
-            self.engine
-                .delete_many(COLLECTION, &rids)
-                .map_err(|e| WireError::Server(e.to_string()))?;
-            self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+            if self.replica.is_some() {
+                // Oplog form: the deleted documents by content —
+                // secondaries resolve their own record ids from them.
+                let olds: Vec<Document> = matched.iter().map(|(_, d, _)| d.clone()).collect();
+                let entry_olds = docs_value(&olds);
+                let data = AtomicOp::Remove { coll: COLLECTION.to_string(), rids };
+                slot = Some(self.primary_append(Some(data), "d", vec![("olds", entry_olds)])?);
+            } else {
+                self.engine
+                    .delete_many(COLLECTION, &rids)
+                    .map_err(|e| WireError::Server(e.to_string()))?;
+                self.engine.sync().map_err(|e| WireError::Server(e.to_string()))?;
+                self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
+            }
             for (_, _, pos) in &matched {
                 if let Some(pos) = pos {
                     if let Some(c) = self.positions.get_mut(pos) {
@@ -533,11 +695,10 @@ impl ShardServer {
                     }
                 }
             }
-            self.metrics.counter(names::SHARD_GROUP_COMMITS).inc();
             self.metrics.counter(names::SHARD_DOCS_DELETED).add(deleted);
         }
         self.maybe_compact();
-        Ok(DeleteReply { deleted })
+        Ok((DeleteReply { deleted }, slot))
     }
 
     /// Collect the live documents a mutating filter matches — rid,
@@ -617,6 +778,12 @@ impl ShardServer {
     }
 
     fn maybe_split(&mut self, chunk: usize) {
+        // Only a primary reports splits: a secondary's histogram moves
+        // while tailing the oplog, but the set speaks to the config
+        // server with one voice (the map change would race otherwise).
+        if matches!(&self.replica, Some(r) if r.role != Role::Primary) {
+            return;
+        }
         if self.chunk_doc_count(chunk) <= self.split_threshold {
             return;
         }

@@ -139,6 +139,13 @@ const OP_UPDATE_MANY: u8 = 6;
 /// so the journal (and the crash matrix) can tell a client-driven
 /// delete from a migration range delete.
 const OP_DELETE_MANY: u8 = 7;
+/// Multi-collection atomic frame (replication): a sequence of
+/// insert/update/remove legs — typically a data op plus the `__oplog`
+/// entry describing it, or a hard-state write to `__raft` — journaled
+/// as **one** frame and applied at **one** MVCC epoch, so replay and
+/// snapshots can never see the data op without its oplog entry or vice
+/// versa.
+const OP_MULTI: u8 = 8;
 
 /// Below this batch size, per-index maintenance runs inline: spawning
 /// scoped threads costs more than the index inserts they would cover.
@@ -159,6 +166,43 @@ fn segment_name(seq: u64) -> String {
 /// anything else, including the legacy `journal.wal`).
 fn parse_segment_seq(name: &str) -> Option<u64> {
     name.strip_prefix("journal-")?.strip_suffix(".wal")?.parse().ok()
+}
+
+/// One leg of an [`Engine::apply_atomic`] frame. Legs may target
+/// different collections; the whole frame journals as one [`OP_MULTI`]
+/// record and applies at one MVCC epoch.
+#[derive(Clone, Debug)]
+pub enum AtomicOp {
+    /// Append documents (fresh rids).
+    Insert { coll: String, docs: Vec<Document> },
+    /// Overwrite live records: each `(old_rid, new_doc)` kills the old
+    /// version and installs the replacement under a fresh rid, exactly
+    /// like [`Engine::update_many`].
+    Update {
+        coll: String,
+        updates: Vec<(RecordId, Document)>,
+    },
+    /// Remove live records by rid, exactly like [`Engine::delete_many`].
+    Remove { coll: String, rids: Vec<RecordId> },
+}
+
+impl AtomicOp {
+    fn coll(&self) -> &str {
+        match self {
+            AtomicOp::Insert { coll, .. }
+            | AtomicOp::Update { coll, .. }
+            | AtomicOp::Remove { coll, .. } => coll,
+        }
+    }
+
+    /// Leg discriminant inside an [`OP_MULTI`] frame.
+    fn kind(&self) -> u8 {
+        match self {
+            AtomicOp::Insert { .. } => 0,
+            AtomicOp::Update { .. } => 1,
+            AtomicOp::Remove { .. } => 2,
+        }
+    }
 }
 
 /// Storage-lifecycle knobs for one engine.
@@ -1090,6 +1134,145 @@ impl Engine {
         }
         store.epoch = epoch;
         Ok(docs)
+    }
+
+    /// Apply a sequence of insert/update/remove legs — possibly across
+    /// collections — as **one** journal frame at **one** MVCC epoch.
+    /// This is the replication write unit: a data op plus the `__oplog`
+    /// entry describing it commit or vanish together, so recovery never
+    /// sees an applied op without its oplog entry (or an entry without
+    /// its op). Validation runs against the pre-frame state: every
+    /// referenced rid must be live *before* the frame, and a rid may be
+    /// referenced at most once per collection across the whole frame.
+    /// Returns the freshly allocated rids per leg (insert → new rids,
+    /// update → replacement rids, remove → empty). Durable after the
+    /// next [`Self::sync`].
+    pub fn apply_atomic(&mut self, ops: &[AtomicOp]) -> Result<Vec<Vec<RecordId>>> {
+        if ops.is_empty() {
+            return Ok(Vec::new());
+        }
+        anyhow::ensure!(ops.len() <= u32::MAX as usize, "apply_atomic frame too large");
+        // Validate every leg and build the frame payload under a read
+        // guard before journaling (single writer — nothing invalidates
+        // the checks in between). `encoded[i]` keeps leg i's document
+        // encodings for the apply stage.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(ops.len() as u32).to_le_bytes());
+        let mut encoded: Vec<Vec<Vec<u8>>> = Vec::with_capacity(ops.len());
+        {
+            let store = read_store(&self.store);
+            let mut seen: BTreeMap<&str, BTreeSet<RecordId>> = BTreeMap::new();
+            for op in ops {
+                let coll = op.coll();
+                anyhow::ensure!(coll.len() <= u8::MAX as usize, "collection name too long");
+                let c = store
+                    .collections
+                    .get(coll)
+                    .ok_or_else(|| anyhow::anyhow!("no collection `{coll}`"))?;
+                let used = seen.entry(coll).or_default();
+                payload.push(op.kind());
+                payload.push(coll.len() as u8);
+                payload.extend_from_slice(coll.as_bytes());
+                match op {
+                    AtomicOp::Insert { docs, .. } => {
+                        anyhow::ensure!(
+                            docs.len() <= u32::MAX as usize,
+                            "apply_atomic insert leg too large"
+                        );
+                        payload.extend_from_slice(&(docs.len() as u32).to_le_bytes());
+                        let mut encs = Vec::with_capacity(docs.len());
+                        for doc in docs {
+                            let enc = doc.encode();
+                            payload.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+                            payload.extend_from_slice(&enc);
+                            encs.push(enc);
+                        }
+                        encoded.push(encs);
+                    }
+                    AtomicOp::Update { updates, .. } => {
+                        anyhow::ensure!(
+                            updates.len() <= u32::MAX as usize,
+                            "apply_atomic update leg too large"
+                        );
+                        payload.extend_from_slice(&(updates.len() as u32).to_le_bytes());
+                        let mut encs = Vec::with_capacity(updates.len());
+                        for (rid, doc) in updates {
+                            anyhow::ensure!(
+                                used.insert(*rid),
+                                "rid {rid} referenced twice in atomic frame"
+                            );
+                            c.records
+                                .get(rid)
+                                .filter(|r| r.dead == LIVE)
+                                .ok_or_else(|| anyhow::anyhow!("no record {rid}"))?;
+                            let enc = doc.encode();
+                            payload.extend_from_slice(&rid.to_le_bytes());
+                            payload.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+                            payload.extend_from_slice(&enc);
+                            encs.push(enc);
+                        }
+                        encoded.push(encs);
+                    }
+                    AtomicOp::Remove { rids, .. } => {
+                        anyhow::ensure!(
+                            rids.len() <= u32::MAX as usize,
+                            "apply_atomic remove leg too large"
+                        );
+                        payload.extend_from_slice(&(rids.len() as u32).to_le_bytes());
+                        for &rid in rids {
+                            anyhow::ensure!(
+                                used.insert(rid),
+                                "rid {rid} referenced twice in atomic frame"
+                            );
+                            c.records
+                                .get(&rid)
+                                .filter(|r| r.dead == LIVE)
+                                .ok_or_else(|| anyhow::anyhow!("no record {rid}"))?;
+                            payload.extend_from_slice(&rid.to_le_bytes());
+                        }
+                        encoded.push(Vec::new());
+                    }
+                }
+            }
+        }
+        if self.opts.journal {
+            self.journal_record(OP_MULTI, ops[0].coll(), &payload);
+        }
+        // One epoch for the whole frame: a snapshot sees every leg
+        // applied or none of them.
+        let mut store = write_store(&self.store);
+        let epoch = store.epoch + 1;
+        let mut fresh = Vec::with_capacity(ops.len());
+        for (op, encs) in ops.iter().zip(encoded) {
+            // lint: allow(panic, the validation loop above already resolved every collection)
+            let c = store
+                .collections
+                .get_mut(op.coll())
+                .expect("collection checked above");
+            match op {
+                AtomicOp::Insert { docs, .. } => {
+                    fresh.push(c.insert_batch(docs, encs, epoch));
+                }
+                AtomicOp::Update { updates, .. } => {
+                    let mut out = Vec::with_capacity(updates.len());
+                    for ((rid, doc), enc) in updates.iter().zip(encs) {
+                        // lint: allow(panic, every rid was fetched live from this collection above)
+                        c.remove(*rid, epoch).expect("record validated above");
+                        out.push(c.insert_decoded(doc, enc, epoch));
+                    }
+                    fresh.push(out);
+                }
+                AtomicOp::Remove { rids, .. } => {
+                    for &rid in rids {
+                        // lint: allow(panic, every rid was fetched live from this collection above)
+                        c.remove(rid, epoch).expect("record validated above");
+                    }
+                    fresh.push(Vec::new());
+                }
+            }
+        }
+        store.epoch = epoch;
+        Ok(fresh)
     }
 
     /// Remove a record (chunk migration source side).
@@ -2027,6 +2210,89 @@ impl Engine {
                     }
                     if p != payload.len() {
                         bail!("delete_many frame has trailing bytes");
+                    }
+                }
+                OP_MULTI => {
+                    if payload.len() < 4 {
+                        bail!("multi frame missing op count");
+                    }
+                    let nops = u32::from_le_bytes(payload[..4].try_into()?) as usize;
+                    let mut p = 4usize;
+                    for i in 0..nops {
+                        if p + 2 > payload.len() {
+                            bail!("multi frame truncated at leg {i} header");
+                        }
+                        let kind = payload[p];
+                        let clen = payload[p + 1] as usize;
+                        p += 2;
+                        if p + clen + 4 > payload.len() {
+                            bail!("multi frame truncated at leg {i} collection");
+                        }
+                        let oc = std::str::from_utf8(&payload[p..p + clen])?.to_string();
+                        p += clen;
+                        let n = u32::from_le_bytes(payload[p..p + 4].try_into()?) as usize;
+                        p += 4;
+                        create_collection_in(store, &oc);
+                        // lint: allow(panic, create_collection_in on the line above inserts the entry)
+                        let lc = store.collections.get_mut(&oc).unwrap();
+                        match kind {
+                            0 => {
+                                for j in 0..n {
+                                    if p + 4 > payload.len() {
+                                        bail!("multi frame truncated at leg {i} doc {j}");
+                                    }
+                                    let dl = u32::from_le_bytes(payload[p..p + 4].try_into()?)
+                                        as usize;
+                                    p += 4;
+                                    if p + dl > payload.len() {
+                                        bail!("multi frame truncated at leg {i} doc {j} body");
+                                    }
+                                    let bytes = payload[p..p + dl].to_vec();
+                                    p += dl;
+                                    let doc = Document::decode(&bytes)?;
+                                    lc.insert_decoded(&doc, bytes, 0);
+                                }
+                            }
+                            1 => {
+                                // Same order as the live path: kill the
+                                // old version, install the replacement
+                                // under a freshly allocated rid.
+                                for j in 0..n {
+                                    if p + 12 > payload.len() {
+                                        bail!("multi frame truncated at leg {i} update {j}");
+                                    }
+                                    let rid =
+                                        u64::from_le_bytes(payload[p..p + 8].try_into()?);
+                                    p += 8;
+                                    let dl = u32::from_le_bytes(payload[p..p + 4].try_into()?)
+                                        as usize;
+                                    p += 4;
+                                    if p + dl > payload.len() {
+                                        bail!("multi frame truncated at leg {i} update {j} body");
+                                    }
+                                    let bytes = payload[p..p + dl].to_vec();
+                                    p += dl;
+                                    let _ = lc.remove(rid, 0);
+                                    let doc = Document::decode(&bytes)?;
+                                    lc.insert_decoded(&doc, bytes, 0);
+                                }
+                            }
+                            2 => {
+                                for j in 0..n {
+                                    if p + 8 > payload.len() {
+                                        bail!("multi frame truncated at leg {i} remove {j}");
+                                    }
+                                    let rid =
+                                        u64::from_le_bytes(payload[p..p + 8].try_into()?);
+                                    p += 8;
+                                    let _ = lc.remove(rid, 0);
+                                }
+                            }
+                            k => bail!("unknown multi-frame leg kind {k}"),
+                        }
+                    }
+                    if p != payload.len() {
+                        bail!("multi frame has trailing bytes");
                     }
                 }
                 _ => bail!("unknown journal op {op}"),

@@ -26,7 +26,7 @@ pub mod io;
 pub mod mvcc;
 
 pub use engine::{
-    CheckpointStats, CollectionStats, Engine, EngineOptions, ReadView, RecordId,
+    AtomicOp, CheckpointStats, CollectionStats, Engine, EngineOptions, ReadView, RecordId,
     RecoveryReport, Snapshot, SnapshotExpired, StoreReader,
 };
 pub use index::{encode_key, Index, IndexSpec};

@@ -8,6 +8,7 @@
 
 use std::sync::mpsc;
 
+use crate::config::WriteConcern;
 use crate::mongo::aggregate::{AggPipeline, AggRow};
 use crate::mongo::bson::Document;
 use crate::mongo::query::{Filter, FindOptions};
@@ -36,7 +37,32 @@ pub enum WireError {
     /// behind it). Cleanly retryable: the migration finishes or aborts
     /// in bounded time, after which the write proceeds normally.
     MigrationInFlight { range: (u64, u64) },
+    /// The member that received the write is not the replica set's
+    /// primary. Cleanly retryable — nothing was applied. Carries the
+    /// member index of the leader it last heard from (the router's next
+    /// target) and the rejecting member's term.
+    NotPrimary { leader: Option<u32>, term: u64 },
+    /// Every reachable member of the shard's replica set is gone (dead
+    /// channels). Writes must NOT be blindly retried — the outcome of an
+    /// in-flight write is ambiguous; reads may be retried or degraded
+    /// per read preference.
+    ShardUnavailable { shard: u32 },
     Server(String),
+}
+
+impl WireError {
+    /// Whether a *fresh* request (new `find`, re-routed write) can
+    /// cleanly retry after this error. `ShardUnavailable` is only
+    /// read-retryable — see the variant docs.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            WireError::StaleVersion { .. }
+                | WireError::SnapshotExpired { .. }
+                | WireError::MigrationInFlight { .. }
+                | WireError::NotPrimary { .. }
+        )
+    }
 }
 
 impl std::fmt::Display for WireError {
@@ -55,6 +81,13 @@ impl std::fmt::Display for WireError {
                 "write overlaps chunk range [{}, {}] with an in-flight migration; retry",
                 range.0, range.1
             ),
+            WireError::NotPrimary { leader, term } => match leader {
+                Some(l) => write!(f, "not primary (term {term}; try member {l})"),
+                None => write!(f, "not primary (term {term}; no known leader)"),
+            },
+            WireError::ShardUnavailable { shard } => {
+                write!(f, "no reachable member of shard {shard}'s replica set")
+            }
             WireError::Server(msg) => write!(f, "server error: {msg}"),
         }
     }
@@ -190,12 +223,28 @@ pub struct ShardStatsReply {
     pub staged_docs: u64,
 }
 
+/// A replica-set member's role, reported by [`ShardRequest::RoleInfo`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RoleReply {
+    /// "primary" | "secondary" | "candidate".
+    pub role: &'static str,
+    /// Current term (persisted hard state).
+    pub term: u64,
+    /// `(term, index)` of the member's last oplog entry.
+    pub last: (u64, u64),
+    /// Highest oplog index known committed (majority-durable).
+    pub commit: u64,
+    /// Member index of the leader this member last heard from.
+    pub leader: Option<u32>,
+}
+
 /// Requests handled by a shard server (`mongod`).
 pub enum ShardRequest {
     /// Insert a routed sub-batch (`insertMany(ordered=false)` leg).
     InsertBatch {
         version: u64,
         docs: Vec<Document>,
+        wc: WriteConcern,
         reply: Reply<Result<InsertReply, WireError>>,
     },
     /// Open a query; returns the first batch (+ cursor if more).
@@ -234,6 +283,7 @@ pub enum ShardRequest {
         version: u64,
         filter: Filter,
         set: Document,
+        wc: WriteConcern,
         reply: Reply<Result<UpdateReply, WireError>>,
     },
     /// Filter-driven delete of a routed leg; one journal frame per
@@ -241,6 +291,7 @@ pub enum ShardRequest {
     Delete {
         version: u64,
         filter: Filter,
+        wc: WriteConcern,
         reply: Reply<Result<DeleteReply, WireError>>,
     },
     CreateIndex {
@@ -320,6 +371,63 @@ pub enum ShardRequest {
     /// what the compaction did.
     Checkpoint {
         reply: Reply<Result<CheckpointStats, WireError>>,
+    },
+    /// Replication (leader → follower): an AppendEntries-style oplog
+    /// batch. `entries` are `__oplog` documents ordered by
+    /// `(term, index)`; an empty batch is the heartbeat. The follower
+    /// checks `(prev_term, prev_index)` against its own log tail,
+    /// applies matching entries through the atomic-frame path at its
+    /// own MVCC epochs, and advances its commit index to `commit`.
+    /// With `reset` the follower discards its state and re-applies the
+    /// batch as the full log (divergent-suffix resync, invariant IR4).
+    // lint: allow(no_reply, one-way mailbox message between event loops — a
+    // blocking reply would deadlock two peers replicating to each other; the
+    // follower acks with a ReplicationAck message instead)
+    Replicate {
+        term: u64,
+        leader: u32,
+        prev_term: u64,
+        prev_index: u64,
+        entries: Vec<Document>,
+        commit: u64,
+        reset: bool,
+    },
+    /// Replication (follower → leader): ack for a [`ShardRequest::Replicate`]
+    /// batch. `success` means the follower's log now durably matches the
+    /// leader's through `ack_index`; failure means the prev-check missed
+    /// and the leader must resync this follower.
+    // lint: allow(no_reply, one-way mailbox message between event loops — the
+    // leader folds acks into its commit index on its own loop; see Replicate)
+    ReplicationAck {
+        member: u32,
+        term: u64,
+        ack_index: u64,
+        success: bool,
+    },
+    /// Election (candidate → all): request a vote for `term`. The voter
+    /// grants at most one vote per term, and only to candidates whose
+    /// log (`last_term`, `last_index`) is at least as up-to-date as its
+    /// own (the Raft election restriction, invariant IR2).
+    // lint: allow(no_reply, one-way mailbox message between event loops — the
+    // candidate collects VoteReply messages on its own loop; a blocking reply
+    // would deadlock two simultaneous candidates)
+    RequestVote {
+        term: u64,
+        candidate: u32,
+        last_term: u64,
+        last_index: u64,
+    },
+    /// Election (voter → candidate): the answer to [`ShardRequest::RequestVote`].
+    // lint: allow(no_reply, one-way mailbox message between event loops — see
+    // RequestVote)
+    VoteReply {
+        term: u64,
+        from: u32,
+        granted: bool,
+    },
+    /// Report this member's replica-set role (tests, router probes).
+    RoleInfo {
+        reply: Reply<RoleReply>,
     },
     // lint: allow(no_reply, shutdown is fire-and-forget; callers join the
     // server thread instead of waiting on a reply)

@@ -14,7 +14,7 @@
 //! N-node allocation has bisection ∝ N^(2/3) links; uniformly-routed
 //! traffic charges half its bytes against it.
 
-use crate::config::{Topology, WorkloadConfig, TABLE1};
+use crate::config::{Topology, WorkloadConfig, WriteConcern, TABLE1};
 use crate::metrics::Histogram;
 use crate::workload::ingest::slice_bounds;
 use crate::workload::jobs::{generate_jobs, UserJob};
@@ -97,6 +97,20 @@ pub struct SimSpec {
     pub agg_partial: bool,
     /// Group cardinality of each simulated aggregation.
     pub agg_groups: u32,
+    /// Replication axis (the live `--replicas` knob): members per
+    /// replica set. 1 = unreplicated. With N > 1 every primary ships
+    /// each sub-batch to N-1 oplog-tailing secondaries — each pays the
+    /// calibrated apply CPU plus a journal frame on its own OST, and
+    /// the primary's journal doubles (the data leg and its `__oplog`
+    /// entry share one atomic frame but both hit the disk stream).
+    pub replicas: u32,
+    /// Write-concern axis (the live `--write-concern` knob): with
+    /// `Majority` the batch ack is held until the replication quorum is
+    /// durable (secondaries are identical here, so quorum time = the
+    /// secondary round-trip); with `One` the ack leaves at the
+    /// primary's group commit and replication rides the fabric/OST
+    /// meters as background utilization only.
+    pub write_concern: WriteConcern,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -136,6 +150,8 @@ impl SimSpec {
             aggregations: 0,
             agg_partial: true,
             agg_groups: 64,
+            replicas: 1,
+            write_concern: WriteConcern::Majority,
             cost,
             seed: 0x51712,
         })
@@ -384,14 +400,45 @@ impl ClusterSim {
                 let t_ins = shard_cpu.serve(s, t_net2, insert_svc);
                 // Journal lands on the shard's OSTs: one group-commit
                 // frame per sub-batch (fixed term the batch amortizes)
-                // plus the per-byte stream.
+                // plus the per-byte stream. A replicated primary
+                // journals the data leg *and* its oplog entry in one
+                // atomic frame — same frame count, double the bytes.
+                let j_mult = if spec.replicas > 1 { 2.0 } else { 1.0 };
                 let t_j = ost.serve(
                     s % o_count,
                     t_ins,
-                    ost_ns(b_s as f64 * cost.journal_bytes_per_doc)
+                    ost_ns(b_s as f64 * cost.journal_bytes_per_doc * j_mult)
                         + cost.journal_frame_ns as u64,
                 );
                 let mut t_s = t_j;
+                // Replication axis: ship the sub-batch to the N-1
+                // secondaries. Each is a dedicated member thread whose
+                // arrival stream mirrors the primary's, so its apply is
+                // charged as service time (no extra queueing beyond the
+                // fabric and its own OST). Secondaries are identical,
+                // so the majority quorum's slowest member is any one of
+                // them — w:majority gates the ack on that round-trip;
+                // w:1 leaves the traffic on the meters as background.
+                if spec.replicas > 1 {
+                    let mut t_repl = t_j;
+                    for k in 0..(spec.replicas - 1) as usize {
+                        let t_ship = fabric
+                            .serve(t_j, fabric_ns(b_s as f64 * cost.doc_bytes))
+                            + cost.net_latency_ns as u64;
+                        let apply = (b_s as f64 * cost.insert_doc_ns) as u64;
+                        let t_dur = ost.serve(
+                            (s + (k + 1) * s_count) % o_count,
+                            t_ship + apply,
+                            ost_ns(b_s as f64 * cost.journal_bytes_per_doc * j_mult)
+                                + cost.journal_frame_ns as u64,
+                        );
+                        // Ack crosses back over the fabric's latency.
+                        t_repl = t_repl.max(t_dur + cost.net_latency_ns as u64);
+                    }
+                    if spec.write_concern == WriteConcern::Majority {
+                        t_s = t_s.max(t_repl);
+                    }
+                }
                 shard_docs[s] += b_s as u64;
                 // Storage lifecycle: past the journal threshold the
                 // shard compacts before acking the triggering batch.
@@ -860,6 +907,39 @@ mod tests {
             "compound+raw ({}) must beat the pre-overhaul path ({})",
             r_new.query_virt_ns,
             r_old.query_virt_ns
+        );
+    }
+
+    #[test]
+    fn replication_axis_slows_majority_acks_but_not_w1() {
+        // w:majority with 3 members gates every batch ack on a
+        // secondary round-trip — ingest must take strictly longer than
+        // unreplicated. w:1 keeps replication off the ack path; only
+        // background fabric/OST load moves, so the slowdown is far
+        // smaller than majority's.
+        let base = small_spec(32);
+        let mut majority = base.clone();
+        majority.replicas = 3;
+        majority.write_concern = WriteConcern::Majority;
+        let mut w1 = base.clone();
+        w1.replicas = 3;
+        w1.write_concern = WriteConcern::One;
+        let r_base = ClusterSim::new(base).run();
+        let r_maj = ClusterSim::new(majority).run();
+        let r_w1 = ClusterSim::new(w1).run();
+        assert_eq!(r_base.docs, r_maj.docs);
+        assert_eq!(r_base.docs, r_w1.docs);
+        assert!(
+            r_maj.ingest_virt_ns > r_base.ingest_virt_ns,
+            "w:majority replication must cost ingest time: {} vs {}",
+            r_maj.ingest_virt_ns,
+            r_base.ingest_virt_ns
+        );
+        assert!(
+            r_w1.ingest_virt_ns <= r_maj.ingest_virt_ns,
+            "w:1 must not be slower than w:majority: {} vs {}",
+            r_w1.ingest_virt_ns,
+            r_maj.ingest_virt_ns
         );
     }
 

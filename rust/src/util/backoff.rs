@@ -1,0 +1,104 @@
+//! Jittered exponential backoff for retry loops.
+//!
+//! Routers retry on `StaleVersion`, `MigrationInFlight`, and
+//! `NotPrimary`; spinning on those in a tight loop burns a core and
+//! hammers the shard mailbox exactly when the cluster is busiest
+//! (mid-migration, mid-election). [`Backoff`] centralises the wait
+//! policy: exponential growth from a small base to a cap, with full
+//! jitter (each sleep is uniform in `(0, step]`) so concurrent
+//! retriers decorrelate instead of thundering back in lockstep.
+
+use std::collections::hash_map::RandomState;
+use std::hash::{BuildHasher, Hasher};
+use std::time::Duration;
+
+use crate::util::SplitMix64;
+
+/// Exponential backoff state for one retry loop.
+///
+/// Construct once per logical operation, call [`Backoff::wait`] before
+/// each retry. The first wait is at most `base_us`, doubling per call
+/// up to `cap_us`.
+#[derive(Debug)]
+pub struct Backoff {
+    step_us: u64,
+    cap_us: u64,
+    rng: SplitMix64,
+    attempts: u32,
+}
+
+impl Backoff {
+    /// A backoff starting at `base_us` microseconds, capped at `cap_us`.
+    pub fn new(base_us: u64, cap_us: u64) -> Self {
+        let base = base_us.max(1);
+        Backoff {
+            step_us: base,
+            cap_us: cap_us.max(base),
+            // Seed from the process-random hasher state so concurrent
+            // loops jitter differently without needing a clock or `rand`.
+            rng: SplitMix64::new({
+                let mut h = RandomState::new().build_hasher();
+                h.write_u64(base);
+                h.finish() | 1
+            }),
+            attempts: 0,
+        }
+    }
+
+    /// Number of waits taken so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempts
+    }
+
+    /// The duration the next [`Backoff::wait`] call would sleep, without
+    /// sleeping. Full jitter: uniform in `(0, step]`.
+    pub fn next_delay(&mut self) -> Duration {
+        let jittered = self.rng.next_u64() % self.step_us + 1;
+        Duration::from_micros(jittered)
+    }
+
+    /// Sleep for the current jittered step, then double the step
+    /// (saturating at the cap).
+    pub fn wait(&mut self) {
+        let delay = self.next_delay();
+        self.attempts += 1;
+        self.step_us = (self.step_us * 2).min(self.cap_us);
+        std::thread::sleep(delay);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_bounded_by_growing_step() {
+        let mut b = Backoff::new(100, 800);
+        for expect_cap in [100u64, 200, 400, 800, 800, 800] {
+            let d = b.next_delay();
+            assert!(d.as_micros() >= 1, "jitter must be nonzero");
+            assert!(
+                d.as_micros() as u64 <= expect_cap,
+                "delay {d:?} exceeds step cap {expect_cap}µs"
+            );
+            // Advance the step the way wait() would, without sleeping.
+            b.step_us = (b.step_us * 2).min(b.cap_us);
+        }
+    }
+
+    #[test]
+    fn zero_base_clamps_to_one() {
+        let mut b = Backoff::new(0, 0);
+        let d = b.next_delay();
+        assert_eq!(d.as_micros(), 1);
+    }
+
+    #[test]
+    fn attempts_count_waits() {
+        let mut b = Backoff::new(1, 2);
+        assert_eq!(b.attempts(), 0);
+        b.wait();
+        b.wait();
+        assert_eq!(b.attempts(), 2);
+    }
+}

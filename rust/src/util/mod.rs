@@ -6,6 +6,7 @@
 //! with the Pallas kernel and `ref.py`), a wall/virtual clock abstraction,
 //! and id/formatting helpers.
 
+pub mod backoff;
 pub mod clock;
 pub mod compress;
 pub mod fmt;
@@ -13,6 +14,7 @@ pub mod hash;
 pub mod ids;
 pub mod rng;
 
+pub use backoff::Backoff;
 pub use clock::{Clock, ManualClock, SystemClock};
 pub use hash::fnv1a_shard_key;
 pub use rng::{Pcg32, SplitMix64};

@@ -1195,6 +1195,203 @@ fn cursor_past_retention_fails_retryably_and_a_fresh_find_succeeds() {
 }
 
 #[test]
+fn replica_set_fails_over_and_acked_writes_read_back_exactly_once() {
+    use std::time::{Duration, Instant};
+
+    use hpcstore::config::WriteConcern;
+    use hpcstore::mongo::wire::{rpc, ShardRequest};
+
+    // End-to-end failover drill (ARCHITECTURE.md §10): a 3-member
+    // replica set loses its primary mid-run; the router rides the
+    // election on its retry loop, a secondary wins, and every
+    // w:majority-acknowledged write reads back exactly once.
+    let mut spec = ClusterSpec::small(1, 1);
+    spec.store.replicas = 3;
+    spec.store.write_concern = WriteConcern::Majority;
+    spec.store.election_timeout_ms = 100;
+    spec.store.heartbeat_ms = 20;
+    spec.store.write_retry_ms = 10_000;
+    let cluster = start(spec, "failover");
+    let client = cluster.client();
+
+    let find_primary = |deadline: Duration| -> usize {
+        let t = Instant::now();
+        loop {
+            for (m, tx) in cluster.member_mailboxes(0).iter().enumerate() {
+                if let Ok(info) = rpc(tx, |reply| ShardRequest::RoleInfo { reply }) {
+                    if info.role == "primary" {
+                        return m;
+                    }
+                }
+            }
+            assert!(t.elapsed() < deadline, "no member became primary");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    };
+
+    let docs: Vec<Document> = (0..200).map(|i| metric_doc(i, i % 8)).collect();
+    assert_eq!(client.insert_many(docs).unwrap().inserted, 200);
+
+    let old = find_primary(Duration::from_secs(5));
+    cluster.kill_member(0, old);
+
+    // The very next insertMany rides through the election: the router
+    // bounces off the dead mailbox and NotPrimary rejects with jittered
+    // backoff until a surviving secondary wins and starts acking.
+    let docs: Vec<Document> = (200..400).map(|i| metric_doc(i, i % 8)).collect();
+    assert_eq!(client.insert_many(docs).unwrap().inserted, 200);
+
+    let new = find_primary(Duration::from_secs(5));
+    assert_ne!(new, old, "the killed member cannot serve as primary");
+    assert!(
+        cluster.metrics().counter("shard.elections").get() > 0,
+        "the kill must have forced a real election"
+    );
+
+    // Exactly-once readback: every acked document, no double-applies.
+    let mut counts = std::collections::HashMap::new();
+    let mut cur = client.find(Filter::True, FindOptions::default()).unwrap();
+    for d in cur.by_ref() {
+        *counts.entry(d.get_i64("ts").unwrap()).or_insert(0u32) += 1;
+    }
+    assert!(cur.error().is_none(), "readback died: {:?}", cur.error());
+    for ts in 0..400i64 {
+        assert_eq!(
+            counts.get(&ts).copied().unwrap_or(0),
+            1,
+            "acked ts {ts} must survive failover exactly once"
+        );
+    }
+    assert_eq!(counts.len(), 400);
+    cluster.shutdown();
+}
+
+#[test]
+fn dead_secondaries_degrade_reads_to_surviving_members_without_hanging() {
+    use std::time::{Duration, Instant};
+
+    use hpcstore::config::{ReadPreference, WriteConcern};
+    use hpcstore::mongo::wire::{rpc, ShardRequest};
+
+    // Availability regression: with the read preference aimed at
+    // secondaries and every secondary dead, reads must degrade to the
+    // surviving primary — exact results, a counted degrade, no hang —
+    // and w:1 writes keep acking from the primary alone.
+    let mut spec = ClusterSpec::small(1, 1);
+    spec.store.replicas = 3;
+    spec.store.write_concern = WriteConcern::One;
+    spec.store.read_preference = ReadPreference::Secondary;
+    // Frozen election clock: the surviving primary must not flap.
+    spec.store.election_timeout_ms = 60_000;
+    spec.store.heartbeat_ms = 20;
+    let cluster = start(spec, "degrade");
+    let client = cluster.client();
+    client
+        .insert_many((0..300).map(|i| metric_doc(i, i % 8)).collect())
+        .unwrap();
+
+    let primary = (0..3)
+        .find(|&m| {
+            rpc(&cluster.member_mailboxes(0)[m], |reply| ShardRequest::RoleInfo { reply })
+                .map(|info| info.role == "primary")
+                .unwrap_or(false)
+        })
+        .expect("bootstrap primary");
+    for m in 0..3 {
+        if m != primary {
+            cluster.kill_member(0, m);
+        }
+    }
+
+    let t = Instant::now();
+    assert_eq!(client.count_documents(Filter::True).unwrap(), 300);
+    let got = client
+        .find(Filter::range("ts", 0i64, 300i64), FindOptions::default())
+        .unwrap()
+        .count();
+    assert_eq!(got, 300, "degraded reads must stay exact");
+    assert!(
+        t.elapsed() < Duration::from_secs(10),
+        "degraded reads must not stall on the dead members"
+    );
+    assert!(
+        cluster.metrics().counter("router.shard_unavailable").get() > 0,
+        "the degrade away from the dead secondary must be counted"
+    );
+
+    // w:1 needs no quorum: the lone primary still acks writes.
+    let rep = client
+        .insert_many((300..360).map(|i| metric_doc(i, i % 8)).collect())
+        .unwrap();
+    assert_eq!(rep.inserted, 60);
+    assert_eq!(client.count_documents(Filter::True).unwrap(), 360);
+    cluster.shutdown();
+}
+
+#[test]
+fn fully_dead_shard_surfaces_typed_errors_and_retryable_cursors_never_hangs() {
+    use std::time::{Duration, Instant};
+
+    use hpcstore::mongo::wire::WireError;
+
+    // The no-hang contract: once every member of a shard is gone, every
+    // request that needs it must return the typed ShardUnavailable —
+    // a parked cursor dies distinguishable-and-read-retryable, fresh
+    // reads and writes fail fast — and none of them block forever.
+    let mut spec = ClusterSpec::small(2, 1);
+    spec.store.write_retry_ms = 300; // bound the router retry loops
+    let cluster = start(spec, "deadshard");
+    let client = cluster.client();
+    client
+        .insert_many((0..400).map(|i| metric_doc(i, i % 8)).collect())
+        .unwrap();
+    let stats = cluster.stats();
+    assert!(stats.per_shard_docs.iter().all(|&d| d > 0), "{:?}", stats.per_shard_docs);
+
+    // Park a cursor mid-drain (small batches keep shard-side cursors
+    // open on both shards), then kill shard 0's only member.
+    let mut cur = client
+        .find(Filter::True, FindOptions::default().batch_size(16))
+        .unwrap();
+    for _ in 0..16 {
+        cur.next().expect("first batch");
+    }
+    cluster.kill_member(0, 0);
+
+    let t = Instant::now();
+    let _ = cur.by_ref().count();
+    let err = cur
+        .error()
+        .cloned()
+        .expect("a cursor over a dead shard must fail loudly, not truncate");
+    assert!(
+        matches!(err, WireError::ShardUnavailable { shard: 0 }),
+        "expected ShardUnavailable, got {err:?}"
+    );
+    assert!(cur.retryable(), "a re-read of a dead shard is cleanly retryable");
+
+    match client.count_documents(Filter::True) {
+        Err(WireError::ShardUnavailable { shard: 0 }) => {}
+        other => panic!("count on a dead shard must fail typed, got {other:?}"),
+    }
+    match client.insert_many((400..500).map(|i| metric_doc(i, i % 8)).collect()) {
+        Err(WireError::ShardUnavailable { shard: 0 }) => {}
+        other => panic!("insert on a dead shard must fail typed, got {other:?}"),
+    }
+    match client.find(Filter::True, FindOptions::default()) {
+        Err(WireError::ShardUnavailable { shard: 0 }) => {}
+        Ok(_) => panic!("find on a dead shard must not open a cursor"),
+        Err(other) => panic!("find on a dead shard must fail typed, got {other:?}"),
+    }
+    assert!(
+        t.elapsed() < Duration::from_secs(10),
+        "dead-shard requests must fail fast, never hang"
+    );
+    assert!(cluster.metrics().counter("router.shard_unavailable").get() > 0);
+    cluster.shutdown();
+}
+
+#[test]
 fn aggregation_pushdown_ships_groups_not_documents() {
     use hpcstore::metrics::names;
     use hpcstore::mongo::aggregate::AggPipeline;

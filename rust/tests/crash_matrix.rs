@@ -16,16 +16,23 @@
 //! and post-crash recovery replays only the post-checkpoint tail.
 
 use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
-use hpcstore::config::{ShardKeyKind, StoreConfig};
+use hpcstore::config::{ShardKeyKind, StoreConfig, WriteConcern};
 use hpcstore::metrics::Registry;
-use hpcstore::mongo::bson::Document;
+use hpcstore::mongo::bson::{Document, Value};
 use hpcstore::mongo::cluster::{Cluster, ClusterSpec};
 use hpcstore::mongo::query::Filter;
+use hpcstore::mongo::server::replica::{OPLOG, RAFT_STATE};
+use hpcstore::mongo::server::shard::COLLECTION;
+use hpcstore::mongo::server::{ReplicaConfig, ShardServer};
+use hpcstore::mongo::sharding::{ChunkMap, ShardKey};
 use hpcstore::mongo::storage::{Engine, EngineOptions, LocalDir, StorageDir};
-use hpcstore::mongo::wire::{rpc, ShardRequest};
+use hpcstore::mongo::wire::{rpc, ConfigRequest, ShardRequest};
 use hpcstore::runtime::Kernels;
 use hpcstore::util::ids::ShardId;
+use hpcstore::util::rng::Pcg32;
 
 fn doc(i: u64) -> Document {
     Document::new()
@@ -1101,6 +1108,606 @@ fn kill_after_synced_delete_replays_the_delete_frame_exactly_once() {
     ts.sort_unstable();
     let expect: Vec<i64> = (0..40i64).filter(|t| t % 3 != 0).collect();
     assert_eq!(ts, expect, "replayed delete frame must remove exactly the victims");
+}
+
+// ---------------------------------------------------------------------------
+// Replica-set failover kill windows (oplog replication + Raft-inspired
+// elections — docs/ARCHITECTURE.md §10).
+//
+// One *real* member runs on a spawned event loop; the test holds the
+// mailboxes of the two other members of its 3-member set and plays
+// leader / secondary / rival candidate by hand, which pins the protocol
+// at exact states no timing trick could reach reliably. "Kill" is
+// `Shutdown` + join: the event loop exits without checkpointing or
+// handing anything off, storage-wise identical to a walltime kill
+// (every protocol step that matters is group-committed first). Restart
+// reopens the same directory, asserting the invariants IR1–IR4.
+
+/// Spawn one replica-set member of a 1-shard × 3-member set on `root`.
+/// `peers[0]` must be the spawned member's own mailbox; the test holds
+/// the receivers behind `peers[1..]`. Returns the join handle, the
+/// config-server mailbox receiver (held so shard→config RPCs fail soft
+/// rather than surprise), and the chunk-map version writes must carry.
+fn spawn_member(
+    root: &str,
+    member: u32,
+    peers: Vec<mpsc::Sender<ShardRequest>>,
+    rx: mpsc::Receiver<ShardRequest>,
+    election_ms: u64,
+    heartbeat_ms: u64,
+    bootstrap: bool,
+) -> (std::thread::JoinHandle<()>, mpsc::Receiver<ConfigRequest>, u64) {
+    let (cfg_tx, cfg_rx) = mpsc::channel();
+    let map = ChunkMap::pre_split(ShardKey { kind: ShardKeyKind::Hashed }, 1, 2);
+    let version = map.version;
+    let server = ShardServer::new(
+        ShardId(0),
+        Box::new(LocalDir::new(root).unwrap()),
+        map,
+        cfg_tx,
+        Kernels::fallback(),
+        Registry::new(),
+        EngineOptions { journal: true, ..EngineOptions::default() },
+        u64::MAX, // never report splits — no config server is playing
+        64,
+        0, // reads serve inline: no reader pool to tear down
+        Some(ReplicaConfig {
+            member,
+            peers,
+            election_timeout_ms: election_ms,
+            heartbeat_ms,
+            bootstrap_primary: bootstrap,
+        }),
+    )
+    .unwrap();
+    (server.spawn_with(rx), cfg_rx, version)
+}
+
+/// Receive from a fake peer's mailbox until `pred` yields, or panic
+/// after 10 s. Messages `pred` rejects are dropped (heartbeats etc.).
+fn recv_until<T>(
+    rx: &mpsc::Receiver<ShardRequest>,
+    what: &str,
+    mut pred: impl FnMut(&ShardRequest) -> Option<T>,
+) -> T {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(msg) => {
+                if let Some(v) = pred(&msg) {
+                    return v;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                panic!("member died while waiting for {what}");
+            }
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+    }
+}
+
+/// A hand-built oplog no-op entry (what `become_primary` appends).
+fn noop_entry(term: i64, index: i64) -> Document {
+    Document::new().set("term", term).set("index", index).set("kind", "n")
+}
+
+/// A hand-built oplog insert entry, as the primary write path encodes
+/// it: the batch rides in the `docs` array field.
+fn insert_entry(term: i64, index: i64, docs: Vec<Document>) -> Document {
+    Document::new()
+        .set("term", term)
+        .set("index", index)
+        .set("kind", "i")
+        .set("docs", Value::Array(docs.into_iter().map(Value::Doc).collect()))
+}
+
+/// All `ts` values carried by `kind: "i"` oplog entries in `eng`.
+fn oplog_insert_ts(eng: &Engine) -> Vec<i64> {
+    let mut ts: Vec<i64> = eng
+        .scan(OPLOG)
+        .filter(|(_, e)| e.get("kind").and_then(Value::as_str) == Some("i"))
+        .flat_map(|(_, e)| match e.get("docs") {
+            Some(Value::Array(items)) => items
+                .iter()
+                .filter_map(|v| match v {
+                    Value::Doc(d) => d.get_i64("ts"),
+                    _ => None,
+                })
+                .collect::<Vec<i64>>(),
+            _ => Vec::new(),
+        })
+        .collect();
+    ts.sort_unstable();
+    ts
+}
+
+/// All `ts` values in the data collection of `eng`, sorted.
+fn data_ts(eng: &Engine) -> Vec<i64> {
+    let mut ts: Vec<i64> =
+        eng.scan(COLLECTION).filter_map(|(_, d)| d.get_i64("ts")).collect();
+    ts.sort_unstable();
+    ts
+}
+
+// lint: journal-op(OP_MULTI) — the primary's data leg and its oplog
+// entry below journal as ONE atomic multi-op frame; the kill lands after
+// that group commit but before any secondary ack, and replay must
+// restore both legs together (log presence ⇔ applied) or neither.
+#[test]
+fn primary_killed_mid_append_keeps_oplog_and_data_atomic_and_never_acks() {
+    let root = LocalDir::temp("fo-append").unwrap().describe();
+    let (tx0, rx0) = mpsc::channel();
+    let (tx1, rx1) = mpsc::channel();
+    let (tx2, _rx2) = mpsc::channel();
+    let (join, _cfg, version) =
+        spawn_member(&root, 0, vec![tx0.clone(), tx1, tx2], rx0, 60_000, 10, true);
+
+    let (reply_tx, reply_rx) = mpsc::channel();
+    tx0.send(ShardRequest::InsertBatch {
+        version,
+        docs: batch(0, 5),
+        wc: WriteConcern::Majority,
+        reply: reply_tx,
+    })
+    .unwrap();
+
+    // The entry fans out to the fake secondaries (retransmitted every
+    // heartbeat until acked) — proof the append is past its group
+    // commit...
+    recv_until(&rx1, "insert fan-out", |m| match m {
+        ShardRequest::Replicate { entries, .. }
+            if entries
+                .iter()
+                .any(|e| e.get("kind").and_then(Value::as_str) == Some("i")) =>
+        {
+            Some(())
+        }
+        _ => None,
+    });
+    // ...but no ack ever arrives, so the w:majority reply must still be
+    // parked (IR3: acknowledge only at majority durability).
+    assert!(
+        reply_rx.recv_timeout(Duration::from_millis(200)).is_err(),
+        "w:majority must not release before a majority is durable"
+    );
+
+    tx0.send(ShardRequest::Shutdown).unwrap();
+    join.join().unwrap();
+    // The parked reply died with the member: the client side sees a dead
+    // channel (typed ShardUnavailable at the router), never a false Ok.
+    assert!(reply_rx.recv().is_err(), "a killed primary must not ack posthumously");
+
+    // Recovery: the oplog entry and its data leg were one frame — both
+    // replayed. Entry 1 is the bootstrap no-op, entry 2 the insert.
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(eng.stats(COLLECTION).docs, 5);
+    assert_eq!(eng.stats(OPLOG).docs, 2);
+    assert_eq!(oplog_insert_ts(&eng), data_ts(&eng), "log presence ⇔ applied");
+    let hard: Vec<Document> = eng.scan(RAFT_STATE).map(|(_, d)| d).collect();
+    assert_eq!(hard.len(), 1);
+    assert_eq!(hard[0].get_i64("term"), Some(1));
+    drop(eng);
+
+    // Restart-rejoin: the same directory under the same bootstrap flag
+    // must NOT re-seed a primary — the member is no longer fresh. It
+    // rejoins as a secondary with its persisted term and full log.
+    let (tx0b, rx0b) = mpsc::channel();
+    let (tx1b, _rx1b) = mpsc::channel();
+    let (tx2b, _rx2b) = mpsc::channel();
+    let (join_b, _cfg_b, _) =
+        spawn_member(&root, 0, vec![tx0b.clone(), tx1b, tx2b], rx0b, 60_000, 10, true);
+    let info = rpc(&tx0b, |reply| ShardRequest::RoleInfo { reply }).unwrap();
+    assert_eq!(info.role, "secondary", "a restarted member never self-promotes");
+    assert_eq!(info.term, 1);
+    assert_eq!(info.last, (1, 2), "no-op + insert entries survive the kill");
+    tx0b.send(ShardRequest::Shutdown).unwrap();
+    join_b.join().unwrap();
+}
+
+#[test]
+fn unacked_write_from_deposed_primary_is_discarded_by_resync_not_double_applied() {
+    let root = LocalDir::temp("fo-resync").unwrap().describe();
+    // Phase 1 — the kill window: a primary accepts a w:majority write
+    // (appended + group-committed locally), no secondary ever acks, and
+    // the member dies. The write is durable *locally* but uncommitted.
+    {
+        let (tx0, rx0) = mpsc::channel();
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, _rx2) = mpsc::channel();
+        let (join, _cfg, version) =
+            spawn_member(&root, 0, vec![tx0.clone(), tx1, tx2], rx0, 60_000, 10, true);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx0.send(ShardRequest::InsertBatch {
+            version,
+            docs: batch(0, 3),
+            wc: WriteConcern::Majority,
+            reply: reply_tx,
+        })
+        .unwrap();
+        recv_until(&rx1, "insert fan-out", |m| match m {
+            ShardRequest::Replicate { entries, .. } if !entries.is_empty() => Some(()),
+            _ => None,
+        });
+        tx0.send(ShardRequest::Shutdown).unwrap();
+        join.join().unwrap();
+        assert!(reply_rx.recv().is_err(), "the uncommitted write must never ack");
+    }
+
+    // Phase 2 — the deposed member rejoins; meanwhile the other two
+    // members elected a term-3 leader (the test, playing member 1)
+    // that never saw the orphan entries. Its first append probe lands
+    // on the divergent suffix and must be NACKed, never merged (IR4).
+    let (tx0, rx0) = mpsc::channel();
+    let (tx1, rx1) = mpsc::channel();
+    let (tx2, _rx2) = mpsc::channel();
+    let (join, _cfg, _) =
+        spawn_member(&root, 0, vec![tx0.clone(), tx1, tx2], rx0, 60_000, 10, true);
+    tx0.send(ShardRequest::Replicate {
+        term: 3,
+        leader: 1,
+        prev_term: 0,
+        prev_index: 0,
+        entries: vec![noop_entry(3, 1)],
+        commit: 0,
+        reset: false,
+    })
+    .unwrap();
+    recv_until(&rx1, "divergence NACK", |m| match m {
+        ShardRequest::ReplicationAck { member: 0, success: false, .. } => Some(()),
+        _ => None,
+    });
+
+    // The leader answers a NACK with a full-log resync: wipe and
+    // re-apply. The orphan write must vanish — it was never acked, and
+    // it no longer exists anywhere in the set.
+    tx0.send(ShardRequest::Replicate {
+        term: 3,
+        leader: 1,
+        prev_term: 0,
+        prev_index: 0,
+        entries: vec![noop_entry(3, 1)],
+        commit: 1,
+        reset: true,
+    })
+    .unwrap();
+    let ack = recv_until(&rx1, "resync ack", |m| match m {
+        ShardRequest::ReplicationAck { member: 0, success: true, ack_index, .. } => {
+            Some(*ack_index)
+        }
+        _ => None,
+    });
+    assert_eq!(ack, 1, "the resynced log is exactly the leader's");
+    let n = rpc(&tx0, |reply| ShardRequest::Count { filter: Filter::True, reply })
+        .unwrap()
+        .unwrap()
+        .n;
+    assert_eq!(n, 0, "the discarded write must not survive the resync");
+    let info = rpc(&tx0, |reply| ShardRequest::RoleInfo { reply }).unwrap();
+    assert_eq!(info.term, 3);
+    assert_eq!(info.last, (3, 1));
+    assert_eq!(info.commit, 1);
+    tx0.send(ShardRequest::Shutdown).unwrap();
+    join.join().unwrap();
+
+    // And the wipe is durable: a plain engine reopen shows no trace of
+    // the orphan documents (no resurrection on the next restart).
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    assert_eq!(eng.stats(COLLECTION).docs, 0, "resync must be durable");
+    assert_eq!(oplog_insert_ts(&eng), Vec::<i64>::new());
+}
+
+#[test]
+fn candidate_killed_mid_election_rejoins_with_persisted_term_and_vote() {
+    let root = LocalDir::temp("fo-election").unwrap().describe();
+    let first_term;
+    {
+        // A lone-ish member with a fast election clock: its timeout
+        // fires, it persists `{term+1, voted_for: self}` and solicits
+        // votes — and the kill lands before any vote returns.
+        let (tx0, rx0) = mpsc::channel();
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, _rx2) = mpsc::channel();
+        let (join, _cfg, _) =
+            spawn_member(&root, 0, vec![tx0.clone(), tx1, tx2], rx0, 40, 10, false);
+        first_term = recv_until(&rx1, "vote solicitation", |m| match m {
+            ShardRequest::RequestVote { term, candidate: 0, .. } => Some(*term),
+            _ => None,
+        });
+        assert!(first_term >= 1);
+        tx0.send(ShardRequest::Shutdown).unwrap();
+        join.join().unwrap();
+    }
+
+    // The candidacy's hard state survived the kill (it was journaled +
+    // synced *before* any RequestVote left the member).
+    {
+        let eng =
+            Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        let hard: Vec<Document> = eng.scan(RAFT_STATE).map(|(_, d)| d).collect();
+        assert_eq!(hard.len(), 1, "hard state is a single document");
+        let term = hard[0].get_i64("term").unwrap();
+        assert!(term >= first_term as i64);
+        assert_eq!(hard[0].get_i64("voted_for"), Some(0), "the self-vote persisted");
+    }
+
+    // Restart with a frozen election clock and probe IR1: a rival
+    // asking for a vote in the persisted term must be refused — this
+    // member already voted (for itself) in that term, and a kill must
+    // not launder a second grant.
+    let (tx0, rx0) = mpsc::channel();
+    let (tx1, _rx1) = mpsc::channel();
+    let (tx2, rx2) = mpsc::channel();
+    let (join, _cfg, _) =
+        spawn_member(&root, 0, vec![tx0.clone(), tx1, tx2], rx0, 60_000, 10, false);
+    let info = rpc(&tx0, |reply| ShardRequest::RoleInfo { reply }).unwrap();
+    assert_eq!(info.role, "secondary", "a restarted candidate rejoins as secondary");
+    assert!(info.term >= first_term);
+    tx0.send(ShardRequest::RequestVote {
+        term: info.term,
+        candidate: 2,
+        last_term: info.term,
+        last_index: 1_000_000,
+    })
+    .unwrap();
+    let granted = recv_until(&rx2, "same-term vote reply", |m| match m {
+        ShardRequest::VoteReply { from: 0, granted, .. } => Some(*granted),
+        _ => None,
+    });
+    assert!(!granted, "a persisted vote must never be re-granted after a kill (IR1)");
+
+    // A higher term is a fresh ballot: the same rival now wins the vote
+    // (the hard state moved on, it is not stuck).
+    tx0.send(ShardRequest::RequestVote {
+        term: info.term + 1,
+        candidate: 2,
+        last_term: info.term,
+        last_index: 1_000_000,
+    })
+    .unwrap();
+    let granted = recv_until(&rx2, "next-term vote reply", |m| match m {
+        ShardRequest::VoteReply { from: 0, granted, .. } => Some(*granted),
+        _ => None,
+    });
+    assert!(granted, "a new term frees the vote");
+    tx0.send(ShardRequest::Shutdown).unwrap();
+    join.join().unwrap();
+}
+
+// lint: journal-op(OP_MULTI) — each tailed entry below applies as one
+// atomic frame (data leg + oplog leg) on the secondary; the kill lands
+// after the ack, and the retransmitted window must verify against the
+// recovered log instead of re-applying (the dedupe path).
+#[test]
+fn secondary_killed_mid_apply_dedupes_retransmission_and_catches_up() {
+    let root = LocalDir::temp("fo-apply").unwrap().describe();
+    let window = vec![
+        noop_entry(1, 1),
+        insert_entry(1, 2, batch(0, 4)),
+        insert_entry(1, 3, batch(4, 2)),
+    ];
+    {
+        // A pure secondary (election clock frozen) tails a 3-entry
+        // window from the term-1 leader (the test, member 1), acks it,
+        // and dies right after the ack leaves.
+        let (tx0, rx0) = mpsc::channel();
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, _rx2) = mpsc::channel();
+        let (join, _cfg, _) =
+            spawn_member(&root, 0, vec![tx0.clone(), tx1, tx2], rx0, 60_000, 10_000, false);
+        tx0.send(ShardRequest::Replicate {
+            term: 1,
+            leader: 1,
+            prev_term: 0,
+            prev_index: 0,
+            entries: window.clone(),
+            commit: 0,
+            reset: false,
+        })
+        .unwrap();
+        let ack = recv_until(&rx1, "apply ack", |m| match m {
+            ShardRequest::ReplicationAck { member: 0, success: true, ack_index, .. } => {
+                Some(*ack_index)
+            }
+            _ => None,
+        });
+        assert_eq!(ack, 3, "the ack is a durability promise for the whole window");
+        tx0.send(ShardRequest::Shutdown).unwrap();
+        join.join().unwrap();
+    }
+
+    // The ack was honest: every acked entry and its data leg recovered.
+    {
+        let eng =
+            Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+        assert_eq!(eng.stats(OPLOG).docs, 3);
+        assert_eq!(eng.stats(COLLECTION).docs, 6);
+        assert_eq!(oplog_insert_ts(&eng), data_ts(&eng), "log presence ⇔ applied");
+    }
+
+    // The leader never processed the ack (from its side this member
+    // died mid-apply) and retransmits the same window after the rejoin.
+    // The recovered member must *verify* the entries it already holds —
+    // ack again, apply nothing twice.
+    let (tx0, rx0) = mpsc::channel();
+    let (tx1, rx1) = mpsc::channel();
+    let (tx2, _rx2) = mpsc::channel();
+    let (join, _cfg, _) =
+        spawn_member(&root, 0, vec![tx0.clone(), tx1, tx2], rx0, 60_000, 10_000, false);
+    tx0.send(ShardRequest::Replicate {
+        term: 1,
+        leader: 1,
+        prev_term: 0,
+        prev_index: 0,
+        entries: window,
+        commit: 3,
+        reset: false,
+    })
+    .unwrap();
+    let ack = recv_until(&rx1, "retransmission ack", |m| match m {
+        ShardRequest::ReplicationAck { member: 0, success: true, ack_index, .. } => {
+            Some(*ack_index)
+        }
+        _ => None,
+    });
+    assert_eq!(ack, 3);
+    let n = rpc(&tx0, |reply| ShardRequest::Count { filter: Filter::True, reply })
+        .unwrap()
+        .unwrap()
+        .n;
+    assert_eq!(n, 6, "a retransmitted window must never double-apply");
+    let info = rpc(&tx0, |reply| ShardRequest::RoleInfo { reply }).unwrap();
+    assert_eq!(info.last, (1, 3));
+    assert_eq!(info.commit, 3, "the leader's commit index propagates on verify");
+
+    // Catch-up tailing: the next entry appends cleanly where the
+    // recovered log ends — a rejoined member needs no special path.
+    tx0.send(ShardRequest::Replicate {
+        term: 1,
+        leader: 1,
+        prev_term: 1,
+        prev_index: 3,
+        entries: vec![insert_entry(1, 4, batch(6, 3))],
+        commit: 3,
+        reset: false,
+    })
+    .unwrap();
+    let ack = recv_until(&rx1, "catch-up ack", |m| match m {
+        ShardRequest::ReplicationAck { member: 0, success: true, ack_index, .. } => {
+            Some(*ack_index)
+        }
+        _ => None,
+    });
+    assert_eq!(ack, 4);
+    let n = rpc(&tx0, |reply| ShardRequest::Count { filter: Filter::True, reply })
+        .unwrap()
+        .unwrap()
+        .n;
+    assert_eq!(n, 9);
+    tx0.send(ShardRequest::Shutdown).unwrap();
+    join.join().unwrap();
+}
+
+/// `FAILOVER_FUZZ_SEEDS`: a count (`16` → seeds 0..16) or an explicit
+/// comma list; default 10 seeds (documented in docs/EXPERIMENTS.md).
+fn failover_seeds() -> Vec<u64> {
+    match std::env::var("FAILOVER_FUZZ_SEEDS") {
+        Ok(s) if s.contains(',') => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("FAILOVER_FUZZ_SEEDS: bad seed"))
+            .collect(),
+        Ok(s) => {
+            let n: u64 = s.trim().parse().expect("FAILOVER_FUZZ_SEEDS: bad count");
+            (0..n).collect()
+        }
+        Err(_) => (0..10).collect(),
+    }
+}
+
+/// One randomized failover run: a primary takes w:majority batches while
+/// a fake secondary acks a random, lagging subset of the oplog, then the
+/// primary is killed at a random point. Judged after recovery:
+/// every batch whose reply released `Ok` is present exactly once, no
+/// document is ever present twice, and log presence ⇔ applied.
+fn run_failover_seed(seed: u64) {
+    let mut rng = Pcg32::seeded(seed);
+    let root = LocalDir::temp(&format!("fo-fuzz-{seed}")).unwrap().describe();
+    let (tx0, rx0) = mpsc::channel();
+    let (tx1, rx1) = mpsc::channel();
+    let (tx2, _rx2) = mpsc::channel();
+    let (join, _cfg, version) =
+        spawn_member(&root, 0, vec![tx0.clone(), tx1, tx2], rx0, 60_000, 2, true);
+
+    // (ts range, parked reply) per batch, in issue order.
+    let mut batches: Vec<(u64, u64, mpsc::Receiver<_>)> = Vec::new();
+    let mut next_ts = 0u64;
+    let ops = 6 + rng.next_bounded(12);
+    for _ in 0..ops {
+        let k = 1 + rng.next_bounded(8) as u64;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx0.send(ShardRequest::InsertBatch {
+            version,
+            docs: batch(next_ts, k),
+            wc: WriteConcern::Majority,
+            reply: reply_tx,
+        })
+        .unwrap();
+        batches.push((next_ts, next_ts + k, reply_rx));
+        next_ts += k;
+
+        // Sometimes play the durable secondary: drain whatever the
+        // primary has fanned out so far and ack the highest index seen.
+        // Acks lag the log on purpose — that is the window under test.
+        if rng.next_bounded(100) < 55 {
+            std::thread::sleep(Duration::from_millis(5));
+            let (mut high, mut term) = (0u64, 0u64);
+            while let Ok(msg) = rx1.try_recv() {
+                if let ShardRequest::Replicate { term: t, entries, .. } = msg {
+                    for e in &entries {
+                        high = high.max(e.get_i64("index").unwrap_or(0).max(0) as u64);
+                    }
+                    term = t;
+                }
+            }
+            if high > 0 {
+                tx0.send(ShardRequest::ReplicationAck {
+                    member: 1,
+                    term,
+                    ack_index: high,
+                    success: true,
+                })
+                .unwrap();
+            }
+        }
+    }
+    // Kill. The mailbox drains in order first, so every reply that will
+    // ever release has released by the time join returns.
+    tx0.send(ShardRequest::Shutdown).unwrap();
+    join.join().unwrap();
+
+    let mut acked: Vec<(u64, u64)> = Vec::new();
+    for (lo, hi, reply_rx) in batches {
+        if let Ok(Ok(rep)) = reply_rx.try_recv() {
+            assert_eq!(
+                rep.inserted,
+                (hi - lo) as usize,
+                "seed {seed}: acked batch reports its full size"
+            );
+            acked.push((lo, hi));
+        }
+        // Empty/disconnected = unacked (parked reply died with the
+        // member); Ok(Err) cannot happen on a healthy primary.
+    }
+
+    let eng = Engine::open(Box::new(LocalDir::new(&root).unwrap()), true, false).unwrap();
+    let ts = data_ts(&eng);
+    for w in ts.windows(2) {
+        assert_ne!(w[0], w[1], "seed {seed}: document {} applied twice", w[0]);
+    }
+    for (lo, hi) in &acked {
+        for t in *lo..*hi {
+            assert!(
+                ts.binary_search(&(t as i64)).is_ok(),
+                "seed {seed}: w:majority-acked ts {t} lost in failover"
+            );
+        }
+    }
+    assert_eq!(
+        oplog_insert_ts(&eng),
+        ts,
+        "seed {seed}: oplog entries and applied data must be the same fact"
+    );
+    drop(eng);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn failover_fuzz_acked_writes_survive_over_seed_matrix() {
+    let seeds = failover_seeds();
+    assert!(!seeds.is_empty(), "FAILOVER_FUZZ_SEEDS selected no seeds");
+    for seed in seeds {
+        run_failover_seed(seed);
+    }
 }
 
 #[test]
